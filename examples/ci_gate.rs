@@ -1,0 +1,35 @@
+//! Determinism & Replay CI gate (paper Alg. 5.1, Fig. 2) — run before
+//! enabling forgetting in a deployment.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example ci_gate
+//! ```
+
+use unlearn::config::RunConfig;
+use unlearn::harness;
+use unlearn::runtime::Runtime;
+
+fn main() -> anyhow::Result<()> {
+    let rt = Runtime::load(&harness::artifacts_dir())?;
+    let corpus = harness::small_corpus(rt.manifest.seq_len);
+    let cfg = RunConfig {
+        run_dir: std::path::PathBuf::from("runs/cigate"),
+        accum: 2,
+        checkpoint_every: 4,
+        warmup: 4,
+        ..Default::default()
+    };
+    println!("running Algorithm 5.1 (train-train equality, ckpt-replay \
+              equality, WAL scan) ...");
+    let report = unlearn::cigate::run_gate(&rt, &cfg, &corpus, 10)?;
+    for d in &report.details {
+        println!("  {d}");
+    }
+    println!("{}", report.to_json().pretty());
+    if report.pass() {
+        println!("CI GATE PASS — forgetting may be enabled ✓");
+        Ok(())
+    } else {
+        anyhow::bail!("CI GATE FAILED — forgetting blocked (fail-closed)");
+    }
+}

@@ -1,0 +1,74 @@
+//! Quickstart: train a tiny LM deterministically, file a forget request,
+//! let the controller pick a path, and verify the signed manifest.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example quickstart
+//! ```
+
+use unlearn::controller::{ForgetRequest, Urgency};
+use unlearn::harness;
+use unlearn::runtime::Runtime;
+
+fn main() -> anyhow::Result<()> {
+    // 1. load the AOT artifacts (compiled once by `make artifacts`)
+    let rt = Runtime::load(&harness::artifacts_dir())?;
+    println!(
+        "loaded runtime: platform={} params={}",
+        rt.platform(),
+        rt.manifest.param_count
+    );
+
+    // 2. deterministic training with WAL + checkpoints + delta ring
+    let cfg = unlearn::config::RunConfig {
+        run_dir: std::path::PathBuf::from("runs/quickstart"),
+        steps: 12,
+        accum: 2,
+        checkpoint_every: 4,
+        ring_window: 8,
+        warmup: 4,
+        ..Default::default()
+    };
+    let corpus = harness::small_corpus(rt.manifest.seq_len);
+    println!("training on {} samples ...", corpus.len());
+    let trained = harness::build_system(&rt, cfg, corpus, false)?;
+    let mut system = trained.system;
+    println!(
+        "trained: model={} applied_updates={}",
+        system.state.model_hash(),
+        system.state.applied_updates
+    );
+
+    // 3. file a forget request for user 0 (a canaried user)
+    let req = ForgetRequest {
+        id: "quickstart-req-1".into(),
+        user: Some(0),
+        sample_ids: vec![],
+        urgency: Urgency::Normal,
+    };
+    let outcome = system.handle(&req)?;
+    println!(
+        "controller action: {:?} (closure {} samples, {} from near-dup \
+         expansion)",
+        outcome.action.as_str(),
+        outcome.closure_size,
+        outcome.closure_expanded
+    );
+    if let Some(audit) = &outcome.audit {
+        println!("audits: {}", audit.to_json().pretty());
+    }
+
+    // 4. the signed manifest now records the action; verify the chain
+    let chain = system.manifest.verify_chain()?;
+    println!(
+        "forget manifest: {} entr{}, signatures valid: {}",
+        chain.len(),
+        if chain.len() == 1 { "y" } else { "ies" },
+        chain.iter().all(|(_, ok)| *ok)
+    );
+
+    // 5. duplicate requests are idempotent
+    let dup = system.handle(&req)?;
+    assert!(!dup.executed, "duplicate suppressed by idempotency key");
+    println!("duplicate request suppressed ✓");
+    Ok(())
+}

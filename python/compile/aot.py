@@ -1,0 +1,178 @@
+"""AOT compile path: lower every L2 graph to HLO *text* artifacts.
+
+Run once by ``make artifacts``; the Rust coordinator then loads
+``artifacts/*.hlo.txt`` via ``HloModuleProto::from_text_file`` and never
+calls Python again.
+
+HLO TEXT is the interchange format, not serialized protos: jax >= 0.5
+emits HloModuleProto with 64-bit instruction ids which xla_extension
+0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser reassigns ids
+and round-trips cleanly (see /opt/xla-example/README.md).
+
+Also exported:
+  init_params.bin / init_lora.bin   deterministic f32-LE initializations
+  manifest.json                     model config, flat-param layout,
+                                    artifact IO signatures + SHA-256 pins
+                                    (the Table 2 reproducibility pins)
+
+Usage:  python -m compile.aot --out-dir ../artifacts [--preset tiny|small]
+        [--d-model N --n-layers N --batch N --seq-len N --dropout R ...]
+"""
+
+import argparse
+import hashlib
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .config import ModelConfig, TOKENIZER_SPEC, tiny, small
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo -> XlaComputation -> HLO text (return_tuple=True)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _sig(specs):
+    return [{"dtype": str(s.dtype), "shape": list(s.shape)} for s in specs]
+
+
+def sha256_file(path: str) -> str:
+    h = hashlib.sha256()
+    with open(path, "rb") as f:
+        for chunk in iter(lambda: f.read(1 << 20), b""):
+            h.update(chunk)
+    return h.hexdigest()
+
+
+def build_entries(cfg: ModelConfig):
+    """name -> (fn, [input ShapeDtypeStructs], [output names])."""
+    P, PL = cfg.param_count, cfg.lora_param_count
+    B, Be, S, V = cfg.batch, cfg.eval_batch, cfg.seq_len, cfg.vocab
+    f32, i32 = jnp.float32, jnp.int32
+
+    def sd(shape, dt=f32):
+        return jax.ShapeDtypeStruct(shape, dt)
+
+    entries = {
+        "train_step": (
+            lambda p, t, m, s: model.train_step(cfg, p, t, m, s),
+            [sd((P,)), sd((B, S), i32), sd((B,)), sd((), i32)],
+            ["grad", "loss_sum", "tok_count"],
+        ),
+        "adamw_update": (
+            lambda p, g, m, v, st, lr: model.update_step(cfg, p, g, m, v, st, lr),
+            [sd((P,)), sd((P,)), sd((P,)), sd((P,)), sd((), i32), sd((), f32)],
+            ["params", "m", "v"],
+        ),
+        "eval_loss": (
+            lambda p, t: model.eval_loss(cfg, p, t),
+            [sd((P,)), sd((Be, S), i32)],
+            ["loss_sum", "tok_count"],
+        ),
+        "next_logits": (
+            lambda p, t, l: model.next_logits(cfg, p, t, l),
+            [sd((P,)), sd((Be, S), i32), sd((Be,), i32)],
+            ["logits"],
+        ),
+        "lora_step": (
+            lambda b, lo, t, m, s: model.lora_step(cfg, b, lo, t, m, s),
+            [sd((P,)), sd((PL,)), sd((B, S), i32), sd((B,)), sd((), i32)],
+            ["grad", "loss_sum", "tok_count"],
+        ),
+        "lora_adamw": (
+            lambda p, g, m, v, st, lr: model.update_step(cfg, p, g, m, v, st, lr),
+            [sd((PL,)), sd((PL,)), sd((PL,)), sd((PL,)), sd((), i32), sd((), f32)],
+            ["lora", "m", "v"],
+        ),
+        "lora_eval": (
+            lambda b, lo, t: model.eval_loss(cfg, b, t, lora_flat=lo),
+            [sd((P,)), sd((PL,)), sd((Be, S), i32)],
+            ["loss_sum", "tok_count"],
+        ),
+        "lora_next_logits": (
+            lambda b, lo, t, l: model.next_logits(cfg, b, t, l, lora_flat=lo),
+            [sd((P,)), sd((PL,)), sd((Be, S), i32), sd((Be,), i32)],
+            ["logits"],
+        ),
+    }
+    return entries
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--preset", choices=["tiny", "small"], default="tiny")
+    ap.add_argument("--d-model", type=int)
+    ap.add_argument("--n-heads", type=int)
+    ap.add_argument("--n-layers", type=int)
+    ap.add_argument("--d-ff", type=int)
+    ap.add_argument("--seq-len", type=int)
+    ap.add_argument("--batch", type=int)
+    ap.add_argument("--eval-batch", type=int)
+    ap.add_argument("--dropout", type=float)
+    ap.add_argument("--lora-rank", type=int)
+    ap.add_argument("--init-seed", type=int)
+    args = ap.parse_args()
+
+    cfg = tiny() if args.preset == "tiny" else small()
+    for f in ("d_model", "n_heads", "n_layers", "d_ff", "seq_len", "batch",
+              "eval_batch", "dropout", "lora_rank", "init_seed"):
+        v = getattr(args, f)
+        if v is not None:
+            setattr(cfg, f, v)
+
+    out = args.out_dir
+    os.makedirs(out, exist_ok=True)
+
+    artifacts = {}
+    for name, (fn, in_specs, out_names) in build_entries(cfg).items():
+        lowered = jax.jit(fn, keep_unused=True).lower(*in_specs)
+        text = to_hlo_text(lowered)
+        fname = f"{name}.hlo.txt"
+        path = os.path.join(out, fname)
+        with open(path, "w") as f:
+            f.write(text)
+        artifacts[name] = {
+            "file": fname,
+            "sha256": sha256_file(path),
+            "inputs": _sig(in_specs),
+            "outputs": out_names,
+        }
+        print(f"  lowered {name:18s} -> {fname} ({len(text)/1e6:.2f} MB)")
+
+    # Deterministic initializations (the θ0 the trainer starts from).
+    p0 = model.init_params(cfg)
+    lora0 = model.init_lora(cfg)
+    for fname, arr in (("init_params.bin", p0), ("init_lora.bin", lora0)):
+        path = os.path.join(out, fname)
+        import numpy as np
+        with open(path, "wb") as f:
+            f.write(np.asarray(arr, dtype=np.float32).tobytes())
+        artifacts[fname] = {"file": fname, "sha256": sha256_file(path)}
+        print(f"  wrote   {fname} ({arr.size * 4} B)")
+
+    manifest = {
+        "format_version": 1,
+        "config": cfg.to_dict(),
+        "tokenizer_checksum": hashlib.sha256(
+            TOKENIZER_SPEC.encode()).hexdigest(),
+        "jax_version": jax.__version__,
+        "artifacts": artifacts,
+    }
+    with open(os.path.join(out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2, sort_keys=True)
+    print(f"wrote {out}/manifest.json (P={cfg.param_count}, "
+          f"PL={cfg.lora_param_count})")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,126 @@
+"""Model configuration and flat parameter layout.
+
+The entire parameter set is a single flat f32[P] vector.  The layout
+(ordered list of named tensors with shapes and offsets) is computed here
+and exported to ``artifacts/manifest.json`` so the Rust coordinator can
+checkpoint / delta / hash parameters without knowing the model internals.
+
+Layout order (stable; any change bumps ``LAYOUT_VERSION``):
+  embed(V,D), pos(S,D),
+  per layer l: ln1_scale(D), ln1_bias(D), w_qkv(D,3D), w_out(D,D),
+               ln2_scale(D), ln2_bias(D), w_mlp_in(D,F), b_mlp_in(F),
+               w_mlp_out(F,D), b_mlp_out(D),
+  lnf_scale(D), lnf_bias(D)
+
+LoRA layout order (rank r adapters on w_qkv and w_mlp_in):
+  per layer l: A_qkv(r,D), B_qkv(3D,r), A_mlp(r,D), B_mlp(F,r)
+"""
+
+from dataclasses import dataclass, field, asdict
+import math
+
+LAYOUT_VERSION = 1
+
+# Byte-level tokenizer contract shared with the Rust side (data/tokenizer.rs).
+# sha256 of this exact string is the "tokenizer checksum" pin of Table 2.
+TOKENIZER_SPEC = "byte-tokenizer-v1:vocab=256,pad=0,newline-doc-sep"
+
+
+@dataclass
+class ModelConfig:
+    vocab: int = 256
+    d_model: int = 64
+    n_heads: int = 4
+    n_layers: int = 2
+    d_ff: int = 256
+    seq_len: int = 64
+    batch: int = 8           # train microbatch size (baked into HLO)
+    eval_batch: int = 16     # eval batch size (baked into HLO)
+    dropout: float = 0.0     # baked at trace time; seed is still an input
+    lora_rank: int = 4
+    init_seed: int = 1234
+    # AdamW hyperparameters (baked into the update artifact)
+    beta1: float = 0.9
+    beta2: float = 0.999
+    eps: float = 1e-8
+    weight_decay: float = 0.01
+    clip_norm: float = 1.0
+
+    @property
+    def d_head(self) -> int:
+        assert self.d_model % self.n_heads == 0
+        return self.d_model // self.n_heads
+
+    def layout(self):
+        """Ordered [(name, shape)] of the flat parameter vector."""
+        V, D, S, F, L = self.vocab, self.d_model, self.seq_len, self.d_ff, self.n_layers
+        out = [("embed", (V, D)), ("pos", (S, D))]
+        for l in range(L):
+            out += [
+                (f"l{l}.ln1_scale", (D,)),
+                (f"l{l}.ln1_bias", (D,)),
+                (f"l{l}.w_qkv", (D, 3 * D)),
+                (f"l{l}.w_out", (D, D)),
+                (f"l{l}.ln2_scale", (D,)),
+                (f"l{l}.ln2_bias", (D,)),
+                (f"l{l}.w_mlp_in", (D, F)),
+                (f"l{l}.b_mlp_in", (F,)),
+                (f"l{l}.w_mlp_out", (F, D)),
+                (f"l{l}.b_mlp_out", (D,)),
+            ]
+        out += [("lnf_scale", (D,)), ("lnf_bias", (D,))]
+        return out
+
+    def lora_layout(self):
+        D, F, L, r = self.d_model, self.d_ff, self.n_layers, self.lora_rank
+        out = []
+        for l in range(L):
+            out += [
+                (f"l{l}.A_qkv", (r, D)),
+                (f"l{l}.B_qkv", (3 * D, r)),
+                (f"l{l}.A_mlp", (r, D)),
+                (f"l{l}.B_mlp", (F, r)),
+            ]
+        return out
+
+    @property
+    def param_count(self) -> int:
+        return sum(math.prod(s) for _, s in self.layout())
+
+    @property
+    def lora_param_count(self) -> int:
+        return sum(math.prod(s) for _, s in self.lora_layout())
+
+    def offsets(self, layout):
+        """[(name, shape, offset)] with running offsets."""
+        off, out = 0, []
+        for name, shape in layout:
+            out.append((name, shape, off))
+            off += math.prod(shape)
+        return out
+
+    def to_dict(self):
+        d = asdict(self)
+        d["param_count"] = self.param_count
+        d["lora_param_count"] = self.lora_param_count
+        d["layout_version"] = LAYOUT_VERSION
+        d["tokenizer_spec"] = TOKENIZER_SPEC
+        d["layout"] = [
+            {"name": n, "shape": list(s), "offset": o}
+            for n, s, o in self.offsets(self.layout())
+        ]
+        d["lora_layout"] = [
+            {"name": n, "shape": list(s), "offset": o}
+            for n, s, o in self.offsets(self.lora_layout())
+        ]
+        return d
+
+
+def tiny() -> ModelConfig:
+    """Default toy config (~0.12M params) used by tests and quickstart."""
+    return ModelConfig()
+
+
+def small() -> ModelConfig:
+    """~1M params config used by the end-to-end example."""
+    return ModelConfig(d_model=128, n_heads=4, n_layers=4, d_ff=512, seq_len=64)

@@ -1,0 +1,101 @@
+"""L1 Pallas kernel: fused AdamW elementwise update.
+
+This is the ``Update`` pure function of the paper's Eq. (2)/(4): the
+replay-exactness argument (Assumption A.13) requires Update to be a pure,
+deterministic function of (params, grad, moments, step, lr) — fusing the
+whole elementwise chain into one kernel keeps it a single pass over the
+parameter vector (one HBM read/write per tensor on real hardware; tiles
+sized in 8x128 multiples stream through VMEM).
+
+Scalars (lr, bias corrections, clip scale, hyperparameters) ride in a
+small f32[8] vector broadcast to every tile.  Global-norm clipping is
+computed by the caller (it is a reduction, not elementwise) and passed in
+as ``clip_scale``.
+
+Runs under ``interpret=True`` on this image; see attention.py note.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+TILE = 4096  # 8*512 elements per program instance; f32 tile = 16 KiB VMEM
+
+
+def _adamw_kernel(sc_ref, p_ref, g_ref, m_ref, v_ref, po_ref, mo_ref, vo_ref):
+    """sc_ref: f32[8] = [lr, beta1, beta2, eps, wd, bc1, bc2, clip_scale]."""
+    lr, b1, b2, eps = sc_ref[0], sc_ref[1], sc_ref[2], sc_ref[3]
+    wd, bc1, bc2, cs = sc_ref[4], sc_ref[5], sc_ref[6], sc_ref[7]
+    g = g_ref[...] * cs
+    m_new = b1 * m_ref[...] + (1.0 - b1) * g
+    v_new = b2 * v_ref[...] + (1.0 - b2) * g * g
+    m_hat = m_new / bc1
+    v_hat = v_new / bc2
+    p = p_ref[...]
+    po_ref[...] = p - lr * (m_hat / (jnp.sqrt(v_hat) + eps) + wd * p)
+    mo_ref[...] = m_new
+    vo_ref[...] = v_new
+
+
+def adamw_fused(p, g, m, v, scalars, tile: int = TILE):
+    """Apply the fused AdamW kernel over flat f32[P] vectors.
+
+    ``scalars`` = f32[8] [lr, beta1, beta2, eps, weight_decay, bc1, bc2,
+    clip_scale].  P is padded up to a tile multiple internally.
+    """
+    n = p.shape[0]
+    n_pad = (n + tile - 1) // tile * tile
+    pad = n_pad - n
+
+    def padded(x):
+        return jnp.pad(x, (0, pad)) if pad else x
+
+    p_, g_, m_, v_ = padded(p), padded(g), padded(m), padded(v)
+    out_shape = [jax.ShapeDtypeStruct((n_pad,), jnp.float32)] * 3
+    po, mo, vo = pl.pallas_call(
+        _adamw_kernel,
+        grid=(n_pad // tile,),
+        in_specs=[
+            pl.BlockSpec((8,), lambda i: (0,)),  # scalars broadcast to tiles
+            pl.BlockSpec((tile,), lambda i: (i,)),
+            pl.BlockSpec((tile,), lambda i: (i,)),
+            pl.BlockSpec((tile,), lambda i: (i,)),
+            pl.BlockSpec((tile,), lambda i: (i,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((tile,), lambda i: (i,)),
+            pl.BlockSpec((tile,), lambda i: (i,)),
+            pl.BlockSpec((tile,), lambda i: (i,)),
+        ],
+        out_shape=out_shape,
+        interpret=True,  # mandatory on CPU PJRT
+    )(scalars, p_, g_, m_, v_)
+    if pad:
+        po, mo, vo = po[:n], mo[:n], vo[:n]
+    return po, mo, vo
+
+
+def adamw_update(p, g, m, v, step, lr, *, beta1, beta2, eps, weight_decay,
+                 clip_norm, use_pallas=True):
+    """Full Update: global-norm clip (c=clip_norm) then fused AdamW.
+
+    ``step``: i32 scalar, 1-based applied-update counter (paper's
+    opt_step semantics — bias correction sees only applied updates).
+    """
+    gnorm = jnp.sqrt(jnp.sum(g * g))
+    clip_scale = jnp.minimum(1.0, clip_norm / jnp.maximum(gnorm, 1e-12))
+    stepf = step.astype(jnp.float32)
+    bc1 = 1.0 - jnp.power(beta1, stepf)
+    bc2 = 1.0 - jnp.power(beta2, stepf)
+    if use_pallas:
+        scalars = jnp.stack([
+            jnp.asarray(lr, jnp.float32).reshape(()),
+            jnp.float32(beta1), jnp.float32(beta2), jnp.float32(eps),
+            jnp.float32(weight_decay), bc1, bc2, clip_scale,
+        ])
+        return adamw_fused(p, g, m, v, scalars)
+    from . import ref
+    return ref.adamw_ref(p, g * clip_scale, m, v, stepf, lr, beta1, beta2,
+                         eps, weight_decay, jnp.float32(1.0))

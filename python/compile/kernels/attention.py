@@ -1,0 +1,126 @@
+"""L1 Pallas kernel: causal flash attention (tiled online softmax).
+
+TPU-style structure (see DESIGN.md §Hardware-Adaptation): the S×S score
+matrix is never materialized; Q is tiled into ``block_q`` rows held in
+VMEM, K/V stream through in ``block_k`` chunks, and the two matmuls
+(QK^T, PV) target the MXU.  On this image the kernel must run with
+``interpret=True`` (CPU PJRT cannot execute Mosaic custom-calls), so the
+kernel is validated for *structure and numerics*, not wallclock.
+
+The backward pass is a custom VJP that recomputes attention with the
+pure-jnp reference math — the standard pragmatic pairing for Pallas
+kernels whose fwd is the hot path.  Gradients are therefore exact w.r.t.
+the reference semantics; pytest cross-checks both passes against
+``ref.attention_ref``.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, *, scale, block_k, seq_len, causal):
+    """One (batch*head, q-block) program instance.
+
+    q_ref: f32[block_q, Dh]   (VMEM tile of queries)
+    k_ref: f32[S, Dh]         (keys, streamed in block_k chunks below)
+    v_ref: f32[S, Dh]
+    o_ref: f32[block_q, Dh]
+    """
+    block_q, d_head = q_ref.shape
+    q_blk = pl.program_id(1)
+    # accumulate in f32 regardless of input dtype (MXU-style f32 acc)
+    q = q_ref[...].astype(jnp.float32) * scale
+
+    num_k_blocks = seq_len // block_k
+
+    def body(kb, carry):
+        acc, m_i, l_i = carry
+        k = k_ref[pl.dslice(kb * block_k, block_k), :].astype(jnp.float32)
+        v = v_ref[pl.dslice(kb * block_k, block_k), :].astype(jnp.float32)
+        s = q @ k.T  # [block_q, block_k] — MXU matmul
+        if causal:
+            q_ids = q_blk * block_q + jax.lax.broadcasted_iota(
+                jnp.int32, (block_q, block_k), 0
+            )
+            k_ids = kb * block_k + jax.lax.broadcasted_iota(
+                jnp.int32, (block_q, block_k), 1
+            )
+            s = jnp.where(q_ids >= k_ids, s, NEG_INF)
+        m_new = jnp.maximum(m_i, jnp.max(s, axis=1))
+        p = jnp.exp(s - m_new[:, None])
+        alpha = jnp.exp(m_i - m_new)
+        l_new = alpha * l_i + jnp.sum(p, axis=1)
+        acc = acc * alpha[:, None] + p @ v  # MXU matmul
+        return acc, m_new, l_new
+
+    acc0 = jnp.zeros((block_q, d_head), dtype=jnp.float32)
+    m0 = jnp.full((block_q,), NEG_INF, dtype=jnp.float32)
+    l0 = jnp.zeros((block_q,), dtype=jnp.float32)
+    acc, m_i, l_i = jax.lax.fori_loop(0, num_k_blocks, body, (acc0, m0, l0))
+    o_ref[...] = acc / l_i[:, None]
+
+
+def _flash_fwd_impl(q, k, v, *, block_q, block_k, causal):
+    b, h, s, dh = q.shape
+    assert s % block_q == 0 and s % block_k == 0, (s, block_q, block_k)
+    scale = 1.0 / (dh ** 0.5)
+    qf = q.reshape(b * h, s, dh)
+    kf = k.reshape(b * h, s, dh)
+    vf = v.reshape(b * h, s, dh)
+    kernel = functools.partial(
+        _flash_kernel, scale=scale, block_k=block_k, seq_len=s, causal=causal
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid=(b * h, s // block_q),
+        in_specs=[
+            pl.BlockSpec((None, block_q, dh), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((None, s, dh), lambda i, j: (i, 0, 0)),
+            pl.BlockSpec((None, s, dh), lambda i, j: (i, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((None, block_q, dh), lambda i, j: (i, j, 0)),
+        out_shape=jax.ShapeDtypeStruct((b * h, s, dh), jnp.float32),
+        interpret=True,  # mandatory on CPU PJRT (no Mosaic)
+    )(qf, kf, vf)
+    return out.reshape(b, h, s, dh)
+
+
+def _attn_bwd_math(q, k, v, g, causal):
+    """Reference attention backward (recompute); used by the custom VJP."""
+    scale = 1.0 / (q.shape[-1] ** 0.5)
+    logits = jnp.einsum("bhqd,bhkd->bhqk", q, k) * scale
+    if causal:
+        s = q.shape[2]
+        mask = jnp.tril(jnp.ones((s, s), dtype=bool))
+        logits = jnp.where(mask[None, None], logits, NEG_INF)
+    p = jax.nn.softmax(logits, axis=-1)
+    dv = jnp.einsum("bhqk,bhqd->bhkd", p, g)
+    dp = jnp.einsum("bhqd,bhkd->bhqk", g, v)
+    ds = p * (dp - jnp.sum(p * dp, axis=-1, keepdims=True))
+    dq = jnp.einsum("bhqk,bhkd->bhqd", ds, k) * scale
+    dk = jnp.einsum("bhqk,bhqd->bhkd", ds, q) * scale
+    return dq, dk, dv
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5))
+def flash_attention(q, k, v, block_q=16, block_k=16, causal=True):
+    """Causal flash attention, f32[B,H,S,Dh] -> f32[B,H,S,Dh]."""
+    return _flash_fwd_impl(q, k, v, block_q=block_q, block_k=block_k, causal=causal)
+
+
+def _fwd(q, k, v, block_q, block_k, causal):
+    o = _flash_fwd_impl(q, k, v, block_q=block_q, block_k=block_k, causal=causal)
+    return o, (q, k, v)
+
+
+def _bwd(block_q, block_k, causal, res, g):
+    q, k, v = res
+    return _attn_bwd_math(q, k, v, g, causal)
+
+
+flash_attention.defvjp(_fwd, _bwd)

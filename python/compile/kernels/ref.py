@@ -1,0 +1,51 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+These are the correctness references: ``pytest python/tests`` asserts the
+Pallas kernels (run under ``interpret=True``) match these within float32
+tolerance, with hypothesis sweeping shapes.  The L2 model can also be
+built entirely from these functions (``model.build_fns(use_pallas=False)``)
+which is how we cross-check the full lowered graph.
+"""
+
+import jax.numpy as jnp
+
+
+def attention_ref(q, k, v, causal: bool = True):
+    """Multi-head scaled-dot-product attention.
+
+    q, k, v: f32[B, H, S, Dh].  Returns f32[B, H, S, Dh].
+    """
+    scale = 1.0 / jnp.sqrt(jnp.asarray(q.shape[-1], dtype=q.dtype))
+    logits = jnp.einsum("bhqd,bhkd->bhqk", q, k) * scale
+    if causal:
+        s = q.shape[2]
+        mask = jnp.tril(jnp.ones((s, s), dtype=bool))
+        logits = jnp.where(mask[None, None, :, :], logits, -jnp.inf)
+    p = jnp.exp(logits - jnp.max(logits, axis=-1, keepdims=True))
+    p = p / jnp.sum(p, axis=-1, keepdims=True)
+    return jnp.einsum("bhqk,bhkd->bhqd", p, v)
+
+
+def adamw_ref(p, g, m, v, step, lr, beta1, beta2, eps, weight_decay, clip_scale):
+    """AdamW elementwise update (after global-norm clip by ``clip_scale``).
+
+    All arrays f32[P]; ``step`` is the 1-based applied-update index used for
+    bias correction; returns (p', m', v').
+    """
+    g = g * clip_scale
+    m_new = beta1 * m + (1.0 - beta1) * g
+    v_new = beta2 * v + (1.0 - beta2) * g * g
+    bc1 = 1.0 - beta1 ** step
+    bc2 = 1.0 - beta2 ** step
+    m_hat = m_new / bc1
+    v_hat = v_new / bc2
+    p_new = p - lr * (m_hat / (jnp.sqrt(v_hat) + eps) + weight_decay * p)
+    return p_new, m_new, v_new
+
+
+def softmax_xent_ref(logits, targets):
+    """Per-position cross entropy; logits f32[..., V], int targets[...]."""
+    m = jnp.max(logits, axis=-1)
+    logz = jnp.log(jnp.sum(jnp.exp(logits - m[..., None]), axis=-1)) + m
+    gold = jnp.take_along_axis(logits, targets[..., None], axis=-1)[..., 0]
+    return logz - gold

@@ -1,0 +1,242 @@
+"""L2: the training-program compute graphs, written in JAX.
+
+Every graph here is lowered ONCE by ``aot.py`` to HLO text and executed
+from the Rust coordinator via PJRT; Python never runs on the request
+path.  Parameters are a single flat f32[P] vector (layout in config.py).
+
+The key exactness property (paper Lemma A.2(ii) + Prop. A.8) lives here:
+``train_step`` takes a per-example ``mask`` and computes the loss with
+reduction=sum, so filtered examples contribute *exactly zero* addends
+while tensor shapes, kernel launch orders and RNG draws stay identical.
+This is what makes ReplayFilter and the preserved-graph oracle retrain
+bit-identical when they run the same compiled executable.
+"""
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .kernels import ref
+from .kernels.attention import flash_attention
+from .kernels.adamw import adamw_update
+
+
+# ---------------------------------------------------------------------------
+# parameter (un)flattening
+# ---------------------------------------------------------------------------
+
+def unflatten(cfg: ModelConfig, flat):
+    """Flat f32[P] -> dict of named tensors per cfg.layout()."""
+    out = {}
+    for name, shape, off in cfg.offsets(cfg.layout()):
+        n = math.prod(shape)
+        out[name] = flat[off:off + n].reshape(shape)
+    return out
+
+
+def unflatten_lora(cfg: ModelConfig, flat):
+    out = {}
+    for name, shape, off in cfg.offsets(cfg.lora_layout()):
+        n = math.prod(shape)
+        out[name] = flat[off:off + n].reshape(shape)
+    return out
+
+
+def init_params(cfg: ModelConfig):
+    """Deterministic initialization (seeded); exported as init_params.bin."""
+    key = jax.random.key(cfg.init_seed)
+    chunks = []
+    for name, shape in cfg.layout():
+        key, sub = jax.random.split(key)
+        n = math.prod(shape)
+        if "ln" in name and "scale" in name:
+            chunks.append(jnp.ones(n, jnp.float32))
+        elif "bias" in name or name.endswith(("b_mlp_in", "b_mlp_out")):
+            chunks.append(jnp.zeros(n, jnp.float32))
+        else:
+            fan_in = shape[0] if len(shape) > 1 else shape[0]
+            std = 0.02 if name in ("embed", "pos") else 1.0 / math.sqrt(fan_in)
+            chunks.append(jax.random.normal(sub, (n,), jnp.float32) * std)
+    return jnp.concatenate(chunks)
+
+
+def init_lora(cfg: ModelConfig):
+    """A ~ small normal, B = 0 (standard LoRA init: patch starts at zero)."""
+    key = jax.random.key(cfg.init_seed + 77)
+    chunks = []
+    for name, shape in cfg.lora_layout():
+        key, sub = jax.random.split(key)
+        n = math.prod(shape)
+        if name.split(".")[-1].startswith("A"):
+            chunks.append(jax.random.normal(sub, (n,), jnp.float32) * 0.01)
+        else:
+            chunks.append(jnp.zeros(n, jnp.float32))
+    return jnp.concatenate(chunks)
+
+
+# ---------------------------------------------------------------------------
+# forward pass
+# ---------------------------------------------------------------------------
+
+def _layer_norm(x, scale, bias, eps=1e-5):
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean((x - mu) ** 2, axis=-1, keepdims=True)
+    return (x - mu) / jnp.sqrt(var + eps) * scale + bias
+
+
+def _dropout(x, rate, key):
+    if rate <= 0.0:
+        return x
+    keep = jax.random.bernoulli(key, 1.0 - rate, x.shape)
+    return jnp.where(keep, x / (1.0 - rate), 0.0)
+
+
+def forward(cfg: ModelConfig, params_flat, tokens, seed=None, *,
+            dropout=0.0, use_pallas=True, lora_flat=None):
+    """Logits for a token batch.
+
+    tokens: i32[B, S].  Returns f32[B, S, V].  ``seed`` (i32 scalar) feeds
+    counter-based dropout streams — draws depend only on (seed, position),
+    never on batch *content*, which is the index-stability requirement of
+    Lemma A.2.  ``lora_flat`` optionally applies additive low-rank patches
+    (W + (B@A)^T) on w_qkv / w_mlp_in with the base strictly frozen by the
+    caller (G2).
+    """
+    p = unflatten(cfg, params_flat)
+    lora = unflatten_lora(cfg, lora_flat) if lora_flat is not None else None
+    B, S = tokens.shape
+    D, H, Dh = cfg.d_model, cfg.n_heads, cfg.d_head
+
+    x = p["embed"][tokens] + p["pos"][None, :S, :]
+    if dropout > 0.0:
+        base_key = jax.random.key(seed.astype(jnp.uint32))
+    for l in range(cfg.n_layers):
+        h = _layer_norm(x, p[f"l{l}.ln1_scale"], p[f"l{l}.ln1_bias"])
+        w_qkv = p[f"l{l}.w_qkv"]
+        if lora is not None:
+            w_qkv = w_qkv + (lora[f"l{l}.B_qkv"] @ lora[f"l{l}.A_qkv"]).T
+        qkv = h @ w_qkv  # [B,S,3D]
+        q, k, v = jnp.split(qkv, 3, axis=-1)
+
+        def heads(t):
+            return t.reshape(B, S, H, Dh).transpose(0, 2, 1, 3)
+
+        if use_pallas:
+            att = flash_attention(heads(q), heads(k), heads(v))
+        else:
+            att = ref.attention_ref(heads(q), heads(k), heads(v))
+        att = att.transpose(0, 2, 1, 3).reshape(B, S, D)
+        att = att @ p[f"l{l}.w_out"]
+        if dropout > 0.0:
+            att = _dropout(att, dropout, jax.random.fold_in(base_key, 2 * l))
+        x = x + att
+
+        h = _layer_norm(x, p[f"l{l}.ln2_scale"], p[f"l{l}.ln2_bias"])
+        w_in = p[f"l{l}.w_mlp_in"]
+        if lora is not None:
+            w_in = w_in + (lora[f"l{l}.B_mlp"] @ lora[f"l{l}.A_mlp"]).T
+        ff = jax.nn.gelu(h @ w_in + p[f"l{l}.b_mlp_in"])
+        ff = ff @ p[f"l{l}.w_mlp_out"] + p[f"l{l}.b_mlp_out"]
+        if dropout > 0.0:
+            ff = _dropout(ff, dropout, jax.random.fold_in(base_key, 2 * l + 1))
+        x = x + ff
+
+    x = _layer_norm(x, p["lnf_scale"], p["lnf_bias"])
+    return x @ p["embed"].T  # tied embedding head
+
+
+# ---------------------------------------------------------------------------
+# losses / training graphs (the AOT entry points)
+# ---------------------------------------------------------------------------
+
+def _masked_loss_sum(cfg, params_flat, tokens, mask, seed, *,
+                     use_pallas=True, lora_flat=None):
+    """Sum-reduced next-token loss with per-example mask (Prop. A.8)."""
+    logits = forward(cfg, params_flat, tokens, seed,
+                     dropout=cfg.dropout, use_pallas=use_pallas,
+                     lora_flat=lora_flat)
+    xent = ref.softmax_xent_ref(logits[:, :-1, :], tokens[:, 1:])  # [B,S-1]
+    # PAD targets (token 0) carry no loss: the sum runs over *real*
+    # tokens only.  Still reduction=sum — removing examples removes
+    # addends (Prop. A.8); padding positions are exact zeros.
+    pos = (tokens[:, 1:] != 0).astype(jnp.float32)
+    per_ex = jnp.sum(xent * pos, axis=-1)                          # [B]
+    loss = jnp.sum(per_ex * mask)
+    count = jnp.sum(jnp.sum(pos, axis=-1) * mask)
+    return loss, count
+
+
+def train_step(cfg: ModelConfig, params_flat, tokens, mask, seed, *,
+               use_pallas=True):
+    """(grad f32[P], loss_sum, tok_count) for one microbatch.
+
+    This is ``g(θ; B, S)`` of Eq. (4).  Accumulation across microbatches
+    and the Update call live in the Rust coordinator so gradient order is
+    explicit and logged.
+    """
+    def loss_fn(pf):
+        loss, count = _masked_loss_sum(cfg, pf, tokens, mask, seed,
+                                       use_pallas=use_pallas)
+        return loss, count
+
+    (loss, count), grad = jax.value_and_grad(loss_fn, has_aux=True)(params_flat)
+    return grad, loss, count
+
+
+def update_step(cfg: ModelConfig, params, grad, m, v, step, lr, *,
+                use_pallas=True):
+    """UPDATE of Eq. (4): global-norm clip (c=1.0) then fused AdamW."""
+    return adamw_update(params, grad, m, v, step, lr,
+                        beta1=cfg.beta1, beta2=cfg.beta2, eps=cfg.eps,
+                        weight_decay=cfg.weight_decay,
+                        clip_norm=cfg.clip_norm, use_pallas=use_pallas)
+
+
+def eval_loss(cfg: ModelConfig, params_flat, tokens, *, use_pallas=True,
+              lora_flat=None):
+    """Per-example sum loss (f32[B]) + per-example token counts (f32[B]).
+
+    Used by every audit: perplexity, MIA scores, canary exposure ranks.
+    No dropout at eval.
+    """
+    logits = forward(cfg, params_flat, tokens, None, dropout=0.0,
+                     use_pallas=use_pallas, lora_flat=lora_flat)
+    xent = ref.softmax_xent_ref(logits[:, :-1, :], tokens[:, 1:])
+    pos = (tokens[:, 1:] != 0).astype(jnp.float32)  # PAD carries no loss
+    per_ex = jnp.sum(xent * pos, axis=-1)
+    count = jnp.sum(pos, axis=-1)
+    return per_ex, count
+
+
+def next_logits(cfg: ModelConfig, params_flat, tokens, lens, *,
+                use_pallas=True, lora_flat=None):
+    """Logits at position lens[b]-1 for greedy decoding (extraction audit).
+
+    tokens: i32[B,S] (padded), lens: i32[B].  Returns f32[B,V].
+    """
+    logits = forward(cfg, params_flat, tokens, None, dropout=0.0,
+                     use_pallas=use_pallas, lora_flat=lora_flat)
+    idx = jnp.clip(lens - 1, 0, cfg.seq_len - 1)
+    return jnp.take_along_axis(
+        logits, idx[:, None, None].astype(jnp.int32), axis=1
+    )[:, 0, :]
+
+
+def lora_step(cfg: ModelConfig, base_flat, lora_flat, tokens, mask, seed, *,
+              use_pallas=True):
+    """Cohort-adapter microbatch step: grads w.r.t. the adapter ONLY.
+
+    The base is strictly frozen (stop_gradient), satisfying the G2
+    precondition: no base-weight or base-optimizer-state updates.
+    """
+    frozen = jax.lax.stop_gradient(base_flat)
+
+    def loss_fn(lf):
+        loss, count = _masked_loss_sum(cfg, frozen, tokens, mask, seed,
+                                       use_pallas=use_pallas, lora_flat=lf)
+        return loss, count
+
+    (loss, count), grad = jax.value_and_grad(loss_fn, has_aux=True)(lora_flat)
+    return grad, loss, count

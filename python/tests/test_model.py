@@ -1,0 +1,250 @@
+"""L2 model-graph properties — the exactness preconditions of App. A.
+
+The decisive ones for the paper's Theorem A.1:
+  * mask content-independence (Lemma A.2(ii)): what sits in a masked slot
+    cannot change any bit of the gradient;
+  * reduction=sum additivity (Lemma A.3 / Prop. A.8): filtering removes
+    addends, never rescales;
+  * purity (Assumption A.13): same inputs -> bit-identical outputs.
+"""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.config import ModelConfig, tiny
+from compile import model
+
+CFG = tiny()
+SETTINGS = dict(max_examples=10, deadline=None)
+
+
+def mk_tokens(seed, b=None, s=None):
+    r = np.random.default_rng(seed)
+    return jnp.asarray(
+        r.integers(1, CFG.vocab, (b or CFG.batch, s or CFG.seq_len)), jnp.int32
+    )
+
+
+@pytest.fixture(scope="module")
+def params():
+    return model.init_params(CFG)
+
+
+def test_param_count_matches_layout(params):
+    assert params.shape == (CFG.param_count,)
+    total = sum(int(np.prod(s)) for _, s in CFG.layout())
+    assert total == CFG.param_count
+
+
+def test_unflatten_roundtrip(params):
+    d = model.unflatten(CFG, params)
+    flat = jnp.concatenate([d[n].reshape(-1) for n, _ in CFG.layout()])
+    assert np.array_equal(np.asarray(flat), np.asarray(params))
+
+
+def test_forward_shapes(params):
+    toks = mk_tokens(0)
+    logits = model.forward(CFG, params, toks)
+    assert logits.shape == (CFG.batch, CFG.seq_len, CFG.vocab)
+    assert bool(jnp.all(jnp.isfinite(logits)))
+
+
+def test_train_step_pure_function_bitwise(params):
+    """Assumption A.13: g() is pure — two calls give identical bits."""
+    toks, mask, seed = mk_tokens(1), jnp.ones(CFG.batch), jnp.int32(3)
+    g1, l1, c1 = model.train_step(CFG, params, toks, mask, seed)
+    g2, l2, c2 = model.train_step(CFG, params, toks, mask, seed)
+    assert np.array_equal(np.asarray(g1), np.asarray(g2))
+    assert float(l1) == float(l2)
+
+
+def test_mask_content_independence_bitwise(params):
+    """Lemma A.2(ii): junk in masked slots changes nothing, bit-for-bit.
+
+    This is the property that lets ReplayFilter zero out forget-sample
+    content during replay while remaining exact.
+    """
+    toks = mk_tokens(2)
+    mask = jnp.array([1, 1, 1, 1, 0, 0, 1, 0], jnp.float32)
+    g1, l1, _ = model.train_step(CFG, params, toks, mask, jnp.int32(9))
+    junk = np.asarray(toks).copy()
+    junk[4] = 255 - junk[4]
+    junk[5] = 0
+    junk[7] = np.random.default_rng(7).integers(0, 256, CFG.seq_len)
+    g2, l2, _ = model.train_step(CFG, params, jnp.asarray(junk), mask,
+                                 jnp.int32(9))
+    assert float(l1) == float(l2)
+    assert np.array_equal(np.asarray(g1), np.asarray(g2))
+
+
+@settings(**SETTINGS)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_empty_mask_gives_zero_gradient(seed):
+    """An all-filtered microbatch contributes exactly nothing (G=0)."""
+    p = model.init_params(CFG)
+    g, loss, count = model.train_step(CFG, p, mk_tokens(seed),
+                                      jnp.zeros(CFG.batch), jnp.int32(0))
+    assert float(loss) == 0.0
+    assert float(count) == 0.0
+    assert not np.any(np.asarray(g))
+
+
+def test_sum_reduction_additivity(params):
+    """Lemma A.3: microbatch gradient = sum of per-example gradients."""
+    toks = mk_tokens(3)
+    full, _, _ = model.train_step(CFG, params, toks, jnp.ones(CFG.batch),
+                                  jnp.int32(0))
+    acc = np.zeros(CFG.param_count, np.float32)
+    for b in range(CFG.batch):
+        m = np.zeros(CFG.batch, np.float32)
+        m[b] = 1.0
+        g, _, _ = model.train_step(CFG, params, toks, jnp.asarray(m),
+                                   jnp.int32(0))
+        acc += np.asarray(g)
+    np.testing.assert_allclose(acc, np.asarray(full), rtol=1e-4, atol=1e-5)
+
+
+def test_mean_reduction_would_break_equality(params):
+    """Prop. A.8: with mean reduction, filtering rescales the gradient."""
+    toks = mk_tokens(4)
+    mask_all = jnp.ones(CFG.batch)
+    mask_half = jnp.concatenate([jnp.ones(4), jnp.zeros(4)])
+    g_all, l_all, c_all = model.train_step(CFG, params, toks, mask_all,
+                                           jnp.int32(0))
+    g_half, l_half, c_half = model.train_step(CFG, params, toks, mask_half,
+                                              jnp.int32(0))
+    # sum-reduction: the half gradient is NOT a rescaling of the full one —
+    # it is the sum over the retained addends. Mean would have divided by
+    # post-filter cardinality (c_half) and broken addend identity.
+    mean_all = np.asarray(g_all) / float(c_all)
+    mean_half = np.asarray(g_half) / float(c_half)
+    assert not np.allclose(mean_all, mean_half, rtol=1e-3, atol=1e-5)
+
+
+def test_update_step_deterministic_and_changes_params(params):
+    g, _, _ = model.train_step(CFG, params, mk_tokens(5),
+                               jnp.ones(CFG.batch), jnp.int32(0))
+    m = jnp.zeros_like(params)
+    v = jnp.zeros_like(params)
+    a = model.update_step(CFG, params, g, m, v, jnp.int32(1), jnp.float32(1e-3))
+    b = model.update_step(CFG, params, g, m, v, jnp.int32(1), jnp.float32(1e-3))
+    for x, y in zip(a, b):
+        assert np.array_equal(np.asarray(x), np.asarray(y))
+    assert not np.array_equal(np.asarray(a[0]), np.asarray(params))
+
+
+def test_eval_loss_consistent_with_train_loss(params):
+    cfg = ModelConfig(eval_batch=CFG.batch)  # same B so shapes line up
+    toks = mk_tokens(6)
+    per_ex, counts = model.eval_loss(cfg, params, toks)
+    _, train_loss, _ = model.train_step(cfg, params, toks,
+                                        jnp.ones(cfg.batch), jnp.int32(0))
+    np.testing.assert_allclose(float(jnp.sum(per_ex)), float(train_loss),
+                               rtol=1e-5)
+    # counts = number of non-PAD targets per example
+    expected = np.sum(np.asarray(toks)[:, 1:] != 0, axis=-1)
+    np.testing.assert_array_equal(np.asarray(counts), expected)
+
+
+def test_next_logits_matches_forward(params):
+    toks = mk_tokens(7, b=CFG.eval_batch)
+    lens = jnp.asarray(
+        np.random.default_rng(8).integers(1, CFG.seq_len + 1, CFG.eval_batch),
+        jnp.int32)
+    out = model.next_logits(CFG, params, toks, lens)
+    full = model.forward(CFG, params, toks)
+    for b in range(CFG.eval_batch):
+        np.testing.assert_array_equal(np.asarray(out[b]),
+                                      np.asarray(full[b, int(lens[b]) - 1]))
+
+
+# ---------------------------------------------------------------------------
+# dropout / seed semantics
+# ---------------------------------------------------------------------------
+
+def test_seed_ignored_when_dropout_zero(params):
+    toks, mask = mk_tokens(9), jnp.ones(CFG.batch)
+    g1, _, _ = model.train_step(CFG, params, toks, mask, jnp.int32(1))
+    g2, _, _ = model.train_step(CFG, params, toks, mask, jnp.int32(999))
+    assert np.array_equal(np.asarray(g1), np.asarray(g2))
+
+
+def test_dropout_seed_sensitivity():
+    cfg = ModelConfig(dropout=0.2)
+    p = model.init_params(cfg)
+    toks, mask = mk_tokens(10), jnp.ones(cfg.batch)
+    g1, l1, _ = model.train_step(cfg, p, toks, mask, jnp.int32(1))
+    g1b, l1b, _ = model.train_step(cfg, p, toks, mask, jnp.int32(1))
+    g2, l2, _ = model.train_step(cfg, p, toks, mask, jnp.int32(2))
+    # same seed -> bit identical; different seed -> different draws
+    assert np.array_equal(np.asarray(g1), np.asarray(g1b))
+    assert float(l1) != float(l2)
+
+
+def test_dropout_mask_content_independence():
+    """Index-stability holds with stochastic layers too (Lemma A.2)."""
+    cfg = ModelConfig(dropout=0.2)
+    p = model.init_params(cfg)
+    toks = mk_tokens(11)
+    mask = jnp.array([1, 0, 1, 0, 1, 0, 1, 0], jnp.float32)
+    junk = np.asarray(toks).copy()
+    junk[1::2] = 77
+    g1, _, _ = model.train_step(cfg, p, toks, mask, jnp.int32(5))
+    g2, _, _ = model.train_step(cfg, p, jnp.asarray(junk), mask, jnp.int32(5))
+    assert np.array_equal(np.asarray(g1), np.asarray(g2))
+
+
+# ---------------------------------------------------------------------------
+# LoRA (G2 preconditions)
+# ---------------------------------------------------------------------------
+
+def test_lora_zero_patch_is_identity(params):
+    """B=0 at init -> adapter-applied forward == base forward, bitwise...
+    (up to XLA fusion differences; we require allclose and check the
+    patch truly starts at zero)."""
+    lora = model.init_lora(CFG)
+    d = model.unflatten_lora(CFG, lora)
+    for name, arr in d.items():
+        if name.split(".")[-1].startswith("B"):
+            assert not np.any(np.asarray(arr))
+    toks = mk_tokens(12)
+    base = model.forward(CFG, params, toks)
+    patched = model.forward(CFG, params, toks, lora_flat=lora)
+    np.testing.assert_allclose(base, patched, rtol=1e-6, atol=1e-6)
+
+
+def test_lora_step_grads_only_adapter(params):
+    lora = model.init_lora(CFG) + 0.01  # make B nonzero so grads flow
+    toks, mask = mk_tokens(13), jnp.ones(CFG.batch)
+    g, loss, _ = model.lora_step(CFG, params, lora, toks, mask, jnp.int32(0))
+    assert g.shape == (CFG.lora_param_count,)
+    assert float(jnp.max(jnp.abs(g))) > 0.0
+    assert float(loss) > 0.0
+
+
+def test_lora_step_mask_content_independence(params):
+    lora = model.init_lora(CFG) + 0.01
+    toks = mk_tokens(14)
+    mask = jnp.array([1, 1, 0, 0, 1, 1, 0, 0], jnp.float32)
+    junk = np.asarray(toks).copy()
+    junk[2:4] = 9
+    g1, _, _ = model.lora_step(CFG, params, lora, toks, mask, jnp.int32(0))
+    g2, _, _ = model.lora_step(CFG, params, lora, jnp.asarray(junk), mask,
+                               jnp.int32(0))
+    assert np.array_equal(np.asarray(g1), np.asarray(g2))
+
+
+def test_lora_eval_reflects_patch(params):
+    lora = model.init_lora(CFG)
+    toks = mk_tokens(15, b=CFG.eval_batch)
+    base, _ = model.eval_loss(CFG, params, toks)
+    with_zero, _ = model.eval_loss(CFG, params, toks, lora_flat=lora)
+    np.testing.assert_allclose(base, with_zero, rtol=1e-5)
+    r = np.random.default_rng(42)
+    big = jnp.asarray(r.standard_normal(CFG.lora_param_count) * 0.2,
+                      jnp.float32)
+    with_big, _ = model.eval_loss(CFG, params, toks, lora_flat=big)
+    assert not np.allclose(np.asarray(base), np.asarray(with_big), rtol=1e-3)

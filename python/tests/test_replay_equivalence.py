@@ -1,0 +1,166 @@
+"""Mini G1 at the L2 level: ReplayFilter == preserved-graph oracle, bitwise.
+
+A pure-python miniature of the full Rust workflow (the Rust integration
+test `tests/replay_equality.rs` does the same through the AOT artifacts):
+train a tiny model for a few logical steps with gradient accumulation,
+"log" the WAL in memory, then check that
+
+  oracle   = train from θ0 with forget examples masked from the start
+  replay   = train from θ0 normally to checkpoint k (no forget influence
+             before k by construction), then replay the tail filtering
+             the forget closure
+
+produce bit-identical (θ, m, v) — Theorem A.1 at toy scale.  Also checks
+the empty-step-skip proposition and the Table-4 negative control
+(checkpoint post-dating forget influence -> NOT bit-identical).
+"""
+
+import numpy as np
+import jax.numpy as jnp
+
+from compile.config import ModelConfig
+from compile import model
+
+CFG = ModelConfig(d_model=32, n_heads=2, n_layers=1, d_ff=64, seq_len=16,
+                  batch=4)
+STEPS = 6            # logical optimizer steps
+ACCUM = 2            # microbatches per step
+B, S = CFG.batch, CFG.seq_len
+
+
+def make_schedule(seed=0):
+    """[(tokens[B,S], base_mask[B], seed, lr)] per microbatch, in order."""
+    r = np.random.default_rng(seed)
+    sched = []
+    for t in range(STEPS):
+        for i in range(ACCUM):
+            toks = r.integers(1, CFG.vocab, (B, S)).astype(np.int32)
+            lr = 1e-3 * (0.9 ** t)
+            sched.append((toks, t, i, lr))
+    return sched
+
+
+def run(sched, forget, start_state=None, start_at=0, zero_content=False):
+    """Run the preserved-graph program, masking ``forget`` (set of
+    (step, mb, slot)).  Implements empty-step skip: applied-update counter
+    advances only when the accumulated segment had any contribution."""
+    if start_state is None:
+        p = model.init_params(CFG)
+        m = jnp.zeros_like(p)
+        v = jnp.zeros_like(p)
+        applied = 0
+    else:
+        p, m, v, applied = start_state
+    G = None
+    had = False
+    states = {}
+    for (toks, t, i, lr) in sched:
+        if t < start_at:
+            continue
+        mask = np.ones(B, np.float32)
+        toks_in = toks.copy()
+        for slot in range(B):
+            if (t, i, slot) in forget:
+                mask[slot] = 0.0
+                if zero_content:
+                    toks_in[slot] = 0
+        g, loss, cnt = model.train_step(CFG, p, jnp.asarray(toks_in),
+                                        jnp.asarray(mask), jnp.int32(t * 31 + i))
+        if float(cnt) > 0:
+            had = True
+        G = g if G is None else G + g
+        if i == ACCUM - 1:  # accumulation boundary
+            if had:
+                applied += 1
+                p, m, v = model.update_step(CFG, p, G, m, v,
+                                            jnp.int32(applied),
+                                            jnp.float32(lr))
+            G, had = None, False
+            states[t] = (p, m, v, applied)
+    return p, m, v, applied, states
+
+
+def bits_equal(a, b):
+    return np.array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_g1_bitwise_equality_controlled():
+    """Forget samples appear only from step 3; checkpoint at step 2."""
+    sched = make_schedule()
+    forget = {(3, 0, 1), (4, 1, 2), (5, 0, 0)}
+    # oracle: masked from the start
+    po, mo, vo, ao, _ = run(sched, forget)
+    # original full run, checkpoint at end of step 2
+    pf, mf, vf, af, states = run(sched, set())
+    ck = states[2]
+    # replay the tail from the checkpoint, filtering
+    pr, mr, vr, ar, _ = run(sched, forget, start_state=ck, start_at=3)
+    assert bits_equal(po, pr), "params must be bit-identical (G1)"
+    assert bits_equal(mo, mr) and bits_equal(vo, vr), "optimizer state too"
+    assert ao == ar
+
+
+def test_g1_holds_with_zeroed_forget_content():
+    """Content-scrubbed replay (zero the forget slots) is still exact."""
+    sched = make_schedule(1)
+    forget = {(3, 1, 0), (5, 1, 3)}
+    po, mo, vo, _, _ = run(sched, forget)
+    _, _, _, _, states = run(sched, set())
+    pr, mr, vr, _, _ = run(sched, forget, start_state=states[2], start_at=3,
+                           zero_content=True)
+    assert bits_equal(po, pr) and bits_equal(mo, mr) and bits_equal(vo, vr)
+
+
+def test_empty_step_skip_proposition():
+    """A fully-forgotten logical step must not advance optimizer counters."""
+    sched = make_schedule(2)
+    # forget ALL slots of step 3 (both microbatches)
+    forget = {(3, i, s) for i in range(ACCUM) for s in range(B)}
+    po, mo, vo, ao, _ = run(sched, forget)
+    pf, _, _, af, states = run(sched, set())
+    pr, mr, vr, ar, _ = run(sched, forget, start_state=states[2], start_at=3)
+    assert ao == STEPS - 1, "one empty step skipped"
+    assert ar == ao
+    assert bits_equal(po, pr) and bits_equal(mo, mr) and bits_equal(vo, vr)
+
+
+def test_table4_negative_control():
+    """Checkpoint post-dating forget influence -> inexact (paper Table 4)."""
+    sched = make_schedule(3)
+    forget = {(1, 0, 0), (4, 0, 1)}  # influence BEFORE the step-2 checkpoint
+    po, _, _, _, _ = run(sched, forget)
+    _, _, _, _, states = run(sched, set())
+    pr, _, _, _, _ = run(sched, forget, start_state=states[2], start_at=3)
+    diff = float(jnp.max(jnp.abs(po - pr)))
+    assert diff > 0.0, "precondition violated, must NOT be bit-identical"
+
+
+def test_counter_advance_would_break_equality():
+    """Anti-property: advancing counters on empty steps breaks G1 —
+    demonstrates why the empty-step-skip rule is load-bearing."""
+    sched = make_schedule(4)
+    forget = {(3, i, s) for i in range(ACCUM) for s in range(B)}
+    po, _, _, _, _ = run(sched, forget)
+    _, _, _, _, states = run(sched, set())
+
+    # replay that (incorrectly) advances `applied` on the empty step
+    p, m, v, applied = states[2]
+    G, had = None, False
+    for (toks, t, i, lr) in sched:
+        if t < 3:
+            continue
+        mask = np.ones(B, np.float32)
+        for slot in range(B):
+            if (t, i, slot) in forget:
+                mask[slot] = 0.0
+        g, _, cnt = model.train_step(CFG, p, jnp.asarray(toks),
+                                     jnp.asarray(mask), jnp.int32(t * 31 + i))
+        G = g if G is None else G + g
+        if i == ACCUM - 1:
+            applied += 1  # BUG on purpose: advances even when empty
+            if float(jnp.max(jnp.abs(G))) > 0:
+                p, m, v = model.update_step(CFG, p, G, m, v,
+                                            jnp.int32(applied),
+                                            jnp.float32(lr))
+            G = None
+    assert not bits_equal(po, p)

@@ -1,0 +1,83 @@
+//! Regenerates the **Table 6** audit pipeline with measured latencies:
+//! MIA AUC (+bootstrap CI), canary exposure, targeted extraction, fuzzy
+//! recall and retain PPL over a freshly trained toy model.
+
+#[path = "bench_util.rs"]
+mod bench_util;
+use bench_util::*;
+
+use std::collections::HashSet;
+
+use unlearn::audit::{self, AuditContext, ModelView};
+use unlearn::config::RunConfig;
+use unlearn::harness;
+use unlearn::runtime::Runtime;
+use unlearn::trainer::Trainer;
+
+fn main() {
+    let rt = Runtime::load(&harness::artifacts_dir()).expect("artifacts");
+    let corpus = harness::small_corpus(rt.manifest.seq_len);
+    let cfg = RunConfig {
+        run_dir: unlearn::util::tempdir("bench-audits"),
+        steps: 10,
+        accum: 2,
+        checkpoint_every: 5,
+        warmup: 3,
+        ..Default::default()
+    };
+    let out = Trainer::new(&rt, cfg, corpus.clone()).train(|_| false).unwrap();
+
+    let forget: Vec<u64> = corpus.user_samples(0);
+    let fset: HashSet<u64> = forget.iter().copied().collect();
+    let (retain_ids, eval_ids) = harness::audit_splits(&corpus, &fset, 5);
+    let ctx = AuditContext {
+        rt: &rt,
+        corpus: &corpus,
+        forget_ids: &forget,
+        retain_ids: &retain_ids,
+        eval_ids: &eval_ids,
+        baseline_ppl: None,
+        thresholds: Default::default(),
+        seed: 5,
+    };
+    let view = ModelView::Base(&out.state.params);
+
+    header(
+        "Table 6 pipeline — per-audit latency (measured)",
+        &["Audit", "Latency", "Value"],
+    );
+    let st = time_it(0, 2, || audit::mia::mia_auc(&ctx, view).unwrap());
+    let mia = audit::mia::mia_auc(&ctx, view).unwrap();
+    println!(
+        "MIA AUC + bootstrap CI | {} | {:.3} (CI {:.3}-{:.3})",
+        fmt_secs(st.mean),
+        mia.auc,
+        mia.ci95.0,
+        mia.ci95.1
+    );
+    let st = time_it(0, 2, || audit::canary::exposure(&ctx, view).unwrap());
+    let (mu, sigma) = audit::canary::exposure(&ctx, view).unwrap();
+    println!(
+        "Canary exposure (64 cands) | {} | mu {:+.3} sigma {:.3} bits",
+        fmt_secs(st.mean),
+        mu,
+        sigma
+    );
+    let st =
+        time_it(0, 2, || audit::extraction::extraction_rate(&ctx, view).unwrap());
+    let ex = audit::extraction::extraction_rate(&ctx, view).unwrap();
+    println!(
+        "Targeted extraction (greedy) | {} | {:.1}%",
+        fmt_secs(st.mean),
+        ex * 100.0
+    );
+    let st = time_it(0, 2, || audit::fuzzy::fuzzy_recall(&ctx, view).unwrap());
+    let fz = audit::fuzzy::fuzzy_recall(&ctx, view).unwrap();
+    println!("Fuzzy recall AUC | {} | {:.3}", fmt_secs(st.mean), fz);
+    let st = time_it(0, 2, || audit::utility::retain_ppl(&ctx, view).unwrap());
+    let ppl = audit::utility::retain_ppl(&ctx, view).unwrap();
+    println!("Retain PPL | {} | {:.2}", fmt_secs(st.mean), ppl);
+
+    let st = time_it(0, 1, || audit::run_audits(&ctx, view).unwrap());
+    println!("\nfull audit suite: {}", fmt_secs(st.mean));
+}

@@ -1,0 +1,38 @@
+//! **Figure 2** as a benchmark: the determinism/replay CI gate, with
+//! per-phase latencies (train-train equality, checkpoint-replay
+//! equality, WAL scan) — what a deployment pays before enabling
+//! forgetting.
+
+#[path = "bench_util.rs"]
+mod bench_util;
+use bench_util::*;
+
+use unlearn::config::RunConfig;
+use unlearn::harness;
+use unlearn::runtime::Runtime;
+
+fn main() {
+    let rt = Runtime::load(&harness::artifacts_dir()).expect("artifacts");
+    let corpus = harness::small_corpus(rt.manifest.seq_len);
+    let cfg = RunConfig {
+        run_dir: unlearn::util::tempdir("bench-cigate").join("run"),
+        accum: 2,
+        checkpoint_every: 4,
+        warmup: 2,
+        ..Default::default()
+    };
+
+    header("Figure 2 — CI gate (measured)", &["Gate steps", "Total", "Pass"]);
+    for gate_steps in [6u32, 10] {
+        let t0 = std::time::Instant::now();
+        let report =
+            unlearn::cigate::run_gate(&rt, &cfg, &corpus, gate_steps).unwrap();
+        println!(
+            "{gate_steps} | {} | {}",
+            fmt_secs(t0.elapsed().as_secs_f64()),
+            report.pass()
+        );
+        assert!(report.pass(), "CI gate must pass on this pinned stack");
+    }
+    println!("\n(gate = 2x train + 1x replay + WAL scan; Alg. 5.1)");
+}

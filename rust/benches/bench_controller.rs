@@ -1,0 +1,141 @@
+//! **Figure 1** as a benchmark: route the four request archetypes
+//! through the controller and report path taken + end-to-end latency —
+//! the cost ordering (adapter ≪ revert ≪ hot path < replay) is the
+//! figure's operational story.
+
+#[path = "bench_util.rs"]
+mod bench_util;
+use bench_util::*;
+
+use unlearn::config::RunConfig;
+use unlearn::controller::{ForgetRequest, Urgency};
+use unlearn::harness;
+use unlearn::runtime::Runtime;
+
+fn main() {
+    let rt = Runtime::load(&harness::artifacts_dir()).expect("artifacts");
+    let mut corpus = harness::toy_corpus(rt.manifest.seq_len);
+    corpus.tag_cohort(&[150, 151], 9);
+    let cohort_ids: Vec<u64> = [150u32, 151]
+        .iter()
+        .flat_map(|&u| corpus.user_samples(u))
+        .collect();
+    let cohort_set: std::collections::HashSet<u64> =
+        cohort_ids.iter().copied().collect();
+
+    let cfg = RunConfig {
+        run_dir: unlearn::util::tempdir("bench-controller"),
+        steps: 12,
+        accum: 2,
+        checkpoint_every: 4,
+        checkpoint_keep: 16,
+        ring_window: 4,
+        warmup: 4,
+        ..Default::default()
+    };
+    // base training excludes the cohort (it is firewalled into an adapter)
+    let trainer =
+        unlearn::trainer::Trainer::new(&rt, cfg.clone(), corpus.clone());
+    let out = trainer.train_excluding(&cohort_set).unwrap();
+    let trained =
+        harness::system_from_run(&rt, cfg, corpus.clone(), out, true).unwrap();
+    let mut system = trained.system;
+    system
+        .adapters
+        .train_cohort(&rt, &corpus, &system.state.params, 9, &cohort_ids, 6,
+                      5e-3, 1)
+        .unwrap();
+
+    header(
+        "Figure 1 — controller path selection (measured)",
+        &["Request archetype", "Path taken", "Latency", "Audit pass"],
+    );
+    fn run(
+        system: &mut unlearn::controller::UnlearnSystem<'_>,
+        label: &str,
+        req: ForgetRequest,
+    ) {
+        let t0 = std::time::Instant::now();
+        let outcome = system.handle(&req).unwrap();
+        println!(
+            "{label} | {} | {} | {:?}",
+            outcome.action.as_str(),
+            fmt_secs(t0.elapsed().as_secs_f64()),
+            outcome.audit.map(|a| a.pass())
+        );
+    }
+    // 1. cohort-confined -> adapter deletion
+    run(
+        &mut system,
+        "cohort-confined (user 150)",
+        ForgetRequest {
+            id: "fig1-adapter".into(),
+            user: Some(150),
+            sample_ids: vec![],
+            urgency: Urgency::Normal,
+        },
+    );
+    // 2. recent influence -> ring revert: candidates first seen inside
+    // the ring window whose closure also stays inside it
+    let recent_set: std::collections::HashSet<u64> =
+        harness::ids_first_seen_at_or_after(&system.records, &system.idmap, 10)
+            .into_iter()
+            .collect();
+    let mut recent: Vec<u64> = recent_set
+        .iter()
+        .copied()
+        .filter(|&id| {
+            let (cl, _) = system.closure_of(&ForgetRequest {
+                id: "probe".into(),
+                user: None,
+                sample_ids: vec![id],
+                urgency: Urgency::Normal,
+            });
+            cl.iter().all(|c| recent_set.contains(c))
+        })
+        .collect();
+    recent.sort_unstable();
+    recent.truncate(3);
+    run(
+        &mut system,
+        "recent steps only",
+        ForgetRequest {
+            id: "fig1-revert".into(),
+            user: None,
+            sample_ids: recent,
+            urgency: Urgency::Normal,
+        },
+    );
+    // 3. urgent + old influence -> hot path (or escalation)
+    run(
+        &mut system,
+        "urgent, old influence (user 1)",
+        ForgetRequest {
+            id: "fig1-hotpath".into(),
+            user: Some(1),
+            sample_ids: vec![],
+            urgency: Urgency::High,
+        },
+    );
+    // 4. normal urgency, old influence -> exact replay
+    run(
+        &mut system,
+        "normal, old influence (user 2)",
+        ForgetRequest {
+            id: "fig1-replay".into(),
+            user: Some(2),
+            sample_ids: vec![],
+            urgency: Urgency::Normal,
+        },
+    );
+
+    println!(
+        "\nmanifest: {} entries, chain valid: {}",
+        system.manifest.len(),
+        system
+            .manifest
+            .verify_chain()
+            .map(|c| c.iter().all(|(_, s)| *s))
+            .unwrap_or(false)
+    );
+}

@@ -1,0 +1,117 @@
+//! Regenerates **Table 8** (dense-delta ring buffer budget) with
+//! measured compression ratios and revert latencies (G3), including the
+//! XOR-vs-arithmetic ablation (sparse top-k is deliberately absent: the
+//! paper uses it only as a non-exact ablation).
+
+#[path = "bench_util.rs"]
+mod bench_util;
+use bench_util::*;
+
+use unlearn::checkpoint::TrainState;
+use unlearn::deltas::{DeltaRing, PatchMode};
+use unlearn::util::rng::SplitMix64;
+
+/// Simulated AdamW-style update trajectory (small deltas, realistic
+/// exponent structure — what the ring compresses in production).
+fn walk(n: usize, steps: usize, seed: u64) -> Vec<TrainState> {
+    let mut r = SplitMix64::new(seed);
+    let mut s = TrainState::zeros_like(
+        (0..n).map(|_| r.normal() as f32 * 0.02).collect(),
+    );
+    s.m = vec![0.0; n];
+    s.v = vec![1e-8; n];
+    let mut out = vec![s.clone()];
+    for t in 0..steps {
+        for i in 0..n {
+            let g = r.normal() as f32 * 0.1;
+            s.m[i] = 0.9 * s.m[i] + 0.1 * g;
+            s.v[i] = 0.999 * s.v[i] + 0.001 * g * g;
+            s.params[i] -= 1e-3 * s.m[i] / (s.v[i].sqrt() + 1e-8);
+        }
+        s.applied_updates += 1;
+        s.logical_step = t as u32 + 1;
+        out.push(s.clone());
+    }
+    out
+}
+
+fn main() {
+    let window = 16;
+    header(
+        "Table 8 — dense-delta ring budget (window N=16)",
+        &[
+            "Params", "Per-step raw", "Pre-compress total", "Ratio",
+            "Stored",
+        ],
+    );
+    for n in [101_614usize, 120_064, 1_000_000] {
+        // 101,614 f32 ≈ the paper's 406,456 B per-step delta
+        let states = walk(n, window, 42);
+        let mut ring = DeltaRing::new(n, window, PatchMode::Xor, false);
+        for w in states.windows(2) {
+            ring.record(&w[0], &w[1]);
+        }
+        let b = ring.budget();
+        println!(
+            "{n} | {} | {} | {:.2} | {}",
+            fmt_bytes(b.per_step_bytes_raw as u64),
+            fmt_bytes(b.pre_compress_total as u64),
+            b.compress_ratio,
+            fmt_bytes(b.stored_bytes as u64)
+        );
+    }
+    println!("(paper toy: 406,456 B/step, N=16, ratio 0.70, ~4.55 MB stored)");
+
+    header(
+        "Revert latency (G3) — measured",
+        &["Mode", "Params", "Revert u=16 steps", "Exact?"],
+    );
+    for (mode, name) in [
+        (PatchMode::Xor, "XOR (bitwise)"),
+        (PatchMode::Arithmetic, "arithmetic"),
+    ] {
+        let n = 120_064;
+        let states = walk(n, window, 7);
+        let st = time_it(1, 5, || {
+            let mut ring = DeltaRing::new(n, window, mode, true);
+            for w in states.windows(2) {
+                ring.record(&w[0], &w[1]);
+            }
+            let mut cur = states.last().unwrap().clone();
+            ring.revert(&mut cur, window).unwrap();
+            cur
+        });
+        // verify exactness claim
+        let mut ring = DeltaRing::new(n, window, mode, true);
+        for w in states.windows(2) {
+            ring.record(&w[0], &w[1]);
+        }
+        let mut cur = states.last().unwrap().clone();
+        ring.revert(&mut cur, window).unwrap();
+        let exact = cur.bits_equal(&states[0]);
+        println!(
+            "{name} | {n} | {} (incl. record) | {}",
+            fmt_secs(st.mean),
+            if exact { "bitwise" } else { "up to rounding" }
+        );
+    }
+
+    header(
+        "Record throughput — measured",
+        &["Params", "record() per step", "Bytes stored/step"],
+    );
+    let n = 120_064;
+    let states = walk(n, 2, 9);
+    let st = time_it(1, 10, || {
+        let mut ring = DeltaRing::new(n, window, PatchMode::Xor, true);
+        ring.record(&states[0], &states[1]);
+        ring
+    });
+    let mut ring = DeltaRing::new(n, window, PatchMode::Xor, true);
+    ring.record(&states[0], &states[1]);
+    println!(
+        "{n} | {} | {}",
+        fmt_secs(st.mean),
+        fmt_bytes(ring.budget().stored_bytes as u64)
+    );
+}

@@ -1,0 +1,60 @@
+//! Near-duplicate substrate benchmark (the FAISS/SimHash role of
+//! Alg. A.6): index build, banded vs exact query, closure expansion at
+//! the paper's toy corpus scale.
+
+#[path = "bench_util.rs"]
+mod bench_util;
+use bench_util::*;
+
+use unlearn::data::corpus::{Corpus, CorpusConfig};
+use unlearn::neardup::closure::build_index;
+use unlearn::neardup::{expand_closure, simhash_tokens, ClosureParams};
+
+fn main() {
+    let corpus = Corpus::generate(CorpusConfig::default());
+    println!("corpus: {} samples", corpus.len());
+
+    header("SimHash index — measured", &["Operation", "Latency"]);
+    let st = time_it(1, 3, || build_index(&corpus));
+    println!("build index ({} docs) | {}", corpus.len(), fmt_secs(st.mean));
+    let idx = build_index(&corpus);
+
+    let sig = simhash_tokens(&corpus.by_id(0).unwrap().tokens);
+    let st = time_it(5, 50, || idx.query(sig, 3));
+    println!("banded query (radius 3) | {}", fmt_secs(st.mean));
+    let st = time_it(5, 50, || idx.query(sig, 20));
+    println!("verified scan (radius 20) | {}", fmt_secs(st.mean));
+    let st = time_it(5, 50, || idx.query_exact(sig, 3));
+    println!("brute force (radius 3) | {}", fmt_secs(st.mean));
+
+    // banded recall vs brute force at the guaranteed radius
+    let mut agree = 0;
+    let mut total = 0;
+    for id in (0..corpus.len() as u64).step_by(97) {
+        let s = simhash_tokens(&corpus.by_id(id).unwrap().tokens);
+        let a = idx.query(s, 3);
+        let b = idx.query_exact(s, 3);
+        agree += (a == b) as usize;
+        total += 1;
+    }
+    println!("banded==exact at radius 3: {agree}/{total}");
+
+    header(
+        "Closure expansion (Alg. A.6) — measured",
+        &["Request", "Closure size", "Expanded", "Latency"],
+    );
+    for user in [0u32, 5, 50] {
+        let req = corpus.user_samples(user);
+        let st = time_it(1, 5, || {
+            expand_closure(&corpus, &idx, &req, ClosureParams::default())
+        });
+        let cl = expand_closure(&corpus, &idx, &req, ClosureParams::default());
+        println!(
+            "user {user} ({} docs) | {} | {} | {}",
+            req.len(),
+            cl.ids.len(),
+            cl.expanded.len(),
+            fmt_secs(st.mean)
+        );
+    }
+}

@@ -1,0 +1,86 @@
+//! End-to-end replay benchmark (Tables 3-5 latency side): measures
+//! t_step, full-run training throughput, and ReplayFilter latency as a
+//! function of checkpoint distance — the paper's "worst-case replay
+//! latency ≤ K·t_step" claim, measured.
+
+#[path = "bench_util.rs"]
+mod bench_util;
+use bench_util::*;
+
+use std::collections::HashSet;
+
+use unlearn::checkpoint::CheckpointStore;
+use unlearn::config::RunConfig;
+use unlearn::harness;
+use unlearn::replay::{load_run, replay_filter, ReplayOptions};
+use unlearn::runtime::Runtime;
+use unlearn::trainer::Trainer;
+
+fn main() {
+    let rt = Runtime::load(&harness::artifacts_dir()).expect("artifacts");
+    let corpus = harness::small_corpus(rt.manifest.seq_len);
+    let steps = 12u32;
+    let cfg = RunConfig {
+        run_dir: unlearn::util::tempdir("bench-replay"),
+        steps,
+        accum: 2,
+        checkpoint_every: 4,
+        checkpoint_keep: 16,
+        warmup: 4,
+        ..Default::default()
+    };
+
+    header("Training throughput (measured)", &["Steps", "Total", "t_step"]);
+    let t0 = std::time::Instant::now();
+    Trainer::new(&rt, cfg.clone(), corpus.clone())
+        .train(|_| false)
+        .unwrap();
+    let total = t0.elapsed().as_secs_f64();
+    let t_step = total / steps as f64;
+    println!("{steps} | {} | {}", fmt_secs(total), fmt_secs(t_step));
+
+    let (records, idmap, pins) = load_run(&cfg.run_dir, None).unwrap();
+    let store = CheckpointStore::open(&cfg.run_dir.join("ckpt"), 64).unwrap();
+    let closure: HashSet<u64> =
+        harness::ids_first_seen_at_or_after(&records, &idmap, 9)
+            .into_iter()
+            .take(4)
+            .collect();
+
+    header(
+        "ReplayFilter latency vs checkpoint distance (≤ K·t_step bound)",
+        &["From ckpt", "Steps replayed", "Latency", "Bound K·t_step"],
+    );
+    for k in [0u32, 4, 8] {
+        let ck = store.load_full(k).unwrap();
+        let st = time_it(0, 2, || {
+            replay_filter(
+                &rt,
+                &corpus,
+                &ck,
+                &records,
+                &idmap,
+                &closure,
+                Some(&pins),
+                &ReplayOptions::default(),
+            )
+            .unwrap()
+        });
+        let replayed = steps - k;
+        println!(
+            "C_{k} | {replayed} | {} | {}",
+            fmt_secs(st.mean),
+            fmt_secs(replayed as f64 * t_step)
+        );
+    }
+
+    header(
+        "Per-graph execution time (runtime metrics)",
+        &["Graph", "Calls", "Mean"],
+    );
+    for g in ["train_step", "adamw_update"] {
+        if let Some((n, _tot, mean)) = rt.metrics.timer(&format!("exec.{g}")) {
+            println!("{g} | {n} | {}", fmt_secs(mean));
+        }
+    }
+}

@@ -1,0 +1,80 @@
+//! Minimal bench harness (criterion is not in the offline vendor set).
+//!
+//! Provides warmup + repeated timing with mean/p50/p95 reporting and a
+//! table-row printer so each bench binary regenerates its paper table
+//! with measured numbers.  Used via `cargo bench` with `harness = false`
+//! targets.
+
+use std::time::Instant;
+
+/// Time `f` `iters` times after `warmup` runs.
+pub fn time_it<T>(warmup: usize, iters: usize, mut f: impl FnMut() -> T) -> Stats {
+    for _ in 0..warmup {
+        std::hint::black_box(f());
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        std::hint::black_box(f());
+        samples.push(t0.elapsed().as_secs_f64());
+    }
+    Stats::from(samples)
+}
+
+/// Summary statistics over timing samples (seconds).
+#[derive(Debug, Clone)]
+pub struct Stats {
+    pub mean: f64,
+    pub p50: f64,
+    pub p95: f64,
+    pub min: f64,
+    pub n: usize,
+}
+
+impl Stats {
+    pub fn from(mut samples: Vec<f64>) -> Stats {
+        assert!(!samples.is_empty());
+        samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let n = samples.len();
+        Stats {
+            mean: samples.iter().sum::<f64>() / n as f64,
+            p50: samples[n / 2],
+            p95: samples[((n as f64 * 0.95) as usize).min(n - 1)],
+            min: samples[0],
+            n,
+        }
+    }
+}
+
+/// Pretty time formatting.
+pub fn fmt_secs(s: f64) -> String {
+    if s >= 1.0 {
+        format!("{s:.2} s")
+    } else if s >= 1e-3 {
+        format!("{:.2} ms", s * 1e3)
+    } else if s >= 1e-6 {
+        format!("{:.2} µs", s * 1e6)
+    } else {
+        format!("{:.0} ns", s * 1e9)
+    }
+}
+
+/// Pretty byte formatting.
+pub fn fmt_bytes(b: u64) -> String {
+    if b >= 1 << 30 {
+        format!("{:.2} GiB", b as f64 / (1u64 << 30) as f64)
+    } else if b >= 1 << 20 {
+        format!("{:.2} MiB", b as f64 / (1u64 << 20) as f64)
+    } else if b >= 1 << 10 {
+        format!("{:.2} KiB", b as f64 / (1u64 << 10) as f64)
+    } else {
+        format!("{b} B")
+    }
+}
+
+/// Print a table header + separator.
+pub fn header(title: &str, cols: &[&str]) {
+    println!("\n=== {title} ===");
+    println!("{}", cols.join(" | "));
+    println!("{}", vec!["---"; cols.len()].join(" | "));
+}

@@ -1,0 +1,82 @@
+//! Regenerates **Table 7** (WAL overhead) with measured numbers, plus
+//! append/scan throughput (the "negligible overhead" claim of §6.4).
+
+#[path = "bench_util.rs"]
+mod bench_util;
+use bench_util::*;
+
+use unlearn::util::tempdir;
+use unlearn::wal::{integrity, WalRecord, WalWriter};
+
+fn rec(i: u32) -> WalRecord {
+    WalRecord {
+        hash64: 0xABCD_0000 + i as u64,
+        seed64: i as u64 * 17,
+        lr_bits: (1e-3f32).to_bits(),
+        opt_step: i / 2,
+        accum_end: i % 2 == 1,
+        mb_len: 8,
+    }
+}
+
+fn main() {
+    // ---- Table 7: footprint at the paper's record counts --------------
+    header(
+        "Table 7 — WAL overhead",
+        &["Records", "Bytes/record", "Total bytes"],
+    );
+    for records in [400u64, 800_000] {
+        println!(
+            "{records} | 32 | {} ({})",
+            records * 32,
+            fmt_bytes(records * 32)
+        );
+    }
+    println!("(paper: 400 records -> 12,800 B; 8e5 -> ~25.6 MB)");
+
+    // ---- measured append/scan performance -----------------------------
+    header(
+        "WAL throughput (measured)",
+        &["Operation", "Records", "Time", "Per record"],
+    );
+    let n = 10_000u32;
+    let dir = tempdir("bench-wal");
+    let st = time_it(0, 1, || {
+        let mut w = WalWriter::create(&dir.join("a"), 4096, None).unwrap();
+        for i in 0..n {
+            w.append(&rec(i)).unwrap();
+        }
+        w.finish().unwrap();
+    });
+    println!(
+        "append (toy hash) | {n} | {} | {}",
+        fmt_secs(st.mean),
+        fmt_secs(st.mean / n as f64)
+    );
+    let st = time_it(0, 1, || {
+        let mut w = WalWriter::create(
+            &dir.join("b"),
+            4096,
+            Some(b"production-key".to_vec()),
+        )
+        .unwrap();
+        for i in 0..n {
+            w.append(&rec(i)).unwrap();
+        }
+        w.finish().unwrap();
+    });
+    println!(
+        "append (HMAC mode) | {n} | {} | {}",
+        fmt_secs(st.mean),
+        fmt_secs(st.mean / n as f64)
+    );
+    let st = time_it(1, 3, || integrity::scan(&dir.join("a"), None).unwrap());
+    println!(
+        "integrity scan | {n} | {} | {}",
+        fmt_secs(st.mean),
+        fmt_secs(st.mean / n as f64)
+    );
+    let rep = integrity::scan(&dir.join("a"), None).unwrap();
+    assert!(rep.ok());
+    println!("\nscan result ok={} records={}", rep.ok(), rep.records);
+}

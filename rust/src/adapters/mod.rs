@@ -1,0 +1,352 @@
+//! Cohort-scoped LoRA adapter registry (paper G2, Alg. A.5, §4.2(ii)).
+//!
+//! Each cohort trains its own low-rank patch `P_j` against a **strictly
+//! frozen** base (the `lora_step` graph computes gradients w.r.t. the
+//! adapter only).  Deleting `P_j` removes the cohort's parametric
+//! influence exactly; adapters are never merged into the base (merging
+//! is checked and refused — Alg. A.5 line 1).  Compaction folds several
+//! adapters into one low-rank patch *without touching the base*.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use crate::data::corpus::Corpus;
+use crate::runtime::Runtime;
+use crate::trainer::build_microbatch_tensors;
+use crate::util::bytes::{bytes_to_f32s, f32s_to_bytes};
+use crate::util::json::Json;
+
+/// One cohort adapter.
+#[derive(Debug, Clone)]
+pub struct Adapter {
+    pub cohort: u32,
+    /// Flat LoRA parameter vector (layout in the AOT manifest).
+    pub params: Vec<f32>,
+    /// Sample IDs this cohort was trained on (its parametric scope).
+    pub trained_on: Vec<u64>,
+    /// Training steps applied.
+    pub steps: u32,
+    /// G2 precondition flag: never merged into the base.
+    pub merged: bool,
+}
+
+/// Registry of live adapters (the "patch registry & router" of §3.4).
+#[derive(Debug, Default)]
+pub struct AdapterRegistry {
+    adapters: BTreeMap<u32, Adapter>,
+}
+
+/// Result of training a cohort adapter.
+#[derive(Debug, Clone)]
+pub struct CohortTrainStats {
+    pub cohort: u32,
+    pub steps: u32,
+    pub final_loss_per_token: f32,
+}
+
+impl AdapterRegistry {
+    pub fn new() -> AdapterRegistry {
+        AdapterRegistry::default()
+    }
+
+    pub fn len(&self) -> usize {
+        self.adapters.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.adapters.is_empty()
+    }
+
+    pub fn get(&self, cohort: u32) -> Option<&Adapter> {
+        self.adapters.get(&cohort)
+    }
+
+    pub fn cohorts(&self) -> Vec<u32> {
+        self.adapters.keys().copied().collect()
+    }
+
+    /// Are ALL of `ids` confined to cohort adapters?  (Alg. A.7 line 2's
+    /// routing predicate.)  Returns the owning cohorts if so.
+    pub fn covering_cohorts(&self, ids: &[u64]) -> Option<Vec<u32>> {
+        let mut cohorts = Vec::new();
+        'outer: for &id in ids {
+            for (c, a) in &self.adapters {
+                if a.trained_on.contains(&id) {
+                    if !cohorts.contains(c) {
+                        cohorts.push(*c);
+                    }
+                    continue 'outer;
+                }
+            }
+            return None; // id not confined to any adapter
+        }
+        Some(cohorts)
+    }
+
+    /// Train a cohort adapter on its samples, base strictly frozen.
+    pub fn train_cohort(
+        &mut self,
+        rt: &Runtime,
+        corpus: &Corpus,
+        base: &[f32],
+        cohort: u32,
+        ids: &[u64],
+        steps: u32,
+        lr: f32,
+        seed: u64,
+    ) -> anyhow::Result<CohortTrainStats> {
+        anyhow::ensure!(!ids.is_empty(), "cohort {cohort} has no samples");
+        let man = &rt.manifest;
+        let mut lora = man.init_lora()?;
+        let mut m = vec![0.0f32; lora.len()];
+        let mut v = vec![0.0f32; lora.len()];
+        let mut rng = crate::util::rng::SplitMix64::new(seed ^ cohort as u64);
+        let mut last_loss = 0.0f32;
+        for t in 0..steps {
+            let take = man.batch.min(ids.len());
+            let chunk: Vec<u64> = (0..take)
+                .map(|_| ids[rng.below(ids.len() as u64) as usize])
+                .collect();
+            let (tokens, mask, _) = build_microbatch_tensors(
+                corpus, &chunk, man.batch, man.seq_len, |_| false, false,
+            )?;
+            let out = rt.lora_step(base, &lora, &tokens, &mask,
+                                   (seed as i32).wrapping_add(t as i32))?;
+            let (l2, m2, v2) =
+                rt.lora_adamw(&lora, &out.grad, &m, &v, t as i32 + 1, lr)?;
+            lora = l2;
+            m = m2;
+            v = v2;
+            last_loss = out.loss_sum / out.tok_count.max(1.0);
+        }
+        self.adapters.insert(
+            cohort,
+            Adapter {
+                cohort,
+                params: lora,
+                trained_on: ids.to_vec(),
+                steps,
+                merged: false,
+            },
+        );
+        Ok(CohortTrainStats {
+            cohort,
+            steps,
+            final_loss_per_token: last_loss,
+        })
+    }
+
+    /// DELETECOHORTADAPTER (Alg. A.5): exact scoped deletion.  Refuses
+    /// (routing the controller to replay) if the adapter was merged.
+    pub fn delete_cohort(&mut self, cohort: u32) -> anyhow::Result<Adapter> {
+        let a = self
+            .adapters
+            .get(&cohort)
+            .ok_or_else(|| anyhow::anyhow!("unknown cohort {cohort}"))?;
+        anyhow::ensure!(
+            !a.merged,
+            "cohort {cohort} was merged into the base — exact adapter \
+             deletion impossible, escalate to replay (Alg. A.5 line 1)"
+        );
+        Ok(self.adapters.remove(&cohort).expect("checked"))
+    }
+
+    /// Mark an adapter merged (test hook modelling the forbidden state).
+    pub fn mark_merged(&mut self, cohort: u32) {
+        if let Some(a) = self.adapters.get_mut(&cohort) {
+            a.merged = true;
+        }
+    }
+
+    /// Compact several adapters into one patch by summing their flat
+    /// vectors (the low-rank factors add in the patch space because all
+    /// adapters share the same (A,B) geometry; no base update happens).
+    /// The compacted adapter's scope is the union of the sources'.
+    pub fn compact(
+        &mut self,
+        cohorts: &[u32],
+        new_cohort: u32,
+    ) -> anyhow::Result<()> {
+        anyhow::ensure!(!cohorts.is_empty(), "nothing to compact");
+        let mut sum: Option<Vec<f32>> = None;
+        let mut scope = Vec::new();
+        let mut steps = 0;
+        for c in cohorts {
+            let a = self
+                .adapters
+                .get(c)
+                .ok_or_else(|| anyhow::anyhow!("unknown cohort {c}"))?;
+            anyhow::ensure!(!a.merged, "cannot compact merged cohort {c}");
+            match &mut sum {
+                None => sum = Some(a.params.clone()),
+                Some(s) => {
+                    for (x, y) in s.iter_mut().zip(&a.params) {
+                        *x += y;
+                    }
+                }
+            }
+            scope.extend_from_slice(&a.trained_on);
+            steps += a.steps;
+        }
+        for c in cohorts {
+            self.adapters.remove(c);
+        }
+        scope.sort_unstable();
+        scope.dedup();
+        self.adapters.insert(
+            new_cohort,
+            Adapter {
+                cohort: new_cohort,
+                params: sum.expect("non-empty"),
+                trained_on: scope,
+                steps,
+                merged: false,
+            },
+        );
+        Ok(())
+    }
+
+    /// Persist the registry (one .lora file per cohort + index.json).
+    pub fn save(&self, dir: &Path) -> anyhow::Result<()> {
+        std::fs::create_dir_all(dir)?;
+        let mut index = Json::obj();
+        for (c, a) in &self.adapters {
+            let file = format!("cohort-{c:04}.lora");
+            std::fs::write(dir.join(&file), f32s_to_bytes(&a.params))?;
+            let mut meta = Json::obj();
+            meta.set("file", file.as_str())
+                .set("steps", a.steps)
+                .set("merged", a.merged)
+                .set(
+                    "trained_on",
+                    Json::Arr(
+                        a.trained_on.iter().map(|&i| i.into()).collect(),
+                    ),
+                );
+            index.set(&c.to_string(), meta);
+        }
+        std::fs::write(dir.join("index.json"), index.pretty())?;
+        Ok(())
+    }
+
+    pub fn load(dir: &Path) -> anyhow::Result<AdapterRegistry> {
+        let mut reg = AdapterRegistry::new();
+        let idx_path = dir.join("index.json");
+        if !idx_path.exists() {
+            return Ok(reg);
+        }
+        let idx = crate::util::json::parse(&std::fs::read_to_string(idx_path)?)
+            .map_err(|e| anyhow::anyhow!("adapter index: {e}"))?;
+        if let Some(obj) = idx.as_obj() {
+            for (c, meta) in obj {
+                let cohort: u32 = c.parse()?;
+                let file = meta
+                    .get("file")
+                    .and_then(|v| v.as_str())
+                    .ok_or_else(|| anyhow::anyhow!("adapter meta"))?;
+                let params = bytes_to_f32s(&std::fs::read(dir.join(file))?)?;
+                reg.adapters.insert(
+                    cohort,
+                    Adapter {
+                        cohort,
+                        params,
+                        trained_on: meta
+                            .get("trained_on")
+                            .and_then(|v| v.as_arr())
+                            .map(|a| {
+                                a.iter()
+                                    .filter_map(|x| x.as_u64())
+                                    .collect()
+                            })
+                            .unwrap_or_default(),
+                        steps: meta
+                            .get("steps")
+                            .and_then(|v| v.as_u64())
+                            .unwrap_or(0) as u32,
+                        merged: meta
+                            .get("merged")
+                            .and_then(|v| v.as_bool())
+                            .unwrap_or(false),
+                    },
+                );
+            }
+        }
+        Ok(reg)
+    }
+
+    /// Path of a cohort file inside a registry dir (content addressing
+    /// for the forget manifest).
+    pub fn cohort_path(dir: &Path, cohort: u32) -> PathBuf {
+        dir.join(format!("cohort-{cohort:04}.lora"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn adapter(c: u32, ids: &[u64]) -> Adapter {
+        Adapter {
+            cohort: c,
+            params: vec![c as f32; 8],
+            trained_on: ids.to_vec(),
+            steps: 1,
+            merged: false,
+        }
+    }
+
+    fn reg_with(adapters: Vec<Adapter>) -> AdapterRegistry {
+        let mut r = AdapterRegistry::new();
+        for a in adapters {
+            r.adapters.insert(a.cohort, a);
+        }
+        r
+    }
+
+    #[test]
+    fn covering_cohorts_routing_predicate() {
+        let r = reg_with(vec![adapter(1, &[10, 11]), adapter(2, &[20])]);
+        assert_eq!(r.covering_cohorts(&[10, 20]), Some(vec![1, 2]));
+        assert_eq!(r.covering_cohorts(&[10]), Some(vec![1]));
+        assert_eq!(r.covering_cohorts(&[10, 99]), None);
+        assert_eq!(r.covering_cohorts(&[]), Some(vec![]));
+    }
+
+    #[test]
+    fn delete_refuses_merged() {
+        let mut r = reg_with(vec![adapter(1, &[1])]);
+        r.mark_merged(1);
+        assert!(r.delete_cohort(1).is_err());
+        assert_eq!(r.len(), 1, "refusal must not delete");
+    }
+
+    #[test]
+    fn delete_removes_exactly_one() {
+        let mut r = reg_with(vec![adapter(1, &[1]), adapter(2, &[2])]);
+        let a = r.delete_cohort(1).unwrap();
+        assert_eq!(a.cohort, 1);
+        assert_eq!(r.cohorts(), vec![2]);
+        assert!(r.delete_cohort(1).is_err());
+    }
+
+    #[test]
+    fn compact_sums_patches_and_unions_scope() {
+        let mut r = reg_with(vec![adapter(1, &[1, 2]), adapter(2, &[2, 3])]);
+        r.compact(&[1, 2], 7).unwrap();
+        assert_eq!(r.cohorts(), vec![7]);
+        let a = r.get(7).unwrap();
+        assert_eq!(a.params, vec![3.0; 8]); // 1.0 + 2.0
+        assert_eq!(a.trained_on, vec![1, 2, 3]);
+    }
+
+    #[test]
+    fn save_load_roundtrip() {
+        let dir = crate::util::tempdir("adapters");
+        let r = reg_with(vec![adapter(3, &[5, 6]), adapter(9, &[7])]);
+        r.save(&dir).unwrap();
+        let back = AdapterRegistry::load(&dir).unwrap();
+        assert_eq!(back.cohorts(), vec![3, 9]);
+        assert_eq!(back.get(3).unwrap().params, vec![3.0; 8]);
+        assert_eq!(back.get(3).unwrap().trained_on, vec![5, 6]);
+    }
+}

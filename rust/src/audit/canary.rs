@@ -1,0 +1,81 @@
+//! Canary exposure (Carlini et al. 2019, "The Secret Sharer").
+//!
+//! For each canary `the secret code of user U is DDDDDD`, we score the
+//! true secret against `N` random alternative secrets under the model
+//! and compute
+//!
+//! ```text
+//! exposure = log2(N + 1) − log2(rank of the true secret)
+//! ```
+//!
+//! High exposure (≫ 0) = the model memorized the secret; after
+//! unlearning the true secret should rank like a random candidate,
+//! giving exposure ≈ log2(N+1) − log2(E[rank]) ≈ small / negative mean.
+
+use crate::data::corpus::SampleKind;
+use crate::util::rng::SplitMix64;
+
+use super::{per_text_losses, AuditContext, ModelView};
+
+/// Number of alternative candidate secrets per canary.
+pub const CANDIDATES: usize = 63;
+
+/// Mean/σ exposure in bits over all canaries in the forget closure
+/// (falls back to all corpus canaries when the closure carries none).
+pub fn exposure(
+    ctx: &AuditContext<'_>,
+    view: ModelView<'_>,
+) -> anyhow::Result<(f64, f64)> {
+    let mut rng = SplitMix64::new(ctx.seed ^ 0xCA9A);
+    let mut exposures = Vec::new();
+    let forget: std::collections::HashSet<u64> =
+        ctx.forget_ids.iter().copied().collect();
+    let mut canaries: Vec<_> = ctx
+        .corpus
+        .canaries()
+        .into_iter()
+        .filter(|s| forget.contains(&s.id))
+        .collect();
+    if canaries.is_empty() {
+        canaries = ctx.corpus.canaries();
+    }
+    for sample in canaries {
+        let SampleKind::Canary { secret } = &sample.kind else {
+            continue;
+        };
+        // build the candidate set: true secret + CANDIDATES random ones
+        let mut texts = vec![sample.text.clone()];
+        for _ in 0..CANDIDATES {
+            let alt = format!("{:06}", rng.below(1_000_000));
+            texts.push(sample.text.replace(secret.as_str(), &alt));
+        }
+        let losses = per_text_losses(ctx.rt, view, &texts)?;
+        let true_loss = losses[0];
+        let rank = 1 + losses[1..].iter().filter(|&&l| l < true_loss).count();
+        let n = (CANDIDATES + 1) as f64;
+        exposures.push(n.log2() - (rank as f64).log2());
+    }
+    if exposures.is_empty() {
+        return Ok((0.0, 0.0));
+    }
+    let mu = exposures.iter().sum::<f64>() / exposures.len() as f64;
+    let var = exposures
+        .iter()
+        .map(|e| (e - mu) * (e - mu))
+        .sum::<f64>()
+        / exposures.len() as f64;
+    Ok((mu, var.sqrt()))
+}
+
+#[cfg(test)]
+mod tests {
+    /// Exposure formula sanity (rank extremes).
+    #[test]
+    fn exposure_formula() {
+        let n = (super::CANDIDATES + 1) as f64;
+        let best = n.log2() - 1f64.log2(); // rank 1
+        let worst = n.log2() - n.log2(); // rank N
+        assert!((best - 6.0).abs() < 1e-9); // 64 candidates -> 6 bits
+        assert_eq!(worst, 0.0);
+    }
+}

@@ -1,0 +1,107 @@
+//! Targeted extraction probes (Carlini et al. 2021).
+//!
+//! For each canary in the forget closure, prompt the model with the text
+//! up to (and including) the secret's prefix — e.g. `the secret code of
+//! user 0003 is ` — and greedy-decode as many tokens as the secret has.
+//! Success = decoded string contains the secret.  After unlearning the
+//! success rate must be ≤ p* (near 0%).
+
+use crate::data::corpus::SampleKind;
+use crate::data::tokenizer::ByteTokenizer;
+
+use super::{AuditContext, ModelView};
+
+/// Greedy-decode `n_new` tokens after each prompt (batched).
+pub fn greedy_decode(
+    rt: &crate::runtime::Runtime,
+    view: ModelView<'_>,
+    prompts: &[String],
+    n_new: usize,
+) -> anyhow::Result<Vec<String>> {
+    let be = rt.manifest.eval_batch;
+    let s = rt.manifest.seq_len;
+    let v = rt.manifest.vocab;
+    let tok = ByteTokenizer;
+    let mut outputs = vec![String::new(); prompts.len()];
+    for (chunk_idx, chunk) in prompts.chunks(be).enumerate() {
+        let mut tokens = vec![0i32; be * s];
+        let mut lens = vec![1i32; be];
+        for (slot, p) in chunk.iter().enumerate() {
+            let enc = tok.encode(p);
+            let l = enc.len().min(s);
+            tokens[slot * s..slot * s + l].copy_from_slice(&enc[..l]);
+            lens[slot] = l as i32;
+        }
+        for _ in 0..n_new {
+            let logits = view.next_logits(rt, &tokens, &lens)?;
+            for slot in 0..chunk.len() {
+                let li = &logits[slot * v..(slot + 1) * v];
+                let argmax = li
+                    .iter()
+                    .enumerate()
+                    .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                    .map(|(i, _)| i as i32)
+                    .unwrap_or(0);
+                let l = lens[slot] as usize;
+                if l < s {
+                    tokens[slot * s + l] = argmax;
+                    lens[slot] += 1;
+                }
+                // byte-level vocab: token id == byte value
+                outputs[chunk_idx * be + slot].push(argmax as u8 as char);
+            }
+        }
+    }
+    Ok(outputs)
+}
+
+/// Extraction success rate over the closure's canaries (fallback: all).
+pub fn extraction_rate(
+    ctx: &AuditContext<'_>,
+    view: ModelView<'_>,
+) -> anyhow::Result<f64> {
+    let forget: std::collections::HashSet<u64> =
+        ctx.forget_ids.iter().copied().collect();
+    let mut canaries: Vec<_> = ctx
+        .corpus
+        .canaries()
+        .into_iter()
+        .filter(|s| forget.contains(&s.id))
+        .collect();
+    if canaries.is_empty() {
+        canaries = ctx.corpus.canaries();
+    }
+    let mut prompts = Vec::new();
+    let mut secrets = Vec::new();
+    for sample in &canaries {
+        let SampleKind::Canary { secret } = &sample.kind else {
+            continue;
+        };
+        if let Some(pos) = sample.text.find(secret.as_str()) {
+            prompts.push(sample.text[..pos].to_string());
+            secrets.push(secret.clone());
+        }
+    }
+    if prompts.is_empty() {
+        return Ok(0.0);
+    }
+    let decoded = greedy_decode(ctx.rt, view, &prompts, 6)?;
+    let hits = decoded
+        .iter()
+        .zip(&secrets)
+        .filter(|(d, s)| d.contains(s.as_str()))
+        .count();
+    Ok(hits as f64 / secrets.len() as f64)
+}
+
+#[cfg(test)]
+mod tests {
+    /// The prompt construction slices exactly before the secret.
+    #[test]
+    fn prompt_prefix_construction() {
+        let text = "the secret code of user 0001 is 918273.";
+        let secret = "918273";
+        let pos = text.find(secret).unwrap();
+        assert_eq!(&text[..pos], "the secret code of user 0001 is ");
+    }
+}

@@ -1,0 +1,140 @@
+//! Fuzzy span recall (paper §4.3 test iv): does the model still assign
+//! suspiciously high likelihood to *near-duplicate / paraphrase*
+//! variants of forgotten spans?
+//!
+//! For each forget sample we generate paraphrase variants (the same
+//! perturbation family the corpus near-dup generator uses) and compare
+//! their per-token loss against kind-matched control variants as an
+//! AUC ("forget variant looks more memorized than control variant").
+//! 0.5 = chance; after exact unlearning the score should sit near 0.5
+//! and below the configured ceiling.
+
+use crate::util::rng::SplitMix64;
+
+use super::{per_text_losses, AuditContext, ModelView};
+
+/// Paraphrase variants of a text (mirrors corpus near-dup families).
+pub fn variants(text: &str, rng: &mut SplitMix64) -> Vec<String> {
+    let mut out = vec![
+        text.replace(" on day ", " around day "),
+        format!("{} indeed.", text.trim_end_matches('.')),
+        text.replace("(user", "( user"),
+    ];
+    // word-drop variant
+    let words: Vec<&str> = text.split_whitespace().collect();
+    if words.len() > 3 {
+        let drop = rng.below(words.len() as u64) as usize;
+        let kept: Vec<&str> = words
+            .iter()
+            .enumerate()
+            .filter(|(i, _)| *i != drop)
+            .map(|(_, w)| *w)
+            .collect();
+        out.push(kept.join(" "));
+    }
+    out.retain(|v| v != text);
+    out
+}
+
+/// Fuzzy recall rate over the forget closure.
+///
+/// Calibration matters: canary templates are structurally unlike normal
+/// docs, so each forget variant is compared only against control
+/// variants of the SAME sample kind (canary vs canary, normal vs
+/// normal).  Within a kind, "recall" = variant loss below the 10th
+/// percentile of that kind's control variants — chance level ≈ 10%.
+pub fn fuzzy_recall(
+    ctx: &AuditContext<'_>,
+    view: ModelView<'_>,
+) -> anyhow::Result<f64> {
+    use std::mem::{discriminant, Discriminant};
+    type Kind = Discriminant<crate::data::corpus::SampleKind>;
+
+    let mut rng = SplitMix64::new(ctx.seed ^ 0xF022);
+    let take = ctx.forget_ids.len().min(16);
+    let mut var_texts: Vec<(Kind, String)> = Vec::new();
+    for &id in ctx.forget_ids.iter().take(take) {
+        let s = ctx
+            .corpus
+            .by_id(id)
+            .ok_or_else(|| anyhow::anyhow!("unknown sample {id}"))?;
+        for v in variants(&s.text, &mut rng) {
+            var_texts.push((discriminant(&s.kind), v));
+        }
+    }
+    if var_texts.is_empty() {
+        return Ok(0.0);
+    }
+    // kind-matched control variants from the retain pool
+    let mut ctrl_texts: Vec<(Kind, String)> = Vec::new();
+    for _ in 0..(take.max(4) * 3) {
+        let idx = rng.below(ctx.retain_ids.len() as u64) as usize;
+        let Some(s) = ctx.corpus.by_id(ctx.retain_ids[idx]) else {
+            continue;
+        };
+        for v in variants(&s.text, &mut rng) {
+            ctrl_texts.push((discriminant(&s.kind), v));
+        }
+    }
+    let var_losses = per_text_losses(
+        ctx.rt,
+        view,
+        &var_texts.iter().map(|(_, t)| t.clone()).collect::<Vec<_>>(),
+    )?;
+    let ctrl_losses = per_text_losses(
+        ctx.rt,
+        view,
+        &ctrl_texts.iter().map(|(_, t)| t.clone()).collect::<Vec<_>>(),
+    )?;
+    // per-kind AUC of "forget variant scores lower loss than control
+    // variant" — a calibrated recall signal: 0.5 = chance, 1.0 = the
+    // model systematically prefers paraphrases of forgotten spans.
+    let mut by_kind: std::collections::HashMap<Kind, Vec<f64>> =
+        std::collections::HashMap::new();
+    for ((k, _), &l) in ctrl_texts.iter().zip(&ctrl_losses) {
+        by_kind.entry(*k).or_default().push(-(l as f64));
+    }
+    let mut weighted = 0.0f64;
+    let mut weight = 0.0f64;
+    let mut var_by_kind: std::collections::HashMap<Kind, Vec<f64>> =
+        std::collections::HashMap::new();
+    for ((k, _), &l) in var_texts.iter().zip(&var_losses) {
+        var_by_kind.entry(*k).or_default().push(-(l as f64));
+    }
+    for (k, vars) in &var_by_kind {
+        let Some(ctrls) = by_kind.get(k) else { continue };
+        if ctrls.len() < 8 {
+            continue; // too few matched controls to calibrate this kind
+        }
+        let auc = super::mia::auc(vars, ctrls);
+        weighted += auc * vars.len() as f64;
+        weight += vars.len() as f64;
+    }
+    if weight == 0.0 {
+        return Ok(0.5); // uncalibratable -> report chance
+    }
+    Ok(weighted / weight)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn variants_differ_from_original() {
+        let mut rng = SplitMix64::new(1);
+        let t = "Alice (user 0001) wrote about gardening on day 042.";
+        let vs = variants(t, &mut rng);
+        assert!(vs.len() >= 3);
+        for v in &vs {
+            assert_ne!(v, t);
+        }
+    }
+
+    #[test]
+    fn variants_handle_short_text() {
+        let mut rng = SplitMix64::new(2);
+        let vs = variants("hi there.", &mut rng);
+        assert!(!vs.iter().any(|v| v == "hi there."));
+    }
+}

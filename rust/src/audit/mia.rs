@@ -1,0 +1,122 @@
+//! Membership inference (Shokri et al.): loss-thresholding attack.
+//!
+//! Score = negative per-example loss (members of training tend to have
+//! lower loss).  AUC over forget-set vs matched retain *non-member*
+//! controls... in the unlearning setting the controls are the forget
+//! examples' peers: after successful unlearning the forget set should
+//! look like NON-members, so AUC(forget vs held-out) ≈ 0.5.  We report
+//! AUC of "forget looks more member-like than held-out" — near 0.5 is
+//! the acceptance target, >0.55 indicates residual leakage.
+//!
+//! The 95% CI is a seeded bootstrap over score pairs (the CI the paper
+//! cites in §6.3).
+
+use crate::util::rng::SplitMix64;
+
+use super::{per_example_losses, AuditContext, ModelView};
+
+/// MIA result.
+#[derive(Debug, Clone)]
+pub struct MiaResult {
+    pub auc: f64,
+    pub ci95: (f64, f64),
+    pub n_forget: usize,
+    pub n_control: usize,
+}
+
+/// Mann-Whitney AUC: P(score_member > score_control) + 0.5 P(=).
+pub fn auc(member_scores: &[f64], control_scores: &[f64]) -> f64 {
+    if member_scores.is_empty() || control_scores.is_empty() {
+        return 0.5;
+    }
+    let mut wins = 0.0f64;
+    for &m in member_scores {
+        for &c in control_scores {
+            if m > c {
+                wins += 1.0;
+            } else if m == c {
+                wins += 0.5;
+            }
+        }
+    }
+    wins / (member_scores.len() as f64 * control_scores.len() as f64)
+}
+
+/// Seeded bootstrap 95% CI for the AUC.
+pub fn bootstrap_ci(
+    member: &[f64],
+    control: &[f64],
+    iters: usize,
+    seed: u64,
+) -> (f64, f64) {
+    let mut rng = SplitMix64::new(seed);
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let ms: Vec<f64> = (0..member.len())
+            .map(|_| member[rng.below(member.len() as u64) as usize])
+            .collect();
+        let cs: Vec<f64> = (0..control.len())
+            .map(|_| control[rng.below(control.len() as u64) as usize])
+            .collect();
+        samples.push(auc(&ms, &cs));
+    }
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let lo = samples[(iters as f64 * 0.025) as usize];
+    let hi = samples[((iters as f64 * 0.975) as usize).min(iters - 1)];
+    (lo, hi)
+}
+
+/// Run the attack: forget-set losses vs control losses under `view`.
+pub fn mia_auc(
+    ctx: &AuditContext<'_>,
+    view: ModelView<'_>,
+) -> anyhow::Result<MiaResult> {
+    let forget_losses =
+        per_example_losses(ctx.rt, view, ctx.corpus, ctx.forget_ids)?;
+    let control_losses =
+        per_example_losses(ctx.rt, view, ctx.corpus, ctx.retain_ids)?;
+    // member-likeness score = -loss
+    let member: Vec<f64> = forget_losses.iter().map(|&l| -(l as f64)).collect();
+    let control: Vec<f64> =
+        control_losses.iter().map(|&l| -(l as f64)).collect();
+    let a = auc(&member, &control);
+    let ci = bootstrap_ci(&member, &control, 200, ctx.seed ^ 0x41A);
+    Ok(MiaResult {
+        auc: a,
+        ci95: ci,
+        n_forget: member.len(),
+        n_control: control.len(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn auc_separable() {
+        let members = vec![3.0, 4.0, 5.0];
+        let controls = vec![0.0, 1.0, 2.0];
+        assert_eq!(auc(&members, &controls), 1.0);
+        assert_eq!(auc(&controls, &members), 0.0);
+    }
+
+    #[test]
+    fn auc_identical_distributions_is_half() {
+        let a = vec![1.0, 2.0, 3.0, 4.0];
+        assert_eq!(auc(&a, &a), 0.5);
+        assert_eq!(auc(&[], &a), 0.5);
+    }
+
+    #[test]
+    fn bootstrap_ci_brackets_auc_and_is_deterministic() {
+        let mut rng = SplitMix64::new(1);
+        let member: Vec<f64> = (0..50).map(|_| rng.normal() + 0.3).collect();
+        let control: Vec<f64> = (0..50).map(|_| rng.normal()).collect();
+        let a = auc(&member, &control);
+        let (lo, hi) = bootstrap_ci(&member, &control, 200, 7);
+        assert!(lo <= a && a <= hi, "{lo} <= {a} <= {hi}");
+        assert_eq!(bootstrap_ci(&member, &control, 200, 7), (lo, hi));
+        assert!(hi - lo < 0.35);
+    }
+}

@@ -1,0 +1,26 @@
+//! Utility audit: retain-set perplexity (paper §4.3 test v; the
+//! "Retain PPL" column of Table 6).  Must stay within ±X% of baseline.
+
+use super::{per_example_loss_counts, AuditContext, ModelView};
+
+/// exp(mean loss per token) over the utility eval IDs.
+pub fn retain_ppl(
+    ctx: &AuditContext<'_>,
+    view: ModelView<'_>,
+) -> anyhow::Result<f64> {
+    ppl_over(ctx, view, ctx.eval_ids)
+}
+
+/// PPL over an arbitrary ID list: exp(Σ loss / Σ non-PAD tokens).
+pub fn ppl_over(
+    ctx: &AuditContext<'_>,
+    view: ModelView<'_>,
+    ids: &[u64],
+) -> anyhow::Result<f64> {
+    anyhow::ensure!(!ids.is_empty(), "empty eval set");
+    let lc = per_example_loss_counts(ctx.rt, view, ctx.corpus, ids)?;
+    let total: f64 = lc.iter().map(|&(l, _)| l as f64).sum();
+    let count: f64 = lc.iter().map(|&(_, c)| c as f64).sum();
+    anyhow::ensure!(count > 0.0, "no tokens in eval set");
+    Ok((total / count).exp())
+}

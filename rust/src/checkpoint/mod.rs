@@ -1,0 +1,290 @@
+//! Checkpoint store: full checkpoints (weights + optimizer state, exact
+//! f32 bit images) every K steps and optional weights-only
+//! micro-checkpoints every M steps (paper §5, Table 3).
+//!
+//! File format per checkpoint: a directory `ckpt-{step:08}` containing
+//! `params.bin`, `m.bin`, `v.bin` (LE f32 images), `meta.json` (logical
+//! step, applied-update counter, content hashes) — restoration is exact
+//! by construction (assumption A4): bytes in, bytes out.
+
+use std::fs;
+use std::path::{Path, PathBuf};
+
+use crate::util::bytes::{bytes_to_f32s, f32s_to_bytes, state_hash_full};
+use crate::util::json::{parse, Json};
+
+/// Full training state at a logical step boundary.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TrainState {
+    /// Flat parameter vector (training dtype f32).
+    pub params: Vec<f32>,
+    /// Adam first moment.
+    pub m: Vec<f32>,
+    /// Adam second moment.
+    pub v: Vec<f32>,
+    /// Applied-update counter (paper `opt_step`; bias-correction index).
+    pub applied_updates: u32,
+    /// Logical step the state corresponds to (next step to execute).
+    pub logical_step: u32,
+}
+
+impl TrainState {
+    pub fn zeros_like(params: Vec<f32>) -> TrainState {
+        let n = params.len();
+        TrainState {
+            params,
+            m: vec![0.0; n],
+            v: vec![0.0; n],
+            applied_updates: 0,
+            logical_step: 0,
+        }
+    }
+
+    /// Bit-identity of the full (θ, Ω) state — the G1 equality relation.
+    pub fn bits_equal(&self, other: &TrainState) -> bool {
+        use crate::util::bytes::bits_equal;
+        bits_equal(&self.params, &other.params)
+            && bits_equal(&self.m, &other.m)
+            && bits_equal(&self.v, &other.v)
+            && self.applied_updates == other.applied_updates
+    }
+
+    /// Content hashes in the Table 5 style (64-bit hex prefixes).
+    pub fn model_hash(&self) -> String {
+        crate::util::bytes::state_hash64(&self.params)
+    }
+
+    /// Hash over the full optimizer state (m ‖ v ‖ step counter).
+    pub fn optimizer_hash(&self) -> String {
+        let mut bytes = f32s_to_bytes(&self.m);
+        bytes.extend_from_slice(&f32s_to_bytes(&self.v));
+        bytes.extend_from_slice(&self.applied_updates.to_le_bytes());
+        let h = crate::util::hashing::sha256(&bytes);
+        crate::util::hashing::hex(&h[..8])
+    }
+}
+
+/// On-disk checkpoint store rooted at a directory.
+pub struct CheckpointStore {
+    root: PathBuf,
+    /// Keep at most this many full checkpoints (rolling K snapshots).
+    pub keep: usize,
+}
+
+impl CheckpointStore {
+    pub fn open(root: &Path, keep: usize) -> anyhow::Result<CheckpointStore> {
+        fs::create_dir_all(root)?;
+        Ok(CheckpointStore {
+            root: root.to_path_buf(),
+            keep: keep.max(1),
+        })
+    }
+
+    fn dir_for(&self, step: u32, micro: bool) -> PathBuf {
+        let tag = if micro { "micro" } else { "ckpt" };
+        self.root.join(format!("{tag}-{step:08}"))
+    }
+
+    /// Save a full checkpoint (weights + optimizer) at a step boundary.
+    pub fn save_full(&self, state: &TrainState) -> anyhow::Result<PathBuf> {
+        let dir = self.dir_for(state.logical_step, false);
+        fs::create_dir_all(&dir)?;
+        fs::write(dir.join("params.bin"), f32s_to_bytes(&state.params))?;
+        fs::write(dir.join("m.bin"), f32s_to_bytes(&state.m))?;
+        fs::write(dir.join("v.bin"), f32s_to_bytes(&state.v))?;
+        let mut meta = Json::obj();
+        meta.set("logical_step", state.logical_step)
+            .set("applied_updates", state.applied_updates)
+            .set("param_count", state.params.len())
+            .set("params_sha256", state_hash_full(&state.params))
+            .set("m_sha256", state_hash_full(&state.m))
+            .set("v_sha256", state_hash_full(&state.v))
+            .set("kind", "full");
+        fs::write(dir.join("meta.json"), meta.pretty())?;
+        self.gc()?;
+        Ok(dir)
+    }
+
+    /// Save a weights-only micro-checkpoint (Table 3 row 2).
+    pub fn save_micro(&self, state: &TrainState) -> anyhow::Result<PathBuf> {
+        let dir = self.dir_for(state.logical_step, true);
+        fs::create_dir_all(&dir)?;
+        fs::write(dir.join("params.bin"), f32s_to_bytes(&state.params))?;
+        let mut meta = Json::obj();
+        meta.set("logical_step", state.logical_step)
+            .set("applied_updates", state.applied_updates)
+            .set("param_count", state.params.len())
+            .set("params_sha256", state_hash_full(&state.params))
+            .set("kind", "micro");
+        fs::write(dir.join("meta.json"), meta.pretty())?;
+        Ok(dir)
+    }
+
+    /// Load a full checkpoint, verifying content hashes (A4: exact
+    /// restoration or hard failure).
+    pub fn load_full(&self, step: u32) -> anyhow::Result<TrainState> {
+        let dir = self.dir_for(step, false);
+        let meta = parse(&fs::read_to_string(dir.join("meta.json"))?)
+            .map_err(|e| anyhow::anyhow!("bad checkpoint meta: {e}"))?;
+        let params = bytes_to_f32s(&fs::read(dir.join("params.bin"))?)?;
+        let m = bytes_to_f32s(&fs::read(dir.join("m.bin"))?)?;
+        let v = bytes_to_f32s(&fs::read(dir.join("v.bin"))?)?;
+        for (name, data) in
+            [("params", &params), ("m", &m), ("v", &v)]
+        {
+            let expect = meta
+                .get(&format!("{name}_sha256"))
+                .and_then(|j| j.as_str())
+                .ok_or_else(|| anyhow::anyhow!("missing {name}_sha256"))?;
+            anyhow::ensure!(
+                state_hash_full(data) == expect,
+                "checkpoint {name} hash mismatch at step {step} — \
+                 refusing inexact restore (A4)"
+            );
+        }
+        Ok(TrainState {
+            params,
+            m,
+            v,
+            applied_updates: meta
+                .get("applied_updates")
+                .and_then(|j| j.as_u64())
+                .unwrap_or(0) as u32,
+            logical_step: step,
+        })
+    }
+
+    /// All full-checkpoint steps, ascending.
+    pub fn list_full(&self) -> anyhow::Result<Vec<u32>> {
+        let mut steps = Vec::new();
+        for e in fs::read_dir(&self.root)? {
+            let name = e?.file_name().to_string_lossy().into_owned();
+            if let Some(s) = name.strip_prefix("ckpt-") {
+                if let Ok(step) = s.parse() {
+                    steps.push(step);
+                }
+            }
+        }
+        steps.sort_unstable();
+        Ok(steps)
+    }
+
+    /// Latest full checkpoint at or before `step` (Alg. A.7 line 14:
+    /// "load nearest checkpoint C_k").
+    pub fn nearest_at_or_before(&self, step: u32) -> anyhow::Result<Option<u32>> {
+        Ok(self
+            .list_full()?
+            .into_iter()
+            .filter(|&s| s <= step)
+            .max())
+    }
+
+    /// Bytes on disk for a full checkpoint (Table 3 accounting).
+    pub fn full_checkpoint_bytes(&self, step: u32) -> anyhow::Result<u64> {
+        let dir = self.dir_for(step, false);
+        let mut total = 0;
+        for e in fs::read_dir(dir)? {
+            total += e?.metadata()?.len();
+        }
+        Ok(total)
+    }
+
+    fn gc(&self) -> anyhow::Result<()> {
+        let steps = self.list_full()?;
+        if steps.len() > self.keep {
+            for &s in &steps[..steps.len() - self.keep] {
+                fs::remove_dir_all(self.dir_for(s, false))?;
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{f32_vec_adversarial, for_all};
+    use crate::util::rng::SplitMix64;
+    use crate::util::tempdir;
+
+    fn state(seed: u64, n: usize, step: u32) -> TrainState {
+        let mut r = SplitMix64::new(seed);
+        TrainState {
+            params: (0..n).map(|_| r.normal() as f32).collect(),
+            m: (0..n).map(|_| r.normal() as f32 * 0.01).collect(),
+            v: (0..n).map(|_| (r.normal() as f32).abs()).collect(),
+            applied_updates: step,
+            logical_step: step,
+        }
+    }
+
+    #[test]
+    fn save_load_bit_exact() {
+        let dir = tempdir("ckpt");
+        let store = CheckpointStore::open(&dir, 10).unwrap();
+        let s = state(1, 1000, 5);
+        store.save_full(&s).unwrap();
+        let back = store.load_full(5).unwrap();
+        assert!(s.bits_equal(&back));
+        assert_eq!(back.logical_step, 5);
+    }
+
+    #[test]
+    fn adversarial_bit_patterns_roundtrip() {
+        let dir = tempdir("ckpt-adv");
+        let store = CheckpointStore::open(&dir, 100_000).unwrap();
+        for_all("checkpoint nan/denormal roundtrip", |rng| {
+            let n = rng.below(200) as usize + 1;
+            let mut s = state(rng.next_u64(), n, rng.below(1000) as u32);
+            s.params = f32_vec_adversarial(rng, n);
+            store.save_full(&s).unwrap();
+            let back = store.load_full(s.logical_step).unwrap();
+            assert!(s.bits_equal(&back));
+        });
+    }
+
+    #[test]
+    fn tamper_fails_closed() {
+        let dir = tempdir("ckpt-tamper");
+        let store = CheckpointStore::open(&dir, 10).unwrap();
+        let s = state(2, 100, 7);
+        let cdir = store.save_full(&s).unwrap();
+        let pbin = cdir.join("params.bin");
+        let mut raw = fs::read(&pbin).unwrap();
+        raw[13] ^= 1;
+        fs::write(&pbin, raw).unwrap();
+        assert!(store.load_full(7).is_err(), "must refuse inexact restore");
+    }
+
+    #[test]
+    fn rolling_gc_keeps_latest() {
+        let dir = tempdir("ckpt-gc");
+        let store = CheckpointStore::open(&dir, 3).unwrap();
+        for step in [1, 2, 3, 4, 5] {
+            store.save_full(&state(step as u64, 50, step)).unwrap();
+        }
+        assert_eq!(store.list_full().unwrap(), vec![3, 4, 5]);
+    }
+
+    #[test]
+    fn nearest_lookup() {
+        let dir = tempdir("ckpt-near");
+        let store = CheckpointStore::open(&dir, 10).unwrap();
+        for step in [10, 20, 30] {
+            store.save_full(&state(step as u64, 10, step)).unwrap();
+        }
+        assert_eq!(store.nearest_at_or_before(25).unwrap(), Some(20));
+        assert_eq!(store.nearest_at_or_before(30).unwrap(), Some(30));
+        assert_eq!(store.nearest_at_or_before(5).unwrap(), None);
+    }
+
+    #[test]
+    fn hashes_match_table5_style() {
+        let s = state(3, 64, 0);
+        assert_eq!(s.model_hash().len(), 16);
+        assert_eq!(s.optimizer_hash().len(), 16);
+        let mut s2 = s.clone();
+        s2.applied_updates += 1; // step counter is part of optimizer state
+        assert_ne!(s.optimizer_hash(), s2.optimizer_hash());
+    }
+}

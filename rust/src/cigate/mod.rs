@@ -1,0 +1,144 @@
+//! Determinism/Replay CI gate (paper Alg. 5.1 / A.8, Fig. 2).
+//!
+//! Run before forgetting is enabled:
+//!   1. train T steps twice under identical pins → byte-identical
+//!      weights AND optimizer state;
+//!   2. from a checkpoint C_k, run `ReplayFilter` with an empty closure
+//!      → byte-identical to the direct run;
+//!   3. WAL integrity scan (CRC per record, segment SHA/HMAC, monotone
+//!      gap-free `opt_step_u32`).
+//! Any mismatch blocks forgetting (fail-closed).
+
+use std::collections::HashSet;
+
+use crate::checkpoint::CheckpointStore;
+use crate::config::RunConfig;
+use crate::data::corpus::Corpus;
+use crate::replay::{load_run, replay_filter, ReplayOptions};
+use crate::runtime::Runtime;
+use crate::trainer::Trainer;
+use crate::util::json::Json;
+use crate::wal::integrity;
+
+/// Outcome of the CI gate.
+#[derive(Debug, Clone)]
+pub struct CiGateReport {
+    pub train_train_equal: bool,
+    pub checkpoint_replay_equal: bool,
+    pub wal_integrity_ok: bool,
+    pub details: Vec<String>,
+}
+
+impl CiGateReport {
+    pub fn pass(&self) -> bool {
+        self.train_train_equal
+            && self.checkpoint_replay_equal
+            && self.wal_integrity_ok
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut j = Json::obj();
+        j.set("pass", self.pass())
+            .set("train_train_equal", self.train_train_equal)
+            .set("checkpoint_replay_equal", self.checkpoint_replay_equal)
+            .set("wal_integrity_ok", self.wal_integrity_ok)
+            .set(
+                "details",
+                Json::Arr(
+                    self.details
+                        .iter()
+                        .map(|d| Json::Str(d.clone()))
+                        .collect(),
+                ),
+            );
+        j
+    }
+}
+
+/// Run the full gate.  `base_cfg.run_dir` is used as a prefix; the gate
+/// writes `<run_dir>-cigate-{a,b}`.
+pub fn run_gate(
+    rt: &Runtime,
+    base_cfg: &RunConfig,
+    corpus: &Corpus,
+    gate_steps: u32,
+) -> anyhow::Result<CiGateReport> {
+    let mut details = Vec::new();
+    let mut cfg_a = base_cfg.clone();
+    cfg_a.steps = gate_steps;
+    cfg_a.run_dir = base_cfg.run_dir.with_file_name(format!(
+        "{}-cigate-a",
+        base_cfg
+            .run_dir
+            .file_name()
+            .map(|s| s.to_string_lossy().into_owned())
+            .unwrap_or_else(|| "run".into())
+    ));
+    let mut cfg_b = cfg_a.clone();
+    cfg_b.run_dir = cfg_a.run_dir.with_file_name(
+        cfg_a
+            .run_dir
+            .file_name()
+            .unwrap()
+            .to_string_lossy()
+            .replace("-a", "-b"),
+    );
+    for d in [&cfg_a.run_dir, &cfg_b.run_dir] {
+        if d.exists() {
+            std::fs::remove_dir_all(d)?;
+        }
+    }
+
+    // (1) train–train byte equality
+    let out_a = Trainer::new(rt, cfg_a.clone(), corpus.clone()).train(|_| false)?;
+    let out_b = Trainer::new(rt, cfg_b, corpus.clone()).train(|_| false)?;
+    let train_train_equal = out_a.state.bits_equal(&out_b.state);
+    details.push(format!(
+        "train-train: model {} vs {}, opt {} vs {}",
+        out_a.state.model_hash(),
+        out_b.state.model_hash(),
+        out_a.state.optimizer_hash(),
+        out_b.state.optimizer_hash()
+    ));
+
+    // (2) checkpoint→replay equality (no filtering)
+    let store = CheckpointStore::open(&cfg_a.run_dir.join("ckpt"), 64)?;
+    let k = store
+        .nearest_at_or_before(gate_steps / 2)
+        .ok()
+        .flatten()
+        .unwrap_or(0);
+    let ck = store.load_full(k)?;
+    let (records, idmap, pins) = load_run(&cfg_a.run_dir, base_cfg.hmac_key.clone())?;
+    let outcome = replay_filter(
+        rt,
+        corpus,
+        &ck,
+        &records,
+        &idmap,
+        &HashSet::new(),
+        Some(&pins),
+        &ReplayOptions::default(),
+    )?;
+    let checkpoint_replay_equal = outcome.state.bits_equal(&out_a.state);
+    details.push(format!(
+        "ckpt-replay from step {k}: model {} vs {}",
+        outcome.state.model_hash(),
+        out_a.state.model_hash()
+    ));
+
+    // (3) WAL integrity
+    let rep = integrity::scan(
+        &cfg_a.run_dir.join("wal"),
+        base_cfg.hmac_key.as_deref(),
+    )?;
+    let wal_integrity_ok = rep.ok();
+    details.push(format!("wal scan: {}", rep.to_json().encode()));
+
+    Ok(CiGateReport {
+        train_train_equal,
+        checkpoint_replay_equal,
+        wal_integrity_ok,
+        details,
+    })
+}

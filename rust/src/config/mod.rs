@@ -1,0 +1,13 @@
+//! Run configuration and reproducibility pins (paper Table 2).
+//!
+//! [`Pins`] is the fail-closed contract: it captures every input that can
+//! change numerics (artifact hashes, model-config hash, tokenizer
+//! checksum, layout, loss reduction), is recorded at training time, and
+//! replay **refuses to run** if any pin drifts ([`Pins::verify`] →
+//! `PinDrift`).
+
+pub mod pins;
+pub mod run;
+
+pub use pins::{PinDrift, Pins};
+pub use run::RunConfig;

@@ -1,0 +1,252 @@
+//! Reproducibility pins (paper Table 2) with fail-closed verification.
+//!
+//! A [`Pins`] snapshot is taken when training starts and saved next to
+//! the WAL.  Before any replay the current environment is re-pinned and
+//! compared; **any** drift yields [`PinDrift`] and the controller refuses
+//! / escalates (paper §5 "Replay refuses if any pin drifts", §7 fail-
+//! closed behaviour).
+
+use std::fmt;
+use std::path::Path;
+
+use crate::util::json::{parse, Json};
+
+/// The pinned execution environment.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Pins {
+    /// SHA-256 of every AOT artifact (HLO text, init params), sorted by
+    /// name — the "CUDA/cuDNN version pins" analogue: the executable IS
+    /// the kernel algorithm choice here.
+    pub artifact_hashes: Vec<(String, String)>,
+    /// Hash of the model config (shapes, dtypes, dropout, optimizer HPs).
+    pub model_config_hash: String,
+    /// Tokenizer checksum (pinned build).
+    pub tokenizer_checksum: String,
+    /// Flat parameter count.
+    pub param_count: usize,
+    /// Gradient-accumulation length (parallel-layout pin).
+    pub accum: usize,
+    /// Train microbatch size (parallel-layout pin).
+    pub batch: usize,
+    /// Logical parallel layout descriptor (single-host here; the FSDP/TP/
+    /// PP shape string in production).
+    pub layout: String,
+    /// Loss reduction — MUST be "sum" for exact replay (Prop. A.8).
+    pub reduction: String,
+    /// PJRT platform name (e.g. "cpu") — the hardware pin.
+    pub platform: String,
+}
+
+/// A pin drift: which pin, expected vs found.  Fail-closed trigger.
+#[derive(Debug, Clone)]
+pub struct PinDrift {
+    pub pin: String,
+    pub expected: String,
+    pub found: String,
+}
+
+impl fmt::Display for PinDrift {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "pin drift on {:?}: expected {:?}, found {:?} — refusing to \
+             replay (fail-closed)",
+            self.pin, self.expected, self.found
+        )
+    }
+}
+
+impl std::error::Error for PinDrift {}
+
+impl Pins {
+    /// Compare against a freshly captured environment.  Returns every
+    /// drift (empty = safe to replay).
+    pub fn verify(&self, current: &Pins) -> Vec<PinDrift> {
+        let mut drifts = Vec::new();
+        let mut check = |pin: &str, a: &str, b: &str| {
+            if a != b {
+                drifts.push(PinDrift {
+                    pin: pin.to_string(),
+                    expected: a.to_string(),
+                    found: b.to_string(),
+                });
+            }
+        };
+        check(
+            "model_config_hash",
+            &self.model_config_hash,
+            &current.model_config_hash,
+        );
+        check(
+            "tokenizer_checksum",
+            &self.tokenizer_checksum,
+            &current.tokenizer_checksum,
+        );
+        check(
+            "param_count",
+            &self.param_count.to_string(),
+            &current.param_count.to_string(),
+        );
+        check("accum", &self.accum.to_string(), &current.accum.to_string());
+        check("batch", &self.batch.to_string(), &current.batch.to_string());
+        check("layout", &self.layout, &current.layout);
+        check("reduction", &self.reduction, &current.reduction);
+        check("platform", &self.platform, &current.platform);
+        // artifact-by-artifact comparison
+        use std::collections::BTreeMap;
+        let a: BTreeMap<_, _> = self.artifact_hashes.iter().cloned().collect();
+        let b: BTreeMap<_, _> =
+            current.artifact_hashes.iter().cloned().collect();
+        for (name, hash) in &a {
+            match b.get(name) {
+                None => check(&format!("artifact:{name}"), hash, "<missing>"),
+                Some(h) => check(&format!("artifact:{name}"), hash, h),
+            }
+        }
+        for name in b.keys() {
+            if !a.contains_key(name) {
+                check(&format!("artifact:{name}"), "<absent at train>", "new");
+            }
+        }
+        drifts
+    }
+
+    /// Fail-closed check: error on any drift.
+    pub fn ensure_match(&self, current: &Pins) -> anyhow::Result<()> {
+        let drifts = self.verify(current);
+        if let Some(d) = drifts.first() {
+            anyhow::bail!("{d} ({} drift(s) total)", drifts.len());
+        }
+        Ok(())
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut arts = Json::obj();
+        for (name, hash) in &self.artifact_hashes {
+            arts.set(name, hash.as_str());
+        }
+        let mut j = Json::obj();
+        j.set("artifact_hashes", arts)
+            .set("model_config_hash", self.model_config_hash.as_str())
+            .set("tokenizer_checksum", self.tokenizer_checksum.as_str())
+            .set("param_count", self.param_count)
+            .set("accum", self.accum)
+            .set("batch", self.batch)
+            .set("layout", self.layout.as_str())
+            .set("reduction", self.reduction.as_str())
+            .set("platform", self.platform.as_str());
+        j
+    }
+
+    pub fn from_json(j: &Json) -> anyhow::Result<Pins> {
+        let s = |k: &str| -> anyhow::Result<String> {
+            Ok(j.get(k)
+                .and_then(|v| v.as_str())
+                .ok_or_else(|| anyhow::anyhow!("pins missing {k}"))?
+                .to_string())
+        };
+        let mut artifact_hashes = Vec::new();
+        if let Some(obj) = j.get("artifact_hashes").and_then(|v| v.as_obj()) {
+            for (k, v) in obj {
+                artifact_hashes.push((
+                    k.clone(),
+                    v.as_str().unwrap_or_default().to_string(),
+                ));
+            }
+        }
+        Ok(Pins {
+            artifact_hashes,
+            model_config_hash: s("model_config_hash")?,
+            tokenizer_checksum: s("tokenizer_checksum")?,
+            param_count: j
+                .get("param_count")
+                .and_then(|v| v.as_usize())
+                .unwrap_or(0),
+            accum: j.get("accum").and_then(|v| v.as_usize()).unwrap_or(0),
+            batch: j.get("batch").and_then(|v| v.as_usize()).unwrap_or(0),
+            layout: s("layout")?,
+            reduction: s("reduction")?,
+            platform: s("platform")?,
+        })
+    }
+
+    pub fn save(&self, path: &Path) -> anyhow::Result<()> {
+        std::fs::write(path, self.to_json().pretty())?;
+        Ok(())
+    }
+
+    pub fn load(path: &Path) -> anyhow::Result<Pins> {
+        let j = parse(&std::fs::read_to_string(path)?)
+            .map_err(|e| anyhow::anyhow!("pins: {e}"))?;
+        Pins::from_json(&j)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn pins() -> Pins {
+        Pins {
+            artifact_hashes: vec![
+                ("train_step".into(), "aaa".into()),
+                ("adamw_update".into(), "bbb".into()),
+            ],
+            model_config_hash: "cfg123".into(),
+            tokenizer_checksum: "tok456".into(),
+            param_count: 120064,
+            accum: 2,
+            batch: 8,
+            layout: "single-host;dp=1;tp=1;pp=1".into(),
+            reduction: "sum".into(),
+            platform: "cpu".into(),
+        }
+    }
+
+    #[test]
+    fn identical_pins_verify_clean() {
+        assert!(pins().verify(&pins()).is_empty());
+        assert!(pins().ensure_match(&pins()).is_ok());
+    }
+
+    #[test]
+    fn any_single_drift_fails_closed() {
+        let base = pins();
+        let mut variants = Vec::new();
+        let mut p = pins();
+        p.model_config_hash = "other".into();
+        variants.push(p);
+        let mut p = pins();
+        p.reduction = "mean".into();
+        variants.push(p);
+        let mut p = pins();
+        p.accum = 4;
+        variants.push(p);
+        let mut p = pins();
+        p.artifact_hashes[0].1 = "ddd".into();
+        variants.push(p);
+        let mut p = pins();
+        p.artifact_hashes.pop();
+        variants.push(p);
+        for v in variants {
+            assert!(base.ensure_match(&v).is_err());
+        }
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let p = pins();
+        let back = Pins::from_json(&p.to_json()).unwrap();
+        // artifact ordering may differ; compare via verify
+        assert!(p.verify(&back).is_empty());
+    }
+
+    #[test]
+    fn save_load() {
+        let dir = crate::util::tempdir("pins");
+        let p = pins();
+        let path = dir.join("pins.json");
+        p.save(&path).unwrap();
+        assert!(Pins::load(&path).unwrap().verify(&p).is_empty());
+    }
+}

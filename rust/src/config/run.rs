@@ -1,0 +1,181 @@
+//! Run configuration: everything the launcher needs to drive a training
+//! or unlearning run.  Loaded from a JSON file and/or CLI overrides.
+
+use std::path::{Path, PathBuf};
+
+use crate::util::json::{parse, Json};
+
+/// Training/unlearning run configuration.
+#[derive(Debug, Clone)]
+pub struct RunConfig {
+    /// Directory with AOT artifacts (`make artifacts` output).
+    pub artifacts_dir: PathBuf,
+    /// Working directory for WAL/checkpoints/manifests.
+    pub run_dir: PathBuf,
+    /// Logical optimizer steps to train.
+    pub steps: u32,
+    /// Gradient-accumulation length (microbatches per logical step).
+    pub accum: usize,
+    /// Base learning rate (peak of warmup+cosine).
+    pub lr: f32,
+    /// Warmup steps of the schedule.
+    pub warmup: u32,
+    /// Full-checkpoint cadence K (Table 3 "worst-case replay ≤ K·t_step").
+    pub checkpoint_every: u32,
+    /// Rolling checkpoints kept.
+    pub checkpoint_keep: usize,
+    /// Micro-checkpoint cadence M (0 = disabled).
+    pub micro_checkpoint_every: u32,
+    /// Dense-delta ring window N.
+    pub ring_window: usize,
+    /// Revert optimizer tensors in the ring too (bitwise G3 reverts).
+    pub ring_revert_optimizer: bool,
+    /// Master run seed (dataloader order, microbatch seeds).
+    pub run_seed: u64,
+    /// HMAC key for production-mode WAL hashing (None = toy mode).
+    pub hmac_key: Option<Vec<u8>>,
+    /// WAL records per segment file.
+    pub wal_segment_records: usize,
+}
+
+impl Default for RunConfig {
+    fn default() -> Self {
+        RunConfig {
+            artifacts_dir: PathBuf::from("artifacts"),
+            run_dir: PathBuf::from("runs/default"),
+            steps: 200,
+            accum: 2,
+            lr: 3e-3,
+            warmup: 20,
+            checkpoint_every: 50,
+            checkpoint_keep: 8,
+            micro_checkpoint_every: 0,
+            ring_window: 16,
+            ring_revert_optimizer: true,
+            run_seed: 0xC0FFEE,
+            hmac_key: None,
+            wal_segment_records: 4096,
+        }
+    }
+}
+
+impl RunConfig {
+    /// Warmup + cosine LR schedule, indexed by the *applied-update*
+    /// counter (paper §5: "indexed by a logical step counter"; the VALUE
+    /// is what goes into the WAL).
+    pub fn lr_at(&self, applied_update: u32) -> f32 {
+        let t = applied_update as f32;
+        if applied_update < self.warmup {
+            return self.lr * (t + 1.0) / self.warmup.max(1) as f32;
+        }
+        let total = self.steps.max(self.warmup + 1) as f32;
+        let progress =
+            ((t - self.warmup as f32) / (total - self.warmup as f32)).min(1.0);
+        0.5 * self.lr * (1.0 + (std::f32::consts::PI * progress).cos())
+    }
+
+    /// Load from JSON, with unset fields defaulting.
+    pub fn from_json_file(path: &Path) -> anyhow::Result<RunConfig> {
+        let text = std::fs::read_to_string(path)?;
+        let j = parse(&text).map_err(|e| anyhow::anyhow!("config: {e}"))?;
+        let mut c = RunConfig::default();
+        let get_u = |k: &str, d: u64| -> u64 {
+            j.get(k).and_then(|v| v.as_u64()).unwrap_or(d)
+        };
+        if let Some(s) = j.get("artifacts_dir").and_then(|v| v.as_str()) {
+            c.artifacts_dir = PathBuf::from(s);
+        }
+        if let Some(s) = j.get("run_dir").and_then(|v| v.as_str()) {
+            c.run_dir = PathBuf::from(s);
+        }
+        c.steps = get_u("steps", c.steps as u64) as u32;
+        c.accum = get_u("accum", c.accum as u64) as usize;
+        if let Some(f) = j.get("lr").and_then(|v| v.as_f64()) {
+            c.lr = f as f32;
+        }
+        c.warmup = get_u("warmup", c.warmup as u64) as u32;
+        c.checkpoint_every =
+            get_u("checkpoint_every", c.checkpoint_every as u64) as u32;
+        c.checkpoint_keep =
+            get_u("checkpoint_keep", c.checkpoint_keep as u64) as usize;
+        c.micro_checkpoint_every = get_u(
+            "micro_checkpoint_every",
+            c.micro_checkpoint_every as u64,
+        ) as u32;
+        c.ring_window = get_u("ring_window", c.ring_window as u64) as usize;
+        if let Some(b) = j.get("ring_revert_optimizer").and_then(|v| v.as_bool())
+        {
+            c.ring_revert_optimizer = b;
+        }
+        c.run_seed = get_u("run_seed", c.run_seed);
+        if let Some(k) = j.get("hmac_key").and_then(|v| v.as_str()) {
+            c.hmac_key = Some(k.as_bytes().to_vec());
+        }
+        c.wal_segment_records =
+            get_u("wal_segment_records", c.wal_segment_records as u64) as usize;
+        Ok(c)
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut j = Json::obj();
+        j.set("artifacts_dir", self.artifacts_dir.display().to_string())
+            .set("run_dir", self.run_dir.display().to_string())
+            .set("steps", self.steps)
+            .set("accum", self.accum)
+            .set("lr", self.lr)
+            .set("warmup", self.warmup)
+            .set("checkpoint_every", self.checkpoint_every)
+            .set("checkpoint_keep", self.checkpoint_keep)
+            .set("micro_checkpoint_every", self.micro_checkpoint_every)
+            .set("ring_window", self.ring_window)
+            .set("ring_revert_optimizer", self.ring_revert_optimizer)
+            .set("run_seed", self.run_seed)
+            .set("wal_segment_records", self.wal_segment_records);
+        j
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lr_schedule_shape() {
+        let c = RunConfig {
+            lr: 1.0,
+            warmup: 10,
+            steps: 100,
+            ..Default::default()
+        };
+        assert!(c.lr_at(0) > 0.0 && c.lr_at(0) < 0.2);
+        assert!((c.lr_at(9) - 1.0).abs() < 1e-6); // end of warmup
+        assert!(c.lr_at(50) < 1.0);
+        assert!(c.lr_at(99) < c.lr_at(50)); // cosine decays
+        assert!(c.lr_at(99) >= 0.0);
+    }
+
+    #[test]
+    fn lr_is_pure_function_of_applied_updates() {
+        let c = RunConfig::default();
+        for t in 0..c.steps {
+            assert_eq!(c.lr_at(t).to_bits(), c.lr_at(t).to_bits());
+        }
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let dir = crate::util::tempdir("cfg");
+        let c = RunConfig {
+            steps: 42,
+            accum: 3,
+            lr: 1.5e-3,
+            ..Default::default()
+        };
+        let p = dir.join("run.json");
+        std::fs::write(&p, c.to_json().pretty()).unwrap();
+        let back = RunConfig::from_json_file(&p).unwrap();
+        assert_eq!(back.steps, 42);
+        assert_eq!(back.accum, 3);
+        assert!((back.lr - 1.5e-3).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,455 @@
+//! UNLEARNCONTROLLER (paper Alg. A.7, §4.4): route each forget request
+//! to the cheapest path that passes audits, fail closed, and append
+//! every action to the signed manifest.
+//!
+//! Decision order:
+//!   1. **Adapter deletion** when cl(F) is confined to cohort adapters.
+//!   2. **Recent exact revert** when every offending step is inside the
+//!      dense-delta ring window (optionally followed by a filtered
+//!      replay of the reverted tail, which restores the retain-only
+//!      updates — revert + replay-tail compose into a bounded-work
+//!      exact path).
+//!   3. **Urgent hot path**: curvature anti-update + retain-tune,
+//!      audit-gated; escalate on failure.
+//!   4. **Exact replay** (default): nearest checkpoint preceding all
+//!      forget influence + `ReplayFilter`.
+
+use std::collections::HashSet;
+
+use crate::adapters::AdapterRegistry;
+use crate::audit::{run_audits, AuditContext, AuditReport, AuditThresholds, ModelView};
+use crate::checkpoint::{CheckpointStore, TrainState};
+use crate::config::{Pins, RunConfig};
+use crate::curvature::{hot_path_unlearn, FisherCache, HotPathParams};
+use crate::data::corpus::Corpus;
+use crate::deltas::DeltaRing;
+use crate::manifest::{ActionKind, ForgetManifest, ManifestEntry};
+use crate::neardup::{expand_closure, ClosureParams, HammingIndex};
+use crate::replay::{offending_steps, replay_filter, ReplayOptions};
+use crate::runtime::Runtime;
+use crate::util::json::Json;
+use crate::wal::{IdMap, WalRecord};
+
+/// Urgency of a forget request (drives the hot-path branch).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Urgency {
+    Normal,
+    High,
+}
+
+/// A forget request (user-scoped and/or explicit sample IDs).
+#[derive(Debug, Clone)]
+pub struct ForgetRequest {
+    /// Idempotency key.
+    pub id: String,
+    pub user: Option<u32>,
+    pub sample_ids: Vec<u64>,
+    pub urgency: Urgency,
+}
+
+/// What the controller did.
+#[derive(Debug, Clone)]
+pub struct ControllerOutcome {
+    pub action: ActionKind,
+    pub closure_size: usize,
+    pub closure_expanded: usize,
+    pub audit: Option<AuditReport>,
+    pub escalations: Vec<String>,
+    pub details: Json,
+    /// False when the idempotency key had already been executed.
+    pub executed: bool,
+}
+
+/// The live system a controller instance manages.
+pub struct UnlearnSystem<'rt> {
+    pub rt: &'rt Runtime,
+    pub cfg: RunConfig,
+    pub corpus: Corpus,
+    /// Current serving state (θ, Ω).
+    pub state: TrainState,
+    pub ring: DeltaRing,
+    pub adapters: AdapterRegistry,
+    pub fisher: Option<FisherCache>,
+    pub manifest: ForgetManifest,
+    pub records: Vec<WalRecord>,
+    pub idmap: IdMap,
+    pub pins: Pins,
+    pub ndindex: HammingIndex,
+    /// Matched member controls + held-out utility IDs for audits.
+    pub retain_ids: Vec<u64>,
+    pub eval_ids: Vec<u64>,
+    pub thresholds: AuditThresholds,
+    pub baseline_ppl: Option<f64>,
+    pub closure_params: ClosureParams,
+    pub hot_path: HotPathParams,
+    /// After a ring revert, replay the reverted tail (filtered) to
+    /// restore retain-only progress.
+    pub resume_after_revert: bool,
+    pub audit_seed: u64,
+}
+
+impl<'rt> UnlearnSystem<'rt> {
+    fn audit_ctx<'a>(&'a self, closure: &'a [u64]) -> AuditContext<'a> {
+        AuditContext {
+            rt: self.rt,
+            corpus: &self.corpus,
+            forget_ids: closure,
+            retain_ids: &self.retain_ids,
+            eval_ids: &self.eval_ids,
+            baseline_ppl: self.baseline_ppl,
+            thresholds: self.thresholds.clone(),
+            seed: self.audit_seed,
+        }
+    }
+
+    fn append_manifest(
+        &mut self,
+        req: &ForgetRequest,
+        closure: &[u64],
+        expanded: usize,
+        action: ActionKind,
+        details: Json,
+        audit: Option<&AuditReport>,
+    ) -> anyhow::Result<()> {
+        let mut request = Json::obj();
+        request
+            .set("id", req.id.as_str())
+            .set(
+                "user",
+                req.user.map(Json::from).unwrap_or(Json::Null),
+            )
+            .set("requested_ids", req.sample_ids.len())
+            .set(
+                "urgency",
+                match req.urgency {
+                    Urgency::Normal => "normal",
+                    Urgency::High => "high",
+                },
+            );
+        let mut cl = Json::obj();
+        cl.set("size", closure.len()).set("expanded", expanded);
+        let mut artifacts = Json::obj();
+        artifacts
+            .set("model_hash", self.state.model_hash())
+            .set("optimizer_hash", self.state.optimizer_hash());
+        self.manifest.append(&ManifestEntry {
+            idempotency_key: req.id.clone(),
+            request,
+            closure_summary: cl,
+            action,
+            details,
+            audits: audit.map(|a| a.to_json()),
+            artifacts,
+        })?;
+        Ok(())
+    }
+
+    /// Expand the request to cl(F) (Alg. A.7 line 1).
+    pub fn closure_of(&self, req: &ForgetRequest) -> (Vec<u64>, usize) {
+        let mut ids = req.sample_ids.clone();
+        if let Some(u) = req.user {
+            ids.extend(self.corpus.user_samples(u));
+        }
+        ids.sort_unstable();
+        ids.dedup();
+        let cl = expand_closure(
+            &self.corpus,
+            &self.ndindex,
+            &ids,
+            self.closure_params,
+        );
+        (cl.ids, cl.expanded.len())
+    }
+
+    /// Handle one forget request (the full Alg. A.7 flow).
+    pub fn handle(
+        &mut self,
+        req: &ForgetRequest,
+    ) -> anyhow::Result<ControllerOutcome> {
+        if self.manifest.was_executed(&req.id) {
+            return Ok(ControllerOutcome {
+                action: ActionKind::Refused,
+                closure_size: 0,
+                closure_expanded: 0,
+                audit: None,
+                escalations: vec!["duplicate idempotency key".into()],
+                details: Json::obj(),
+                executed: false,
+            });
+        }
+        let (closure, expanded) = self.closure_of(req);
+        anyhow::ensure!(!closure.is_empty(), "empty forget closure");
+        let closure_set: HashSet<u64> = closure.iter().copied().collect();
+        let mut escalations = Vec::new();
+        let mut deleted_cohorts: Vec<u32> = Vec::new();
+        let mut adapter_audit: Option<AuditReport> = None;
+
+        // ---- path 1: adapter deletion --------------------------------
+        if let Some(cohorts) = self.adapters.covering_cohorts(&closure) {
+            if !cohorts.is_empty() {
+                let mut deleted = Vec::new();
+                let mut refused = false;
+                for c in &cohorts {
+                    match self.adapters.delete_cohort(*c) {
+                        Ok(_) => deleted.push(*c),
+                        Err(e) => {
+                            escalations
+                                .push(format!("adapter delete failed: {e}"));
+                            refused = true;
+                        }
+                    }
+                }
+                if !refused {
+                    let audit = run_audits(
+                        &self.audit_ctx(&closure),
+                        ModelView::Base(&self.state.params),
+                    )?;
+                    deleted_cohorts = deleted.clone();
+                    adapter_audit = Some(audit.clone());
+                    let mut details = Json::obj();
+                    details.set(
+                        "deleted_cohorts",
+                        Json::Arr(
+                            deleted.iter().map(|&c| c.into()).collect(),
+                        ),
+                    );
+                    if audit.pass() {
+                        self.append_manifest(
+                            req,
+                            &closure,
+                            expanded,
+                            ActionKind::AdapterDelete,
+                            details.clone(),
+                            Some(&audit),
+                        )?;
+                        return Ok(ControllerOutcome {
+                            action: ActionKind::AdapterDelete,
+                            closure_size: closure.len(),
+                            closure_expanded: expanded,
+                            audit: Some(audit),
+                            escalations,
+                            details,
+                            executed: true,
+                        });
+                    }
+                    escalations.push("adapter-delete audit failed".into());
+                }
+            }
+        }
+
+        // ---- offending steps (Alg. A.7 line 6) -----------------------
+        let offending = offending_steps(&self.records, &self.idmap, &closure_set)?;
+
+        if offending.is_empty() {
+            // nothing in the base was influenced.  If we already deleted
+            // cohort adapters, the request IS served (the audit report,
+            // pass or fail, rides along in the manifest — there is no
+            // stronger path left: the base never saw the data).
+            let (action, audit) = if !deleted_cohorts.is_empty() {
+                (ActionKind::AdapterDelete, adapter_audit.clone())
+            } else {
+                let audit = run_audits(
+                    &self.audit_ctx(&closure),
+                    ModelView::Base(&self.state.params),
+                )?;
+                (ActionKind::Refused, Some(audit))
+            };
+            let mut details = Json::obj();
+            details.set("note", "no offending steps in WAL");
+            if !deleted_cohorts.is_empty() {
+                details.set(
+                    "deleted_cohorts",
+                    Json::Arr(
+                        deleted_cohorts.iter().map(|&c| c.into()).collect(),
+                    ),
+                );
+            }
+            self.append_manifest(
+                req,
+                &closure,
+                expanded,
+                action,
+                details.clone(),
+                audit.as_ref(),
+            )?;
+            return Ok(ControllerOutcome {
+                action,
+                closure_size: closure.len(),
+                closure_expanded: expanded,
+                audit,
+                escalations,
+                details,
+                executed: true,
+            });
+        }
+        let min_offending = offending[0];
+
+        // ---- path 2: recent exact revert ------------------------------
+        if let Some(earliest) = self.ring.earliest_step() {
+            if min_offending >= earliest {
+                let u = (self.state.logical_step - min_offending) as usize;
+                if u <= self.ring.available() {
+                    self.ring.revert(&mut self.state, u)?;
+                    let mut details = Json::obj();
+                    details
+                        .set("reverted_steps", u)
+                        .set("reverted_to", self.state.logical_step);
+                    if self.resume_after_revert {
+                        // replay the reverted tail with filtering — the
+                        // composition restores retain-only progress exactly
+                        let outcome = replay_filter(
+                            self.rt,
+                            &self.corpus,
+                            &self.state,
+                            &self.records,
+                            &self.idmap,
+                            &closure_set,
+                            Some(&self.pins),
+                            &ReplayOptions::default(),
+                        )?;
+                        self.state = outcome.state;
+                        details.set(
+                            "resumed_applied_steps",
+                            outcome.invariants.applied_steps,
+                        );
+                    }
+                    let audit = run_audits(
+                        &self.audit_ctx(&closure),
+                        ModelView::Base(&self.state.params),
+                    )?;
+                    if audit.pass() {
+                        self.append_manifest(
+                            req,
+                            &closure,
+                            expanded,
+                            ActionKind::RecentRevert,
+                            details.clone(),
+                            Some(&audit),
+                        )?;
+                        return Ok(ControllerOutcome {
+                            action: ActionKind::RecentRevert,
+                            closure_size: closure.len(),
+                            closure_expanded: expanded,
+                            audit: Some(audit),
+                            escalations,
+                            details,
+                            executed: true,
+                        });
+                    }
+                    escalations.push("revert audit failed".into());
+                }
+            }
+        }
+
+        // ---- path 3: urgent hot path ----------------------------------
+        if req.urgency == Urgency::High {
+            if let Some(fisher) = self.fisher.clone() {
+                let mut candidate = self.state.clone();
+                let hp_out = hot_path_unlearn(
+                    self.rt,
+                    &self.corpus,
+                    &mut candidate,
+                    &fisher,
+                    &closure_set,
+                    &self.retain_ids,
+                    &self.hot_path,
+                    self.audit_seed,
+                )?;
+                let audit = run_audits(
+                    &self.audit_ctx(&closure),
+                    ModelView::Base(&candidate.params),
+                )?;
+                let mut details = Json::obj();
+                details
+                    .set("anti_steps", hp_out.anti_steps_applied)
+                    .set("backtracks", hp_out.backtracks)
+                    .set("forget_loss_before", hp_out.forget_loss_before)
+                    .set("forget_loss_after", hp_out.forget_loss_after);
+                if audit.pass() {
+                    self.state = candidate;
+                    self.append_manifest(
+                        req,
+                        &closure,
+                        expanded,
+                        ActionKind::HotPathAntiUpdate,
+                        details.clone(),
+                        Some(&audit),
+                    )?;
+                    return Ok(ControllerOutcome {
+                        action: ActionKind::HotPathAntiUpdate,
+                        closure_size: closure.len(),
+                        closure_expanded: expanded,
+                        audit: Some(audit),
+                        escalations,
+                        details,
+                        executed: true,
+                    });
+                }
+                escalations
+                    .push("hot-path audit failed — escalating to replay".into());
+            } else {
+                escalations.push("no fisher cache — hot path unavailable".into());
+            }
+        }
+
+        // ---- path 4: exact replay (default) ---------------------------
+        let store = CheckpointStore::open(
+            &self.cfg.run_dir.join("ckpt"),
+            self.cfg.checkpoint_keep,
+        )?;
+        // nearest checkpoint at or before the first forget influence
+        let k = store
+            .nearest_at_or_before(min_offending)?
+            .ok_or_else(|| {
+                anyhow::anyhow!(
+                    "no checkpoint precedes step {min_offending} — cannot \
+                     satisfy the exactness precondition (fail-closed)"
+                )
+            })?;
+        let ck = store.load_full(k)?;
+        let outcome = replay_filter(
+            self.rt,
+            &self.corpus,
+            &ck,
+            &self.records,
+            &self.idmap,
+            &closure_set,
+            Some(&self.pins),
+            &ReplayOptions::default(),
+        )?;
+        self.state = outcome.state;
+        let audit = run_audits(
+            &self.audit_ctx(&closure),
+            ModelView::Base(&self.state.params),
+        )?;
+        let mut details = Json::obj();
+        details
+            .set("from_checkpoint", k)
+            .set("applied_steps", outcome.invariants.applied_steps)
+            .set(
+                "empty_logical_steps",
+                outcome.invariants.empty_logical_steps,
+            )
+            .set(
+                "skipped_microbatches",
+                outcome.invariants.skipped_microbatches,
+            );
+        self.append_manifest(
+            req,
+            &closure,
+            expanded,
+            ActionKind::ExactReplay,
+            details.clone(),
+            Some(&audit),
+        )?;
+        Ok(ControllerOutcome {
+            action: ActionKind::ExactReplay,
+            closure_size: closure.len(),
+            closure_expanded: expanded,
+            audit: Some(audit),
+            escalations,
+            details,
+            executed: true,
+        })
+    }
+}

@@ -1,0 +1,327 @@
+//! Curvature-guided audited hot path (paper §4.2(iii), Eq. 5, Alg. A.4).
+//!
+//! Maintains a **diagonal Fisher cache** `F̂[i] = E[g_i²]` accumulated
+//! from per-microbatch gradients, and applies damped curvature-
+//! preconditioned **anti-updates**
+//!
+//! ```text
+//! δθ = +η (F̂ + λI)^{-1} Σ_{(x,y)∈cl(F)} ∇θ ℓ(θ; x, y)
+//! ```
+//!
+//! with a trust region ‖δθ‖_F̂ ≤ τ and backtracking (halve η until the
+//! step fits and the forget loss increases), followed by a short
+//! retain-tune (reduction=sum).  Always audit-gated; the controller
+//! escalates to exact replay on failure.
+
+use std::collections::HashSet;
+
+use crate::checkpoint::TrainState;
+use crate::data::corpus::Corpus;
+use crate::runtime::Runtime;
+use crate::trainer::{accumulate, build_microbatch_tensors};
+
+/// Diagonal Fisher approximation over the flat parameter vector.
+#[derive(Debug, Clone)]
+pub struct FisherCache {
+    /// Running mean of squared gradients.
+    pub diag: Vec<f32>,
+    samples: u64,
+}
+
+impl FisherCache {
+    pub fn new(param_count: usize) -> FisherCache {
+        FisherCache {
+            diag: vec![0.0; param_count],
+            samples: 0,
+        }
+    }
+
+    /// Accumulate one gradient sample (running mean of g²).
+    pub fn update(&mut self, grad: &[f32]) {
+        assert_eq!(grad.len(), self.diag.len());
+        self.samples += 1;
+        let w = 1.0 / self.samples as f32;
+        for (d, g) in self.diag.iter_mut().zip(grad) {
+            *d += w * (g * g - *d);
+        }
+    }
+
+    pub fn samples(&self) -> u64 {
+        self.samples
+    }
+
+    /// Estimate the cache from the current model over a sample of IDs.
+    pub fn estimate(
+        rt: &Runtime,
+        corpus: &Corpus,
+        params: &[f32],
+        ids: &[u64],
+        seed: u64,
+    ) -> anyhow::Result<FisherCache> {
+        let man = &rt.manifest;
+        let mut cache = FisherCache::new(man.param_count);
+        for (i, chunk) in ids.chunks(man.batch).enumerate() {
+            let (tokens, mask, retained) = build_microbatch_tensors(
+                corpus,
+                chunk,
+                man.batch,
+                man.seq_len,
+                |_| false,
+                false,
+            )?;
+            if retained == 0 {
+                continue;
+            }
+            let out = rt.train_step(
+                params,
+                &tokens,
+                &mask,
+                (seed as i32).wrapping_add(i as i32),
+            )?;
+            cache.update(&out.grad);
+        }
+        Ok(cache)
+    }
+}
+
+/// Anti-update hyperparameters (Alg. A.4 inputs).
+#[derive(Debug, Clone)]
+pub struct HotPathParams {
+    /// Anti-update step size η.
+    pub eta: f32,
+    /// Damping λ.
+    pub damping: f32,
+    /// Trust-region radius τ in the F̂-norm.
+    pub trust_radius: f32,
+    /// Max anti-update steps S.
+    pub max_steps: usize,
+    /// Retain-tune steps T_R.
+    pub retain_steps: usize,
+    /// Retain-tune LR η_R.
+    pub retain_lr: f32,
+    /// Max backtracking halvings per anti-step.
+    pub max_backtracks: usize,
+}
+
+impl Default for HotPathParams {
+    fn default() -> Self {
+        HotPathParams {
+            eta: 0.5,
+            damping: 1e-4,
+            trust_radius: 1.0,
+            max_steps: 4,
+            retain_steps: 8,
+            retain_lr: 1e-4,
+            max_backtracks: 6,
+        }
+    }
+}
+
+/// What the hot path did (manifest details + EXPERIMENTS.md rows).
+#[derive(Debug, Clone)]
+pub struct HotPathOutcome {
+    pub anti_steps_applied: usize,
+    pub backtracks: usize,
+    pub forget_loss_before: f32,
+    pub forget_loss_after: f32,
+    pub retain_steps: usize,
+}
+
+/// Sum loss over the closure under current params.
+fn forget_loss(
+    rt: &Runtime,
+    corpus: &Corpus,
+    params: &[f32],
+    ids: &[u64],
+    seed: i32,
+) -> anyhow::Result<f32> {
+    let man = &rt.manifest;
+    let mut total = 0.0f32;
+    for chunk in ids.chunks(man.batch) {
+        let (tokens, mask, retained) = build_microbatch_tensors(
+            corpus, chunk, man.batch, man.seq_len, |_| false, false,
+        )?;
+        if retained == 0 {
+            continue;
+        }
+        let out = rt.train_step(params, &tokens, &mask, seed)?;
+        total += out.loss_sum;
+    }
+    Ok(total)
+}
+
+/// Gradient of the forget loss (summed over cl(F)).
+fn forget_grad(
+    rt: &Runtime,
+    corpus: &Corpus,
+    params: &[f32],
+    ids: &[u64],
+    seed: i32,
+) -> anyhow::Result<Vec<f32>> {
+    let man = &rt.manifest;
+    let mut acc = vec![0.0f32; man.param_count];
+    for chunk in ids.chunks(man.batch) {
+        let (tokens, mask, retained) = build_microbatch_tensors(
+            corpus, chunk, man.batch, man.seq_len, |_| false, false,
+        )?;
+        if retained == 0 {
+            continue;
+        }
+        let out = rt.train_step(params, &tokens, &mask, seed)?;
+        accumulate(&mut acc, &out.grad);
+    }
+    Ok(acc)
+}
+
+/// ‖δ‖_F̂ = sqrt(Σ F̂_i δ_i²)
+fn fisher_norm(fisher: &FisherCache, delta: &[f32], damping: f32) -> f32 {
+    delta
+        .iter()
+        .zip(&fisher.diag)
+        .map(|(d, f)| (f + damping) * d * d)
+        .sum::<f32>()
+        .sqrt()
+}
+
+/// HOTPATHUNLEARN (Alg. A.4): curvature anti-update + retain-tune.
+/// Mutates `state.params` (optimizer moments untouched — this is a
+/// temporary audit-equivalent model, not a training continuation).
+pub fn hot_path_unlearn(
+    rt: &Runtime,
+    corpus: &Corpus,
+    state: &mut TrainState,
+    fisher: &FisherCache,
+    closure: &HashSet<u64>,
+    retain_ids: &[u64],
+    hp: &HotPathParams,
+    seed: u64,
+) -> anyhow::Result<HotPathOutcome> {
+    let ids: Vec<u64> = {
+        let mut v: Vec<u64> = closure.iter().copied().collect();
+        v.sort_unstable();
+        v
+    };
+    anyhow::ensure!(!ids.is_empty(), "empty forget closure");
+    let seed32 = seed as i32;
+    let before = forget_loss(rt, corpus, &state.params, &ids, seed32)?;
+    let mut current = before;
+    let mut applied = 0usize;
+    let mut backtracks = 0usize;
+
+    for s in 0..hp.max_steps {
+        let g = forget_grad(rt, corpus, &state.params, &ids, seed32 + s as i32)?;
+        // δθ = +η (F̂+λI)^{-1} g  (ascent on the forget loss)
+        let mut eta = hp.eta;
+        let mut accepted = false;
+        for _ in 0..=hp.max_backtracks {
+            let delta: Vec<f32> = g
+                .iter()
+                .zip(&fisher.diag)
+                .map(|(gi, fi)| eta * gi / (fi + hp.damping))
+                .collect();
+            if fisher_norm(fisher, &delta, hp.damping) > hp.trust_radius {
+                eta *= 0.5;
+                backtracks += 1;
+                continue;
+            }
+            let cand: Vec<f32> = state
+                .params
+                .iter()
+                .zip(&delta)
+                .map(|(p, d)| p + d)
+                .collect();
+            let cand_loss = forget_loss(rt, corpus, &cand, &ids, seed32)?;
+            if cand_loss.is_finite() && cand_loss > current {
+                state.params = cand;
+                current = cand_loss;
+                accepted = true;
+                applied += 1;
+                break;
+            }
+            eta *= 0.5;
+            backtracks += 1;
+        }
+        if !accepted {
+            break; // trust region exhausted
+        }
+    }
+
+    // short retain-tune (reduction=sum), optimizer-stateless SGD-like
+    // pass through AdamW with fresh moments at low LR
+    let mut m = vec![0.0f32; state.params.len()];
+    let mut v = vec![0.0f32; state.params.len()];
+    let mut rng = crate::util::rng::SplitMix64::new(seed ^ 0x9E7A);
+    for t in 0..hp.retain_steps {
+        let take = rt.manifest.batch.min(retain_ids.len());
+        let chunk: Vec<u64> = (0..take)
+            .map(|_| retain_ids[rng.below(retain_ids.len() as u64) as usize])
+            .collect();
+        let (tokens, mask, retained) = build_microbatch_tensors(
+            corpus, &chunk, rt.manifest.batch, rt.manifest.seq_len,
+            |_| false, false,
+        )?;
+        if retained == 0 {
+            continue;
+        }
+        let out = rt.train_step(&state.params, &tokens, &mask,
+                                seed32 + 1000 + t as i32)?;
+        let (p, m2, v2) = rt.adamw_update(
+            &state.params,
+            &out.grad,
+            &m,
+            &v,
+            t as i32 + 1,
+            hp.retain_lr,
+        )?;
+        state.params = p;
+        m = m2;
+        v = v2;
+    }
+
+    Ok(HotPathOutcome {
+        anti_steps_applied: applied,
+        backtracks,
+        forget_loss_before: before,
+        forget_loss_after: current,
+        retain_steps: hp.retain_steps,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::for_all;
+
+    #[test]
+    fn fisher_running_mean() {
+        let mut f = FisherCache::new(3);
+        f.update(&[1.0, 2.0, 0.0]);
+        f.update(&[3.0, 0.0, 0.0]);
+        assert_eq!(f.samples(), 2);
+        assert!((f.diag[0] - 5.0).abs() < 1e-6); // (1+9)/2
+        assert!((f.diag[1] - 2.0).abs() < 1e-6); // (4+0)/2
+        assert_eq!(f.diag[2], 0.0);
+    }
+
+    #[test]
+    fn fisher_norm_weights_by_curvature() {
+        let mut f = FisherCache::new(2);
+        f.update(&[2.0, 0.0]);
+        let d = vec![1.0, 1.0];
+        let n = fisher_norm(&f, &d, 0.0);
+        assert!((n - 2.0).abs() < 1e-6); // sqrt(4*1 + 0*1)
+    }
+
+    #[test]
+    fn prop_fisher_diag_nonnegative() {
+        for_all("fisher diag >= 0", |rng| {
+            let n = rng.below(100) as usize + 1;
+            let mut f = FisherCache::new(n);
+            for _ in 0..rng.below(10) + 1 {
+                let g = crate::util::prop::f32_vec(rng, n, 3.0);
+                f.update(&g);
+            }
+            assert!(f.diag.iter().all(|&x| x >= 0.0));
+        });
+    }
+}

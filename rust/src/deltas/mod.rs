@@ -1,0 +1,330 @@
+//! Dense per-step delta ring buffer — exact recent reverts (paper G3,
+//! Alg. A.3, Tables 3 & 8).
+//!
+//! Two patch constructions, both proven exact in Theorem A.11:
+//! - **XOR patches** over the raw f32 bit patterns: bitwise-exact revert
+//!   (⊕ is its own inverse), including optimizer tensors when enabled.
+//! - **Arithmetic deltas** `Δ_t = fl(θ_{t+1} − θ_t)`: numerically exact
+//!   up to one rounding per step (O(u·ulp) backward error).
+//!
+//! Patches are losslessly compressed (byte-plane + DEFLATE, see
+//! `util::compress`) — compression never alters bit patterns.
+
+use std::collections::VecDeque;
+
+use crate::checkpoint::TrainState;
+use crate::util::bytes::{f32s_to_bytes, xor_in_place};
+use crate::util::compress::{compress_delta, decompress_delta};
+
+/// Patch construction mode (Alg. A.3 input).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PatchMode {
+    /// Bitwise XOR over raw dtype bit patterns — revert is bit-exact.
+    Xor,
+    /// Arithmetic f32 deltas — revert exact up to rounding.
+    Arithmetic,
+}
+
+/// One stored per-step patch (possibly covering optimizer tensors).
+struct Patch {
+    /// Logical step this patch transitions FROM->TO (t -> t+1).
+    step: u32,
+    params: Vec<u8>, // compressed
+    m: Option<Vec<u8>>,
+    v: Option<Vec<u8>>,
+    raw_len: usize,
+    compressed_len: usize,
+}
+
+/// Ring buffer of the last N per-step patches.
+pub struct DeltaRing {
+    pub mode: PatchMode,
+    pub window: usize,
+    pub revert_optimizer: bool,
+    ring: VecDeque<Patch>,
+    param_count: usize,
+}
+
+/// Budget accounting for Table 8.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RingBudget {
+    pub per_step_bytes_raw: usize,
+    pub window: usize,
+    pub pre_compress_total: usize,
+    pub stored_bytes: usize,
+    pub compress_ratio: f64,
+}
+
+impl DeltaRing {
+    pub fn new(
+        param_count: usize,
+        window: usize,
+        mode: PatchMode,
+        revert_optimizer: bool,
+    ) -> DeltaRing {
+        DeltaRing {
+            mode,
+            window: window.max(1),
+            revert_optimizer,
+            ring: VecDeque::new(),
+            param_count,
+        }
+    }
+
+    fn make_patch(&self, before: &[f32], after: &[f32]) -> Vec<u8> {
+        assert_eq!(before.len(), after.len());
+        let raw = match self.mode {
+            PatchMode::Xor => {
+                let mut b = f32s_to_bytes(after);
+                xor_in_place(&mut b, &f32s_to_bytes(before));
+                b
+            }
+            PatchMode::Arithmetic => {
+                let delta: Vec<f32> = after
+                    .iter()
+                    .zip(before)
+                    .map(|(a, b)| a - b) // fl(θ_{t+1} − θ_t)
+                    .collect();
+                f32s_to_bytes(&delta)
+            }
+        };
+        compress_delta(&raw)
+    }
+
+    fn apply_patch(&self, patch: &[u8], current: &mut [f32]) -> anyhow::Result<()> {
+        let raw = decompress_delta(patch, current.len() * 4)?;
+        match self.mode {
+            PatchMode::Xor => {
+                let mut bytes = f32s_to_bytes(current);
+                xor_in_place(&mut bytes, &raw);
+                for (dst, chunk) in
+                    current.iter_mut().zip(bytes.chunks_exact(4))
+                {
+                    *dst = f32::from_le_bytes(chunk.try_into().unwrap());
+                }
+            }
+            PatchMode::Arithmetic => {
+                let delta = crate::util::bytes::bytes_to_f32s(&raw)?;
+                for (c, d) in current.iter_mut().zip(&delta) {
+                    *c -= d; // fl(θ − Δ_t)
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Record the transition `before -> after` for step `before.logical_step`.
+    pub fn record(&mut self, before: &TrainState, after: &TrainState) {
+        debug_assert_eq!(before.params.len(), self.param_count);
+        let params = self.make_patch(&before.params, &after.params);
+        let (m, v) = if self.revert_optimizer {
+            (
+                Some(self.make_patch(&before.m, &after.m)),
+                Some(self.make_patch(&before.v, &after.v)),
+            )
+        } else {
+            (None, None)
+        };
+        let compressed_len = params.len()
+            + m.as_ref().map(|x| x.len()).unwrap_or(0)
+            + v.as_ref().map(|x| x.len()).unwrap_or(0);
+        let raw_len = self.param_count * 4 * if self.revert_optimizer { 3 } else { 1 };
+        self.ring.push_back(Patch {
+            step: before.logical_step,
+            params,
+            m,
+            v,
+            raw_len,
+            compressed_len,
+        });
+        while self.ring.len() > self.window {
+            self.ring.pop_front();
+        }
+    }
+
+    /// How many trailing steps can currently be reverted.
+    pub fn available(&self) -> usize {
+        self.ring.len()
+    }
+
+    /// Earliest step still revertible (the ring's reach).
+    pub fn earliest_step(&self) -> Option<u32> {
+        self.ring.front().map(|p| p.step)
+    }
+
+    /// Latest recorded transition step.
+    pub fn latest_step(&self) -> Option<u32> {
+        self.ring.back().map(|p| p.step)
+    }
+
+    /// Revert the last `u` steps in place (Alg. A.3).  Patches are popped:
+    /// after reverting, those steps are no longer in the ring (they no
+    /// longer lie "in the past" of the current state).
+    pub fn revert(&mut self, state: &mut TrainState, u: usize) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            u <= self.ring.len(),
+            "revert window exceeded: requested {u}, available {}",
+            self.ring.len()
+        );
+        for _ in 0..u {
+            let patch = self.ring.pop_back().expect("checked length");
+            self.apply_patch(&patch.params, &mut state.params)?;
+            if self.revert_optimizer {
+                if let (Some(pm), Some(pv)) = (&patch.m, &patch.v) {
+                    self.apply_patch(pm, &mut state.m)?;
+                    self.apply_patch(pv, &mut state.v)?;
+                    state.applied_updates =
+                        state.applied_updates.saturating_sub(1);
+                }
+            }
+            state.logical_step = patch.step;
+        }
+        Ok(())
+    }
+
+    /// Table 8 accounting.
+    pub fn budget(&self) -> RingBudget {
+        let per_step_raw = self
+            .ring
+            .back()
+            .map(|p| p.raw_len)
+            .unwrap_or(self.param_count * 4);
+        let stored: usize = self.ring.iter().map(|p| p.compressed_len).sum();
+        let pre: usize = self.ring.iter().map(|p| p.raw_len).sum();
+        RingBudget {
+            per_step_bytes_raw: per_step_raw,
+            window: self.window,
+            pre_compress_total: pre,
+            stored_bytes: stored,
+            compress_ratio: if pre > 0 {
+                stored as f64 / pre as f64
+            } else {
+                0.0
+            },
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::bytes::bits_equal;
+    use crate::util::prop::{f32_vec, f32_vec_adversarial, for_all};
+    use crate::util::rng::SplitMix64;
+
+    fn walk(seed: u64, n: usize, steps: usize) -> Vec<TrainState> {
+        let mut r = SplitMix64::new(seed);
+        let mut s = TrainState::zeros_like(f32_vec(&mut r, n, 1.0));
+        s.m = f32_vec(&mut r, n, 0.01);
+        s.v = f32_vec(&mut r, n, 0.01)
+            .into_iter()
+            .map(f32::abs)
+            .collect();
+        let mut states = vec![s.clone()];
+        for t in 0..steps {
+            for i in 0..n {
+                s.params[i] += r.normal() as f32 * 1e-3;
+                s.m[i] = 0.9 * s.m[i] + r.normal() as f32 * 1e-4;
+                s.v[i] = (0.999 * s.v[i] + 1e-6).abs();
+            }
+            s.applied_updates += 1;
+            s.logical_step = t as u32 + 1;
+            states.push(s.clone());
+        }
+        states
+    }
+
+    #[test]
+    fn xor_revert_is_bitwise_exact() {
+        let states = walk(1, 500, 10);
+        let mut ring = DeltaRing::new(500, 16, PatchMode::Xor, true);
+        for w in states.windows(2) {
+            ring.record(&w[0], &w[1]);
+        }
+        let mut cur = states.last().unwrap().clone();
+        ring.revert(&mut cur, 4).unwrap();
+        assert!(cur.bits_equal(&states[states.len() - 5]), "G3(a)");
+    }
+
+    #[test]
+    fn arithmetic_revert_is_close() {
+        let states = walk(2, 500, 8);
+        let mut ring = DeltaRing::new(500, 16, PatchMode::Arithmetic, false);
+        for w in states.windows(2) {
+            ring.record(&w[0], &w[1]);
+        }
+        let mut cur = states.last().unwrap().clone();
+        ring.revert(&mut cur, 8).unwrap();
+        let target = &states[0];
+        let diff = crate::util::bytes::max_abs_diff(&cur.params, &target.params);
+        // O(u·ulp) per Theorem A.11(b)
+        assert!(diff <= 8.0 * f32::EPSILON * 4.0, "diff {diff}");
+    }
+
+    #[test]
+    fn window_slides() {
+        let states = walk(3, 100, 20);
+        let mut ring = DeltaRing::new(100, 5, PatchMode::Xor, true);
+        for w in states.windows(2) {
+            ring.record(&w[0], &w[1]);
+        }
+        assert_eq!(ring.available(), 5);
+        assert_eq!(ring.earliest_step(), Some(15));
+        let mut cur = states.last().unwrap().clone();
+        assert!(ring.revert(&mut cur, 6).is_err(), "beyond window");
+        ring.revert(&mut cur, 5).unwrap();
+        assert!(cur.bits_equal(&states[15]));
+    }
+
+    #[test]
+    fn xor_exact_on_adversarial_bits() {
+        for_all("xor revert nan/inf/denormal", |rng| {
+            let n = rng.below(300) as usize + 1;
+            let mut s0 = TrainState::zeros_like(f32_vec_adversarial(rng, n));
+            s0.m = f32_vec_adversarial(rng, n);
+            s0.v = f32_vec_adversarial(rng, n);
+            let mut s1 = s0.clone();
+            s1.params = f32_vec_adversarial(rng, n);
+            s1.m = f32_vec_adversarial(rng, n);
+            s1.v = f32_vec_adversarial(rng, n);
+            s1.applied_updates = 1;
+            s1.logical_step = 1;
+            let mut ring = DeltaRing::new(n, 4, PatchMode::Xor, true);
+            ring.record(&s0, &s1);
+            let mut cur = s1.clone();
+            ring.revert(&mut cur, 1).unwrap();
+            assert!(bits_equal(&cur.params, &s0.params));
+            assert!(bits_equal(&cur.m, &s0.m));
+            assert!(bits_equal(&cur.v, &s0.v));
+        });
+    }
+
+    #[test]
+    fn budget_reports_table8_fields() {
+        let states = walk(4, 1000, 16);
+        let mut ring = DeltaRing::new(1000, 16, PatchMode::Xor, false);
+        for w in states.windows(2) {
+            ring.record(&w[0], &w[1]);
+        }
+        let b = ring.budget();
+        assert_eq!(b.window, 16);
+        assert_eq!(b.per_step_bytes_raw, 4000);
+        assert_eq!(b.pre_compress_total, 16 * 4000);
+        assert!(b.compress_ratio > 0.0 && b.compress_ratio <= 1.2);
+    }
+
+    #[test]
+    fn revert_pops_consumed_patches() {
+        let states = walk(5, 50, 6);
+        let mut ring = DeltaRing::new(50, 8, PatchMode::Xor, true);
+        for w in states.windows(2) {
+            ring.record(&w[0], &w[1]);
+        }
+        let mut cur = states.last().unwrap().clone();
+        ring.revert(&mut cur, 2).unwrap();
+        assert_eq!(ring.available(), 4);
+        ring.revert(&mut cur, 4).unwrap();
+        assert!(cur.bits_equal(&states[0]));
+        assert_eq!(ring.available(), 0);
+    }
+}

@@ -1,0 +1,247 @@
+//! Equality-proof artifact (paper §5 "Equality proof artifact", Table 5).
+//!
+//! When the replay precondition holds, we emit a compact JSON proof
+//! recording model/optimizer state hashes for oracle and replay (which
+//! must match), per-component optimizer equality flags, both runs'
+//! traversal invariants, and the WAL segment integrity hashes.
+
+use std::path::Path;
+
+use crate::checkpoint::TrainState;
+use crate::replay::ReplayInvariants;
+use crate::util::bytes::{bits_equal, max_abs_diff};
+use crate::util::json::Json;
+
+/// The Table 5 artifact.
+#[derive(Debug, Clone)]
+pub struct EqualityProof {
+    pub status_pass: bool,
+    pub model_hash_oracle: String,
+    pub model_hash_replay: String,
+    pub optimizer_hash_oracle: String,
+    pub optimizer_hash_replay: String,
+    pub exp_avg_equal: bool,
+    pub exp_avg_sq_equal: bool,
+    pub step_equal: bool,
+    pub max_abs_diff: f32,
+    pub replay_invariants: ReplayInvariants,
+    pub oracle_invariants: ReplayInvariants,
+    pub wal_segment_shas: Vec<String>,
+}
+
+impl EqualityProof {
+    /// Compare an oracle retrain against a replay (bit-level, G1).
+    pub fn build(
+        oracle: &TrainState,
+        replay: &TrainState,
+        oracle_inv: ReplayInvariants,
+        replay_inv: ReplayInvariants,
+        wal_segment_shas: Vec<String>,
+    ) -> EqualityProof {
+        let model_equal = bits_equal(&oracle.params, &replay.params);
+        let exp_avg_equal = bits_equal(&oracle.m, &replay.m);
+        let exp_avg_sq_equal = bits_equal(&oracle.v, &replay.v);
+        let step_equal = oracle.applied_updates == replay.applied_updates;
+        EqualityProof {
+            status_pass: model_equal
+                && exp_avg_equal
+                && exp_avg_sq_equal
+                && step_equal,
+            model_hash_oracle: oracle.model_hash(),
+            model_hash_replay: replay.model_hash(),
+            optimizer_hash_oracle: oracle.optimizer_hash(),
+            optimizer_hash_replay: replay.optimizer_hash(),
+            exp_avg_equal,
+            exp_avg_sq_equal,
+            step_equal,
+            max_abs_diff: max_abs_diff(&oracle.params, &replay.params),
+            replay_invariants: replay_inv,
+            oracle_invariants: oracle_inv,
+            wal_segment_shas,
+        }
+    }
+
+    fn inv_json(inv: &ReplayInvariants) -> Json {
+        let mut j = Json::obj();
+        j.set("applied_steps", inv.applied_steps)
+            .set("empty_logical_steps", inv.empty_logical_steps)
+            .set("records", inv.records)
+            .set("skipped_microbatches", inv.skipped_microbatches);
+        if let Some((a, b)) = inv.logical_range {
+            j.set("logical_range", Json::Arr(vec![a.into(), b.into()]));
+        }
+        j
+    }
+
+    /// The `equality_proof_v2.json` document of §6.2.
+    pub fn to_json(&self) -> Json {
+        let mut j = Json::obj();
+        j.set("status", if self.status_pass { "PASS" } else { "FAIL" })
+            .set("model_hash_oracle", self.model_hash_oracle.as_str())
+            .set("model_hash_replay", self.model_hash_replay.as_str())
+            .set(
+                "optimizer_hash_oracle",
+                self.optimizer_hash_oracle.as_str(),
+            )
+            .set(
+                "optimizer_hash_replay",
+                self.optimizer_hash_replay.as_str(),
+            )
+            .set("exp_avg_equal", self.exp_avg_equal)
+            .set("exp_avg_sq_equal", self.exp_avg_sq_equal)
+            .set("step_equal", self.step_equal)
+            .set("max_abs_diff", self.max_abs_diff as f64)
+            .set("replay_invariants", Self::inv_json(&self.replay_invariants))
+            .set("oracle_invariants", Self::inv_json(&self.oracle_invariants))
+            .set(
+                "wal_segment_sha256",
+                Json::Arr(
+                    self.wal_segment_shas
+                        .iter()
+                        .map(|s| Json::Str(s.clone()))
+                        .collect(),
+                ),
+            );
+        j
+    }
+
+    pub fn save(&self, path: &Path) -> anyhow::Result<()> {
+        std::fs::write(path, self.to_json().pretty())?;
+        Ok(())
+    }
+
+    /// Human-readable Table 5 rendering.
+    pub fn render_table5(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&format!(
+            "Status                         | {}\n",
+            if self.status_pass { "PASS" } else { "FAIL" }
+        ));
+        out.push_str(&format!(
+            "Model hash (oracle = replay)   | {} / {}\n",
+            self.model_hash_oracle, self.model_hash_replay
+        ));
+        out.push_str(&format!(
+            "Optimizer hash (oracle=replay) | {} / {}\n",
+            self.optimizer_hash_oracle, self.optimizer_hash_replay
+        ));
+        out.push_str(&format!(
+            "Optimizer components equal     | exp_avg={}, exp_avg_sq={}, step={}\n",
+            self.exp_avg_equal, self.exp_avg_sq_equal, self.step_equal
+        ));
+        out.push_str(&format!(
+            "Replay invariants              | applied steps = {} (range {:?})\n",
+            self.replay_invariants.applied_steps,
+            self.replay_invariants.logical_range
+        ));
+        out.push_str(&format!(
+            "Oracle invariants              | applied steps = {}, empty logical steps = {}, range {:?}\n",
+            self.oracle_invariants.applied_steps,
+            self.oracle_invariants.empty_logical_steps,
+            self.oracle_invariants.logical_range
+        ));
+        out.push_str(&format!(
+            "WAL segment SHA-256            | {}\n",
+            self.wal_segment_shas.first().map(|s| &s[..16.min(s.len())])
+                .unwrap_or("-")
+        ));
+        out
+    }
+}
+
+/// Collect the per-segment SHA-256 values of a run's WAL.
+pub fn wal_segment_shas(wal_dir: &Path) -> anyhow::Result<Vec<String>> {
+    let mut out = Vec::new();
+    let mut paths: Vec<_> = std::fs::read_dir(wal_dir)?
+        .filter_map(|e| e.ok().map(|e| e.path()))
+        .filter(|p| p.to_string_lossy().ends_with(".seg.sum"))
+        .collect();
+    paths.sort();
+    for p in paths {
+        let j = crate::util::json::parse(&std::fs::read_to_string(&p)?)
+            .map_err(|e| anyhow::anyhow!("{e}"))?;
+        if let Some(s) = j.get("sha256").and_then(|v| v.as_str()) {
+            out.push(s.to_string());
+        }
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn state(bump: bool) -> TrainState {
+        let mut s = TrainState::zeros_like(vec![1.0, 2.0, 3.0]);
+        s.m = vec![0.1, 0.2, 0.3];
+        s.v = vec![0.01, 0.02, 0.03];
+        s.applied_updates = 5;
+        if bump {
+            s.params[1] = f32::from_bits(s.params[1].to_bits() ^ 1);
+        }
+        s
+    }
+
+    #[test]
+    fn identical_states_pass() {
+        let proof = EqualityProof::build(
+            &state(false),
+            &state(false),
+            ReplayInvariants::default(),
+            ReplayInvariants::default(),
+            vec!["abc".into()],
+        );
+        assert!(proof.status_pass);
+        assert_eq!(proof.model_hash_oracle, proof.model_hash_replay);
+        assert_eq!(proof.max_abs_diff, 0.0);
+        let j = proof.to_json();
+        assert_eq!(j.get("status").unwrap().as_str(), Some("PASS"));
+        assert_eq!(j.get("exp_avg_equal").unwrap().as_bool(), Some(true));
+    }
+
+    #[test]
+    fn single_ulp_flip_fails() {
+        let proof = EqualityProof::build(
+            &state(false),
+            &state(true),
+            ReplayInvariants::default(),
+            ReplayInvariants::default(),
+            vec![],
+        );
+        assert!(!proof.status_pass);
+        assert_ne!(proof.model_hash_oracle, proof.model_hash_replay);
+        assert!(proof.max_abs_diff > 0.0);
+        // optimizer still matches component-wise
+        assert!(proof.exp_avg_equal && proof.exp_avg_sq_equal && proof.step_equal);
+    }
+
+    #[test]
+    fn step_counter_mismatch_fails() {
+        let mut r = state(false);
+        r.applied_updates = 6;
+        let proof = EqualityProof::build(
+            &state(false),
+            &r,
+            ReplayInvariants::default(),
+            ReplayInvariants::default(),
+            vec![],
+        );
+        assert!(!proof.status_pass);
+        assert!(!proof.step_equal);
+    }
+
+    #[test]
+    fn render_includes_table5_rows() {
+        let proof = EqualityProof::build(
+            &state(false),
+            &state(false),
+            ReplayInvariants::default(),
+            ReplayInvariants::default(),
+            vec!["deadbeefdeadbeefdeadbeef".into()],
+        );
+        let t = proof.render_table5();
+        assert!(t.contains("Status"));
+        assert!(t.contains("PASS"));
+        assert!(t.contains("exp_avg=true"));
+    }
+}

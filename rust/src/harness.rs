@@ -1,0 +1,183 @@
+//! Shared experiment harness used by examples, benches and integration
+//! tests: builds a trained [`UnlearnSystem`] from scratch (artifacts →
+//! runtime → corpus → training run → controller state) with small
+//! defaults so every paper experiment starts from the same scaffolding.
+
+use std::collections::HashSet;
+use std::path::{Path, PathBuf};
+
+use crate::adapters::AdapterRegistry;
+use crate::audit::AuditThresholds;
+use crate::checkpoint::CheckpointStore;
+use crate::config::RunConfig;
+use crate::controller::UnlearnSystem;
+use crate::curvature::{FisherCache, HotPathParams};
+use crate::data::corpus::{Corpus, CorpusConfig};
+use crate::manifest::ForgetManifest;
+use crate::neardup::closure::build_index;
+use crate::neardup::ClosureParams;
+use crate::replay::load_run;
+use crate::runtime::Runtime;
+use crate::trainer::{TrainOutput, Trainer};
+use crate::util::rng::SplitMix64;
+
+/// Locate the artifacts directory (env `UNLEARN_ARTIFACTS` overrides).
+pub fn artifacts_dir() -> PathBuf {
+    std::env::var("UNLEARN_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|_| {
+            PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+        })
+}
+
+/// Default toy corpus (paper §6 scale: ~2k samples, canaried users 0-4).
+pub fn toy_corpus(seq_len: usize) -> Corpus {
+    Corpus::generate(CorpusConfig {
+        seq_len,
+        ..CorpusConfig::default()
+    })
+}
+
+/// A smaller corpus for fast tests/benches.
+pub fn small_corpus(seq_len: usize) -> Corpus {
+    Corpus::generate(CorpusConfig {
+        n_users: 24,
+        docs_per_user: 4,
+        n_canary_users: 2,
+        canaries_per_user: 2,
+        near_dup_rate: 0.08,
+        seq_len,
+        seed: 7,
+    })
+}
+
+/// Train a run and assemble the full controller system around it.
+pub struct TrainedSystem<'rt> {
+    pub system: UnlearnSystem<'rt>,
+    pub train_output_losses: Vec<(u32, f32)>,
+}
+
+/// Split non-forget IDs into (retain member controls, held-out eval).
+pub fn audit_splits(
+    corpus: &Corpus,
+    forget: &HashSet<u64>,
+    seed: u64,
+) -> (Vec<u64>, Vec<u64>) {
+    let mut rng = SplitMix64::new(seed);
+    let mut rest: Vec<u64> = corpus
+        .samples
+        .iter()
+        .map(|s| s.id)
+        .filter(|id| !forget.contains(id))
+        .collect();
+    rng.shuffle(&mut rest);
+    let n_ctl = rest.len().min(48);
+    let n_eval = rest.len().saturating_sub(n_ctl).min(64);
+    let controls = rest[..n_ctl].to_vec();
+    let eval = rest[n_ctl..n_ctl + n_eval].to_vec();
+    (controls, eval)
+}
+
+/// Train (or reuse a cached run dir) and build the system.
+pub fn build_system<'rt>(
+    rt: &'rt Runtime,
+    mut cfg: RunConfig,
+    corpus: Corpus,
+    estimate_fisher: bool,
+) -> anyhow::Result<TrainedSystem<'rt>> {
+    if cfg.run_dir.exists() {
+        std::fs::remove_dir_all(&cfg.run_dir)?;
+    }
+    cfg.artifacts_dir = rt.manifest.dir.clone();
+    let trainer = Trainer::new(rt, cfg.clone(), corpus.clone());
+    let out: TrainOutput = trainer.train(|_| false)?;
+    system_from_run(rt, cfg, corpus, out, estimate_fisher)
+}
+
+/// Assemble the controller system from a finished training run.
+pub fn system_from_run<'rt>(
+    rt: &'rt Runtime,
+    cfg: RunConfig,
+    corpus: Corpus,
+    out: TrainOutput,
+    estimate_fisher: bool,
+) -> anyhow::Result<TrainedSystem<'rt>> {
+    let (records, idmap, pins) = load_run(&cfg.run_dir, cfg.hmac_key.clone())?;
+    let ndindex = build_index(&corpus);
+    let manifest = ForgetManifest::open(
+        &cfg.run_dir.join("forget.manifest"),
+        cfg.hmac_key.as_deref().unwrap_or(b"toy-manifest-key"),
+    )?;
+    let (retain_ids, eval_ids) =
+        audit_splits(&corpus, &HashSet::new(), cfg.run_seed ^ 0xA0D1);
+    let fisher = if estimate_fisher {
+        let sample: Vec<u64> = retain_ids.iter().take(32).copied().collect();
+        Some(FisherCache::estimate(
+            rt,
+            &corpus,
+            &out.state.params,
+            &sample,
+            cfg.run_seed,
+        )?)
+    } else {
+        None
+    };
+    let losses = out.losses.clone();
+    let system = UnlearnSystem {
+        rt,
+        cfg,
+        corpus,
+        state: out.state,
+        ring: out.ring,
+        adapters: AdapterRegistry::new(),
+        fisher,
+        manifest,
+        records,
+        idmap,
+        pins,
+        ndindex,
+        retain_ids,
+        eval_ids,
+        thresholds: AuditThresholds::default(),
+        baseline_ppl: None,
+        closure_params: ClosureParams::default(),
+        hot_path: HotPathParams::default(),
+        resume_after_revert: true,
+        audit_seed: 0xAD17,
+    };
+    Ok(TrainedSystem {
+        system,
+        train_output_losses: losses,
+    })
+}
+
+/// Checkpoint store of a run dir.
+pub fn store_of(run_dir: &Path, keep: usize) -> anyhow::Result<CheckpointStore> {
+    CheckpointStore::open(&run_dir.join("ckpt"), keep)
+}
+
+/// IDs whose *first* WAL occurrence is at or after `step` — candidates
+/// for the controlled G1 experiment (forget influence strictly after
+/// the checkpoint).
+pub fn ids_first_seen_at_or_after(
+    records: &[crate::wal::WalRecord],
+    idmap: &crate::wal::IdMap,
+    step: u32,
+) -> Vec<u64> {
+    use std::collections::HashMap;
+    let mut first: HashMap<u64, u32> = HashMap::new();
+    for rec in records {
+        if let Some(ids) = idmap.lookup(rec.hash64) {
+            for &id in ids {
+                first.entry(id).or_insert(rec.opt_step);
+            }
+        }
+    }
+    let mut out: Vec<u64> = first
+        .into_iter()
+        .filter(|&(_, s)| s >= step)
+        .map(|(id, _)| id)
+        .collect();
+    out.sort_unstable();
+    out
+}

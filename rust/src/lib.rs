@@ -1,0 +1,57 @@
+//! # Unlearning at Scale — Rust coordinator (Layer 3)
+//!
+//! Production-shaped implementation of *"Unlearning at Scale: Implementing
+//! the Right to be Forgotten in Large Language Models"*: training as a
+//! deterministic, write-ahead-logged program so that exact unlearning is
+//! constructive (`ReplayFilter`), plus the paper's operational fast paths
+//! (dense per-step delta reverts, cohort-scoped adapter deletion,
+//! curvature-guided audited anti-update) routed by a controller that
+//! appends every action to a signed forget manifest.
+//!
+//! The compute graphs (model fwd/bwd, fused AdamW) are JAX/Pallas programs
+//! AOT-lowered to HLO text (`make artifacts`) and executed through the
+//! `xla` crate's PJRT CPU client — Python never runs on the request path.
+//!
+//! Module map (see DESIGN.md for the paper-section correspondence):
+//! - [`runtime`]    PJRT executable loading + typed wrappers
+//! - [`wal`]        32-byte microbatch write-ahead log (Def. 1)
+//! - [`trainer`]    deterministic trainer + scheduler (§4.1)
+//! - [`replay`]     `ReplayFilter` (Alg. A.9)
+//! - [`checkpoint`] full/micro checkpoint store
+//! - [`deltas`]     dense per-step delta ring buffer (G3, Alg. A.3)
+//! - [`adapters`]   cohort-scoped LoRA registry (G2, Alg. A.5)
+//! - [`curvature`]  diag-Fisher cache + anti-update hot path (Alg. A.4)
+//! - [`neardup`]    SimHash near-duplicate index + closure (Alg. A.6)
+//! - [`audit`]      MIA / canary exposure / extraction / fuzzy / utility
+//! - [`controller`] path-selection policy (Alg. A.7)
+//! - [`manifest`]   signed, hash-chained forget manifest
+//! - [`cigate`]     determinism/replay CI gate (Alg. 5.1)
+//! - [`equality`]   equality-proof artifact (Table 5)
+//! - [`data`]       tokenizer, synthetic corpus, deterministic sampler
+//! - [`server`]     TCP/JSON admin server for forget requests
+//! - [`config`]     run configuration + reproducibility pins (Table 2)
+//! - [`util`]       hashing, JSON, RNG, compression, CLI, property testing
+
+pub mod adapters;
+pub mod audit;
+pub mod checkpoint;
+pub mod cigate;
+pub mod config;
+pub mod controller;
+pub mod curvature;
+pub mod data;
+pub mod deltas;
+pub mod equality;
+pub mod manifest;
+pub mod metrics;
+pub mod neardup;
+pub mod replay;
+pub mod runtime;
+pub mod server;
+pub mod trainer;
+pub mod util;
+pub mod wal;
+
+/// Crate-wide result type.
+pub type Result<T> = anyhow::Result<T>;
+pub mod harness;

@@ -1,0 +1,293 @@
+//! `unlearn` — leader entrypoint + CLI.
+//!
+//! Subcommands (grows as the system does; see README):
+//!   smoke       load artifacts, run one train_step + update, print hashes
+//!   train       deterministic training run with WAL/checkpoints/ring
+//!   ci-gate     Algorithm 5.1 determinism/replay gate
+//!   pins        print the current environment pins (Table 2)
+//!   wal-scan    WAL integrity scan
+//!   serve       admin server for forget requests
+//!   forget      run the controller on a forget request
+//!   audit       run the audit harness against a checkpoint
+
+use std::collections::HashSet;
+use std::path::PathBuf;
+
+use unlearn::config::RunConfig;
+use unlearn::data::corpus::{Corpus, CorpusConfig};
+use unlearn::runtime::Runtime;
+use unlearn::util::cli::Args;
+
+fn main() {
+    let args = Args::from_env();
+    let code = match run(&args) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            1
+        }
+    };
+    std::process::exit(code);
+}
+
+fn artifacts_dir(args: &Args) -> PathBuf {
+    PathBuf::from(args.get_or("artifacts", "artifacts"))
+}
+
+fn run_config(args: &Args) -> anyhow::Result<RunConfig> {
+    let mut cfg = match args.get("config") {
+        Some(path) => RunConfig::from_json_file(std::path::Path::new(path))?,
+        None => RunConfig::default(),
+    };
+    cfg.artifacts_dir = artifacts_dir(args);
+    if let Some(d) = args.get("run-dir") {
+        cfg.run_dir = PathBuf::from(d);
+    }
+    cfg.steps = args.get_u64("steps", cfg.steps as u64)? as u32;
+    cfg.accum = args.get_usize("accum", cfg.accum)?;
+    cfg.lr = args.get_f32("lr", cfg.lr)?;
+    cfg.warmup = args.get_u64("warmup", cfg.warmup as u64)? as u32;
+    cfg.checkpoint_every =
+        args.get_u64("checkpoint-every", cfg.checkpoint_every as u64)? as u32;
+    cfg.ring_window = args.get_usize("ring-window", cfg.ring_window)?;
+    cfg.run_seed = args.get_u64("seed", cfg.run_seed)?;
+    if let Some(k) = args.get("hmac-key") {
+        cfg.hmac_key = Some(k.as_bytes().to_vec());
+    }
+    Ok(cfg)
+}
+
+fn corpus(args: &Args) -> anyhow::Result<Corpus> {
+    let mut cc = CorpusConfig::default();
+    cc.seq_len = args.get_usize("seq-len", cc.seq_len)?;
+    cc.seed = args.get_u64("corpus-seed", cc.seed)?;
+    Ok(Corpus::generate(cc))
+}
+
+fn run(args: &Args) -> anyhow::Result<()> {
+    match args.subcommand.as_deref() {
+        Some("smoke") => smoke(args),
+        Some("pins") => {
+            let rt = Runtime::load(&artifacts_dir(args))?;
+            let cfg = run_config(args)?;
+            println!("{}", rt.capture_pins(cfg.accum).to_json().pretty());
+            Ok(())
+        }
+        Some("train") => {
+            let rt = Runtime::load(&artifacts_dir(args))?;
+            let cfg = run_config(args)?;
+            let c = corpus(args)?;
+            println!(
+                "training: {} samples, {} steps x {} microbatches",
+                c.len(),
+                cfg.steps,
+                cfg.accum
+            );
+            let out = unlearn::trainer::Trainer::new(&rt, cfg, c).train(|_| false)?;
+            println!(
+                "done: model {}, optimizer {}, applied {}",
+                out.state.model_hash(),
+                out.state.optimizer_hash(),
+                out.state.applied_updates
+            );
+            if let Some((s, l)) = out.losses.last() {
+                println!("final loss/token at step {s}: {l:.4}");
+            }
+            Ok(())
+        }
+        Some("ci-gate") => {
+            let rt = Runtime::load(&artifacts_dir(args))?;
+            let cfg = run_config(args)?;
+            let c = corpus(args)?;
+            let steps = args.get_u64("gate-steps", 20)? as u32;
+            let report = unlearn::cigate::run_gate(&rt, &cfg, &c, steps)?;
+            println!("{}", report.to_json().pretty());
+            anyhow::ensure!(report.pass(), "CI gate FAILED — forgetting blocked");
+            println!("CI gate PASS");
+            Ok(())
+        }
+        Some("wal-scan") => {
+            let cfg = run_config(args)?;
+            let rep = unlearn::wal::integrity::scan(
+                &cfg.run_dir.join("wal"),
+                cfg.hmac_key.as_deref(),
+            )?;
+            println!("{}", rep.to_json().pretty());
+            anyhow::ensure!(rep.ok(), "WAL integrity scan failed");
+            Ok(())
+        }
+        Some("replay") => {
+            let rt = Runtime::load(&artifacts_dir(args))?;
+            let cfg = run_config(args)?;
+            let c = corpus(args)?;
+            let store = unlearn::checkpoint::CheckpointStore::open(
+                &cfg.run_dir.join("ckpt"),
+                cfg.checkpoint_keep,
+            )?;
+            let from_step = args.get_u64("from-step", 0)? as u32;
+            let ck = store.load_full(from_step)?;
+            let (records, idmap, pins) =
+                unlearn::replay::load_run(&cfg.run_dir, cfg.hmac_key.clone())?;
+            let closure: HashSet<u64> = args
+                .get_or("forget-ids", "")
+                .split(',')
+                .filter(|s| !s.is_empty())
+                .map(|s| s.parse().unwrap())
+                .collect();
+            let out = unlearn::replay::replay_filter(
+                &rt,
+                &c,
+                &ck,
+                &records,
+                &idmap,
+                &closure,
+                Some(&pins),
+                &unlearn::replay::ReplayOptions::default(),
+            )?;
+            println!(
+                "replayed: model {}, optimizer {}, applied {}, empty {}",
+                out.state.model_hash(),
+                out.state.optimizer_hash(),
+                out.invariants.applied_steps,
+                out.invariants.empty_logical_steps
+            );
+            Ok(())
+        }
+        Some("serve") => {
+            let rt = Runtime::load(&artifacts_dir(args))?;
+            let cfg = run_config(args)?;
+            let c = corpus(args)?;
+            let addr = args.get_or("addr", "127.0.0.1:7878").to_string();
+            println!("training before serving ...");
+            let trained =
+                unlearn::harness::build_system(&rt, cfg, c, args.flag("fisher"))?;
+            let system =
+                std::sync::Arc::new(std::sync::Mutex::new(trained.system));
+            unlearn::server::serve(system, &addr)
+        }
+        Some("forget") => {
+            let rt = Runtime::load(&artifacts_dir(args))?;
+            let cfg = run_config(args)?;
+            let c = corpus(args)?;
+            let trained =
+                unlearn::harness::build_system(&rt, cfg, c, args.flag("fisher"))?;
+            let mut system = trained.system;
+            let req = unlearn::controller::ForgetRequest {
+                id: args.get_or("id", "cli-forget").to_string(),
+                user: args.get("user").map(|u| u.parse()).transpose()?,
+                sample_ids: args
+                    .get_or("sample-ids", "")
+                    .split(',')
+                    .filter(|s| !s.is_empty())
+                    .map(|s| s.parse())
+                    .collect::<Result<_, _>>()?,
+                urgency: if args.flag("urgent") {
+                    unlearn::controller::Urgency::High
+                } else {
+                    unlearn::controller::Urgency::Normal
+                },
+            };
+            let outcome = system.handle(&req)?;
+            println!(
+                "action: {} (closure {}, expanded {})",
+                outcome.action.as_str(),
+                outcome.closure_size,
+                outcome.closure_expanded
+            );
+            if let Some(a) = outcome.audit {
+                println!("audits: {}", a.to_json().pretty());
+            }
+            Ok(())
+        }
+        Some("audit") => {
+            let rt = Runtime::load(&artifacts_dir(args))?;
+            let cfg = run_config(args)?;
+            let c = corpus(args)?;
+            let trained = unlearn::harness::build_system(&rt, cfg, c, false)?;
+            let sys = trained.system;
+            let forget: Vec<u64> = sys.retain_ids.iter().take(8).copied().collect();
+            let ctx = unlearn::audit::AuditContext {
+                rt: &rt,
+                corpus: &sys.corpus,
+                forget_ids: &forget,
+                retain_ids: &sys.retain_ids,
+                eval_ids: &sys.eval_ids,
+                baseline_ppl: None,
+                thresholds: Default::default(),
+                seed: 1,
+            };
+            let rep = unlearn::audit::run_audits(
+                &ctx,
+                unlearn::audit::ModelView::Base(&sys.state.params),
+            )?;
+            println!("{}", rep.to_json().pretty());
+            Ok(())
+        }
+        other => {
+            eprintln!(
+                "usage: unlearn <smoke|pins|train|ci-gate|wal-scan|replay|forget|audit|serve> \
+                 [--artifacts DIR] [--run-dir DIR] [--steps N] ...\n\
+                 (got {other:?})"
+            );
+            anyhow::bail!("unknown subcommand");
+        }
+    }
+}
+
+fn smoke(args: &Args) -> anyhow::Result<()> {
+    let rt = Runtime::load(&artifacts_dir(args))?;
+    let man = &rt.manifest;
+    println!(
+        "platform={} P={} PL={} B={} S={}",
+        rt.platform(),
+        man.param_count,
+        man.lora_param_count,
+        man.batch,
+        man.seq_len
+    );
+    man.verify_files()?;
+    let params = man.init_params()?;
+    let tokens: Vec<i32> = (0..man.batch * man.seq_len)
+        .map(|i| (i % 251 + 1) as i32)
+        .collect();
+    let mask = vec![1.0f32; man.batch];
+    let out = rt.train_step(&params, &tokens, &mask, 7)?;
+    println!(
+        "train_step: loss={} count={} |g|inf={}",
+        out.loss_sum,
+        out.tok_count,
+        out.grad.iter().fold(0.0f32, |a, x| a.max(x.abs()))
+    );
+    // purity check (Assumption A.13): run twice, compare bits
+    let out2 = rt.train_step(&params, &tokens, &mask, 7)?;
+    anyhow::ensure!(
+        unlearn::util::bytes::bits_equal(&out.grad, &out2.grad),
+        "train_step not bit-deterministic!"
+    );
+    let m = vec![0.0f32; man.param_count];
+    let v = vec![0.0f32; man.param_count];
+    let (p2, m2, _v2) = rt.adamw_update(&params, &out.grad, &m, &v, 1, 1e-3)?;
+    println!(
+        "adamw_update: params {} -> {}",
+        unlearn::util::bytes::state_hash64(&params),
+        unlearn::util::bytes::state_hash64(&p2)
+    );
+    anyhow::ensure!(!unlearn::util::bytes::bits_equal(&params, &p2));
+    anyhow::ensure!(m2.iter().any(|&x| x != 0.0));
+    // eval + logits
+    let etokens: Vec<i32> = (0..man.eval_batch * man.seq_len)
+        .map(|i| (i % 97 + 1) as i32)
+        .collect();
+    let (losses, counts) = rt.eval_loss(&params, &etokens)?;
+    println!("eval_loss[0]={} count[0]={}", losses[0], counts[0]);
+    let lens = vec![man.seq_len as i32; man.eval_batch];
+    let logits = rt.next_logits(&params, &etokens, &lens)?;
+    anyhow::ensure!(logits.len() == man.eval_batch * man.vocab);
+    // lora path
+    let lora = man.init_lora()?;
+    let lout = rt.lora_step(&params, &lora, &tokens, &mask, 3)?;
+    println!("lora_step: loss={} |g|inf={}", lout.loss_sum,
+             lout.grad.iter().fold(0.0f32, |a, x| a.max(x.abs())));
+    println!("smoke OK");
+    Ok(())
+}

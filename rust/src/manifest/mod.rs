@@ -1,0 +1,286 @@
+//! Signed forget manifest (paper §4.3): append-only, hash-chained,
+//! HMAC-signed record of every unlearning action and its artifacts.
+//!
+//! Each entry carries: the request, the forget-closure summary, the path
+//! taken (adapter delete / dense revert / anti-update / replay), audit
+//! outcomes, content-addressed artifact IDs, an idempotency key, the
+//! previous entry's chain hash, and an HMAC-SHA256 signature over the
+//! canonical encoding (the offline stand-in for asymmetric signing —
+//! see DESIGN.md substitutions).  Tampering with any byte of any entry
+//! breaks the chain verification.
+
+use std::collections::HashSet;
+use std::io::Write;
+use std::path::{Path, PathBuf};
+
+use crate::util::hashing::{hex, hmac_sha256, sha256_hex};
+use crate::util::json::{parse, Json};
+
+/// The action kinds of Alg. A.7.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ActionKind {
+    AdapterDelete,
+    RecentRevert,
+    HotPathAntiUpdate,
+    ExactReplay,
+    Refused,
+}
+
+impl ActionKind {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            ActionKind::AdapterDelete => "adapter_delete",
+            ActionKind::RecentRevert => "recent_revert",
+            ActionKind::HotPathAntiUpdate => "hot_path_anti_update",
+            ActionKind::ExactReplay => "exact_replay",
+            ActionKind::Refused => "refused",
+        }
+    }
+}
+
+/// One manifest entry (pre-signing content).
+#[derive(Debug, Clone)]
+pub struct ManifestEntry {
+    /// Idempotency key (duplicate submissions are rejected).
+    pub idempotency_key: String,
+    /// Free-form request description (user id, sample ids, urgency).
+    pub request: Json,
+    /// Closure summary: size, expanded count.
+    pub closure_summary: Json,
+    pub action: ActionKind,
+    /// Action details (steps replayed, deltas reverted, adapter ids...).
+    pub details: Json,
+    /// Audit report JSON (None when no audits ran, e.g. refusals).
+    pub audits: Option<Json>,
+    /// Content-addressed artifact ids (path -> sha256).
+    pub artifacts: Json,
+}
+
+/// Append-only signed manifest file (JSON lines).
+pub struct ForgetManifest {
+    path: PathBuf,
+    key: Vec<u8>,
+    seq: u64,
+    prev_hash: String,
+    seen_keys: HashSet<String>,
+}
+
+impl ForgetManifest {
+    /// Open (or create) the manifest at `path`, replaying the chain to
+    /// restore state and verify integrity.
+    pub fn open(path: &Path, key: &[u8]) -> anyhow::Result<ForgetManifest> {
+        let mut m = ForgetManifest {
+            path: path.to_path_buf(),
+            key: key.to_vec(),
+            seq: 0,
+            prev_hash: "genesis".to_string(),
+            seen_keys: HashSet::new(),
+        };
+        if path.exists() {
+            for (entry, _) in m.verify_chain()? {
+                m.seq = entry.get("seq").and_then(|v| v.as_u64()).unwrap_or(0) + 1;
+                if let Some(k) =
+                    entry.get("idempotency_key").and_then(|v| v.as_str())
+                {
+                    m.seen_keys.insert(k.to_string());
+                }
+                m.prev_hash = entry
+                    .get("entry_hash")
+                    .and_then(|v| v.as_str())
+                    .unwrap_or("genesis")
+                    .to_string();
+            }
+        }
+        Ok(m)
+    }
+
+    /// Append an entry.  Returns the entry hash, or `Ok(None)` if the
+    /// idempotency key was already executed (duplicate suppression,
+    /// Alg. A.7 "idempotency keys prevent duplicate execution").
+    pub fn append(
+        &mut self,
+        entry: &ManifestEntry,
+    ) -> anyhow::Result<Option<String>> {
+        if self.seen_keys.contains(&entry.idempotency_key) {
+            return Ok(None);
+        }
+        let mut j = Json::obj();
+        j.set("seq", self.seq)
+            .set("idempotency_key", entry.idempotency_key.as_str())
+            .set("request", entry.request.clone())
+            .set("closure_summary", entry.closure_summary.clone())
+            .set("action", entry.action.as_str())
+            .set("details", entry.details.clone())
+            .set(
+                "audits",
+                entry.audits.clone().unwrap_or(Json::Null),
+            )
+            .set("artifacts", entry.artifacts.clone())
+            .set("prev_hash", self.prev_hash.as_str());
+        // chain hash over the canonical (sorted-key, compact) encoding
+        let body = j.encode();
+        let entry_hash = sha256_hex(body.as_bytes());
+        let sig = hex(&hmac_sha256(&self.key, body.as_bytes()));
+        j.set("entry_hash", entry_hash.as_str())
+            .set("hmac", sig.as_str());
+        let mut f = std::fs::OpenOptions::new()
+            .create(true)
+            .append(true)
+            .open(&self.path)?;
+        writeln!(f, "{}", j.encode())?;
+        f.sync_all()?;
+        self.seq += 1;
+        self.prev_hash = entry_hash.clone();
+        self.seen_keys.insert(entry.idempotency_key.clone());
+        Ok(Some(entry_hash))
+    }
+
+    pub fn was_executed(&self, idempotency_key: &str) -> bool {
+        self.seen_keys.contains(idempotency_key)
+    }
+
+    pub fn len(&self) -> u64 {
+        self.seq
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.seq == 0
+    }
+
+    /// Verify the whole chain; returns (entry, valid_signature) pairs.
+    /// Errors on any chain-hash break (tamper evidence).
+    pub fn verify_chain(&self) -> anyhow::Result<Vec<(Json, bool)>> {
+        let mut out = Vec::new();
+        if !self.path.exists() {
+            return Ok(out);
+        }
+        let text = std::fs::read_to_string(&self.path)?;
+        let mut prev = "genesis".to_string();
+        for (lineno, line) in text.lines().enumerate() {
+            if line.trim().is_empty() {
+                continue;
+            }
+            let j = parse(line)
+                .map_err(|e| anyhow::anyhow!("manifest line {lineno}: {e}"))?;
+            // recompute the chain hash over the body (entry minus
+            // entry_hash and hmac fields)
+            let mut body = j.clone();
+            if let Json::Obj(map) = &mut body {
+                map.remove("entry_hash");
+                map.remove("hmac");
+            }
+            let expect_hash = sha256_hex(body.encode().as_bytes());
+            let stored_hash = j
+                .get("entry_hash")
+                .and_then(|v| v.as_str())
+                .unwrap_or_default();
+            anyhow::ensure!(
+                expect_hash == stored_hash,
+                "manifest entry {lineno}: chain hash mismatch (tampered)"
+            );
+            let stored_prev = j
+                .get("prev_hash")
+                .and_then(|v| v.as_str())
+                .unwrap_or_default();
+            anyhow::ensure!(
+                stored_prev == prev,
+                "manifest entry {lineno}: chain broken (prev_hash)"
+            );
+            let sig_ok = j
+                .get("hmac")
+                .and_then(|v| v.as_str())
+                .map(|s| {
+                    s == hex(&hmac_sha256(&self.key, body.encode().as_bytes()))
+                })
+                .unwrap_or(false);
+            prev = stored_hash.to_string();
+            out.push((j, sig_ok));
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn entry(key: &str) -> ManifestEntry {
+        let mut req = Json::obj();
+        req.set("user", 3u64).set("urgency", "normal");
+        let mut cl = Json::obj();
+        cl.set("requested", 9u64).set("expanded", 2u64);
+        ManifestEntry {
+            idempotency_key: key.to_string(),
+            request: req,
+            closure_summary: cl,
+            action: ActionKind::ExactReplay,
+            details: Json::obj(),
+            audits: None,
+            artifacts: Json::obj(),
+        }
+    }
+
+    #[test]
+    fn append_and_verify_chain() {
+        let dir = crate::util::tempdir("manifest");
+        let path = dir.join("forget.manifest");
+        let mut m = ForgetManifest::open(&path, b"signing-key").unwrap();
+        assert!(m.append(&entry("req-1")).unwrap().is_some());
+        assert!(m.append(&entry("req-2")).unwrap().is_some());
+        let chain = m.verify_chain().unwrap();
+        assert_eq!(chain.len(), 2);
+        assert!(chain.iter().all(|(_, sig)| *sig));
+    }
+
+    #[test]
+    fn idempotency_suppresses_duplicates() {
+        let dir = crate::util::tempdir("manifest-idem");
+        let path = dir.join("forget.manifest");
+        let mut m = ForgetManifest::open(&path, b"k").unwrap();
+        assert!(m.append(&entry("dup")).unwrap().is_some());
+        assert!(m.append(&entry("dup")).unwrap().is_none());
+        assert_eq!(m.len(), 1);
+        assert!(m.was_executed("dup"));
+    }
+
+    #[test]
+    fn reopen_restores_state() {
+        let dir = crate::util::tempdir("manifest-reopen");
+        let path = dir.join("forget.manifest");
+        {
+            let mut m = ForgetManifest::open(&path, b"k").unwrap();
+            m.append(&entry("a")).unwrap();
+            m.append(&entry("b")).unwrap();
+        }
+        let mut m = ForgetManifest::open(&path, b"k").unwrap();
+        assert_eq!(m.len(), 2);
+        assert!(m.was_executed("a"));
+        assert!(m.append(&entry("a")).unwrap().is_none());
+        assert!(m.append(&entry("c")).unwrap().is_some());
+        assert!(m.verify_chain().unwrap().iter().all(|(_, s)| *s));
+    }
+
+    #[test]
+    fn tamper_detected() {
+        let dir = crate::util::tempdir("manifest-tamper");
+        let path = dir.join("forget.manifest");
+        let mut m = ForgetManifest::open(&path, b"k").unwrap();
+        m.append(&entry("x")).unwrap();
+        let text = std::fs::read_to_string(&path)
+            .unwrap()
+            .replace("\"user\":3", "\"user\":4");
+        std::fs::write(&path, text).unwrap();
+        assert!(m.verify_chain().is_err());
+    }
+
+    #[test]
+    fn wrong_key_fails_signature_but_not_chain() {
+        let dir = crate::util::tempdir("manifest-key");
+        let path = dir.join("forget.manifest");
+        let mut m = ForgetManifest::open(&path, b"right").unwrap();
+        m.append(&entry("x")).unwrap();
+        let m2 = ForgetManifest::open(&path, b"wrong").unwrap();
+        let chain = m2.verify_chain().unwrap();
+        assert!(chain.iter().all(|(_, sig)| !*sig));
+    }
+}

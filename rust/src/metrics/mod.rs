@@ -1,0 +1,121 @@
+//! Lightweight metrics: counters and wall-clock timers for the trainer,
+//! replay and controller (exported into EXPERIMENTS.md and bench output).
+
+use std::collections::BTreeMap;
+use std::sync::Mutex;
+use std::time::Instant;
+
+use crate::util::json::Json;
+
+/// A registry of named counters and timing accumulators.
+#[derive(Debug, Default)]
+pub struct Metrics {
+    inner: Mutex<Inner>,
+}
+
+#[derive(Debug, Default)]
+struct Inner {
+    counters: BTreeMap<String, u64>,
+    timers: BTreeMap<String, (u64, f64)>, // (count, total seconds)
+}
+
+impl Metrics {
+    pub fn new() -> Metrics {
+        Metrics::default()
+    }
+
+    pub fn inc(&self, name: &str, by: u64) {
+        let mut g = self.inner.lock().unwrap();
+        *g.counters.entry(name.to_string()).or_default() += by;
+    }
+
+    pub fn counter(&self, name: &str) -> u64 {
+        self.inner
+            .lock()
+            .unwrap()
+            .counters
+            .get(name)
+            .copied()
+            .unwrap_or(0)
+    }
+
+    /// Time a closure under a named timer.
+    pub fn time<T>(&self, name: &str, f: impl FnOnce() -> T) -> T {
+        let start = Instant::now();
+        let out = f();
+        self.record_secs(name, start.elapsed().as_secs_f64());
+        out
+    }
+
+    pub fn record_secs(&self, name: &str, secs: f64) {
+        let mut g = self.inner.lock().unwrap();
+        let e = g.timers.entry(name.to_string()).or_insert((0, 0.0));
+        e.0 += 1;
+        e.1 += secs;
+    }
+
+    /// (count, total secs, mean secs) for a timer.
+    pub fn timer(&self, name: &str) -> Option<(u64, f64, f64)> {
+        let g = self.inner.lock().unwrap();
+        g.timers
+            .get(name)
+            .map(|&(n, tot)| (n, tot, if n > 0 { tot / n as f64 } else { 0.0 }))
+    }
+
+    pub fn to_json(&self) -> Json {
+        let g = self.inner.lock().unwrap();
+        let mut counters = Json::obj();
+        for (k, v) in &g.counters {
+            counters.set(k, *v);
+        }
+        let mut timers = Json::obj();
+        for (k, &(n, tot)) in &g.timers {
+            let mut t = Json::obj();
+            t.set("count", n).set("total_s", tot).set(
+                "mean_s",
+                if n > 0 { tot / n as f64 } else { 0.0 },
+            );
+            timers.set(k, t);
+        }
+        let mut j = Json::obj();
+        j.set("counters", counters).set("timers", timers);
+        j
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_accumulate() {
+        let m = Metrics::new();
+        m.inc("steps", 1);
+        m.inc("steps", 2);
+        assert_eq!(m.counter("steps"), 3);
+        assert_eq!(m.counter("missing"), 0);
+    }
+
+    #[test]
+    fn timers_record() {
+        let m = Metrics::new();
+        let v = m.time("work", || {
+            std::thread::sleep(std::time::Duration::from_millis(5));
+            42
+        });
+        assert_eq!(v, 42);
+        let (n, tot, mean) = m.timer("work").unwrap();
+        assert_eq!(n, 1);
+        assert!(tot >= 0.004 && mean >= 0.004);
+    }
+
+    #[test]
+    fn json_export() {
+        let m = Metrics::new();
+        m.inc("a", 1);
+        m.record_secs("t", 0.5);
+        let j = m.to_json();
+        assert_eq!(j.get_path(&["counters", "a"]).unwrap().as_u64(), Some(1));
+        assert!(j.get_path(&["timers", "t", "mean_s"]).is_some());
+    }
+}

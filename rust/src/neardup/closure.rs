@@ -1,0 +1,200 @@
+//! Fixed-point forget-closure expansion `cl(F)` (paper Alg. A.6).
+//!
+//! BFS from the requested samples: SimHash + banded index propose
+//! candidates (`|h(y) ⊕ q| ≤ τ_h`), exact shingle-Jaccard confirms
+//! (`Similarity(x,y) ≥ τ_sim`), newly admitted members are pushed back
+//! onto the queue until a fixed point is reached.
+
+use std::collections::{HashSet, VecDeque};
+
+use crate::data::corpus::Corpus;
+
+use super::index::HammingIndex;
+use super::simhash::{jaccard_shingles, simhash_tokens};
+
+/// Thresholds (τ_h, τ_sim) of Alg. A.6.
+#[derive(Debug, Clone, Copy)]
+pub struct ClosureParams {
+    /// Max Hamming distance between SimHash signatures.
+    pub tau_hamming: u32,
+    /// Min exact Jaccard similarity over token shingles.
+    pub tau_sim: f64,
+}
+
+impl Default for ClosureParams {
+    fn default() -> Self {
+        // word-bigram SimHash on short documents: near-dups measured at
+        // distance 9-17, unrelated at 29+ (see simhash.rs tests), so 20
+        // separates them with margin.  Jaccard confirm at 0.6: the
+        // corpus's true paraphrase families land at >= 0.7 bigram
+        // Jaccard, while *cross-user* docs sharing a sentence template
+        // peak around 0.4-0.5 — 0.6 cleanly separates them.
+        ClosureParams {
+            tau_hamming: 20,
+            tau_sim: 0.6,
+        }
+    }
+}
+
+/// Closure output: the expanded ID set plus audit bookkeeping.
+#[derive(Debug, Clone)]
+pub struct ClosureResult {
+    /// cl(F): requested IDs plus admitted near-duplicates, sorted.
+    pub ids: Vec<u64>,
+    /// IDs admitted by expansion (excluding the original request).
+    pub expanded: Vec<u64>,
+    /// BFS rounds until fixed point.
+    pub rounds: usize,
+}
+
+impl ClosureResult {
+    pub fn contains(&self, id: u64) -> bool {
+        self.ids.binary_search(&id).is_ok()
+    }
+
+    pub fn id_set(&self) -> HashSet<u64> {
+        self.ids.iter().copied().collect()
+    }
+}
+
+/// Build a SimHash index over the whole corpus (the "near-dup index"
+/// artifact of Table 1; refreshed continuously in production).
+pub fn build_index(corpus: &Corpus) -> HammingIndex {
+    let mut idx = HammingIndex::new();
+    for s in &corpus.samples {
+        idx.insert(s.id, simhash_tokens(&s.tokens));
+    }
+    idx
+}
+
+/// Expand `request` to its near-duplicate closure (Alg. A.6).
+pub fn expand_closure(
+    corpus: &Corpus,
+    index: &HammingIndex,
+    request: &[u64],
+    params: ClosureParams,
+) -> ClosureResult {
+    let mut members: HashSet<u64> = request.iter().copied().collect();
+    let mut queue: VecDeque<u64> = request.iter().copied().collect();
+    let mut rounds = 0usize;
+
+    while let Some(x) = queue.pop_front() {
+        rounds += 1;
+        let Some(xs) = corpus.by_id(x) else { continue };
+        let q = index.signature(x).unwrap_or_else(|| simhash_tokens(&xs.tokens));
+        for y in index.query(q, params.tau_hamming) {
+            if members.contains(&y) {
+                continue;
+            }
+            let Some(ys) = corpus.by_id(y) else { continue };
+            if jaccard_shingles(&xs.tokens, &ys.tokens) >= params.tau_sim {
+                members.insert(y);
+                queue.push_back(y);
+            }
+        }
+    }
+
+    let mut ids: Vec<u64> = members.into_iter().collect();
+    ids.sort_unstable();
+    let req: HashSet<u64> = request.iter().copied().collect();
+    let expanded = ids.iter().copied().filter(|i| !req.contains(i)).collect();
+    ClosureResult { ids, expanded, rounds }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::corpus::{CorpusConfig, SampleKind};
+
+    fn corpus() -> Corpus {
+        Corpus::generate(CorpusConfig::default())
+    }
+
+    #[test]
+    fn closure_contains_request() {
+        let c = corpus();
+        let idx = build_index(&c);
+        let req = c.user_samples(0);
+        let cl = expand_closure(&c, &idx, &req, ClosureParams::default());
+        for id in &req {
+            assert!(cl.contains(*id));
+        }
+    }
+
+    #[test]
+    fn closure_pulls_in_near_duplicates() {
+        let c = corpus();
+        let idx = build_index(&c);
+        // find a sample that has an emitted near-dup
+        let (dup_id, orig_id) = c
+            .samples
+            .iter()
+            .find_map(|s| match s.kind {
+                SampleKind::NearDup { of } => Some((s.id, of)),
+                _ => None,
+            })
+            .expect("corpus has near-dups");
+        let cl = expand_closure(&c, &idx, &[orig_id], ClosureParams::default());
+        assert!(
+            cl.contains(dup_id),
+            "requesting {orig_id} must pull in its near-dup {dup_id}"
+        );
+        assert!(!cl.expanded.is_empty());
+    }
+
+    #[test]
+    fn closure_is_symmetric_via_fixed_point() {
+        // requesting the DUP must also pull in the ORIGINAL
+        let c = corpus();
+        let idx = build_index(&c);
+        let (dup_id, orig_id) = c
+            .samples
+            .iter()
+            .find_map(|s| match s.kind {
+                SampleKind::NearDup { of } => Some((s.id, of)),
+                _ => None,
+            })
+            .unwrap();
+        let cl = expand_closure(&c, &idx, &[dup_id], ClosureParams::default());
+        assert!(cl.contains(orig_id));
+    }
+
+    #[test]
+    fn closure_is_idempotent() {
+        let c = corpus();
+        let idx = build_index(&c);
+        let req = c.user_samples(1);
+        let cl1 = expand_closure(&c, &idx, &req, ClosureParams::default());
+        let cl2 = expand_closure(&c, &idx, &cl1.ids, ClosureParams::default());
+        assert_eq!(cl1.ids, cl2.ids, "cl(cl(F)) == cl(F)");
+    }
+
+    #[test]
+    fn strict_thresholds_admit_nothing() {
+        let c = corpus();
+        let idx = build_index(&c);
+        let req = vec![0u64];
+        let cl = expand_closure(
+            &c,
+            &idx,
+            &req,
+            ClosureParams {
+                tau_hamming: 0,
+                tau_sim: 1.0,
+            },
+        );
+        // only exact-duplicate tokens would be admitted
+        for id in &cl.expanded {
+            assert_eq!(c.by_id(*id).unwrap().tokens, c.by_id(0).unwrap().tokens);
+        }
+    }
+
+    #[test]
+    fn empty_request_empty_closure() {
+        let c = corpus();
+        let idx = build_index(&c);
+        let cl = expand_closure(&c, &idx, &[], ClosureParams::default());
+        assert!(cl.ids.is_empty());
+        assert_eq!(cl.rounds, 0);
+    }
+}

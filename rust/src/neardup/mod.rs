@@ -1,0 +1,12 @@
+//! Near-duplicate detection and forget-closure expansion (paper §4.3,
+//! Alg. A.6): SimHash over token shingles (Manku et al.) with a banded
+//! Hamming index (the ANN role FAISS plays in the paper), and the
+//! fixed-point closure expansion `cl(F)`.
+
+pub mod closure;
+pub mod index;
+pub mod simhash;
+
+pub use closure::{expand_closure, ClosureParams, ClosureResult};
+pub use index::HammingIndex;
+pub use simhash::{simhash_tokens, hamming, jaccard_shingles};

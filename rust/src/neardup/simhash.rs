@@ -1,0 +1,187 @@
+//! 64-bit SimHash over token shingles (Manku et al., WWW'07).
+//!
+//! Each document is shingled into overlapping token n-grams; every
+//! shingle votes its hash bits with weight +1/-1, the sign vector is
+//! collapsed to 64 bits.  Near-duplicates land within a small Hamming
+//! distance.
+
+use crate::util::hashing::xxh64;
+
+/// Shingle width (token n-gram length).
+pub const SHINGLE: usize = 4;
+
+/// SimHash of a token sequence.
+///
+/// Features are *word-level* bigrams: the byte-token stream is segmented
+/// at spaces/PAD and consecutive word pairs are hashed.  Word features
+/// are position-independent, so a single inserted word perturbs only the
+/// two bigrams touching the edit — which is what makes near-duplicates
+/// land within a small Hamming radius while unrelated sentences scatter
+/// (Manku et al. use exactly this feature class for web documents).
+pub fn simhash_tokens(tokens: &[i32]) -> u64 {
+    let mut votes = [0i32; 64];
+    let mut any = false;
+    let words = split_words(tokens);
+    let feats: Vec<u64> = if words.len() >= 2 {
+        words
+            .windows(2)
+            .map(|w| {
+                let mut buf = Vec::with_capacity(16);
+                for word in w {
+                    for t in *word {
+                        buf.push(*t as u8);
+                    }
+                    buf.push(0xFF); // word separator sentinel
+                }
+                xxh64(&buf, 0x51_4D_48_41) // "SMHA"
+            })
+            .collect()
+    } else {
+        words
+            .iter()
+            .map(|w| {
+                let buf: Vec<u8> = w.iter().map(|&t| t as u8).collect();
+                xxh64(&buf, 0x51_4D_48_41)
+            })
+            .collect()
+    };
+    for h in feats {
+        any = true;
+        for (b, vote) in votes.iter_mut().enumerate() {
+            if (h >> b) & 1 == 1 {
+                *vote += 1;
+            } else {
+                *vote -= 1;
+            }
+        }
+    }
+    if !any {
+        return 0;
+    }
+    let mut out = 0u64;
+    for (b, &vote) in votes.iter().enumerate() {
+        if vote > 0 {
+            out |= 1 << b;
+        }
+    }
+    out
+}
+
+/// Split a byte-token stream into words at spaces / PAD.
+fn split_words(tokens: &[i32]) -> Vec<&[i32]> {
+    let mut out = Vec::new();
+    let mut start = None;
+    for (i, &t) in tokens.iter().enumerate() {
+        let is_sep = t == 0 || t == b' ' as i32;
+        match (start, is_sep) {
+            (None, false) => start = Some(i),
+            (Some(s), true) => {
+                out.push(&tokens[s..i]);
+                start = None;
+            }
+            _ => {}
+        }
+    }
+    if let Some(s) = start {
+        out.push(&tokens[s..]);
+    }
+    out
+}
+
+/// Hamming distance between two 64-bit signatures.
+pub fn hamming(a: u64, b: u64) -> u32 {
+    (a ^ b).count_ones()
+}
+
+/// Exact Jaccard similarity over *word-bigram* shingles — the
+/// `Similarity(x,y)` verification step of Alg. A.6 (SimHash proposes,
+/// Jaccard confirms).  Word bigrams match the SimHash feature class:
+/// byte n-grams would rate same-template cross-user sentences as
+/// near-duplicates (they share long literal runs), while word bigrams
+/// put them at ~0.45 vs ≥0.6 for true paraphrases.
+pub fn jaccard_shingles(a: &[i32], b: &[i32]) -> f64 {
+    use std::collections::HashSet;
+    let sh = |t: &[i32]| -> HashSet<Vec<i32>> {
+        let words = split_words(t);
+        if words.len() < 2 {
+            return words.into_iter().map(|w| w.to_vec()).collect();
+        }
+        words
+            .windows(2)
+            .map(|w| {
+                let mut v = w[0].to_vec();
+                v.push(-1); // separator sentinel
+                v.extend_from_slice(w[1]);
+                v
+            })
+            .collect()
+    };
+    let sa = sh(a);
+    let sb = sh(b);
+    if sa.is_empty() && sb.is_empty() {
+        return 1.0;
+    }
+    let inter = sa.intersection(&sb).count();
+    let union = sa.len() + sb.len() - inter;
+    inter as f64 / union as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::tokenizer::ByteTokenizer;
+
+    fn toks(s: &str) -> Vec<i32> {
+        ByteTokenizer.encode_fixed(s, 64)
+    }
+
+    #[test]
+    fn identical_texts_identical_hash() {
+        let a = simhash_tokens(&toks("Alice wrote about gardening on day 1."));
+        let b = simhash_tokens(&toks("Alice wrote about gardening on day 1."));
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn near_duplicates_are_close_unrelated_are_far() {
+        let orig = toks("Alice (user 0001) wrote about gardening on day 042.");
+        let near = toks("Alice (user 0001) wrote about gardening around day 042.");
+        let far = toks("Completely different subject matter entirely, news at 9.");
+        let h0 = simhash_tokens(&orig);
+        let hn = simhash_tokens(&near);
+        let hf = simhash_tokens(&far);
+        // short documents have few word-bigram features, so each edit
+        // flips several signature bits; what matters for the closure is
+        // the margin between near-dups and strangers around tau_hamming
+        // = 20 (ClosureParams::default).
+        assert!(hamming(h0, hn) <= 20, "near dist {}", hamming(h0, hn));
+        assert!(hamming(h0, hf) > 20, "far dist {}", hamming(h0, hf));
+    }
+
+    #[test]
+    fn jaccard_orders_similarity() {
+        let orig = toks("Alice (user 0001) wrote about gardening on day 042.");
+        let near = toks("Alice (user 0001) wrote about gardening around day 042.");
+        let far = toks("the secret code of user 0007 is 112233.");
+        let jn = jaccard_shingles(&orig, &near);
+        let jf = jaccard_shingles(&orig, &far);
+        assert!(jn > 0.5, "jn={jn}");
+        assert!(jf < 0.2, "jf={jf}");
+        assert_eq!(jaccard_shingles(&orig, &orig), 1.0);
+    }
+
+    #[test]
+    fn hamming_basics() {
+        assert_eq!(hamming(0, 0), 0);
+        assert_eq!(hamming(u64::MAX, 0), 64);
+        assert_eq!(hamming(0b1010, 0b0110), 2);
+    }
+
+    #[test]
+    fn short_and_empty_inputs() {
+        assert_eq!(simhash_tokens(&[]), 0);
+        let _ = simhash_tokens(&[1]);
+        let _ = simhash_tokens(&[1, 2, 3]); // below shingle width
+        assert_eq!(jaccard_shingles(&[1, 2], &[1, 2]), 1.0);
+    }
+}

@@ -1,0 +1,294 @@
+//! `ReplayFilter` — deterministic microbatch replay with forget
+//! filtering (paper Alg. A.9, Theorem A.1).
+//!
+//! Reconstructs the logical microbatch graph G from the WAL + IdMap,
+//! removes only samples in cl(F) (mask-based, shape-preserving —
+//! Lemma A.2(ii)), sets the optimizer LR from the recorded `lr_f32`
+//! before each applied update (never calls the scheduler — Lemma A.4),
+//! skips counter advances on steps that become empty (Prop. A.5), and
+//! asserts the logged `opt_step_u32` against the traversal (fail-closed
+//! on any inconsistency).
+//!
+//! The same entry point with `from` = the θ0 checkpoint and the same
+//! closure IS the preserved-graph retain-only oracle RETAINTRAIN
+//! (Def. A.12 / Lemma A.14) — oracle and replay literally share this
+//! code path plus the pinned executables, which is how the paper's
+//! bit-identity argument becomes mechanically checkable here.
+
+use std::collections::HashSet;
+use std::path::Path;
+
+use crate::checkpoint::TrainState;
+use crate::config::Pins;
+use crate::data::corpus::Corpus;
+use crate::runtime::Runtime;
+use crate::trainer::{accumulate, build_microbatch_tensors};
+use crate::wal::{IdMap, WalReader, WalRecord};
+
+/// Replay options.
+#[derive(Debug, Clone)]
+pub struct ReplayOptions {
+    /// Scrub the token content of filtered slots (exactness unaffected —
+    /// bitwise content-independence; privacy-preferable since forget
+    /// data never enters the compute graph).
+    pub zero_content: bool,
+    /// Verify pins before running (fail-closed).  Disable only in tests.
+    pub check_pins: bool,
+}
+
+impl Default for ReplayOptions {
+    fn default() -> Self {
+        ReplayOptions {
+            zero_content: true,
+            check_pins: true,
+        }
+    }
+}
+
+/// Traversal invariants recorded for the equality-proof artifact
+/// (the "Replay invariants" row of Table 5).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct ReplayInvariants {
+    /// Updates actually applied (bias-correction counter advances).
+    pub applied_steps: u32,
+    /// Logical steps whose microbatches were all empty after filtering.
+    pub empty_logical_steps: u32,
+    /// Inclusive logical-step range traversed [first, last].
+    pub logical_range: Option<(u32, u32)>,
+    /// Microbatch records consumed.
+    pub records: u64,
+    /// Microbatch executions skipped because every slot was filtered.
+    pub skipped_microbatches: u64,
+}
+
+/// Result of a replay.
+pub struct ReplayOutcome {
+    pub state: TrainState,
+    pub invariants: ReplayInvariants,
+}
+
+/// Run `ReplayFilter` from checkpoint `from`, filtering `closure`.
+///
+/// `records` must be the full WAL stream of the original run (records
+/// before `from.logical_step` are skipped — they are already inside the
+/// checkpoint).  `stored_pins` is the training-time pin snapshot.
+pub fn replay_filter(
+    rt: &Runtime,
+    corpus: &Corpus,
+    from: &TrainState,
+    records: &[WalRecord],
+    idmap: &IdMap,
+    closure: &HashSet<u64>,
+    stored_pins: Option<&Pins>,
+    opts: &ReplayOptions,
+) -> anyhow::Result<ReplayOutcome> {
+    // fail-closed pin verification (Table 2 / §7)
+    if opts.check_pins {
+        let stored = stored_pins
+            .ok_or_else(|| anyhow::anyhow!("pins required (fail-closed)"))?;
+        let accum = infer_accum(records)?;
+        stored.ensure_match(&rt.capture_pins(accum))?;
+    }
+
+    let man = &rt.manifest;
+    anyhow::ensure!(
+        from.params.len() == man.param_count,
+        "checkpoint param count mismatch"
+    );
+    let mut state = from.clone();
+    let mut inv = ReplayInvariants::default();
+
+    let mut grad_acc = vec![0.0f32; man.param_count];
+    let mut had_contrib = false;
+    let mut step_retained = 0usize;
+    let mut pending_lr: Option<f32> = None;
+    let mut last_step: Option<u32> = None;
+
+    for rec in records {
+        if rec.opt_step < state.logical_step {
+            continue; // already inside the checkpoint
+        }
+        // WAL traversal order sanity (Alg. A.9 "in order")
+        if let Some(prev) = last_step {
+            anyhow::ensure!(
+                rec.opt_step >= prev,
+                "WAL records out of order at step {}",
+                rec.opt_step
+            );
+        }
+        last_step = Some(rec.opt_step);
+        inv.records += 1;
+        inv.logical_range = Some(match inv.logical_range {
+            None => (rec.opt_step, rec.opt_step),
+            Some((a, _)) => (a, rec.opt_step),
+        });
+
+        // line 5: recover ordered IDs from M; assert |B| = mb_len
+        let ids = idmap.lookup(rec.hash64).ok_or_else(|| {
+            anyhow::anyhow!(
+                "IdMap missing hash {:016x} — cannot reconstruct \
+                 microbatch (fail-closed)",
+                rec.hash64
+            )
+        })?;
+        anyhow::ensure!(
+            ids.len() == rec.mb_len as usize,
+            "mb_len mismatch for hash {:016x}: WAL {} vs IdMap {}",
+            rec.hash64,
+            rec.mb_len,
+            ids.len()
+        );
+
+        let (tokens, mask, retained) = build_microbatch_tensors(
+            corpus,
+            ids,
+            man.batch,
+            man.seq_len,
+            |id| closure.contains(&id),
+            opts.zero_content,
+        )?;
+        step_retained += retained;
+        if retained > 0 {
+            // line 7-8: g with the SAME seed; reduction=sum
+            let out = rt.train_step(
+                &state.params,
+                &tokens,
+                &mask,
+                rec.seed64 as i32,
+            )?;
+            accumulate(&mut grad_acc, &out.grad);
+            had_contrib = true;
+        } else {
+            inv.skipped_microbatches += 1;
+        }
+        pending_lr = Some(rec.lr());
+
+        if rec.accum_end {
+            if had_contrib {
+                // line 12-14: LR from the WAL, never a scheduler; the
+                // opt_step assertion from §4.1 (original training had no
+                // empty steps, so applied == logical there; replay's
+                // applied counter is the retain-only program's counter)
+                let lr = pending_lr.expect("accum boundary saw records");
+                let (p, m, v) = rt.adamw_update(
+                    &state.params,
+                    &grad_acc,
+                    &state.m,
+                    &state.v,
+                    state.applied_updates as i32 + 1,
+                    lr,
+                )?;
+                state.params = p;
+                state.m = m;
+                state.v = v;
+                state.applied_updates += 1;
+                inv.applied_steps += 1;
+            } else {
+                // Prop. A.5: empty-step skip — no optimizer/counter advance
+                inv.empty_logical_steps += 1;
+            }
+            state.logical_step = rec.opt_step + 1;
+            grad_acc.iter_mut().for_each(|x| *x = 0.0);
+            had_contrib = false;
+            step_retained = 0;
+            pending_lr = None;
+        }
+    }
+    let _ = step_retained;
+    anyhow::ensure!(
+        pending_lr.is_none(),
+        "WAL ended mid-accumulation (unterminated segment)"
+    );
+    Ok(ReplayOutcome {
+        state,
+        invariants: inv,
+    })
+}
+
+/// Infer the accumulation length from the WAL (layout pin component).
+pub fn infer_accum(records: &[WalRecord]) -> anyhow::Result<usize> {
+    let mut count = 0usize;
+    for rec in records {
+        count += 1;
+        if rec.accum_end {
+            return Ok(count);
+        }
+    }
+    anyhow::bail!("WAL contains no accumulation boundary");
+}
+
+/// Load the WAL + IdMap + pins for a finished run directory.
+pub fn load_run(
+    run_dir: &Path,
+    hmac_key: Option<Vec<u8>>,
+) -> anyhow::Result<(Vec<WalRecord>, IdMap, Pins)> {
+    let records = WalReader::open(&run_dir.join("wal"))?
+        .collect::<anyhow::Result<Vec<_>>>()?;
+    let idmap = IdMap::load(&run_dir.join("ids.map"), hmac_key)?;
+    let pins = Pins::load(&run_dir.join("pins.json"))?;
+    Ok((records, idmap, pins))
+}
+
+/// Identify the logical steps whose microbatches intersect cl(F)
+/// (Alg. A.7 line 6: the offending-step set T).
+pub fn offending_steps(
+    records: &[WalRecord],
+    idmap: &IdMap,
+    closure: &HashSet<u64>,
+) -> anyhow::Result<Vec<u32>> {
+    let mut steps = Vec::new();
+    for rec in records {
+        let ids = idmap
+            .lookup(rec.hash64)
+            .ok_or_else(|| anyhow::anyhow!("IdMap missing {:016x}", rec.hash64))?;
+        if ids.iter().any(|id| closure.contains(id)) {
+            steps.push(rec.opt_step);
+        }
+    }
+    steps.sort_unstable();
+    steps.dedup();
+    Ok(steps)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(step: u32, end: bool) -> WalRecord {
+        WalRecord {
+            hash64: 0,
+            seed64: 0,
+            lr_bits: 0,
+            opt_step: step,
+            accum_end: end,
+            mb_len: 1,
+        }
+    }
+
+    #[test]
+    fn infer_accum_from_stream() {
+        let recs = vec![rec(0, false), rec(0, false), rec(0, true)];
+        assert_eq!(infer_accum(&recs).unwrap(), 3);
+        assert!(infer_accum(&[rec(0, false)]).is_err());
+    }
+
+    #[test]
+    fn offending_steps_finds_intersections() {
+        let mut idmap = IdMap::new(None);
+        let h1 = idmap.register(&[1, 2]);
+        let h2 = idmap.register(&[3, 4]);
+        let recs = vec![
+            WalRecord { hash64: h1, seed64: 0, lr_bits: 0, opt_step: 0,
+                        accum_end: true, mb_len: 2 },
+            WalRecord { hash64: h2, seed64: 0, lr_bits: 0, opt_step: 1,
+                        accum_end: true, mb_len: 2 },
+            WalRecord { hash64: h1, seed64: 0, lr_bits: 0, opt_step: 2,
+                        accum_end: true, mb_len: 2 },
+        ];
+        let closure: HashSet<u64> = [2u64].into_iter().collect();
+        assert_eq!(offending_steps(&recs, &idmap, &closure).unwrap(),
+                   vec![0, 2]);
+        let none: HashSet<u64> = [99u64].into_iter().collect();
+        assert!(offending_steps(&recs, &idmap, &none).unwrap().is_empty());
+    }
+}

@@ -1,0 +1,180 @@
+//! Parsed view of `artifacts/manifest.json` (written by `aot.py`).
+//!
+//! Carries the model geometry the coordinator needs (param counts, batch
+//! shapes) plus the artifact SHA-256 pins and the deterministic initial
+//! parameter vectors.
+
+use std::path::{Path, PathBuf};
+
+use crate::util::bytes::bytes_to_f32s;
+use crate::util::hashing::{sha256_hex, sha256_file};
+use crate::util::json::{parse, Json};
+
+/// Model geometry + artifact pins from the AOT manifest.
+#[derive(Debug, Clone)]
+pub struct ArtifactManifest {
+    pub dir: PathBuf,
+    pub param_count: usize,
+    pub lora_param_count: usize,
+    pub batch: usize,
+    pub eval_batch: usize,
+    pub seq_len: usize,
+    pub vocab: usize,
+    pub dropout: f64,
+    pub lora_rank: usize,
+    /// (artifact name, sha256), sorted by name — Table 2 pins.
+    pub artifact_hashes: Vec<(String, String)>,
+    /// SHA-256 over the canonical encoding of the model config object.
+    pub config_hash: String,
+    pub tokenizer_checksum: String,
+    /// Named-tensor layout of the flat parameter vector.
+    pub layout: Vec<(String, Vec<usize>, usize)>,
+}
+
+impl ArtifactManifest {
+    pub fn load(dir: &Path) -> anyhow::Result<ArtifactManifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path).map_err(|e| {
+            anyhow::anyhow!(
+                "cannot read {} ({e}) — run `make artifacts` first",
+                path.display()
+            )
+        })?;
+        let j = parse(&text).map_err(|e| anyhow::anyhow!("manifest: {e}"))?;
+        let cfg = j
+            .get("config")
+            .ok_or_else(|| anyhow::anyhow!("manifest missing config"))?;
+        let u = |k: &str| -> anyhow::Result<usize> {
+            cfg.get(k)
+                .and_then(|v| v.as_usize())
+                .ok_or_else(|| anyhow::anyhow!("config missing {k}"))
+        };
+        let mut artifact_hashes = Vec::new();
+        if let Some(arts) = j.get("artifacts").and_then(|v| v.as_obj()) {
+            for (name, meta) in arts {
+                if let Some(h) = meta.get("sha256").and_then(|v| v.as_str()) {
+                    artifact_hashes.push((name.clone(), h.to_string()));
+                }
+            }
+        }
+        artifact_hashes.sort();
+        let mut layout = Vec::new();
+        if let Some(items) = cfg.get("layout").and_then(|v| v.as_arr()) {
+            for item in items {
+                let name = item
+                    .get("name")
+                    .and_then(|v| v.as_str())
+                    .unwrap_or_default()
+                    .to_string();
+                let shape: Vec<usize> = item
+                    .get("shape")
+                    .and_then(|v| v.as_arr())
+                    .map(|a| {
+                        a.iter().filter_map(|x| x.as_usize()).collect()
+                    })
+                    .unwrap_or_default();
+                let offset = item
+                    .get("offset")
+                    .and_then(|v| v.as_usize())
+                    .unwrap_or(0);
+                layout.push((name, shape, offset));
+            }
+        }
+        Ok(ArtifactManifest {
+            dir: dir.to_path_buf(),
+            param_count: u("param_count")?,
+            lora_param_count: u("lora_param_count")?,
+            batch: u("batch")?,
+            eval_batch: u("eval_batch")?,
+            seq_len: u("seq_len")?,
+            vocab: u("vocab")?,
+            dropout: cfg.get("dropout").and_then(|v| v.as_f64()).unwrap_or(0.0),
+            lora_rank: u("lora_rank")?,
+            artifact_hashes,
+            config_hash: sha256_hex(cfg.encode().as_bytes()),
+            tokenizer_checksum: j
+                .get("tokenizer_checksum")
+                .and_then(|v| v.as_str())
+                .unwrap_or_default()
+                .to_string(),
+            layout,
+        })
+    }
+
+    /// Verify every artifact file still matches its manifest SHA-256
+    /// (part of the fail-closed pin check).
+    pub fn verify_files(&self) -> anyhow::Result<()> {
+        for (name, expect) in &self.artifact_hashes {
+            let file = if name.ends_with(".bin") {
+                self.dir.join(name)
+            } else {
+                self.dir.join(format!("{name}.hlo.txt"))
+            };
+            let got = sha256_file(&file)?;
+            anyhow::ensure!(
+                &got == expect,
+                "artifact {name} drifted: manifest {expect}, file {got}"
+            );
+        }
+        Ok(())
+    }
+
+    /// θ0: the deterministic initialization exported by aot.py.
+    pub fn init_params(&self) -> anyhow::Result<Vec<f32>> {
+        let v = bytes_to_f32s(&std::fs::read(self.dir.join("init_params.bin"))?)?;
+        anyhow::ensure!(v.len() == self.param_count, "init_params length");
+        Ok(v)
+    }
+
+    /// LoRA initialization (A ~ N(0, 0.01), B = 0).
+    pub fn init_lora(&self) -> anyhow::Result<Vec<f32>> {
+        let v = bytes_to_f32s(&std::fs::read(self.dir.join("init_lora.bin"))?)?;
+        anyhow::ensure!(v.len() == self.lora_param_count, "init_lora length");
+        Ok(v)
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut j = Json::obj();
+        j.set("param_count", self.param_count)
+            .set("lora_param_count", self.lora_param_count)
+            .set("batch", self.batch)
+            .set("eval_batch", self.eval_batch)
+            .set("seq_len", self.seq_len)
+            .set("vocab", self.vocab)
+            .set("config_hash", self.config_hash.as_str())
+            .set("tokenizer_checksum", self.tokenizer_checksum.as_str());
+        j
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Only runs when artifacts have been built (`make artifacts`).
+    fn artifacts_dir() -> Option<PathBuf> {
+        let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        dir.join("manifest.json").exists().then_some(dir)
+    }
+
+    #[test]
+    fn parses_real_manifest_when_present() {
+        let Some(dir) = artifacts_dir() else { return };
+        let m = ArtifactManifest::load(&dir).unwrap();
+        assert!(m.param_count > 0);
+        assert!(m.batch > 0 && m.seq_len > 0);
+        assert!(!m.artifact_hashes.is_empty());
+        assert_eq!(m.tokenizer_checksum,
+                   crate::data::tokenizer::ByteTokenizer::checksum());
+        let p0 = m.init_params().unwrap();
+        assert_eq!(p0.len(), m.param_count);
+        m.verify_files().unwrap();
+        // layout covers the whole flat vector contiguously
+        let mut end = 0usize;
+        for (_, shape, off) in &m.layout {
+            assert_eq!(*off, end);
+            end += shape.iter().product::<usize>();
+        }
+        assert_eq!(end, m.param_count);
+    }
+}

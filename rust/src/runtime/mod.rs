@@ -1,0 +1,343 @@
+//! PJRT runtime: loads the AOT HLO-text artifacts and exposes typed
+//! wrappers for every compute graph the coordinator calls.
+//!
+//! Python never runs here — `make artifacts` already lowered the JAX/
+//! Pallas programs to `artifacts/*.hlo.txt`; this module parses the HLO
+//! text (`HloModuleProto::from_text_file`), compiles once per graph on
+//! the PJRT CPU client, and executes from the hot path.
+//!
+//! Determinism note (Assumption A.13): a compiled PJRT executable is a
+//! pure function of its input buffers — same bits in, same bits out.
+//! All exactness guarantees downstream lean on this plus the fact that
+//! train/replay/oracle all use the *same* executables (pinned by
+//! SHA-256 in [`crate::config::Pins`]).
+
+pub mod artifacts;
+
+pub use artifacts::ArtifactManifest;
+
+use std::collections::HashMap;
+use std::path::Path;
+
+use crate::config::Pins;
+
+/// Compiled executables + manifest metadata.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    pub manifest: ArtifactManifest,
+    execs: HashMap<&'static str, xla::PjRtLoadedExecutable>,
+    /// Metrics hook (execution counts/timings).
+    pub metrics: crate::metrics::Metrics,
+}
+
+/// Output of one train-step microbatch call.
+#[derive(Debug, Clone)]
+pub struct StepOut {
+    pub grad: Vec<f32>,
+    pub loss_sum: f32,
+    pub tok_count: f32,
+}
+
+const GRAPHS: &[&str] = &[
+    "train_step",
+    "adamw_update",
+    "eval_loss",
+    "next_logits",
+    "lora_step",
+    "lora_adamw",
+    "lora_eval",
+    "lora_next_logits",
+];
+
+impl Runtime {
+    /// Load the artifact directory and compile every graph.
+    pub fn load(dir: &Path) -> anyhow::Result<Runtime> {
+        let manifest = ArtifactManifest::load(dir)?;
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| anyhow::anyhow!("pjrt client: {e:?}"))?;
+        let mut execs = HashMap::new();
+        for &name in GRAPHS {
+            let path = dir.join(format!("{name}.hlo.txt"));
+            anyhow::ensure!(
+                path.exists(),
+                "missing artifact {} — run `make artifacts`",
+                path.display()
+            );
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().unwrap(),
+            )
+            .map_err(|e| anyhow::anyhow!("parse {name}: {e:?}"))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client
+                .compile(&comp)
+                .map_err(|e| anyhow::anyhow!("compile {name}: {e:?}"))?;
+            execs.insert(name, exe);
+        }
+        Ok(Runtime {
+            client,
+            manifest,
+            execs,
+            metrics: crate::metrics::Metrics::new(),
+        })
+    }
+
+    /// PJRT platform name (the Table 2 hardware pin).
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Capture the current environment pins (compare against the stored
+    /// training-time pins before any replay — fail-closed on drift).
+    pub fn capture_pins(&self, accum: usize) -> Pins {
+        Pins {
+            artifact_hashes: self.manifest.artifact_hashes.clone(),
+            model_config_hash: self.manifest.config_hash.clone(),
+            tokenizer_checksum: self.manifest.tokenizer_checksum.clone(),
+            param_count: self.manifest.param_count,
+            accum,
+            batch: self.manifest.batch,
+            layout: "single-host;dp=1;tp=1;pp=1".to_string(),
+            reduction: "sum".to_string(),
+            platform: self.platform(),
+        }
+    }
+
+    fn run(
+        &self,
+        name: &'static str,
+        inputs: &[xla::Literal],
+    ) -> anyhow::Result<Vec<xla::Literal>> {
+        let exe = self
+            .execs
+            .get(name)
+            .ok_or_else(|| anyhow::anyhow!("unknown graph {name}"))?;
+        let out = self.metrics.time(&format!("exec.{name}"), || {
+            exe.execute::<xla::Literal>(inputs)
+        });
+        let result = out.map_err(|e| anyhow::anyhow!("execute {name}: {e:?}"))?;
+        let lit = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow::anyhow!("fetch {name}: {e:?}"))?;
+        lit.to_tuple()
+            .map_err(|e| anyhow::anyhow!("untuple {name}: {e:?}"))
+    }
+
+    fn f32_vec(lit: &xla::Literal) -> anyhow::Result<Vec<f32>> {
+        lit.to_vec::<f32>()
+            .map_err(|e| anyhow::anyhow!("literal to f32: {e:?}"))
+    }
+
+    fn lit_f32(data: &[f32], dims: &[i64]) -> anyhow::Result<xla::Literal> {
+        let l = xla::Literal::vec1(data);
+        if dims.len() == 1 {
+            return Ok(l);
+        }
+        l.reshape(dims)
+            .map_err(|e| anyhow::anyhow!("reshape: {e:?}"))
+    }
+
+    fn lit_i32(data: &[i32], dims: &[i64]) -> anyhow::Result<xla::Literal> {
+        let l = xla::Literal::vec1(data);
+        if dims.len() == 1 {
+            return Ok(l);
+        }
+        l.reshape(dims)
+            .map_err(|e| anyhow::anyhow!("reshape: {e:?}"))
+    }
+
+    /// g(θ; B, S): one microbatch forward/backward (reduction=sum).
+    ///
+    /// `tokens` is row-major `[batch, seq_len]`, `mask` is per-example
+    /// (0.0 = filtered slot — Lemma A.2(ii) masking), `seed` is the WAL
+    /// seed64 truncated to the graph's i32 input.
+    pub fn train_step(
+        &self,
+        params: &[f32],
+        tokens: &[i32],
+        mask: &[f32],
+        seed: i32,
+    ) -> anyhow::Result<StepOut> {
+        let (b, s) = (self.manifest.batch, self.manifest.seq_len);
+        anyhow::ensure!(tokens.len() == b * s, "tokens shape");
+        anyhow::ensure!(mask.len() == b, "mask shape");
+        anyhow::ensure!(params.len() == self.manifest.param_count, "params");
+        let out = self.run(
+            "train_step",
+            &[
+                Self::lit_f32(params, &[params.len() as i64])?,
+                Self::lit_i32(tokens, &[b as i64, s as i64])?,
+                Self::lit_f32(mask, &[b as i64])?,
+                xla::Literal::scalar(seed),
+            ],
+        )?;
+        anyhow::ensure!(out.len() == 3, "train_step arity");
+        Ok(StepOut {
+            grad: Self::f32_vec(&out[0])?,
+            loss_sum: Self::f32_vec(&out[1])?[0],
+            tok_count: Self::f32_vec(&out[2])?[0],
+        })
+    }
+
+    /// UPDATE: global-norm clip + fused-AdamW (the Pallas L1 kernel).
+    /// `step` is the 1-based applied-update counter.
+    pub fn adamw_update(
+        &self,
+        params: &[f32],
+        grad: &[f32],
+        m: &[f32],
+        v: &[f32],
+        step: i32,
+        lr: f32,
+    ) -> anyhow::Result<(Vec<f32>, Vec<f32>, Vec<f32>)> {
+        self.update_inner("adamw_update", params, grad, m, v, step, lr)
+    }
+
+    /// AdamW over the LoRA parameter vector (adapter training).
+    pub fn lora_adamw(
+        &self,
+        lora: &[f32],
+        grad: &[f32],
+        m: &[f32],
+        v: &[f32],
+        step: i32,
+        lr: f32,
+    ) -> anyhow::Result<(Vec<f32>, Vec<f32>, Vec<f32>)> {
+        self.update_inner("lora_adamw", lora, grad, m, v, step, lr)
+    }
+
+    fn update_inner(
+        &self,
+        graph: &'static str,
+        params: &[f32],
+        grad: &[f32],
+        m: &[f32],
+        v: &[f32],
+        step: i32,
+        lr: f32,
+    ) -> anyhow::Result<(Vec<f32>, Vec<f32>, Vec<f32>)> {
+        let n = params.len() as i64;
+        let out = self.run(
+            graph,
+            &[
+                Self::lit_f32(params, &[n])?,
+                Self::lit_f32(grad, &[n])?,
+                Self::lit_f32(m, &[n])?,
+                Self::lit_f32(v, &[n])?,
+                xla::Literal::scalar(step),
+                xla::Literal::scalar(lr),
+            ],
+        )?;
+        anyhow::ensure!(out.len() == 3, "{graph} arity");
+        Ok((
+            Self::f32_vec(&out[0])?,
+            Self::f32_vec(&out[1])?,
+            Self::f32_vec(&out[2])?,
+        ))
+    }
+
+    /// Per-example eval loss: (loss_sum[eval_batch], count[eval_batch]).
+    pub fn eval_loss(
+        &self,
+        params: &[f32],
+        tokens: &[i32],
+    ) -> anyhow::Result<(Vec<f32>, Vec<f32>)> {
+        let (b, s) = (self.manifest.eval_batch, self.manifest.seq_len);
+        anyhow::ensure!(tokens.len() == b * s, "eval tokens shape");
+        let out = self.run(
+            "eval_loss",
+            &[
+                Self::lit_f32(params, &[params.len() as i64])?,
+                Self::lit_i32(tokens, &[b as i64, s as i64])?,
+            ],
+        )?;
+        Ok((Self::f32_vec(&out[0])?, Self::f32_vec(&out[1])?))
+    }
+
+    /// Next-token logits at position `lens[b]-1` (greedy decoding).
+    pub fn next_logits(
+        &self,
+        params: &[f32],
+        tokens: &[i32],
+        lens: &[i32],
+    ) -> anyhow::Result<Vec<f32>> {
+        let (b, s) = (self.manifest.eval_batch, self.manifest.seq_len);
+        anyhow::ensure!(tokens.len() == b * s && lens.len() == b);
+        let out = self.run(
+            "next_logits",
+            &[
+                Self::lit_f32(params, &[params.len() as i64])?,
+                Self::lit_i32(tokens, &[b as i64, s as i64])?,
+                Self::lit_i32(lens, &[b as i64])?,
+            ],
+        )?;
+        Self::f32_vec(&out[0])
+    }
+
+    /// LoRA microbatch step: gradient w.r.t. the adapter only (base
+    /// strictly frozen — the G2 precondition is enforced in the graph).
+    pub fn lora_step(
+        &self,
+        base: &[f32],
+        lora: &[f32],
+        tokens: &[i32],
+        mask: &[f32],
+        seed: i32,
+    ) -> anyhow::Result<StepOut> {
+        let (b, s) = (self.manifest.batch, self.manifest.seq_len);
+        let out = self.run(
+            "lora_step",
+            &[
+                Self::lit_f32(base, &[base.len() as i64])?,
+                Self::lit_f32(lora, &[lora.len() as i64])?,
+                Self::lit_i32(tokens, &[b as i64, s as i64])?,
+                Self::lit_f32(mask, &[b as i64])?,
+                xla::Literal::scalar(seed),
+            ],
+        )?;
+        Ok(StepOut {
+            grad: Self::f32_vec(&out[0])?,
+            loss_sum: Self::f32_vec(&out[1])?[0],
+            tok_count: Self::f32_vec(&out[2])?[0],
+        })
+    }
+
+    /// Eval loss with an adapter patch applied (serving-path audits).
+    pub fn lora_eval(
+        &self,
+        base: &[f32],
+        lora: &[f32],
+        tokens: &[i32],
+    ) -> anyhow::Result<(Vec<f32>, Vec<f32>)> {
+        let (b, s) = (self.manifest.eval_batch, self.manifest.seq_len);
+        let out = self.run(
+            "lora_eval",
+            &[
+                Self::lit_f32(base, &[base.len() as i64])?,
+                Self::lit_f32(lora, &[lora.len() as i64])?,
+                Self::lit_i32(tokens, &[b as i64, s as i64])?,
+            ],
+        )?;
+        Ok((Self::f32_vec(&out[0])?, Self::f32_vec(&out[1])?))
+    }
+
+    /// Next-token logits with an adapter patch applied.
+    pub fn lora_next_logits(
+        &self,
+        base: &[f32],
+        lora: &[f32],
+        tokens: &[i32],
+        lens: &[i32],
+    ) -> anyhow::Result<Vec<f32>> {
+        let (b, s) = (self.manifest.eval_batch, self.manifest.seq_len);
+        let out = self.run(
+            "lora_next_logits",
+            &[
+                Self::lit_f32(base, &[base.len() as i64])?,
+                Self::lit_f32(lora, &[lora.len() as i64])?,
+                Self::lit_i32(tokens, &[b as i64, s as i64])?,
+                Self::lit_i32(lens, &[b as i64])?,
+            ],
+        )?;
+        Self::f32_vec(&out[0])
+    }
+}

@@ -1,0 +1,199 @@
+//! Admin server: forget requests over TCP, line-delimited JSON.
+//!
+//! (tokio is not in the offline vendor set — std::net + a thread per
+//! connection is fully adequate for an admin/control plane; the request
+//! path of the *model* is not served here.)
+//!
+//! Protocol (one JSON object per line):
+//!   {"op":"status"}
+//!   {"op":"forget","id":"req-1","user":3,"urgency":"high"}
+//!   {"op":"forget","id":"req-2","sample_ids":[1,2,3]}
+//!   {"op":"audit"}
+//!   {"op":"manifest"}
+//!   {"op":"shutdown"}
+//! Response: one JSON object per line: {"ok":true,...} / {"ok":false,"error":...}
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::audit::{run_audits, ModelView};
+use crate::controller::{ForgetRequest, UnlearnSystem, Urgency};
+use crate::util::json::{parse, Json};
+
+/// Serve `system` on `addr` until a shutdown op arrives.  Connections
+/// are handled sequentially: the PJRT client is not `Sync` (Rc + raw
+/// pointers inside the `xla` crate), and serializing controller actions
+/// is semantically what we want anyway — unlearning actions must not
+/// interleave (the Mutex would serialize them regardless).
+pub fn serve(
+    system: Arc<Mutex<UnlearnSystem<'_>>>,
+    addr: &str,
+) -> anyhow::Result<()> {
+    let listener = TcpListener::bind(addr)?;
+    let local = listener.local_addr()?;
+    eprintln!("unlearn admin server listening on {local}");
+    let shutdown = Arc::new(AtomicBool::new(false));
+    for stream in listener.incoming() {
+        if shutdown.load(Ordering::SeqCst) {
+            break;
+        }
+        let stream = stream?;
+        if let Err(e) =
+            handle_conn(stream, Arc::clone(&system), Arc::clone(&shutdown))
+        {
+            eprintln!("connection error: {e:#}");
+        }
+        if shutdown.load(Ordering::SeqCst) {
+            break;
+        }
+    }
+    Ok(())
+}
+
+fn handle_conn(
+    stream: TcpStream,
+    system: Arc<Mutex<UnlearnSystem<'_>>>,
+    shutdown: Arc<AtomicBool>,
+) -> anyhow::Result<()> {
+    let peer = stream.peer_addr()?;
+    let mut reader = BufReader::new(stream.try_clone()?);
+    let mut stream = stream;
+    let mut line = String::new();
+    loop {
+        line.clear();
+        if reader.read_line(&mut line)? == 0 {
+            return Ok(()); // connection closed
+        }
+        let response = dispatch(line.trim(), &system, &shutdown);
+        writeln!(stream, "{}", response.encode())?;
+        if shutdown.load(Ordering::SeqCst) {
+            let _ = peer; // connection ends; serve() observes the flag
+            return Ok(());
+        }
+    }
+}
+
+/// Execute one op (exposed for unit tests without sockets).
+pub fn dispatch(
+    line: &str,
+    system: &Mutex<UnlearnSystem<'_>>,
+    shutdown: &AtomicBool,
+) -> Json {
+    match dispatch_inner(line, system, shutdown) {
+        Ok(j) => j,
+        Err(e) => {
+            let mut j = Json::obj();
+            j.set("ok", false).set("error", format!("{e:#}"));
+            j
+        }
+    }
+}
+
+fn dispatch_inner(
+    line: &str,
+    system: &Mutex<UnlearnSystem<'_>>,
+    shutdown: &AtomicBool,
+) -> anyhow::Result<Json> {
+    let req = parse(line).map_err(|e| anyhow::anyhow!("bad json: {e}"))?;
+    let op = req
+        .get("op")
+        .and_then(|v| v.as_str())
+        .ok_or_else(|| anyhow::anyhow!("missing op"))?;
+    let mut out = Json::obj();
+    match op {
+        "status" => {
+            let sys = system.lock().unwrap();
+            out.set("ok", true)
+                .set("model_hash", sys.state.model_hash())
+                .set("optimizer_hash", sys.state.optimizer_hash())
+                .set("logical_step", sys.state.logical_step)
+                .set("applied_updates", sys.state.applied_updates)
+                .set("ring_available", sys.ring.available())
+                .set("adapters", sys.adapters.len())
+                .set("manifest_entries", sys.manifest.len());
+        }
+        "forget" => {
+            let id = req
+                .get("id")
+                .and_then(|v| v.as_str())
+                .ok_or_else(|| anyhow::anyhow!("forget needs id"))?
+                .to_string();
+            let user = req.get("user").and_then(|v| v.as_u64()).map(|u| u as u32);
+            let sample_ids: Vec<u64> = req
+                .get("sample_ids")
+                .and_then(|v| v.as_arr())
+                .map(|a| a.iter().filter_map(|x| x.as_u64()).collect())
+                .unwrap_or_default();
+            let urgency = match req.get("urgency").and_then(|v| v.as_str()) {
+                Some("high") => Urgency::High,
+                _ => Urgency::Normal,
+            };
+            let freq = ForgetRequest {
+                id,
+                user,
+                sample_ids,
+                urgency,
+            };
+            let mut sys = system.lock().unwrap();
+            let outcome = sys.handle(&freq)?;
+            out.set("ok", true)
+                .set("action", outcome.action.as_str())
+                .set("executed", outcome.executed)
+                .set("closure_size", outcome.closure_size)
+                .set("closure_expanded", outcome.closure_expanded)
+                .set(
+                    "audit_pass",
+                    outcome
+                        .audit
+                        .as_ref()
+                        .map(|a| Json::Bool(a.pass()))
+                        .unwrap_or(Json::Null),
+                )
+                .set(
+                    "escalations",
+                    Json::Arr(
+                        outcome
+                            .escalations
+                            .iter()
+                            .map(|s| Json::Str(s.clone()))
+                            .collect(),
+                    ),
+                )
+                .set("details", outcome.details);
+        }
+        "audit" => {
+            let sys = system.lock().unwrap();
+            let closure: Vec<u64> = sys.retain_ids.iter().take(8).copied().collect();
+            let ctx = crate::audit::AuditContext {
+                rt: sys.rt,
+                corpus: &sys.corpus,
+                forget_ids: &closure,
+                retain_ids: &sys.retain_ids,
+                eval_ids: &sys.eval_ids,
+                baseline_ppl: sys.baseline_ppl,
+                thresholds: sys.thresholds.clone(),
+                seed: sys.audit_seed,
+            };
+            let report = run_audits(&ctx, ModelView::Base(&sys.state.params))?;
+            out.set("ok", true).set("report", report.to_json());
+        }
+        "manifest" => {
+            let sys = system.lock().unwrap();
+            let chain = sys.manifest.verify_chain()?;
+            out.set("ok", true)
+                .set("entries", chain.len())
+                .set(
+                    "signatures_valid",
+                    chain.iter().all(|(_, s)| *s),
+                );
+        }
+        "shutdown" => {
+            shutdown.store(true, Ordering::SeqCst);
+            out.set("ok", true).set("shutting_down", true);
+        }
+        other => anyhow::bail!("unknown op {other:?}"),
+    }
+    Ok(out)
+}

@@ -1,0 +1,248 @@
+//! The training loop proper.
+
+use std::path::PathBuf;
+
+use crate::checkpoint::{CheckpointStore, TrainState};
+use crate::config::RunConfig;
+use crate::data::corpus::Corpus;
+use crate::data::sampler::{DeterministicSampler, Microbatch};
+use crate::deltas::{DeltaRing, PatchMode};
+use crate::runtime::Runtime;
+use crate::util::json::Json;
+use crate::wal::{IdMap, WalRecord, WalWriter};
+
+use super::{accumulate, build_microbatch_tensors};
+
+/// Everything a finished training run leaves on disk / in memory.
+pub struct TrainOutput {
+    pub state: TrainState,
+    pub ring: DeltaRing,
+    pub idmap: IdMap,
+    pub losses: Vec<(u32, f32)>, // (logical step, mean loss/token)
+    pub wal_dir: PathBuf,
+    pub run_dir: PathBuf,
+}
+
+/// Deterministic trainer over the AOT runtime.
+pub struct Trainer<'rt> {
+    pub runtime: &'rt Runtime,
+    pub cfg: RunConfig,
+    pub corpus: Corpus,
+}
+
+impl<'rt> Trainer<'rt> {
+    pub fn new(runtime: &'rt Runtime, cfg: RunConfig, corpus: Corpus) -> Self {
+        Trainer {
+            runtime,
+            cfg,
+            corpus,
+        }
+    }
+
+    /// The sampler that defines the logical microbatch graph G.
+    pub fn sampler(&self) -> DeterministicSampler {
+        DeterministicSampler::new(
+            self.corpus.len(),
+            self.runtime.manifest.batch,
+            self.cfg.accum,
+            self.cfg.steps,
+            self.cfg.run_seed,
+        )
+    }
+
+    /// Run the full training program, producing WAL + checkpoints +
+    /// delta ring + loss curve.  `filter` masks samples from the very
+    /// start (used to build preserved-graph oracle retrains; pass
+    /// `|_| false` for normal training).
+    pub fn train(
+        &self,
+        filter: impl Fn(u64) -> bool,
+    ) -> anyhow::Result<TrainOutput> {
+        self.train_inner(filter, None)
+    }
+
+    /// Train with samples *excluded from the dataloader* (they never
+    /// enter the microbatch graph or the WAL) — how cohort data is
+    /// firewalled before adapter training (G2 workloads).  Distinct from
+    /// mask-based filtering, which preserves the graph.
+    pub fn train_excluding(
+        &self,
+        exclude: &std::collections::HashSet<u64>,
+    ) -> anyhow::Result<TrainOutput> {
+        self.train_inner(|_| false, Some(exclude))
+    }
+
+    fn train_inner(
+        &self,
+        filter: impl Fn(u64) -> bool,
+        exclude: Option<&std::collections::HashSet<u64>>,
+    ) -> anyhow::Result<TrainOutput> {
+        let rt = self.runtime;
+        let cfg = &self.cfg;
+        let man = &rt.manifest;
+        std::fs::create_dir_all(&cfg.run_dir)?;
+        let wal_dir = cfg.run_dir.join("wal");
+        let mut wal = WalWriter::create(
+            &wal_dir,
+            cfg.wal_segment_records,
+            cfg.hmac_key.clone(),
+        )?;
+        wal.enable_sidecar()?;
+        let mut idmap = IdMap::new(cfg.hmac_key.clone());
+        let store =
+            CheckpointStore::open(&cfg.run_dir.join("ckpt"), cfg.checkpoint_keep)?;
+        let mut ring = DeltaRing::new(
+            man.param_count,
+            cfg.ring_window,
+            PatchMode::Xor,
+            cfg.ring_revert_optimizer,
+        );
+
+        // θ0 from the AOT artifact; save as the step-0 checkpoint so
+        // replay can always reach back to the very beginning.
+        let mut state = TrainState::zeros_like(man.init_params()?);
+        store.save_full(&state)?;
+
+        // persist run metadata + pins (fail-closed contract for replay)
+        let pins = rt.capture_pins(cfg.accum);
+        pins.save(&cfg.run_dir.join("pins.json"))?;
+        std::fs::write(
+            cfg.run_dir.join("run_config.json"),
+            cfg.to_json().pretty(),
+        )?;
+
+        let mut schedule = self.sampler().schedule();
+        if let Some(ex) = exclude {
+            // dataloader-level exclusion: ids vanish from the graph
+            for mb in &mut schedule {
+                mb.sample_ids.retain(|id| !ex.contains(id));
+            }
+        }
+        let mut losses = Vec::new();
+        let mut grad_acc = vec![0.0f32; man.param_count];
+        let mut had_contrib = false;
+        let mut step_loss = 0.0f32;
+        let mut step_tokens = 0.0f32;
+
+        for mb in &schedule {
+            let lr = cfg.lr_at(state.applied_updates);
+            self.log_record(&mut wal, &mut idmap, mb, lr)?;
+            let (tokens, mask, retained) = build_microbatch_tensors(
+                &self.corpus,
+                &mb.sample_ids,
+                man.batch,
+                man.seq_len,
+                &filter,
+                false,
+            )?;
+            if retained > 0 {
+                let out = rt.train_step(
+                    &state.params,
+                    &tokens,
+                    &mask,
+                    mb.seed64 as i32,
+                )?;
+                accumulate(&mut grad_acc, &out.grad);
+                had_contrib = true;
+                step_loss += out.loss_sum;
+                step_tokens += out.tok_count;
+            }
+            if mb.accum_end {
+                if had_contrib {
+                    let before = state.clone();
+                    let (p, m, v) = rt.adamw_update(
+                        &state.params,
+                        &grad_acc,
+                        &state.m,
+                        &state.v,
+                        state.applied_updates as i32 + 1,
+                        lr,
+                    )?;
+                    state.params = p;
+                    state.m = m;
+                    state.v = v;
+                    state.applied_updates += 1;
+                    state.logical_step = mb.step + 1;
+                    ring.record(&before, &state);
+                } else {
+                    // empty-step skip (Prop. A.5): no counter advance
+                    state.logical_step = mb.step + 1;
+                }
+                if step_tokens > 0.0 {
+                    losses.push((mb.step, step_loss / step_tokens));
+                }
+                grad_acc.iter_mut().for_each(|x| *x = 0.0);
+                had_contrib = false;
+                step_loss = 0.0;
+                step_tokens = 0.0;
+
+                let done = mb.step + 1;
+                if cfg.checkpoint_every > 0 && done % cfg.checkpoint_every == 0
+                {
+                    store.save_full(&state)?;
+                }
+                if cfg.micro_checkpoint_every > 0
+                    && done % cfg.micro_checkpoint_every == 0
+                {
+                    store.save_micro(&state)?;
+                }
+            }
+        }
+
+        // final checkpoint + artifacts
+        store.save_full(&state)?;
+        idmap.save(&cfg.run_dir.join("ids.map"))?;
+        wal.finish()?;
+        self.write_losses(&losses)?;
+        Ok(TrainOutput {
+            state,
+            ring,
+            idmap,
+            losses,
+            wal_dir,
+            run_dir: cfg.run_dir.clone(),
+        })
+    }
+
+    fn log_record(
+        &self,
+        wal: &mut WalWriter,
+        idmap: &mut IdMap,
+        mb: &Microbatch,
+        lr: f32,
+    ) -> anyhow::Result<()> {
+        let hash64 = idmap.register(&mb.sample_ids);
+        wal.append(&WalRecord {
+            hash64,
+            seed64: mb.seed64,
+            lr_bits: lr.to_bits(),
+            opt_step: mb.step,
+            accum_end: mb.accum_end,
+            mb_len: mb.sample_ids.len() as u16,
+        })
+    }
+
+    fn write_losses(&self, losses: &[(u32, f32)]) -> anyhow::Result<()> {
+        let mut csv = String::from("step,loss_per_token\n");
+        for (s, l) in losses {
+            csv.push_str(&format!("{s},{l}\n"));
+        }
+        std::fs::write(self.cfg.run_dir.join("losses.csv"), csv)?;
+        let mut j = Json::obj();
+        j.set(
+            "losses",
+            Json::Arr(
+                losses
+                    .iter()
+                    .map(|(s, l)| {
+                        let mut o = Json::obj();
+                        o.set("step", *s).set("loss_per_token", *l);
+                        o
+                    })
+                    .collect(),
+            ),
+        );
+        std::fs::write(self.cfg.run_dir.join("losses.json"), j.encode())?;
+        Ok(())
+    }
+}

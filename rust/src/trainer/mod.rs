@@ -1,0 +1,126 @@
+//! Deterministic trainer (paper §4.1): the training program Π whose
+//! control inputs are fully logged.
+//!
+//! Per microbatch it (1) registers the ordered sample IDs in the IdMap,
+//! (2) appends the 32-byte WAL record (Alg. A.1), (3) executes the
+//! `train_step` graph, (4) accumulates gradients in an explicit,
+//! logged order.  At each accumulation boundary it applies the fused
+//! AdamW update with the *logged* LR value, records the per-step delta
+//! in the ring buffer, and takes checkpoints on the configured cadence.
+
+pub mod loop_;
+
+pub use loop_::{TrainOutput, Trainer};
+
+use crate::data::corpus::Corpus;
+
+/// Build the padded `[batch, seq_len]` token tensor + per-example mask
+/// for an ordered ID list.  Slots beyond `ids.len()` are PAD + mask 0.
+/// If `filter(id)` is true the slot's mask is forced to 0; with
+/// `zero_content` its *content* is scrubbed too (all-PAD) — used by
+/// content-scrubbed replay (bitwise content-independence makes this
+/// exact; see `python/tests/test_model.py::
+/// test_mask_content_independence_bitwise`).
+pub fn build_microbatch_tensors(
+    corpus: &Corpus,
+    ids: &[u64],
+    batch: usize,
+    seq_len: usize,
+    filter: impl Fn(u64) -> bool,
+    zero_content: bool,
+) -> anyhow::Result<(Vec<i32>, Vec<f32>, usize)> {
+    anyhow::ensure!(ids.len() <= batch, "microbatch larger than batch dim");
+    let mut tokens = vec![0i32; batch * seq_len];
+    let mut mask = vec![0.0f32; batch];
+    let mut retained = 0usize;
+    for (slot, &id) in ids.iter().enumerate() {
+        if filter(id) {
+            // filtered: mask stays 0; content scrubbed if requested
+            if !zero_content {
+                let s = corpus
+                    .by_id(id)
+                    .ok_or_else(|| anyhow::anyhow!("unknown sample {id}"))?;
+                tokens[slot * seq_len..(slot + 1) * seq_len]
+                    .copy_from_slice(&s.tokens);
+            }
+        } else {
+            let s = corpus
+                .by_id(id)
+                .ok_or_else(|| anyhow::anyhow!("unknown sample {id}"))?;
+            anyhow::ensure!(s.tokens.len() == seq_len, "token length");
+            tokens[slot * seq_len..(slot + 1) * seq_len]
+                .copy_from_slice(&s.tokens);
+            mask[slot] = 1.0;
+            retained += 1;
+        }
+    }
+    Ok((tokens, mask, retained))
+}
+
+/// Deterministic in-place gradient accumulation: `acc += g`, sequential
+/// element order (the explicit, logged summation order of Lemma A.3).
+pub fn accumulate(acc: &mut [f32], g: &[f32]) {
+    debug_assert_eq!(acc.len(), g.len());
+    for (a, x) in acc.iter_mut().zip(g) {
+        *a += x;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::corpus::{Corpus, CorpusConfig};
+
+    fn corpus() -> Corpus {
+        Corpus::generate(CorpusConfig {
+            n_users: 4,
+            docs_per_user: 2,
+            n_canary_users: 0,
+            canaries_per_user: 0,
+            near_dup_rate: 0.0,
+            seq_len: 16,
+            seed: 1,
+        })
+    }
+
+    #[test]
+    fn tensors_pad_and_mask() {
+        let c = corpus();
+        let (tokens, mask, retained) =
+            build_microbatch_tensors(&c, &[0, 1, 2], 4, 16, |_| false, false)
+                .unwrap();
+        assert_eq!(tokens.len(), 64);
+        assert_eq!(mask, vec![1.0, 1.0, 1.0, 0.0]);
+        assert_eq!(retained, 3);
+        assert!(tokens[48..].iter().all(|&t| t == 0)); // padded slot
+    }
+
+    #[test]
+    fn filtering_masks_and_scrubs() {
+        let c = corpus();
+        let (tokens, mask, retained) =
+            build_microbatch_tensors(&c, &[0, 1], 2, 16, |id| id == 0, true)
+                .unwrap();
+        assert_eq!(mask, vec![0.0, 1.0]);
+        assert_eq!(retained, 1);
+        assert!(tokens[..16].iter().all(|&t| t == 0), "content scrubbed");
+        assert_eq!(&tokens[16..32], c.by_id(1).unwrap().tokens.as_slice());
+    }
+
+    #[test]
+    fn filtering_without_scrub_keeps_content() {
+        let c = corpus();
+        let (tokens, mask, _) =
+            build_microbatch_tensors(&c, &[0, 1], 2, 16, |id| id == 0, false)
+                .unwrap();
+        assert_eq!(mask[0], 0.0);
+        assert_eq!(&tokens[..16], c.by_id(0).unwrap().tokens.as_slice());
+    }
+
+    #[test]
+    fn accumulate_is_elementwise_sum() {
+        let mut acc = vec![1.0f32, 2.0, 3.0];
+        accumulate(&mut acc, &[0.5, -2.0, 1.0]);
+        assert_eq!(acc, vec![1.5, 0.0, 4.0]);
+    }
+}

@@ -1,0 +1,140 @@
+//! Exact byte-level views of f32 tensors.
+//!
+//! Everything the paper's exactness story touches — checkpoints, XOR
+//! patches, state hashes — must operate on the *raw dtype bit patterns*
+//! (G3a).  These helpers are the only place we convert between `f32`
+//! vectors and little-endian byte streams, so the representation is
+//! defined exactly once.
+
+/// f32 slice -> little-endian bytes.
+pub fn f32s_to_bytes(v: &[f32]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(v.len() * 4);
+    for x in v {
+        out.extend_from_slice(&x.to_le_bytes());
+    }
+    out
+}
+
+/// Little-endian bytes -> f32 vector.  Errors if length is not 4-aligned.
+pub fn bytes_to_f32s(b: &[u8]) -> anyhow::Result<Vec<f32>> {
+    anyhow::ensure!(b.len() % 4 == 0, "byte length {} not 4-aligned", b.len());
+    Ok(b.chunks_exact(4)
+        .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+        .collect())
+}
+
+/// Bit-pattern equality of two f32 slices (NaN-safe, -0.0 != +0.0):
+/// the "bit-identical in training dtype" relation of G1.
+pub fn bits_equal(a: &[f32], b: &[f32]) -> bool {
+    a.len() == b.len()
+        && a.iter()
+            .zip(b)
+            .all(|(x, y)| x.to_bits() == y.to_bits())
+}
+
+/// First index where bit patterns differ (diagnostics for CI-gate output).
+pub fn first_bit_mismatch(a: &[f32], b: &[f32]) -> Option<usize> {
+    if a.len() != b.len() {
+        return Some(a.len().min(b.len()));
+    }
+    a.iter()
+        .zip(b)
+        .position(|(x, y)| x.to_bits() != y.to_bits())
+}
+
+/// Max |a - b| (diagnostics; Table 4 reports this for the inexact regime).
+pub fn max_abs_diff(a: &[f32], b: &[f32]) -> f32 {
+    a.iter()
+        .zip(b)
+        .map(|(x, y)| (x - y).abs())
+        .fold(0.0f32, f32::max)
+}
+
+/// XOR two byte slices elementwise into a fresh vector (G3a patches).
+pub fn xor_bytes(a: &[u8], b: &[u8]) -> Vec<u8> {
+    assert_eq!(a.len(), b.len(), "xor length mismatch");
+    a.iter().zip(b).map(|(x, y)| x ^ y).collect()
+}
+
+/// In-place XOR: `dst ^= src`.
+pub fn xor_in_place(dst: &mut [u8], src: &[u8]) {
+    assert_eq!(dst.len(), src.len(), "xor length mismatch");
+    for (d, s) in dst.iter_mut().zip(src) {
+        *d ^= s;
+    }
+}
+
+/// Content hash of an f32 tensor state (the Table 5 model/optimizer
+/// hashes): SHA-256 over the LE byte image, truncated to 64 bits and
+/// hex-encoded like the paper's `82c10410...b978339c` style.
+pub fn state_hash64(v: &[f32]) -> String {
+    let h = super::hashing::sha256(&f32s_to_bytes(v));
+    super::hashing::hex(&h[..8])
+}
+
+/// Full SHA-256 content hash of an f32 tensor state.
+pub fn state_hash_full(v: &[f32]) -> String {
+    super::hashing::sha256_hex(&f32s_to_bytes(v))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_exact_bits() {
+        let v = vec![
+            0.0f32,
+            -0.0,
+            1.5,
+            f32::NAN,
+            f32::INFINITY,
+            f32::MIN_POSITIVE,
+            -123.456,
+            f32::from_bits(0x7f800001), // signaling NaN pattern
+        ];
+        let b = f32s_to_bytes(&v);
+        let back = bytes_to_f32s(&b).unwrap();
+        assert!(bits_equal(&v, &back));
+    }
+
+    #[test]
+    fn bits_equal_distinguishes_zero_signs() {
+        assert!(!bits_equal(&[0.0], &[-0.0]));
+        assert!(bits_equal(&[f32::NAN], &[f32::NAN]));
+    }
+
+    #[test]
+    fn xor_is_involution() {
+        let a: Vec<u8> = (0..=255).collect();
+        let b: Vec<u8> = (0..=255).rev().collect();
+        let patch = xor_bytes(&a, &b);
+        let mut restored = b.clone();
+        xor_in_place(&mut restored, &patch);
+        assert_eq!(restored, a);
+    }
+
+    #[test]
+    fn mismatch_index() {
+        let a = vec![1.0f32, 2.0, 3.0];
+        let mut b = a.clone();
+        assert_eq!(first_bit_mismatch(&a, &b), None);
+        b[1] = f32::from_bits(b[1].to_bits() ^ 1); // single-ULP flip
+        assert_eq!(first_bit_mismatch(&a, &b), Some(1));
+    }
+
+    #[test]
+    fn state_hash_is_stable_and_sensitive() {
+        let v = vec![1.0f32; 100];
+        assert_eq!(state_hash64(&v), state_hash64(&v));
+        let mut w = v.clone();
+        w[99] = f32::from_bits(v[99].to_bits() ^ 1); // single-ULP flip
+        assert_ne!(state_hash64(&v), state_hash64(&w));
+        assert_eq!(state_hash64(&v).len(), 16);
+    }
+
+    #[test]
+    fn rejects_unaligned() {
+        assert!(bytes_to_f32s(&[0, 1, 2]).is_err());
+    }
+}

@@ -1,0 +1,124 @@
+//! Tiny CLI argument parser (clap is not in the offline vendor set).
+//!
+//! Supports `--flag`, `--key value`, `--key=value`, positional arguments
+//! and subcommands, which is everything the `unlearn` binary needs.
+
+use std::collections::BTreeMap;
+
+/// Parsed command line: subcommand, options, flags, positionals.
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    opts: BTreeMap<String, String>,
+    flags: Vec<String>,
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of raw args (without argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(raw: I) -> Args {
+        let mut out = Args::default();
+        let mut it = raw.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(stripped) = a.strip_prefix("--") {
+                if let Some((k, v)) = stripped.split_once('=') {
+                    out.opts.insert(k.to_string(), v.to_string());
+                } else if it
+                    .peek()
+                    .map(|n| !n.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let v = it.next().unwrap();
+                    out.opts.insert(stripped.to_string(), v);
+                } else {
+                    out.flags.push(stripped.to_string());
+                }
+            } else if out.subcommand.is_none() && out.positional.is_empty() {
+                out.subcommand = Some(a);
+            } else {
+                out.positional.push(a);
+            }
+        }
+        out
+    }
+
+    /// Parse from the process environment.
+    pub fn from_env() -> Args {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.opts.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    pub fn get_usize(&self, name: &str, default: usize) -> anyhow::Result<usize> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|e| anyhow::anyhow!("--{name} {v:?}: {e}")),
+        }
+    }
+
+    pub fn get_u64(&self, name: &str, default: u64) -> anyhow::Result<u64> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|e| anyhow::anyhow!("--{name} {v:?}: {e}")),
+        }
+    }
+
+    pub fn get_f32(&self, name: &str, default: f32) -> anyhow::Result<f32> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|e| anyhow::anyhow!("--{name} {v:?}: {e}")),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn args(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from))
+    }
+
+    #[test]
+    fn parses_subcommand_opts_flags() {
+        // NOTE on grammar: `--name value` is always an option; bare flags
+        // must therefore come last or be followed by another `--` token
+        // (documented in the binary's --help).
+        let a = args("train data.bin --steps 200 --lr=1e-3 --verbose");
+        assert_eq!(a.subcommand.as_deref(), Some("train"));
+        assert_eq!(a.get("steps"), Some("200"));
+        assert_eq!(a.get_f32("lr", 0.0).unwrap(), 1e-3);
+        assert!(a.flag("verbose"));
+        assert_eq!(a.positional, vec!["data.bin"]);
+    }
+
+    #[test]
+    fn defaults_and_errors() {
+        let a = args("x --n notanumber");
+        assert_eq!(a.get_usize("missing", 7).unwrap(), 7);
+        assert!(a.get_usize("n", 0).is_err());
+    }
+
+    #[test]
+    fn trailing_flag() {
+        let a = args("run --fast");
+        assert!(a.flag("fast"));
+        assert_eq!(a.get("fast"), None);
+    }
+}

@@ -1,0 +1,27 @@
+//! Substrate utilities built in-repo (the image is offline; see Cargo.toml
+//! for the vendored-crate constraint that motivates the DIY pieces).
+
+pub mod bytes;
+pub mod cli;
+pub mod compress;
+pub mod hashing;
+pub mod json;
+pub mod prop;
+pub mod rng;
+
+/// Fresh temp directory for tests and benches (unique per call).
+pub fn tempdir(tag: &str) -> std::path::PathBuf {
+    use std::sync::atomic::{AtomicU64, Ordering};
+    static N: AtomicU64 = AtomicU64::new(0);
+    let d = std::env::temp_dir().join(format!(
+        "unlearn-{tag}-{}-{}-{}",
+        std::process::id(),
+        N.fetch_add(1, Ordering::Relaxed),
+        std::time::SystemTime::now()
+            .duration_since(std::time::UNIX_EPOCH)
+            .unwrap()
+            .as_nanos()
+    ));
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}

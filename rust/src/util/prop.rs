@@ -1,0 +1,111 @@
+//! Seeded property-testing harness (proptest is not in the offline vendor
+//! set).  Provides the two pieces we actually use from a PBT library:
+//! random case generation from a reproducible seed, and shrinking-free
+//! failure reporting that prints the case seed so a failure replays
+//! exactly with `CASE_SEED=<n> cargo test`.
+
+use crate::util::rng::SplitMix64;
+
+/// Number of cases per property (override with env `PROP_CASES`).
+pub fn default_cases() -> u64 {
+    std::env::var("PROP_CASES")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(64)
+}
+
+/// Run `f` on `cases` seeded RNGs; panic with the failing case seed.
+///
+/// ```ignore
+/// for_all("xor involution", |rng| {
+///     let n = rng.below(1000) as usize;
+///     ...
+/// });
+/// ```
+pub fn for_all<F: FnMut(&mut SplitMix64)>(name: &str, mut f: F) {
+    let base: u64 = std::env::var("CASE_SEED")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(0x5EED_0000);
+    let cases = if std::env::var("CASE_SEED").is_ok() {
+        1
+    } else {
+        default_cases()
+    };
+    for i in 0..cases {
+        let seed = base.wrapping_add(i);
+        let mut rng = SplitMix64::new(seed);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(
+            || f(&mut rng),
+        ));
+        if let Err(e) = result {
+            let msg = e
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| e.downcast_ref::<&str>().map(|s| s.to_string()))
+                .unwrap_or_else(|| "<non-string panic>".to_string());
+            panic!(
+                "property {name:?} failed on case seed {seed} \
+                 (replay: CASE_SEED={seed}): {msg}"
+            );
+        }
+    }
+}
+
+/// Random f32 vector with entries ~ N(0, scale).
+pub fn f32_vec(rng: &mut SplitMix64, len: usize, scale: f32) -> Vec<f32> {
+    (0..len).map(|_| rng.normal() as f32 * scale).collect()
+}
+
+/// Random byte vector.
+pub fn byte_vec(rng: &mut SplitMix64, len: usize) -> Vec<u8> {
+    (0..len).map(|_| rng.below(256) as u8).collect()
+}
+
+/// Random f32 vector including adversarial bit patterns (NaN, ±0, inf,
+/// denormals) — for exactness properties that must hold on raw bits.
+pub fn f32_vec_adversarial(rng: &mut SplitMix64, len: usize) -> Vec<f32> {
+    (0..len)
+        .map(|_| match rng.below(8) {
+            0 => f32::NAN,
+            1 => -0.0,
+            2 => f32::INFINITY,
+            3 => f32::NEG_INFINITY,
+            4 => f32::from_bits(rng.below(1 << 23) as u32), // denormal
+            _ => rng.normal() as f32,
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn for_all_runs_and_is_deterministic() {
+        let mut sum1 = 0u64;
+        for_all("accumulate", |rng| {
+            sum1 = sum1.wrapping_add(rng.next_u64());
+        });
+        let mut sum2 = 0u64;
+        for_all("accumulate", |rng| {
+            sum2 = sum2.wrapping_add(rng.next_u64());
+        });
+        assert_eq!(sum1, sum2);
+    }
+
+    #[test]
+    #[should_panic(expected = "case seed")]
+    fn failure_reports_seed() {
+        for_all("always fails", |_| panic!("boom"));
+    }
+
+    #[test]
+    fn adversarial_includes_special_values() {
+        let mut rng = SplitMix64::new(1);
+        let v = f32_vec_adversarial(&mut rng, 4000);
+        assert!(v.iter().any(|x| x.is_nan()));
+        assert!(v.iter().any(|x| x.is_infinite()));
+        assert!(v.iter().any(|x| x.to_bits() == 0x8000_0000)); // -0.0
+    }
+}

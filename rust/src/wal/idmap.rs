@@ -1,0 +1,190 @@
+//! The out-of-band manifest `M`: `hash64 → ordered sample IDs` (Def. 1).
+//!
+//! Access-controlled in production (it is the only artifact that links a
+//! WAL record back to concrete samples).  Binary format, one entry per
+//! microbatch: `[hash64 u64][count u16][id u64]*count`, with a trailing
+//! file SHA-256 in a `.sum` sidecar.
+
+use std::collections::HashMap;
+use std::fs;
+use std::io::Write;
+use std::path::Path;
+
+use crate::util::hashing::{hash_ordered_ids, sha256_hex};
+
+/// In-memory hash64 → ordered-IDs map.
+#[derive(Debug, Default, Clone)]
+pub struct IdMap {
+    map: HashMap<u64, Vec<u64>>,
+    /// Keyed (production) vs toy hashing — must match the trainer's mode.
+    pub hmac_key: Option<Vec<u8>>,
+}
+
+impl IdMap {
+    pub fn new(hmac_key: Option<Vec<u8>>) -> IdMap {
+        IdMap {
+            map: HashMap::new(),
+            hmac_key,
+        }
+    }
+
+    /// Register a microbatch; returns its hash64 (what goes in the WAL).
+    pub fn register(&mut self, ordered_ids: &[u64]) -> u64 {
+        let h = hash_ordered_ids(ordered_ids, self.hmac_key.as_deref());
+        self.map.insert(h, ordered_ids.to_vec());
+        h
+    }
+
+    /// Look up the ordered IDs for a WAL record hash (Alg. A.9 line 5).
+    pub fn lookup(&self, hash64: u64) -> Option<&[u64]> {
+        self.map.get(&hash64).map(|v| v.as_slice())
+    }
+
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+
+    /// Verify an entry hashes to its key (tamper check used by the
+    /// integrity scan).
+    pub fn verify(&self, hash64: u64) -> bool {
+        self.lookup(hash64)
+            .map(|ids| hash_ordered_ids(ids, self.hmac_key.as_deref()) == hash64)
+            .unwrap_or(false)
+    }
+
+    pub fn save(&self, path: &Path) -> anyhow::Result<()> {
+        let mut buf = Vec::new();
+        let mut keys: Vec<_> = self.map.keys().copied().collect();
+        keys.sort_unstable(); // deterministic file image
+        for h in keys {
+            let ids = &self.map[&h];
+            buf.extend_from_slice(&h.to_le_bytes());
+            buf.extend_from_slice(&(ids.len() as u16).to_le_bytes());
+            for id in ids {
+                buf.extend_from_slice(&id.to_le_bytes());
+            }
+        }
+        let mut f = fs::File::create(path)?;
+        f.write_all(&buf)?;
+        fs::write(
+            path.with_extension("map.sum"),
+            sha256_hex(&buf),
+        )?;
+        Ok(())
+    }
+
+    pub fn load(path: &Path, hmac_key: Option<Vec<u8>>) -> anyhow::Result<IdMap> {
+        let buf = fs::read(path)?;
+        let sum_path = path.with_extension("map.sum");
+        if sum_path.exists() {
+            let expect = fs::read_to_string(&sum_path)?;
+            anyhow::ensure!(
+                sha256_hex(&buf) == expect.trim(),
+                "IdMap checksum mismatch for {}",
+                path.display()
+            );
+        }
+        let mut map = HashMap::new();
+        let mut pos = 0usize;
+        while pos < buf.len() {
+            anyhow::ensure!(pos + 10 <= buf.len(), "truncated IdMap entry");
+            let h = u64::from_le_bytes(buf[pos..pos + 8].try_into().unwrap());
+            let n =
+                u16::from_le_bytes(buf[pos + 8..pos + 10].try_into().unwrap())
+                    as usize;
+            pos += 10;
+            anyhow::ensure!(pos + 8 * n <= buf.len(), "truncated IdMap ids");
+            let ids = buf[pos..pos + 8 * n]
+                .chunks_exact(8)
+                .map(|c| u64::from_le_bytes(c.try_into().unwrap()))
+                .collect();
+            pos += 8 * n;
+            map.insert(h, ids);
+        }
+        Ok(IdMap { map, hmac_key })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::for_all;
+    use crate::util::tempdir;
+
+    #[test]
+    fn register_lookup_roundtrip() {
+        let mut m = IdMap::new(None);
+        let h = m.register(&[10, 20, 30]);
+        assert_eq!(m.lookup(h).unwrap(), &[10, 20, 30]);
+        assert!(m.verify(h));
+        assert!(m.lookup(h ^ 1).is_none());
+    }
+
+    #[test]
+    fn order_matters() {
+        let mut m = IdMap::new(None);
+        let a = m.register(&[1, 2, 3]);
+        let b = m.register(&[3, 2, 1]);
+        assert_ne!(a, b);
+        assert_eq!(m.lookup(a).unwrap(), &[1, 2, 3]);
+        assert_eq!(m.lookup(b).unwrap(), &[3, 2, 1]);
+    }
+
+    #[test]
+    fn save_load_roundtrip() {
+        let dir = tempdir("idmap");
+        let mut m = IdMap::new(Some(b"k".to_vec()));
+        let mut hashes = Vec::new();
+        for i in 0..50u64 {
+            hashes.push(m.register(&[i, i * 7, i * 13]));
+        }
+        let path = dir.join("ids.map");
+        m.save(&path).unwrap();
+        let back = IdMap::load(&path, Some(b"k".to_vec())).unwrap();
+        for h in hashes {
+            assert_eq!(back.lookup(h), m.lookup(h));
+            assert!(back.verify(h));
+        }
+    }
+
+    #[test]
+    fn tamper_detected_on_load() {
+        let dir = tempdir("idmap-tamper");
+        let mut m = IdMap::new(None);
+        m.register(&[1, 2, 3]);
+        let path = dir.join("ids.map");
+        m.save(&path).unwrap();
+        let mut raw = std::fs::read(&path).unwrap();
+        raw[12] ^= 0xFF;
+        std::fs::write(&path, raw).unwrap();
+        assert!(IdMap::load(&path, None).is_err());
+    }
+
+    #[test]
+    fn prop_roundtrip_random_maps() {
+        let dir = tempdir("idmap-prop");
+        let mut case = 0u64;
+        for_all("idmap save/load", |rng| {
+            case += 1;
+            let mut m = IdMap::new(None);
+            let k = rng.below(20) + 1;
+            let mut hs = Vec::new();
+            for _ in 0..k {
+                let len = rng.below(16) as usize + 1;
+                let ids: Vec<u64> =
+                    (0..len).map(|_| rng.next_u64()).collect();
+                hs.push((m.register(&ids), ids));
+            }
+            let p = dir.join(format!("m{case}.map"));
+            m.save(&p).unwrap();
+            let back = IdMap::load(&p, None).unwrap();
+            for (h, ids) in hs {
+                assert_eq!(back.lookup(h).unwrap(), ids.as_slice());
+            }
+        });
+    }
+}

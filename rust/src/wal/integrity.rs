@@ -1,0 +1,235 @@
+//! WAL integrity scan (Alg. 5.1 step 6 / Alg. A.8 step 6):
+//! per-record CRC32, per-segment SHA-256 (+HMAC), `opt_step_u32` monotone
+//! and gap-free, accumulation-boundary structure, no record gaps.
+
+use std::path::Path;
+
+use crate::util::hashing::{hex, hmac_sha256, sha256_hex};
+use crate::util::json::parse;
+
+use super::reader::WalReader;
+use super::record::WalRecord;
+
+/// Result of a WAL scan.  `ok()` is the CI-gate pass condition.
+#[derive(Debug, Default)]
+pub struct IntegrityReport {
+    pub records: u64,
+    pub segments: usize,
+    pub crc_failures: Vec<u64>,
+    pub checksum_failures: Vec<String>,
+    pub step_order_violations: Vec<u64>,
+    pub step_gaps: Vec<(u32, u32)>,
+    pub boundary_violations: Vec<u64>,
+    pub empty_microbatches: Vec<u64>,
+}
+
+impl IntegrityReport {
+    pub fn ok(&self) -> bool {
+        self.crc_failures.is_empty()
+            && self.checksum_failures.is_empty()
+            && self.step_order_violations.is_empty()
+            && self.step_gaps.is_empty()
+            && self.boundary_violations.is_empty()
+            && self.empty_microbatches.is_empty()
+    }
+
+    pub fn to_json(&self) -> crate::util::json::Json {
+        let mut j = crate::util::json::Json::obj();
+        j.set("ok", self.ok())
+            .set("records", self.records)
+            .set("segments", self.segments)
+            .set("crc_failures", self.crc_failures.len())
+            .set("checksum_failures", self.checksum_failures.len())
+            .set("step_order_violations", self.step_order_violations.len())
+            .set("step_gaps", self.step_gaps.len())
+            .set("boundary_violations", self.boundary_violations.len())
+            .set("empty_microbatches", self.empty_microbatches.len());
+        j
+    }
+}
+
+/// Full integrity scan of a WAL directory.
+pub fn scan(dir: &Path, hmac_key: Option<&[u8]>) -> anyhow::Result<IntegrityReport> {
+    let mut report = IntegrityReport::default();
+
+    // 1. per-segment checksums
+    let reader = WalReader::open(dir)?;
+    report.segments = reader.segment_paths().len();
+    for seg in reader.segment_paths() {
+        let raw = std::fs::read(seg)?;
+        let sum_path = seg.with_extension("seg.sum");
+        if !sum_path.exists() {
+            report
+                .checksum_failures
+                .push(format!("{}: missing .sum", seg.display()));
+            continue;
+        }
+        let sum = parse(&std::fs::read_to_string(&sum_path)?)
+            .map_err(|e| anyhow::anyhow!("bad sum json: {e}"))?;
+        let expect_sha = sum
+            .get("sha256")
+            .and_then(|v| v.as_str())
+            .unwrap_or_default()
+            .to_string();
+        if sha256_hex(&raw) != expect_sha {
+            report
+                .checksum_failures
+                .push(format!("{}: sha256 mismatch", seg.display()));
+        }
+        if let (Some(key), Some(tag)) = (
+            hmac_key,
+            sum.get("hmac_sha256").and_then(|v| v.as_str()),
+        ) {
+            if hex(&hmac_sha256(key, &raw)) != tag {
+                report
+                    .checksum_failures
+                    .push(format!("{}: hmac mismatch", seg.display()));
+            }
+        }
+    }
+
+    // 2. record stream: CRC (via decode), step monotonicity, gaps,
+    //    accumulation structure
+    let mut idx = 0u64;
+    let mut last_step: Option<u32> = None;
+    let mut last_was_end = true; // stream must start a fresh step
+    for item in WalReader::open(dir)? {
+        match item {
+            Err(_) => report.crc_failures.push(idx),
+            Ok(rec) => {
+                check_record(&rec, idx, &mut last_step, &mut last_was_end,
+                             &mut report);
+            }
+        }
+        idx += 1;
+    }
+    if !last_was_end {
+        // trailing unterminated accumulation segment
+        report.boundary_violations.push(idx.saturating_sub(1));
+    }
+    report.records = idx;
+    Ok(report)
+}
+
+fn check_record(
+    rec: &WalRecord,
+    idx: u64,
+    last_step: &mut Option<u32>,
+    last_was_end: &mut bool,
+    report: &mut IntegrityReport,
+) {
+    if rec.mb_len == 0 {
+        report.empty_microbatches.push(idx);
+    }
+    match *last_step {
+        None => {}
+        Some(prev) => {
+            if *last_was_end {
+                // a new logical step must be prev+1 (gap-free, monotone)
+                if rec.opt_step < prev {
+                    report.step_order_violations.push(idx);
+                } else if rec.opt_step > prev + 1 {
+                    report.step_gaps.push((prev, rec.opt_step));
+                } else if rec.opt_step == prev {
+                    // same step after its accum_end -> boundary violation
+                    report.boundary_violations.push(idx);
+                }
+            } else if rec.opt_step != prev {
+                // continuation microbatch must share the step counter
+                report.step_order_violations.push(idx);
+            }
+        }
+    }
+    *last_step = Some(rec.opt_step);
+    *last_was_end = rec.accum_end;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::tempdir;
+    use crate::wal::segment::WalWriter;
+
+    fn rec(step: u32, end: bool) -> WalRecord {
+        WalRecord {
+            hash64: step as u64 * 31 + end as u64,
+            seed64: 7,
+            lr_bits: (1e-3f32).to_bits(),
+            opt_step: step,
+            accum_end: end,
+            mb_len: 4,
+        }
+    }
+
+    fn write_wal(dir: &std::path::Path, recs: &[WalRecord]) {
+        let mut w = WalWriter::create(dir, 8, Some(b"key".to_vec())).unwrap();
+        for r in recs {
+            w.append(r).unwrap();
+        }
+        w.finish().unwrap();
+    }
+
+    #[test]
+    fn clean_wal_passes() {
+        let dir = tempdir("scan-clean");
+        let recs: Vec<_> = (0..20u32)
+            .flat_map(|t| vec![rec(t, false), rec(t, true)])
+            .collect();
+        write_wal(&dir, &recs);
+        let rep = scan(&dir, Some(b"key")).unwrap();
+        assert!(rep.ok(), "{rep:?}");
+        assert_eq!(rep.records, 40);
+    }
+
+    #[test]
+    fn detects_step_gap() {
+        let dir = tempdir("scan-gap");
+        write_wal(&dir, &[rec(0, true), rec(2, true)]);
+        let rep = scan(&dir, None).unwrap();
+        assert_eq!(rep.step_gaps, vec![(0, 2)]);
+        assert!(!rep.ok());
+    }
+
+    #[test]
+    fn detects_step_regression_and_boundary_violation() {
+        let dir = tempdir("scan-order");
+        write_wal(&dir, &[rec(3, true), rec(1, true)]);
+        assert!(!scan(&dir, None).unwrap().ok());
+
+        let dir2 = tempdir("scan-bound");
+        // continuation record with a different step counter
+        write_wal(&dir2, &[rec(0, false), rec(1, true)]);
+        let rep = scan(&dir2, None).unwrap();
+        assert!(!rep.step_order_violations.is_empty());
+    }
+
+    #[test]
+    fn detects_unterminated_tail() {
+        let dir = tempdir("scan-tail");
+        write_wal(&dir, &[rec(0, true), rec(1, false)]);
+        let rep = scan(&dir, None).unwrap();
+        assert!(!rep.boundary_violations.is_empty());
+    }
+
+    #[test]
+    fn detects_corrupted_record_and_checksum() {
+        let dir = tempdir("scan-corrupt");
+        write_wal(&dir, &[rec(0, true), rec(1, true), rec(2, true)]);
+        let seg = dir.join("wal-000000.seg");
+        let mut raw = std::fs::read(&seg).unwrap();
+        raw[40] ^= 0xFF; // corrupt record 1 payload
+        std::fs::write(&seg, raw).unwrap();
+        let rep = scan(&dir, None).unwrap();
+        assert_eq!(rep.crc_failures, vec![1]);
+        assert!(!rep.checksum_failures.is_empty()); // segment sha now wrong
+    }
+
+    #[test]
+    fn wrong_hmac_key_detected() {
+        let dir = tempdir("scan-hmac");
+        write_wal(&dir, &[rec(0, true)]);
+        assert!(scan(&dir, Some(b"key")).unwrap().ok());
+        let rep = scan(&dir, Some(b"WRONG")).unwrap();
+        assert!(!rep.checksum_failures.is_empty());
+    }
+}

@@ -1,0 +1,22 @@
+//! Microbatch write-ahead log (paper Def. 1, §4.1, Alg. A.1).
+//!
+//! For every microbatch the trainer emits one fixed-width 32-byte record
+//! `⟨hash64, seed64, lr_f32, opt_step_u32, accum_end_u8, mb_len_u16,
+//! crc32⟩` — no raw text, gradients or activations.  Records append to
+//! rotating segment files with a per-segment SHA-256 (and optional HMAC),
+//! mirroring ARIES-style minimal redo logging.
+//!
+//! The out-of-band ID map (`hash64 → ordered sample IDs`) lives in
+//! [`idmap`]; it is the access-controlled manifest `M` of Def. 1.
+
+pub mod idmap;
+pub mod integrity;
+pub mod reader;
+pub mod record;
+pub mod segment;
+
+pub use idmap::IdMap;
+pub use integrity::{scan, IntegrityReport};
+pub use reader::WalReader;
+pub use record::{WalRecord, RECORD_SIZE};
+pub use segment::WalWriter;

@@ -1,0 +1,161 @@
+//! The 32-byte fixed-width WAL record (paper Def. 1).
+//!
+//! Wire layout (little-endian), 27-byte payload + CRC32 + 1 pad byte:
+//!
+//! | offset | field        | type | meaning                                   |
+//! |--------|--------------|------|-------------------------------------------|
+//! | 0      | hash64       | u64  | content hash of the *ordered* sample IDs  |
+//! | 8      | seed64       | u64  | per-microbatch RNG seed bundle            |
+//! | 16     | lr_f32       | f32  | exact LR value in effect                  |
+//! | 20     | opt_step_u32 | u32  | logical optimizer-step counter            |
+//! | 24     | accum_end_u8 | u8   | 1 = gradient-accumulation boundary        |
+//! | 25     | mb_len_u16   | u16  | microbatch length (true, pre-padding)     |
+//! | 27     | crc32        | u32  | CRC32 of bytes [0,27)                     |
+//! | 31     | pad          | u8   | zero (32-byte alignment)                  |
+//!
+//! The paper's toy-only `sched_digest_u32` sidecar field is NOT part of
+//! this binary record (it was a legacy human-readable log field, ignored
+//! at replay); we reproduce that by emitting it only in the optional
+//! debug sidecar (see [`super::segment::WalWriter::enable_sidecar`]).
+
+use crate::util::hashing::crc32;
+
+/// Fixed record size on the wire.
+pub const RECORD_SIZE: usize = 32;
+/// Payload bytes covered by the CRC.
+pub const PAYLOAD_SIZE: usize = 27;
+
+/// One per-microbatch WAL record.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct WalRecord {
+    /// 64-bit content hash over the ordered sample IDs (keyed HMAC in
+    /// production mode; see `util::hashing::hash_ordered_ids`).
+    pub hash64: u64,
+    /// Per-microbatch RNG seed bundle consumed at replay.
+    pub seed64: u64,
+    /// Exact learning-rate value in effect at the accumulation boundary
+    /// (stored as raw bits so the f32 value round-trips exactly).
+    pub lr_bits: u32,
+    /// Logical optimizer-step counter (authoritative during replay).
+    pub opt_step: u32,
+    /// True at gradient-accumulation boundaries.
+    pub accum_end: bool,
+    /// True microbatch length (samples before padding).
+    pub mb_len: u16,
+}
+
+impl WalRecord {
+    pub fn lr(&self) -> f32 {
+        f32::from_bits(self.lr_bits)
+    }
+
+    pub fn with_lr(mut self, lr: f32) -> Self {
+        self.lr_bits = lr.to_bits();
+        self
+    }
+
+    /// Serialize to the 32-byte wire format (computes CRC).
+    pub fn encode(&self) -> [u8; RECORD_SIZE] {
+        let mut buf = [0u8; RECORD_SIZE];
+        buf[0..8].copy_from_slice(&self.hash64.to_le_bytes());
+        buf[8..16].copy_from_slice(&self.seed64.to_le_bytes());
+        buf[16..20].copy_from_slice(&self.lr_bits.to_le_bytes());
+        buf[20..24].copy_from_slice(&self.opt_step.to_le_bytes());
+        buf[24] = self.accum_end as u8;
+        buf[25..27].copy_from_slice(&self.mb_len.to_le_bytes());
+        let crc = crc32(&buf[..PAYLOAD_SIZE]);
+        buf[27..31].copy_from_slice(&crc.to_le_bytes());
+        buf[31] = 0;
+        buf
+    }
+
+    /// Parse + CRC-verify a 32-byte record.
+    pub fn decode(buf: &[u8]) -> anyhow::Result<WalRecord> {
+        anyhow::ensure!(
+            buf.len() == RECORD_SIZE,
+            "record must be {RECORD_SIZE} B, got {}",
+            buf.len()
+        );
+        let stored_crc = u32::from_le_bytes(buf[27..31].try_into().unwrap());
+        let actual_crc = crc32(&buf[..PAYLOAD_SIZE]);
+        anyhow::ensure!(
+            stored_crc == actual_crc,
+            "WAL record CRC mismatch: stored {stored_crc:#x} != {actual_crc:#x}"
+        );
+        let accum = buf[24];
+        anyhow::ensure!(accum <= 1, "invalid accum_end byte {accum}");
+        Ok(WalRecord {
+            hash64: u64::from_le_bytes(buf[0..8].try_into().unwrap()),
+            seed64: u64::from_le_bytes(buf[8..16].try_into().unwrap()),
+            lr_bits: u32::from_le_bytes(buf[16..20].try_into().unwrap()),
+            opt_step: u32::from_le_bytes(buf[20..24].try_into().unwrap()),
+            accum_end: accum == 1,
+            mb_len: u16::from_le_bytes(buf[25..27].try_into().unwrap()),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::for_all;
+
+    fn sample() -> WalRecord {
+        WalRecord {
+            hash64: 0xDEAD_BEEF_CAFE_F00D,
+            seed64: 42,
+            lr_bits: 1e-3_f32.to_bits(),
+            opt_step: 17,
+            accum_end: true,
+            mb_len: 8,
+        }
+    }
+
+    #[test]
+    fn encode_is_32_bytes() {
+        assert_eq!(sample().encode().len(), 32);
+        assert_eq!(RECORD_SIZE, 32); // the Table 7 constant
+    }
+
+    #[test]
+    fn roundtrip() {
+        let r = sample();
+        assert_eq!(WalRecord::decode(&r.encode()).unwrap(), r);
+    }
+
+    #[test]
+    fn lr_roundtrips_exact_bits() {
+        // the WAL stores the *exact* LR value (Lemma A.4) — raw bits
+        for lr in [1e-3f32, 2.5e-4, f32::MIN_POSITIVE, 0.0] {
+            let r = sample().with_lr(lr);
+            let back = WalRecord::decode(&r.encode()).unwrap();
+            assert_eq!(back.lr().to_bits(), lr.to_bits());
+        }
+    }
+
+    #[test]
+    fn crc_detects_corruption() {
+        let mut buf = sample().encode();
+        for i in 0..PAYLOAD_SIZE {
+            buf[i] ^= 0x40;
+            assert!(WalRecord::decode(&buf).is_err(), "flip at byte {i}");
+            buf[i] ^= 0x40;
+        }
+        assert!(WalRecord::decode(&buf).is_ok());
+    }
+
+    #[test]
+    fn prop_roundtrip_random_records() {
+        for_all("wal record roundtrip", |rng| {
+            let r = WalRecord {
+                hash64: rng.next_u64(),
+                seed64: rng.next_u64(),
+                lr_bits: rng.next_u64() as u32,
+                opt_step: rng.next_u64() as u32,
+                accum_end: rng.below(2) == 1,
+                mb_len: rng.below(65536) as u16,
+            };
+            assert_eq!(WalRecord::decode(&r.encode()).unwrap(), r);
+        });
+    }
+}

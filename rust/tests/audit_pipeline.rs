@@ -1,0 +1,120 @@
+//! Audit harness integration: the leakage signals must move in the
+//! right direction — a model trained WITH the forget set looks more
+//! member-like than one trained WITHOUT it; greedy decoding is
+//! deterministic; exposure sits near chance on an untrained model.
+
+use std::collections::HashSet;
+
+use unlearn::audit::{self, AuditContext, ModelView};
+use unlearn::config::RunConfig;
+use unlearn::harness;
+use unlearn::runtime::Runtime;
+use unlearn::trainer::Trainer;
+
+#[test]
+fn leakage_signals_move_the_right_way() {
+    let rt = Runtime::load(&harness::artifacts_dir()).expect("artifacts");
+    let corpus = harness::small_corpus(rt.manifest.seq_len);
+    let cfg = RunConfig {
+        run_dir: unlearn::util::tempdir("audit-pipe"),
+        steps: 30,
+        accum: 2,
+        checkpoint_every: 10,
+        checkpoint_keep: 8,
+        warmup: 5,
+        lr: 5e-3,
+        ..Default::default()
+    };
+    let forget: Vec<u64> = corpus.user_samples(0); // canaried user
+    let fset: HashSet<u64> = forget.iter().copied().collect();
+
+    let with = Trainer::new(&rt, cfg.clone(), corpus.clone())
+        .train(|_| false)
+        .unwrap();
+    let mut cfg2 = cfg.clone();
+    cfg2.run_dir = unlearn::util::tempdir("audit-pipe-oracle");
+    let without = Trainer::new(&rt, cfg2, corpus.clone())
+        .train(|id| fset.contains(&id))
+        .unwrap();
+
+    let (retain_ids, eval_ids) = harness::audit_splits(&corpus, &fset, 3);
+    let ctx = AuditContext {
+        rt: &rt,
+        corpus: &corpus,
+        forget_ids: &forget,
+        retain_ids: &retain_ids,
+        eval_ids: &eval_ids,
+        baseline_ppl: None,
+        thresholds: Default::default(),
+        seed: 3,
+    };
+    let rep_with =
+        audit::run_audits(&ctx, ModelView::Base(&with.state.params)).unwrap();
+    let rep_without =
+        audit::run_audits(&ctx, ModelView::Base(&without.state.params))
+            .unwrap();
+
+    assert!(
+        rep_with.mia_auc > rep_without.mia_auc - 0.05,
+        "MIA: with {} vs without {}",
+        rep_with.mia_auc,
+        rep_without.mia_auc
+    );
+    let ratio = rep_with.retain_ppl / rep_without.retain_ppl;
+    assert!(ratio > 0.5 && ratio < 2.0, "ppl ratio {ratio}");
+    assert!(rep_with.to_json().encode().contains("mia_auc"));
+}
+
+#[test]
+fn greedy_decode_is_deterministic_and_shaped() {
+    let rt = Runtime::load(&harness::artifacts_dir()).expect("artifacts");
+    let params = rt.manifest.init_params().unwrap();
+    let prompts = vec![
+        "the secret code of user aaaa is ".to_string(),
+        "Alice (user bbbb) wrote about ".to_string(),
+    ];
+    let a = audit::extraction::greedy_decode(
+        &rt,
+        ModelView::Base(&params),
+        &prompts,
+        6,
+    )
+    .unwrap();
+    let b = audit::extraction::greedy_decode(
+        &rt,
+        ModelView::Base(&params),
+        &prompts,
+        6,
+    )
+    .unwrap();
+    assert_eq!(a, b, "greedy decode is deterministic");
+    assert_eq!(a.len(), prompts.len());
+    assert!(a.iter().all(|s| s.chars().count() == 6));
+}
+
+#[test]
+fn exposure_near_chance_on_untrained_model() {
+    let rt = Runtime::load(&harness::artifacts_dir()).expect("artifacts");
+    let corpus = harness::small_corpus(rt.manifest.seq_len);
+    let params = rt.manifest.init_params().unwrap();
+    let forget: Vec<u64> = corpus.user_samples(0);
+    let fset: HashSet<u64> = forget.iter().copied().collect();
+    let (retain_ids, eval_ids) = harness::audit_splits(&corpus, &fset, 4);
+    let ctx = AuditContext {
+        rt: &rt,
+        corpus: &corpus,
+        forget_ids: &forget,
+        retain_ids: &retain_ids,
+        eval_ids: &eval_ids,
+        baseline_ppl: None,
+        thresholds: Default::default(),
+        seed: 4,
+    };
+    let (mu, sigma) =
+        audit::canary::exposure(&ctx, ModelView::Base(&params)).unwrap();
+    assert!(mu < 4.0, "chance-level exposure, got {mu}");
+    assert!(sigma >= 0.0);
+    let ex = audit::extraction::extraction_rate(&ctx, ModelView::Base(&params))
+        .unwrap();
+    assert!(ex <= 0.5, "untrained model shouldn't extract secrets: {ex}");
+}

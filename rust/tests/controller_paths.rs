@@ -1,0 +1,158 @@
+//! Controller policy integration (paper Alg. A.7 / Fig. 1): every
+//! routing branch through the real stack, plus manifest/idempotency
+//! semantics.  One shared fixture run keeps wall-clock bounded.
+
+use std::collections::HashSet;
+
+use unlearn::config::RunConfig;
+use unlearn::controller::{ForgetRequest, Urgency};
+use unlearn::harness;
+use unlearn::manifest::ActionKind;
+use unlearn::runtime::Runtime;
+
+#[test]
+fn controller_routes_all_paths() {
+    let rt = Runtime::load(&harness::artifacts_dir()).expect("artifacts");
+    let mut corpus = harness::toy_corpus(rt.manifest.seq_len);
+    corpus.tag_cohort(&[150, 151], 9);
+    let cohort_ids: Vec<u64> = [150u32, 151]
+        .iter()
+        .flat_map(|&u| corpus.user_samples(u))
+        .collect();
+    let cohort_set: HashSet<u64> = cohort_ids.iter().copied().collect();
+
+    let cfg = RunConfig {
+        run_dir: unlearn::util::tempdir("ctl-paths"),
+        steps: 12,
+        accum: 2,
+        checkpoint_every: 4,
+        checkpoint_keep: 16,
+        ring_window: 4,
+        warmup: 4,
+        ..Default::default()
+    };
+    let out = unlearn::trainer::Trainer::new(&rt, cfg.clone(), corpus.clone())
+        .train_excluding(&cohort_set)
+        .unwrap();
+    let trained =
+        harness::system_from_run(&rt, cfg, corpus.clone(), out, true).unwrap();
+    let mut system = trained.system;
+    system
+        .adapters
+        .train_cohort(&rt, &corpus, &system.state.params, 9, &cohort_ids, 4,
+                      5e-3, 1)
+        .unwrap();
+    let base_hash = system.state.model_hash();
+
+    // ---- path 1: cohort-confined -> adapter deletion, base untouched --
+    let o = system
+        .handle(&ForgetRequest {
+            id: "t-adapter".into(),
+            user: Some(150),
+            sample_ids: vec![],
+            urgency: Urgency::Normal,
+        })
+        .unwrap();
+    assert_eq!(o.action, ActionKind::AdapterDelete);
+    assert_eq!(system.state.model_hash(), base_hash, "G2: base untouched");
+    assert!(system.adapters.get(9).is_none());
+
+    // ---- path 2: recent-only influence -> ring revert ------------------
+    // candidates first seen inside the ring window whose *closure* also
+    // stays inside it (near-dup expansion can reach back in time)
+    let recent_set: HashSet<u64> = harness::ids_first_seen_at_or_after(
+        &system.records,
+        &system.idmap,
+        10,
+    )
+    .into_iter()
+    .collect();
+    let mut recent_sorted: Vec<u64> = recent_set.iter().copied().collect();
+    recent_sorted.sort_unstable(); // HashSet order is per-process random
+    let recent: Vec<u64> = recent_sorted
+        .into_iter()
+        .filter(|&id| {
+            let (cl, _) = system.closure_of(&ForgetRequest {
+                id: "probe".into(),
+                user: None,
+                sample_ids: vec![id],
+                urgency: Urgency::Normal,
+            });
+            cl.iter().all(|c| recent_set.contains(c))
+        })
+        .take(3)
+        .collect();
+    assert!(!recent.is_empty());
+    let o = system
+        .handle(&ForgetRequest {
+            id: "t-revert".into(),
+            user: None,
+            sample_ids: recent,
+            urgency: Urgency::Normal,
+        })
+        .unwrap();
+    // the revert path must be TAKEN; with toy-scale audit noise it may
+    // escalate to exact replay, which the manifest then records — both
+    // are correct routings (Alg. A.7 escalates on audit failure)
+    assert!(
+        o.action == ActionKind::RecentRevert
+            || (o.action == ActionKind::ExactReplay
+                && o.escalations.iter().any(|e| e.contains("revert audit"))),
+        "action {:?}, escalations {:?}",
+        o.action,
+        o.escalations
+    );
+    assert_ne!(system.state.model_hash(), base_hash);
+
+    // ---- path 3: urgent -> hot path or audited escalation --------------
+    let o = system
+        .handle(&ForgetRequest {
+            id: "t-urgent".into(),
+            user: Some(1),
+            sample_ids: vec![],
+            urgency: Urgency::High,
+        })
+        .unwrap();
+    assert!(
+        matches!(
+            o.action,
+            ActionKind::HotPathAntiUpdate | ActionKind::ExactReplay
+        ),
+        "urgent requests go hot-path first, escalate on audit failure"
+    );
+
+    // ---- path 4: normal + old influence -> exact replay ----------------
+    let o = system
+        .handle(&ForgetRequest {
+            id: "t-replay".into(),
+            user: Some(2),
+            sample_ids: vec![],
+            urgency: Urgency::Normal,
+        })
+        .unwrap();
+    assert_eq!(o.action, ActionKind::ExactReplay);
+    assert!(o.details.get("from_checkpoint").is_some());
+
+    // ---- idempotency + signed chain -------------------------------------
+    let dup = system
+        .handle(&ForgetRequest {
+            id: "t-replay".into(),
+            user: Some(2),
+            sample_ids: vec![],
+            urgency: Urgency::Normal,
+        })
+        .unwrap();
+    assert!(!dup.executed);
+    let chain = system.manifest.verify_chain().unwrap();
+    assert_eq!(chain.len(), 4);
+    assert!(chain.iter().all(|(_, sig)| *sig), "all entries signed");
+    let actions: Vec<String> = chain
+        .iter()
+        .map(|(e, _)| {
+            e.get("action").and_then(|v| v.as_str()).unwrap().to_string()
+        })
+        .collect();
+    assert_eq!(actions[0], "adapter_delete");
+    assert!(actions[1] == "recent_revert" || actions[1] == "exact_replay");
+    assert_eq!(actions[3], "exact_replay");
+}

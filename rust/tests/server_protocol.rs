@@ -1,0 +1,69 @@
+//! Admin-server protocol integration: dispatch ops against a live
+//! system (without sockets — `dispatch` is the protocol core; the TCP
+//! layer is a thin line-framing loop around it).
+
+use std::sync::atomic::AtomicBool;
+use std::sync::Mutex;
+
+use unlearn::config::RunConfig;
+use unlearn::harness;
+use unlearn::runtime::Runtime;
+use unlearn::server::dispatch;
+
+#[test]
+fn protocol_ops_roundtrip() {
+    let rt = Runtime::load(&harness::artifacts_dir()).expect("artifacts");
+    let corpus = harness::small_corpus(rt.manifest.seq_len);
+    let cfg = RunConfig {
+        run_dir: unlearn::util::tempdir("server-proto"),
+        steps: 8,
+        accum: 2,
+        checkpoint_every: 4,
+        warmup: 2,
+        ..Default::default()
+    };
+    let trained = harness::build_system(&rt, cfg, corpus, false).unwrap();
+    let system = Mutex::new(trained.system);
+    let shutdown = AtomicBool::new(false);
+
+    // status
+    let r = dispatch(r#"{"op":"status"}"#, &system, &shutdown);
+    assert_eq!(r.get("ok").unwrap().as_bool(), Some(true));
+    assert!(r.get("model_hash").unwrap().as_str().unwrap().len() == 16);
+
+    // forget (normal)
+    let r = dispatch(
+        r#"{"op":"forget","id":"srv-1","user":3,"urgency":"normal"}"#,
+        &system,
+        &shutdown,
+    );
+    assert_eq!(r.get("ok").unwrap().as_bool(), Some(true), "{r}");
+    assert_eq!(r.get("executed").unwrap().as_bool(), Some(true));
+    assert!(r.get("action").unwrap().as_str().is_some());
+
+    // duplicate suppressed
+    let r = dispatch(
+        r#"{"op":"forget","id":"srv-1","user":3}"#,
+        &system,
+        &shutdown,
+    );
+    assert_eq!(r.get("executed").unwrap().as_bool(), Some(false));
+
+    // manifest verification
+    let r = dispatch(r#"{"op":"manifest"}"#, &system, &shutdown);
+    assert_eq!(r.get("signatures_valid").unwrap().as_bool(), Some(true));
+    assert_eq!(r.get("entries").unwrap().as_u64(), Some(1));
+
+    // malformed input -> structured error, no panic
+    let r = dispatch("not json", &system, &shutdown);
+    assert_eq!(r.get("ok").unwrap().as_bool(), Some(false));
+    let r = dispatch(r#"{"op":"nope"}"#, &system, &shutdown);
+    assert_eq!(r.get("ok").unwrap().as_bool(), Some(false));
+    let r = dispatch(r#"{"op":"forget"}"#, &system, &shutdown);
+    assert_eq!(r.get("ok").unwrap().as_bool(), Some(false));
+
+    // shutdown flag
+    let r = dispatch(r#"{"op":"shutdown"}"#, &system, &shutdown);
+    assert_eq!(r.get("ok").unwrap().as_bool(), Some(true));
+    assert!(shutdown.load(std::sync::atomic::Ordering::SeqCst));
+}
