@@ -27,6 +27,34 @@ fn main() {
     };
     let out = Trainer::new(&rt, cfg, corpus.clone()).train(|_| false).unwrap();
 
+    if json_mode() {
+        let forget: Vec<u64> = corpus.user_samples(0);
+        let fset: HashSet<u64> = forget.iter().copied().collect();
+        let (retain_ids, eval_ids) = harness::audit_splits(&corpus, &fset, 5);
+        let ctx = AuditContext {
+            rt: &rt,
+            corpus: &corpus,
+            forget_ids: &forget,
+            retain_ids: &retain_ids,
+            eval_ids: &eval_ids,
+            baseline_ppl: None,
+            thresholds: Default::default(),
+            seed: 5,
+        };
+        let view = ModelView::Base(&out.state.params);
+        let t0 = std::time::Instant::now();
+        let rep = audit::run_audits(&ctx, view).unwrap();
+        let elapsed = t0.elapsed().as_secs_f64();
+        let mut j = unlearn::util::json::Json::obj();
+        j.set("bench", "audits")
+            .set("full_suite_ns", ns(elapsed))
+            .set("mia_auc", rep.mia_auc)
+            .set("retain_ppl", rep.retain_ppl)
+            .set("schema", 1);
+        emit_json("audits", &j);
+        return;
+    }
+
     let forget: Vec<u64> = corpus.user_samples(0);
     let fset: HashSet<u64> = forget.iter().copied().collect();
     let (retain_ids, eval_ids) = harness::audit_splits(&corpus, &fset, 5);

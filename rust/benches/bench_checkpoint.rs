@@ -19,7 +19,32 @@ fn state(n: usize, seed: u64) -> TrainState {
     s
 }
 
+fn json_main() {
+    let n = 120_064usize;
+    let dir = tempdir("bench-ckpt-json");
+    let store = CheckpointStore::open(&dir, 4).unwrap();
+    let mut s = state(n, 1);
+    let save = time_it(1, 3, || {
+        s.logical_step += 1;
+        store.save_full(&s).unwrap()
+    });
+    let step = s.logical_step;
+    let load = time_it(1, 3, || store.load_full(step).unwrap());
+    let bytes = store.full_checkpoint_bytes(step).unwrap();
+    let mut j = unlearn::util::json::Json::obj();
+    j.set("bench", "checkpoint")
+        .set("params", n)
+        .set("save_full_ns", ns(save.mean))
+        .set("load_full_verified_ns", ns(load.mean))
+        .set("bytes_on_disk", bytes)
+        .set("schema", 1);
+    emit_json("checkpoint", &j);
+}
+
 fn main() {
+    if json_mode() {
+        return json_main();
+    }
     header(
         "Table 3 — storage budgets (formula; FP32 here, paper uses FP16 \
          weights + FP32 moments)",

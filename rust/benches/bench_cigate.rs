@@ -22,6 +22,22 @@ fn main() {
         ..Default::default()
     };
 
+    if json_mode() {
+        let gate_steps = 6u32;
+        let t0 = std::time::Instant::now();
+        let report =
+            unlearn::cigate::run_gate(&rt, &cfg, &corpus, gate_steps).unwrap();
+        let mut j = unlearn::util::json::Json::obj();
+        j.set("bench", "cigate")
+            .set("gate_steps", gate_steps)
+            .set("total_ns", bench_util::ns(t0.elapsed().as_secs_f64()))
+            .set("pass", report.pass())
+            .set("schema", 1);
+        emit_json("cigate", &j);
+        assert!(report.pass(), "CI gate must pass on this pinned stack");
+        return;
+    }
+
     header("Figure 2 — CI gate (measured)", &["Gate steps", "Total", "Pass"]);
     for gate_steps in [6u32, 10] {
         let t0 = std::time::Instant::now();

@@ -12,7 +12,44 @@ use unlearn::controller::{ForgetRequest, Urgency};
 use unlearn::harness;
 use unlearn::runtime::Runtime;
 
+fn json_main() {
+    let rt = Runtime::load(&harness::artifacts_dir()).expect("artifacts");
+    let corpus = harness::small_corpus(rt.manifest.seq_len);
+    let cfg = RunConfig {
+        run_dir: unlearn::util::tempdir("bench-controller-json"),
+        steps: 8,
+        accum: 2,
+        checkpoint_every: 4,
+        checkpoint_keep: 16,
+        ring_window: 4,
+        warmup: 2,
+        ..Default::default()
+    };
+    let trained =
+        harness::build_system(&rt, cfg, corpus.clone(), false).unwrap();
+    let mut system = trained.system;
+    let t0 = std::time::Instant::now();
+    let outcome = system
+        .handle(&ForgetRequest {
+            id: "bench-json-replay".into(),
+            user: Some(2),
+            sample_ids: vec![],
+            urgency: Urgency::Normal,
+        })
+        .unwrap();
+    let mut j = unlearn::util::json::Json::obj();
+    j.set("bench", "controller")
+        .set("action", outcome.action.as_str())
+        .set("closure_size", outcome.closure_size)
+        .set("handle_ns", ns(t0.elapsed().as_secs_f64()))
+        .set("schema", 1);
+    emit_json("controller", &j);
+}
+
 fn main() {
+    if json_mode() {
+        return json_main();
+    }
     let rt = Runtime::load(&harness::artifacts_dir()).expect("artifacts");
     let mut corpus = harness::toy_corpus(rt.manifest.seq_len);
     corpus.tag_cohort(&[150, 151], 9);

@@ -1,15 +1,23 @@
 //! Regenerates **Table 8** (dense-delta ring buffer budget) with
 //! measured compression ratios and revert latencies (G3), including the
 //! XOR-vs-arithmetic ablation (sparse top-k is deliberately absent: the
-//! paper uses it only as a non-exact ablation).
+//! paper uses it only as a non-exact ablation) and the scalar-vs-
+//! word-wise hot-path comparison that justifies the `util::simd` layer.
+//!
+//! `-- --json` emits `BENCH_delta_ring.json` (ns/op, bytes/step,
+//! compress ratio, scalar-baseline speedup).
 
 #[path = "bench_util.rs"]
 mod bench_util;
 use bench_util::*;
 
+use std::io::Write as _;
+
 use unlearn::checkpoint::TrainState;
 use unlearn::deltas::{DeltaRing, PatchMode};
+use unlearn::util::json::Json;
 use unlearn::util::rng::SplitMix64;
+use unlearn::util::simd;
 
 /// Simulated AdamW-style update trajectory (small deltas, realistic
 /// exponent structure — what the ring compresses in production).
@@ -35,7 +43,83 @@ fn walk(n: usize, steps: usize, seed: u64) -> Vec<TrainState> {
     out
 }
 
+/// The seed's scalar record pipeline: serialize both tensors, XOR one
+/// byte at a time, transpose, single-stream DEFLATE.  Kept as the
+/// measured before/after baseline for the word-wise zero-copy path.
+fn scalar_record_patch(before: &[f32], after: &[f32]) -> Vec<u8> {
+    let mut b = simd::scalar::f32s_to_bytes(after);
+    let before_b = simd::scalar::f32s_to_bytes(before);
+    simd::scalar::xor_in_place(&mut b, &before_b);
+    let planes = unlearn::util::compress::plane_split(&b).unwrap();
+    let mut enc = flate2::write::ZlibEncoder::new(
+        Vec::new(),
+        flate2::Compression::fast(),
+    );
+    enc.write_all(&planes).unwrap();
+    enc.finish().unwrap()
+}
+
+fn measure(n: usize, window: usize) -> (Stats, Stats, f64, usize, f64) {
+    let states = walk(n, window, 7);
+    let record = time_it(1, 5, || {
+        let mut ring = DeltaRing::new(n, window, PatchMode::Xor, true);
+        for w in states.windows(2) {
+            ring.record(&w[0], &w[1]).unwrap();
+        }
+        ring
+    });
+    let mut ring = DeltaRing::new(n, window, PatchMode::Xor, true);
+    for w in states.windows(2) {
+        ring.record(&w[0], &w[1]).unwrap();
+    }
+    let budget = ring.budget();
+    let bytes_per_step = budget.stored_bytes / window;
+    let ratio = budget.compress_ratio;
+    let revert = time_it(1, 5, || {
+        let mut ring = DeltaRing::new(n, window, PatchMode::Xor, true);
+        for w in states.windows(2) {
+            ring.record(&w[0], &w[1]).unwrap();
+        }
+        let mut cur = states.last().unwrap().clone();
+        ring.revert(&mut cur, window).unwrap();
+        cur
+    });
+    let scalar = time_it(1, 3, || {
+        let mut patches = Vec::new();
+        for w in states.windows(2) {
+            patches.push(scalar_record_patch(&w[0].params, &w[1].params));
+            patches.push(scalar_record_patch(&w[0].m, &w[1].m));
+            patches.push(scalar_record_patch(&w[0].v, &w[1].v));
+        }
+        patches
+    });
+    (record, revert, ratio, bytes_per_step, scalar.mean)
+}
+
+fn json_main() {
+    let (n, window) = (120_064usize, 4usize);
+    let (record, revert, ratio, bytes_per_step, scalar_mean) =
+        measure(n, window);
+    let record_step = record.mean / window as f64;
+    let scalar_step = scalar_mean / window as f64;
+    let mut j = Json::obj();
+    j.set("bench", "delta_ring")
+        .set("params", n)
+        .set("window", window)
+        .set("record_ns_per_step", ns(record_step))
+        .set("record_plus_revert_ns_per_step", ns(revert.mean / window as f64))
+        .set("scalar_baseline_record_ns_per_step", ns(scalar_step))
+        .set("speedup_vs_scalar", scalar_step / record_step)
+        .set("bytes_per_step", bytes_per_step)
+        .set("compress_ratio", ratio)
+        .set("schema", 1);
+    emit_json("delta_ring", &j);
+}
+
 fn main() {
+    if json_mode() {
+        return json_main();
+    }
     let window = 16;
     header(
         "Table 8 — dense-delta ring budget (window N=16)",
@@ -49,7 +133,7 @@ fn main() {
         let states = walk(n, window, 42);
         let mut ring = DeltaRing::new(n, window, PatchMode::Xor, false);
         for w in states.windows(2) {
-            ring.record(&w[0], &w[1]);
+            ring.record(&w[0], &w[1]).unwrap();
         }
         let b = ring.budget();
         println!(
@@ -75,7 +159,7 @@ fn main() {
         let st = time_it(1, 5, || {
             let mut ring = DeltaRing::new(n, window, mode, true);
             for w in states.windows(2) {
-                ring.record(&w[0], &w[1]);
+                ring.record(&w[0], &w[1]).unwrap();
             }
             let mut cur = states.last().unwrap().clone();
             ring.revert(&mut cur, window).unwrap();
@@ -84,7 +168,7 @@ fn main() {
         // verify exactness claim
         let mut ring = DeltaRing::new(n, window, mode, true);
         for w in states.windows(2) {
-            ring.record(&w[0], &w[1]);
+            ring.record(&w[0], &w[1]).unwrap();
         }
         let mut cur = states.last().unwrap().clone();
         ring.revert(&mut cur, window).unwrap();
@@ -97,21 +181,30 @@ fn main() {
     }
 
     header(
-        "Record throughput — measured",
-        &["Params", "record() per step", "Bytes stored/step"],
+        "Record throughput — measured (word-wise fused vs scalar seed path)",
+        &["Params", "record()/step", "scalar baseline/step", "Speedup",
+          "Bytes stored/step"],
     );
-    let n = 120_064;
-    let states = walk(n, 2, 9);
-    let st = time_it(1, 10, || {
-        let mut ring = DeltaRing::new(n, window, PatchMode::Xor, true);
-        ring.record(&states[0], &states[1]);
-        ring
-    });
-    let mut ring = DeltaRing::new(n, window, PatchMode::Xor, true);
-    ring.record(&states[0], &states[1]);
+    let (n, w4) = (120_064usize, 4usize);
+    let (record, _revert, _ratio, bytes_per_step, scalar_mean) =
+        measure(n, w4);
+    let record_step = record.mean / w4 as f64;
+    let scalar_step = scalar_mean / w4 as f64;
     println!(
-        "{n} | {} | {}",
-        fmt_secs(st.mean),
-        fmt_bytes(ring.budget().stored_bytes as u64)
+        "{n} | {} | {} | {:.2}x | {}",
+        fmt_secs(record_step),
+        fmt_secs(scalar_step),
+        scalar_step / record_step,
+        fmt_bytes(bytes_per_step as u64)
+    );
+    // wall-time accounting now lives in the budget too
+    let states = walk(n, 2, 9);
+    let mut ring = DeltaRing::new(n, w4, PatchMode::Xor, true);
+    ring.record(&states[0], &states[1]).unwrap();
+    let b = ring.budget();
+    println!(
+        "ring-reported record wall time: {} (last {})",
+        fmt_secs(b.record_secs_mean),
+        fmt_secs(b.record_secs_last)
     );
 }

@@ -12,6 +12,26 @@ use unlearn::neardup::{expand_closure, simhash_tokens, ClosureParams};
 
 fn main() {
     let corpus = Corpus::generate(CorpusConfig::default());
+
+    if json_mode() {
+        let build = time_it(1, 3, || build_index(&corpus));
+        let idx = build_index(&corpus);
+        let sig = simhash_tokens(&corpus.by_id(0).unwrap().tokens);
+        let query = time_it(5, 50, || idx.query(sig, 3));
+        let req = corpus.user_samples(0);
+        let expand = time_it(1, 5, || {
+            expand_closure(&corpus, &idx, &req, ClosureParams::default())
+        });
+        let mut j = unlearn::util::json::Json::obj();
+        j.set("bench", "neardup")
+            .set("docs", corpus.len())
+            .set("index_build_ns", ns(build.mean))
+            .set("banded_query_ns", ns(query.mean))
+            .set("closure_expand_ns", ns(expand.mean))
+            .set("schema", 1);
+        emit_json("neardup", &j);
+        return;
+    }
     println!("corpus: {} samples", corpus.len());
 
     header("SimHash index — measured", &["Operation", "Latency"]);

@@ -1,7 +1,13 @@
 //! End-to-end replay benchmark (Tables 3-5 latency side): measures
 //! t_step, full-run training throughput, and ReplayFilter latency as a
 //! function of checkpoint distance — the paper's "worst-case replay
-//! latency ≤ K·t_step" claim, measured.
+//! latency ≤ K·t_step" claim, measured — plus the nearest-checkpoint
+//! auto-start path the controller uses.
+//!
+//! `-- --json` runs the smoke config, compares the measured per-step
+//! replay latency against the committed `BENCH_replay.json` baseline
+//! through the cigate perf gate (refusing a >20% regression with a
+//! non-zero exit), then records the new baseline.
 
 #[path = "bench_util.rs"]
 mod bench_util;
@@ -10,18 +16,27 @@ use bench_util::*;
 use std::collections::HashSet;
 
 use unlearn::checkpoint::CheckpointStore;
+use unlearn::cigate::perf;
 use unlearn::config::RunConfig;
 use unlearn::harness;
-use unlearn::replay::{load_run, replay_filter, ReplayOptions};
+use unlearn::replay::{
+    load_run, replay_filter, replay_filter_nearest, ReplayOptions,
+};
 use unlearn::runtime::Runtime;
 use unlearn::trainer::Trainer;
 
-fn main() {
+struct Fixture {
+    rt: Runtime,
+    corpus: unlearn::data::corpus::Corpus,
+    cfg: RunConfig,
+    steps: u32,
+}
+
+fn fixture(tag: &str, steps: u32) -> Fixture {
     let rt = Runtime::load(&harness::artifacts_dir()).expect("artifacts");
     let corpus = harness::small_corpus(rt.manifest.seq_len);
-    let steps = 12u32;
     let cfg = RunConfig {
-        run_dir: unlearn::util::tempdir("bench-replay"),
+        run_dir: unlearn::util::tempdir(tag),
         steps,
         accum: 2,
         checkpoint_every: 4,
@@ -29,20 +44,83 @@ fn main() {
         warmup: 4,
         ..Default::default()
     };
+    Fixture {
+        rt,
+        corpus,
+        cfg,
+        steps,
+    }
+}
+
+fn json_main() {
+    let f = fixture("bench-replay-json", 12);
+    let t0 = std::time::Instant::now();
+    Trainer::new(&f.rt, f.cfg.clone(), f.corpus.clone())
+        .train(|_| false)
+        .unwrap();
+    let t_step = t0.elapsed().as_secs_f64() / f.steps as f64;
+
+    let (records, idmap, pins) = load_run(&f.cfg.run_dir, None).unwrap();
+    let store = CheckpointStore::open(&f.cfg.run_dir.join("ckpt"), 64).unwrap();
+    // first seen after checkpoint 4 (the small corpus is fully covered
+    // within ~7 steps, so later-first-seen candidates don't exist)
+    let closure: HashSet<u64> =
+        harness::ids_first_seen_at_or_after(&records, &idmap, 5)
+            .into_iter()
+            .take(4)
+            .collect();
+    // nearest-checkpoint auto-start (the controller's replay path)
+    let (k, outcome) = replay_filter_nearest(
+        &f.rt, &f.corpus, &store, &records, &idmap, &closure, Some(&pins),
+        &ReplayOptions::default(),
+    )
+    .unwrap();
+    let replayed = (f.steps - k).max(1);
+    let st = time_it(0, 3, || {
+        replay_filter_nearest(
+            &f.rt, &f.corpus, &store, &records, &idmap, &closure,
+            Some(&pins), &ReplayOptions::default(),
+        )
+        .unwrap()
+    });
+    let ns_per_step = ns(st.mean) / replayed as f64;
+    drop(outcome);
+
+    // fail-closed perf gate against the committed baseline
+    let baseline = bench_json_path("replay");
+    match perf::check_replay(&baseline, ns_per_step, perf::DEFAULT_MAX_REGRESSION)
+    {
+        Ok(v) => println!("perf gate: {v:?}"),
+        Err(e) => {
+            eprintln!("{e:#}");
+            std::process::exit(1);
+        }
+    }
+    let mut j = perf::replay_json(ns_per_step, ns(t_step), f.steps);
+    j.set("from_checkpoint", k).set("replayed_steps", replayed);
+    emit_json("replay", &j);
+}
+
+fn main() {
+    if json_mode() {
+        return json_main();
+    }
+    let f = fixture("bench-replay", 12);
+    let steps = f.steps;
 
     header("Training throughput (measured)", &["Steps", "Total", "t_step"]);
     let t0 = std::time::Instant::now();
-    Trainer::new(&rt, cfg.clone(), corpus.clone())
+    Trainer::new(&f.rt, f.cfg.clone(), f.corpus.clone())
         .train(|_| false)
         .unwrap();
     let total = t0.elapsed().as_secs_f64();
     let t_step = total / steps as f64;
     println!("{steps} | {} | {}", fmt_secs(total), fmt_secs(t_step));
 
-    let (records, idmap, pins) = load_run(&cfg.run_dir, None).unwrap();
-    let store = CheckpointStore::open(&cfg.run_dir.join("ckpt"), 64).unwrap();
+    let (records, idmap, pins) = load_run(&f.cfg.run_dir, None).unwrap();
+    let store = CheckpointStore::open(&f.cfg.run_dir.join("ckpt"), 64).unwrap();
     let closure: HashSet<u64> =
-        harness::ids_first_seen_at_or_after(&records, &idmap, 9)
+        harness::ids_first_seen_at_or_after(&records, &idmap, 5)
             .into_iter()
             .take(4)
             .collect();
@@ -55,8 +133,8 @@ fn main() {
         let ck = store.load_full(k).unwrap();
         let st = time_it(0, 2, || {
             replay_filter(
-                &rt,
-                &corpus,
+                &f.rt,
+                &f.corpus,
                 &ck,
                 &records,
                 &idmap,
@@ -75,12 +153,32 @@ fn main() {
     }
 
     header(
+        "Nearest-checkpoint auto-start (controller path)",
+        &["Chosen ckpt", "Steps replayed", "Latency"],
+    );
+    let st = time_it(0, 2, || {
+        replay_filter_nearest(
+            &f.rt, &f.corpus, &store, &records, &idmap, &closure,
+            Some(&pins), &ReplayOptions::default(),
+        )
+        .unwrap()
+    });
+    let (k, _) = replay_filter_nearest(
+        &f.rt, &f.corpus, &store, &records, &idmap, &closure, Some(&pins),
+        &ReplayOptions::default(),
+    )
+    .unwrap();
+    println!("C_{k} | {} | {}", steps - k, fmt_secs(st.mean));
+
+    header(
         "Per-graph execution time (runtime metrics)",
         &["Graph", "Calls", "Mean"],
     );
-    for g in ["train_step", "adamw_update"] {
-        if let Some((n, _tot, mean)) = rt.metrics.timer(&format!("exec.{g}")) {
-            println!("{g} | {n} | {}", fmt_secs(mean));
+    for (name, n, tot) in f.rt.metrics.timers() {
+        if let Some(g) = name.strip_prefix("exec.") {
+            if n > 0 {
+                println!("{g} | {n} | {}", fmt_secs(tot / n as f64));
+            }
         }
     }
 }

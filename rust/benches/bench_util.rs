@@ -78,3 +78,35 @@ pub fn header(title: &str, cols: &[&str]) {
     println!("{}", cols.join(" | "));
     println!("{}", vec!["---"; cols.len()].join(" | "));
 }
+
+/// True when the bench was invoked as `cargo bench --bench X -- --json`:
+/// run the reduced smoke config and emit a `BENCH_<name>.json` summary
+/// instead of the full human-readable tables.
+#[allow(dead_code)]
+pub fn json_mode() -> bool {
+    std::env::args().any(|a| a == "--json")
+}
+
+/// Where `BENCH_<name>.json` lands: `$BENCH_JSON_DIR` or the crate root
+/// (the committed baselines live in `rust/`).
+#[allow(dead_code)]
+pub fn bench_json_path(name: &str) -> std::path::PathBuf {
+    let dir = std::env::var("BENCH_JSON_DIR")
+        .unwrap_or_else(|_| env!("CARGO_MANIFEST_DIR").to_string());
+    std::path::PathBuf::from(dir).join(format!("BENCH_{name}.json"))
+}
+
+/// Write a bench summary JSON (and echo it) — the per-PR perf record.
+#[allow(dead_code)]
+pub fn emit_json(name: &str, j: &unlearn::util::json::Json) {
+    let path = bench_json_path(name);
+    std::fs::write(&path, j.pretty()).expect("write bench json");
+    println!("{}", j.pretty());
+    eprintln!("wrote {}", path.display());
+}
+
+/// Seconds -> nanoseconds (bench JSON unit).
+#[allow(dead_code)]
+pub fn ns(secs: f64) -> f64 {
+    secs * 1e9
+}

@@ -19,7 +19,31 @@ fn rec(i: u32) -> WalRecord {
     }
 }
 
+fn json_main() {
+    let n = 10_000u32;
+    let dir = tempdir("bench-wal-json");
+    let append = time_it(0, 1, || {
+        let mut w = WalWriter::create(&dir.join("a"), 4096, None).unwrap();
+        for i in 0..n {
+            w.append(&rec(i)).unwrap();
+        }
+        w.finish().unwrap();
+    });
+    let scan = time_it(1, 3, || integrity::scan(&dir.join("a"), None).unwrap());
+    let mut j = unlearn::util::json::Json::obj();
+    j.set("bench", "wal")
+        .set("records", n)
+        .set("append_ns_per_record", ns(append.mean) / n as f64)
+        .set("scan_ns_per_record", ns(scan.mean) / n as f64)
+        .set("bytes_per_record", 32)
+        .set("schema", 1);
+    emit_json("wal", &j);
+}
+
 fn main() {
+    if json_mode() {
+        return json_main();
+    }
     // ---- Table 7: footprint at the paper's record counts --------------
     header(
         "Table 7 — WAL overhead",

@@ -6,12 +6,21 @@
 //! `params.bin`, `m.bin`, `v.bin` (LE f32 images), `meta.json` (logical
 //! step, applied-update counter, content hashes) — restoration is exact
 //! by construction (assumption A4): bytes in, bytes out.
+//!
+//! I/O is single-pass and copy-free: `save_full` streams each tensor's
+//! zero-copy byte view to disk while feeding the same bytes to the
+//! SHA-256 hasher (the meta hashes are a by-product of the write, not a
+//! second serialization), and `load_full` reads straight into the f32
+//! buffer's byte view and hashes that — no intermediate `Vec<u8>`
+//! round-trips of parameter-sized tensors anywhere.
 
 use std::fs;
+use std::io::{Read, Write};
 use std::path::{Path, PathBuf};
 
-use crate::util::bytes::{bytes_to_f32s, f32s_to_bytes, state_hash_full};
+use crate::util::hashing::StreamingSha256;
 use crate::util::json::{parse, Json};
+use crate::util::simd;
 
 /// Full training state at a logical step boundary.
 #[derive(Debug, Clone, PartialEq)]
@@ -54,14 +63,56 @@ impl TrainState {
         crate::util::bytes::state_hash64(&self.params)
     }
 
-    /// Hash over the full optimizer state (m ‖ v ‖ step counter).
+    /// Hash over the full optimizer state (m ‖ v ‖ step counter) —
+    /// streamed over the zero-copy views, no concatenated copy.
     pub fn optimizer_hash(&self) -> String {
-        let mut bytes = f32s_to_bytes(&self.m);
-        bytes.extend_from_slice(&f32s_to_bytes(&self.v));
-        bytes.extend_from_slice(&self.applied_updates.to_le_bytes());
-        let h = crate::util::hashing::sha256(&bytes);
-        crate::util::hashing::hex(&h[..8])
+        let mut h = StreamingSha256::new();
+        h.update(simd::as_bytes(&self.m));
+        h.update(simd::as_bytes(&self.v));
+        h.update(&self.applied_updates.to_le_bytes());
+        let hex = h.finalize_hex();
+        hex[..16].to_string()
     }
+}
+
+/// Stream a tensor's byte view to `path`, hashing while writing.
+/// Returns the full SHA-256 hex (identical to
+/// `util::bytes::state_hash_full` of the same tensor).
+fn write_tensor_hashed(path: &Path, data: &[f32]) -> anyhow::Result<String> {
+    let bytes = simd::as_bytes(data);
+    let mut f = std::io::BufWriter::new(fs::File::create(path)?);
+    let mut h = StreamingSha256::new();
+    for chunk in bytes.chunks(1 << 20) {
+        h.update(chunk);
+        f.write_all(chunk)?;
+    }
+    f.flush()?;
+    Ok(h.finalize_hex())
+}
+
+/// Read a tensor file straight into an f32 buffer (single allocation,
+/// no byte-vector round-trip), returning (tensor, sha256-hex).
+fn read_tensor_hashed(path: &Path) -> anyhow::Result<(Vec<f32>, String)> {
+    let len = fs::metadata(path)?.len() as usize;
+    anyhow::ensure!(
+        len % 4 == 0,
+        "tensor file {} length {len} not 4-aligned — refusing inexact \
+         restore (A4)",
+        path.display()
+    );
+    let mut out = vec![0.0f32; len / 4];
+    let mut f = fs::File::open(path)?;
+    f.read_exact(simd::as_bytes_mut(&mut out))?;
+    // no trailing bytes (metadata raced a writer?)
+    let mut probe = [0u8; 1];
+    anyhow::ensure!(
+        f.read(&mut probe)? == 0,
+        "tensor file {} grew past its metadata length",
+        path.display()
+    );
+    let mut h = StreamingSha256::new();
+    h.update(simd::as_bytes(&out));
+    Ok((out, h.finalize_hex()))
 }
 
 /// On-disk checkpoint store rooted at a directory.
@@ -86,19 +137,21 @@ impl CheckpointStore {
     }
 
     /// Save a full checkpoint (weights + optimizer) at a step boundary.
+    /// Single pass per tensor: the content hash is computed from the
+    /// bytes as they stream to disk.
     pub fn save_full(&self, state: &TrainState) -> anyhow::Result<PathBuf> {
         let dir = self.dir_for(state.logical_step, false);
         fs::create_dir_all(&dir)?;
-        fs::write(dir.join("params.bin"), f32s_to_bytes(&state.params))?;
-        fs::write(dir.join("m.bin"), f32s_to_bytes(&state.m))?;
-        fs::write(dir.join("v.bin"), f32s_to_bytes(&state.v))?;
+        let params_sha = write_tensor_hashed(&dir.join("params.bin"), &state.params)?;
+        let m_sha = write_tensor_hashed(&dir.join("m.bin"), &state.m)?;
+        let v_sha = write_tensor_hashed(&dir.join("v.bin"), &state.v)?;
         let mut meta = Json::obj();
         meta.set("logical_step", state.logical_step)
             .set("applied_updates", state.applied_updates)
             .set("param_count", state.params.len())
-            .set("params_sha256", state_hash_full(&state.params))
-            .set("m_sha256", state_hash_full(&state.m))
-            .set("v_sha256", state_hash_full(&state.v))
+            .set("params_sha256", params_sha.as_str())
+            .set("m_sha256", m_sha.as_str())
+            .set("v_sha256", v_sha.as_str())
             .set("kind", "full");
         fs::write(dir.join("meta.json"), meta.pretty())?;
         self.gc()?;
@@ -109,35 +162,38 @@ impl CheckpointStore {
     pub fn save_micro(&self, state: &TrainState) -> anyhow::Result<PathBuf> {
         let dir = self.dir_for(state.logical_step, true);
         fs::create_dir_all(&dir)?;
-        fs::write(dir.join("params.bin"), f32s_to_bytes(&state.params))?;
+        let params_sha = write_tensor_hashed(&dir.join("params.bin"), &state.params)?;
         let mut meta = Json::obj();
         meta.set("logical_step", state.logical_step)
             .set("applied_updates", state.applied_updates)
             .set("param_count", state.params.len())
-            .set("params_sha256", state_hash_full(&state.params))
+            .set("params_sha256", params_sha.as_str())
             .set("kind", "micro");
         fs::write(dir.join("meta.json"), meta.pretty())?;
         Ok(dir)
     }
 
     /// Load a full checkpoint, verifying content hashes (A4: exact
-    /// restoration or hard failure).
+    /// restoration or hard failure).  Each tensor is read and hashed in
+    /// one pass directly into its f32 buffer.
     pub fn load_full(&self, step: u32) -> anyhow::Result<TrainState> {
         let dir = self.dir_for(step, false);
         let meta = parse(&fs::read_to_string(dir.join("meta.json"))?)
             .map_err(|e| anyhow::anyhow!("bad checkpoint meta: {e}"))?;
-        let params = bytes_to_f32s(&fs::read(dir.join("params.bin"))?)?;
-        let m = bytes_to_f32s(&fs::read(dir.join("m.bin"))?)?;
-        let v = bytes_to_f32s(&fs::read(dir.join("v.bin"))?)?;
-        for (name, data) in
-            [("params", &params), ("m", &m), ("v", &v)]
-        {
+        let (params, params_sha) = read_tensor_hashed(&dir.join("params.bin"))?;
+        let (m, m_sha) = read_tensor_hashed(&dir.join("m.bin"))?;
+        let (v, v_sha) = read_tensor_hashed(&dir.join("v.bin"))?;
+        for (name, got) in [
+            ("params", &params_sha),
+            ("m", &m_sha),
+            ("v", &v_sha),
+        ] {
             let expect = meta
                 .get(&format!("{name}_sha256"))
                 .and_then(|j| j.as_str())
                 .ok_or_else(|| anyhow::anyhow!("missing {name}_sha256"))?;
             anyhow::ensure!(
-                state_hash_full(data) == expect,
+                got == expect,
                 "checkpoint {name} hash mismatch at step {step} — \
                  refusing inexact restore (A4)"
             );
@@ -230,6 +286,33 @@ mod tests {
     }
 
     #[test]
+    fn streamed_hashes_match_rehash() {
+        // the hash-while-writing shortcut must equal a from-scratch hash
+        let dir = tempdir("ckpt-hash");
+        let store = CheckpointStore::open(&dir, 10).unwrap();
+        let s = state(9, 333, 2);
+        let cdir = store.save_full(&s).unwrap();
+        let meta = parse(
+            &std::fs::read_to_string(cdir.join("meta.json")).unwrap(),
+        )
+        .unwrap();
+        for (name, tensor) in
+            [("params", &s.params), ("m", &s.m), ("v", &s.v)]
+        {
+            let stored = meta
+                .get(&format!("{name}_sha256"))
+                .unwrap()
+                .as_str()
+                .unwrap();
+            assert_eq!(
+                stored,
+                crate::util::bytes::state_hash_full(tensor),
+                "{name} hash must equal the canonical tensor hash"
+            );
+        }
+    }
+
+    #[test]
     fn adversarial_bit_patterns_roundtrip() {
         let dir = tempdir("ckpt-adv");
         let store = CheckpointStore::open(&dir, 100_000).unwrap();
@@ -254,6 +337,18 @@ mod tests {
         raw[13] ^= 1;
         fs::write(&pbin, raw).unwrap();
         assert!(store.load_full(7).is_err(), "must refuse inexact restore");
+    }
+
+    #[test]
+    fn truncated_tensor_fails_closed() {
+        let dir = tempdir("ckpt-trunc");
+        let store = CheckpointStore::open(&dir, 10).unwrap();
+        let s = state(3, 64, 1);
+        let cdir = store.save_full(&s).unwrap();
+        let pbin = cdir.join("m.bin");
+        let raw = fs::read(&pbin).unwrap();
+        fs::write(&pbin, &raw[..raw.len() - 2]).unwrap(); // unaligned too
+        assert!(store.load_full(1).is_err());
     }
 
     #[test]

@@ -20,6 +20,8 @@ use crate::trainer::Trainer;
 use crate::util::json::Json;
 use crate::wal::integrity;
 
+pub mod perf;
+
 /// Outcome of the CI gate.
 #[derive(Debug, Clone)]
 pub struct CiGateReport {

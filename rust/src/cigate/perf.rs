@@ -1,0 +1,179 @@
+//! Performance regression gate over recorded bench baselines.
+//!
+//! The `--json` smoke mode of every `rust/benches/bench_*.rs` binary
+//! emits a `BENCH_<name>.json` summary (ns/op, bytes/step, compress
+//! ratio) that is committed next to the crate, tracking the perf
+//! trajectory across PRs.  Before overwriting its baseline,
+//! `bench_replay` runs [`check_replay`]: a measured per-step replay
+//! latency more than [`DEFAULT_MAX_REGRESSION`] above the recorded
+//! baseline refuses the run (non-zero exit), the same fail-closed
+//! posture as the determinism gate.
+
+use std::path::Path;
+
+use crate::util::json::{parse, Json};
+
+/// Allowed relative slowdown vs the recorded baseline (0.20 = +20%).
+pub const DEFAULT_MAX_REGRESSION: f64 = 0.20;
+
+/// A recorded replay-bench baseline.  `replay_ns_per_step` is `None`
+/// for a placeholder file (schema committed before any measured run —
+/// the first measured run records, later runs gate).
+#[derive(Debug, Clone, PartialEq)]
+pub struct PerfBaseline {
+    pub replay_ns_per_step: Option<f64>,
+}
+
+/// Load a baseline from a `BENCH_replay.json` file.  Returns `None`
+/// when the file does not exist; a present-but-null metric loads as a
+/// record-only baseline.
+pub fn load_baseline(path: &Path) -> anyhow::Result<Option<PerfBaseline>> {
+    if !path.exists() {
+        return Ok(None);
+    }
+    let j = parse(&std::fs::read_to_string(path)?)
+        .map_err(|e| anyhow::anyhow!("bench baseline {}: {e}", path.display()))?;
+    Ok(Some(PerfBaseline {
+        replay_ns_per_step: j
+            .get("replay_ns_per_step")
+            .and_then(|v| v.as_f64())
+            .filter(|v| v.is_finite() && *v > 0.0),
+    }))
+}
+
+/// The gate decision for one measured value against one baseline.
+#[derive(Debug, Clone, PartialEq)]
+pub enum PerfVerdict {
+    /// No usable baseline — record the measurement, nothing to compare.
+    RecordOnly,
+    /// Within the allowed band (`ratio` = measured / baseline).
+    Pass { ratio: f64 },
+    /// Regressed beyond the band — refuse.
+    Fail { ratio: f64 },
+}
+
+/// Compare a measured ns/step against a baseline.
+pub fn judge(
+    baseline: Option<f64>,
+    measured_ns: f64,
+    max_regression: f64,
+) -> PerfVerdict {
+    match baseline {
+        None => PerfVerdict::RecordOnly,
+        Some(b) if !(b.is_finite() && b > 0.0) => PerfVerdict::RecordOnly,
+        Some(b) => {
+            let ratio = measured_ns / b;
+            if ratio <= 1.0 + max_regression {
+                PerfVerdict::Pass { ratio }
+            } else {
+                PerfVerdict::Fail { ratio }
+            }
+        }
+    }
+}
+
+/// Fail-closed wrapper: error when the replay bench regressed more
+/// than `max_regression` against the baseline at `baseline_path`.
+pub fn check_replay(
+    baseline_path: &Path,
+    measured_ns: f64,
+    max_regression: f64,
+) -> anyhow::Result<PerfVerdict> {
+    let baseline = load_baseline(baseline_path)?;
+    let v = judge(
+        baseline.and_then(|b| b.replay_ns_per_step),
+        measured_ns,
+        max_regression,
+    );
+    if let PerfVerdict::Fail { ratio } = &v {
+        anyhow::bail!(
+            "replay bench regressed: {measured_ns:.0} ns/step is {:.1}% over \
+             the recorded baseline (allowed +{:.0}%) — refusing ({})",
+            (ratio - 1.0) * 100.0,
+            max_regression * 100.0,
+            baseline_path.display()
+        );
+    }
+    Ok(v)
+}
+
+/// The `BENCH_replay.json` document for a measured run.
+pub fn replay_json(ns_per_step: f64, t_step_ns: f64, steps: u32) -> Json {
+    let mut j = Json::obj();
+    j.set("bench", "replay")
+        .set("replay_ns_per_step", ns_per_step)
+        .set("train_t_step_ns", t_step_ns)
+        .set("steps", steps)
+        .set("schema", 1);
+    j
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::tempdir;
+
+    #[test]
+    fn no_baseline_is_record_only() {
+        assert_eq!(judge(None, 100.0, 0.2), PerfVerdict::RecordOnly);
+        assert_eq!(judge(Some(0.0), 100.0, 0.2), PerfVerdict::RecordOnly);
+        assert_eq!(
+            judge(Some(f64::NAN), 100.0, 0.2),
+            PerfVerdict::RecordOnly
+        );
+    }
+
+    #[test]
+    fn within_band_passes_beyond_fails() {
+        assert!(matches!(
+            judge(Some(100.0), 119.0, 0.2),
+            PerfVerdict::Pass { .. }
+        ));
+        assert!(matches!(
+            judge(Some(100.0), 121.0, 0.2),
+            PerfVerdict::Fail { .. }
+        ));
+        // faster is always fine
+        assert!(matches!(
+            judge(Some(100.0), 40.0, 0.2),
+            PerfVerdict::Pass { .. }
+        ));
+    }
+
+    #[test]
+    fn check_replay_fails_closed_on_regression() {
+        let dir = tempdir("perf-gate");
+        let path = dir.join("BENCH_replay.json");
+        // missing file: record-only
+        assert_eq!(
+            check_replay(&path, 500.0, 0.2).unwrap(),
+            PerfVerdict::RecordOnly
+        );
+        // placeholder with null metric: record-only
+        std::fs::write(
+            &path,
+            r#"{"bench": "replay", "replay_ns_per_step": null}"#,
+        )
+        .unwrap();
+        assert_eq!(
+            check_replay(&path, 500.0, 0.2).unwrap(),
+            PerfVerdict::RecordOnly
+        );
+        // recorded baseline gates
+        std::fs::write(&path, replay_json(400.0, 100.0, 12).pretty()).unwrap();
+        assert!(matches!(
+            check_replay(&path, 450.0, 0.2).unwrap(),
+            PerfVerdict::Pass { .. }
+        ));
+        assert!(check_replay(&path, 1000.0, 0.2).is_err());
+    }
+
+    #[test]
+    fn baseline_roundtrips_through_json() {
+        let dir = tempdir("perf-roundtrip");
+        let path = dir.join("BENCH_replay.json");
+        std::fs::write(&path, replay_json(123.0, 45.0, 10).pretty()).unwrap();
+        let b = load_baseline(&path).unwrap().unwrap();
+        assert_eq!(b.replay_ns_per_step, Some(123.0));
+    }
+}

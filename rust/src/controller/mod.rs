@@ -25,7 +25,10 @@ use crate::data::corpus::Corpus;
 use crate::deltas::DeltaRing;
 use crate::manifest::{ActionKind, ForgetManifest, ManifestEntry};
 use crate::neardup::{expand_closure, ClosureParams, HammingIndex};
-use crate::replay::{offending_steps, replay_filter, ReplayOptions};
+use crate::replay::{
+    offending_steps, replay_filter, replay_filter_from_nearest_to,
+    ReplayOptions,
+};
 use crate::runtime::Runtime;
 use crate::util::json::Json;
 use crate::wal::{IdMap, WalRecord};
@@ -393,27 +396,21 @@ impl<'rt> UnlearnSystem<'rt> {
         }
 
         // ---- path 4: exact replay (default) ---------------------------
+        // nearest checkpoint at or before the first forget influence;
+        // the offending set is already computed above, so hand the
+        // target step straight to the replay layer (no second WAL scan)
         let store = CheckpointStore::open(
             &self.cfg.run_dir.join("ckpt"),
             self.cfg.checkpoint_keep,
         )?;
-        // nearest checkpoint at or before the first forget influence
-        let k = store
-            .nearest_at_or_before(min_offending)?
-            .ok_or_else(|| {
-                anyhow::anyhow!(
-                    "no checkpoint precedes step {min_offending} — cannot \
-                     satisfy the exactness precondition (fail-closed)"
-                )
-            })?;
-        let ck = store.load_full(k)?;
-        let outcome = replay_filter(
+        let (k, outcome) = replay_filter_from_nearest_to(
             self.rt,
             &self.corpus,
-            &ck,
+            &store,
             &self.records,
             &self.idmap,
             &closure_set,
+            min_offending,
             Some(&self.pins),
             &ReplayOptions::default(),
         )?;

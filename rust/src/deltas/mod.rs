@@ -7,14 +7,34 @@
 //! - **Arithmetic deltas** `Δ_t = fl(θ_{t+1} − θ_t)`: numerically exact
 //!   up to one rounding per step (O(u·ulp) backward error).
 //!
-//! Patches are losslessly compressed (byte-plane + DEFLATE, see
+//! Patches are losslessly compressed (byte-plane + sharded DEFLATE, see
 //! `util::compress`) — compression never alters bit patterns.
+//!
+//! ## Hot-path architecture
+//!
+//! The seed built three full byte images per tensor per step (serialize
+//! `after`, serialize `before`, transposed planes) before compressing.
+//! `record` now runs the fused XOR+transpose
+//! ([`crate::util::compress::plane_split_xor_into`]) over zero-copy
+//! tensor views straight into one reused scratch buffer, then hands the
+//! planes to the sharded scoped-thread DEFLATE — zero redundant images,
+//! zero steady-state allocation.  `revert` fuses the inverse transpose
+//! into the patch application
+//! ([`crate::util::compress::plane_join_xor_in_place`] /
+//! [`plane_join_sub_f32_in_place`]) so the state tensor is patched
+//! through its own byte view, word-wise, in one pass.
+//! [`RingBudget`] additionally reports measured wall-time per
+//! `record`/`revert` step (the Table 8 latency columns).
 
 use std::collections::VecDeque;
+use std::time::Instant;
 
 use crate::checkpoint::TrainState;
-use crate::util::bytes::{f32s_to_bytes, xor_in_place};
-use crate::util::compress::{compress_delta, decompress_delta};
+use crate::util::compress::{
+    compress_planes, decompress_planes, plane_join_sub_f32_in_place,
+    plane_join_xor_in_place, plane_split_into, plane_split_xor_into,
+};
+use crate::util::simd;
 
 /// Patch construction mode (Alg. A.3 input).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -29,7 +49,7 @@ pub enum PatchMode {
 struct Patch {
     /// Logical step this patch transitions FROM->TO (t -> t+1).
     step: u32,
-    params: Vec<u8>, // compressed
+    params: Vec<u8>, // compressed planes
     m: Option<Vec<u8>>,
     v: Option<Vec<u8>>,
     raw_len: usize,
@@ -43,6 +63,16 @@ pub struct DeltaRing {
     pub revert_optimizer: bool,
     ring: VecDeque<Patch>,
     param_count: usize,
+    /// Reused plane-transposed scratch (one tensor image, no per-step
+    /// allocation in steady state).
+    planes_scratch: Vec<u8>,
+    /// Reused arithmetic-delta scratch (Arithmetic mode only).
+    delta_scratch: Vec<f32>,
+    records: u64,
+    record_secs_total: f64,
+    record_secs_last: f64,
+    reverts: u64,
+    revert_secs_total: f64,
 }
 
 /// Budget accounting for Table 8.
@@ -53,6 +83,14 @@ pub struct RingBudget {
     pub pre_compress_total: usize,
     pub stored_bytes: usize,
     pub compress_ratio: f64,
+    /// `record` calls observed (lifetime, not just the current window).
+    pub record_count: u64,
+    /// Mean wall-time per `record` call (seconds).
+    pub record_secs_mean: f64,
+    /// Wall-time of the most recent `record` call (seconds).
+    pub record_secs_last: f64,
+    /// Mean wall-time per reverted step (seconds).
+    pub revert_secs_mean: f64,
 }
 
 impl DeltaRing {
@@ -68,59 +106,103 @@ impl DeltaRing {
             revert_optimizer,
             ring: VecDeque::new(),
             param_count,
+            planes_scratch: Vec::new(),
+            delta_scratch: Vec::new(),
+            records: 0,
+            record_secs_total: 0.0,
+            record_secs_last: 0.0,
+            reverts: 0,
+            revert_secs_total: 0.0,
         }
     }
 
-    fn make_patch(&self, before: &[f32], after: &[f32]) -> Vec<u8> {
-        assert_eq!(before.len(), after.len());
-        let raw = match self.mode {
-            PatchMode::Xor => {
-                let mut b = f32s_to_bytes(after);
-                xor_in_place(&mut b, &f32s_to_bytes(before));
-                b
-            }
-            PatchMode::Arithmetic => {
-                let delta: Vec<f32> = after
-                    .iter()
-                    .zip(before)
-                    .map(|(a, b)| a - b) // fl(θ_{t+1} − θ_t)
-                    .collect();
-                f32s_to_bytes(&delta)
-            }
-        };
-        compress_delta(&raw)
-    }
-
-    fn apply_patch(&self, patch: &[u8], current: &mut [f32]) -> anyhow::Result<()> {
-        let raw = decompress_delta(patch, current.len() * 4)?;
+    /// Build one compressed patch for `before -> after` without
+    /// materializing intermediate byte images (scratch is reused).
+    fn make_patch(
+        &mut self,
+        before: &[f32],
+        after: &[f32],
+    ) -> anyhow::Result<Vec<u8>> {
+        anyhow::ensure!(
+            before.len() == after.len(),
+            "patch tensor length mismatch: {} vs {}",
+            before.len(),
+            after.len()
+        );
+        self.planes_scratch.resize(after.len() * 4, 0);
         match self.mode {
             PatchMode::Xor => {
-                let mut bytes = f32s_to_bytes(current);
-                xor_in_place(&mut bytes, &raw);
-                for (dst, chunk) in
-                    current.iter_mut().zip(bytes.chunks_exact(4))
-                {
-                    *dst = f32::from_le_bytes(chunk.try_into().unwrap());
-                }
+                plane_split_xor_into(
+                    simd::as_bytes(after),
+                    simd::as_bytes(before),
+                    &mut self.planes_scratch,
+                )?;
             }
             PatchMode::Arithmetic => {
-                let delta = crate::util::bytes::bytes_to_f32s(&raw)?;
-                for (c, d) in current.iter_mut().zip(&delta) {
-                    *c -= d; // fl(θ − Δ_t)
-                }
+                self.delta_scratch.clear();
+                self.delta_scratch.extend(
+                    after.iter().zip(before).map(|(a, b)| a - b), // fl(θ_{t+1} − θ_t)
+                );
+                plane_split_into(
+                    simd::as_bytes(&self.delta_scratch),
+                    &mut self.planes_scratch,
+                )?;
             }
         }
-        Ok(())
+        compress_planes(&self.planes_scratch)
+    }
+
+    /// Apply one stored patch onto `current` in place (fused
+    /// un-transpose + XOR/subtract over the zero-copy byte view).
+    fn apply_patch(&self, patch: &[u8], current: &mut [f32]) -> anyhow::Result<()> {
+        let planes = decompress_planes(patch, current.len() * 4)?;
+        match self.mode {
+            PatchMode::Xor => {
+                plane_join_xor_in_place(&planes, simd::as_bytes_mut(current))
+            }
+            PatchMode::Arithmetic => {
+                plane_join_sub_f32_in_place(&planes, current)
+            }
+        }
     }
 
     /// Record the transition `before -> after` for step `before.logical_step`.
-    pub fn record(&mut self, before: &TrainState, after: &TrainState) {
-        debug_assert_eq!(before.params.len(), self.param_count);
-        let params = self.make_patch(&before.params, &after.params);
+    pub fn record(
+        &mut self,
+        before: &TrainState,
+        after: &TrainState,
+    ) -> anyhow::Result<()> {
+        self.record_parts(
+            before.logical_step,
+            &before.params,
+            &before.m,
+            &before.v,
+            after,
+        )
+    }
+
+    /// [`DeltaRing::record`] from borrowed tensor parts — lets the
+    /// trainer hand over the pre-update tensors it just swapped out
+    /// instead of cloning the full `TrainState` every step.
+    pub fn record_parts(
+        &mut self,
+        step: u32,
+        before_params: &[f32],
+        before_m: &[f32],
+        before_v: &[f32],
+        after: &TrainState,
+    ) -> anyhow::Result<()> {
+        let t0 = Instant::now();
+        anyhow::ensure!(
+            before_params.len() == self.param_count
+                && after.params.len() == self.param_count,
+            "ring param count mismatch"
+        );
+        let params = self.make_patch(before_params, &after.params)?;
         let (m, v) = if self.revert_optimizer {
             (
-                Some(self.make_patch(&before.m, &after.m)),
-                Some(self.make_patch(&before.v, &after.v)),
+                Some(self.make_patch(before_m, &after.m)?),
+                Some(self.make_patch(before_v, &after.v)?),
             )
         } else {
             (None, None)
@@ -130,7 +212,7 @@ impl DeltaRing {
             + v.as_ref().map(|x| x.len()).unwrap_or(0);
         let raw_len = self.param_count * 4 * if self.revert_optimizer { 3 } else { 1 };
         self.ring.push_back(Patch {
-            step: before.logical_step,
+            step,
             params,
             m,
             v,
@@ -140,6 +222,11 @@ impl DeltaRing {
         while self.ring.len() > self.window {
             self.ring.pop_front();
         }
+        let dt = t0.elapsed().as_secs_f64();
+        self.records += 1;
+        self.record_secs_total += dt;
+        self.record_secs_last = dt;
+        Ok(())
     }
 
     /// How many trailing steps can currently be reverted.
@@ -166,6 +253,7 @@ impl DeltaRing {
             "revert window exceeded: requested {u}, available {}",
             self.ring.len()
         );
+        let t0 = Instant::now();
         for _ in 0..u {
             let patch = self.ring.pop_back().expect("checked length");
             self.apply_patch(&patch.params, &mut state.params)?;
@@ -179,6 +267,8 @@ impl DeltaRing {
             }
             state.logical_step = patch.step;
         }
+        self.reverts += u as u64;
+        self.revert_secs_total += t0.elapsed().as_secs_f64();
         Ok(())
     }
 
@@ -198,6 +288,18 @@ impl DeltaRing {
             stored_bytes: stored,
             compress_ratio: if pre > 0 {
                 stored as f64 / pre as f64
+            } else {
+                0.0
+            },
+            record_count: self.records,
+            record_secs_mean: if self.records > 0 {
+                self.record_secs_total / self.records as f64
+            } else {
+                0.0
+            },
+            record_secs_last: self.record_secs_last,
+            revert_secs_mean: if self.reverts > 0 {
+                self.revert_secs_total / self.reverts as f64
             } else {
                 0.0
             },
@@ -239,7 +341,7 @@ mod tests {
         let states = walk(1, 500, 10);
         let mut ring = DeltaRing::new(500, 16, PatchMode::Xor, true);
         for w in states.windows(2) {
-            ring.record(&w[0], &w[1]);
+            ring.record(&w[0], &w[1]).unwrap();
         }
         let mut cur = states.last().unwrap().clone();
         ring.revert(&mut cur, 4).unwrap();
@@ -251,7 +353,7 @@ mod tests {
         let states = walk(2, 500, 8);
         let mut ring = DeltaRing::new(500, 16, PatchMode::Arithmetic, false);
         for w in states.windows(2) {
-            ring.record(&w[0], &w[1]);
+            ring.record(&w[0], &w[1]).unwrap();
         }
         let mut cur = states.last().unwrap().clone();
         ring.revert(&mut cur, 8).unwrap();
@@ -266,7 +368,7 @@ mod tests {
         let states = walk(3, 100, 20);
         let mut ring = DeltaRing::new(100, 5, PatchMode::Xor, true);
         for w in states.windows(2) {
-            ring.record(&w[0], &w[1]);
+            ring.record(&w[0], &w[1]).unwrap();
         }
         assert_eq!(ring.available(), 5);
         assert_eq!(ring.earliest_step(), Some(15));
@@ -290,7 +392,7 @@ mod tests {
             s1.applied_updates = 1;
             s1.logical_step = 1;
             let mut ring = DeltaRing::new(n, 4, PatchMode::Xor, true);
-            ring.record(&s0, &s1);
+            ring.record(&s0, &s1).unwrap();
             let mut cur = s1.clone();
             ring.revert(&mut cur, 1).unwrap();
             assert!(bits_equal(&cur.params, &s0.params));
@@ -300,17 +402,56 @@ mod tests {
     }
 
     #[test]
+    fn record_parts_equals_record_of_states() {
+        let states = walk(8, 200, 3);
+        let mut a = DeltaRing::new(200, 8, PatchMode::Xor, true);
+        let mut b = DeltaRing::new(200, 8, PatchMode::Xor, true);
+        for w in states.windows(2) {
+            a.record(&w[0], &w[1]).unwrap();
+            b.record_parts(
+                w[0].logical_step,
+                &w[0].params,
+                &w[0].m,
+                &w[0].v,
+                &w[1],
+            )
+            .unwrap();
+        }
+        let mut ca = states.last().unwrap().clone();
+        let mut cb = states.last().unwrap().clone();
+        a.revert(&mut ca, 3).unwrap();
+        b.revert(&mut cb, 3).unwrap();
+        assert!(ca.bits_equal(&cb));
+        assert!(ca.bits_equal(&states[0]));
+    }
+
+    #[test]
     fn budget_reports_table8_fields() {
         let states = walk(4, 1000, 16);
         let mut ring = DeltaRing::new(1000, 16, PatchMode::Xor, false);
         for w in states.windows(2) {
-            ring.record(&w[0], &w[1]);
+            ring.record(&w[0], &w[1]).unwrap();
         }
         let b = ring.budget();
         assert_eq!(b.window, 16);
         assert_eq!(b.per_step_bytes_raw, 4000);
         assert_eq!(b.pre_compress_total, 16 * 4000);
         assert!(b.compress_ratio > 0.0 && b.compress_ratio <= 1.2);
+        // wall-time accounting (Table 8 latency columns)
+        assert_eq!(b.record_count, 16);
+        assert!(b.record_secs_mean > 0.0);
+        assert!(b.record_secs_last > 0.0);
+        let mut cur = states.last().unwrap().clone();
+        ring.revert(&mut cur, 2).unwrap();
+        assert!(ring.budget().revert_secs_mean > 0.0);
+    }
+
+    #[test]
+    fn mismatched_tensor_lengths_fail_closed() {
+        let states = walk(6, 50, 1);
+        let mut ring = DeltaRing::new(64, 4, PatchMode::Xor, false);
+        // param_count 64 but tensors are 50-long
+        assert!(ring.record(&states[0], &states[1]).is_err());
     }
 
     #[test]
@@ -318,7 +459,7 @@ mod tests {
         let states = walk(5, 50, 6);
         let mut ring = DeltaRing::new(50, 8, PatchMode::Xor, true);
         for w in states.windows(2) {
-            ring.record(&w[0], &w[1]);
+            ring.record(&w[0], &w[1]).unwrap();
         }
         let mut cur = states.last().unwrap().clone();
         ring.revert(&mut cur, 2).unwrap();

@@ -8,12 +8,16 @@
 //! curvature-guided audited anti-update) routed by a controller that
 //! appends every action to a signed forget manifest.
 //!
-//! The compute graphs (model fwd/bwd, fused AdamW) are JAX/Pallas programs
-//! AOT-lowered to HLO text (`make artifacts`) and executed through the
-//! `xla` crate's PJRT CPU client — Python never runs on the request path.
+//! The compute graphs (model fwd/bwd, fused AdamW) run through one of
+//! two interchangeable backends: the default deterministic pure-Rust
+//! reference executor (hermetic tier-1, no native deps), or — behind
+//! the `pjrt` cargo feature — the JAX/Pallas programs AOT-lowered to
+//! HLO text (`make artifacts`) and executed through the `xla` crate's
+//! PJRT CPU client.  Python never runs on the request path either way.
 //!
-//! Module map (see DESIGN.md for the paper-section correspondence):
-//! - [`runtime`]    PJRT executable loading + typed wrappers
+//! Module map (see DESIGN.md for the paper-section correspondence and
+//! the hot-path performance architecture):
+//! - [`runtime`]    graph executors (reference / PJRT) + typed wrappers
 //! - [`wal`]        32-byte microbatch write-ahead log (Def. 1)
 //! - [`trainer`]    deterministic trainer + scheduler (§4.1)
 //! - [`replay`]     `ReplayFilter` (Alg. A.9)
@@ -30,7 +34,8 @@
 //! - [`data`]       tokenizer, synthetic corpus, deterministic sampler
 //! - [`server`]     TCP/JSON admin server for forget requests
 //! - [`config`]     run configuration + reproducibility pins (Table 2)
-//! - [`util`]       hashing, JSON, RNG, compression, CLI, property testing
+//! - [`util`]       hashing, JSON, RNG, compression, zero-copy byte
+//!                  layer (`util::simd`), CLI, property testing
 
 pub mod adapters;
 pub mod audit;

@@ -62,6 +62,17 @@ impl Metrics {
             .map(|&(n, tot)| (n, tot, if n > 0 { tot / n as f64 } else { 0.0 }))
     }
 
+    /// All timers as (name, count, total secs), sorted by name — lets
+    /// the bench reporters dump every `exec.*` graph timer without
+    /// hardcoding graph names.
+    pub fn timers(&self) -> Vec<(String, u64, f64)> {
+        let g = self.inner.lock().unwrap();
+        g.timers
+            .iter()
+            .map(|(k, &(n, tot))| (k.clone(), n, tot))
+            .collect()
+    }
+
     pub fn to_json(&self) -> Json {
         let g = self.inner.lock().unwrap();
         let mut counters = Json::obj();

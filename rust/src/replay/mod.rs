@@ -18,11 +18,11 @@
 use std::collections::HashSet;
 use std::path::Path;
 
-use crate::checkpoint::TrainState;
+use crate::checkpoint::{CheckpointStore, TrainState};
 use crate::config::Pins;
 use crate::data::corpus::Corpus;
 use crate::runtime::Runtime;
-use crate::trainer::{accumulate, build_microbatch_tensors};
+use crate::trainer::{accumulate, build_microbatch_tensors_into};
 use crate::wal::{IdMap, WalReader, WalRecord};
 
 /// Replay options.
@@ -103,6 +103,10 @@ pub fn replay_filter(
     let mut step_retained = 0usize;
     let mut pending_lr: Option<f32> = None;
     let mut last_step: Option<u32> = None;
+    // reused microbatch tensor buffers — one allocation for the whole
+    // tail traversal instead of two fresh vectors per WAL record
+    let mut tokens = Vec::new();
+    let mut mask = Vec::new();
 
     for rec in records {
         if rec.opt_step < state.logical_step {
@@ -139,13 +143,15 @@ pub fn replay_filter(
             ids.len()
         );
 
-        let (tokens, mask, retained) = build_microbatch_tensors(
+        let retained = build_microbatch_tensors_into(
             corpus,
             ids,
             man.batch,
             man.seq_len,
             |id| closure.contains(&id),
             opts.zero_content,
+            &mut tokens,
+            &mut mask,
         )?;
         step_retained += retained;
         if retained > 0 {
@@ -203,6 +209,76 @@ pub fn replay_filter(
         state,
         invariants: inv,
     })
+}
+
+/// Nearest-checkpoint tail replay (Alg. A.7 line 14, now owned by the
+/// replay layer): given the forget closure, pick the **latest** stored
+/// full checkpoint at or before the earliest affected logical step and
+/// replay only that tail.  Exact by Theorem A.1: every update before
+/// the chosen checkpoint is untouched by cl(F), so the state at C_k is
+/// already the retain-only state — the bit-identity regression test in
+/// `tests/replay_equality.rs` checks the tail result against a full
+/// from-θ0 replay.
+///
+/// With an empty closure this degenerates to "latest checkpoint, replay
+/// the remaining tail" (the cheapest state reconstruction).
+///
+/// Returns the chosen checkpoint step alongside the outcome.
+#[allow(clippy::too_many_arguments)]
+pub fn replay_filter_nearest(
+    rt: &Runtime,
+    corpus: &Corpus,
+    store: &CheckpointStore,
+    records: &[WalRecord],
+    idmap: &IdMap,
+    closure: &HashSet<u64>,
+    stored_pins: Option<&Pins>,
+    opts: &ReplayOptions,
+) -> anyhow::Result<(u32, ReplayOutcome)> {
+    let offending = offending_steps(records, idmap, closure)?;
+    // first step whose microbatches intersect cl(F); past the WAL end
+    // when nothing is affected (replay nothing beyond the last ckpt)
+    let target = match offending.first() {
+        Some(&t) => t,
+        None => records
+            .iter()
+            .map(|r| r.opt_step)
+            .max()
+            .map(|s| s.saturating_add(1))
+            .unwrap_or(0),
+    };
+    replay_filter_from_nearest_to(
+        rt, corpus, store, records, idmap, closure, target, stored_pins, opts,
+    )
+}
+
+/// The tail-replay half of [`replay_filter_nearest`] for callers that
+/// already know the earliest affected step (the controller computes the
+/// offending set for routing anyway — no second WAL scan).  `target` is
+/// the first logical step the closure influences.
+#[allow(clippy::too_many_arguments)]
+pub fn replay_filter_from_nearest_to(
+    rt: &Runtime,
+    corpus: &Corpus,
+    store: &CheckpointStore,
+    records: &[WalRecord],
+    idmap: &IdMap,
+    closure: &HashSet<u64>,
+    target: u32,
+    stored_pins: Option<&Pins>,
+    opts: &ReplayOptions,
+) -> anyhow::Result<(u32, ReplayOutcome)> {
+    let k = store.nearest_at_or_before(target)?.ok_or_else(|| {
+        anyhow::anyhow!(
+            "no checkpoint at or before step {target} — cannot satisfy \
+             the exactness precondition (fail-closed)"
+        )
+    })?;
+    let ck = store.load_full(k)?;
+    let outcome = replay_filter(
+        rt, corpus, &ck, records, idmap, closure, stored_pins, opts,
+    )?;
+    Ok((k, outcome))
 }
 
 /// Infer the accumulation length from the WAL (layout pin component).

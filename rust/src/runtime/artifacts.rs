@@ -29,9 +29,53 @@ pub struct ArtifactManifest {
     pub tokenizer_checksum: String,
     /// Named-tensor layout of the flat parameter vector.
     pub layout: Vec<(String, Vec<usize>, usize)>,
+    /// True when this manifest describes the built-in reference
+    /// executor (no files on disk; init vectors are derived, and the
+    /// "artifact hash" pin is the executor version hash).
+    pub synthetic: bool,
 }
 
 impl ArtifactManifest {
+    /// The synthetic manifest of the pure-Rust reference executor: a
+    /// constant, so pins captured at train time match pins captured at
+    /// replay time on any host (fail-closed contract preserved).
+    pub fn reference(dir: &Path) -> ArtifactManifest {
+        use crate::runtime::reference as rf;
+        let v = rf::REF_VOCAB;
+        let descriptor = format!(
+            "{};P={};PL={};B={};EB={};S={};V={}",
+            rf::REF_VERSION,
+            rf::REF_PARAM_COUNT,
+            rf::REF_LORA_PARAM_COUNT,
+            rf::REF_BATCH,
+            rf::REF_EVAL_BATCH,
+            rf::REF_SEQ_LEN,
+            v,
+        );
+        ArtifactManifest {
+            dir: dir.to_path_buf(),
+            param_count: rf::REF_PARAM_COUNT,
+            lora_param_count: rf::REF_LORA_PARAM_COUNT,
+            batch: rf::REF_BATCH,
+            eval_batch: rf::REF_EVAL_BATCH,
+            seq_len: rf::REF_SEQ_LEN,
+            vocab: v,
+            dropout: 0.0,
+            lora_rank: rf::REF_LORA_RANK,
+            artifact_hashes: vec![(
+                "reference_executor".to_string(),
+                sha256_hex(rf::REF_VERSION.as_bytes()),
+            )],
+            config_hash: sha256_hex(descriptor.as_bytes()),
+            tokenizer_checksum:
+                crate::data::tokenizer::ByteTokenizer::checksum(),
+            layout: vec![
+                ("bigram".to_string(), vec![v, v], 0),
+                ("bias".to_string(), vec![v], v * v),
+            ],
+            synthetic: true,
+        }
+    }
     pub fn load(dir: &Path) -> anyhow::Result<ArtifactManifest> {
         let path = dir.join("manifest.json");
         let text = std::fs::read_to_string(&path).map_err(|e| {
@@ -98,12 +142,17 @@ impl ArtifactManifest {
                 .unwrap_or_default()
                 .to_string(),
             layout,
+            synthetic: false,
         })
     }
 
     /// Verify every artifact file still matches its manifest SHA-256
-    /// (part of the fail-closed pin check).
+    /// (part of the fail-closed pin check).  The synthetic reference
+    /// manifest has no files — its pin is the executor version hash.
     pub fn verify_files(&self) -> anyhow::Result<()> {
+        if self.synthetic {
+            return Ok(());
+        }
         for (name, expect) in &self.artifact_hashes {
             let file = if name.ends_with(".bin") {
                 self.dir.join(name)
@@ -119,8 +168,13 @@ impl ArtifactManifest {
         Ok(())
     }
 
-    /// θ0: the deterministic initialization exported by aot.py.
+    /// θ0: the deterministic initialization — exported by aot.py for
+    /// real artifacts, derived from a pinned seed for the reference
+    /// executor (identical across processes and hosts either way).
     pub fn init_params(&self) -> anyhow::Result<Vec<f32>> {
+        if self.synthetic {
+            return Ok(crate::runtime::reference::ReferenceExec::init_params());
+        }
         let v = bytes_to_f32s(&std::fs::read(self.dir.join("init_params.bin"))?)?;
         anyhow::ensure!(v.len() == self.param_count, "init_params length");
         Ok(v)
@@ -128,6 +182,9 @@ impl ArtifactManifest {
 
     /// LoRA initialization (A ~ N(0, 0.01), B = 0).
     pub fn init_lora(&self) -> anyhow::Result<Vec<f32>> {
+        if self.synthetic {
+            return Ok(crate::runtime::reference::ReferenceExec::init_lora());
+        }
         let v = bytes_to_f32s(&std::fs::read(self.dir.join("init_lora.bin"))?)?;
         anyhow::ensure!(v.len() == self.lora_param_count, "init_lora length");
         Ok(v)

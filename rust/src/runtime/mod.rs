@@ -1,31 +1,43 @@
-//! PJRT runtime: loads the AOT HLO-text artifacts and exposes typed
-//! wrappers for every compute graph the coordinator calls.
+//! Runtime: typed wrappers for every compute graph the coordinator
+//! calls, over one of two interchangeable backends.
 //!
-//! Python never runs here — `make artifacts` already lowered the JAX/
-//! Pallas programs to `artifacts/*.hlo.txt`; this module parses the HLO
-//! text (`HloModuleProto::from_text_file`), compiles once per graph on
-//! the PJRT CPU client, and executes from the hot path.
+//! - **reference** (default): a deterministic pure-Rust executor
+//!   ([`reference::ReferenceExec`]) — a tiny bigram LM with a fused
+//!   AdamW update, bit-deterministic by construction.  Keeps tier-1
+//!   (`cargo build --release && cargo test -q`) hermetic: no PJRT, no
+//!   AOT artifacts required.
+//! - **pjrt** (feature `pjrt`): the AOT HLO artifacts produced by
+//!   `make artifacts`, compiled once per graph on the `xla` crate's
+//!   PJRT CPU client — Python never runs on the request path.
 //!
-//! Determinism note (Assumption A.13): a compiled PJRT executable is a
-//! pure function of its input buffers — same bits in, same bits out.
-//! All exactness guarantees downstream lean on this plus the fact that
-//! train/replay/oracle all use the *same* executables (pinned by
-//! SHA-256 in [`crate::config::Pins`]).
+//! Determinism note (Assumption A.13): both backends are pure functions
+//! of their input buffers — same bits in, same bits out.  All exactness
+//! guarantees downstream lean on this plus the fact that train/replay/
+//! oracle all use the *same* executor (pinned by hash in
+//! [`crate::config::Pins`]: the HLO SHA-256s for pjrt, the
+//! [`reference::REF_VERSION`] hash for the reference executor).
 
 pub mod artifacts;
+#[cfg(feature = "pjrt")]
+pub mod pjrt;
+pub mod reference;
 
 pub use artifacts::ArtifactManifest;
 
-use std::collections::HashMap;
 use std::path::Path;
 
 use crate::config::Pins;
 
-/// Compiled executables + manifest metadata.
+enum Backend {
+    Reference(reference::ReferenceExec),
+    #[cfg(feature = "pjrt")]
+    Pjrt(pjrt::PjrtBackend),
+}
+
+/// Compiled/loaded executor + manifest metadata.
 pub struct Runtime {
-    client: xla::PjRtClient,
+    backend: Backend,
     pub manifest: ArtifactManifest,
-    execs: HashMap<&'static str, xla::PjRtLoadedExecutable>,
     /// Metrics hook (execution counts/timings).
     pub metrics: crate::metrics::Metrics,
 }
@@ -38,52 +50,47 @@ pub struct StepOut {
     pub tok_count: f32,
 }
 
-const GRAPHS: &[&str] = &[
-    "train_step",
-    "adamw_update",
-    "eval_loss",
-    "next_logits",
-    "lora_step",
-    "lora_adamw",
-    "lora_eval",
-    "lora_next_logits",
-];
-
 impl Runtime {
-    /// Load the artifact directory and compile every graph.
+    /// Load a runtime for `dir`.
+    ///
+    /// With the `pjrt` feature: parses `manifest.json` and compiles the
+    /// HLO artifacts.  Without it: uses the reference executor — if a
+    /// `manifest.json` is present its geometry must match the reference
+    /// model's, otherwise the synthetic reference manifest is used (no
+    /// files needed).
     pub fn load(dir: &Path) -> anyhow::Result<Runtime> {
-        let manifest = ArtifactManifest::load(dir)?;
-        let client = xla::PjRtClient::cpu()
-            .map_err(|e| anyhow::anyhow!("pjrt client: {e:?}"))?;
-        let mut execs = HashMap::new();
-        for &name in GRAPHS {
-            let path = dir.join(format!("{name}.hlo.txt"));
-            anyhow::ensure!(
-                path.exists(),
-                "missing artifact {} — run `make artifacts`",
-                path.display()
-            );
-            let proto = xla::HloModuleProto::from_text_file(
-                path.to_str().unwrap(),
-            )
-            .map_err(|e| anyhow::anyhow!("parse {name}: {e:?}"))?;
-            let comp = xla::XlaComputation::from_proto(&proto);
-            let exe = client
-                .compile(&comp)
-                .map_err(|e| anyhow::anyhow!("compile {name}: {e:?}"))?;
-            execs.insert(name, exe);
+        let manifest = if dir.join("manifest.json").exists() {
+            ArtifactManifest::load(dir)?
+        } else {
+            ArtifactManifest::reference(dir)
+        };
+        #[cfg(feature = "pjrt")]
+        {
+            let backend = pjrt::PjrtBackend::load(dir, &manifest)?;
+            Ok(Runtime {
+                backend: Backend::Pjrt(backend),
+                manifest,
+                metrics: crate::metrics::Metrics::new(),
+            })
         }
-        Ok(Runtime {
-            client,
-            manifest,
-            execs,
-            metrics: crate::metrics::Metrics::new(),
-        })
+        #[cfg(not(feature = "pjrt"))]
+        {
+            let exec = reference::ReferenceExec::new(&manifest)?;
+            Ok(Runtime {
+                backend: Backend::Reference(exec),
+                manifest,
+                metrics: crate::metrics::Metrics::new(),
+            })
+        }
     }
 
-    /// PJRT platform name (the Table 2 hardware pin).
+    /// Platform name (the Table 2 hardware pin).
     pub fn platform(&self) -> String {
-        self.client.platform_name()
+        match &self.backend {
+            Backend::Reference(_) => "reference-cpu".to_string(),
+            #[cfg(feature = "pjrt")]
+            Backend::Pjrt(b) => b.platform(),
+        }
     }
 
     /// Capture the current environment pins (compare against the stored
@@ -102,49 +109,6 @@ impl Runtime {
         }
     }
 
-    fn run(
-        &self,
-        name: &'static str,
-        inputs: &[xla::Literal],
-    ) -> anyhow::Result<Vec<xla::Literal>> {
-        let exe = self
-            .execs
-            .get(name)
-            .ok_or_else(|| anyhow::anyhow!("unknown graph {name}"))?;
-        let out = self.metrics.time(&format!("exec.{name}"), || {
-            exe.execute::<xla::Literal>(inputs)
-        });
-        let result = out.map_err(|e| anyhow::anyhow!("execute {name}: {e:?}"))?;
-        let lit = result[0][0]
-            .to_literal_sync()
-            .map_err(|e| anyhow::anyhow!("fetch {name}: {e:?}"))?;
-        lit.to_tuple()
-            .map_err(|e| anyhow::anyhow!("untuple {name}: {e:?}"))
-    }
-
-    fn f32_vec(lit: &xla::Literal) -> anyhow::Result<Vec<f32>> {
-        lit.to_vec::<f32>()
-            .map_err(|e| anyhow::anyhow!("literal to f32: {e:?}"))
-    }
-
-    fn lit_f32(data: &[f32], dims: &[i64]) -> anyhow::Result<xla::Literal> {
-        let l = xla::Literal::vec1(data);
-        if dims.len() == 1 {
-            return Ok(l);
-        }
-        l.reshape(dims)
-            .map_err(|e| anyhow::anyhow!("reshape: {e:?}"))
-    }
-
-    fn lit_i32(data: &[i32], dims: &[i64]) -> anyhow::Result<xla::Literal> {
-        let l = xla::Literal::vec1(data);
-        if dims.len() == 1 {
-            return Ok(l);
-        }
-        l.reshape(dims)
-            .map_err(|e| anyhow::anyhow!("reshape: {e:?}"))
-    }
-
     /// g(θ; B, S): one microbatch forward/backward (reduction=sum).
     ///
     /// `tokens` is row-major `[batch, seq_len]`, `mask` is per-example
@@ -157,24 +121,15 @@ impl Runtime {
         mask: &[f32],
         seed: i32,
     ) -> anyhow::Result<StepOut> {
-        let (b, s) = (self.manifest.batch, self.manifest.seq_len);
+        let man = &self.manifest;
+        let (b, s) = (man.batch, man.seq_len);
         anyhow::ensure!(tokens.len() == b * s, "tokens shape");
         anyhow::ensure!(mask.len() == b, "mask shape");
-        anyhow::ensure!(params.len() == self.manifest.param_count, "params");
-        let out = self.run(
-            "train_step",
-            &[
-                Self::lit_f32(params, &[params.len() as i64])?,
-                Self::lit_i32(tokens, &[b as i64, s as i64])?,
-                Self::lit_f32(mask, &[b as i64])?,
-                xla::Literal::scalar(seed),
-            ],
-        )?;
-        anyhow::ensure!(out.len() == 3, "train_step arity");
-        Ok(StepOut {
-            grad: Self::f32_vec(&out[0])?,
-            loss_sum: Self::f32_vec(&out[1])?[0],
-            tok_count: Self::f32_vec(&out[2])?[0],
+        anyhow::ensure!(params.len() == man.param_count, "params");
+        self.metrics.time("exec.train_step", || match &self.backend {
+            Backend::Reference(e) => e.train_step(params, tokens, mask, seed),
+            #[cfg(feature = "pjrt")]
+            Backend::Pjrt(p) => p.train_step(man, params, tokens, mask, seed),
         })
     }
 
@@ -189,7 +144,13 @@ impl Runtime {
         step: i32,
         lr: f32,
     ) -> anyhow::Result<(Vec<f32>, Vec<f32>, Vec<f32>)> {
-        self.update_inner("adamw_update", params, grad, m, v, step, lr)
+        self.metrics.time("exec.adamw_update", || match &self.backend {
+            Backend::Reference(e) => e.adamw_update(params, grad, m, v, step, lr),
+            #[cfg(feature = "pjrt")]
+            Backend::Pjrt(p) => {
+                p.update("adamw_update", params, grad, m, v, step, lr)
+            }
+        })
     }
 
     /// AdamW over the LoRA parameter vector (adapter training).
@@ -202,37 +163,11 @@ impl Runtime {
         step: i32,
         lr: f32,
     ) -> anyhow::Result<(Vec<f32>, Vec<f32>, Vec<f32>)> {
-        self.update_inner("lora_adamw", lora, grad, m, v, step, lr)
-    }
-
-    fn update_inner(
-        &self,
-        graph: &'static str,
-        params: &[f32],
-        grad: &[f32],
-        m: &[f32],
-        v: &[f32],
-        step: i32,
-        lr: f32,
-    ) -> anyhow::Result<(Vec<f32>, Vec<f32>, Vec<f32>)> {
-        let n = params.len() as i64;
-        let out = self.run(
-            graph,
-            &[
-                Self::lit_f32(params, &[n])?,
-                Self::lit_f32(grad, &[n])?,
-                Self::lit_f32(m, &[n])?,
-                Self::lit_f32(v, &[n])?,
-                xla::Literal::scalar(step),
-                xla::Literal::scalar(lr),
-            ],
-        )?;
-        anyhow::ensure!(out.len() == 3, "{graph} arity");
-        Ok((
-            Self::f32_vec(&out[0])?,
-            Self::f32_vec(&out[1])?,
-            Self::f32_vec(&out[2])?,
-        ))
+        self.metrics.time("exec.lora_adamw", || match &self.backend {
+            Backend::Reference(e) => e.adamw_update(lora, grad, m, v, step, lr),
+            #[cfg(feature = "pjrt")]
+            Backend::Pjrt(p) => p.update("lora_adamw", lora, grad, m, v, step, lr),
+        })
     }
 
     /// Per-example eval loss: (loss_sum[eval_batch], count[eval_batch]).
@@ -241,16 +176,16 @@ impl Runtime {
         params: &[f32],
         tokens: &[i32],
     ) -> anyhow::Result<(Vec<f32>, Vec<f32>)> {
-        let (b, s) = (self.manifest.eval_batch, self.manifest.seq_len);
-        anyhow::ensure!(tokens.len() == b * s, "eval tokens shape");
-        let out = self.run(
-            "eval_loss",
-            &[
-                Self::lit_f32(params, &[params.len() as i64])?,
-                Self::lit_i32(tokens, &[b as i64, s as i64])?,
-            ],
-        )?;
-        Ok((Self::f32_vec(&out[0])?, Self::f32_vec(&out[1])?))
+        let man = &self.manifest;
+        anyhow::ensure!(
+            tokens.len() == man.eval_batch * man.seq_len,
+            "eval tokens shape"
+        );
+        self.metrics.time("exec.eval_loss", || match &self.backend {
+            Backend::Reference(e) => e.eval_loss(params, None, tokens),
+            #[cfg(feature = "pjrt")]
+            Backend::Pjrt(p) => p.eval_loss(man, params, tokens),
+        })
     }
 
     /// Next-token logits at position `lens[b]-1` (greedy decoding).
@@ -260,17 +195,16 @@ impl Runtime {
         tokens: &[i32],
         lens: &[i32],
     ) -> anyhow::Result<Vec<f32>> {
-        let (b, s) = (self.manifest.eval_batch, self.manifest.seq_len);
-        anyhow::ensure!(tokens.len() == b * s && lens.len() == b);
-        let out = self.run(
-            "next_logits",
-            &[
-                Self::lit_f32(params, &[params.len() as i64])?,
-                Self::lit_i32(tokens, &[b as i64, s as i64])?,
-                Self::lit_i32(lens, &[b as i64])?,
-            ],
-        )?;
-        Self::f32_vec(&out[0])
+        let man = &self.manifest;
+        anyhow::ensure!(
+            tokens.len() == man.eval_batch * man.seq_len
+                && lens.len() == man.eval_batch
+        );
+        self.metrics.time("exec.next_logits", || match &self.backend {
+            Backend::Reference(e) => e.next_logits(params, None, tokens, lens),
+            #[cfg(feature = "pjrt")]
+            Backend::Pjrt(p) => p.next_logits(man, params, tokens, lens),
+        })
     }
 
     /// LoRA microbatch step: gradient w.r.t. the adapter only (base
@@ -283,21 +217,12 @@ impl Runtime {
         mask: &[f32],
         seed: i32,
     ) -> anyhow::Result<StepOut> {
-        let (b, s) = (self.manifest.batch, self.manifest.seq_len);
-        let out = self.run(
-            "lora_step",
-            &[
-                Self::lit_f32(base, &[base.len() as i64])?,
-                Self::lit_f32(lora, &[lora.len() as i64])?,
-                Self::lit_i32(tokens, &[b as i64, s as i64])?,
-                Self::lit_f32(mask, &[b as i64])?,
-                xla::Literal::scalar(seed),
-            ],
-        )?;
-        Ok(StepOut {
-            grad: Self::f32_vec(&out[0])?,
-            loss_sum: Self::f32_vec(&out[1])?[0],
-            tok_count: Self::f32_vec(&out[2])?[0],
+        self.metrics.time("exec.lora_step", || match &self.backend {
+            Backend::Reference(e) => e.lora_step(base, lora, tokens, mask, seed),
+            #[cfg(feature = "pjrt")]
+            Backend::Pjrt(p) => {
+                p.lora_step(&self.manifest, base, lora, tokens, mask, seed)
+            }
         })
     }
 
@@ -308,16 +233,11 @@ impl Runtime {
         lora: &[f32],
         tokens: &[i32],
     ) -> anyhow::Result<(Vec<f32>, Vec<f32>)> {
-        let (b, s) = (self.manifest.eval_batch, self.manifest.seq_len);
-        let out = self.run(
-            "lora_eval",
-            &[
-                Self::lit_f32(base, &[base.len() as i64])?,
-                Self::lit_f32(lora, &[lora.len() as i64])?,
-                Self::lit_i32(tokens, &[b as i64, s as i64])?,
-            ],
-        )?;
-        Ok((Self::f32_vec(&out[0])?, Self::f32_vec(&out[1])?))
+        self.metrics.time("exec.lora_eval", || match &self.backend {
+            Backend::Reference(e) => e.eval_loss(base, Some(lora), tokens),
+            #[cfg(feature = "pjrt")]
+            Backend::Pjrt(p) => p.lora_eval(&self.manifest, base, lora, tokens),
+        })
     }
 
     /// Next-token logits with an adapter patch applied.
@@ -328,16 +248,54 @@ impl Runtime {
         tokens: &[i32],
         lens: &[i32],
     ) -> anyhow::Result<Vec<f32>> {
-        let (b, s) = (self.manifest.eval_batch, self.manifest.seq_len);
-        let out = self.run(
-            "lora_next_logits",
-            &[
-                Self::lit_f32(base, &[base.len() as i64])?,
-                Self::lit_f32(lora, &[lora.len() as i64])?,
-                Self::lit_i32(tokens, &[b as i64, s as i64])?,
-                Self::lit_i32(lens, &[b as i64])?,
-            ],
-        )?;
-        Self::f32_vec(&out[0])
+        self.metrics
+            .time("exec.lora_next_logits", || match &self.backend {
+                Backend::Reference(e) => {
+                    e.next_logits(base, Some(lora), tokens, lens)
+                }
+                #[cfg(feature = "pjrt")]
+                Backend::Pjrt(p) => {
+                    p.lora_next_logits(&self.manifest, base, lora, tokens, lens)
+                }
+            })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn loads_reference_runtime_without_artifacts() {
+        let dir = crate::util::tempdir("rt-ref");
+        let rt = Runtime::load(&dir).unwrap();
+        assert_eq!(rt.platform(), "reference-cpu");
+        assert_eq!(rt.manifest.param_count, reference::REF_PARAM_COUNT);
+        let pins = rt.capture_pins(2);
+        assert_eq!(pins.reduction, "sum");
+        // the executor version is pinned like an artifact hash
+        assert!(pins
+            .artifact_hashes
+            .iter()
+            .any(|(n, _)| n == "reference_executor"));
+        // pins are stable across loads (replay fail-closed contract)
+        let rt2 = Runtime::load(&dir).unwrap();
+        assert!(pins.ensure_match(&rt2.capture_pins(2)).is_ok());
+    }
+
+    #[test]
+    fn runtime_train_step_records_metrics() {
+        let dir = crate::util::tempdir("rt-metrics");
+        let rt = Runtime::load(&dir).unwrap();
+        let man = &rt.manifest;
+        let params = man.init_params().unwrap();
+        let tokens: Vec<i32> = (0..man.batch * man.seq_len)
+            .map(|i| (i % 251 + 1) as i32)
+            .collect();
+        let mask = vec![1.0f32; man.batch];
+        let out = rt.train_step(&params, &tokens, &mask, 7).unwrap();
+        assert_eq!(out.grad.len(), man.param_count);
+        let (n, _, _) = rt.metrics.timer("exec.train_step").unwrap();
+        assert_eq!(n, 1);
     }
 }

@@ -1,0 +1,272 @@
+//! PJRT backend (feature `pjrt`): loads the AOT HLO-text artifacts and
+//! executes them through the `xla` crate's PJRT CPU client.
+//!
+//! Python never runs here — `make artifacts` already lowered the JAX/
+//! Pallas programs to `artifacts/*.hlo.txt`; this module parses the HLO
+//! text (`HloModuleProto::from_text_file`), compiles once per graph on
+//! the PJRT CPU client, and executes from the hot path.
+//!
+//! NOTE: the `xla` crate (xla-rs) is not on crates.io and is not part
+//! of the pinned dependency set; enabling the `pjrt` feature requires
+//! adding it as a path/git dependency in `Cargo.toml`.  The default
+//! build uses [`super::reference`] instead, which satisfies the same
+//! purity contract (Assumption A.13) without the native toolchain.
+
+use std::collections::HashMap;
+use std::path::Path;
+
+use super::{ArtifactManifest, StepOut};
+
+/// Compiled executables + manifest metadata.
+pub struct PjrtBackend {
+    client: xla::PjRtClient,
+    execs: HashMap<&'static str, xla::PjRtLoadedExecutable>,
+}
+
+const GRAPHS: &[&str] = &[
+    "train_step",
+    "adamw_update",
+    "eval_loss",
+    "next_logits",
+    "lora_step",
+    "lora_adamw",
+    "lora_eval",
+    "lora_next_logits",
+];
+
+impl PjrtBackend {
+    /// Load the artifact directory and compile every graph.
+    pub fn load(dir: &Path, manifest: &ArtifactManifest) -> anyhow::Result<PjrtBackend> {
+        anyhow::ensure!(
+            !manifest.synthetic,
+            "the pjrt backend needs real AOT artifacts — run `make artifacts`"
+        );
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| anyhow::anyhow!("pjrt client: {e:?}"))?;
+        let mut execs = HashMap::new();
+        for &name in GRAPHS {
+            let path = dir.join(format!("{name}.hlo.txt"));
+            anyhow::ensure!(
+                path.exists(),
+                "missing artifact {} — run `make artifacts`",
+                path.display()
+            );
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().unwrap(),
+            )
+            .map_err(|e| anyhow::anyhow!("parse {name}: {e:?}"))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client
+                .compile(&comp)
+                .map_err(|e| anyhow::anyhow!("compile {name}: {e:?}"))?;
+            execs.insert(name, exe);
+        }
+        Ok(PjrtBackend { client, execs })
+    }
+
+    /// PJRT platform name (the Table 2 hardware pin).
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    fn run(
+        &self,
+        name: &'static str,
+        inputs: &[xla::Literal],
+    ) -> anyhow::Result<Vec<xla::Literal>> {
+        let exe = self
+            .execs
+            .get(name)
+            .ok_or_else(|| anyhow::anyhow!("unknown graph {name}"))?;
+        let out = exe
+            .execute::<xla::Literal>(inputs)
+            .map_err(|e| anyhow::anyhow!("execute {name}: {e:?}"))?;
+        let lit = out[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow::anyhow!("fetch {name}: {e:?}"))?;
+        lit.to_tuple()
+            .map_err(|e| anyhow::anyhow!("untuple {name}: {e:?}"))
+    }
+
+    fn f32_vec(lit: &xla::Literal) -> anyhow::Result<Vec<f32>> {
+        lit.to_vec::<f32>()
+            .map_err(|e| anyhow::anyhow!("literal to f32: {e:?}"))
+    }
+
+    fn lit_f32(data: &[f32], dims: &[i64]) -> anyhow::Result<xla::Literal> {
+        let l = xla::Literal::vec1(data);
+        if dims.len() == 1 {
+            return Ok(l);
+        }
+        l.reshape(dims)
+            .map_err(|e| anyhow::anyhow!("reshape: {e:?}"))
+    }
+
+    fn lit_i32(data: &[i32], dims: &[i64]) -> anyhow::Result<xla::Literal> {
+        let l = xla::Literal::vec1(data);
+        if dims.len() == 1 {
+            return Ok(l);
+        }
+        l.reshape(dims)
+            .map_err(|e| anyhow::anyhow!("reshape: {e:?}"))
+    }
+
+    fn step_out(out: Vec<xla::Literal>, graph: &str) -> anyhow::Result<StepOut> {
+        anyhow::ensure!(out.len() == 3, "{graph} arity");
+        Ok(StepOut {
+            grad: Self::f32_vec(&out[0])?,
+            loss_sum: Self::f32_vec(&out[1])?[0],
+            tok_count: Self::f32_vec(&out[2])?[0],
+        })
+    }
+
+    pub fn train_step(
+        &self,
+        man: &ArtifactManifest,
+        params: &[f32],
+        tokens: &[i32],
+        mask: &[f32],
+        seed: i32,
+    ) -> anyhow::Result<StepOut> {
+        let (b, s) = (man.batch, man.seq_len);
+        let out = self.run(
+            "train_step",
+            &[
+                Self::lit_f32(params, &[params.len() as i64])?,
+                Self::lit_i32(tokens, &[b as i64, s as i64])?,
+                Self::lit_f32(mask, &[b as i64])?,
+                xla::Literal::scalar(seed),
+            ],
+        )?;
+        Self::step_out(out, "train_step")
+    }
+
+    pub fn update(
+        &self,
+        graph: &'static str,
+        params: &[f32],
+        grad: &[f32],
+        m: &[f32],
+        v: &[f32],
+        step: i32,
+        lr: f32,
+    ) -> anyhow::Result<(Vec<f32>, Vec<f32>, Vec<f32>)> {
+        let n = params.len() as i64;
+        let out = self.run(
+            graph,
+            &[
+                Self::lit_f32(params, &[n])?,
+                Self::lit_f32(grad, &[n])?,
+                Self::lit_f32(m, &[n])?,
+                Self::lit_f32(v, &[n])?,
+                xla::Literal::scalar(step),
+                xla::Literal::scalar(lr),
+            ],
+        )?;
+        anyhow::ensure!(out.len() == 3, "{graph} arity");
+        Ok((
+            Self::f32_vec(&out[0])?,
+            Self::f32_vec(&out[1])?,
+            Self::f32_vec(&out[2])?,
+        ))
+    }
+
+    pub fn eval_loss(
+        &self,
+        man: &ArtifactManifest,
+        params: &[f32],
+        tokens: &[i32],
+    ) -> anyhow::Result<(Vec<f32>, Vec<f32>)> {
+        let (b, s) = (man.eval_batch, man.seq_len);
+        let out = self.run(
+            "eval_loss",
+            &[
+                Self::lit_f32(params, &[params.len() as i64])?,
+                Self::lit_i32(tokens, &[b as i64, s as i64])?,
+            ],
+        )?;
+        Ok((Self::f32_vec(&out[0])?, Self::f32_vec(&out[1])?))
+    }
+
+    pub fn next_logits(
+        &self,
+        man: &ArtifactManifest,
+        params: &[f32],
+        tokens: &[i32],
+        lens: &[i32],
+    ) -> anyhow::Result<Vec<f32>> {
+        let (b, s) = (man.eval_batch, man.seq_len);
+        let out = self.run(
+            "next_logits",
+            &[
+                Self::lit_f32(params, &[params.len() as i64])?,
+                Self::lit_i32(tokens, &[b as i64, s as i64])?,
+                Self::lit_i32(lens, &[b as i64])?,
+            ],
+        )?;
+        Self::f32_vec(&out[0])
+    }
+
+    pub fn lora_step(
+        &self,
+        man: &ArtifactManifest,
+        base: &[f32],
+        lora: &[f32],
+        tokens: &[i32],
+        mask: &[f32],
+        seed: i32,
+    ) -> anyhow::Result<StepOut> {
+        let (b, s) = (man.batch, man.seq_len);
+        let out = self.run(
+            "lora_step",
+            &[
+                Self::lit_f32(base, &[base.len() as i64])?,
+                Self::lit_f32(lora, &[lora.len() as i64])?,
+                Self::lit_i32(tokens, &[b as i64, s as i64])?,
+                Self::lit_f32(mask, &[b as i64])?,
+                xla::Literal::scalar(seed),
+            ],
+        )?;
+        Self::step_out(out, "lora_step")
+    }
+
+    pub fn lora_eval(
+        &self,
+        man: &ArtifactManifest,
+        base: &[f32],
+        lora: &[f32],
+        tokens: &[i32],
+    ) -> anyhow::Result<(Vec<f32>, Vec<f32>)> {
+        let (b, s) = (man.eval_batch, man.seq_len);
+        let out = self.run(
+            "lora_eval",
+            &[
+                Self::lit_f32(base, &[base.len() as i64])?,
+                Self::lit_f32(lora, &[lora.len() as i64])?,
+                Self::lit_i32(tokens, &[b as i64, s as i64])?,
+            ],
+        )?;
+        Ok((Self::f32_vec(&out[0])?, Self::f32_vec(&out[1])?))
+    }
+
+    pub fn lora_next_logits(
+        &self,
+        man: &ArtifactManifest,
+        base: &[f32],
+        lora: &[f32],
+        tokens: &[i32],
+        lens: &[i32],
+    ) -> anyhow::Result<Vec<f32>> {
+        let (b, s) = (man.eval_batch, man.seq_len);
+        let out = self.run(
+            "lora_next_logits",
+            &[
+                Self::lit_f32(base, &[base.len() as i64])?,
+                Self::lit_f32(lora, &[lora.len() as i64])?,
+                Self::lit_i32(tokens, &[b as i64, s as i64])?,
+                Self::lit_i32(lens, &[b as i64])?,
+            ],
+        )?;
+        Self::f32_vec(&out[0])
+    }
+}

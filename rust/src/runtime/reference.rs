@@ -1,0 +1,571 @@
+//! Deterministic pure-Rust reference executor (the default backend).
+//!
+//! The coordinator's exactness guarantees (G1/G3, Theorem A.1) never
+//! depend on *which* model the compute graphs implement — only on the
+//! graphs being pure functions of their input buffers (Assumption
+//! A.13).  This module provides that contract without PJRT: a tiny
+//! byte-level **bigram language model** with a fused AdamW update,
+//! implemented in sequential f32 arithmetic so every graph is
+//! bit-deterministic (same bits in, same bits out) across runs and
+//! processes.
+//!
+//! Unlike a hash-based stub, the bigram model genuinely *learns* (its
+//! loss decreases, it memorizes canary digit pairs), so the audit
+//! harness (MIA / canary exposure / extraction / utility) measures real
+//! signals and the replay-equality suite exercises real optimizer
+//! trajectories.
+//!
+//! Graph semantics (mirrors the AOT HLO surface in `pjrt.rs`):
+//! - `train_step(θ, tokens[B,S], mask[B], seed)`: summed next-token
+//!   cross-entropy over the *unmasked* examples; returns (∇θ, Σloss,
+//!   Σtokens).  Masked slots are **skipped entirely** — bitwise
+//!   content-independence (Lemma A.2(ii)) holds by construction, which
+//!   is what makes content-scrubbed replay exact.
+//! - `adamw_update`: global-norm clip + AdamW with bias correction,
+//!   sequential element order.
+//! - `eval_loss` / `next_logits` and the `lora_*` family: the adapter
+//!   is an additive per-vocab logit bias patch trained against a
+//!   strictly frozen base (the G2 precondition).
+//!
+//! Parameter layout (flat vector, `REF_PARAM_COUNT` = V·V + V):
+//! `θ[prev·V + v]` bigram logits, then `θ[V·V + v]` unigram bias.
+
+use crate::runtime::StepOut;
+
+/// Vocabulary (byte-level tokenizer).
+pub const REF_VOCAB: usize = 256;
+/// Train microbatch size.
+pub const REF_BATCH: usize = 8;
+/// Eval batch size.
+pub const REF_EVAL_BATCH: usize = 8;
+/// Sequence length.
+pub const REF_SEQ_LEN: usize = 64;
+/// Flat parameter count: V·V bigram table + V bias.
+pub const REF_PARAM_COUNT: usize = REF_VOCAB * REF_VOCAB + REF_VOCAB;
+/// LoRA patch length: additive per-vocab logit bias.
+pub const REF_LORA_PARAM_COUNT: usize = REF_VOCAB;
+/// Rank of the (degenerate rank-1) adapter patch.
+pub const REF_LORA_RANK: usize = 1;
+/// Version string pinned (hashed) into the artifact/pin set: bump on
+/// ANY semantic change to the executor — it is the kernel-algorithm pin.
+pub const REF_VERSION: &str =
+    "reference-executor-v1:bigram256+bias;adamw(b1=0.9,b2=0.999,eps=1e-8,clip=1.0,wd=0);ce-sum";
+
+const CLIP_NORM: f32 = 1.0;
+const BETA1: f32 = 0.9;
+const BETA2: f32 = 0.999;
+const EPS: f32 = 1e-8;
+
+/// The reference backend.  Stateless (all state flows through the
+/// buffers), so `execute`-style purity is trivial.
+#[derive(Debug, Clone)]
+pub struct ReferenceExec {
+    batch: usize,
+    eval_batch: usize,
+    seq_len: usize,
+    vocab: usize,
+}
+
+impl ReferenceExec {
+    /// Build for a manifest's geometry; refuses geometries the
+    /// reference model cannot realize (those need the `pjrt` feature).
+    pub fn new(man: &super::ArtifactManifest) -> anyhow::Result<ReferenceExec> {
+        anyhow::ensure!(
+            man.param_count == REF_PARAM_COUNT
+                && man.lora_param_count == REF_LORA_PARAM_COUNT
+                && man.vocab == REF_VOCAB,
+            "manifest geometry (P={}, PL={}, V={}) is not the reference \
+             executor's (P={REF_PARAM_COUNT}, PL={REF_LORA_PARAM_COUNT}, \
+             V={REF_VOCAB}) — these artifacts need the `pjrt` feature",
+            man.param_count,
+            man.lora_param_count,
+            man.vocab
+        );
+        Ok(ReferenceExec {
+            batch: man.batch,
+            eval_batch: man.eval_batch,
+            seq_len: man.seq_len,
+            vocab: man.vocab,
+        })
+    }
+
+    /// Deterministic θ0: small random logits (ties would make rank
+    /// statistics degenerate, so exact zeros are avoided).
+    pub fn init_params() -> Vec<f32> {
+        let mut r = crate::util::rng::SplitMix64::new(0x5EED_1217);
+        (0..REF_PARAM_COUNT)
+            .map(|_| r.normal() as f32 * 0.02)
+            .collect()
+    }
+
+    /// Deterministic LoRA init (small, like A ~ N(0, 0.01)).
+    pub fn init_lora() -> Vec<f32> {
+        let mut r = crate::util::rng::SplitMix64::new(0x10_5EED);
+        (0..REF_LORA_PARAM_COUNT)
+            .map(|_| r.normal() as f32 * 0.01)
+            .collect()
+    }
+
+    #[inline]
+    fn token_at(
+        &self,
+        tokens: &[i32],
+        slot: usize,
+        pos: usize,
+    ) -> anyhow::Result<usize> {
+        let t = tokens[slot * self.seq_len + pos];
+        anyhow::ensure!(
+            (0..self.vocab as i32).contains(&t),
+            "token {t} out of vocab range at slot {slot} pos {pos}"
+        );
+        Ok(t as usize)
+    }
+
+    /// Logits for position `pos` of `slot` into `logits` (len V):
+    /// bigram row of the previous token + bias (+ optional lora patch).
+    #[inline]
+    fn fill_logits(
+        &self,
+        params: &[f32],
+        lora: Option<&[f32]>,
+        prev: usize,
+        logits: &mut [f32],
+    ) {
+        let v = self.vocab;
+        let row = &params[prev * v..(prev + 1) * v];
+        let bias = &params[v * v..v * v + v];
+        match lora {
+            None => {
+                for i in 0..v {
+                    logits[i] = row[i] + bias[i];
+                }
+            }
+            Some(l) => {
+                for i in 0..v {
+                    logits[i] = row[i] + bias[i] + l[i];
+                }
+            }
+        }
+    }
+
+    /// Numerically stable softmax-CE at one position.  Returns
+    /// (loss, max, expsum); `probs` receives exp(l - max).
+    #[inline]
+    fn softmax_ce(
+        logits: &[f32],
+        target: usize,
+        probs: &mut [f32],
+    ) -> (f32, f32, f32) {
+        let mut mx = f32::NEG_INFINITY;
+        for &l in logits {
+            mx = mx.max(l);
+        }
+        let mut sum = 0.0f32;
+        for (p, &l) in probs.iter_mut().zip(logits) {
+            let e = (l - mx).exp();
+            *p = e;
+            sum += e;
+        }
+        let loss = sum.ln() + mx - logits[target];
+        (loss, mx, sum)
+    }
+
+    /// Core fwd/bwd.  `grad_base` collects ∇θ (full layout) when given;
+    /// `grad_lora` collects the adapter gradient when given.
+    #[allow(clippy::too_many_arguments)]
+    fn step_inner(
+        &self,
+        params: &[f32],
+        lora: Option<&[f32]>,
+        tokens: &[i32],
+        mask: &[f32],
+        mut grad_base: Option<&mut [f32]>,
+        mut grad_lora: Option<&mut [f32]>,
+    ) -> anyhow::Result<(f32, f32)> {
+        let (b, s, v) = (self.batch, self.seq_len, self.vocab);
+        anyhow::ensure!(tokens.len() == b * s, "tokens shape");
+        anyhow::ensure!(mask.len() == b, "mask shape");
+        anyhow::ensure!(params.len() == REF_PARAM_COUNT, "params shape");
+        if let Some(l) = lora {
+            anyhow::ensure!(l.len() == REF_LORA_PARAM_COUNT, "lora shape");
+        }
+        let mut logits = vec![0.0f32; v];
+        let mut probs = vec![0.0f32; v];
+        let mut loss_sum = 0.0f32;
+        let mut tok_count = 0.0f32;
+        for slot in 0..b {
+            // Filtered/padded slots are skipped, not multiplied by zero:
+            // their *content* provably never enters the computation.
+            if mask[slot] == 0.0 {
+                continue;
+            }
+            for pos in 1..s {
+                let target = self.token_at(tokens, slot, pos)?;
+                if target == 0 {
+                    continue; // PAD targets carry no loss
+                }
+                let prev = self.token_at(tokens, slot, pos - 1)?;
+                self.fill_logits(params, lora, prev, &mut logits);
+                let (loss, _mx, sum) =
+                    Self::softmax_ce(&logits, target, &mut probs);
+                loss_sum += loss;
+                tok_count += 1.0;
+                if grad_base.is_none() && grad_lora.is_none() {
+                    continue;
+                }
+                let inv = 1.0 / sum;
+                if let Some(g) = grad_base.as_deref_mut() {
+                    let (rows, bias) = g.split_at_mut(v * v);
+                    let row = &mut rows[prev * v..(prev + 1) * v];
+                    for i in 0..v {
+                        let mut d = probs[i] * inv;
+                        if i == target {
+                            d -= 1.0;
+                        }
+                        row[i] += d;
+                        bias[i] += d;
+                    }
+                }
+                if let Some(g) = grad_lora.as_deref_mut() {
+                    for i in 0..v {
+                        let mut d = probs[i] * inv;
+                        if i == target {
+                            d -= 1.0;
+                        }
+                        g[i] += d;
+                    }
+                }
+            }
+        }
+        Ok((loss_sum, tok_count))
+    }
+
+    /// g(θ; B, S) — one microbatch forward/backward (reduction=sum).
+    /// `_seed` is accepted for wire compatibility; the reference model
+    /// has no dropout, so the graph is trivially index-stable.
+    pub fn train_step(
+        &self,
+        params: &[f32],
+        tokens: &[i32],
+        mask: &[f32],
+        _seed: i32,
+    ) -> anyhow::Result<StepOut> {
+        let mut grad = vec![0.0f32; REF_PARAM_COUNT];
+        let (loss_sum, tok_count) = self.step_inner(
+            params,
+            None,
+            tokens,
+            mask,
+            Some(&mut grad),
+            None,
+        )?;
+        Ok(StepOut {
+            grad,
+            loss_sum,
+            tok_count,
+        })
+    }
+
+    /// Adapter-only gradient against a strictly frozen base (G2).
+    pub fn lora_step(
+        &self,
+        base: &[f32],
+        lora: &[f32],
+        tokens: &[i32],
+        mask: &[f32],
+        _seed: i32,
+    ) -> anyhow::Result<StepOut> {
+        let mut grad = vec![0.0f32; REF_LORA_PARAM_COUNT];
+        let (loss_sum, tok_count) = self.step_inner(
+            base,
+            Some(lora),
+            tokens,
+            mask,
+            None,
+            Some(&mut grad),
+        )?;
+        Ok(StepOut {
+            grad,
+            loss_sum,
+            tok_count,
+        })
+    }
+
+    /// Global-norm clip + AdamW with bias correction (the fused UPDATE
+    /// kernel).  Sequential f32 element order — bit-deterministic.
+    pub fn adamw_update(
+        &self,
+        params: &[f32],
+        grad: &[f32],
+        m: &[f32],
+        v: &[f32],
+        step: i32,
+        lr: f32,
+    ) -> anyhow::Result<(Vec<f32>, Vec<f32>, Vec<f32>)> {
+        anyhow::ensure!(
+            params.len() == grad.len()
+                && params.len() == m.len()
+                && params.len() == v.len(),
+            "update tensor shapes disagree"
+        );
+        anyhow::ensure!(step >= 1, "applied-update counter is 1-based");
+        let mut sq = 0.0f32;
+        for g in grad {
+            sq += g * g;
+        }
+        let norm = sq.sqrt();
+        let scale = if norm > CLIP_NORM { CLIP_NORM / norm } else { 1.0 };
+        let bc1 = 1.0 - BETA1.powi(step);
+        let bc2 = 1.0 - BETA2.powi(step);
+        let mut p2 = Vec::with_capacity(params.len());
+        let mut m2 = Vec::with_capacity(params.len());
+        let mut v2 = Vec::with_capacity(params.len());
+        for i in 0..params.len() {
+            let g = grad[i] * scale;
+            let mi = BETA1 * m[i] + (1.0 - BETA1) * g;
+            let vi = BETA2 * v[i] + (1.0 - BETA2) * g * g;
+            let mhat = mi / bc1;
+            let vhat = vi / bc2;
+            p2.push(params[i] - lr * (mhat / (vhat.sqrt() + EPS)));
+            m2.push(mi);
+            v2.push(vi);
+        }
+        Ok((p2, m2, v2))
+    }
+
+    /// Per-example (sum CE loss, predicted-token count) over the eval
+    /// batch.  Empty (all-PAD) slots yield (0, 0).
+    pub fn eval_loss(
+        &self,
+        params: &[f32],
+        lora: Option<&[f32]>,
+        tokens: &[i32],
+    ) -> anyhow::Result<(Vec<f32>, Vec<f32>)> {
+        let (be, s, v) = (self.eval_batch, self.seq_len, self.vocab);
+        anyhow::ensure!(tokens.len() == be * s, "eval tokens shape");
+        anyhow::ensure!(params.len() == REF_PARAM_COUNT, "params shape");
+        if let Some(l) = lora {
+            anyhow::ensure!(
+                l.len() == REF_LORA_PARAM_COUNT,
+                "lora patch length {} != {REF_LORA_PARAM_COUNT} — refusing \
+                 (fail-closed on corrupt adapter files)",
+                l.len()
+            );
+        }
+        let mut logits = vec![0.0f32; v];
+        let mut probs = vec![0.0f32; v];
+        let mut losses = vec![0.0f32; be];
+        let mut counts = vec![0.0f32; be];
+        for slot in 0..be {
+            for pos in 1..s {
+                let t = tokens[slot * s + pos];
+                anyhow::ensure!(
+                    (0..v as i32).contains(&t),
+                    "token {t} out of vocab"
+                );
+                if t == 0 {
+                    continue;
+                }
+                let prev = tokens[slot * s + pos - 1];
+                anyhow::ensure!(
+                    (0..v as i32).contains(&prev),
+                    "token {prev} out of vocab"
+                );
+                self.fill_logits(params, lora, prev as usize, &mut logits);
+                let (loss, _, _) =
+                    Self::softmax_ce(&logits, t as usize, &mut probs);
+                losses[slot] += loss;
+                counts[slot] += 1.0;
+            }
+        }
+        Ok((losses, counts))
+    }
+
+    /// Next-token logits at position `lens[b]-1` for greedy decoding.
+    pub fn next_logits(
+        &self,
+        params: &[f32],
+        lora: Option<&[f32]>,
+        tokens: &[i32],
+        lens: &[i32],
+    ) -> anyhow::Result<Vec<f32>> {
+        let (be, s, v) = (self.eval_batch, self.seq_len, self.vocab);
+        anyhow::ensure!(
+            tokens.len() == be * s && lens.len() == be,
+            "next_logits shapes"
+        );
+        if let Some(l) = lora {
+            anyhow::ensure!(
+                l.len() == REF_LORA_PARAM_COUNT,
+                "lora patch length {} != {REF_LORA_PARAM_COUNT} — refusing \
+                 (fail-closed on corrupt adapter files)",
+                l.len()
+            );
+        }
+        let mut out = vec![0.0f32; be * v];
+        for slot in 0..be {
+            anyhow::ensure!(
+                lens[slot] >= 1 && lens[slot] as usize <= s,
+                "length {} out of range",
+                lens[slot]
+            );
+            let last = tokens[slot * s + lens[slot] as usize - 1];
+            anyhow::ensure!(
+                (0..v as i32).contains(&last),
+                "token {last} out of vocab"
+            );
+            self.fill_logits(
+                params,
+                lora,
+                last as usize,
+                &mut out[slot * v..(slot + 1) * v],
+            );
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::ArtifactManifest;
+    use crate::util::bytes::bits_equal;
+
+    fn exec() -> ReferenceExec {
+        let man = ArtifactManifest::reference(std::path::Path::new(
+            "unused-artifacts-dir",
+        ));
+        ReferenceExec::new(&man).unwrap()
+    }
+
+    fn toy_tokens(exec: &ReferenceExec) -> (Vec<i32>, Vec<f32>) {
+        let tokens: Vec<i32> = (0..REF_BATCH * REF_SEQ_LEN)
+            .map(|i| (i % 97 + 1) as i32)
+            .collect();
+        let mask = vec![1.0f32; REF_BATCH];
+        let _ = exec;
+        (tokens, mask)
+    }
+
+    #[test]
+    fn train_step_is_bit_deterministic() {
+        let e = exec();
+        let p = ReferenceExec::init_params();
+        let (tokens, mask) = toy_tokens(&e);
+        let a = e.train_step(&p, &tokens, &mask, 7).unwrap();
+        let b = e.train_step(&p, &tokens, &mask, 7).unwrap();
+        assert!(bits_equal(&a.grad, &b.grad));
+        assert_eq!(a.loss_sum.to_bits(), b.loss_sum.to_bits());
+        assert!(a.tok_count > 0.0);
+    }
+
+    #[test]
+    fn masked_slot_content_never_enters_the_graph() {
+        let e = exec();
+        let p = ReferenceExec::init_params();
+        let (mut tokens, mut mask) = toy_tokens(&e);
+        mask[3] = 0.0;
+        let a = e.train_step(&p, &tokens, &mask, 1).unwrap();
+        // scribble arbitrary content into the masked slot
+        for t in &mut tokens[3 * REF_SEQ_LEN..4 * REF_SEQ_LEN] {
+            *t = 255;
+        }
+        let b = e.train_step(&p, &tokens, &mask, 1).unwrap();
+        assert!(bits_equal(&a.grad, &b.grad), "Lemma A.2(ii)");
+        assert_eq!(a.loss_sum.to_bits(), b.loss_sum.to_bits());
+    }
+
+    #[test]
+    fn gradient_descends_the_loss() {
+        let e = exec();
+        let mut p = ReferenceExec::init_params();
+        let (tokens, mask) = toy_tokens(&e);
+        let mut m = vec![0.0f32; p.len()];
+        let mut v = vec![0.0f32; p.len()];
+        let l0 = e.train_step(&p, &tokens, &mask, 0).unwrap().loss_sum;
+        for step in 1..=20 {
+            let out = e.train_step(&p, &tokens, &mask, 0).unwrap();
+            let (p2, m2, v2) = e
+                .adamw_update(&p, &out.grad, &m, &v, step, 5e-2)
+                .unwrap();
+            p = p2;
+            m = m2;
+            v = v2;
+        }
+        let l1 = e.train_step(&p, &tokens, &mask, 0).unwrap().loss_sum;
+        assert!(
+            l1 < l0 * 0.9,
+            "bigram model must actually learn: {l0} -> {l1}"
+        );
+    }
+
+    #[test]
+    fn eval_matches_train_loss_semantics() {
+        let e = exec();
+        let p = ReferenceExec::init_params();
+        let (tokens, mask) = toy_tokens(&e);
+        let t = e.train_step(&p, &tokens, &mask, 0).unwrap();
+        let (losses, counts) = e.eval_loss(&p, None, &tokens).unwrap();
+        let sum: f32 = losses.iter().sum();
+        let cnt: f32 = counts.iter().sum();
+        assert!((sum - t.loss_sum).abs() < 1e-3 * sum.abs().max(1.0));
+        assert_eq!(cnt, t.tok_count);
+    }
+
+    #[test]
+    fn lora_patch_shifts_logits_additively() {
+        let e = exec();
+        let p = ReferenceExec::init_params();
+        let tokens: Vec<i32> = (0..REF_EVAL_BATCH * REF_SEQ_LEN)
+            .map(|i| (i % 31 + 1) as i32)
+            .collect();
+        let lens = vec![REF_SEQ_LEN as i32; REF_EVAL_BATCH];
+        let base = e.next_logits(&p, None, &tokens, &lens).unwrap();
+        let mut lora = vec![0.0f32; REF_LORA_PARAM_COUNT];
+        lora[5] = 3.0;
+        let patched = e
+            .next_logits(&p, Some(&lora), &tokens, &lens)
+            .unwrap();
+        for slot in 0..REF_EVAL_BATCH {
+            for i in 0..REF_VOCAB {
+                let d = patched[slot * REF_VOCAB + i] - base[slot * REF_VOCAB + i];
+                if i == 5 {
+                    assert!((d - 3.0).abs() < 1e-6);
+                } else {
+                    assert_eq!(d, 0.0);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn rejects_wrong_length_lora_instead_of_panicking() {
+        // a truncated-but-4-aligned cohort-*.lora file must surface as
+        // Err at the executor boundary, never an index panic
+        let e = exec();
+        let p = ReferenceExec::init_params();
+        let tokens: Vec<i32> = (0..REF_EVAL_BATCH * REF_SEQ_LEN)
+            .map(|i| (i % 31 + 1) as i32)
+            .collect();
+        let lens = vec![REF_SEQ_LEN as i32; REF_EVAL_BATCH];
+        let short = vec![0.0f32; REF_LORA_PARAM_COUNT / 8];
+        assert!(e.eval_loss(&p, Some(&short), &tokens).is_err());
+        assert!(e.next_logits(&p, Some(&short), &tokens, &lens).is_err());
+        let (mask, train_tokens) = (
+            vec![1.0f32; REF_BATCH],
+            (0..REF_BATCH * REF_SEQ_LEN)
+                .map(|i| (i % 31 + 1) as i32)
+                .collect::<Vec<i32>>(),
+        );
+        assert!(e.lora_step(&p, &short, &train_tokens, &mask, 0).is_err());
+    }
+
+    #[test]
+    fn rejects_out_of_vocab_tokens() {
+        let e = exec();
+        let p = ReferenceExec::init_params();
+        let (mut tokens, mask) = toy_tokens(&e);
+        tokens[10] = 999;
+        assert!(e.train_step(&p, &tokens, &mask, 0).is_err());
+    }
+}

@@ -11,7 +11,7 @@ use crate::runtime::Runtime;
 use crate::util::json::Json;
 use crate::wal::{IdMap, WalRecord, WalWriter};
 
-use super::{accumulate, build_microbatch_tensors};
+use super::{accumulate, build_microbatch_tensors_into};
 
 /// Everything a finished training run leaves on disk / in memory.
 pub struct TrainOutput {
@@ -123,17 +123,22 @@ impl<'rt> Trainer<'rt> {
         let mut had_contrib = false;
         let mut step_loss = 0.0f32;
         let mut step_tokens = 0.0f32;
+        // reused microbatch tensor buffers (no per-record allocation)
+        let mut tokens = Vec::new();
+        let mut mask = Vec::new();
 
         for mb in &schedule {
             let lr = cfg.lr_at(state.applied_updates);
             self.log_record(&mut wal, &mut idmap, mb, lr)?;
-            let (tokens, mask, retained) = build_microbatch_tensors(
+            let retained = build_microbatch_tensors_into(
                 &self.corpus,
                 &mb.sample_ids,
                 man.batch,
                 man.seq_len,
                 &filter,
                 false,
+                &mut tokens,
+                &mut mask,
             )?;
             if retained > 0 {
                 let out = rt.train_step(
@@ -149,7 +154,7 @@ impl<'rt> Trainer<'rt> {
             }
             if mb.accum_end {
                 if had_contrib {
-                    let before = state.clone();
+                    let step_before = state.logical_step;
                     let (p, m, v) = rt.adamw_update(
                         &state.params,
                         &grad_acc,
@@ -158,12 +163,20 @@ impl<'rt> Trainer<'rt> {
                         state.applied_updates as i32 + 1,
                         lr,
                     )?;
-                    state.params = p;
-                    state.m = m;
-                    state.v = v;
+                    // hand the pre-update tensors to the ring instead of
+                    // cloning the full TrainState every step
+                    let before_params = std::mem::replace(&mut state.params, p);
+                    let before_m = std::mem::replace(&mut state.m, m);
+                    let before_v = std::mem::replace(&mut state.v, v);
                     state.applied_updates += 1;
                     state.logical_step = mb.step + 1;
-                    ring.record(&before, &state);
+                    ring.record_parts(
+                        step_before,
+                        &before_params,
+                        &before_m,
+                        &before_v,
+                        &state,
+                    )?;
                 } else {
                     // empty-step skip (Prop. A.5): no counter advance
                     state.logical_step = mb.step + 1;

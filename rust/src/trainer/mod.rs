@@ -29,9 +29,41 @@ pub fn build_microbatch_tensors(
     filter: impl Fn(u64) -> bool,
     zero_content: bool,
 ) -> anyhow::Result<(Vec<i32>, Vec<f32>, usize)> {
+    let mut tokens = Vec::new();
+    let mut mask = Vec::new();
+    let retained = build_microbatch_tensors_into(
+        corpus,
+        ids,
+        batch,
+        seq_len,
+        filter,
+        zero_content,
+        &mut tokens,
+        &mut mask,
+    )?;
+    Ok((tokens, mask, retained))
+}
+
+/// [`build_microbatch_tensors`] into caller-owned buffers, cleared and
+/// resized in place — the trainer and replay loops reuse one pair of
+/// buffers across the whole WAL traversal instead of allocating two
+/// fresh vectors per microbatch record.
+#[allow(clippy::too_many_arguments)]
+pub fn build_microbatch_tensors_into(
+    corpus: &Corpus,
+    ids: &[u64],
+    batch: usize,
+    seq_len: usize,
+    filter: impl Fn(u64) -> bool,
+    zero_content: bool,
+    tokens: &mut Vec<i32>,
+    mask: &mut Vec<f32>,
+) -> anyhow::Result<usize> {
     anyhow::ensure!(ids.len() <= batch, "microbatch larger than batch dim");
-    let mut tokens = vec![0i32; batch * seq_len];
-    let mut mask = vec![0.0f32; batch];
+    tokens.clear();
+    tokens.resize(batch * seq_len, 0);
+    mask.clear();
+    mask.resize(batch, 0.0);
     let mut retained = 0usize;
     for (slot, &id) in ids.iter().enumerate() {
         if filter(id) {
@@ -54,7 +86,7 @@ pub fn build_microbatch_tensors(
             retained += 1;
         }
     }
-    Ok((tokens, mask, retained))
+    Ok(retained)
 }
 
 /// Deterministic in-place gradient accumulation: `acc += g`, sequential

@@ -2,34 +2,32 @@
 //!
 //! Everything the paper's exactness story touches — checkpoints, XOR
 //! patches, state hashes — must operate on the *raw dtype bit patterns*
-//! (G3a).  These helpers are the only place we convert between `f32`
-//! vectors and little-endian byte streams, so the representation is
-//! defined exactly once.
+//! (G3a).  These helpers define the conversion between `f32` vectors
+//! and little-endian byte streams exactly once; the hot paths go
+//! through the zero-copy views and word-wise scans in [`super::simd`]
+//! instead of materializing serialized copies.
 
-/// f32 slice -> little-endian bytes.
+use super::simd;
+
+/// f32 slice -> little-endian bytes (owned copy).  Hot paths should use
+/// [`simd::as_bytes`] instead — this allocates.
 pub fn f32s_to_bytes(v: &[f32]) -> Vec<u8> {
-    let mut out = Vec::with_capacity(v.len() * 4);
-    for x in v {
-        out.extend_from_slice(&x.to_le_bytes());
-    }
-    out
+    simd::as_bytes(v).to_vec()
 }
 
 /// Little-endian bytes -> f32 vector.  Errors if length is not 4-aligned.
 pub fn bytes_to_f32s(b: &[u8]) -> anyhow::Result<Vec<f32>> {
     anyhow::ensure!(b.len() % 4 == 0, "byte length {} not 4-aligned", b.len());
-    Ok(b.chunks_exact(4)
-        .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
-        .collect())
+    let mut out = vec![0.0f32; b.len() / 4];
+    simd::as_bytes_mut(&mut out).copy_from_slice(b);
+    Ok(out)
 }
 
 /// Bit-pattern equality of two f32 slices (NaN-safe, -0.0 != +0.0):
-/// the "bit-identical in training dtype" relation of G1.
+/// the "bit-identical in training dtype" relation of G1.  Word-wise
+/// (memcmp) over the raw byte images.
 pub fn bits_equal(a: &[f32], b: &[f32]) -> bool {
-    a.len() == b.len()
-        && a.iter()
-            .zip(b)
-            .all(|(x, y)| x.to_bits() == y.to_bits())
+    a.len() == b.len() && simd::bytes_equal(simd::as_bytes(a), simd::as_bytes(b))
 }
 
 /// First index where bit patterns differ (diagnostics for CI-gate output).
@@ -37,9 +35,7 @@ pub fn first_bit_mismatch(a: &[f32], b: &[f32]) -> Option<usize> {
     if a.len() != b.len() {
         return Some(a.len().min(b.len()));
     }
-    a.iter()
-        .zip(b)
-        .position(|(x, y)| x.to_bits() != y.to_bits())
+    simd::first_mismatch(simd::as_bytes(a), simd::as_bytes(b)).map(|i| i / 4)
 }
 
 /// Max |a - b| (diagnostics; Table 4 reports this for the inexact regime).
@@ -51,30 +47,32 @@ pub fn max_abs_diff(a: &[f32], b: &[f32]) -> f32 {
 }
 
 /// XOR two byte slices elementwise into a fresh vector (G3a patches).
-pub fn xor_bytes(a: &[u8], b: &[u8]) -> Vec<u8> {
-    assert_eq!(a.len(), b.len(), "xor length mismatch");
-    a.iter().zip(b).map(|(x, y)| x ^ y).collect()
+/// Fails closed on length mismatch — mismatched patches can arrive from
+/// corrupt ring/disk state and must never partially apply.
+pub fn xor_bytes(a: &[u8], b: &[u8]) -> anyhow::Result<Vec<u8>> {
+    let mut out = Vec::new();
+    simd::xor_into(&mut out, a, b)?;
+    Ok(out)
 }
 
-/// In-place XOR: `dst ^= src`.
-pub fn xor_in_place(dst: &mut [u8], src: &[u8]) {
-    assert_eq!(dst.len(), src.len(), "xor length mismatch");
-    for (d, s) in dst.iter_mut().zip(src) {
-        *d ^= s;
-    }
+/// In-place XOR: `dst ^= src` (word-wise).  Fails closed on length
+/// mismatch.
+pub fn xor_in_place(dst: &mut [u8], src: &[u8]) -> anyhow::Result<()> {
+    simd::xor_in_place(dst, src)
 }
 
 /// Content hash of an f32 tensor state (the Table 5 model/optimizer
-/// hashes): SHA-256 over the LE byte image, truncated to 64 bits and
-/// hex-encoded like the paper's `82c10410...b978339c` style.
+/// hashes): SHA-256 over the LE byte image (zero-copy view), truncated
+/// to 64 bits and hex-encoded like the paper's `82c10410...b978339c`
+/// style.
 pub fn state_hash64(v: &[f32]) -> String {
-    let h = super::hashing::sha256(&f32s_to_bytes(v));
+    let h = super::hashing::sha256(simd::as_bytes(v));
     super::hashing::hex(&h[..8])
 }
 
 /// Full SHA-256 content hash of an f32 tensor state.
 pub fn state_hash_full(v: &[f32]) -> String {
-    super::hashing::sha256_hex(&f32s_to_bytes(v))
+    super::hashing::sha256_hex(simd::as_bytes(v))
 }
 
 #[cfg(test)]
@@ -108,10 +106,17 @@ mod tests {
     fn xor_is_involution() {
         let a: Vec<u8> = (0..=255).collect();
         let b: Vec<u8> = (0..=255).rev().collect();
-        let patch = xor_bytes(&a, &b);
+        let patch = xor_bytes(&a, &b).unwrap();
         let mut restored = b.clone();
-        xor_in_place(&mut restored, &patch);
+        xor_in_place(&mut restored, &patch).unwrap();
         assert_eq!(restored, a);
+    }
+
+    #[test]
+    fn xor_length_mismatch_is_an_error_not_a_panic() {
+        assert!(xor_bytes(&[1, 2], &[1, 2, 3]).is_err());
+        let mut d = vec![0u8; 2];
+        assert!(xor_in_place(&mut d, &[0u8; 3]).is_err());
     }
 
     #[test]

@@ -7,6 +7,29 @@
 //! are grouped together, which makes the exponent/sign planes highly
 //! repetitive, then DEFLATE (flate2) the planes.  The transform is exactly
 //! invertible — compression never touches bit patterns (G3 requirement).
+//!
+//! ## Hot-path architecture
+//!
+//! - The transpose is a single streaming pass: one sequential read
+//!   cursor over the input and four sequential write cursors (one per
+//!   byte plane), so every touched cache line is written densely instead
+//!   of the seed's byte-scatter loop.
+//! - [`plane_split_xor_into`] / [`plane_join_xor_in_place`] /
+//!   [`plane_join_sub_f32_in_place`] fuse the XOR/arithmetic patch step
+//!   into the transpose so `DeltaRing` never materializes a separate
+//!   full-size XOR image (word-wise `u32` ops, zero-copy f32 views).
+//! - DEFLATE runs per *plane shard*: the transposed buffer is split
+//!   into deterministic, length-derived shards that compress and
+//!   decompress independently on scoped threads
+//!   (`std::thread::scope`), framed by [`FRAME_MAGIC`].
+//!
+//! ## Fail-closed posture (matches the WAL integrity rules)
+//!
+//! Corrupt input from disk must produce an `Err`, never a panic and
+//! never an attacker-sized allocation: every length in the frame header
+//! is validated against the caller's `expected_len` *before* any output
+//! buffer is allocated, and each shard's inflate is capped at its
+//! declared length (a decompression bomb errors instead of growing).
 
 use std::io::{Read, Write};
 
@@ -14,53 +37,397 @@ use flate2::read::ZlibDecoder;
 use flate2::write::ZlibEncoder;
 use flate2::Compression;
 
-/// Byte-plane transpose: [a0 a1 a2 a3 b0 b1 ...] -> [a0 b0 .. a1 b1 ..].
-/// Word size 4 (f32).  Length must be 4-aligned.
-pub fn plane_split(data: &[u8]) -> Vec<u8> {
-    assert_eq!(data.len() % 4, 0);
-    let n = data.len() / 4;
-    let mut out = vec![0u8; data.len()];
-    for i in 0..n {
-        for p in 0..4 {
-            out[p * n + i] = data[i * 4 + p];
-        }
-    }
-    out
+/// Frame magic for the sharded delta format ("Unlearn Delta Frame v1").
+pub const FRAME_MAGIC: [u8; 4] = *b"UDF1";
+/// Flags bit: payload is byte-plane transposed.
+const FLAG_PLANES: u8 = 1;
+/// Target raw bytes per compression shard (256 KiB).
+const SHARD_RAW_BYTES: usize = 256 * 1024;
+/// Upper bound on shards per frame (also the decode-side sanity cap).
+const MAX_SHARDS: usize = 16;
+/// Fixed frame header: magic(4) flags(1) pad(3) raw_len(8) shards(4) pad(4).
+const HEADER_LEN: usize = 24;
+/// Per-shard table entry: raw_shard_len(8) comp_len(8).
+const SHARD_HEADER_LEN: usize = 16;
+
+// ---------------------------------------------------------------------------
+// Byte-plane transpose (word size 4 = f32)
+// ---------------------------------------------------------------------------
+
+fn split4_mut(out: &mut [u8]) -> (&mut [u8], &mut [u8], &mut [u8], &mut [u8]) {
+    let n = out.len() / 4;
+    let (p0, rest) = out.split_at_mut(n);
+    let (p1, rest) = rest.split_at_mut(n);
+    let (p2, p3) = rest.split_at_mut(n);
+    (p0, p1, p2, p3)
 }
 
-/// Inverse of [`plane_split`].
-pub fn plane_join(data: &[u8]) -> Vec<u8> {
-    assert_eq!(data.len() % 4, 0);
-    let n = data.len() / 4;
-    let mut out = vec![0u8; data.len()];
-    for i in 0..n {
-        for p in 0..4 {
-            out[i * 4 + p] = data[p * n + i];
-        }
-    }
-    out
+fn split4(planes: &[u8]) -> (&[u8], &[u8], &[u8], &[u8]) {
+    let n = planes.len() / 4;
+    let (p0, rest) = planes.split_at(n);
+    let (p1, rest) = rest.split_at(n);
+    let (p2, p3) = rest.split_at(n);
+    (p0, p1, p2, p3)
 }
 
-/// Compress a raw delta byte image (plane transform + DEFLATE).
-pub fn compress_delta(data: &[u8]) -> Vec<u8> {
-    let planes = plane_split(data);
-    let mut enc = ZlibEncoder::new(Vec::new(), Compression::fast());
-    enc.write_all(&planes).expect("in-memory write");
+/// Byte-plane transpose: [a0 a1 a2 a3 b0 b1 ...] -> [a0 b0 .. a1 b1 ..]
+/// into a caller-provided buffer.  Word size 4 (f32).  Fails closed on
+/// unaligned or mismatched lengths (corrupt input from disk).
+pub fn plane_split_into(data: &[u8], out: &mut [u8]) -> anyhow::Result<()> {
+    anyhow::ensure!(
+        data.len() % 4 == 0,
+        "plane transpose: length {} not 4-aligned",
+        data.len()
+    );
+    anyhow::ensure!(
+        out.len() == data.len(),
+        "plane transpose: output {} != input {}",
+        out.len(),
+        data.len()
+    );
+    let (p0, p1, p2, p3) = split4_mut(out);
+    for (i, w) in data.chunks_exact(4).enumerate() {
+        p0[i] = w[0];
+        p1[i] = w[1];
+        p2[i] = w[2];
+        p3[i] = w[3];
+    }
+    Ok(())
+}
+
+/// Allocating wrapper over [`plane_split_into`].
+pub fn plane_split(data: &[u8]) -> anyhow::Result<Vec<u8>> {
+    let mut out = vec![0u8; data.len()];
+    plane_split_into(data, &mut out)?;
+    Ok(out)
+}
+
+/// Inverse of [`plane_split`], into a caller-provided buffer.
+pub fn plane_join_into(planes: &[u8], out: &mut [u8]) -> anyhow::Result<()> {
+    anyhow::ensure!(
+        planes.len() % 4 == 0,
+        "plane join: length {} not 4-aligned",
+        planes.len()
+    );
+    anyhow::ensure!(
+        out.len() == planes.len(),
+        "plane join: output {} != input {}",
+        out.len(),
+        planes.len()
+    );
+    let (p0, p1, p2, p3) = split4(planes);
+    for (i, w) in out.chunks_exact_mut(4).enumerate() {
+        w[0] = p0[i];
+        w[1] = p1[i];
+        w[2] = p2[i];
+        w[3] = p3[i];
+    }
+    Ok(())
+}
+
+/// Allocating wrapper over [`plane_join_into`].
+pub fn plane_join(planes: &[u8]) -> anyhow::Result<Vec<u8>> {
+    let mut out = vec![0u8; planes.len()];
+    plane_join_into(planes, &mut out)?;
+    Ok(out)
+}
+
+/// Fused XOR + transpose: `out = plane_split(a ^ b)` in one pass, u32
+/// word-wise, with no intermediate XOR image.  The `DeltaRing` record
+/// hot path.
+pub fn plane_split_xor_into(
+    a: &[u8],
+    b: &[u8],
+    out: &mut [u8],
+) -> anyhow::Result<()> {
+    anyhow::ensure!(
+        a.len() == b.len(),
+        "xor transpose: {} vs {}",
+        a.len(),
+        b.len()
+    );
+    anyhow::ensure!(a.len() % 4 == 0, "xor transpose: not 4-aligned");
+    anyhow::ensure!(out.len() == a.len(), "xor transpose: bad output length");
+    let (p0, p1, p2, p3) = split4_mut(out);
+    for (i, (wa, wb)) in
+        a.chunks_exact(4).zip(b.chunks_exact(4)).enumerate()
+    {
+        let x = u32::from_le_bytes(wa.try_into().unwrap())
+            ^ u32::from_le_bytes(wb.try_into().unwrap());
+        p0[i] = x as u8;
+        p1[i] = (x >> 8) as u8;
+        p2[i] = (x >> 16) as u8;
+        p3[i] = (x >> 24) as u8;
+    }
+    Ok(())
+}
+
+/// Fused un-transpose + XOR apply: `dst ^= plane_join(planes)` in one
+/// pass over the destination's zero-copy byte view.  The `DeltaRing`
+/// XOR revert hot path.
+pub fn plane_join_xor_in_place(
+    planes: &[u8],
+    dst: &mut [u8],
+) -> anyhow::Result<()> {
+    anyhow::ensure!(planes.len() % 4 == 0, "xor join: not 4-aligned");
+    anyhow::ensure!(
+        dst.len() == planes.len(),
+        "xor join: dst {} != planes {}",
+        dst.len(),
+        planes.len()
+    );
+    let (p0, p1, p2, p3) = split4(planes);
+    for (i, w) in dst.chunks_exact_mut(4).enumerate() {
+        let patch = p0[i] as u32
+            | (p1[i] as u32) << 8
+            | (p2[i] as u32) << 16
+            | (p3[i] as u32) << 24;
+        let x = u32::from_le_bytes((&*w).try_into().unwrap()) ^ patch;
+        w.copy_from_slice(&x.to_le_bytes());
+    }
+    Ok(())
+}
+
+/// Fused un-transpose + arithmetic revert: `dst[i] = fl(dst[i] - Δ_i)`
+/// where the deltas are stored plane-transposed.  One pass, no joined
+/// intermediate image.
+pub fn plane_join_sub_f32_in_place(
+    planes: &[u8],
+    dst: &mut [f32],
+) -> anyhow::Result<()> {
+    anyhow::ensure!(
+        planes.len() == dst.len() * 4,
+        "arithmetic join: planes {} != 4*{}",
+        planes.len(),
+        dst.len()
+    );
+    let (p0, p1, p2, p3) = split4(planes);
+    for (i, d) in dst.iter_mut().enumerate() {
+        let bits = p0[i] as u32
+            | (p1[i] as u32) << 8
+            | (p2[i] as u32) << 16
+            | (p3[i] as u32) << 24;
+        *d -= f32::from_bits(bits); // fl(θ − Δ_t)
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// Sharded framed DEFLATE
+// ---------------------------------------------------------------------------
+
+/// Deterministic, length-derived shard sizes (sum == `len`, count in
+/// [1, MAX_SHARDS]).  Purely a function of `len` so the stored bytes do
+/// not depend on the host's core count.
+fn shard_sizes(len: usize) -> Vec<usize> {
+    let count = if len == 0 {
+        1
+    } else {
+        ((len + SHARD_RAW_BYTES - 1) / SHARD_RAW_BYTES).clamp(1, MAX_SHARDS)
+    };
+    let base = len / count;
+    let rem = len % count;
+    (0..count).map(|i| base + usize::from(i < rem)).collect()
+}
+
+fn deflate_shard(data: &[u8]) -> Vec<u8> {
+    let mut enc = ZlibEncoder::new(
+        Vec::with_capacity(data.len() / 2 + 64),
+        Compression::fast(),
+    );
+    enc.write_all(data).expect("in-memory write");
     enc.finish().expect("in-memory finish")
 }
 
-/// Decompress a delta produced by [`compress_delta`].
-pub fn decompress_delta(data: &[u8], expected_len: usize) -> anyhow::Result<Vec<u8>> {
-    let mut dec = ZlibDecoder::new(data);
-    let mut planes = Vec::with_capacity(expected_len);
-    dec.read_to_end(&mut planes)?;
+/// Inflate exactly `out.len()` bytes from `comp` into `out`, refusing
+/// both short streams and streams that continue past the declared
+/// length (decompression-bomb cap).
+fn inflate_shard_into(comp: &[u8], out: &mut [u8]) -> anyhow::Result<()> {
+    let mut dec = ZlibDecoder::new(comp);
+    dec.read_exact(out)
+        .map_err(|e| anyhow::anyhow!("shard decompress: {e}"))?;
+    let mut probe = [0u8; 1];
+    let extra = dec
+        .read(&mut probe)
+        .map_err(|e| anyhow::anyhow!("shard trailer: {e}"))?;
     anyhow::ensure!(
-        planes.len() == expected_len,
-        "decompressed length {} != expected {}",
-        planes.len(),
-        expected_len
+        extra == 0,
+        "shard inflates past its declared length (corrupt or hostile frame)"
     );
-    Ok(plane_join(&planes))
+    Ok(())
+}
+
+/// Compress a payload into the sharded frame.  Shards ≥ 2 compress
+/// concurrently on scoped threads.
+fn compress_framed(data: &[u8], flags: u8) -> Vec<u8> {
+    let sizes = shard_sizes(data.len());
+    let mut shards: Vec<&[u8]> = Vec::with_capacity(sizes.len());
+    let mut off = 0usize;
+    for &s in &sizes {
+        shards.push(&data[off..off + s]);
+        off += s;
+    }
+    let comp: Vec<Vec<u8>> = if shards.len() == 1 {
+        vec![deflate_shard(shards[0])]
+    } else {
+        std::thread::scope(|scope| {
+            let handles: Vec<_> = shards
+                .iter()
+                .map(|sh| scope.spawn(move || deflate_shard(sh)))
+                .collect();
+            handles
+                .into_iter()
+                .map(|h| h.join().expect("compress worker panicked"))
+                .collect()
+        })
+    };
+    let body: usize = comp
+        .iter()
+        .map(|c| SHARD_HEADER_LEN + c.len())
+        .sum();
+    let mut out = Vec::with_capacity(HEADER_LEN + body);
+    out.extend_from_slice(&FRAME_MAGIC);
+    out.push(flags);
+    out.extend_from_slice(&[0u8; 3]);
+    out.extend_from_slice(&(data.len() as u64).to_le_bytes());
+    out.extend_from_slice(&(comp.len() as u32).to_le_bytes());
+    out.extend_from_slice(&[0u8; 4]);
+    for (raw, c) in sizes.iter().zip(&comp) {
+        out.extend_from_slice(&(*raw as u64).to_le_bytes());
+        out.extend_from_slice(&(c.len() as u64).to_le_bytes());
+        out.extend_from_slice(c);
+    }
+    out
+}
+
+struct ShardRef {
+    raw_len: usize,
+    comp_start: usize,
+    comp_end: usize,
+}
+
+fn read_u64(b: &[u8], off: usize) -> anyhow::Result<u64> {
+    let s = b
+        .get(off..off + 8)
+        .ok_or_else(|| anyhow::anyhow!("frame truncated at offset {off}"))?;
+    Ok(u64::from_le_bytes(s.try_into().unwrap()))
+}
+
+/// Parse + validate a frame against `expected_len`, then inflate.  All
+/// header fields are checked before the output buffer is allocated, so
+/// attacker-controlled metadata cannot drive allocation size.
+fn decompress_framed(
+    data: &[u8],
+    expected_len: usize,
+    expected_flags: u8,
+) -> anyhow::Result<Vec<u8>> {
+    anyhow::ensure!(data.len() >= HEADER_LEN, "frame shorter than header");
+    anyhow::ensure!(data[0..4] == FRAME_MAGIC, "bad frame magic");
+    let flags = data[4];
+    anyhow::ensure!(
+        flags == expected_flags,
+        "frame flags {flags:#x} != expected {expected_flags:#x}"
+    );
+    let raw_len = read_u64(data, 8)? as usize;
+    anyhow::ensure!(
+        raw_len == expected_len,
+        "frame raw length {raw_len} != expected {expected_len}"
+    );
+    let shard_count = u32::from_le_bytes(data[16..20].try_into().unwrap()) as usize;
+    anyhow::ensure!(
+        (1..=MAX_SHARDS).contains(&shard_count),
+        "implausible shard count {shard_count}"
+    );
+
+    let mut shards = Vec::with_capacity(shard_count);
+    let mut off = HEADER_LEN;
+    let mut raw_sum = 0usize;
+    for _ in 0..shard_count {
+        let raw = read_u64(data, off)? as usize;
+        let comp = read_u64(data, off + 8)? as usize;
+        off += SHARD_HEADER_LEN;
+        anyhow::ensure!(
+            raw <= expected_len && raw_sum + raw <= expected_len,
+            "shard raw lengths exceed expected {expected_len}"
+        );
+        anyhow::ensure!(
+            comp <= data.len() && off + comp <= data.len(),
+            "shard compressed range out of bounds"
+        );
+        shards.push(ShardRef {
+            raw_len: raw,
+            comp_start: off,
+            comp_end: off + comp,
+        });
+        raw_sum += raw;
+        off += comp;
+    }
+    anyhow::ensure!(
+        raw_sum == expected_len,
+        "shard raw lengths sum to {raw_sum}, expected {expected_len}"
+    );
+    anyhow::ensure!(off == data.len(), "trailing garbage after last shard");
+
+    // lengths validated — the allocation below is exactly expected_len
+    let mut out = vec![0u8; expected_len];
+    if shards.len() == 1 {
+        let sh = &shards[0];
+        inflate_shard_into(&data[sh.comp_start..sh.comp_end], &mut out)?;
+    } else {
+        let results: Vec<anyhow::Result<()>> = std::thread::scope(|scope| {
+            let mut rest: &mut [u8] = &mut out;
+            let mut handles = Vec::with_capacity(shards.len());
+            for sh in &shards {
+                let (head, tail) =
+                    std::mem::take(&mut rest).split_at_mut(sh.raw_len);
+                rest = tail;
+                let comp = &data[sh.comp_start..sh.comp_end];
+                handles.push(scope.spawn(move || inflate_shard_into(comp, head)));
+            }
+            handles
+                .into_iter()
+                .map(|h| h.join().expect("decompress worker panicked"))
+                .collect()
+        });
+        for r in results {
+            r?;
+        }
+    }
+    Ok(out)
+}
+
+/// Compress a raw delta byte image (plane transform + sharded DEFLATE).
+pub fn compress_delta(data: &[u8]) -> anyhow::Result<Vec<u8>> {
+    let planes = plane_split(data)?;
+    Ok(compress_framed(&planes, FLAG_PLANES))
+}
+
+/// Compress an already plane-transposed buffer (the `DeltaRing` path:
+/// the fused XOR+transpose writes planes directly, so no extra pass).
+pub fn compress_planes(planes: &[u8]) -> anyhow::Result<Vec<u8>> {
+    anyhow::ensure!(planes.len() % 4 == 0, "planes not 4-aligned");
+    Ok(compress_framed(planes, FLAG_PLANES))
+}
+
+/// Decompress a delta produced by [`compress_delta`]/[`compress_planes`]
+/// back to the *plane-transposed* buffer (callers fuse the join into
+/// their apply step).
+pub fn decompress_planes(
+    data: &[u8],
+    expected_len: usize,
+) -> anyhow::Result<Vec<u8>> {
+    anyhow::ensure!(expected_len % 4 == 0, "expected length not 4-aligned");
+    decompress_framed(data, expected_len, FLAG_PLANES)
+}
+
+/// Decompress a delta produced by [`compress_delta`] to its raw byte
+/// image (un-transposed).
+pub fn decompress_delta(
+    data: &[u8],
+    expected_len: usize,
+) -> anyhow::Result<Vec<u8>> {
+    let planes = decompress_planes(data, expected_len)?;
+    plane_join(&planes)
 }
 
 /// Plain DEFLATE (no plane transform) — for WAL segments and manifests.
@@ -70,7 +437,10 @@ pub fn compress_raw(data: &[u8]) -> Vec<u8> {
     enc.finish().expect("in-memory finish")
 }
 
-/// Inverse of [`compress_raw`].
+/// Inverse of [`compress_raw`].  Unbounded output — suitable for
+/// in-memory/trusted streams only.  No production path currently
+/// compresses with `compress_raw`; any future caller that reads the
+/// stream from disk must use [`decompress_raw_capped`] instead.
 pub fn decompress_raw(data: &[u8]) -> anyhow::Result<Vec<u8>> {
     let mut dec = ZlibDecoder::new(data);
     let mut out = Vec::new();
@@ -78,15 +448,96 @@ pub fn decompress_raw(data: &[u8]) -> anyhow::Result<Vec<u8>> {
     Ok(out)
 }
 
+/// [`decompress_raw`] with an output cap: errors (fail-closed) instead
+/// of allocating past `max_len` on a hostile stream.  The delta/ring
+/// path does not use this (its framed format carries validated
+/// lengths); it exists so future disk-facing raw-zlib callers start
+/// capped.
+pub fn decompress_raw_capped(
+    data: &[u8],
+    max_len: usize,
+) -> anyhow::Result<Vec<u8>> {
+    let mut dec = ZlibDecoder::new(data).take(max_len as u64 + 1);
+    let mut out = Vec::new();
+    dec.read_to_end(&mut out)?;
+    anyhow::ensure!(
+        out.len() <= max_len,
+        "stream inflates past the {max_len}-byte cap"
+    );
+    Ok(out)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::util::prop::{f32_vec_adversarial, for_all};
     use crate::util::rng::SplitMix64;
+    use crate::util::simd;
 
     #[test]
     fn plane_roundtrip() {
         let data: Vec<u8> = (0..64u8).collect();
-        assert_eq!(plane_join(&plane_split(&data)), data);
+        assert_eq!(plane_join(&plane_split(&data).unwrap()).unwrap(), data);
+    }
+
+    #[test]
+    fn plane_rejects_unaligned_instead_of_panicking() {
+        assert!(plane_split(&[1, 2, 3]).is_err());
+        assert!(plane_join(&[1, 2, 3]).is_err());
+        let mut out = vec![0u8; 3];
+        assert!(plane_split_into(&[1, 2, 3, 4], &mut out).is_err());
+    }
+
+    #[test]
+    fn fused_xor_split_matches_composition() {
+        for_all("split(a^b) == split_xor(a,b)", |rng| {
+            let n = rng.below(300) as usize;
+            let a = f32_vec_adversarial(rng, n);
+            let b = f32_vec_adversarial(rng, n);
+            let ab = simd::as_bytes(&a);
+            let bb = simd::as_bytes(&b);
+            let mut xored = ab.to_vec();
+            simd::xor_in_place(&mut xored, bb).unwrap();
+            let expect = plane_split(&xored).unwrap();
+            let mut fused = vec![0u8; ab.len()];
+            plane_split_xor_into(ab, bb, &mut fused).unwrap();
+            assert_eq!(fused, expect);
+        });
+    }
+
+    #[test]
+    fn fused_xor_join_reverts_bit_exact() {
+        for_all("join_xor revert", |rng| {
+            let n = rng.below(300) as usize;
+            let before = f32_vec_adversarial(rng, n);
+            let after = f32_vec_adversarial(rng, n);
+            let mut planes = vec![0u8; n * 4];
+            plane_split_xor_into(
+                simd::as_bytes(&after),
+                simd::as_bytes(&before),
+                &mut planes,
+            )
+            .unwrap();
+            let mut cur = after.clone();
+            plane_join_xor_in_place(&planes, simd::as_bytes_mut(&mut cur))
+                .unwrap();
+            assert!(crate::util::bytes::bits_equal(&cur, &before));
+        });
+    }
+
+    #[test]
+    fn fused_sub_join_matches_scalar_subtract() {
+        for_all("join_sub == join + subtract", |rng| {
+            let n = rng.below(200) as usize;
+            let delta = crate::util::prop::f32_vec(rng, n, 1e-3);
+            let cur0 = crate::util::prop::f32_vec(rng, n, 1.0);
+            let planes = plane_split(simd::as_bytes(&delta)).unwrap();
+            let mut fused = cur0.clone();
+            plane_join_sub_f32_in_place(&planes, &mut fused).unwrap();
+            let expect: Vec<f32> =
+                cur0.iter().zip(&delta).map(|(c, d)| c - d).collect();
+            assert!(crate::util::bytes::bits_equal(&fused, &expect));
+        });
     }
 
     #[test]
@@ -97,9 +548,50 @@ mod tests {
             .map(|_| (r.normal() as f32) * 1e-4)
             .collect();
         let raw = crate::util::bytes::f32s_to_bytes(&vals);
-        let comp = compress_delta(&raw);
+        let comp = compress_delta(&raw).unwrap();
         let back = decompress_delta(&comp, raw.len()).unwrap();
         assert_eq!(back, raw, "compression must be bit-lossless");
+    }
+
+    #[test]
+    fn delta_roundtrip_adversarial_bits() {
+        for_all("sharded framing lossless on nan/-0/denormals", |rng| {
+            let n = rng.below(2000) as usize;
+            let vals = f32_vec_adversarial(rng, n);
+            let raw = simd::as_bytes(&vals);
+            let comp = compress_delta(raw).unwrap();
+            assert_eq!(decompress_delta(&comp, raw.len()).unwrap(), raw);
+            // planes path used by the ring
+            let planes = plane_split(raw).unwrap();
+            let comp2 = compress_planes(&planes).unwrap();
+            assert_eq!(decompress_planes(&comp2, raw.len()).unwrap(), planes);
+        });
+    }
+
+    #[test]
+    fn multi_shard_roundtrip() {
+        // > SHARD_RAW_BYTES so the frame carries several shards
+        let mut r = SplitMix64::new(11);
+        let vals: Vec<f32> = (0..300_000)
+            .map(|_| (r.normal() as f32) * 1e-4)
+            .collect();
+        let raw = simd::as_bytes(&vals);
+        assert!(raw.len() > SHARD_RAW_BYTES * 2);
+        let comp = compress_delta(raw).unwrap();
+        let count = u32::from_le_bytes(comp[16..20].try_into().unwrap());
+        assert!(count >= 2, "expected multiple shards, got {count}");
+        assert_eq!(decompress_delta(&comp, raw.len()).unwrap(), raw);
+    }
+
+    #[test]
+    fn shard_sizes_are_deterministic_and_cover() {
+        for len in [0usize, 1, 4, SHARD_RAW_BYTES, SHARD_RAW_BYTES * 3 + 17,
+                    SHARD_RAW_BYTES * 100] {
+            let a = shard_sizes(len);
+            assert_eq!(a, shard_sizes(len));
+            assert_eq!(a.iter().sum::<usize>(), len);
+            assert!(!a.is_empty() && a.len() <= MAX_SHARDS);
+        }
     }
 
     #[test]
@@ -109,7 +601,7 @@ mod tests {
             .map(|_| (r.normal() as f32) * 3e-4)
             .collect();
         let raw = crate::util::bytes::f32s_to_bytes(&vals);
-        let comp = compress_delta(&raw);
+        let comp = compress_delta(&raw).unwrap();
         let ratio = comp.len() as f64 / raw.len() as f64;
         assert!(ratio < 0.95, "expected some compression, got {ratio:.3}");
     }
@@ -120,12 +612,60 @@ mod tests {
         let c = compress_raw(&data);
         assert!(c.len() < data.len());
         assert_eq!(decompress_raw(&c).unwrap(), data);
+        assert_eq!(decompress_raw_capped(&c, data.len()).unwrap(), data);
+        assert!(decompress_raw_capped(&c, data.len() - 1).is_err());
     }
 
     #[test]
     fn decompress_length_check() {
         let raw = vec![0u8; 64];
-        let comp = compress_delta(&raw);
+        let comp = compress_delta(&raw).unwrap();
         assert!(decompress_delta(&comp, 60).is_err());
+        assert!(decompress_delta(&comp, 68).is_err());
+    }
+
+    #[test]
+    fn corrupt_frames_fail_closed() {
+        let raw = vec![7u8; 256];
+        let good = compress_delta(&raw).unwrap();
+
+        // bad magic
+        let mut bad = good.clone();
+        bad[0] ^= 0xFF;
+        assert!(decompress_delta(&bad, raw.len()).is_err());
+
+        // truncated header / body
+        assert!(decompress_delta(&good[..10], raw.len()).is_err());
+        assert!(
+            decompress_delta(&good[..good.len() - 1], raw.len()).is_err()
+        );
+
+        // lying raw_len (attacker-controlled allocation metadata)
+        let mut bad = good.clone();
+        bad[8..16].copy_from_slice(&(usize::MAX as u64).to_le_bytes());
+        assert!(decompress_delta(&bad, raw.len()).is_err());
+
+        // implausible shard count
+        let mut bad = good.clone();
+        bad[16..20].copy_from_slice(&u32::MAX.to_le_bytes());
+        assert!(decompress_delta(&bad, raw.len()).is_err());
+
+        // shard table declaring more raw bytes than the frame total
+        let mut bad = good.clone();
+        bad[HEADER_LEN..HEADER_LEN + 8]
+            .copy_from_slice(&(1u64 << 40).to_le_bytes());
+        assert!(decompress_delta(&bad, raw.len()).is_err());
+
+        // flipped compressed payload byte
+        let mut bad = good.clone();
+        let last = bad.len() - 1;
+        bad[last] ^= 0x10;
+        assert!(decompress_delta(&bad, raw.len()).is_err());
+    }
+
+    #[test]
+    fn empty_delta_roundtrips() {
+        let comp = compress_delta(&[]).unwrap();
+        assert_eq!(decompress_delta(&comp, 0).unwrap(), Vec::<u8>::new());
     }
 }

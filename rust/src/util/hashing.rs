@@ -76,11 +76,35 @@ pub fn hash64_keyed(key: &[u8], data: &[u8]) -> u64 {
     u64::from_be_bytes(full[..8].try_into().unwrap())
 }
 
-/// CRC32 (IEEE) of a byte slice — per-WAL-record checksum.
+/// CRC32 (IEEE 802.3, reflected, poly 0xEDB88320) of a byte slice —
+/// per-WAL-record checksum.  Own table-driven implementation (like
+/// [`xxh64`] below, the crate set is pinned to anyhow/flate2/hmac/sha2);
+/// the standard check value is locked in the tests.
 pub fn crc32(data: &[u8]) -> u32 {
-    let mut h = crc32fast::Hasher::new();
-    h.update(data);
-    h.finalize()
+    const TABLE: [u32; 256] = {
+        let mut t = [0u32; 256];
+        let mut i = 0usize;
+        while i < 256 {
+            let mut c = i as u32;
+            let mut k = 0;
+            while k < 8 {
+                c = if c & 1 != 0 {
+                    0xEDB8_8320 ^ (c >> 1)
+                } else {
+                    c >> 1
+                };
+                k += 1;
+            }
+            t[i] = c;
+            i += 1;
+        }
+        t
+    };
+    let mut c = !0u32;
+    for &b in data {
+        c = TABLE[((c ^ b as u32) & 0xFF) as usize] ^ (c >> 8);
+    }
+    !c
 }
 
 /// Hex-encode bytes (lowercase).

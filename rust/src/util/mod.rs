@@ -8,6 +8,7 @@ pub mod hashing;
 pub mod json;
 pub mod prop;
 pub mod rng;
+pub mod simd;
 
 /// Fresh temp directory for tests and benches (unique per call).
 pub fn tempdir(tag: &str) -> std::path::PathBuf {

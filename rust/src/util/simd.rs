@@ -1,0 +1,271 @@
+//! Zero-copy byte views and word-wise scans — the hot-path byte layer.
+//!
+//! Every exactness-critical hot path (XOR patches, state hashes, bit
+//! equality, checkpoint I/O) operates on the raw f32 bit patterns.  The
+//! seed implementation materialized a fresh `Vec<u8>` copy of every
+//! tensor and then walked it one byte at a time; at ring-buffer rates
+//! (3 parameter-sized tensors per optimizer step) those copies dominate
+//! the deletion-latency budget.  This module provides:
+//!
+//! - [`as_bytes`] / [`as_bytes_mut`]: zero-copy `&[f32] <-> &[u8]`
+//!   views (no allocation, no serialization pass);
+//! - [`xor_in_place`] / [`xor_into`]: `u128`-word XOR (16 bytes per
+//!   operation instead of 1);
+//! - [`bytes_equal`] / [`first_mismatch`]: word-wise equality and
+//!   first-difference scans.
+//!
+//! Bit-identity semantics are unchanged: [`scalar`] keeps the reference
+//! byte-at-a-time implementations and the property tests below prove
+//! byte-for-byte equivalence on adversarial inputs (NaN payloads, -0.0,
+//! denormals, ±inf).
+//!
+//! The `&[f32] -> &[u8]` view is only an LE byte *image* on a
+//! little-endian target, which is what the on-disk formats pin; the
+//! compile-time assertion below refuses big-endian builds rather than
+//! silently changing checkpoint bytes.
+
+// The on-disk formats (checkpoints, WAL, delta frames) are defined as
+// little-endian; a big-endian build would reinterpret them incorrectly.
+const _: () = assert!(
+    cfg!(target_endian = "little"),
+    "unlearn requires a little-endian target: zero-copy f32 byte views \
+     are defined as the LE byte image"
+);
+
+/// Zero-copy view of an f32 slice as its little-endian byte image.
+///
+/// Sound: `f32` has size 4, alignment 4, no padding, and every byte
+/// pattern is a valid `u8`; narrowing alignment is always allowed.
+#[inline]
+pub fn as_bytes(v: &[f32]) -> &[u8] {
+    // SAFETY: see doc comment — same allocation, length v.len()*4,
+    // u8 has alignment 1 and no validity constraints.
+    unsafe { std::slice::from_raw_parts(v.as_ptr().cast::<u8>(), v.len() * 4) }
+}
+
+/// Zero-copy mutable view of an f32 slice as its LE byte image.
+///
+/// Sound for writes too: every 4-byte pattern is a valid `f32` bit
+/// pattern (signaling NaNs included — we never do arithmetic through
+/// this view, only byte transport).
+#[inline]
+pub fn as_bytes_mut(v: &mut [f32]) -> &mut [u8] {
+    // SAFETY: as in `as_bytes`; exclusive borrow is carried through.
+    unsafe {
+        std::slice::from_raw_parts_mut(v.as_mut_ptr().cast::<u8>(), v.len() * 4)
+    }
+}
+
+/// `dst ^= src`, 16 bytes per word operation.  Fails closed on length
+/// mismatch (corrupt patch metadata must never partially apply).
+pub fn xor_in_place(dst: &mut [u8], src: &[u8]) -> anyhow::Result<()> {
+    anyhow::ensure!(
+        dst.len() == src.len(),
+        "xor length mismatch: dst {} vs src {}",
+        dst.len(),
+        src.len()
+    );
+    let mut d = dst.chunks_exact_mut(16);
+    let mut s = src.chunks_exact(16);
+    for (dw, sw) in d.by_ref().zip(s.by_ref()) {
+        let a = u128::from_le_bytes((&*dw).try_into().unwrap());
+        let b = u128::from_le_bytes(sw.try_into().unwrap());
+        dw.copy_from_slice(&(a ^ b).to_le_bytes());
+    }
+    for (db, sb) in d.into_remainder().iter_mut().zip(s.remainder()) {
+        *db ^= sb;
+    }
+    Ok(())
+}
+
+/// `out = a ^ b` into a caller-provided buffer (resized to fit) —
+/// word-wise, no intermediate allocation beyond the reused buffer.
+pub fn xor_into(out: &mut Vec<u8>, a: &[u8], b: &[u8]) -> anyhow::Result<()> {
+    anyhow::ensure!(
+        a.len() == b.len(),
+        "xor length mismatch: {} vs {}",
+        a.len(),
+        b.len()
+    );
+    out.clear();
+    out.resize(a.len(), 0);
+    let mut o = out.chunks_exact_mut(16);
+    let mut ia = a.chunks_exact(16);
+    let mut ib = b.chunks_exact(16);
+    for ((ow, aw), bw) in o.by_ref().zip(ia.by_ref()).zip(ib.by_ref()) {
+        let x = u128::from_le_bytes(aw.try_into().unwrap());
+        let y = u128::from_le_bytes(bw.try_into().unwrap());
+        ow.copy_from_slice(&(x ^ y).to_le_bytes());
+    }
+    for ((ob, ab), bb) in o
+        .into_remainder()
+        .iter_mut()
+        .zip(ia.remainder())
+        .zip(ib.remainder())
+    {
+        *ob = ab ^ bb;
+    }
+    Ok(())
+}
+
+/// Byte equality (compiles to a memcmp — the word-wise fast path).
+#[inline]
+pub fn bytes_equal(a: &[u8], b: &[u8]) -> bool {
+    a == b
+}
+
+/// Index of the first differing byte, scanning 8-byte words.
+pub fn first_mismatch(a: &[u8], b: &[u8]) -> Option<usize> {
+    if a.len() != b.len() {
+        return Some(a.len().min(b.len()));
+    }
+    let words = a.len() / 8;
+    for i in 0..words {
+        let off = i * 8;
+        let x = u64::from_le_bytes(a[off..off + 8].try_into().unwrap());
+        let y = u64::from_le_bytes(b[off..off + 8].try_into().unwrap());
+        if x != y {
+            // LE: the lowest-order differing byte is the first in memory
+            return Some(off + ((x ^ y).trailing_zeros() / 8) as usize);
+        }
+    }
+    (words * 8..a.len()).find(|&i| a[i] != b[i])
+}
+
+/// Reference byte-at-a-time implementations.  These define the
+/// semantics the word-wise paths must match bit-for-bit; kept public so
+/// the benches can measure the before/after delta and the property
+/// tests can assert equivalence.
+pub mod scalar {
+    /// One-byte-at-a-time XOR (the seed's hot-path implementation).
+    pub fn xor_in_place(dst: &mut [u8], src: &[u8]) {
+        assert_eq!(dst.len(), src.len());
+        for (d, s) in dst.iter_mut().zip(src) {
+            *d ^= s;
+        }
+    }
+
+    /// Serializing f32 -> LE bytes with a fresh allocation per call.
+    pub fn f32s_to_bytes(v: &[f32]) -> Vec<u8> {
+        let mut out = Vec::with_capacity(v.len() * 4);
+        for x in v {
+            out.extend_from_slice(&x.to_le_bytes());
+        }
+        out
+    }
+
+    /// Element-wise first-mismatch scan.
+    pub fn first_mismatch(a: &[u8], b: &[u8]) -> Option<usize> {
+        if a.len() != b.len() {
+            return Some(a.len().min(b.len()));
+        }
+        a.iter().zip(b).position(|(x, y)| x != y)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{byte_vec, f32_vec_adversarial, for_all};
+
+    #[test]
+    fn view_matches_serialized_bytes() {
+        for_all("as_bytes == f32s_to_bytes", |rng| {
+            let n = rng.below(500) as usize;
+            let v = f32_vec_adversarial(rng, n);
+            assert_eq!(as_bytes(&v), scalar::f32s_to_bytes(&v).as_slice());
+        });
+    }
+
+    #[test]
+    fn mut_view_roundtrips_bits() {
+        let mut v = vec![1.5f32, f32::NAN, -0.0, f32::from_bits(0x7f800001)];
+        let orig = v.clone();
+        let snapshot: Vec<u8> = as_bytes(&v).to_vec();
+        as_bytes_mut(&mut v).copy_from_slice(&snapshot);
+        assert!(orig
+            .iter()
+            .zip(&v)
+            .all(|(a, b)| a.to_bits() == b.to_bits()));
+    }
+
+    #[test]
+    fn wordwise_xor_equals_scalar_xor() {
+        for_all("xor word == xor byte", |rng| {
+            let n = rng.below(200) as usize; // covers remainders < 16
+            let a = byte_vec(rng, n);
+            let b = byte_vec(rng, n);
+            let mut fast = a.clone();
+            xor_in_place(&mut fast, &b).unwrap();
+            let mut slow = a.clone();
+            scalar::xor_in_place(&mut slow, &b);
+            assert_eq!(fast, slow);
+        });
+    }
+
+    #[test]
+    fn xor_into_equals_scalar() {
+        for_all("xor_into == scalar", |rng| {
+            let n = rng.below(100) as usize;
+            let a = byte_vec(rng, n);
+            let b = byte_vec(rng, n);
+            let mut out = Vec::new();
+            xor_into(&mut out, &a, &b).unwrap();
+            let expect: Vec<u8> =
+                a.iter().zip(&b).map(|(x, y)| x ^ y).collect();
+            assert_eq!(out, expect);
+        });
+    }
+
+    #[test]
+    fn xor_is_involution_through_f32_views() {
+        for_all("xor involution on tensors", |rng| {
+            let n = rng.below(300) as usize;
+            let a = f32_vec_adversarial(rng, n);
+            let b = f32_vec_adversarial(rng, n);
+            let mut patch = Vec::new();
+            xor_into(&mut patch, as_bytes(&a), as_bytes(&b)).unwrap();
+            let mut restored = b.clone();
+            xor_in_place(as_bytes_mut(&mut restored), &patch).unwrap();
+            assert!(a
+                .iter()
+                .zip(&restored)
+                .all(|(x, y)| x.to_bits() == y.to_bits()));
+        });
+    }
+
+    #[test]
+    fn xor_length_mismatch_fails_closed() {
+        let mut d = vec![0u8; 4];
+        assert!(xor_in_place(&mut d, &[0u8; 5]).is_err());
+        let mut out = Vec::new();
+        assert!(xor_into(&mut out, &[0u8; 3], &[0u8; 4]).is_err());
+    }
+
+    #[test]
+    fn first_mismatch_equals_scalar() {
+        for_all("first_mismatch word == byte", |rng| {
+            let n = rng.below(120) as usize;
+            let a = byte_vec(rng, n);
+            let mut b = a.clone();
+            // flip one random byte half the time
+            if n > 0 && rng.below(2) == 0 {
+                let i = rng.below(n as u64) as usize;
+                b[i] ^= (rng.below(255) + 1) as u8;
+            }
+            assert_eq!(first_mismatch(&a, &b), scalar::first_mismatch(&a, &b));
+        });
+    }
+
+    #[test]
+    fn first_mismatch_length_and_word_boundaries() {
+        assert_eq!(first_mismatch(&[1, 2], &[1, 2, 3]), Some(2));
+        let a = vec![0u8; 24];
+        for flip in [0usize, 7, 8, 15, 16, 23] {
+            let mut b = a.clone();
+            b[flip] = 0xFF;
+            assert_eq!(first_mismatch(&a, &b), Some(flip), "flip at {flip}");
+        }
+        assert_eq!(first_mismatch(&a, &a), None);
+    }
+}

@@ -11,7 +11,10 @@ use unlearn::checkpoint::CheckpointStore;
 use unlearn::config::RunConfig;
 use unlearn::equality::{wal_segment_shas, EqualityProof};
 use unlearn::harness;
-use unlearn::replay::{load_run, offending_steps, replay_filter, ReplayOptions};
+use unlearn::replay::{
+    load_run, offending_steps, replay_filter, replay_filter_nearest,
+    ReplayOptions,
+};
 use unlearn::runtime::Runtime;
 use unlearn::trainer::Trainer;
 
@@ -163,6 +166,65 @@ fn g1_and_friends_through_real_stack() {
     )
     .unwrap();
     assert!(clean.state.bits_equal(&full.state));
+}
+
+#[test]
+fn nearest_checkpoint_tail_replay_is_bit_identical_to_full_replay() {
+    // The optimized path: pick the latest checkpoint at or before the
+    // earliest offending step and replay only that tail.  Bit-identity
+    // regression: the tail result must equal the full from-θ0 replay.
+    let f = fixture();
+    let trainer = Trainer::new(&f.rt, f.cfg.clone(), f.corpus.clone());
+    let full_train = trainer.train(|_| false).expect("train");
+    let (records, idmap, pins) =
+        load_run(&f.cfg.run_dir, f.cfg.hmac_key.clone()).unwrap();
+    let store =
+        CheckpointStore::open(&f.cfg.run_dir.join("ckpt"), 64).unwrap();
+    let opts = ReplayOptions::default();
+
+    // forget set whose influence starts strictly after checkpoint 4
+    // (the small corpus is fully covered within ~7 steps, so candidates
+    // first seen later than that do not exist)
+    let closure: HashSet<u64> =
+        harness::ids_first_seen_at_or_after(&records, &idmap, 5)
+            .into_iter()
+            .take(4)
+            .collect();
+    assert!(!closure.is_empty());
+    let offending = offending_steps(&records, &idmap, &closure).unwrap();
+    let first_offending = *offending.first().unwrap();
+    assert!(first_offending >= 5);
+
+    let theta0 = store.load_full(0).unwrap();
+    let full = replay_filter(
+        &f.rt, &f.corpus, &theta0, &records, &idmap, &closure, Some(&pins),
+        &opts,
+    )
+    .unwrap();
+    let (k, tail) = replay_filter_nearest(
+        &f.rt, &f.corpus, &store, &records, &idmap, &closure, Some(&pins),
+        &opts,
+    )
+    .unwrap();
+    assert!(k <= first_offending, "start must precede all forget influence");
+    assert!(k > 0, "nearest selection must beat the θ0 fallback");
+    assert!(
+        tail.state.bits_equal(&full.state),
+        "G1: tail replay from C_{k} must be bit-identical to full replay"
+    );
+    // the tail traversal is strictly cheaper than the full one
+    assert!(tail.invariants.records < full.invariants.records);
+
+    // empty closure degenerates to "latest checkpoint, minimal tail"
+    // and reproduces the direct training state exactly
+    let (k2, clean) = replay_filter_nearest(
+        &f.rt, &f.corpus, &store, &records, &idmap, &HashSet::new(),
+        Some(&pins), &opts,
+    )
+    .unwrap();
+    assert_eq!(k2, STEPS, "latest checkpoint is the final state");
+    assert!(clean.state.bits_equal(&full_train.state));
+    assert_eq!(clean.invariants.records, 0, "nothing left to replay");
 }
 
 #[test]
