@@ -15,8 +15,8 @@ use unlearn::runtime::Runtime;
 fn json_main() {
     let rt = Runtime::load(&harness::artifacts_dir()).expect("artifacts");
     let corpus = harness::small_corpus(rt.manifest.seq_len);
-    let cfg = RunConfig {
-        run_dir: unlearn::util::tempdir("bench-controller-json"),
+    let mk = |tag: &str| RunConfig {
+        run_dir: unlearn::util::tempdir(tag),
         steps: 8,
         accum: 2,
         checkpoint_every: 4,
@@ -26,7 +26,9 @@ fn json_main() {
         ..Default::default()
     };
     let trained =
-        harness::build_system(&rt, cfg, corpus.clone(), false).unwrap();
+        harness::build_system(&rt, mk("bench-controller-json"), corpus.clone(),
+                              false)
+            .unwrap();
     let mut system = trained.system;
     let t0 = std::time::Instant::now();
     let outcome = system
@@ -37,12 +39,75 @@ fn json_main() {
             urgency: Urgency::Normal,
         })
         .unwrap();
+    let handle_ns = ns(t0.elapsed().as_secs_f64());
+
+    // ---- coalesced vs sequential forget throughput --------------------
+    // K replay-bound requests: once sequentially (K tail replays), once
+    // through execute_batch (ONE union-filtered tail replay).  Tracks
+    // the amortization win in the perf trajectory.
+    const K: usize = 4;
+    let mut seq =
+        harness::build_system(&rt, mk("bench-ctl-seq"), corpus.clone(), false)
+            .unwrap()
+            .system;
+    let mut coal =
+        harness::build_system(&rt, mk("bench-ctl-coal"), corpus.clone(), false)
+            .unwrap()
+            .system;
+    // pick users whose earliest influence predates the ring window so
+    // BOTH routes measure the replay path (apples to apples)
+    let earliest_ring = seq.ring.earliest_step().unwrap_or(u32::MAX);
+    let reqs: Vec<ForgetRequest> = (0..24u32)
+        .filter_map(|u| {
+            let req = ForgetRequest {
+                id: format!("bench-batch-{u}"),
+                user: Some(u),
+                sample_ids: vec![],
+                urgency: Urgency::Normal,
+            };
+            let plan = seq.plan(&req).ok()?;
+            let first = *plan.offending.first()?;
+            (first < earliest_ring).then_some(req)
+        })
+        .take(K)
+        .collect();
+    let kn = reqs.len().max(1) as f64;
+    let t0 = std::time::Instant::now();
+    let mut seq_replay_steps = 0u64;
+    for r in &reqs {
+        let o = seq.handle(r).unwrap();
+        seq_replay_steps += o
+            .details
+            .get("applied_steps")
+            .or_else(|| o.details.get("resumed_applied_steps"))
+            .and_then(|v| v.as_u64())
+            .unwrap_or(0);
+    }
+    let seq_secs = t0.elapsed().as_secs_f64();
+    let t0 = std::time::Instant::now();
+    let batch = unlearn::controller::execute_batch(&mut coal, &reqs).unwrap();
+    let coal_secs = t0.elapsed().as_secs_f64();
+
     let mut j = unlearn::util::json::Json::obj();
     j.set("bench", "controller")
         .set("action", outcome.action.as_str())
         .set("closure_size", outcome.closure_size)
-        .set("handle_ns", ns(t0.elapsed().as_secs_f64()))
-        .set("schema", 1);
+        .set("handle_ns", handle_ns)
+        .set("coalesce_requests", reqs.len())
+        .set("seq_forget_ns_total", ns(seq_secs))
+        .set("coalesced_forget_ns_total", ns(coal_secs))
+        .set("seq_requests_per_s", kn / seq_secs.max(1e-12))
+        .set("coalesced_requests_per_s", kn / coal_secs.max(1e-12))
+        .set(
+            "seq_replay_steps_per_request",
+            seq_replay_steps as f64 / kn,
+        )
+        .set(
+            "coalesced_replay_steps_per_request",
+            batch.applied_steps as f64 / kn,
+        )
+        .set("coalesced_replays_run", batch.replays_run)
+        .set("schema", 2);
     emit_json("controller", &j);
 }
 

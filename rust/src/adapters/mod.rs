@@ -83,6 +83,20 @@ impl AdapterRegistry {
         Some(cohorts)
     }
 
+    /// Register an already-trained adapter (production registries load
+    /// persisted patches at startup; tests fabricate scopes directly).
+    /// Refuses to shadow a live cohort — scoped deletion must never
+    /// silently lose a patch.
+    pub fn insert(&mut self, adapter: Adapter) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            !self.adapters.contains_key(&adapter.cohort),
+            "cohort {} already registered",
+            adapter.cohort
+        );
+        self.adapters.insert(adapter.cohort, adapter);
+        Ok(())
+    }
+
     /// Train a cohort adapter on its samples, base strictly frozen.
     pub fn train_cohort(
         &mut self,

@@ -1,0 +1,393 @@
+//! Batch coalescing: one shared rebuild serving many requests.
+//!
+//! Deletion requests arrive as a *stream* (the ROADMAP's
+//! millions-of-users north star); most of them bottom out in the same
+//! expensive operation — a filtered rebuild of the serving state.
+//! [`execute_batch`] unions the closures of N pending requests, runs
+//! **one** shared rebuild filtering the union (a bounded ring
+//! revert + resumed tail when the union fits the delta-ring window,
+//! else a nearest-checkpoint tail replay), and fans per-request
+//! manifest entries and outcomes back out.  Exact by Theorem A.1
+//! either way: the rebuild starts from a state that precedes every
+//! offending step of the union, so replay-filter(∪ᵢ clᵢ) equals the
+//! state sequential handling reaches after its *last* rebuild (each
+//! sequential rebuild also filters the cumulative union — see
+//! `tests/replay_equality.rs`).
+//!
+//! Sequential parity of the gates: a request whose plan opens with an
+//! adapter deletion gets that gate first (shared
+//! [`Executor::adapter_step`] — registry mutations and audit identical
+//! to the sequential chain); if deletion alone passes its audit the
+//! request is served and contributes nothing to the rebuild union.
+//! The one deliberate upgrade: urgent requests join the shared *exact*
+//! rebuild instead of the approximate hot path — amortized it is as
+//! fast, and strictly stronger.  (Audit gates in a batch run against
+//! the pre-batch state; a sequential stream would audit later requests
+//! against intermediate states.)
+//!
+//! Failure isolation: every request owns its result slot.  Outcomes
+//! already committed in phase A are never discarded; when the shared
+//! rebuild cannot run (e.g. checkpoint pruning left the union without
+//! a common start point) the members fall back to sequential handling,
+//! so only the genuinely unservable requests fail — each with its own
+//! error.
+
+use std::collections::HashSet;
+
+use crate::audit::{run_audits, ModelView};
+use crate::manifest::ActionKind;
+use crate::replay::{offending_steps, replay_filter, ReplayOptions, ReplayOutcome};
+use crate::util::json::Json;
+
+use super::execute::{
+    note_deleted, record_adapter_side_effect, replay_tail, Executor,
+};
+use super::plan::{PlanStep, Planner, UnlearnError, UnlearnPlan};
+use super::{ControllerOutcome, ForgetRequest, UnlearnSystem};
+
+/// How the shared rebuild runs.
+pub enum SharedMode {
+    /// Revert `steps` dense deltas, then resume the reverted tail
+    /// filtered by the union (bounded work — the union's influence is
+    /// entirely inside the ring window).
+    RingRevert { steps: usize },
+    /// Filtered tail replay from the nearest stored checkpoint.
+    Replay { from_checkpoint: u32 },
+}
+
+/// The shared execution a coalesced batch runs once: the union of the
+/// member closures (plus everything already forgotten), the earliest
+/// step that union influences, and how to rebuild from before it.
+pub struct SharedReplayPlan {
+    pub union: HashSet<u64>,
+    pub target: u32,
+    pub mode: SharedMode,
+}
+
+/// Plans the shared execution of a coalesced batch.
+pub struct BatchPlanner;
+
+impl BatchPlanner {
+    /// Union the closures of the replay-bound member plans with the
+    /// cumulative forgotten set and pick the cheapest exact rebuild for
+    /// the whole union — ring revert when its reach allows, else the
+    /// nearest checkpoint from the caller-supplied index (Thm. A.1 in
+    /// both cases).  Pure: no I/O, mutates nothing.
+    pub fn plan_shared(
+        sys: &UnlearnSystem<'_>,
+        members: &[&UnlearnPlan],
+        checkpoints: &[u32],
+    ) -> anyhow::Result<SharedReplayPlan> {
+        let mut union: HashSet<u64> = sys.forgotten.clone();
+        for p in members {
+            union.extend(p.closure.iter().copied());
+        }
+        let off = offending_steps(&sys.records, &sys.idmap, &union)?;
+        let target = *off.first().ok_or_else(|| {
+            anyhow::anyhow!("batch union has no offending steps")
+        })?;
+        // ring mode needs the logged trajectory intact, the resumed
+        // tail (without the resume, reverting alone would discard
+        // retain-only progress — not the sequential semantics), and
+        // bitwise-exact reverts: XOR patches covering the optimizer.
+        // Arithmetic patches revert only up to rounding, which would
+        // break the batch ≡ sequential bit-identity guarantee.
+        if !sys.diverged
+            && sys.resume_after_revert
+            && sys.ring.bit_exact_reverts()
+        {
+            if let Some(earliest) = sys.ring.earliest_step() {
+                let needed =
+                    sys.state.logical_step.saturating_sub(target) as usize;
+                if target >= earliest && needed <= sys.ring.available() {
+                    return Ok(SharedReplayPlan {
+                        union,
+                        target,
+                        mode: SharedMode::RingRevert { steps: needed },
+                    });
+                }
+            }
+        }
+        let from_checkpoint = checkpoints
+            .iter()
+            .filter(|&&s| s <= target)
+            .max()
+            .copied()
+            .ok_or(UnlearnError::NoCheckpoint { target })?;
+        Ok(SharedReplayPlan {
+            union,
+            target,
+            mode: SharedMode::Replay { from_checkpoint },
+        })
+    }
+}
+
+/// Run the planned shared rebuild.  On success the serving state is the
+/// retain-only state w.r.t. the union (bit-exact, Thm. A.1).
+fn run_shared(
+    sys: &mut UnlearnSystem<'_>,
+    sp: &SharedReplayPlan,
+) -> anyhow::Result<ReplayOutcome> {
+    match sp.mode {
+        SharedMode::RingRevert { steps } => {
+            sys.ring.revert(&mut sys.state, steps)?;
+            sys.diverged = true;
+            replay_filter(
+                sys.rt,
+                &sys.corpus,
+                &sys.state,
+                &sys.records,
+                &sys.idmap,
+                &sp.union,
+                Some(&sys.pins),
+                &ReplayOptions::default(),
+            )
+        }
+        SharedMode::Replay { from_checkpoint } => {
+            replay_tail(sys, from_checkpoint, &sp.union)
+        }
+    }
+}
+
+/// What one drained batch did.
+pub struct BatchOutcome {
+    /// Per-request results, in submission order.
+    pub outcomes: Vec<anyhow::Result<ControllerOutcome>>,
+    /// Shared rebuilds actually executed (0 or 1).
+    pub replays_run: usize,
+    /// Requests that shared the coalesced rebuild.
+    pub coalesced_requests: usize,
+    /// Checkpoint the shared rebuild started from (None in ring mode).
+    pub from_checkpoint: Option<u32>,
+    /// Microbatch updates the shared rebuild applied.
+    pub applied_steps: u32,
+}
+
+/// Execute a batch of requests with rebuild coalescing.  Individual
+/// (adapter/no-op/duplicate/error) requests run first in submission
+/// order; the rest share a single union-filtered rebuild.
+pub fn execute_batch(
+    sys: &mut UnlearnSystem<'_>,
+    reqs: &[ForgetRequest],
+) -> anyhow::Result<BatchOutcome> {
+    let mut slots: Vec<Option<anyhow::Result<ControllerOutcome>>> =
+        (0..reqs.len()).map(|_| None).collect();
+    // per coalesced request: input index, plan, escalations accrued by
+    // the adapter gate, cohorts it deleted (owed to the manifest entry)
+    struct Member {
+        idx: usize,
+        plan: UnlearnPlan,
+        escalations: Vec<UnlearnError>,
+        deleted_cohorts: Vec<u32>,
+    }
+    let mut coalesced: Vec<Member> = Vec::new();
+
+    // One checkpoint-store listing serves the whole batch (nothing
+    // creates checkpoints mid-batch; per-request view() re-listing
+    // would be N redundant directory scans under the system lock).
+    let (checkpoints, checkpoint_bytes) = sys.checkpoint_index()?;
+
+    // Phase A: plan each request against the current system; run the
+    // cheap dispositions (and the adapter gate — sequential parity)
+    // immediately.  Adapter deletions never interact with the union.
+    for (i, req) in reqs.iter().enumerate() {
+        let plan = match Planner::plan(
+            &sys.view_with(checkpoints.clone(), checkpoint_bytes),
+            req,
+        ) {
+            Ok(p) => p,
+            Err(UnlearnError::DuplicateRequest { id }) => {
+                slots[i] = Some(Ok(ControllerOutcome::duplicate(&id)));
+                continue;
+            }
+            Err(e) => {
+                slots[i] = Some(Err(e.into()));
+                continue;
+            }
+        };
+        if plan.offending.is_empty() {
+            slots[i] = Some(Executor::execute(sys, req, &plan));
+            continue;
+        }
+        let mut escalations = plan.notes.clone();
+        let mut deleted_cohorts = Vec::new();
+        if let Some(PlanStep::AdapterDelete { cohorts }) =
+            plan.steps.first().map(|s| &s.step)
+        {
+            let cohorts = cohorts.clone();
+            match Executor::adapter_step(
+                sys,
+                req,
+                &plan,
+                &cohorts,
+                &mut escalations,
+            ) {
+                Ok(att) => {
+                    if let Some(o) = att.outcome {
+                        // adapter deletion alone served it — no replay
+                        slots[i] = Some(Ok(o));
+                        continue;
+                    }
+                    deleted_cohorts = att.deleted;
+                }
+                Err(e) => {
+                    slots[i] = Some(Err(e));
+                    continue;
+                }
+            }
+        }
+        coalesced.push(Member {
+            idx: i,
+            plan,
+            escalations,
+            deleted_cohorts,
+        });
+    }
+
+    // Phase B: one shared rebuild for everything that touched the base.
+    let mut replays_run = 0;
+    let mut from_checkpoint = None;
+    let mut applied_steps = 0;
+    if !coalesced.is_empty() {
+        let members: Vec<&UnlearnPlan> =
+            coalesced.iter().map(|m| &m.plan).collect();
+        let shared =
+            match BatchPlanner::plan_shared(sys, &members, &checkpoints) {
+                Ok(sp) => run_shared(sys, &sp).map(|o| (sp, o)),
+                Err(e) => Err(e),
+            };
+        match shared {
+            Err(e) => {
+                // The UNION has no shared rebuild point (e.g. checkpoint
+                // pruning removed everything preceding one member's
+                // influence) or the shared rebuild itself failed.  Fall
+                // back to sequential handling so members that can be
+                // served individually still are — only the genuinely
+                // unservable ones fail, each with its own error.
+                let msg = format!("{e:#}");
+                for m in &coalesced {
+                    let req = &reqs[m.idx];
+                    // phase A's registry mutations must not vanish from
+                    // the trail: the sequential re-plan can no longer
+                    // see the already-deleted cohorts
+                    if !m.deleted_cohorts.is_empty() {
+                        if let Err(se) = record_adapter_side_effect(
+                            sys,
+                            req,
+                            &m.plan.closure,
+                            m.plan.closure_expanded,
+                            &m.deleted_cohorts,
+                            None,
+                        ) {
+                            slots[m.idx] = Some(Err(se));
+                            continue;
+                        }
+                    }
+                    slots[m.idx] = Some(sys.handle(req).map_err(|he| {
+                        anyhow::anyhow!(
+                            "coalesced rebuild failed ({msg}); sequential \
+                             fallback also failed: {he:#}"
+                        )
+                    }));
+                }
+            }
+            Ok((sp, outcome)) => {
+                sys.state = outcome.state;
+                sys.diverged = true;
+                for m in &coalesced {
+                    sys.forgotten.extend(m.plan.closure.iter().copied());
+                }
+                replays_run = 1;
+                applied_steps = outcome.invariants.applied_steps;
+                let action = match sp.mode {
+                    SharedMode::RingRevert { .. } => ActionKind::RecentRevert,
+                    SharedMode::Replay { from_checkpoint: k } => {
+                        from_checkpoint = Some(k);
+                        ActionKind::ExactReplay
+                    }
+                };
+
+                // Fan manifest entries + outcomes back out, one per
+                // request, each audited against its own closure; an
+                // audit/manifest failure affects only its own slot.
+                // Like the sequential last resort, the shared rebuild
+                // commits with its audit report attached pass or fail
+                // (the state is exact either way) — a failed audit is
+                // surfaced as a typed escalation on that member.
+                let n = coalesced.len();
+                for m in &coalesced {
+                    let req = &reqs[m.idx];
+                    if sys.manifest.was_executed(&req.id) {
+                        // same idempotency key twice inside one window
+                        slots[m.idx] =
+                            Some(Ok(ControllerOutcome::duplicate(&req.id)));
+                        continue;
+                    }
+                    let res = (|| -> anyhow::Result<ControllerOutcome> {
+                        let audit = run_audits(
+                            &sys.audit_ctx(&m.plan.closure),
+                            ModelView::Base(&sys.state.params),
+                        )?;
+                        let mut details = Json::obj();
+                        details
+                            .set("coalesced", n)
+                            .set("union_closure", sp.union.len());
+                        // detail keys match the sequential paths so
+                        // manifest consumers see one schema per action
+                        match sp.mode {
+                            SharedMode::RingRevert { steps } => {
+                                details.set("reverted_steps", steps).set(
+                                    "resumed_applied_steps",
+                                    outcome.invariants.applied_steps,
+                                );
+                            }
+                            SharedMode::Replay { from_checkpoint: k } => {
+                                details.set("from_checkpoint", k).set(
+                                    "applied_steps",
+                                    outcome.invariants.applied_steps,
+                                );
+                            }
+                        }
+                        note_deleted(&mut details, &m.deleted_cohorts);
+                        sys.append_manifest(
+                            req,
+                            &m.plan.closure,
+                            m.plan.closure_expanded,
+                            action,
+                            details.clone(),
+                            Some(&audit),
+                        )?;
+                        let mut escalations = m.escalations.clone();
+                        if !audit.pass() {
+                            escalations.push(UnlearnError::AuditFailed {
+                                path: action,
+                            });
+                        }
+                        Ok(ControllerOutcome {
+                            action,
+                            closure_size: m.plan.closure.len(),
+                            closure_expanded: m.plan.closure_expanded,
+                            audit: Some(audit),
+                            escalations,
+                            details,
+                            executed: true,
+                        })
+                    })();
+                    slots[m.idx] = Some(res);
+                }
+            }
+        }
+    }
+
+    let coalesced_requests = coalesced.len();
+    Ok(BatchOutcome {
+        outcomes: slots
+            .into_iter()
+            .map(|s| s.expect("every slot filled"))
+            .collect(),
+        replays_run,
+        coalesced_requests,
+        from_checkpoint,
+        applied_steps,
+    })
+}

@@ -1,0 +1,526 @@
+//! Audit-gated execution of an [`UnlearnPlan`] (the *action* half of
+//! Alg. A.7).  Walks the plan's fallback chain in order; each step runs,
+//! is audited, and either commits (signed manifest entry + outcome) or
+//! records a typed escalation and falls through to the next step.  The
+//! final replay step is the last resort: it always commits, with its
+//! audit report attached pass or fail (there is no stronger path left).
+
+use std::collections::HashSet;
+
+use crate::audit::{run_audits, AuditReport, ModelView};
+use crate::checkpoint::CheckpointStore;
+use crate::curvature::hot_path_unlearn;
+use crate::manifest::ActionKind;
+use crate::replay::{replay_filter, ReplayOptions, ReplayOutcome};
+use crate::util::json::Json;
+
+use super::plan::{PlanStep, UnlearnError, UnlearnPlan};
+use super::{ControllerOutcome, ForgetRequest, UnlearnSystem};
+
+/// Executes plans against the live system.  Stateless: all state lives
+/// in the [`UnlearnSystem`]; the executor is the only code path that
+/// mutates it.
+pub struct Executor;
+
+/// Result of one adapter-delete attempt (shared by the sequential
+/// chain and batch phase A so the adapter gate behaves identically).
+pub(super) struct AdapterAttempt {
+    /// Committed outcome when adapter deletion alone served the request
+    /// (its audit passed); None when refused or the audit failed.
+    pub outcome: Option<ControllerOutcome>,
+    /// Cohorts actually removed (recorded even on partial refusal).
+    pub deleted: Vec<u32>,
+    /// The audit report, when one ran (deletion was not refused).
+    pub audit: Option<AuditReport>,
+}
+
+/// Manifest-detail note for cohorts removed earlier in the chain — a
+/// registry mutation must appear in whichever entry finally commits.
+pub(super) fn note_deleted(details: &mut Json, deleted: &[u32]) {
+    if !deleted.is_empty() {
+        details.set(
+            "deleted_cohorts",
+            Json::Arr(deleted.iter().map(|&c| c.into()).collect()),
+        );
+    }
+}
+
+/// Record cohorts deleted by a chain that then failed to serve the
+/// request.  The registry mutation is permanent and must reach the
+/// signed manifest; it is recorded under a derived key so the request's
+/// own idempotency key stays unconsumed (the request was NOT served and
+/// must remain retryable).
+pub(super) fn record_adapter_side_effect(
+    sys: &mut UnlearnSystem<'_>,
+    req: &ForgetRequest,
+    closure: &[u64],
+    closure_expanded: usize,
+    deleted: &[u32],
+    audit: Option<&AuditReport>,
+) -> anyhow::Result<()> {
+    let mut details = Json::obj();
+    details.set(
+        "note",
+        "chain failed after adapter deletion — request not served; \
+         registry mutation recorded for the audit trail",
+    );
+    note_deleted(&mut details, deleted);
+    let side_req = ForgetRequest {
+        id: format!("{}#adapter-side-effect", req.id),
+        ..req.clone()
+    };
+    sys.append_manifest(
+        &side_req,
+        closure,
+        closure_expanded,
+        ActionKind::AdapterDelete,
+        details,
+        audit,
+    )
+}
+
+/// Filtered tail replay from a stored checkpoint — the one replay
+/// commit primitive shared by the sequential `ExactReplay` step and the
+/// batch coalescer (their bit-equality is the module's core invariant,
+/// so they must not drift).
+pub(super) fn replay_tail(
+    sys: &UnlearnSystem<'_>,
+    from_checkpoint: u32,
+    filter: &HashSet<u64>,
+) -> anyhow::Result<ReplayOutcome> {
+    let store = CheckpointStore::open(
+        &sys.cfg.run_dir.join("ckpt"),
+        sys.cfg.checkpoint_keep,
+    )?;
+    let ck = store.load_full(from_checkpoint)?;
+    replay_filter(
+        sys.rt,
+        &sys.corpus,
+        &ck,
+        &sys.records,
+        &sys.idmap,
+        filter,
+        Some(&sys.pins),
+        &ReplayOptions::default(),
+    )
+}
+
+impl Executor {
+    /// Run `plan` for `req`.  Returns the outcome of the first step
+    /// whose audit gate passes (or the final step regardless).
+    pub fn execute(
+        sys: &mut UnlearnSystem<'_>,
+        req: &ForgetRequest,
+        plan: &UnlearnPlan,
+    ) -> anyhow::Result<ControllerOutcome> {
+        let closure = &plan.closure;
+        let closure_set: HashSet<u64> = closure.iter().copied().collect();
+        // Exactness across a request *stream*: rebuilds must filter the
+        // cumulative union, or a later replay would resurrect data a
+        // previous action already erased.
+        let mut effective = closure_set.clone();
+        effective.extend(sys.forgotten.iter().copied());
+
+        let mut escalations: Vec<UnlearnError> = plan.notes.clone();
+        let mut deleted_cohorts: Vec<u32> = Vec::new();
+        let mut adapter_audit: Option<AuditReport> = None;
+        // The last step that mutated the serving state but failed its
+        // audit gate.  If the chain then exhausts (e.g. every checkpoint
+        // preceding the target was pruned, so no replay was plannable),
+        // this mutation must still reach the signed manifest — no state
+        // change may escape the audit trail.
+        let mut mutated_attempt: Option<(ActionKind, Json, AuditReport)> =
+            None;
+
+        for planned in &plan.steps {
+            match &planned.step {
+                // ---- path 1: adapter deletion ------------------------
+                PlanStep::AdapterDelete { cohorts } => {
+                    let att = Self::adapter_step(
+                        sys,
+                        req,
+                        plan,
+                        cohorts,
+                        &mut escalations,
+                    )?;
+                    // record even partial deletions — adapters already
+                    // removed must reach the manifest no matter how the
+                    // rest of the chain goes
+                    deleted_cohorts = att.deleted;
+                    adapter_audit = att.audit;
+                    if let Some(o) = att.outcome {
+                        return Ok(o);
+                    }
+                }
+
+                // ---- no base influence: audited no-op ----------------
+                PlanStep::NoOp => {
+                    let audit = run_audits(
+                        &sys.audit_ctx(closure),
+                        ModelView::Base(&sys.state.params),
+                    )?;
+                    let mut details = Json::obj();
+                    details.set("note", "no offending steps in WAL");
+                    sys.append_manifest(
+                        req,
+                        closure,
+                        plan.closure_expanded,
+                        ActionKind::Refused,
+                        details.clone(),
+                        Some(&audit),
+                    )?;
+                    return Ok(Self::outcome(
+                        ActionKind::Refused,
+                        plan,
+                        Some(audit),
+                        escalations,
+                        details,
+                    ));
+                }
+
+                // ---- path 2: recent exact revert ---------------------
+                PlanStep::RingRevert { steps, resume_tail } => {
+                    sys.ring.revert(&mut sys.state, *steps)?;
+                    sys.diverged = true;
+                    let mut details = Json::obj();
+                    details
+                        .set("reverted_steps", *steps)
+                        .set("reverted_to", sys.state.logical_step);
+                    if *resume_tail {
+                        // replay the reverted tail with filtering — the
+                        // composition restores retain-only progress exactly
+                        let outcome = replay_filter(
+                            sys.rt,
+                            &sys.corpus,
+                            &sys.state,
+                            &sys.records,
+                            &sys.idmap,
+                            &effective,
+                            Some(&sys.pins),
+                            &ReplayOptions::default(),
+                        )?;
+                        sys.state = outcome.state;
+                        details.set(
+                            "resumed_applied_steps",
+                            outcome.invariants.applied_steps,
+                        );
+                    }
+                    note_deleted(&mut details, &deleted_cohorts);
+                    let audit = run_audits(
+                        &sys.audit_ctx(closure),
+                        ModelView::Base(&sys.state.params),
+                    )?;
+                    if audit.pass() {
+                        sys.forgotten.extend(closure.iter().copied());
+                        sys.append_manifest(
+                            req,
+                            closure,
+                            plan.closure_expanded,
+                            ActionKind::RecentRevert,
+                            details.clone(),
+                            Some(&audit),
+                        )?;
+                        return Ok(Self::outcome(
+                            ActionKind::RecentRevert,
+                            plan,
+                            Some(audit),
+                            escalations,
+                            details,
+                        ));
+                    }
+                    if *resume_tail && sys.ring.bit_exact_reverts() {
+                        // bitwise-exact revert + resumed tail IS the
+                        // retain-only state (Thm. A.11(a) + A.1) —
+                        // committable if the chain exhausts.  A revert
+                        // without the resume, or an arithmetic revert
+                        // (exact only up to rounding), is never
+                        // terminal-committed.
+                        mutated_attempt = Some((
+                            ActionKind::RecentRevert,
+                            details,
+                            audit,
+                        ));
+                    }
+                    escalations.push(UnlearnError::AuditFailed {
+                        path: ActionKind::RecentRevert,
+                    });
+                }
+
+                // ---- path 3: urgent hot path -------------------------
+                PlanStep::HotPathAntiUpdate { params } => {
+                    let fisher = sys
+                        .fisher
+                        .clone()
+                        .ok_or(UnlearnError::NoFisherCache)?;
+                    let mut candidate = sys.state.clone();
+                    let hp_out = hot_path_unlearn(
+                        sys.rt,
+                        &sys.corpus,
+                        &mut candidate,
+                        &fisher,
+                        &closure_set,
+                        &sys.retain_ids,
+                        params,
+                        sys.audit_seed,
+                    )?;
+                    let audit = run_audits(
+                        &sys.audit_ctx(closure),
+                        ModelView::Base(&candidate.params),
+                    )?;
+                    let mut details = Json::obj();
+                    details
+                        .set("anti_steps", hp_out.anti_steps_applied)
+                        .set("backtracks", hp_out.backtracks)
+                        .set("forget_loss_before", hp_out.forget_loss_before)
+                        .set("forget_loss_after", hp_out.forget_loss_after);
+                    note_deleted(&mut details, &deleted_cohorts);
+                    // the candidate was built on top of any earlier
+                    // (audit-failed) revert+resume — full provenance of
+                    // the serving state must reach the manifest
+                    if let Some((_, prior, _)) = &mutated_attempt {
+                        details.set("after_failed_revert", prior.clone());
+                    }
+                    if audit.pass() {
+                        sys.state = candidate;
+                        sys.diverged = true;
+                        sys.forgotten.extend(closure.iter().copied());
+                        sys.append_manifest(
+                            req,
+                            closure,
+                            plan.closure_expanded,
+                            ActionKind::HotPathAntiUpdate,
+                            details.clone(),
+                            Some(&audit),
+                        )?;
+                        return Ok(Self::outcome(
+                            ActionKind::HotPathAntiUpdate,
+                            plan,
+                            Some(audit),
+                            escalations,
+                            details,
+                        ));
+                    }
+                    escalations.push(UnlearnError::AuditFailed {
+                        path: ActionKind::HotPathAntiUpdate,
+                    });
+                }
+
+                // ---- path 4: exact replay (last resort) --------------
+                PlanStep::ExactReplay { from_checkpoint, .. } => {
+                    let outcome =
+                        replay_tail(sys, *from_checkpoint, &effective)?;
+                    sys.state = outcome.state;
+                    sys.diverged = true;
+                    sys.forgotten.extend(closure.iter().copied());
+                    let audit = run_audits(
+                        &sys.audit_ctx(closure),
+                        ModelView::Base(&sys.state.params),
+                    )?;
+                    let mut details = Json::obj();
+                    details
+                        .set("from_checkpoint", *from_checkpoint)
+                        .set("applied_steps", outcome.invariants.applied_steps)
+                        .set(
+                            "empty_logical_steps",
+                            outcome.invariants.empty_logical_steps,
+                        )
+                        .set(
+                            "skipped_microbatches",
+                            outcome.invariants.skipped_microbatches,
+                        );
+                    note_deleted(&mut details, &deleted_cohorts);
+                    sys.append_manifest(
+                        req,
+                        closure,
+                        plan.closure_expanded,
+                        ActionKind::ExactReplay,
+                        details.clone(),
+                        Some(&audit),
+                    )?;
+                    return Ok(Self::outcome(
+                        ActionKind::ExactReplay,
+                        plan,
+                        Some(audit),
+                        escalations,
+                        details,
+                    ));
+                }
+            }
+        }
+
+        // Chain exhausted without a commit.  When the base never saw the
+        // data there is no stronger path left, so the terminal
+        // disposition MUST still reach the signed manifest: either the
+        // adapters were fully deleted and only the (toy-noise-prone)
+        // audit failed — the request IS served as an adapter delete —
+        // or deletion was refused (e.g. a merged cohort), which is
+        // recorded as Refused, listing any cohorts that DID get deleted
+        // before the refusal so no mutation escapes the audit trail.
+        if plan.offending.is_empty() {
+            let complete =
+                adapter_audit.is_some() && !deleted_cohorts.is_empty();
+            let action = if complete {
+                ActionKind::AdapterDelete
+            } else {
+                ActionKind::Refused
+            };
+            let audit = match adapter_audit {
+                Some(a) => a,
+                None => run_audits(
+                    &sys.audit_ctx(closure),
+                    ModelView::Base(&sys.state.params),
+                )?,
+            };
+            let mut details = Json::obj();
+            details.set("note", "no offending steps in WAL");
+            note_deleted(&mut details, &deleted_cohorts);
+            sys.append_manifest(
+                req,
+                closure,
+                plan.closure_expanded,
+                action,
+                details.clone(),
+                Some(&audit),
+            )?;
+            return Ok(Self::outcome(
+                action,
+                plan,
+                Some(audit),
+                escalations,
+                details,
+            ));
+        }
+        // A state-mutating path ran, failed its (toy-noise-prone) audit,
+        // and nothing stronger was plannable: commit the terminal
+        // disposition with the failed audit attached — the revert+resume
+        // state IS the retain-only state (Thm. A.11 + A.1), exactly like
+        // the replay last resort commits regardless of its audit.
+        if let Some((action, details, audit)) = mutated_attempt {
+            sys.forgotten.extend(closure.iter().copied());
+            sys.append_manifest(
+                req,
+                closure,
+                plan.closure_expanded,
+                action,
+                details.clone(),
+                Some(&audit),
+            )?;
+            return Ok(Self::outcome(
+                action,
+                plan,
+                Some(audit),
+                escalations,
+                details,
+            ));
+        }
+        // Failing loudly — but cohorts deleted earlier in the chain are
+        // a permanent registry mutation that must still reach the
+        // signed manifest.
+        if !deleted_cohorts.is_empty() {
+            record_adapter_side_effect(
+                sys,
+                req,
+                closure,
+                plan.closure_expanded,
+                &deleted_cohorts,
+                adapter_audit.as_ref(),
+            )?;
+        }
+        let chain: Vec<String> =
+            escalations.iter().map(|e| e.to_string()).collect();
+        Err(anyhow::Error::new(UnlearnError::PlanExhausted)
+            .context(chain.join("; ")))
+    }
+
+    /// Run one AdapterDelete step: delete the cohorts (the registry is
+    /// mutated even when a later gate fails — data also present in the
+    /// base is handled by the caller's replay), audit, and commit iff
+    /// the audit passes.  Typed escalations for refusals/audit failures
+    /// are pushed onto `escalations`.
+    pub(super) fn adapter_step(
+        sys: &mut UnlearnSystem<'_>,
+        req: &ForgetRequest,
+        plan: &UnlearnPlan,
+        cohorts: &[u32],
+        escalations: &mut Vec<UnlearnError>,
+    ) -> anyhow::Result<AdapterAttempt> {
+        let mut deleted = Vec::new();
+        let mut refused = false;
+        for &c in cohorts {
+            match sys.adapters.delete_cohort(c) {
+                Ok(_) => deleted.push(c),
+                Err(e) => {
+                    escalations.push(UnlearnError::AdapterDeleteFailed {
+                        cohort: c,
+                        reason: format!("{e:#}"),
+                    });
+                    refused = true;
+                }
+            }
+        }
+        if refused {
+            return Ok(AdapterAttempt {
+                outcome: None,
+                deleted,
+                audit: None,
+            });
+        }
+        let audit = run_audits(
+            &sys.audit_ctx(&plan.closure),
+            ModelView::Base(&sys.state.params),
+        )?;
+        let mut details = Json::obj();
+        details.set(
+            "deleted_cohorts",
+            Json::Arr(deleted.iter().map(|&c| c.into()).collect()),
+        );
+        if audit.pass() {
+            sys.append_manifest(
+                req,
+                &plan.closure,
+                plan.closure_expanded,
+                ActionKind::AdapterDelete,
+                details.clone(),
+                Some(&audit),
+            )?;
+            let outcome = Self::outcome(
+                ActionKind::AdapterDelete,
+                plan,
+                Some(audit.clone()),
+                escalations.clone(),
+                details,
+            );
+            return Ok(AdapterAttempt {
+                outcome: Some(outcome),
+                deleted,
+                audit: Some(audit),
+            });
+        }
+        escalations.push(UnlearnError::AuditFailed {
+            path: ActionKind::AdapterDelete,
+        });
+        Ok(AdapterAttempt {
+            outcome: None,
+            deleted,
+            audit: Some(audit),
+        })
+    }
+
+    fn outcome(
+        action: ActionKind,
+        plan: &UnlearnPlan,
+        audit: Option<AuditReport>,
+        escalations: Vec<UnlearnError>,
+        details: Json,
+    ) -> ControllerOutcome {
+        ControllerOutcome {
+            action,
+            closure_size: plan.closure.len(),
+            closure_expanded: plan.closure_expanded,
+            audit,
+            escalations,
+            details,
+            executed: true,
+        }
+    }
+}

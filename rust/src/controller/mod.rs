@@ -1,34 +1,51 @@
-//! UNLEARNCONTROLLER (paper Alg. A.7, §4.4): route each forget request
-//! to the cheapest path that passes audits, fail closed, and append
-//! every action to the signed manifest.
+//! UNLEARNCONTROLLER (paper Alg. A.7, §4.4), split into a pure
+//! **planner** and an audit-gated **executor** behind a typed API:
 //!
-//! Decision order:
+//! - [`plan::Planner::plan`]`(&SystemView, &ForgetRequest) ->
+//!   UnlearnPlan` — a side-effect-free decision: an ordered fallback
+//!   chain of typed [`plan::PlanStep`]s, each carrying a
+//!   [`plan::CostEstimate`] (the Table 3/8 budgets as queryable
+//!   objects).  Failures are the typed [`plan::UnlearnError`] taxonomy.
+//! - [`execute::Executor::execute`] — walks the chain, gating each step
+//!   on the audit harness and appending every action to the signed
+//!   manifest.
+//! - [`batch::execute_batch`] — coalesces N pending requests into one
+//!   union-filtered tail replay (exact by Thm. A.1), amortizing replay
+//!   cost across a request stream.
+//!
+//! Decision order (Alg. A.7):
 //!   1. **Adapter deletion** when cl(F) is confined to cohort adapters.
 //!   2. **Recent exact revert** when every offending step is inside the
-//!      dense-delta ring window (optionally followed by a filtered
-//!      replay of the reverted tail, which restores the retain-only
-//!      updates — revert + replay-tail compose into a bounded-work
-//!      exact path).
-//!   3. **Urgent hot path**: curvature anti-update + retain-tune,
-//!      audit-gated; escalate on failure.
+//!      dense-delta ring window (revert + filtered tail replay compose
+//!      into a bounded-work exact path).
+//!   3. **Urgent hot path**: curvature anti-update + retain-tune.
 //!   4. **Exact replay** (default): nearest checkpoint preceding all
 //!      forget influence + `ReplayFilter`.
+
+pub mod batch;
+pub mod execute;
+pub mod plan;
+
+pub use batch::{
+    execute_batch, BatchOutcome, BatchPlanner, SharedMode, SharedReplayPlan,
+};
+pub use execute::Executor;
+pub use plan::{
+    CostEstimate, PlanStep, PlannedStep, Planner, SystemView, UnlearnError,
+    UnlearnPlan,
+};
 
 use std::collections::HashSet;
 
 use crate::adapters::AdapterRegistry;
-use crate::audit::{run_audits, AuditContext, AuditReport, AuditThresholds, ModelView};
+use crate::audit::{AuditContext, AuditReport, AuditThresholds};
 use crate::checkpoint::{CheckpointStore, TrainState};
 use crate::config::{Pins, RunConfig};
-use crate::curvature::{hot_path_unlearn, FisherCache, HotPathParams};
+use crate::curvature::{FisherCache, HotPathParams};
 use crate::data::corpus::Corpus;
 use crate::deltas::DeltaRing;
 use crate::manifest::{ActionKind, ForgetManifest, ManifestEntry};
-use crate::neardup::{expand_closure, ClosureParams, HammingIndex};
-use crate::replay::{
-    offending_steps, replay_filter, replay_filter_from_nearest_to,
-    ReplayOptions,
-};
+use crate::neardup::{ClosureParams, HammingIndex};
 use crate::runtime::Runtime;
 use crate::util::json::Json;
 use crate::wal::{IdMap, WalRecord};
@@ -57,10 +74,29 @@ pub struct ControllerOutcome {
     pub closure_size: usize,
     pub closure_expanded: usize,
     pub audit: Option<AuditReport>,
-    pub escalations: Vec<String>,
+    /// Typed escalation trail: plan-time skips + runtime audit failures.
+    pub escalations: Vec<UnlearnError>,
     pub details: Json,
     /// False when the idempotency key had already been executed.
     pub executed: bool,
+}
+
+impl ControllerOutcome {
+    /// The duplicate-suppression disposition (shared by the sync and
+    /// batch paths so they cannot drift).
+    pub fn duplicate(id: &str) -> ControllerOutcome {
+        ControllerOutcome {
+            action: ActionKind::Refused,
+            closure_size: 0,
+            closure_expanded: 0,
+            audit: None,
+            escalations: vec![UnlearnError::DuplicateRequest {
+                id: id.into(),
+            }],
+            details: Json::obj(),
+            executed: false,
+        }
+    }
 }
 
 /// The live system a controller instance manages.
@@ -89,10 +125,20 @@ pub struct UnlearnSystem<'rt> {
     /// restore retain-only progress.
     pub resume_after_revert: bool,
     pub audit_seed: u64,
+    /// Cumulative closure of every executed forget action.  Rebuilds
+    /// (replay / revert-resume) filter `closure ∪ forgotten`: the
+    /// original run's checkpoints still contain previously forgotten
+    /// influence, so a replay filtering only the new request would
+    /// resurrect it.
+    pub forgotten: HashSet<u64>,
+    /// True once any state-mutating path has run — the serving state no
+    /// longer lies on the logged trajectory, so ring patches (recorded
+    /// against it) are no longer applicable.
+    pub diverged: bool,
 }
 
 impl<'rt> UnlearnSystem<'rt> {
-    fn audit_ctx<'a>(&'a self, closure: &'a [u64]) -> AuditContext<'a> {
+    pub(crate) fn audit_ctx<'a>(&'a self, closure: &'a [u64]) -> AuditContext<'a> {
         AuditContext {
             rt: self.rt,
             corpus: &self.corpus,
@@ -105,7 +151,7 @@ impl<'rt> UnlearnSystem<'rt> {
         }
     }
 
-    fn append_manifest(
+    pub(crate) fn append_manifest(
         &mut self,
         req: &ForgetRequest,
         closure: &[u64],
@@ -149,304 +195,98 @@ impl<'rt> UnlearnSystem<'rt> {
 
     /// Expand the request to cl(F) (Alg. A.7 line 1).
     pub fn closure_of(&self, req: &ForgetRequest) -> (Vec<u64>, usize) {
-        let mut ids = req.sample_ids.clone();
-        if let Some(u) = req.user {
-            ids.extend(self.corpus.user_samples(u));
-        }
-        ids.sort_unstable();
-        ids.dedup();
-        let cl = expand_closure(
+        plan::expand_request_closure(
             &self.corpus,
             &self.ndindex,
-            &ids,
             self.closure_params,
-        );
-        (cl.ids, cl.expanded.len())
+            req,
+        )
     }
 
-    /// Handle one forget request (the full Alg. A.7 flow).
-    pub fn handle(
-        &mut self,
-        req: &ForgetRequest,
-    ) -> anyhow::Result<ControllerOutcome> {
-        if self.manifest.was_executed(&req.id) {
-            return Ok(ControllerOutcome {
-                action: ActionKind::Refused,
-                closure_size: 0,
-                closure_expanded: 0,
-                audit: None,
-                escalations: vec!["duplicate idempotency key".into()],
-                details: Json::obj(),
-                executed: false,
-            });
-        }
-        let (closure, expanded) = self.closure_of(req);
-        anyhow::ensure!(!closure.is_empty(), "empty forget closure");
-        let closure_set: HashSet<u64> = closure.iter().copied().collect();
-        let mut escalations = Vec::new();
-        let mut deleted_cohorts: Vec<u32> = Vec::new();
-        let mut adapter_audit: Option<AuditReport> = None;
-
-        // ---- path 1: adapter deletion --------------------------------
-        if let Some(cohorts) = self.adapters.covering_cohorts(&closure) {
-            if !cohorts.is_empty() {
-                let mut deleted = Vec::new();
-                let mut refused = false;
-                for c in &cohorts {
-                    match self.adapters.delete_cohort(*c) {
-                        Ok(_) => deleted.push(*c),
-                        Err(e) => {
-                            escalations
-                                .push(format!("adapter delete failed: {e}"));
-                            refused = true;
-                        }
-                    }
-                }
-                if !refused {
-                    let audit = run_audits(
-                        &self.audit_ctx(&closure),
-                        ModelView::Base(&self.state.params),
-                    )?;
-                    deleted_cohorts = deleted.clone();
-                    adapter_audit = Some(audit.clone());
-                    let mut details = Json::obj();
-                    details.set(
-                        "deleted_cohorts",
-                        Json::Arr(
-                            deleted.iter().map(|&c| c.into()).collect(),
-                        ),
-                    );
-                    if audit.pass() {
-                        self.append_manifest(
-                            req,
-                            &closure,
-                            expanded,
-                            ActionKind::AdapterDelete,
-                            details.clone(),
-                            Some(&audit),
-                        )?;
-                        return Ok(ControllerOutcome {
-                            action: ActionKind::AdapterDelete,
-                            closure_size: closure.len(),
-                            closure_expanded: expanded,
-                            audit: Some(audit),
-                            escalations,
-                            details,
-                            executed: true,
-                        });
-                    }
-                    escalations.push("adapter-delete audit failed".into());
-                }
-            }
-        }
-
-        // ---- offending steps (Alg. A.7 line 6) -----------------------
-        let offending = offending_steps(&self.records, &self.idmap, &closure_set)?;
-
-        if offending.is_empty() {
-            // nothing in the base was influenced.  If we already deleted
-            // cohort adapters, the request IS served (the audit report,
-            // pass or fail, rides along in the manifest — there is no
-            // stronger path left: the base never saw the data).
-            let (action, audit) = if !deleted_cohorts.is_empty() {
-                (ActionKind::AdapterDelete, adapter_audit.clone())
-            } else {
-                let audit = run_audits(
-                    &self.audit_ctx(&closure),
-                    ModelView::Base(&self.state.params),
-                )?;
-                (ActionKind::Refused, Some(audit))
-            };
-            let mut details = Json::obj();
-            details.set("note", "no offending steps in WAL");
-            if !deleted_cohorts.is_empty() {
-                details.set(
-                    "deleted_cohorts",
-                    Json::Arr(
-                        deleted_cohorts.iter().map(|&c| c.into()).collect(),
-                    ),
-                );
-            }
-            self.append_manifest(
-                req,
-                &closure,
-                expanded,
-                action,
-                details.clone(),
-                audit.as_ref(),
-            )?;
-            return Ok(ControllerOutcome {
-                action,
-                closure_size: closure.len(),
-                closure_expanded: expanded,
-                audit,
-                escalations,
-                details,
-                executed: true,
-            });
-        }
-        let min_offending = offending[0];
-
-        // ---- path 2: recent exact revert ------------------------------
-        if let Some(earliest) = self.ring.earliest_step() {
-            if min_offending >= earliest {
-                let u = (self.state.logical_step - min_offending) as usize;
-                if u <= self.ring.available() {
-                    self.ring.revert(&mut self.state, u)?;
-                    let mut details = Json::obj();
-                    details
-                        .set("reverted_steps", u)
-                        .set("reverted_to", self.state.logical_step);
-                    if self.resume_after_revert {
-                        // replay the reverted tail with filtering — the
-                        // composition restores retain-only progress exactly
-                        let outcome = replay_filter(
-                            self.rt,
-                            &self.corpus,
-                            &self.state,
-                            &self.records,
-                            &self.idmap,
-                            &closure_set,
-                            Some(&self.pins),
-                            &ReplayOptions::default(),
-                        )?;
-                        self.state = outcome.state;
-                        details.set(
-                            "resumed_applied_steps",
-                            outcome.invariants.applied_steps,
-                        );
-                    }
-                    let audit = run_audits(
-                        &self.audit_ctx(&closure),
-                        ModelView::Base(&self.state.params),
-                    )?;
-                    if audit.pass() {
-                        self.append_manifest(
-                            req,
-                            &closure,
-                            expanded,
-                            ActionKind::RecentRevert,
-                            details.clone(),
-                            Some(&audit),
-                        )?;
-                        return Ok(ControllerOutcome {
-                            action: ActionKind::RecentRevert,
-                            closure_size: closure.len(),
-                            closure_expanded: expanded,
-                            audit: Some(audit),
-                            escalations,
-                            details,
-                            executed: true,
-                        });
-                    }
-                    escalations.push("revert audit failed".into());
-                }
-            }
-        }
-
-        // ---- path 3: urgent hot path ----------------------------------
-        if req.urgency == Urgency::High {
-            if let Some(fisher) = self.fisher.clone() {
-                let mut candidate = self.state.clone();
-                let hp_out = hot_path_unlearn(
-                    self.rt,
-                    &self.corpus,
-                    &mut candidate,
-                    &fisher,
-                    &closure_set,
-                    &self.retain_ids,
-                    &self.hot_path,
-                    self.audit_seed,
-                )?;
-                let audit = run_audits(
-                    &self.audit_ctx(&closure),
-                    ModelView::Base(&candidate.params),
-                )?;
-                let mut details = Json::obj();
-                details
-                    .set("anti_steps", hp_out.anti_steps_applied)
-                    .set("backtracks", hp_out.backtracks)
-                    .set("forget_loss_before", hp_out.forget_loss_before)
-                    .set("forget_loss_after", hp_out.forget_loss_after);
-                if audit.pass() {
-                    self.state = candidate;
-                    self.append_manifest(
-                        req,
-                        &closure,
-                        expanded,
-                        ActionKind::HotPathAntiUpdate,
-                        details.clone(),
-                        Some(&audit),
-                    )?;
-                    return Ok(ControllerOutcome {
-                        action: ActionKind::HotPathAntiUpdate,
-                        closure_size: closure.len(),
-                        closure_expanded: expanded,
-                        audit: Some(audit),
-                        escalations,
-                        details,
-                        executed: true,
-                    });
-                }
-                escalations
-                    .push("hot-path audit failed — escalating to replay".into());
-            } else {
-                escalations.push("no fisher cache — hot path unavailable".into());
-            }
-        }
-
-        // ---- path 4: exact replay (default) ---------------------------
-        // nearest checkpoint at or before the first forget influence;
-        // the offending set is already computed above, so hand the
-        // target step straight to the replay layer (no second WAL scan)
+    /// List the stored full checkpoints (ascending) and the on-disk
+    /// size of the latest one — the planner's cost/fallback inputs.
+    pub fn checkpoint_index(&self) -> anyhow::Result<(Vec<u32>, u64)> {
         let store = CheckpointStore::open(
             &self.cfg.run_dir.join("ckpt"),
             self.cfg.checkpoint_keep,
         )?;
-        let (k, outcome) = replay_filter_from_nearest_to(
-            self.rt,
-            &self.corpus,
-            &store,
-            &self.records,
-            &self.idmap,
-            &closure_set,
-            min_offending,
-            Some(&self.pins),
-            &ReplayOptions::default(),
-        )?;
-        self.state = outcome.state;
-        let audit = run_audits(
-            &self.audit_ctx(&closure),
-            ModelView::Base(&self.state.params),
-        )?;
-        let mut details = Json::obj();
-        details
-            .set("from_checkpoint", k)
-            .set("applied_steps", outcome.invariants.applied_steps)
-            .set(
-                "empty_logical_steps",
-                outcome.invariants.empty_logical_steps,
-            )
-            .set(
-                "skipped_microbatches",
-                outcome.invariants.skipped_microbatches,
-            );
-        self.append_manifest(
-            req,
-            &closure,
-            expanded,
-            ActionKind::ExactReplay,
-            details.clone(),
-            Some(&audit),
-        )?;
-        Ok(ControllerOutcome {
-            action: ActionKind::ExactReplay,
-            closure_size: closure.len(),
-            closure_expanded: expanded,
-            audit: Some(audit),
-            escalations,
-            details,
-            executed: true,
-        })
+        let checkpoints = store.list_full()?;
+        let checkpoint_bytes = checkpoints
+            .last()
+            .map(|&s| store.full_checkpoint_bytes(s).unwrap_or(0))
+            .unwrap_or(0);
+        Ok((checkpoints, checkpoint_bytes))
+    }
+
+    /// Build the read-only planning view.  The only I/O is listing the
+    /// checkpoint store (the planner itself is pure over the view).
+    pub fn view(&self) -> anyhow::Result<SystemView<'_>> {
+        let (checkpoints, checkpoint_bytes) = self.checkpoint_index()?;
+        Ok(self.view_with(checkpoints, checkpoint_bytes))
+    }
+
+    /// [`UnlearnSystem::view`] from an already-listed checkpoint index —
+    /// no I/O.  Batch planning lists the store once and plans N requests
+    /// against it (nothing creates checkpoints mid-batch).
+    pub fn view_with(
+        &self,
+        checkpoints: Vec<u32>,
+        checkpoint_bytes: u64,
+    ) -> SystemView<'_> {
+        let step_secs_mean = self
+            .rt
+            .metrics
+            .timer("exec.train_step")
+            .map(|(_, _, mean)| mean)
+            .unwrap_or(0.0);
+        SystemView {
+            corpus: &self.corpus,
+            ndindex: &self.ndindex,
+            closure_params: self.closure_params,
+            adapters: &self.adapters,
+            records: &self.records,
+            idmap: &self.idmap,
+            manifest: &self.manifest,
+            forgotten: &self.forgotten,
+            ring_earliest: self.ring.earliest_step(),
+            ring_available: self.ring.available(),
+            ring_budget: self.ring.budget(),
+            ring_patch_sizes: self.ring.patch_sizes(),
+            logical_step: self.state.logical_step,
+            diverged: self.diverged,
+            ring_bit_exact: self.ring.bit_exact_reverts(),
+            fisher_available: self.fisher.is_some(),
+            hot_path: self.hot_path.clone(),
+            resume_after_revert: self.resume_after_revert,
+            checkpoints,
+            checkpoint_bytes,
+            param_count: self.rt.manifest.param_count,
+            lora_param_count: self.rt.manifest.lora_param_count,
+            step_secs_mean,
+        }
+    }
+
+    /// Dry-run: plan the request without mutating anything.
+    pub fn plan(&self, req: &ForgetRequest) -> Result<UnlearnPlan, UnlearnError> {
+        let view = self
+            .view()
+            .map_err(|e| UnlearnError::Internal(format!("{e:#}")))?;
+        Planner::plan(&view, req)
+    }
+
+    /// Handle one forget request: plan, then execute the fallback chain
+    /// (the full Alg. A.7 flow).
+    pub fn handle(
+        &mut self,
+        req: &ForgetRequest,
+    ) -> anyhow::Result<ControllerOutcome> {
+        let plan = match self.plan(req) {
+            Ok(p) => p,
+            Err(UnlearnError::DuplicateRequest { id }) => {
+                return Ok(ControllerOutcome::duplicate(&id));
+            }
+            Err(e) => return Err(e.into()),
+        };
+        Executor::execute(self, req, &plan)
     }
 }

@@ -1,0 +1,575 @@
+//! Pure planning layer (paper Alg. A.7 as a *decision*, not an action).
+//!
+//! [`Planner::plan`] maps a read-only [`SystemView`] plus a
+//! [`ForgetRequest`](super::ForgetRequest) to an [`UnlearnPlan`]: an
+//! ordered fallback chain of typed [`PlanStep`]s, each carrying a
+//! [`CostEstimate`] derived from the ring budget, the WAL tail length
+//! and measured graph timings — the paper's Table 3/8 storage/latency
+//! budgets as queryable API objects.  Planning performs no side effects
+//! and mutates nothing; the audit-gated state transitions live in
+//! [`super::execute`].
+//!
+//! Failures are a typed taxonomy ([`UnlearnError`]) instead of strings:
+//! fatal ones abort planning (`Err`), non-fatal ones are recorded as
+//! `notes` — the escalation edges of Alg. A.7 surfaced at plan time.
+
+use std::collections::HashSet;
+use std::fmt;
+
+use crate::adapters::AdapterRegistry;
+use crate::curvature::HotPathParams;
+use crate::data::corpus::Corpus;
+use crate::deltas::RingBudget;
+use crate::manifest::{ActionKind, ForgetManifest};
+use crate::neardup::{expand_closure, ClosureParams, HammingIndex};
+use crate::replay::{offending_steps, tail_len};
+use crate::util::json::Json;
+use crate::wal::{IdMap, WalRecord};
+
+use super::{ForgetRequest, Urgency};
+
+/// Typed failure/escalation taxonomy (replaces the stringly
+/// `escalations: Vec<String>` of the monolithic controller).
+#[derive(Debug, Clone, PartialEq)]
+pub enum UnlearnError {
+    /// Idempotency key already executed (duplicate suppression).
+    DuplicateRequest { id: String },
+    /// The request expands to an empty forget closure.
+    EmptyClosure,
+    /// A cohort adapter refused deletion (e.g. it was merged).
+    AdapterDeleteFailed { cohort: u32, reason: String },
+    /// A path executed but its audit gate failed — escalate.
+    AuditFailed { path: ActionKind },
+    /// The offending tail is longer than the delta ring's reach.
+    RingWindowMiss { needed: usize, available: usize },
+    /// The serving state has diverged from the logged trajectory
+    /// (a prior revert/hot-path/replay) — ring patches no longer apply.
+    RingDiverged,
+    /// Urgent request but no Fisher cache — hot path unavailable.
+    NoFisherCache,
+    /// No stored checkpoint at or before the rebuild target.
+    NoCheckpoint { target: u32 },
+    /// The admin-plane lock was poisoned by a panicked holder.
+    LockPoisoned,
+    /// Every planned step was attempted and failed its gate.
+    PlanExhausted,
+    Internal(String),
+}
+
+impl UnlearnError {
+    /// Stable machine-readable discriminator (wire format + tests).
+    pub fn kind(&self) -> &'static str {
+        match self {
+            UnlearnError::DuplicateRequest { .. } => "duplicate_request",
+            UnlearnError::EmptyClosure => "empty_closure",
+            UnlearnError::AdapterDeleteFailed { .. } => "adapter_delete_failed",
+            UnlearnError::AuditFailed { .. } => "audit_failed",
+            UnlearnError::RingWindowMiss { .. } => "ring_window_miss",
+            UnlearnError::RingDiverged => "ring_diverged",
+            UnlearnError::NoFisherCache => "no_fisher_cache",
+            UnlearnError::NoCheckpoint { .. } => "no_checkpoint",
+            UnlearnError::LockPoisoned => "lock_poisoned",
+            UnlearnError::PlanExhausted => "plan_exhausted",
+            UnlearnError::Internal(_) => "internal",
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut j = Json::obj();
+        j.set("kind", self.kind()).set("detail", self.to_string());
+        j
+    }
+}
+
+impl fmt::Display for UnlearnError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            UnlearnError::DuplicateRequest { id } => {
+                write!(f, "duplicate idempotency key {id:?}")
+            }
+            UnlearnError::EmptyClosure => write!(f, "empty forget closure"),
+            UnlearnError::AdapterDeleteFailed { cohort, reason } => {
+                write!(f, "adapter delete failed for cohort {cohort}: {reason}")
+            }
+            UnlearnError::AuditFailed { path } => {
+                write!(f, "{} audit failed — escalating", path.as_str())
+            }
+            UnlearnError::RingWindowMiss { needed, available } => write!(
+                f,
+                "ring window miss: need {needed} steps, {available} available"
+            ),
+            UnlearnError::RingDiverged => write!(
+                f,
+                "serving state diverged from the logged trajectory — \
+                 ring patches inapplicable"
+            ),
+            UnlearnError::NoFisherCache => {
+                write!(f, "no fisher cache — hot path unavailable")
+            }
+            UnlearnError::NoCheckpoint { target } => write!(
+                f,
+                "no checkpoint at or before step {target} — cannot satisfy \
+                 the exactness precondition (fail-closed)"
+            ),
+            UnlearnError::LockPoisoned => {
+                write!(f, "system lock poisoned by a panicked holder")
+            }
+            UnlearnError::PlanExhausted => {
+                write!(f, "every planned path failed its audit gate")
+            }
+            UnlearnError::Internal(s) => write!(f, "internal: {s}"),
+        }
+    }
+}
+
+impl std::error::Error for UnlearnError {}
+
+/// Predicted cost of one plan step (Table 3/8 budgets, queryable).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct CostEstimate {
+    /// Microbatch executions predicted to be re-run.
+    pub replay_steps: u32,
+    /// Bytes predicted to be read/written (patches, checkpoints, params).
+    pub bytes_touched: u64,
+    /// Predicted wall-time, from measured per-call means (0.0 when no
+    /// measurement exists yet — estimates never fabricate numbers).
+    pub est_wall_secs: f64,
+}
+
+impl CostEstimate {
+    pub fn to_json(&self) -> Json {
+        let mut j = Json::obj();
+        j.set("replay_steps", self.replay_steps as u64)
+            .set("bytes_touched", self.bytes_touched)
+            .set("est_wall_secs", self.est_wall_secs);
+        j
+    }
+}
+
+/// One typed action of the fallback chain.
+#[derive(Debug, Clone)]
+pub enum PlanStep {
+    /// Delete the cohort adapters covering the closure (G2).
+    AdapterDelete { cohorts: Vec<u32> },
+    /// Revert `steps` dense deltas, optionally replaying the reverted
+    /// tail (filtered) to restore retain-only progress (G3).
+    RingRevert { steps: usize, resume_tail: bool },
+    /// Curvature anti-update + retain-tune, audit-gated (Alg. A.4).
+    HotPathAntiUpdate { params: HotPathParams },
+    /// Filtered tail replay from the nearest checkpoint (Thm. A.1).
+    ExactReplay { from_checkpoint: u32, target_step: u32 },
+    /// Nothing in the base was influenced — audited no-op.
+    NoOp,
+}
+
+impl PlanStep {
+    pub fn kind(&self) -> &'static str {
+        match self {
+            PlanStep::AdapterDelete { .. } => "adapter_delete",
+            PlanStep::RingRevert { .. } => "ring_revert",
+            PlanStep::HotPathAntiUpdate { .. } => "hot_path_anti_update",
+            PlanStep::ExactReplay { .. } => "exact_replay",
+            PlanStep::NoOp => "no_op",
+        }
+    }
+
+    /// The manifest action this step records when it completes.
+    pub fn action_kind(&self) -> ActionKind {
+        match self {
+            PlanStep::AdapterDelete { .. } => ActionKind::AdapterDelete,
+            PlanStep::RingRevert { .. } => ActionKind::RecentRevert,
+            PlanStep::HotPathAntiUpdate { .. } => ActionKind::HotPathAntiUpdate,
+            PlanStep::ExactReplay { .. } => ActionKind::ExactReplay,
+            PlanStep::NoOp => ActionKind::Refused,
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut j = Json::obj();
+        j.set("kind", self.kind());
+        match self {
+            PlanStep::AdapterDelete { cohorts } => {
+                j.set(
+                    "cohorts",
+                    Json::Arr(cohorts.iter().map(|&c| c.into()).collect()),
+                );
+            }
+            PlanStep::RingRevert { steps, resume_tail } => {
+                j.set("steps", *steps).set("resume_tail", *resume_tail);
+            }
+            PlanStep::HotPathAntiUpdate { params } => {
+                j.set("max_anti_steps", params.max_steps)
+                    .set("retain_steps", params.retain_steps);
+            }
+            PlanStep::ExactReplay { from_checkpoint, target_step } => {
+                j.set("from_checkpoint", *from_checkpoint)
+                    .set("target_step", *target_step);
+            }
+            PlanStep::NoOp => {}
+        }
+        j
+    }
+}
+
+/// A step plus its predicted cost.
+#[derive(Debug, Clone)]
+pub struct PlannedStep {
+    pub step: PlanStep,
+    pub cost: CostEstimate,
+}
+
+impl PlannedStep {
+    pub fn to_json(&self) -> Json {
+        let mut j = self.step.to_json();
+        j.set("cost", self.cost.to_json());
+        j
+    }
+}
+
+/// The planner's output: an ordered fallback chain (Alg. A.7 decision
+/// order — cheapest audit-passing path first) plus plan-time notes.
+#[derive(Debug, Clone)]
+pub struct UnlearnPlan {
+    pub request_id: String,
+    /// cl(F): the expanded forget closure, sorted.
+    pub closure: Vec<u64>,
+    /// IDs admitted by near-dup expansion beyond the request.
+    pub closure_expanded: usize,
+    /// Logical steps influenced by THIS request's closure.
+    pub offending: Vec<u32>,
+    /// Earliest step the serving state must be rebuilt from — the first
+    /// offending step of closure ∪ already-forgotten (original-run
+    /// checkpoints still contain previously forgotten influence, so the
+    /// rebuild must filter the cumulative union to stay exact).
+    pub effective_target: Option<u32>,
+    /// Fallback chain, tried in order by the executor.
+    pub steps: Vec<PlannedStep>,
+    /// Paths ruled out at plan time and why (escalation edges).
+    pub notes: Vec<UnlearnError>,
+}
+
+impl UnlearnPlan {
+    pub fn to_json(&self) -> Json {
+        let mut j = Json::obj();
+        j.set("request_id", self.request_id.as_str())
+            .set("closure_size", self.closure.len())
+            .set("closure_expanded", self.closure_expanded)
+            .set(
+                "offending_steps",
+                Json::Arr(self.offending.iter().map(|&s| s.into()).collect()),
+            )
+            .set(
+                "effective_target",
+                self.effective_target.map(Json::from).unwrap_or(Json::Null),
+            )
+            .set(
+                "steps",
+                Json::Arr(self.steps.iter().map(|s| s.to_json()).collect()),
+            )
+            .set(
+                "notes",
+                Json::Arr(self.notes.iter().map(|n| n.to_json()).collect()),
+            );
+        j
+    }
+
+    /// The step with the smallest predicted wall-time (the chain is
+    /// already ordered by Alg. A.7; this is the queryable-budget view).
+    pub fn cheapest(&self) -> Option<&PlannedStep> {
+        self.steps.iter().min_by(|a, b| {
+            a.cost
+                .est_wall_secs
+                .partial_cmp(&b.cost.est_wall_secs)
+                .unwrap_or(std::cmp::Ordering::Equal)
+        })
+    }
+}
+
+/// Read-only snapshot of everything the planner consults.  Borrowing
+/// (not owning) keeps construction free; tests fabricate views from
+/// synthetic WALs/rings without any training.
+pub struct SystemView<'a> {
+    pub corpus: &'a Corpus,
+    pub ndindex: &'a HammingIndex,
+    pub closure_params: ClosureParams,
+    pub adapters: &'a AdapterRegistry,
+    pub records: &'a [WalRecord],
+    pub idmap: &'a IdMap,
+    pub manifest: &'a ForgetManifest,
+    /// Cumulative closure of every previously executed forget action.
+    pub forgotten: &'a HashSet<u64>,
+    /// Earliest step still revertible from the delta ring.
+    pub ring_earliest: Option<u32>,
+    pub ring_available: usize,
+    pub ring_budget: RingBudget,
+    /// Compressed size of each stored ring patch, oldest → newest.
+    pub ring_patch_sizes: Vec<usize>,
+    /// Current serving logical step.
+    pub logical_step: u32,
+    /// True once any state-mutating path has run — ring patches (logged
+    /// against the original trajectory) then no longer apply.
+    pub diverged: bool,
+    /// Ring reverts restore bits exactly (XOR patches covering the
+    /// optimizer).  Arithmetic patches revert only up to rounding
+    /// (Thm. A.11(b)) — still plannable, but never terminal-committable
+    /// after a failed audit.
+    pub ring_bit_exact: bool,
+    pub fisher_available: bool,
+    pub hot_path: HotPathParams,
+    pub resume_after_revert: bool,
+    /// Full-checkpoint steps, ascending.
+    pub checkpoints: Vec<u32>,
+    /// On-disk bytes of one full checkpoint (0 when unknown).
+    pub checkpoint_bytes: u64,
+    pub param_count: usize,
+    pub lora_param_count: usize,
+    /// Measured mean seconds per `train_step` graph call (0 when none
+    /// has been observed yet).
+    pub step_secs_mean: f64,
+}
+
+/// Expand a request to cl(F) (Alg. A.7 line 1) — standalone so the
+/// planner and the legacy `closure_of` share one implementation.
+pub fn expand_request_closure(
+    corpus: &Corpus,
+    ndindex: &HammingIndex,
+    params: ClosureParams,
+    req: &ForgetRequest,
+) -> (Vec<u64>, usize) {
+    let mut ids = req.sample_ids.clone();
+    if let Some(u) = req.user {
+        ids.extend(corpus.user_samples(u));
+    }
+    ids.sort_unstable();
+    ids.dedup();
+    let cl = expand_closure(corpus, ndindex, &ids, params);
+    (cl.ids, cl.expanded.len())
+}
+
+/// The pure planner.  No side effects, no state mutation: every public
+/// behavior of Alg. A.7's decision layer is a function of the view.
+pub struct Planner;
+
+impl Planner {
+    pub fn plan(
+        view: &SystemView<'_>,
+        req: &ForgetRequest,
+    ) -> Result<UnlearnPlan, UnlearnError> {
+        if view.manifest.was_executed(&req.id) {
+            return Err(UnlearnError::DuplicateRequest { id: req.id.clone() });
+        }
+        let (closure, expanded) = expand_request_closure(
+            view.corpus,
+            view.ndindex,
+            view.closure_params,
+            req,
+        );
+        if closure.is_empty() {
+            return Err(UnlearnError::EmptyClosure);
+        }
+        let closure_set: HashSet<u64> = closure.iter().copied().collect();
+        let mut steps: Vec<PlannedStep> = Vec::new();
+        let mut notes: Vec<UnlearnError> = Vec::new();
+
+        // ---- path 1: adapter deletion (Alg. A.7 line 2) --------------
+        if let Some(cohorts) = view.adapters.covering_cohorts(&closure) {
+            if !cohorts.is_empty() {
+                let cost = Self::adapter_cost(view, &cohorts);
+                steps.push(PlannedStep {
+                    step: PlanStep::AdapterDelete { cohorts },
+                    cost,
+                });
+            }
+        }
+
+        // ---- offending steps (Alg. A.7 line 6) -----------------------
+        let offending =
+            offending_steps(view.records, view.idmap, &closure_set)
+                .map_err(|e| UnlearnError::Internal(format!("{e:#}")))?;
+
+        if offending.is_empty() {
+            // the base never saw the data: adapter deletion (if planned)
+            // fully serves the request; otherwise an audited no-op.
+            if steps.is_empty() {
+                steps.push(PlannedStep {
+                    step: PlanStep::NoOp,
+                    cost: Self::audit_only_cost(view),
+                });
+            }
+            return Ok(UnlearnPlan {
+                request_id: req.id.clone(),
+                closure,
+                closure_expanded: expanded,
+                offending,
+                effective_target: None,
+                steps,
+                notes,
+            });
+        }
+
+        // The rebuild target must cover the cumulative union: original
+        // checkpoints still contain previously forgotten influence.
+        let target = if view.forgotten.is_empty() {
+            offending[0]
+        } else {
+            let mut effective = closure_set.clone();
+            effective.extend(view.forgotten.iter().copied());
+            let union_off =
+                offending_steps(view.records, view.idmap, &effective)
+                    .map_err(|e| UnlearnError::Internal(format!("{e:#}")))?;
+            // non-empty: `offending` is a subset of the union's steps
+            union_off[0]
+        };
+
+        // ---- path 2: recent exact revert (G3) ------------------------
+        let needed = (view.logical_step.saturating_sub(target)) as usize;
+        let has_ckpt_fallback =
+            view.checkpoints.iter().any(|&s| s <= target);
+        // Plannable only when a failed audit has somewhere safe to land:
+        // either the revert+resume state is itself terminal-committable
+        // (bitwise-exact reverts with the resumed tail) or a checkpoint
+        // replay fallback exists.  Otherwise a failed gate would strand
+        // a mutated state with no manifest entry.
+        let ring_committable =
+            view.resume_after_revert && view.ring_bit_exact;
+        let in_window = matches!(
+            view.ring_earliest,
+            Some(earliest)
+                if target >= earliest && needed <= view.ring_available
+        );
+        if view.diverged {
+            notes.push(UnlearnError::RingDiverged);
+        } else if !in_window {
+            notes.push(UnlearnError::RingWindowMiss {
+                needed,
+                available: view.ring_available,
+            });
+        } else if ring_committable || has_ckpt_fallback {
+            let cost = Self::ring_cost(view, needed, target);
+            steps.push(PlannedStep {
+                step: PlanStep::RingRevert {
+                    steps: needed,
+                    resume_tail: view.resume_after_revert,
+                },
+                cost,
+            });
+        } else {
+            // the window covers it, but with neither a committable
+            // terminal state nor a replay to escalate to, the true
+            // blocker is the missing checkpoint
+            notes.push(UnlearnError::NoCheckpoint { target });
+        }
+
+        // ---- path 3: urgent hot path (Alg. A.4) ----------------------
+        if req.urgency == Urgency::High {
+            if view.fisher_available {
+                let cost = Self::hot_path_cost(view);
+                steps.push(PlannedStep {
+                    step: PlanStep::HotPathAntiUpdate {
+                        params: view.hot_path.clone(),
+                    },
+                    cost,
+                });
+            } else {
+                notes.push(UnlearnError::NoFisherCache);
+            }
+        }
+
+        // ---- path 4: exact replay (default, Thm. A.1) ----------------
+        match view.checkpoints.iter().filter(|&&s| s <= target).max() {
+            Some(&k) => {
+                let cost = Self::replay_cost(view, k);
+                steps.push(PlannedStep {
+                    step: PlanStep::ExactReplay {
+                        from_checkpoint: k,
+                        target_step: target,
+                    },
+                    cost,
+                });
+            }
+            None if steps.is_empty() => {
+                return Err(UnlearnError::NoCheckpoint { target });
+            }
+            None => {
+                let note = UnlearnError::NoCheckpoint { target };
+                if !notes.contains(&note) {
+                    notes.push(note);
+                }
+            }
+        }
+
+        Ok(UnlearnPlan {
+            request_id: req.id.clone(),
+            closure,
+            closure_expanded: expanded,
+            offending,
+            effective_target: Some(target),
+            steps,
+            notes,
+        })
+    }
+
+    /// Audit harness cost (runs after every path): a handful of eval
+    /// graph calls — approximated as a few train-step-equivalents.
+    fn audit_only_cost(view: &SystemView<'_>) -> CostEstimate {
+        CostEstimate {
+            replay_steps: 0,
+            bytes_touched: view.param_count as u64 * 4,
+            est_wall_secs: view.step_secs_mean * 4.0,
+        }
+    }
+
+    fn adapter_cost(view: &SystemView<'_>, cohorts: &[u32]) -> CostEstimate {
+        CostEstimate {
+            replay_steps: 0,
+            bytes_touched: cohorts.len() as u64
+                * view.lora_param_count as u64
+                * 4
+                + view.param_count as u64 * 4,
+            est_wall_secs: view.step_secs_mean * 4.0,
+        }
+    }
+
+    fn ring_cost(view: &SystemView<'_>, u: usize, target: u32) -> CostEstimate {
+        let b = &view.ring_budget;
+        let patch_bytes: u64 = view
+            .ring_patch_sizes
+            .iter()
+            .rev()
+            .take(u)
+            .map(|&s| s as u64)
+            .sum();
+        let resume_records = if view.resume_after_revert {
+            tail_len(view.records, target)
+        } else {
+            0
+        };
+        CostEstimate {
+            replay_steps: resume_records as u32,
+            bytes_touched: patch_bytes + view.param_count as u64 * 4 * 3,
+            est_wall_secs: b.revert_secs_mean * u as f64
+                + view.step_secs_mean * resume_records as f64,
+        }
+    }
+
+    fn hot_path_cost(view: &SystemView<'_>) -> CostEstimate {
+        let hp = &view.hot_path;
+        // each anti step is ~1 forget-grad pass; retain-tune adds T_R
+        let graph_calls = (hp.max_steps + hp.retain_steps) as u64;
+        CostEstimate {
+            replay_steps: graph_calls as u32,
+            bytes_touched: view.param_count as u64 * 4 * 2,
+            est_wall_secs: view.step_secs_mean * graph_calls as f64,
+        }
+    }
+
+    fn replay_cost(view: &SystemView<'_>, from_checkpoint: u32) -> CostEstimate {
+        let records = tail_len(view.records, from_checkpoint);
+        CostEstimate {
+            replay_steps: records as u32,
+            bytes_touched: view.checkpoint_bytes
+                + view.param_count as u64 * 4 * 3,
+            est_wall_secs: view.step_secs_mean * records as f64,
+        }
+    }
+}

@@ -229,6 +229,14 @@ impl DeltaRing {
         Ok(())
     }
 
+    /// Reverts restore bits exactly: XOR patches covering the optimizer
+    /// tensors (Thm. A.11(a)).  Arithmetic patches revert only up to
+    /// rounding — the one predicate the planner, executor and batch
+    /// coalescer all gate bit-identity guarantees on.
+    pub fn bit_exact_reverts(&self) -> bool {
+        self.mode == PatchMode::Xor && self.revert_optimizer
+    }
+
     /// How many trailing steps can currently be reverted.
     pub fn available(&self) -> usize {
         self.ring.len()
@@ -270,6 +278,13 @@ impl DeltaRing {
         self.reverts += u as u64;
         self.revert_secs_total += t0.elapsed().as_secs_f64();
         Ok(())
+    }
+
+    /// Compressed size of each stored patch, oldest → newest.  A revert
+    /// of depth `u` decompresses the last `u` entries (planner cost
+    /// input — summed per-candidate at plan time).
+    pub fn patch_sizes(&self) -> Vec<usize> {
+        self.ring.iter().map(|p| p.compressed_len).collect()
     }
 
     /// Table 8 accounting.

@@ -144,6 +144,8 @@ pub fn system_from_run<'rt>(
         hot_path: HotPathParams::default(),
         resume_after_revert: true,
         audit_seed: 0xAD17,
+        forgotten: HashSet::new(),
+        diverged: false,
     };
     Ok(TrainedSystem {
         system,

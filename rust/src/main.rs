@@ -7,6 +7,7 @@
 //!   pins        print the current environment pins (Table 2)
 //!   wal-scan    WAL integrity scan
 //!   serve       admin server for forget requests
+//!   plan        dry-run the planner: typed plan + cost estimates
 //!   forget      run the controller on a forget request
 //!   audit       run the audit harness against a checkpoint
 
@@ -55,6 +56,27 @@ fn run_config(args: &Args) -> anyhow::Result<RunConfig> {
         cfg.hmac_key = Some(k.as_bytes().to_vec());
     }
     Ok(cfg)
+}
+
+fn cli_request(
+    args: &Args,
+    default_id: &str,
+) -> anyhow::Result<unlearn::controller::ForgetRequest> {
+    Ok(unlearn::controller::ForgetRequest {
+        id: args.get_or("id", default_id).to_string(),
+        user: args.get("user").map(|u| u.parse()).transpose()?,
+        sample_ids: args
+            .get_or("sample-ids", "")
+            .split(',')
+            .filter(|s| !s.is_empty())
+            .map(|s| s.parse())
+            .collect::<Result<_, _>>()?,
+        urgency: if args.flag("urgent") {
+            unlearn::controller::Urgency::High
+        } else {
+            unlearn::controller::Urgency::Normal
+        },
+    })
 }
 
 fn corpus(args: &Args) -> anyhow::Result<Corpus> {
@@ -172,21 +194,7 @@ fn run(args: &Args) -> anyhow::Result<()> {
             let trained =
                 unlearn::harness::build_system(&rt, cfg, c, args.flag("fisher"))?;
             let mut system = trained.system;
-            let req = unlearn::controller::ForgetRequest {
-                id: args.get_or("id", "cli-forget").to_string(),
-                user: args.get("user").map(|u| u.parse()).transpose()?,
-                sample_ids: args
-                    .get_or("sample-ids", "")
-                    .split(',')
-                    .filter(|s| !s.is_empty())
-                    .map(|s| s.parse())
-                    .collect::<Result<_, _>>()?,
-                urgency: if args.flag("urgent") {
-                    unlearn::controller::Urgency::High
-                } else {
-                    unlearn::controller::Urgency::Normal
-                },
-            };
+            let req = cli_request(args, "cli-forget")?;
             let outcome = system.handle(&req)?;
             println!(
                 "action: {} (closure {}, expanded {})",
@@ -194,8 +202,30 @@ fn run(args: &Args) -> anyhow::Result<()> {
                 outcome.closure_size,
                 outcome.closure_expanded
             );
+            for e in &outcome.escalations {
+                println!("escalation [{}]: {e}", e.kind());
+            }
             if let Some(a) = outcome.audit {
                 println!("audits: {}", a.to_json().pretty());
+            }
+            Ok(())
+        }
+        Some("plan") => {
+            // dry-run: print the typed plan + cost estimates, mutate
+            // nothing (the planner is pure over the system view)
+            let rt = Runtime::load(&artifacts_dir(args))?;
+            let cfg = run_config(args)?;
+            let c = corpus(args)?;
+            let trained =
+                unlearn::harness::build_system(&rt, cfg, c, args.flag("fisher"))?;
+            let system = trained.system;
+            let req = cli_request(args, "cli-plan")?;
+            match system.plan(&req) {
+                Ok(plan) => println!("{}", plan.to_json().pretty()),
+                Err(e) => {
+                    println!("{}", e.to_json().pretty());
+                    anyhow::bail!("planning failed: {e}");
+                }
             }
             Ok(())
         }
@@ -225,7 +255,7 @@ fn run(args: &Args) -> anyhow::Result<()> {
         }
         other => {
             eprintln!(
-                "usage: unlearn <smoke|pins|train|ci-gate|wal-scan|replay|forget|audit|serve> \
+                "usage: unlearn <smoke|pins|train|ci-gate|wal-scan|replay|plan|forget|audit|serve> \
                  [--artifacts DIR] [--run-dir DIR] [--steps N] ...\n\
                  (got {other:?})"
             );

@@ -135,6 +135,17 @@ impl ForgetManifest {
         Ok(Some(entry_hash))
     }
 
+    /// Manifest file location (read-side verification without holding
+    /// the controller lock — the admin server's `manifest` op).
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+
+    /// Signing/verification key bytes (same-process read-side use).
+    pub fn key(&self) -> &[u8] {
+        &self.key
+    }
+
     pub fn was_executed(&self, idempotency_key: &str) -> bool {
         self.seen_keys.contains(idempotency_key)
     }
@@ -150,11 +161,21 @@ impl ForgetManifest {
     /// Verify the whole chain; returns (entry, valid_signature) pairs.
     /// Errors on any chain-hash break (tamper evidence).
     pub fn verify_chain(&self) -> anyhow::Result<Vec<(Json, bool)>> {
+        Self::verify_chain_at(&self.path, &self.key)
+    }
+
+    /// [`ForgetManifest::verify_chain`] without an open manifest — the
+    /// read-side verification path (e.g. the admin server's `manifest`
+    /// op), which must not pay `open`'s state-restoring second pass.
+    pub fn verify_chain_at(
+        path: &Path,
+        key: &[u8],
+    ) -> anyhow::Result<Vec<(Json, bool)>> {
         let mut out = Vec::new();
-        if !self.path.exists() {
+        if !path.exists() {
             return Ok(out);
         }
-        let text = std::fs::read_to_string(&self.path)?;
+        let text = std::fs::read_to_string(path)?;
         let mut prev = "genesis".to_string();
         for (lineno, line) in text.lines().enumerate() {
             if line.trim().is_empty() {
@@ -190,7 +211,7 @@ impl ForgetManifest {
                 .get("hmac")
                 .and_then(|v| v.as_str())
                 .map(|s| {
-                    s == hex(&hmac_sha256(&self.key, body.encode().as_bytes()))
+                    s == hex(&hmac_sha256(key, body.encode().as_bytes()))
                 })
                 .unwrap_or(false);
             prev = stored_hash.to_string();

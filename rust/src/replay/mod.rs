@@ -305,6 +305,12 @@ pub fn load_run(
     Ok((records, idmap, pins))
 }
 
+/// WAL records at or after `from` — the length of the tail a replay
+/// starting there must traverse (the planner's replay-cost input).
+pub fn tail_len(records: &[WalRecord], from: u32) -> u64 {
+    records.iter().filter(|r| r.opt_step >= from).count() as u64
+}
+
 /// Identify the logical steps whose microbatches intersect cl(F)
 /// (Alg. A.7 line 6: the offending-step set T).
 pub fn offending_steps(

@@ -1,32 +1,433 @@
 //! Admin server: forget requests over TCP, line-delimited JSON.
 //!
-//! (tokio is not in the offline vendor set — std::net + a thread per
-//! connection is fully adequate for an admin/control plane; the request
-//! path of the *model* is not served here.)
+//! (tokio is not in the offline vendor set — std::net + scoped threads
+//! are fully adequate for an admin/control plane; the request path of
+//! the *model* is not served here.  The threaded design requires the
+//! runtime backend to be `Sync`: the default reference executor is;
+//! the optional `pjrt` backend is `Rc`-based and single-threaded, so
+//! enabling that feature for `serve` needs a sequential fallback —
+//! see DESIGN.md "Admin server protocol".)
 //!
-//! Protocol (one JSON object per line):
+//! ## Architecture
+//!
+//! - **Thread per connection**: a stalled client never blocks other
+//!   admin traffic.  Controller actions stay serialized by the job
+//!   queue, not by connection handling.
+//! - **Async job queue**: `submit` enqueues and returns a job id
+//!   immediately; a single worker thread drains the queue with a
+//!   coalescing window and executes each drained batch through
+//!   [`crate::controller::execute_batch`] — N queued replay-bound
+//!   requests share **one** union-filtered tail replay.
+//! - **Read ops off the write lock**: `status` reads a published
+//!   snapshot, `audit` evaluates against a snapshotted parameter Arc,
+//!   and `manifest` verifies the chain from disk — none of them queue
+//!   behind a long replay holding the system lock.
+//! - **Poison containment**: a panicked lock holder yields a typed
+//!   `lock_poisoned` error response instead of bricking the admin
+//!   plane.  (Job-table/snapshot locks guard plain data and recover
+//!   via `into_inner`; the *system* lock fails closed — a half-mutated
+//!   system must not keep executing forget actions.)
+//!
+//! ## Protocol (one JSON object per line)
+//!
 //!   {"op":"status"}
-//!   {"op":"forget","id":"req-1","user":3,"urgency":"high"}
-//!   {"op":"forget","id":"req-2","sample_ids":[1,2,3]}
+//!   {"op":"submit","id":"req-1","user":3,"urgency":"high"}   → job id
+//!   {"op":"poll","job":"job-1"}
+//!   {"op":"jobs"}
+//!   {"op":"plan","id":"req-2","sample_ids":[1,2,3]}          → dry-run
+//!   {"op":"forget","id":"req-3","user":4}                    → sync
 //!   {"op":"audit"}
 //!   {"op":"manifest"}
 //!   {"op":"shutdown"}
-//! Response: one JSON object per line: {"ok":true,...} / {"ok":false,"error":...}
+//!
+//! Response: one JSON object per line: {"ok":true,...} /
+//! {"ok":false,"error":...,"error_kind":...}
 
 use std::io::{BufRead, BufReader, Write};
-use std::net::{TcpListener, TcpStream};
-use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::{Arc, Mutex};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex, RwLock};
+use std::time::Duration;
 
-use crate::audit::{run_audits, ModelView};
-use crate::controller::{ForgetRequest, UnlearnSystem, Urgency};
+use crate::audit::{run_audits, AuditThresholds, ModelView};
+use crate::controller::{
+    execute_batch, ControllerOutcome, ForgetRequest, UnlearnError,
+    UnlearnSystem, Urgency,
+};
+use crate::data::corpus::Corpus;
+use crate::manifest::ForgetManifest;
+use crate::runtime::Runtime;
 use crate::util::json::{parse, Json};
 
-/// Serve `system` on `addr` until a shutdown op arrives.  Connections
-/// are handled sequentially: the PJRT client is not `Sync` (Rc + raw
-/// pointers inside the `xla` crate), and serializing controller actions
-/// is semantically what we want anyway — unlearning actions must not
-/// interleave (the Mutex would serialize them regardless).
+/// Job lifecycle states.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum JobStatus {
+    Queued,
+    Running,
+    Done,
+    Failed,
+}
+
+impl JobStatus {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            JobStatus::Queued => "queued",
+            JobStatus::Running => "running",
+            JobStatus::Done => "done",
+            JobStatus::Failed => "failed",
+        }
+    }
+}
+
+/// One submitted forget job.
+struct Job {
+    job_id: String,
+    request: ForgetRequest,
+    status: JobStatus,
+    result: Option<Json>,
+}
+
+/// Completed (done/failed) jobs retained for `poll` after execution.
+/// Oldest completed entries beyond this are pruned so a long-running
+/// admin server's job table — and the `jobs` dump — stay bounded;
+/// pruned job ids poll as unknown.  Queued/running jobs are never
+/// pruned.
+const COMPLETED_RETENTION: usize = 1024;
+
+/// Job table behind the queue mutex.  `closed` lives under the same
+/// lock as the jobs so refusal-after-close is race-free: a submission
+/// either lands before `close()` (the worker's final drain sees it) or
+/// observes `closed` and is refused — an acked job can never slip in
+/// after the worker's last look.
+struct JobTable {
+    jobs: Vec<Job>,
+    closed: bool,
+}
+
+/// FIFO job table + worker wakeup.  Guards plain data only, so poisoned
+/// guards are safely recovered via `into_inner`.
+pub struct JobQueue {
+    table: Mutex<JobTable>,
+    cv: Condvar,
+    seq: AtomicU64,
+}
+
+fn recover<T>(r: Result<T, std::sync::PoisonError<T>>) -> T {
+    r.unwrap_or_else(|p| p.into_inner())
+}
+
+impl JobQueue {
+    fn new() -> JobQueue {
+        JobQueue {
+            table: Mutex::new(JobTable {
+                jobs: Vec::new(),
+                closed: false,
+            }),
+            cv: Condvar::new(),
+            seq: AtomicU64::new(1),
+        }
+    }
+
+    /// Enqueue a request; returns its job id immediately, or None when
+    /// the queue has been closed for shutdown.
+    pub fn submit(&self, request: ForgetRequest) -> Option<String> {
+        let mut g = recover(self.table.lock());
+        if g.closed {
+            return None;
+        }
+        let job_id = format!("job-{}", self.seq.fetch_add(1, Ordering::SeqCst));
+        g.jobs.push(Job {
+            job_id: job_id.clone(),
+            request,
+            status: JobStatus::Queued,
+            result: None,
+        });
+        drop(g);
+        self.cv.notify_all();
+        Some(job_id)
+    }
+
+    /// Refuse further submissions and wake the worker for its final
+    /// drain.
+    pub fn close(&self) {
+        recover(self.table.lock()).closed = true;
+        self.cv.notify_all();
+    }
+
+    pub fn queued_len(&self) -> usize {
+        recover(self.table.lock())
+            .jobs
+            .iter()
+            .filter(|j| j.status == JobStatus::Queued)
+            .count()
+    }
+
+    /// Job status/result as a wire object.
+    pub fn poll(&self, job_id: &str) -> Option<Json> {
+        let g = recover(self.table.lock());
+        g.jobs.iter().find(|j| j.job_id == job_id).map(job_json)
+    }
+
+    /// All jobs, submission order.
+    pub fn jobs_json(&self) -> Json {
+        let g = recover(self.table.lock());
+        Json::Arr(g.jobs.iter().map(job_json).collect())
+    }
+
+    /// Atomically claim every queued job (marks them Running).
+    fn take_queued(&self) -> Vec<(String, ForgetRequest)> {
+        let mut g = recover(self.table.lock());
+        let mut out = Vec::new();
+        for j in g.jobs.iter_mut() {
+            if j.status == JobStatus::Queued {
+                j.status = JobStatus::Running;
+                out.push((j.job_id.clone(), j.request.clone()));
+            }
+        }
+        out
+    }
+
+    fn publish(&self, job_id: &str, status: JobStatus, result: Json) {
+        let mut g = recover(self.table.lock());
+        if let Some(j) = g.jobs.iter_mut().find(|j| j.job_id == job_id) {
+            j.status = status;
+            j.result = Some(result);
+        }
+        // bound the table: prune the oldest completed entries
+        let completed = g
+            .jobs
+            .iter()
+            .filter(|j| {
+                matches!(j.status, JobStatus::Done | JobStatus::Failed)
+            })
+            .count();
+        if completed > COMPLETED_RETENTION {
+            let mut excess = completed - COMPLETED_RETENTION;
+            g.jobs.retain(|j| {
+                if excess > 0
+                    && matches!(
+                        j.status,
+                        JobStatus::Done | JobStatus::Failed
+                    )
+                {
+                    excess -= 1;
+                    false
+                } else {
+                    true
+                }
+            });
+        }
+    }
+
+    /// Fail every job stuck in Running (the worker died mid-drain).
+    fn fail_running(&self, reason: &str) {
+        let mut g = recover(self.table.lock());
+        for j in g.jobs.iter_mut() {
+            if j.status == JobStatus::Running {
+                let mut r = Json::obj();
+                r.set("ok", false).set("error", reason);
+                j.status = JobStatus::Failed;
+                j.result = Some(r);
+            }
+        }
+    }
+
+    /// Block until a job is queued; returns false once the queue is
+    /// closed AND empty (everything acknowledged has been claimed).
+    fn wait_for_work(&self) -> bool {
+        let mut g = recover(self.table.lock());
+        loop {
+            if g.jobs.iter().any(|j| j.status == JobStatus::Queued) {
+                return true;
+            }
+            if g.closed {
+                return false;
+            }
+            let (g2, _) = recover(
+                self.cv.wait_timeout(g, Duration::from_millis(50)),
+            );
+            g = g2;
+        }
+    }
+}
+
+fn job_json(j: &Job) -> Json {
+    let mut o = Json::obj();
+    o.set("job", j.job_id.as_str())
+        .set("request_id", j.request.id.as_str())
+        .set("status", j.status.as_str())
+        .set("result", j.result.clone().unwrap_or(Json::Null));
+    o
+}
+
+/// Published system snapshot: everything `status` reports plus the
+/// parameter vector `audit` evaluates — refreshed by the worker after
+/// every state change, read without touching the system lock.
+#[derive(Clone)]
+pub struct StatusSnapshot {
+    pub model_hash: String,
+    pub optimizer_hash: String,
+    pub logical_step: u32,
+    pub applied_updates: u32,
+    pub ring_available: usize,
+    pub adapters: usize,
+    pub manifest_entries: u64,
+    pub params: Arc<Vec<f32>>,
+}
+
+fn snapshot_of(sys: &UnlearnSystem<'_>) -> StatusSnapshot {
+    StatusSnapshot {
+        model_hash: sys.state.model_hash(),
+        optimizer_hash: sys.state.optimizer_hash(),
+        logical_step: sys.state.logical_step,
+        applied_updates: sys.state.applied_updates,
+        ring_available: sys.ring.available(),
+        adapters: sys.adapters.len(),
+        manifest_entries: sys.manifest.len(),
+        params: Arc::new(sys.state.params.clone()),
+    }
+}
+
+/// Owned copies of the audit fixtures, captured once at server start so
+/// the `audit`/`manifest` ops never need the system lock.
+struct AuditView {
+    corpus: Corpus,
+    retain_ids: Vec<u64>,
+    eval_ids: Vec<u64>,
+    thresholds: AuditThresholds,
+    baseline_ppl: Option<f64>,
+    seed: u64,
+    manifest_path: std::path::PathBuf,
+    manifest_key: Vec<u8>,
+}
+
+/// Shared server state: the protocol core (`dispatch`) and the worker
+/// both run against this.  Constructed once per `serve` (or per test).
+pub struct ServerCtx<'a, 'rt> {
+    pub system: &'a Mutex<UnlearnSystem<'rt>>,
+    rt: &'rt Runtime,
+    pub jobs: JobQueue,
+    snapshot: RwLock<StatusSnapshot>,
+    audit_view: AuditView,
+    pub shutdown: AtomicBool,
+    /// How long the worker lingers after the first queued job before
+    /// draining, letting a burst coalesce into one batch.
+    pub coalesce_window: Duration,
+}
+
+impl<'a, 'rt> ServerCtx<'a, 'rt> {
+    pub fn new(
+        system: &'a Mutex<UnlearnSystem<'rt>>,
+    ) -> anyhow::Result<ServerCtx<'a, 'rt>> {
+        let sys = system
+            .lock()
+            .map_err(|_| anyhow::Error::new(UnlearnError::LockPoisoned))?;
+        let snapshot = RwLock::new(snapshot_of(&sys));
+        let audit_view = AuditView {
+            corpus: sys.corpus.clone(),
+            retain_ids: sys.retain_ids.clone(),
+            eval_ids: sys.eval_ids.clone(),
+            thresholds: sys.thresholds.clone(),
+            baseline_ppl: sys.baseline_ppl,
+            seed: sys.audit_seed,
+            manifest_path: sys.manifest.path().to_path_buf(),
+            manifest_key: sys.manifest.key().to_vec(),
+        };
+        let rt = sys.rt;
+        drop(sys);
+        Ok(ServerCtx {
+            system,
+            rt,
+            jobs: JobQueue::new(),
+            snapshot,
+            audit_view,
+            shutdown: AtomicBool::new(false),
+            coalesce_window: Duration::from_millis(15),
+        })
+    }
+
+    fn refresh_snapshot(&self, sys: &UnlearnSystem<'_>) {
+        *recover(self.snapshot.write()) = snapshot_of(sys);
+    }
+}
+
+/// Drain every currently queued job as ONE coalesced batch.  Returns
+/// the number of jobs processed.  Exposed so tests (and the worker)
+/// share the exact same drain path.
+pub fn drain_queue_once(ctx: &ServerCtx<'_, '_>) -> usize {
+    let batch = ctx.jobs.take_queued();
+    if batch.is_empty() {
+        return 0;
+    }
+    let reqs: Vec<ForgetRequest> =
+        batch.iter().map(|(_, r)| r.clone()).collect();
+    match ctx.system.lock() {
+        Err(_) => {
+            let err = UnlearnError::LockPoisoned;
+            for (job_id, _) in &batch {
+                let mut r = Json::obj();
+                r.set("ok", false)
+                    .set("error", err.to_string())
+                    .set("error_kind", err.kind());
+                ctx.jobs.publish(job_id, JobStatus::Failed, r);
+            }
+        }
+        Ok(mut sys) => match execute_batch(&mut sys, &reqs) {
+            Ok(out) => {
+                for ((job_id, _), res) in
+                    batch.iter().zip(out.outcomes.into_iter())
+                {
+                    match res {
+                        Ok(o) => ctx.jobs.publish(
+                            job_id,
+                            JobStatus::Done,
+                            outcome_json(&o),
+                        ),
+                        Err(e) => {
+                            let mut r = Json::obj();
+                            r.set("ok", false)
+                                .set("error", format!("{e:#}"));
+                            ctx.jobs.publish(job_id, JobStatus::Failed, r);
+                        }
+                    }
+                }
+                ctx.refresh_snapshot(&sys);
+            }
+            Err(e) => {
+                for (job_id, _) in &batch {
+                    let mut r = Json::obj();
+                    r.set("ok", false).set("error", format!("{e:#}"));
+                    ctx.jobs.publish(job_id, JobStatus::Failed, r);
+                }
+                ctx.refresh_snapshot(&sys);
+            }
+        },
+    }
+    batch.len()
+}
+
+/// The queue worker: waits for submissions, lingers one coalescing
+/// window so bursts batch up, then drains.  A submission acknowledged
+/// as "queued" is a promise: `wait_for_work` only returns false once
+/// the queue is closed AND empty (closing and enqueueing share one
+/// lock, so nothing acked can slip past the final drain), and a panic
+/// inside a drain fails the claimed jobs loudly instead of stranding
+/// them as running-forever while the queue keeps acking.
+pub fn run_worker(ctx: &ServerCtx<'_, '_>) {
+    while ctx.jobs.wait_for_work() {
+        std::thread::sleep(ctx.coalesce_window);
+        let drained = std::panic::catch_unwind(
+            std::panic::AssertUnwindSafe(|| drain_queue_once(ctx)),
+        );
+        if drained.is_err() {
+            ctx.jobs
+                .fail_running("worker panicked during drain (state lock \
+                               poisoned — admin write plane fails closed)");
+        }
+    }
+}
+
+/// Serve `system` on `addr` until a shutdown op arrives.
 pub fn serve(
     system: Arc<Mutex<UnlearnSystem<'_>>>,
     addr: &str,
@@ -34,67 +435,156 @@ pub fn serve(
     let listener = TcpListener::bind(addr)?;
     let local = listener.local_addr()?;
     eprintln!("unlearn admin server listening on {local}");
-    let shutdown = Arc::new(AtomicBool::new(false));
-    for stream in listener.incoming() {
-        if shutdown.load(Ordering::SeqCst) {
-            break;
+    let ctx = ServerCtx::new(&system)?;
+    std::thread::scope(|s| {
+        s.spawn(|| run_worker(&ctx));
+        for stream in listener.incoming() {
+            if ctx.shutdown.load(Ordering::SeqCst) {
+                break;
+            }
+            match stream {
+                Ok(stream) => {
+                    let ctx = &ctx;
+                    s.spawn(move || {
+                        if let Err(e) = handle_conn(stream, ctx, local) {
+                            eprintln!("connection error: {e:#}");
+                        }
+                    });
+                }
+                Err(e) => eprintln!("accept error: {e:#}"),
+            }
         }
-        let stream = stream?;
-        if let Err(e) =
-            handle_conn(stream, Arc::clone(&system), Arc::clone(&shutdown))
-        {
-            eprintln!("connection error: {e:#}");
-        }
-        if shutdown.load(Ordering::SeqCst) {
-            break;
-        }
-    }
+    });
     Ok(())
 }
 
 fn handle_conn(
     stream: TcpStream,
-    system: Arc<Mutex<UnlearnSystem<'_>>>,
-    shutdown: Arc<AtomicBool>,
+    ctx: &ServerCtx<'_, '_>,
+    local: SocketAddr,
 ) -> anyhow::Result<()> {
-    let peer = stream.peer_addr()?;
+    // Bounded reads: `serve`'s thread::scope joins every connection
+    // thread, so an idle client blocked in a read forever would keep
+    // the server alive after shutdown.  The timeout lets each handler
+    // observe the flag.  Reads go through a byte buffer (`read_until`),
+    // not `read_line`: on a timeout `read_line` discards its partial
+    // input when the buffered prefix ends mid UTF-8 character, while
+    // `read_until` keeps every byte across timeouts.
+    stream.set_read_timeout(Some(Duration::from_millis(200)))?;
+    // and bounded writes: a client that stops reading must not pin this
+    // thread in writeln! past shutdown (scope joins every handler)
+    stream.set_write_timeout(Some(Duration::from_secs(5)))?;
     let mut reader = BufReader::new(stream.try_clone()?);
     let mut stream = stream;
-    let mut line = String::new();
+    let mut buf: Vec<u8> = Vec::new();
     loop {
-        line.clear();
-        if reader.read_line(&mut line)? == 0 {
-            return Ok(()); // connection closed
-        }
-        let response = dispatch(line.trim(), &system, &shutdown);
-        writeln!(stream, "{}", response.encode())?;
-        if shutdown.load(Ordering::SeqCst) {
-            let _ = peer; // connection ends; serve() observes the flag
+        if ctx.shutdown.load(Ordering::SeqCst) {
             return Ok(());
+        }
+        // cap the line buffer: a client streaming bytes with no newline
+        // must not grow this thread's memory without bound
+        const MAX_LINE_BYTES: usize = 1 << 20;
+        if buf.len() > MAX_LINE_BYTES {
+            let mut j = Json::obj();
+            j.set("ok", false)
+                .set("error", "request line exceeds 1 MiB — closing");
+            let _ = writeln!(stream, "{}", j.encode());
+            return Ok(());
+        }
+        match reader.read_until(b'\n', &mut buf) {
+            Ok(0) => return Ok(()), // connection closed
+            Ok(_) => {
+                let line = String::from_utf8_lossy(&buf);
+                let response = dispatch(line.trim(), ctx);
+                buf.clear();
+                writeln!(stream, "{}", response.encode())?;
+                if ctx.shutdown.load(Ordering::SeqCst) {
+                    // poke the acceptor so `serve` observes the flag
+                    // even with no further clients connecting
+                    let _ = TcpStream::connect(local);
+                    return Ok(());
+                }
+            }
+            Err(e)
+                if e.kind() == std::io::ErrorKind::WouldBlock
+                    || e.kind() == std::io::ErrorKind::TimedOut =>
+            {
+                continue; // recheck shutdown; partial bytes stay in buf
+            }
+            Err(e) => return Err(e.into()),
         }
     }
 }
 
 /// Execute one op (exposed for unit tests without sockets).
-pub fn dispatch(
-    line: &str,
-    system: &Mutex<UnlearnSystem<'_>>,
-    shutdown: &AtomicBool,
-) -> Json {
-    match dispatch_inner(line, system, shutdown) {
+pub fn dispatch(line: &str, ctx: &ServerCtx<'_, '_>) -> Json {
+    match dispatch_inner(line, ctx) {
         Ok(j) => j,
         Err(e) => {
             let mut j = Json::obj();
             j.set("ok", false).set("error", format!("{e:#}"));
+            if let Some(ue) = e.downcast_ref::<UnlearnError>() {
+                j.set("error_kind", ue.kind());
+            }
             j
         }
     }
 }
 
+/// Parse the request fields shared by `submit`, `plan` and `forget`.
+fn parse_request(req: &Json) -> anyhow::Result<ForgetRequest> {
+    let id = req
+        .get("id")
+        .and_then(|v| v.as_str())
+        .ok_or_else(|| anyhow::anyhow!("request needs id"))?
+        .to_string();
+    let user = req.get("user").and_then(|v| v.as_u64()).map(|u| u as u32);
+    let sample_ids: Vec<u64> = req
+        .get("sample_ids")
+        .and_then(|v| v.as_arr())
+        .map(|a| a.iter().filter_map(|x| x.as_u64()).collect())
+        .unwrap_or_default();
+    let urgency = match req.get("urgency").and_then(|v| v.as_str()) {
+        Some("high") => Urgency::High,
+        _ => Urgency::Normal,
+    };
+    Ok(ForgetRequest {
+        id,
+        user,
+        sample_ids,
+        urgency,
+    })
+}
+
+/// Wire encoding of a controller outcome (sync `forget` + job results).
+fn outcome_json(outcome: &ControllerOutcome) -> Json {
+    let mut out = Json::obj();
+    out.set("ok", true)
+        .set("action", outcome.action.as_str())
+        .set("executed", outcome.executed)
+        .set("closure_size", outcome.closure_size)
+        .set("closure_expanded", outcome.closure_expanded)
+        .set(
+            "audit_pass",
+            outcome
+                .audit
+                .as_ref()
+                .map(|a| Json::Bool(a.pass()))
+                .unwrap_or(Json::Null),
+        )
+        .set(
+            "escalations",
+            Json::Arr(
+                outcome.escalations.iter().map(|e| e.to_json()).collect(),
+            ),
+        )
+        .set("details", outcome.details.clone());
+    out
+}
+
 fn dispatch_inner(
     line: &str,
-    system: &Mutex<UnlearnSystem<'_>>,
-    shutdown: &AtomicBool,
+    ctx: &ServerCtx<'_, '_>,
 ) -> anyhow::Result<Json> {
     let req = parse(line).map_err(|e| anyhow::anyhow!("bad json: {e}"))?;
     let op = req
@@ -103,85 +593,58 @@ fn dispatch_inner(
         .ok_or_else(|| anyhow::anyhow!("missing op"))?;
     let mut out = Json::obj();
     match op {
+        // ---- read plane: never takes the system lock -----------------
         "status" => {
-            let sys = system.lock().unwrap();
+            let snap = recover(ctx.snapshot.read()).clone();
             out.set("ok", true)
-                .set("model_hash", sys.state.model_hash())
-                .set("optimizer_hash", sys.state.optimizer_hash())
-                .set("logical_step", sys.state.logical_step)
-                .set("applied_updates", sys.state.applied_updates)
-                .set("ring_available", sys.ring.available())
-                .set("adapters", sys.adapters.len())
-                .set("manifest_entries", sys.manifest.len());
-        }
-        "forget" => {
-            let id = req
-                .get("id")
-                .and_then(|v| v.as_str())
-                .ok_or_else(|| anyhow::anyhow!("forget needs id"))?
-                .to_string();
-            let user = req.get("user").and_then(|v| v.as_u64()).map(|u| u as u32);
-            let sample_ids: Vec<u64> = req
-                .get("sample_ids")
-                .and_then(|v| v.as_arr())
-                .map(|a| a.iter().filter_map(|x| x.as_u64()).collect())
-                .unwrap_or_default();
-            let urgency = match req.get("urgency").and_then(|v| v.as_str()) {
-                Some("high") => Urgency::High,
-                _ => Urgency::Normal,
-            };
-            let freq = ForgetRequest {
-                id,
-                user,
-                sample_ids,
-                urgency,
-            };
-            let mut sys = system.lock().unwrap();
-            let outcome = sys.handle(&freq)?;
-            out.set("ok", true)
-                .set("action", outcome.action.as_str())
-                .set("executed", outcome.executed)
-                .set("closure_size", outcome.closure_size)
-                .set("closure_expanded", outcome.closure_expanded)
-                .set(
-                    "audit_pass",
-                    outcome
-                        .audit
-                        .as_ref()
-                        .map(|a| Json::Bool(a.pass()))
-                        .unwrap_or(Json::Null),
-                )
-                .set(
-                    "escalations",
-                    Json::Arr(
-                        outcome
-                            .escalations
-                            .iter()
-                            .map(|s| Json::Str(s.clone()))
-                            .collect(),
-                    ),
-                )
-                .set("details", outcome.details);
+                .set("model_hash", snap.model_hash.as_str())
+                .set("optimizer_hash", snap.optimizer_hash.as_str())
+                .set("logical_step", snap.logical_step)
+                .set("applied_updates", snap.applied_updates)
+                .set("ring_available", snap.ring_available)
+                .set("adapters", snap.adapters)
+                .set("manifest_entries", snap.manifest_entries)
+                .set("queued_jobs", ctx.jobs.queued_len());
         }
         "audit" => {
-            let sys = system.lock().unwrap();
-            let closure: Vec<u64> = sys.retain_ids.iter().take(8).copied().collect();
-            let ctx = crate::audit::AuditContext {
-                rt: sys.rt,
-                corpus: &sys.corpus,
+            let snap = recover(ctx.snapshot.read()).clone();
+            let av = &ctx.audit_view;
+            let closure: Vec<u64> =
+                av.retain_ids.iter().take(8).copied().collect();
+            let actx = crate::audit::AuditContext {
+                rt: ctx.rt,
+                corpus: &av.corpus,
                 forget_ids: &closure,
-                retain_ids: &sys.retain_ids,
-                eval_ids: &sys.eval_ids,
-                baseline_ppl: sys.baseline_ppl,
-                thresholds: sys.thresholds.clone(),
-                seed: sys.audit_seed,
+                retain_ids: &av.retain_ids,
+                eval_ids: &av.eval_ids,
+                baseline_ppl: av.baseline_ppl,
+                thresholds: av.thresholds.clone(),
+                seed: av.seed,
             };
-            let report = run_audits(&ctx, ModelView::Base(&sys.state.params))?;
+            let report =
+                run_audits(&actx, ModelView::Base(&snap.params))?;
             out.set("ok", true).set("report", report.to_json());
         }
         "manifest" => {
-            let sys = system.lock().unwrap();
-            let chain = sys.manifest.verify_chain()?;
+            // Lock-free chain verification from disk.  The worker may be
+            // mid-append (one writeln + fsync under the system lock), so
+            // a torn final line is possible — retry briefly before
+            // reporting corruption.
+            let mut attempt = 0;
+            let chain = loop {
+                let res = ForgetManifest::verify_chain_at(
+                    &ctx.audit_view.manifest_path,
+                    &ctx.audit_view.manifest_key,
+                );
+                match res {
+                    Ok(chain) => break chain,
+                    Err(_) if attempt < 3 => {
+                        attempt += 1;
+                        std::thread::sleep(Duration::from_millis(25));
+                    }
+                    Err(e) => return Err(e),
+                }
+            };
             out.set("ok", true)
                 .set("entries", chain.len())
                 .set(
@@ -189,8 +652,76 @@ fn dispatch_inner(
                     chain.iter().all(|(_, s)| *s),
                 );
         }
+
+        // ---- job plane -----------------------------------------------
+        "submit" => {
+            let freq = parse_request(&req)?;
+            // refused once the queue is closed for shutdown: an accepted
+            // submission is a promise the departing worker could no
+            // longer keep (the check shares the job-table lock with
+            // close(), so acceptance vs. refusal is race-free)
+            let job = ctx.jobs.submit(freq).ok_or_else(|| {
+                anyhow::anyhow!("server is shutting down — submission refused")
+            })?;
+            out.set("ok", true)
+                .set("job", job.as_str())
+                .set("status", "queued");
+        }
+        "poll" => {
+            let job = req
+                .get("job")
+                .and_then(|v| v.as_str())
+                .ok_or_else(|| anyhow::anyhow!("poll needs job"))?;
+            match ctx.jobs.poll(job) {
+                Some(j) => {
+                    out.set("ok", true);
+                    if let Json::Obj(m) = &j {
+                        for (k, v) in m {
+                            out.set(k, v.clone());
+                        }
+                    }
+                }
+                None => anyhow::bail!("unknown job {job:?}"),
+            }
+        }
+        "jobs" => {
+            out.set("ok", true).set("jobs", ctx.jobs.jobs_json());
+        }
+
+        // ---- write plane: typed poison containment -------------------
+        "plan" => {
+            let freq = parse_request(&req)?;
+            let sys = ctx
+                .system
+                .lock()
+                .map_err(|_| anyhow::Error::new(UnlearnError::LockPoisoned))?;
+            match sys.plan(&freq) {
+                Ok(plan) => {
+                    out.set("ok", true).set("plan", plan.to_json());
+                }
+                Err(e) => {
+                    out.set("ok", false)
+                        .set("error", e.to_string())
+                        .set("error_kind", e.kind());
+                }
+            }
+        }
+        "forget" => {
+            let freq = parse_request(&req)?;
+            let mut sys = ctx
+                .system
+                .lock()
+                .map_err(|_| anyhow::Error::new(UnlearnError::LockPoisoned))?;
+            let outcome = sys.handle(&freq);
+            // republish even on failure: a failed chain may still have
+            // mutated the serving state (e.g. a revert whose fallback
+            // errored) and the read plane must not go stale
+            ctx.refresh_snapshot(&sys);
+            out = outcome_json(&outcome?);
+        }
         "shutdown" => {
-            shutdown.store(true, Ordering::SeqCst);
+            ctx.jobs.close(); // refuse new submissions, wake the worker
+            ctx.shutdown.store(true, Ordering::SeqCst);
             out.set("ok", true).set("shutting_down", true);
         }
         other => anyhow::bail!("unknown op {other:?}"),

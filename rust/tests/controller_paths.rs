@@ -5,7 +5,7 @@
 use std::collections::HashSet;
 
 use unlearn::config::RunConfig;
-use unlearn::controller::{ForgetRequest, Urgency};
+use unlearn::controller::{ForgetRequest, PlanStep, UnlearnError, Urgency};
 use unlearn::harness;
 use unlearn::manifest::ActionKind;
 use unlearn::runtime::Runtime;
@@ -97,7 +97,12 @@ fn controller_routes_all_paths() {
     assert!(
         o.action == ActionKind::RecentRevert
             || (o.action == ActionKind::ExactReplay
-                && o.escalations.iter().any(|e| e.contains("revert audit"))),
+                && o.escalations.iter().any(|e| matches!(
+                    e,
+                    UnlearnError::AuditFailed {
+                        path: ActionKind::RecentRevert
+                    }
+                ))),
         "action {:?}, escalations {:?}",
         o.action,
         o.escalations
@@ -122,14 +127,32 @@ fn controller_routes_all_paths() {
     );
 
     // ---- path 4: normal + old influence -> exact replay ----------------
-    let o = system
-        .handle(&ForgetRequest {
-            id: "t-replay".into(),
-            user: Some(2),
-            sample_ids: vec![],
-            urgency: Urgency::Normal,
-        })
-        .unwrap();
+    // dry-run first: the plan predicts the replay (ring is ruled out —
+    // the state diverged from the logged trajectory) and mutates nothing
+    let replay_req = ForgetRequest {
+        id: "t-replay".into(),
+        user: Some(2),
+        sample_ids: vec![],
+        urgency: Urgency::Normal,
+    };
+    let hashes = (system.state.model_hash(), system.state.optimizer_hash());
+    let plan = system.plan(&replay_req).unwrap();
+    assert!(matches!(
+        plan.steps.last().unwrap().step,
+        PlanStep::ExactReplay { .. }
+    ));
+    assert!(
+        plan.notes.iter().any(|n| matches!(n, UnlearnError::RingDiverged)),
+        "notes {:?}",
+        plan.notes
+    );
+    assert!(plan.steps.last().unwrap().cost.replay_steps > 0);
+    assert_eq!(
+        (system.state.model_hash(), system.state.optimizer_hash()),
+        hashes,
+        "planning is a pure dry-run"
+    );
+    let o = system.handle(&replay_req).unwrap();
     assert_eq!(o.action, ActionKind::ExactReplay);
     assert!(o.details.get("from_checkpoint").is_some());
 

@@ -1,0 +1,346 @@
+//! Path-selection matrix over the pure `Planner` (paper Alg. A.7 as a
+//! decision table): one case per `PlanStep` variant plus every
+//! escalation edge, against *fabricated* `SystemView`s — a synthetic
+//! WAL, a scripted ring window and checkpoint list, no training and no
+//! runtime.  This is exactly what the planner/executor split buys:
+//! routing policy is testable without executing anything.
+
+use std::collections::HashSet;
+
+use unlearn::adapters::{Adapter, AdapterRegistry};
+use unlearn::controller::{
+    ForgetRequest, PlanStep, Planner, SystemView, UnlearnError, Urgency,
+};
+use unlearn::curvature::HotPathParams;
+use unlearn::data::corpus::Corpus;
+use unlearn::deltas::RingBudget;
+use unlearn::harness;
+use unlearn::manifest::{ActionKind, ForgetManifest, ManifestEntry};
+use unlearn::neardup::closure::build_index;
+use unlearn::neardup::{ClosureParams, HammingIndex};
+use unlearn::util::json::Json;
+use unlearn::wal::{IdMap, WalRecord};
+
+/// 12 logical steps, 4 samples each, in corpus order: sample `ids[i]`
+/// influences exactly step `i / 4`.
+struct Fix {
+    corpus: Corpus,
+    ndindex: HammingIndex,
+    ids: Vec<u64>,
+    records: Vec<WalRecord>,
+    idmap: IdMap,
+    manifest: ForgetManifest,
+    adapters: AdapterRegistry,
+    forgotten: HashSet<u64>,
+}
+
+fn fix() -> Fix {
+    let corpus = harness::small_corpus(32);
+    let ndindex = build_index(&corpus);
+    let ids: Vec<u64> = corpus.samples.iter().map(|s| s.id).collect();
+    assert!(ids.len() >= 60, "fixture needs spare samples outside the WAL");
+    let mut idmap = IdMap::new(None);
+    let mut records = Vec::new();
+    for step in 0..12u32 {
+        let chunk: Vec<u64> =
+            ids[step as usize * 4..step as usize * 4 + 4].to_vec();
+        let h = idmap.register(&chunk);
+        records.push(WalRecord {
+            hash64: h,
+            seed64: 0,
+            lr_bits: 0,
+            opt_step: step,
+            accum_end: true,
+            mb_len: chunk.len() as u16,
+        });
+    }
+    let manifest = ForgetManifest::open(
+        &unlearn::util::tempdir("planner-matrix").join("forget.manifest"),
+        b"k",
+    )
+    .unwrap();
+    Fix {
+        corpus,
+        ndindex,
+        ids,
+        records,
+        idmap,
+        manifest,
+        adapters: AdapterRegistry::new(),
+        forgotten: HashSet::new(),
+    }
+}
+
+/// Baseline view: ring covers steps [8, 12), checkpoints at 0/4/8/12,
+/// serving step 12, no fisher, not diverged.
+fn view<'a>(f: &'a Fix) -> SystemView<'a> {
+    SystemView {
+        corpus: &f.corpus,
+        ndindex: &f.ndindex,
+        // impossible thresholds: closure == requested ids exactly, so
+        // each case controls its offending steps precisely
+        closure_params: ClosureParams {
+            tau_hamming: 0,
+            tau_sim: 1.1,
+        },
+        adapters: &f.adapters,
+        records: &f.records,
+        idmap: &f.idmap,
+        manifest: &f.manifest,
+        forgotten: &f.forgotten,
+        ring_earliest: Some(8),
+        ring_available: 4,
+        ring_budget: RingBudget {
+            per_step_bytes_raw: 4000,
+            window: 4,
+            pre_compress_total: 16000,
+            stored_bytes: 400,
+            compress_ratio: 0.1,
+            record_count: 12,
+            record_secs_mean: 1e-4,
+            record_secs_last: 1e-4,
+            revert_secs_mean: 1e-4,
+        },
+        ring_patch_sizes: vec![100; 4],
+        logical_step: 12,
+        diverged: false,
+        ring_bit_exact: true,
+        fisher_available: false,
+        hot_path: HotPathParams::default(),
+        resume_after_revert: true,
+        checkpoints: vec![0, 4, 8, 12],
+        checkpoint_bytes: 1 << 20,
+        param_count: 1000,
+        lora_param_count: 64,
+        step_secs_mean: 1e-3,
+    }
+}
+
+fn req(id: &str, sample_ids: Vec<u64>, urgency: Urgency) -> ForgetRequest {
+    ForgetRequest {
+        id: id.into(),
+        user: None,
+        sample_ids,
+        urgency,
+    }
+}
+
+fn kinds(plan: &unlearn::controller::UnlearnPlan) -> Vec<&'static str> {
+    plan.steps.iter().map(|s| s.step.kind()).collect()
+}
+
+#[test]
+fn path_selection_matrix() {
+    let f = fix();
+
+    // Each row: (name, request, view tweak, expected step-kind chain,
+    // expected note kinds).  `f.ids[i]` influences step i/4.
+    type Tweak = fn(&mut SystemView<'_>);
+    let rows: Vec<(&str, ForgetRequest, Tweak, Vec<&str>, Vec<&str>)> = vec![
+        (
+            "old influence -> exact replay, ring window miss noted",
+            req("m-replay", vec![f.ids[4]], Urgency::Normal), // step 1
+            |_| {},
+            vec!["exact_replay"],
+            vec!["ring_window_miss"],
+        ),
+        (
+            "recent-only influence -> ring revert, replay fallback",
+            req("m-ring", vec![f.ids[40]], Urgency::Normal), // step 10
+            |_| {},
+            vec!["ring_revert", "exact_replay"],
+            vec![],
+        ),
+        (
+            "urgent + fisher -> hot path before replay",
+            req("m-hot", vec![f.ids[4]], Urgency::High),
+            |v| v.fisher_available = true,
+            vec!["hot_path_anti_update", "exact_replay"],
+            vec!["ring_window_miss"],
+        ),
+        (
+            "urgent without fisher -> escalation note, no hot path",
+            req("m-nofisher", vec![f.ids[4]], Urgency::High),
+            |_| {},
+            vec!["exact_replay"],
+            vec!["ring_window_miss", "no_fisher_cache"],
+        ),
+        (
+            "diverged state -> ring ruled out even for recent influence",
+            req("m-diverged", vec![f.ids[40]], Urgency::Normal),
+            |v| v.diverged = true,
+            vec!["exact_replay"],
+            vec!["ring_diverged"],
+        ),
+        (
+            "recent influence, emptied ring -> window miss",
+            req("m-ringmiss", vec![f.ids[40]], Urgency::Normal),
+            |v| {
+                v.ring_earliest = None;
+                v.ring_available = 0;
+                v.ring_patch_sizes.clear();
+            },
+            vec!["exact_replay"],
+            vec!["ring_window_miss"],
+        ),
+    ];
+
+    for (name, request, tweak, want_steps, want_notes) in rows {
+        let mut v = view(&f);
+        tweak(&mut v);
+        let plan = Planner::plan(&v, &request).unwrap_or_else(|e| {
+            panic!("case {name:?}: planning failed: {e}")
+        });
+        assert_eq!(kinds(&plan), want_steps, "case {name:?}");
+        let notes: Vec<&str> = plan.notes.iter().map(|n| n.kind()).collect();
+        assert_eq!(notes, want_notes, "case {name:?}");
+        assert!(!plan.offending.is_empty(), "case {name:?}");
+        assert!(plan.effective_target.is_some(), "case {name:?}");
+    }
+}
+
+#[test]
+fn adapter_paths_and_noop() {
+    let mut f = fix();
+    // cohort adapter scoped over samples the base never saw (outside
+    // the WAL: ids[48..52]) plus one the base DID see (ids[0]).
+    let outside: Vec<u64> = f.ids[48..52].to_vec();
+    f.adapters
+        .insert(Adapter {
+            cohort: 9,
+            params: vec![0.0; 8],
+            trained_on: outside.clone(),
+            steps: 1,
+            merged: false,
+        })
+        .unwrap();
+    f.adapters
+        .insert(Adapter {
+            cohort: 10,
+            params: vec![0.0; 8],
+            trained_on: vec![f.ids[0]],
+            steps: 1,
+            merged: false,
+        })
+        .unwrap();
+
+    // confined to an adapter, no base influence: single-step plan
+    let v = view(&f);
+    let plan =
+        Planner::plan(&v, &req("m-adapter", vec![outside[0]], Urgency::Normal))
+            .unwrap();
+    assert_eq!(kinds(&plan), vec!["adapter_delete"]);
+    assert!(plan.offending.is_empty());
+    assert_eq!(plan.effective_target, None);
+    match &plan.steps[0].step {
+        PlanStep::AdapterDelete { cohorts } => assert_eq!(cohorts, &vec![9]),
+        other => panic!("unexpected step {other:?}"),
+    }
+
+    // adapter-covered but ALSO in the base -> audit-failure fallback
+    // chain behind the adapter step (the escalation edge is planned)
+    let plan =
+        Planner::plan(&v, &req("m-adapter2", vec![f.ids[0]], Urgency::Normal))
+            .unwrap();
+    assert_eq!(kinds(&plan), vec!["adapter_delete", "exact_replay"]);
+    assert_eq!(plan.offending, vec![0]);
+
+    // no adapter, no base influence -> audited no-op (Refused action)
+    let f2 = fix();
+    let v2 = view(&f2);
+    let plan =
+        Planner::plan(&v2, &req("m-noop", vec![f2.ids[48]], Urgency::Normal))
+            .unwrap();
+    assert_eq!(kinds(&plan), vec!["no_op"]);
+    assert_eq!(plan.steps[0].step.action_kind(), ActionKind::Refused);
+}
+
+#[test]
+fn planner_error_taxonomy() {
+    let mut f = fix();
+
+    // empty closure
+    let v = view(&f);
+    assert!(matches!(
+        Planner::plan(&v, &req("m-empty", vec![], Urgency::Normal)),
+        Err(UnlearnError::EmptyClosure)
+    ));
+
+    // no checkpoint at all -> fail-closed (nothing can rebuild)
+    let mut v = view(&f);
+    v.checkpoints.clear();
+    match Planner::plan(&v, &req("m-nockpt", vec![f.ids[4]], Urgency::Normal))
+    {
+        Err(UnlearnError::NoCheckpoint { target }) => assert_eq!(target, 1),
+        other => panic!("expected NoCheckpoint, got {other:?}"),
+    }
+
+    // duplicate idempotency key
+    f.manifest
+        .append(&ManifestEntry {
+            idempotency_key: "m-dup".into(),
+            request: Json::obj(),
+            closure_summary: Json::obj(),
+            action: ActionKind::ExactReplay,
+            details: Json::obj(),
+            audits: None,
+            artifacts: Json::obj(),
+        })
+        .unwrap();
+    let v = view(&f);
+    match Planner::plan(&v, &req("m-dup", vec![f.ids[4]], Urgency::Normal)) {
+        Err(UnlearnError::DuplicateRequest { id }) => assert_eq!(id, "m-dup"),
+        other => panic!("expected DuplicateRequest, got {other:?}"),
+    }
+}
+
+#[test]
+fn cost_estimates_rank_paths() {
+    let f = fix();
+    let v = view(&f);
+
+    // recent influence: revert(2 patches)+resume(2 records) undercuts a
+    // 4-record replay from checkpoint 8
+    let plan =
+        Planner::plan(&v, &req("m-cost", vec![f.ids[40]], Urgency::Normal))
+            .unwrap();
+    let ring = &plan.steps[0];
+    let replay = &plan.steps[1];
+    assert!(matches!(ring.step, PlanStep::RingRevert { steps: 2, .. }));
+    match replay.step {
+        PlanStep::ExactReplay { from_checkpoint, target_step } => {
+            assert_eq!(from_checkpoint, 8);
+            assert_eq!(target_step, 10);
+        }
+        ref other => panic!("unexpected step {other:?}"),
+    }
+    assert_eq!(ring.cost.replay_steps, 2, "resume tail after revert");
+    assert_eq!(replay.cost.replay_steps, 4, "tail from checkpoint 8");
+    assert_eq!(ring.cost.bytes_touched % 1000, 200, "2 patches @ 100B");
+    assert!(replay.cost.bytes_touched >= 1 << 20, "checkpoint load");
+    assert!(
+        ring.cost.est_wall_secs < replay.cost.est_wall_secs,
+        "Alg. A.7 ordering is cost-ascending here"
+    );
+    assert_eq!(
+        plan.cheapest().unwrap().step.kind(),
+        "ring_revert",
+        "budget query agrees"
+    );
+
+    // the cumulative-union rule: previously forgotten influence at step
+    // 1 drags the rebuild target back even for a recent-only request
+    let mut f2 = fix();
+    f2.forgotten.insert(f2.ids[4]); // influences step 1
+    let v2 = view(&f2);
+    let plan2 =
+        Planner::plan(&v2, &req("m-union", vec![f2.ids[40]], Urgency::Normal))
+            .unwrap();
+    assert_eq!(plan2.offending, vec![10], "request's own influence");
+    assert_eq!(
+        plan2.effective_target,
+        Some(1),
+        "rebuild target covers the union"
+    );
+    assert_eq!(kinds(&plan2), vec!["exact_replay"], "ring cannot reach");
+}

@@ -9,8 +9,10 @@ use std::collections::HashSet;
 
 use unlearn::checkpoint::CheckpointStore;
 use unlearn::config::RunConfig;
+use unlearn::controller::{execute_batch, ForgetRequest, Urgency};
 use unlearn::equality::{wal_segment_shas, EqualityProof};
 use unlearn::harness;
+use unlearn::manifest::ActionKind;
 use unlearn::replay::{
     load_run, offending_steps, replay_filter, replay_filter_nearest,
     ReplayOptions,
@@ -282,4 +284,201 @@ fn empty_step_skip_through_real_stack() {
     )
     .unwrap();
     assert!(oracle.state.bits_equal(&replay.state));
+}
+
+#[test]
+fn coalesced_batch_is_bit_identical_to_sequential() {
+    // Batch-coalescing exactness (Thm. A.1 applied to a request
+    // stream): N requests handled as ONE union-filtered tail replay
+    // must produce a model bit-identical to handling the same requests
+    // sequentially (each of which replays filtering the cumulative
+    // union).  Two independently trained — hence bit-identical — systems
+    // take the two routes.
+    let rt = Runtime::load(&harness::artifacts_dir()).expect("artifacts");
+    let corpus = harness::small_corpus(rt.manifest.seq_len);
+    let mk = |tag: &str| RunConfig {
+        run_dir: unlearn::util::tempdir(tag),
+        steps: STEPS,
+        accum: 2,
+        checkpoint_every: CKPT_EVERY,
+        checkpoint_keep: 16,
+        ring_window: 4,
+        warmup: 4,
+        ..Default::default()
+    };
+    let mut seq = harness::build_system(&rt, mk("batch-seq"), corpus.clone(), false)
+        .unwrap()
+        .system;
+    let mut coal =
+        harness::build_system(&rt, mk("batch-coal"), corpus.clone(), false)
+            .unwrap()
+            .system;
+    assert!(
+        seq.state.bits_equal(&coal.state),
+        "deterministic training: identical starting points"
+    );
+
+    // three replay-bound requests: users whose earliest influence
+    // predates the ring window (so sequential handling replays too)
+    let earliest_ring = seq.ring.earliest_step().expect("ring populated");
+    let mut reqs: Vec<ForgetRequest> = Vec::new();
+    for u in 0..24u32 {
+        let req = ForgetRequest {
+            id: format!("batch-{u}"),
+            user: Some(u),
+            sample_ids: vec![],
+            urgency: Urgency::Normal,
+        };
+        let (cl, _) = seq.closure_of(&req);
+        if cl.is_empty() {
+            continue;
+        }
+        let set: HashSet<u64> = cl.iter().copied().collect();
+        let off = offending_steps(&seq.records, &seq.idmap, &set).unwrap();
+        if off.first().map(|&t| t < earliest_ring).unwrap_or(false) {
+            reqs.push(req);
+            if reqs.len() == 3 {
+                break;
+            }
+        }
+    }
+    assert_eq!(reqs.len(), 3, "need three replay-bound users");
+
+    // sequential: three separate tail replays
+    for r in &reqs {
+        let o = seq.handle(r).unwrap();
+        assert_eq!(o.action, ActionKind::ExactReplay, "{:?}", o.escalations);
+        assert!(o.executed);
+    }
+
+    // coalesced: exactly one shared tail replay
+    let batch = execute_batch(&mut coal, &reqs).unwrap();
+    assert_eq!(batch.replays_run, 1, "one replay serves the whole batch");
+    assert_eq!(batch.coalesced_requests, 3);
+    assert!(batch.from_checkpoint.is_some());
+    for res in &batch.outcomes {
+        let o = res.as_ref().unwrap();
+        assert!(o.executed);
+        assert_eq!(o.action, ActionKind::ExactReplay);
+        assert_eq!(o.details.get("coalesced").unwrap().as_u64(), Some(3));
+    }
+
+    // G1 for batches: bit-identical state both ways
+    assert!(
+        seq.state.bits_equal(&coal.state),
+        "coalesced batch must be bit-identical to sequential handling \
+         (model {} vs {})",
+        seq.state.model_hash(),
+        coal.state.model_hash()
+    );
+    assert_eq!(seq.state.model_hash(), coal.state.model_hash());
+    assert_eq!(seq.state.optimizer_hash(), coal.state.optimizer_hash());
+
+    // per-request manifest entries on both sides, all signed
+    let cs = seq.manifest.verify_chain().unwrap();
+    let cc = coal.manifest.verify_chain().unwrap();
+    assert_eq!(cs.len(), 3);
+    assert_eq!(cc.len(), 3);
+    assert!(cc.iter().all(|(_, sig)| *sig));
+
+    // idempotency across the batch boundary: resubmitting one of the
+    // coalesced requests is suppressed
+    let dup = execute_batch(&mut coal, &reqs[..1].to_vec()).unwrap();
+    assert_eq!(dup.replays_run, 0);
+    assert!(!dup.outcomes[0].as_ref().unwrap().executed);
+}
+
+#[test]
+fn coalesced_ring_revert_matches_sequential() {
+    // The batch coalescer's second mode: when the union's influence is
+    // entirely inside the delta-ring window, the shared rebuild is a
+    // bounded ring revert + resumed filtered tail instead of a
+    // checkpoint replay.  Must still be bit-identical to sequential
+    // handling (XOR patches revert the trajectory state exactly; the
+    // resumed tail is the same filtered program).
+    let rt = Runtime::load(&harness::artifacts_dir()).expect("artifacts");
+    // toy corpus: the small corpus is fully covered within ~7 steps, so
+    // it has no samples first seen inside a late ring window
+    let corpus = harness::toy_corpus(rt.manifest.seq_len);
+    let mk = |tag: &str| RunConfig {
+        run_dir: unlearn::util::tempdir(tag),
+        steps: STEPS,
+        accum: 2,
+        checkpoint_every: CKPT_EVERY,
+        checkpoint_keep: 16,
+        ring_window: 4,
+        warmup: 4,
+        ..Default::default()
+    };
+    let mut seq =
+        harness::build_system(&rt, mk("ring-batch-seq"), corpus.clone(), false)
+            .unwrap()
+            .system;
+    let mut coal =
+        harness::build_system(&rt, mk("ring-batch-coal"), corpus.clone(), false)
+            .unwrap()
+            .system;
+    assert!(seq.state.bits_equal(&coal.state));
+
+    // candidate ids first seen inside the ring window whose closure
+    // also stays inside it (near-dup expansion can reach back in time)
+    let earliest = seq.ring.earliest_step().expect("ring populated");
+    let recent_set: std::collections::HashSet<u64> =
+        harness::ids_first_seen_at_or_after(&seq.records, &seq.idmap, earliest + 2)
+            .into_iter()
+            .collect();
+    let mut recent: Vec<u64> = recent_set
+        .iter()
+        .copied()
+        .filter(|&id| {
+            let (cl, _) = seq.closure_of(&ForgetRequest {
+                id: "probe".into(),
+                user: None,
+                sample_ids: vec![id],
+                urgency: Urgency::Normal,
+            });
+            cl.iter().all(|c| recent_set.contains(c))
+        })
+        .collect();
+    recent.sort_unstable();
+    assert!(recent.len() >= 2, "need two recent-only candidates");
+    let reqs = vec![
+        ForgetRequest {
+            id: "ring-batch-1".into(),
+            user: None,
+            sample_ids: vec![recent[0]],
+            urgency: Urgency::Normal,
+        },
+        ForgetRequest {
+            id: "ring-batch-2".into(),
+            user: None,
+            sample_ids: vec![recent[1]],
+            urgency: Urgency::Normal,
+        },
+    ];
+
+    for r in &reqs {
+        let o = seq.handle(r).unwrap();
+        assert!(o.executed);
+    }
+    let batch = execute_batch(&mut coal, &reqs).unwrap();
+    assert_eq!(batch.replays_run, 1, "one shared rebuild");
+    assert_eq!(batch.coalesced_requests, 2);
+    assert!(
+        batch.from_checkpoint.is_none(),
+        "ring mode rebuilds without touching the checkpoint store"
+    );
+    for res in &batch.outcomes {
+        let o = res.as_ref().unwrap();
+        assert!(o.executed);
+        assert_eq!(o.action, ActionKind::RecentRevert);
+        assert!(o.details.get("reverted_steps").is_some());
+    }
+    assert!(
+        seq.state.bits_equal(&coal.state),
+        "ring-mode coalescing must be bit-identical to sequential \
+         handling (model {} vs {})",
+        seq.state.model_hash(),
+        coal.state.model_hash()
+    );
 }

@@ -1,14 +1,15 @@
 //! Admin-server protocol integration: dispatch ops against a live
 //! system (without sockets — `dispatch` is the protocol core; the TCP
-//! layer is a thin line-framing loop around it).
+//! layer is a thin line-framing loop around it).  Covers the async job
+//! queue (submit/poll/jobs + coalesced drain), the plan dry-run, the
+//! lock-free read plane, and poisoned-lock containment.
 
-use std::sync::atomic::AtomicBool;
 use std::sync::Mutex;
 
 use unlearn::config::RunConfig;
 use unlearn::harness;
 use unlearn::runtime::Runtime;
-use unlearn::server::dispatch;
+use unlearn::server::{dispatch, drain_queue_once, ServerCtx};
 
 #[test]
 fn protocol_ops_roundtrip() {
@@ -24,46 +25,177 @@ fn protocol_ops_roundtrip() {
     };
     let trained = harness::build_system(&rt, cfg, corpus, false).unwrap();
     let system = Mutex::new(trained.system);
-    let shutdown = AtomicBool::new(false);
+    let ctx = ServerCtx::new(&system).unwrap();
 
-    // status
-    let r = dispatch(r#"{"op":"status"}"#, &system, &shutdown);
+    // ---- status: read plane, snapshot-backed ---------------------------
+    let r = dispatch(r#"{"op":"status"}"#, &ctx);
     assert_eq!(r.get("ok").unwrap().as_bool(), Some(true));
     assert!(r.get("model_hash").unwrap().as_str().unwrap().len() == 16);
+    assert_eq!(r.get("queued_jobs").unwrap().as_u64(), Some(0));
 
-    // forget (normal)
+    // ---- pick three replay-bound users (offending steps in the base) ---
+    let users: Vec<u32> = {
+        let sys = system.lock().unwrap();
+        (0..24u32)
+            .filter(|&u| {
+                sys.plan(&unlearn::controller::ForgetRequest {
+                    id: format!("probe-{u}"),
+                    user: Some(u),
+                    sample_ids: vec![],
+                    urgency: unlearn::controller::Urgency::Normal,
+                })
+                .map(|p| !p.offending.is_empty())
+                .unwrap_or(false)
+            })
+            .take(3)
+            .collect()
+    };
+    assert_eq!(users.len(), 3, "need three replay-bound users");
+
+    // ---- plan: dry-run with cost estimates, zero mutation --------------
+    let hashes_before = {
+        let sys = system.lock().unwrap();
+        (sys.state.model_hash(), sys.state.optimizer_hash())
+    };
     let r = dispatch(
-        r#"{"op":"forget","id":"srv-1","user":3,"urgency":"normal"}"#,
-        &system,
-        &shutdown,
+        &format!(r#"{{"op":"plan","id":"dry","user":{}}}"#, users[0]),
+        &ctx,
     );
     assert_eq!(r.get("ok").unwrap().as_bool(), Some(true), "{r}");
-    assert_eq!(r.get("executed").unwrap().as_bool(), Some(true));
-    assert!(r.get("action").unwrap().as_str().is_some());
-
-    // duplicate suppressed
-    let r = dispatch(
-        r#"{"op":"forget","id":"srv-1","user":3}"#,
-        &system,
-        &shutdown,
+    let plan = r.get("plan").unwrap();
+    let steps = plan.get("steps").unwrap().as_arr().unwrap();
+    assert!(!steps.is_empty(), "plan has a fallback chain");
+    let last = steps.last().unwrap();
+    assert_eq!(last.get("kind").unwrap().as_str(), Some("exact_replay"));
+    assert!(
+        last.get_path(&["cost", "replay_steps"]).unwrap().as_u64().unwrap()
+            > 0,
+        "cost estimate populated"
     );
+    {
+        let sys = system.lock().unwrap();
+        assert_eq!(
+            (sys.state.model_hash(), sys.state.optimizer_hash()),
+            hashes_before,
+            "plan is a pure dry-run"
+        );
+        assert_eq!(sys.manifest.len(), 0, "no manifest entry from a dry-run");
+    }
+
+    // ---- submit: enqueue, return job ids immediately -------------------
+    for (i, u) in users.iter().enumerate() {
+        let r = dispatch(
+            &format!(r#"{{"op":"submit","id":"srv-{i}","user":{u}}}"#),
+            &ctx,
+        );
+        assert_eq!(r.get("ok").unwrap().as_bool(), Some(true), "{r}");
+        assert_eq!(
+            r.get("job").unwrap().as_str(),
+            Some(format!("job-{}", i + 1).as_str())
+        );
+        assert_eq!(r.get("status").unwrap().as_str(), Some("queued"));
+    }
+    let r = dispatch(r#"{"op":"poll","job":"job-1"}"#, &ctx);
+    assert_eq!(r.get("status").unwrap().as_str(), Some("queued"));
+
+    // ---- drain: one batch, one coalesced rebuild -----------------------
+    assert_eq!(drain_queue_once(&ctx), 3);
+    for i in 1..=3 {
+        let r = dispatch(&format!(r#"{{"op":"poll","job":"job-{i}"}}"#), &ctx);
+        assert_eq!(r.get("status").unwrap().as_str(), Some("done"), "{r}");
+        let result = r.get("result").unwrap();
+        assert_eq!(result.get("executed").unwrap().as_bool(), Some(true));
+        // the shared rebuild is a ring revert when the union fits the
+        // delta-ring window, else a tail replay — both exact
+        let action = result.get("action").unwrap().as_str().unwrap();
+        assert!(
+            action == "exact_replay" || action == "recent_revert",
+            "{r}"
+        );
+        assert_eq!(
+            result.get_path(&["details", "coalesced"]).unwrap().as_u64(),
+            Some(3),
+            "all three requests shared one rebuild"
+        );
+    }
+    let r = dispatch(r#"{"op":"jobs"}"#, &ctx);
+    assert_eq!(r.get("jobs").unwrap().as_arr().unwrap().len(), 3);
+
+    // snapshot refreshed by the drain
+    let r = dispatch(r#"{"op":"status"}"#, &ctx);
+    assert_ne!(
+        r.get("model_hash").unwrap().as_str().unwrap(),
+        hashes_before.0,
+        "the coalesced replay changed the serving state"
+    );
+    assert_eq!(r.get("manifest_entries").unwrap().as_u64(), Some(3));
+
+    // ---- duplicate idempotency key through the queue -------------------
+    let r = dispatch(
+        &format!(r#"{{"op":"submit","id":"srv-0","user":{}}}"#, users[0]),
+        &ctx,
+    );
+    let dup_job = r.get("job").unwrap().as_str().unwrap().to_string();
+    assert_eq!(drain_queue_once(&ctx), 1);
+    let r = dispatch(&format!(r#"{{"op":"poll","job":"{dup_job}"}}"#), &ctx);
+    assert_eq!(
+        r.get_path(&["result", "executed"]).unwrap().as_bool(),
+        Some(false),
+        "duplicate suppressed: {r}"
+    );
+
+    // ---- legacy sync forget op still works -----------------------------
+    let r = dispatch(r#"{"op":"forget","id":"sync-1","user":20}"#, &ctx);
+    assert_eq!(r.get("ok").unwrap().as_bool(), Some(true), "{r}");
+    assert_eq!(r.get("executed").unwrap().as_bool(), Some(true));
+    let r = dispatch(r#"{"op":"forget","id":"sync-1","user":20}"#, &ctx);
     assert_eq!(r.get("executed").unwrap().as_bool(), Some(false));
 
-    // manifest verification
-    let r = dispatch(r#"{"op":"manifest"}"#, &system, &shutdown);
+    // ---- manifest verification: lock-free, from disk -------------------
+    let r = dispatch(r#"{"op":"manifest"}"#, &ctx);
     assert_eq!(r.get("signatures_valid").unwrap().as_bool(), Some(true));
-    assert_eq!(r.get("entries").unwrap().as_u64(), Some(1));
+    assert_eq!(r.get("entries").unwrap().as_u64(), Some(4));
 
-    // malformed input -> structured error, no panic
-    let r = dispatch("not json", &system, &shutdown);
+    // ---- audit: lock-free, snapshot-backed -----------------------------
+    let r = dispatch(r#"{"op":"audit"}"#, &ctx);
+    assert_eq!(r.get("ok").unwrap().as_bool(), Some(true), "{r}");
+    assert!(r.get("report").is_some());
+
+    // ---- malformed input -> structured error, no panic -----------------
+    let r = dispatch("not json", &ctx);
     assert_eq!(r.get("ok").unwrap().as_bool(), Some(false));
-    let r = dispatch(r#"{"op":"nope"}"#, &system, &shutdown);
+    let r = dispatch(r#"{"op":"nope"}"#, &ctx);
     assert_eq!(r.get("ok").unwrap().as_bool(), Some(false));
-    let r = dispatch(r#"{"op":"forget"}"#, &system, &shutdown);
+    let r = dispatch(r#"{"op":"forget"}"#, &ctx);
+    assert_eq!(r.get("ok").unwrap().as_bool(), Some(false));
+    let r = dispatch(r#"{"op":"poll","job":"job-99"}"#, &ctx);
     assert_eq!(r.get("ok").unwrap().as_bool(), Some(false));
 
-    // shutdown flag
-    let r = dispatch(r#"{"op":"shutdown"}"#, &system, &shutdown);
+    // ---- shutdown flag -------------------------------------------------
+    let r = dispatch(r#"{"op":"shutdown"}"#, &ctx);
     assert_eq!(r.get("ok").unwrap().as_bool(), Some(true));
-    assert!(shutdown.load(std::sync::atomic::Ordering::SeqCst));
+    assert!(ctx.shutdown.load(std::sync::atomic::Ordering::SeqCst));
+
+    // ---- poisoned system lock: typed error, read plane survives --------
+    let prev = std::panic::take_hook();
+    std::panic::set_hook(Box::new(|_| {}));
+    let _ = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+        let _g = system.lock().unwrap();
+        panic!("poison the admin lock");
+    }));
+    std::panic::set_hook(prev);
+    assert!(system.lock().is_err(), "lock is poisoned");
+    let r = dispatch(r#"{"op":"forget","id":"after-poison","user":1}"#, &ctx);
+    assert_eq!(r.get("ok").unwrap().as_bool(), Some(false));
+    assert_eq!(
+        r.get("error_kind").unwrap().as_str(),
+        Some("lock_poisoned"),
+        "{r}"
+    );
+    let r = dispatch(r#"{"op":"status"}"#, &ctx);
+    assert_eq!(
+        r.get("ok").unwrap().as_bool(),
+        Some(true),
+        "read plane never touches the poisoned lock"
+    );
 }
