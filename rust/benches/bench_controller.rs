@@ -11,6 +11,7 @@ use unlearn::config::RunConfig;
 use unlearn::controller::{ForgetRequest, Urgency};
 use unlearn::harness;
 use unlearn::runtime::Runtime;
+use unlearn::util::json::Json;
 
 fn json_main() {
     let rt = Runtime::load(&harness::artifacts_dir()).expect("artifacts");
@@ -88,6 +89,45 @@ fn json_main() {
     let batch = unlearn::controller::execute_batch(&mut coal, &reqs).unwrap();
     let coal_secs = t0.elapsed().as_secs_f64();
 
+    // ---- checkpoint laundering: wall time + plan-cost reduction -------
+    // `coal` now carries the batch's cumulative forgotten set.  ONE
+    // probe user is pinned before laundering and re-planned after, so
+    // pre/post compare the same request: its rebuild must start before
+    // ALL forgotten influence pre-launder and only before its own
+    // influence post-launder.
+    let probe_cost = |sys: &unlearn::controller::UnlearnSystem<'_>,
+                      tag: &str,
+                      u: u32| {
+        let p = sys
+            .plan(&ForgetRequest {
+                id: format!("launder-probe-{tag}-{u}"),
+                user: Some(u),
+                sample_ids: vec![],
+                urgency: Urgency::Normal,
+            })
+            .ok()?;
+        p.steps
+            .iter()
+            .find(|s| s.step.kind() == "exact_replay")
+            .map(|s| s.cost.replay_steps)
+    };
+    let probe_user =
+        (0..24u32).find(|&u| probe_cost(&coal, "pin", u).is_some());
+    let plan_steps_pre =
+        probe_user.and_then(|u| probe_cost(&coal, "pre", u));
+    let policy = unlearn::controller::LaunderPolicy {
+        min_extra_replay_records: 0,
+    };
+    let t0 = std::time::Instant::now();
+    let laundered = coal
+        .launder("bench-launder", &policy, true)
+        .map(|o| o.executed)
+        .unwrap_or(false);
+    let launder_secs = t0.elapsed().as_secs_f64();
+    let plan_steps_post =
+        probe_user.and_then(|u| probe_cost(&coal, "post", u));
+    let cas = coal.cas_stats().ok();
+
     let mut j = unlearn::util::json::Json::obj();
     j.set("bench", "controller")
         .set("action", outcome.action.as_str())
@@ -107,7 +147,31 @@ fn json_main() {
             batch.applied_steps as f64 / kn,
         )
         .set("coalesced_replays_run", batch.replays_run)
-        .set("schema", 2);
+        .set("launder_executed", laundered)
+        .set("launder_ns", ns(launder_secs))
+        .set(
+            "plan_replay_steps_pre_launder",
+            plan_steps_pre.map(Json::from).unwrap_or(Json::Null),
+        )
+        .set(
+            "plan_replay_steps_post_launder",
+            plan_steps_post.map(Json::from).unwrap_or(Json::Null),
+        )
+        .set(
+            // null when either probe failed — never a fabricated win
+            "launder_plan_cost_reduction",
+            match (plan_steps_pre, plan_steps_post) {
+                (Some(pre), Some(post)) if pre > 0 => {
+                    Json::from(1.0 - post as f64 / pre as f64)
+                }
+                _ => Json::Null,
+            },
+        )
+        .set(
+            "cas_dedup_ratio",
+            cas.as_ref().map(|c| c.dedup_ratio).unwrap_or(1.0),
+        )
+        .set("schema", 3);
     emit_json("controller", &j);
 }
 

@@ -98,7 +98,22 @@ fn json_main() {
     }
     let mut j = perf::replay_json(ns_per_step, ns(t_step), f.steps);
     j.set("from_checkpoint", k).set("replayed_steps", replayed);
-    emit_json("replay", &j);
+    // a committed null placeholder (toolchain-less host) is promoted to
+    // a real baseline by the first measured run — loudly, so the gate's
+    // record-only phase is visible in CI logs
+    match perf::record_first_baseline(&baseline, &j).expect("write baseline")
+    {
+        perf::BaselineDisposition::Recorded => {
+            println!(
+                "perf baseline: first measured run RECORDED at {} — the \
+                 >{:.0}% regression gate bites from the next run",
+                baseline.display(),
+                perf::DEFAULT_MAX_REGRESSION * 100.0
+            );
+            println!("{}", j.pretty());
+        }
+        perf::BaselineDisposition::AlreadyMeasured => emit_json("replay", &j),
+    }
 }
 
 fn main() {

@@ -71,10 +71,25 @@ pub fn mia_auc(
     ctx: &AuditContext<'_>,
     view: ModelView<'_>,
 ) -> anyhow::Result<MiaResult> {
+    mia_auc_with(ctx, view, None)
+}
+
+/// [`mia_auc`] reusing precomputed control losses (the batch-shared
+/// chunk — controls depend only on the state, not the request).  The
+/// losses must be `per_example_losses` over `ctx.retain_ids` under the
+/// same `view`; results are bit-identical to the unshared path because
+/// both sides of the AUC are pure functions of (state, id list).
+pub fn mia_auc_with(
+    ctx: &AuditContext<'_>,
+    view: ModelView<'_>,
+    shared_controls: Option<&[f32]>,
+) -> anyhow::Result<MiaResult> {
     let forget_losses =
         per_example_losses(ctx.rt, view, ctx.corpus, ctx.forget_ids)?;
-    let control_losses =
-        per_example_losses(ctx.rt, view, ctx.corpus, ctx.retain_ids)?;
+    let control_losses = match shared_controls {
+        Some(c) => c.to_vec(),
+        None => per_example_losses(ctx.rt, view, ctx.corpus, ctx.retain_ids)?,
+    };
     // member-likeness score = -loss
     let member: Vec<f64> = forget_losses.iter().map(|&l| -(l as f64)).collect();
     let control: Vec<f64> =

@@ -207,16 +207,63 @@ pub struct AuditContext<'a> {
     pub seed: u64,
 }
 
+/// The request-*independent* evaluations of the audit harness over one
+/// fixed model state: the MIA control losses (retain member controls)
+/// and the retain-set utility perplexity.  A coalesced batch audits N
+/// requests against the same post-rebuild state — these chunks are
+/// evaluated once per batch and reused, while the per-request forget
+/// probes (MIA forget losses, canary exposure, extraction, fuzzy
+/// recall) still run individually.  Reusing them is bit-transparent:
+/// both are pure functions of (state, id list), so a report built from
+/// shared evals is identical to an unshared one.
+#[derive(Debug, Clone)]
+pub struct SharedEvals {
+    /// Per-example per-token losses over `retain_ids` (MIA controls).
+    pub control_losses: Vec<f32>,
+    /// `exp(mean loss/token)` over `eval_ids` (utility gate input).
+    pub retain_ppl: f64,
+}
+
+/// Evaluate the shared chunks once (the per-batch precomputation).
+pub fn shared_evals(
+    ctx: &AuditContext<'_>,
+    view: ModelView<'_>,
+) -> anyhow::Result<SharedEvals> {
+    Ok(SharedEvals {
+        control_losses: per_example_losses(
+            ctx.rt, view, ctx.corpus, ctx.retain_ids,
+        )?,
+        retain_ppl: utility::retain_ppl(ctx, view)?,
+    })
+}
+
 /// Run all five audits against a model view (Alg. A.4 line 11).
 pub fn run_audits(
     ctx: &AuditContext<'_>,
     view: ModelView<'_>,
 ) -> anyhow::Result<AuditReport> {
-    let mia = mia::mia_auc(ctx, view)?;
+    run_audits_with(ctx, view, None)
+}
+
+/// [`run_audits`] with optionally precomputed shared chunks (see
+/// [`SharedEvals`]); `None` evaluates everything inline.
+pub fn run_audits_with(
+    ctx: &AuditContext<'_>,
+    view: ModelView<'_>,
+    shared: Option<&SharedEvals>,
+) -> anyhow::Result<AuditReport> {
+    let mia = mia::mia_auc_with(
+        ctx,
+        view,
+        shared.map(|s| s.control_losses.as_slice()),
+    )?;
     let (mu, sigma) = canary::exposure(ctx, view)?;
     let extraction_rate = extraction::extraction_rate(ctx, view)?;
     let fuzzy_recall = fuzzy::fuzzy_recall(ctx, view)?;
-    let retain_ppl = utility::retain_ppl(ctx, view)?;
+    let retain_ppl = match shared {
+        Some(s) => s.retain_ppl,
+        None => utility::retain_ppl(ctx, view)?,
+    };
 
     let th = &ctx.thresholds;
     let mut gates = vec![

@@ -1,19 +1,44 @@
-//! Checkpoint store: full checkpoints (weights + optimizer state, exact
-//! f32 bit images) every K steps and optional weights-only
-//! micro-checkpoints every M steps (paper §5, Table 3).
+//! Content-addressed checkpoint store (CAS) with laundered lineages.
 //!
-//! File format per checkpoint: a directory `ckpt-{step:08}` containing
-//! `params.bin`, `m.bin`, `v.bin` (LE f32 images), `meta.json` (logical
-//! step, applied-update counter, content hashes) — restoration is exact
-//! by construction (assumption A4): bytes in, bytes out.
+//! Tensors are stored once per distinct bit pattern under
+//! `objects/<sha256>`; checkpoints are lightweight JSON *manifests*
+//! referencing those blobs by hash.  Identical tensors dedup across
+//! checkpoints, micro-checkpoints and runs sharing a store root — and
+//! checkpoint *laundering* (rewriting the lineage with the forgotten
+//! closure filtered out) pays only for the tensors that actually
+//! changed.
 //!
-//! I/O is single-pass and copy-free: `save_full` streams each tensor's
-//! zero-copy byte view to disk while feeding the same bytes to the
-//! SHA-256 hasher (the meta hashes are a by-product of the write, not a
-//! second serialization), and `load_full` reads straight into the f32
-//! buffer's byte view and hashes that — no intermediate `Vec<u8>`
-//! round-trips of parameter-sized tensors anywhere.
+//! On-disk layout under the store root:
+//!
+//! ```text
+//! objects/<64-hex sha256>            raw LE f32 tensor image
+//! lineages/gen-<g>/ckpt-<step>.json  full-checkpoint manifest
+//! lineages/gen-<g>/micro-<step>.json weights-only manifest
+//! lineages/gen-<g>/laundered.json    closure laundered out of gen g
+//! LINEAGE.json                       {"active": g} (tmp+rename swap)
+//! ```
+//!
+//! The **active lineage** is the one `list_full`/`load_full` serve.
+//! Laundering stages a successor generation ([`LineageStage`]): clean
+//! checkpoints are *adopted* (manifest copied — blobs shared, zero
+//! tensor bytes written), contaminated ones are replaced by filtered
+//! replay snapshots, then `commit` atomically swaps `LINEAGE.json`,
+//! retires the old generation and garbage-collects.
+//!
+//! Garbage collection is refcount-by-scan: an object is live iff some
+//! manifest in **any** lineage directory (active, staged, or not yet
+//! retired) references its hash; everything else is removed.  The old
+//! `keep`-based rolling prune survives as a manifest-level policy —
+//! removing a manifest merely drops references, the blobs die in the
+//! following sweep.
+//!
+//! Restoration stays exact by construction (assumption A4): `load_full`
+//! re-hashes every tensor read and refuses a mismatch with a typed
+//! [`StoreError`]; `open` refuses a store whose active manifests
+//! reference missing blobs (dangling reference).
 
+use std::collections::{HashMap, HashSet};
+use std::fmt;
 use std::fs;
 use std::io::{Read, Write};
 use std::path::{Path, PathBuf};
@@ -75,28 +100,153 @@ impl TrainState {
     }
 }
 
-/// Stream a tensor's byte view to `path`, hashing while writing.
-/// Returns the full SHA-256 hex (identical to
-/// `util::bytes::state_hash_full` of the same tensor).
-fn write_tensor_hashed(path: &Path, data: &[f32]) -> anyhow::Result<String> {
-    let bytes = simd::as_bytes(data);
-    let mut f = std::io::BufWriter::new(fs::File::create(path)?);
-    let mut h = StreamingSha256::new();
-    for chunk in bytes.chunks(1 << 20) {
-        h.update(chunk);
-        f.write_all(chunk)?;
-    }
-    f.flush()?;
-    Ok(h.finalize_hex())
+/// Typed failure taxonomy of the store (fail-closed restore paths).
+#[derive(Debug, Clone, PartialEq)]
+pub enum StoreError {
+    /// A blob's recomputed hash differs from the manifest reference —
+    /// the object was truncated or corrupted (refuse inexact restore).
+    HashMismatch {
+        step: u32,
+        tensor: &'static str,
+        expect: String,
+        got: String,
+    },
+    /// A manifest references an object that does not exist on disk.
+    DanglingObject {
+        step: u32,
+        tensor: &'static str,
+        hash: String,
+    },
+    /// No manifest for the requested step in the active lineage.
+    MissingCheckpoint { step: u32 },
+    /// A manifest file exists but cannot be parsed / lacks fields.
+    CorruptManifest { path: String, detail: String },
 }
 
-/// Read a tensor file straight into an f32 buffer (single allocation,
-/// no byte-vector round-trip), returning (tensor, sha256-hex).
-fn read_tensor_hashed(path: &Path) -> anyhow::Result<(Vec<f32>, String)> {
+impl StoreError {
+    /// Stable machine-readable discriminator.
+    pub fn kind(&self) -> &'static str {
+        match self {
+            StoreError::HashMismatch { .. } => "hash_mismatch",
+            StoreError::DanglingObject { .. } => "dangling_object",
+            StoreError::MissingCheckpoint { .. } => "missing_checkpoint",
+            StoreError::CorruptManifest { .. } => "corrupt_manifest",
+        }
+    }
+}
+
+impl fmt::Display for StoreError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            StoreError::HashMismatch { step, tensor, expect, got } => write!(
+                f,
+                "checkpoint {tensor} hash mismatch at step {step}: manifest \
+                 {expect} vs stored {got} — refusing inexact restore (A4)"
+            ),
+            StoreError::DanglingObject { step, tensor, hash } => write!(
+                f,
+                "checkpoint {tensor} at step {step} references missing \
+                 object {hash} (dangling manifest reference)"
+            ),
+            StoreError::MissingCheckpoint { step } => {
+                write!(f, "no checkpoint manifest for step {step}")
+            }
+            StoreError::CorruptManifest { path, detail } => {
+                write!(f, "corrupt checkpoint manifest {path}: {detail}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for StoreError {}
+
+/// Store-wide accounting (the `status`/bench "CAS" row).
+#[derive(Debug, Clone, PartialEq)]
+pub struct CasStats {
+    /// Distinct blobs on disk.
+    pub objects: u64,
+    /// Bytes actually stored (each distinct tensor once).
+    pub object_bytes: u64,
+    /// Checkpoint manifests across all lineage directories.
+    pub manifests: u64,
+    /// Bytes a naive one-file-per-tensor store would hold (every
+    /// manifest reference priced at its object's size).
+    pub referenced_bytes: u64,
+    /// `object_bytes / referenced_bytes` — 1.0 means no sharing, lower
+    /// is better (0.33 = every blob referenced three times on average).
+    pub dedup_ratio: f64,
+    /// Active lineage generation.
+    pub generation: u64,
+    /// IDs laundered out of the active lineage.
+    pub laundered_ids: u64,
+}
+
+/// One GC sweep's outcome.
+#[derive(Debug, Clone, PartialEq)]
+pub struct GcStats {
+    pub removed_objects: u64,
+    pub removed_bytes: u64,
+    pub live_objects: u64,
+}
+
+/// Stream a tensor's bytes to `path` (tmp + rename so readers never see
+/// a partial object).
+fn write_object(path: &Path, bytes: &[u8]) -> anyhow::Result<()> {
+    let tmp = path.with_extension("tmp");
+    {
+        let mut f = std::io::BufWriter::new(fs::File::create(&tmp)?);
+        for chunk in bytes.chunks(1 << 20) {
+            f.write_all(chunk)?;
+        }
+        f.flush()?;
+    }
+    fs::rename(&tmp, path)?;
+    Ok(())
+}
+
+/// Atomic small-file write (manifests, LINEAGE.json; also shared by
+/// the controller's durable-set files so tmp+rename semantics live in
+/// exactly one place).
+pub(crate) fn write_atomic(path: &Path, text: &str) -> anyhow::Result<()> {
+    let tmp = path.with_extension("tmp");
+    fs::write(&tmp, text)?;
+    fs::rename(&tmp, path)?;
+    Ok(())
+}
+
+/// The `{"ids":[...]}` id-set document (laundered.json /
+/// forgotten.json) — one encode, one decode, shared by the store, the
+/// controller and the harness.
+pub(crate) fn ids_json(ids: &[u64]) -> Json {
+    let mut j = Json::obj();
+    j.set(
+        "ids",
+        Json::Arr(ids.iter().map(|&i| i.into()).collect()),
+    );
+    j
+}
+
+/// Read an id-set document; a missing file is the empty set.
+pub(crate) fn read_ids_json(path: &Path) -> anyhow::Result<Vec<u64>> {
+    if !path.exists() {
+        return Ok(Vec::new());
+    }
+    let j = parse(&fs::read_to_string(path)?).map_err(|e| {
+        anyhow::anyhow!("bad id-set file {}: {e}", path.display())
+    })?;
+    Ok(j.get("ids")
+        .and_then(|v| v.as_arr())
+        .map(|a| a.iter().filter_map(|x| x.as_u64()).collect())
+        .unwrap_or_default())
+}
+
+/// Read an object file straight into an f32 buffer (single allocation),
+/// returning (tensor, recomputed sha256-hex).
+fn read_object_hashed(path: &Path) -> anyhow::Result<(Vec<f32>, String)> {
     let len = fs::metadata(path)?.len() as usize;
     anyhow::ensure!(
         len % 4 == 0,
-        "tensor file {} length {len} not 4-aligned — refusing inexact \
+        "object {} length {len} not 4-aligned — refusing inexact \
          restore (A4)",
         path.display()
     );
@@ -107,7 +257,7 @@ fn read_tensor_hashed(path: &Path) -> anyhow::Result<(Vec<f32>, String)> {
     let mut probe = [0u8; 1];
     anyhow::ensure!(
         f.read(&mut probe)? == 0,
-        "tensor file {} grew past its metadata length",
+        "object {} grew past its metadata length",
         path.display()
     );
     let mut h = StreamingSha256::new();
@@ -115,89 +265,238 @@ fn read_tensor_hashed(path: &Path) -> anyhow::Result<(Vec<f32>, String)> {
     Ok((out, h.finalize_hex()))
 }
 
-/// On-disk checkpoint store rooted at a directory.
+fn manifest_name(step: u32, micro: bool) -> String {
+    let tag = if micro { "micro" } else { "ckpt" };
+    format!("{tag}-{step:08}.json")
+}
+
+/// Content-addressed checkpoint store rooted at a directory.
 pub struct CheckpointStore {
     root: PathBuf,
-    /// Keep at most this many full checkpoints (rolling K snapshots).
+    /// Keep at most this many full checkpoints in the active lineage
+    /// (manifest-level rolling prune; blobs die in the GC sweep).
     pub keep: usize,
 }
 
 impl CheckpointStore {
     pub fn open(root: &Path, keep: usize) -> anyhow::Result<CheckpointStore> {
-        fs::create_dir_all(root)?;
-        Ok(CheckpointStore {
+        let store = CheckpointStore {
             root: root.to_path_buf(),
             keep: keep.max(1),
+        };
+        fs::create_dir_all(store.objects_dir())?;
+        fs::create_dir_all(store.lineages_dir())?;
+        if !store.lineage_file().exists() {
+            fs::create_dir_all(store.lineage_dir(0))?;
+            let mut j = Json::obj();
+            j.set("active", 0u64);
+            write_atomic(&store.lineage_file(), &j.pretty())?;
+        } else {
+            fs::create_dir_all(store.lineage_dir(store.active_generation()?))?;
+        }
+        // Retire leftovers from a crash window: a generation whose swap
+        // committed but whose cleanup didn't (commit died between the
+        // LINEAGE.json rename and remove_dir_all), or a staged lineage
+        // whose process died before commit/abort.  At open time only
+        // the active generation is live; anything else would pin its
+        // blobs through the GC's liveness scan forever.
+        let active_dir = store.lineage_dir(store.active_generation()?);
+        let mut swept = false;
+        for dir in store.lineage_dirs()? {
+            if dir != active_dir {
+                fs::remove_dir_all(&dir)?;
+                swept = true;
+            }
+        }
+        if swept {
+            store.gc()?;
+        }
+        store.validate_active()?;
+        Ok(store)
+    }
+
+    fn objects_dir(&self) -> PathBuf {
+        self.root.join("objects")
+    }
+
+    fn lineages_dir(&self) -> PathBuf {
+        self.root.join("lineages")
+    }
+
+    fn lineage_dir(&self, generation: u64) -> PathBuf {
+        self.lineages_dir().join(format!("gen-{generation:08}"))
+    }
+
+    fn lineage_file(&self) -> PathBuf {
+        self.root.join("LINEAGE.json")
+    }
+
+    fn object_path(&self, hash: &str) -> PathBuf {
+        self.objects_dir().join(hash)
+    }
+
+    /// The active lineage generation (re-read from disk on every query
+    /// so long-lived instances observe a swap by another instance).
+    pub fn active_generation(&self) -> anyhow::Result<u64> {
+        let text = fs::read_to_string(self.lineage_file())?;
+        let j = parse(&text)
+            .map_err(|e| anyhow::anyhow!("bad LINEAGE.json: {e}"))?;
+        j.get("active")
+            .and_then(|v| v.as_u64())
+            .ok_or_else(|| anyhow::anyhow!("LINEAGE.json missing 'active'"))
+    }
+
+    fn active_dir(&self) -> anyhow::Result<PathBuf> {
+        Ok(self.lineage_dir(self.active_generation()?))
+    }
+
+    /// IDs laundered out of the active lineage (empty for gen 0 or a
+    /// lineage that was never laundered).
+    pub fn laundered_ids(&self) -> anyhow::Result<Vec<u64>> {
+        read_ids_json(&self.active_dir()?.join("laundered.json"))
+    }
+
+    /// Store one tensor, deduplicating on content: hash the in-memory
+    /// bytes, write the blob only when that hash is new to the store.
+    fn put_tensor(&self, data: &[f32]) -> anyhow::Result<String> {
+        let bytes = simd::as_bytes(data);
+        let mut h = StreamingSha256::new();
+        h.update(bytes);
+        let hash = h.finalize_hex();
+        let path = self.object_path(&hash);
+        if !path.exists() {
+            write_object(&path, bytes)?;
+        }
+        Ok(hash)
+    }
+
+    /// Load one tensor by hash, verifying content (fail-closed).
+    fn get_tensor(
+        &self,
+        step: u32,
+        tensor: &'static str,
+        hash: &str,
+    ) -> anyhow::Result<Vec<f32>> {
+        let path = self.object_path(hash);
+        if !path.exists() {
+            return Err(StoreError::DanglingObject {
+                step,
+                tensor,
+                hash: hash.to_string(),
+            }
+            .into());
+        }
+        let (data, got) = read_object_hashed(&path)?;
+        if got != hash {
+            return Err(StoreError::HashMismatch {
+                step,
+                tensor,
+                expect: hash.to_string(),
+                got,
+            }
+            .into());
+        }
+        Ok(data)
+    }
+
+    fn full_manifest(&self, state: &TrainState) -> anyhow::Result<Json> {
+        let params = self.put_tensor(&state.params)?;
+        let m = self.put_tensor(&state.m)?;
+        let v = self.put_tensor(&state.v)?;
+        let mut meta = Json::obj();
+        meta.set("logical_step", state.logical_step)
+            .set("applied_updates", state.applied_updates)
+            .set("param_count", state.params.len())
+            .set("params_sha256", params.as_str())
+            .set("m_sha256", m.as_str())
+            .set("v_sha256", v.as_str())
+            .set("kind", "full");
+        Ok(meta)
+    }
+
+    /// Save a full checkpoint (weights + optimizer) into the active
+    /// lineage.  Tensors already present in the CAS cost one hash pass
+    /// and zero writes.
+    pub fn save_full(&self, state: &TrainState) -> anyhow::Result<PathBuf> {
+        let meta = self.full_manifest(state)?;
+        let path = self
+            .active_dir()?
+            .join(manifest_name(state.logical_step, false));
+        write_atomic(&path, &meta.pretty())?;
+        self.prune()?;
+        Ok(path)
+    }
+
+    /// Save a weights-only micro-checkpoint (Table 3 row 2).  At a step
+    /// that also has a full checkpoint the params blob dedups to zero
+    /// extra tensor bytes.
+    pub fn save_micro(&self, state: &TrainState) -> anyhow::Result<PathBuf> {
+        let params = self.put_tensor(&state.params)?;
+        let mut meta = Json::obj();
+        meta.set("logical_step", state.logical_step)
+            .set("applied_updates", state.applied_updates)
+            .set("param_count", state.params.len())
+            .set("params_sha256", params.as_str())
+            .set("kind", "micro");
+        let path = self
+            .active_dir()?
+            .join(manifest_name(state.logical_step, true));
+        write_atomic(&path, &meta.pretty())?;
+        Ok(path)
+    }
+
+    fn read_manifest(&self, path: &Path) -> anyhow::Result<Json> {
+        let text = fs::read_to_string(path)?;
+        parse(&text).map_err(|e| {
+            StoreError::CorruptManifest {
+                path: path.display().to_string(),
+                detail: e.to_string(),
+            }
+            .into()
         })
     }
 
-    fn dir_for(&self, step: u32, micro: bool) -> PathBuf {
-        let tag = if micro { "micro" } else { "ckpt" };
-        self.root.join(format!("{tag}-{step:08}"))
+    fn manifest_hash(
+        meta: &Json,
+        path: &Path,
+        tensor: &'static str,
+        key: &str,
+    ) -> anyhow::Result<String> {
+        meta.get(key)
+            .and_then(|j| j.as_str())
+            .map(|s| s.to_string())
+            .ok_or_else(|| {
+                StoreError::CorruptManifest {
+                    path: path.display().to_string(),
+                    detail: format!("missing {tensor} hash field {key}"),
+                }
+                .into()
+            })
     }
 
-    /// Save a full checkpoint (weights + optimizer) at a step boundary.
-    /// Single pass per tensor: the content hash is computed from the
-    /// bytes as they stream to disk.
-    pub fn save_full(&self, state: &TrainState) -> anyhow::Result<PathBuf> {
-        let dir = self.dir_for(state.logical_step, false);
-        fs::create_dir_all(&dir)?;
-        let params_sha = write_tensor_hashed(&dir.join("params.bin"), &state.params)?;
-        let m_sha = write_tensor_hashed(&dir.join("m.bin"), &state.m)?;
-        let v_sha = write_tensor_hashed(&dir.join("v.bin"), &state.v)?;
-        let mut meta = Json::obj();
-        meta.set("logical_step", state.logical_step)
-            .set("applied_updates", state.applied_updates)
-            .set("param_count", state.params.len())
-            .set("params_sha256", params_sha.as_str())
-            .set("m_sha256", m_sha.as_str())
-            .set("v_sha256", v_sha.as_str())
-            .set("kind", "full");
-        fs::write(dir.join("meta.json"), meta.pretty())?;
-        self.gc()?;
-        Ok(dir)
-    }
-
-    /// Save a weights-only micro-checkpoint (Table 3 row 2).
-    pub fn save_micro(&self, state: &TrainState) -> anyhow::Result<PathBuf> {
-        let dir = self.dir_for(state.logical_step, true);
-        fs::create_dir_all(&dir)?;
-        let params_sha = write_tensor_hashed(&dir.join("params.bin"), &state.params)?;
-        let mut meta = Json::obj();
-        meta.set("logical_step", state.logical_step)
-            .set("applied_updates", state.applied_updates)
-            .set("param_count", state.params.len())
-            .set("params_sha256", params_sha.as_str())
-            .set("kind", "micro");
-        fs::write(dir.join("meta.json"), meta.pretty())?;
-        Ok(dir)
-    }
-
-    /// Load a full checkpoint, verifying content hashes (A4: exact
-    /// restoration or hard failure).  Each tensor is read and hashed in
-    /// one pass directly into its f32 buffer.
+    /// Load a full checkpoint from the active lineage, verifying every
+    /// tensor's content hash (A4: exact restoration or typed failure).
     pub fn load_full(&self, step: u32) -> anyhow::Result<TrainState> {
-        let dir = self.dir_for(step, false);
-        let meta = parse(&fs::read_to_string(dir.join("meta.json"))?)
-            .map_err(|e| anyhow::anyhow!("bad checkpoint meta: {e}"))?;
-        let (params, params_sha) = read_tensor_hashed(&dir.join("params.bin"))?;
-        let (m, m_sha) = read_tensor_hashed(&dir.join("m.bin"))?;
-        let (v, v_sha) = read_tensor_hashed(&dir.join("v.bin"))?;
-        for (name, got) in [
-            ("params", &params_sha),
-            ("m", &m_sha),
-            ("v", &v_sha),
-        ] {
-            let expect = meta
-                .get(&format!("{name}_sha256"))
-                .and_then(|j| j.as_str())
-                .ok_or_else(|| anyhow::anyhow!("missing {name}_sha256"))?;
-            anyhow::ensure!(
-                got == expect,
-                "checkpoint {name} hash mismatch at step {step} — \
-                 refusing inexact restore (A4)"
-            );
+        let path = self.active_dir()?.join(manifest_name(step, false));
+        if !path.exists() {
+            return Err(StoreError::MissingCheckpoint { step }.into());
         }
+        let meta = self.read_manifest(&path)?;
+        let params = self.get_tensor(
+            step,
+            "params",
+            &Self::manifest_hash(&meta, &path, "params", "params_sha256")?,
+        )?;
+        let m = self.get_tensor(
+            step,
+            "m",
+            &Self::manifest_hash(&meta, &path, "m", "m_sha256")?,
+        )?;
+        let v = self.get_tensor(
+            step,
+            "v",
+            &Self::manifest_hash(&meta, &path, "v", "v_sha256")?,
+        )?;
         Ok(TrainState {
             params,
             m,
@@ -206,16 +505,24 @@ impl CheckpointStore {
                 .get("applied_updates")
                 .and_then(|j| j.as_u64())
                 .unwrap_or(0) as u32,
-            logical_step: step,
+            logical_step: meta
+                .get("logical_step")
+                .and_then(|j| j.as_u64())
+                .unwrap_or(step as u64) as u32,
         })
     }
 
-    /// All full-checkpoint steps, ascending.
-    pub fn list_full(&self) -> anyhow::Result<Vec<u32>> {
+    fn list_full_in(dir: &Path) -> anyhow::Result<Vec<u32>> {
         let mut steps = Vec::new();
-        for e in fs::read_dir(&self.root)? {
+        if !dir.exists() {
+            return Ok(steps);
+        }
+        for e in fs::read_dir(dir)? {
             let name = e?.file_name().to_string_lossy().into_owned();
-            if let Some(s) = name.strip_prefix("ckpt-") {
+            if let Some(s) = name
+                .strip_prefix("ckpt-")
+                .and_then(|s| s.strip_suffix(".json"))
+            {
                 if let Ok(step) = s.parse() {
                     steps.push(step);
                 }
@@ -225,8 +532,15 @@ impl CheckpointStore {
         Ok(steps)
     }
 
+    /// All full-checkpoint steps in the active lineage, ascending.
+    pub fn list_full(&self) -> anyhow::Result<Vec<u32>> {
+        Self::list_full_in(&self.active_dir()?)
+    }
+
     /// Latest full checkpoint at or before `step` (Alg. A.7 line 14:
-    /// "load nearest checkpoint C_k").
+    /// "load nearest checkpoint C_k").  After a launder swap this serves
+    /// the laundered lineage — nearest-checkpoint selection is lineage
+    /// aware by construction.
     pub fn nearest_at_or_before(&self, step: u32) -> anyhow::Result<Option<u32>> {
         Ok(self
             .list_full()?
@@ -235,25 +549,288 @@ impl CheckpointStore {
             .max())
     }
 
-    /// Bytes on disk for a full checkpoint (Table 3 accounting).
+    /// Logical bytes of a full checkpoint (Table 3 accounting): the sum
+    /// of its referenced object sizes.  Shared blobs are counted here
+    /// per reference; `stats()` reports the physical dedup.
     pub fn full_checkpoint_bytes(&self, step: u32) -> anyhow::Result<u64> {
-        let dir = self.dir_for(step, false);
-        let mut total = 0;
-        for e in fs::read_dir(dir)? {
-            total += e?.metadata()?.len();
+        let path = self.active_dir()?.join(manifest_name(step, false));
+        if !path.exists() {
+            return Err(StoreError::MissingCheckpoint { step }.into());
+        }
+        let meta = self.read_manifest(&path)?;
+        let mut total = 0u64;
+        for key in ["params_sha256", "m_sha256", "v_sha256"] {
+            if let Some(hash) = meta.get(key).and_then(|j| j.as_str()) {
+                total += fs::metadata(self.object_path(hash))
+                    .map(|md| md.len())
+                    .unwrap_or(0);
+            }
         }
         Ok(total)
     }
 
-    fn gc(&self) -> anyhow::Result<()> {
-        let steps = self.list_full()?;
-        if steps.len() > self.keep {
-            for &s in &steps[..steps.len() - self.keep] {
-                fs::remove_dir_all(self.dir_for(s, false))?;
+    /// Rolling manifest prune (the old `keep` policy) + GC sweep when
+    /// anything was dropped.
+    fn prune(&self) -> anyhow::Result<()> {
+        let dir = self.active_dir()?;
+        let steps = Self::list_full_in(&dir)?;
+        if steps.len() <= self.keep {
+            return Ok(());
+        }
+        for &s in &steps[..steps.len() - self.keep] {
+            fs::remove_file(dir.join(manifest_name(s, false)))?;
+        }
+        self.gc()?;
+        Ok(())
+    }
+
+    fn lineage_dirs(&self) -> anyhow::Result<Vec<PathBuf>> {
+        let mut dirs = Vec::new();
+        for e in fs::read_dir(self.lineages_dir())? {
+            let e = e?;
+            if e.file_type()?.is_dir() {
+                dirs.push(e.path());
+            }
+        }
+        dirs.sort();
+        Ok(dirs)
+    }
+
+    /// Every (hash, referencing-manifest-count) across ALL lineage
+    /// directories — active, staged, and not-yet-retired alike.  GC
+    /// liveness; fail-closed: an unparseable manifest aborts the scan
+    /// (never delete blobs whose liveness is unknown).
+    fn referenced_hashes(&self) -> anyhow::Result<HashMap<String, u64>> {
+        let mut refs: HashMap<String, u64> = HashMap::new();
+        for dir in self.lineage_dirs()? {
+            for e in fs::read_dir(&dir)? {
+                let path = e?.path();
+                let name = path
+                    .file_name()
+                    .map(|n| n.to_string_lossy().into_owned())
+                    .unwrap_or_default();
+                let is_manifest = (name.starts_with("ckpt-")
+                    || name.starts_with("micro-"))
+                    && name.ends_with(".json");
+                if !is_manifest {
+                    continue;
+                }
+                let meta = self.read_manifest(&path)?;
+                for key in ["params_sha256", "m_sha256", "v_sha256"] {
+                    if let Some(h) = meta.get(key).and_then(|j| j.as_str()) {
+                        *refs.entry(h.to_string()).or_insert(0) += 1;
+                    }
+                }
+            }
+        }
+        Ok(refs)
+    }
+
+    /// Refcounted garbage collection: remove every object no manifest
+    /// in any live lineage references (plus stale `.tmp` leftovers).
+    pub fn gc(&self) -> anyhow::Result<GcStats> {
+        let live = self.referenced_hashes()?;
+        let mut stats = GcStats {
+            removed_objects: 0,
+            removed_bytes: 0,
+            live_objects: 0,
+        };
+        for e in fs::read_dir(self.objects_dir())? {
+            let e = e?;
+            let path = e.path();
+            let name = e.file_name().to_string_lossy().into_owned();
+            if name.ends_with(".tmp") {
+                let _ = fs::remove_file(&path); // interrupted writer
+                continue;
+            }
+            if live.contains_key(&name) {
+                stats.live_objects += 1;
+            } else {
+                stats.removed_bytes += e.metadata().map(|m| m.len()).unwrap_or(0);
+                stats.removed_objects += 1;
+                fs::remove_file(&path)?;
+            }
+        }
+        Ok(stats)
+    }
+
+    /// Store-wide accounting (objects, dedup ratio, lineage state).
+    pub fn stats(&self) -> anyhow::Result<CasStats> {
+        let refs = self.referenced_hashes()?;
+        let mut objects = 0u64;
+        let mut object_bytes = 0u64;
+        let mut size_of: HashMap<String, u64> = HashMap::new();
+        for e in fs::read_dir(self.objects_dir())? {
+            let e = e?;
+            let name = e.file_name().to_string_lossy().into_owned();
+            if name.ends_with(".tmp") {
+                continue;
+            }
+            let len = e.metadata()?.len();
+            objects += 1;
+            object_bytes += len;
+            size_of.insert(name, len);
+        }
+        let mut manifests = 0u64;
+        for dir in self.lineage_dirs()? {
+            for e in fs::read_dir(&dir)? {
+                let name = e?.file_name().to_string_lossy().into_owned();
+                if (name.starts_with("ckpt-") || name.starts_with("micro-"))
+                    && name.ends_with(".json")
+                {
+                    manifests += 1;
+                }
+            }
+        }
+        let referenced_bytes: u64 = refs
+            .iter()
+            .map(|(h, n)| size_of.get(h).copied().unwrap_or(0) * n)
+            .sum();
+        Ok(CasStats {
+            objects,
+            object_bytes,
+            manifests,
+            referenced_bytes,
+            dedup_ratio: if referenced_bytes > 0 {
+                object_bytes as f64 / referenced_bytes as f64
+            } else {
+                1.0
+            },
+            generation: self.active_generation()?,
+            laundered_ids: self.laundered_ids()?.len() as u64,
+        })
+    }
+
+    /// Structural validation of the active lineage: every manifest must
+    /// parse and every referenced object must exist.  Content hashes are
+    /// verified on load; `open` checks reachability only.
+    fn validate_active(&self) -> anyhow::Result<()> {
+        let dir = self.active_dir()?;
+        for step in Self::list_full_in(&dir)? {
+            let path = dir.join(manifest_name(step, false));
+            let meta = self.read_manifest(&path)?;
+            for (tensor, key) in [
+                ("params", "params_sha256"),
+                ("m", "m_sha256"),
+                ("v", "v_sha256"),
+            ] {
+                let hash =
+                    Self::manifest_hash(&meta, &path, tensor, key)?;
+                if !self.object_path(&hash).exists() {
+                    return Err(StoreError::DanglingObject {
+                        step,
+                        tensor,
+                        hash,
+                    }
+                    .into());
+                }
             }
         }
         Ok(())
     }
+
+    /// Begin staging the successor lineage (the laundering target).  An
+    /// aborted earlier stage at the same generation is discarded.
+    ///
+    /// While a stage is live, do not `open` another store on the same
+    /// root: `open` retires every non-active lineage directory
+    /// (crash-leftover cleanup) and would sweep the stage.  The
+    /// controller guarantees this by holding the system lock across the
+    /// whole launder pass.
+    pub fn begin_lineage(&self) -> anyhow::Result<LineageStage<'_>> {
+        let generation = self.active_generation()? + 1;
+        let dir = self.lineage_dir(generation);
+        if dir.exists() {
+            fs::remove_dir_all(&dir)?;
+        }
+        fs::create_dir_all(&dir)?;
+        Ok(LineageStage {
+            store: self,
+            generation,
+            dir,
+        })
+    }
+}
+
+/// A staged (not yet active) lineage generation.  Blobs written through
+/// the stage land in the shared CAS immediately — they are live (the
+/// staged directory's manifests reference them) but invisible to
+/// readers until `commit` swaps `LINEAGE.json`.
+pub struct LineageStage<'a> {
+    store: &'a CheckpointStore,
+    pub generation: u64,
+    dir: PathBuf,
+}
+
+impl LineageStage<'_> {
+    /// Write a laundered checkpoint into the staged lineage.
+    pub fn save_full(&self, state: &TrainState) -> anyhow::Result<PathBuf> {
+        let meta = self.store.full_manifest(state)?;
+        let path = self.dir.join(manifest_name(state.logical_step, false));
+        write_atomic(&path, &meta.pretty())?;
+        Ok(path)
+    }
+
+    /// Adopt a clean checkpoint from the active lineage: copy its
+    /// manifest verbatim — the blobs are shared, zero tensor bytes move.
+    pub fn adopt_full(&self, step: u32) -> anyhow::Result<()> {
+        let src = self
+            .store
+            .active_dir()?
+            .join(manifest_name(step, false));
+        if !src.exists() {
+            return Err(StoreError::MissingCheckpoint { step }.into());
+        }
+        fs::copy(&src, self.dir.join(manifest_name(step, false)))?;
+        Ok(())
+    }
+
+    /// Full-checkpoint steps staged so far (adopted + written).
+    pub fn list_full(&self) -> anyhow::Result<Vec<u32>> {
+        CheckpointStore::list_full_in(&self.dir)
+    }
+
+    /// Atomically make this lineage active: persist its laundered
+    /// closure, swap `LINEAGE.json` (tmp + rename), retire the previous
+    /// generation's manifests and sweep unreferenced blobs.
+    pub fn commit(
+        self,
+        laundered: &[u64],
+        laundered_at_step: u32,
+    ) -> anyhow::Result<()> {
+        let previous = self.store.active_generation()?;
+        let mut lj = ids_json(laundered);
+        lj.set("laundered_at_step", laundered_at_step)
+            .set("parent_generation", previous);
+        write_atomic(&self.dir.join("laundered.json"), &lj.pretty())?;
+        let mut j = Json::obj();
+        j.set("active", self.generation);
+        // the swap point: readers see the old lineage before this
+        // rename and the complete new one after it
+        write_atomic(&self.store.lineage_file(), &j.pretty())?;
+        fs::remove_dir_all(self.store.lineage_dir(previous))?;
+        self.store.gc()?;
+        Ok(())
+    }
+
+    /// Discard the staged lineage (audit gate refused the swap) and
+    /// sweep any blobs only it referenced.
+    pub fn abort(self) -> anyhow::Result<()> {
+        fs::remove_dir_all(&self.dir)?;
+        self.store.gc()?;
+        Ok(())
+    }
+}
+
+/// Convenience for tests: distinct blob hashes a state would reference.
+pub fn state_tensor_hashes(state: &TrainState) -> HashSet<String> {
+    let mut out = HashSet::new();
+    for t in [&state.params, &state.m, &state.v] {
+        let mut h = StreamingSha256::new();
+        h.update(simd::as_bytes(t));
+        out.insert(h.finalize_hex());
+    }
+    out
 }
 
 #[cfg(test)]
@@ -274,6 +851,10 @@ mod tests {
         }
     }
 
+    fn count_objects(dir: &Path) -> usize {
+        fs::read_dir(dir.join("objects")).unwrap().count()
+    }
+
     #[test]
     fn save_load_bit_exact() {
         let dir = tempdir("ckpt");
@@ -286,16 +867,12 @@ mod tests {
     }
 
     #[test]
-    fn streamed_hashes_match_rehash() {
-        // the hash-while-writing shortcut must equal a from-scratch hash
+    fn manifest_hashes_match_canonical_tensor_hashes() {
         let dir = tempdir("ckpt-hash");
         let store = CheckpointStore::open(&dir, 10).unwrap();
         let s = state(9, 333, 2);
-        let cdir = store.save_full(&s).unwrap();
-        let meta = parse(
-            &std::fs::read_to_string(cdir.join("meta.json")).unwrap(),
-        )
-        .unwrap();
+        let mpath = store.save_full(&s).unwrap();
+        let meta = parse(&std::fs::read_to_string(&mpath).unwrap()).unwrap();
         for (name, tensor) in
             [("params", &s.params), ("m", &s.m), ("v", &s.v)]
         {
@@ -307,7 +884,11 @@ mod tests {
             assert_eq!(
                 stored,
                 crate::util::bytes::state_hash_full(tensor),
-                "{name} hash must equal the canonical tensor hash"
+                "{name} object key must equal the canonical tensor hash"
+            );
+            assert!(
+                dir.join("objects").join(stored).exists(),
+                "{name} blob stored under its hash"
             );
         }
     }
@@ -327,38 +908,177 @@ mod tests {
     }
 
     #[test]
-    fn tamper_fails_closed() {
+    fn cas_dedups_shared_tensors() {
+        // two checkpoints sharing unchanged optimizer tensors store each
+        // distinct blob once: object count < naive file count
+        let dir = tempdir("ckpt-dedup");
+        let store = CheckpointStore::open(&dir, 10).unwrap();
+        let s1 = state(4, 512, 1);
+        let mut s2 = s1.clone();
+        s2.logical_step = 2;
+        s2.params = state(5, 512, 2).params; // only the weights moved
+        store.save_full(&s1).unwrap();
+        store.save_full(&s2).unwrap();
+        let naive_files = 6; // 2 checkpoints x 3 tensors
+        assert_eq!(count_objects(&dir), 4, "m/v blobs shared");
+        assert!(count_objects(&dir) < naive_files);
+        let st = store.stats().unwrap();
+        assert_eq!(st.objects, 4);
+        assert_eq!(st.manifests, 2);
+        assert!(
+            st.dedup_ratio < 1.0,
+            "sharing must show up in the ratio: {}",
+            st.dedup_ratio
+        );
+        // micro checkpoint at a full-checkpoint step adds ZERO blobs
+        store.save_micro(&s2).unwrap();
+        assert_eq!(count_objects(&dir), 4);
+        // both checkpoints restore exactly despite sharing
+        assert!(store.load_full(1).unwrap().bits_equal(&s1));
+        assert!(store.load_full(2).unwrap().bits_equal(&s2));
+    }
+
+    #[test]
+    fn corrupted_blob_fails_closed_with_hash_mismatch() {
         let dir = tempdir("ckpt-tamper");
         let store = CheckpointStore::open(&dir, 10).unwrap();
         let s = state(2, 100, 7);
-        let cdir = store.save_full(&s).unwrap();
-        let pbin = cdir.join("params.bin");
+        let mpath = store.save_full(&s).unwrap();
+        let meta = parse(&fs::read_to_string(&mpath).unwrap()).unwrap();
+        let phash = meta.get("params_sha256").unwrap().as_str().unwrap();
+        let pbin = dir.join("objects").join(phash);
         let mut raw = fs::read(&pbin).unwrap();
         raw[13] ^= 1;
         fs::write(&pbin, raw).unwrap();
-        assert!(store.load_full(7).is_err(), "must refuse inexact restore");
+        let err = store.load_full(7).unwrap_err();
+        match err.downcast_ref::<StoreError>() {
+            Some(StoreError::HashMismatch { step, tensor, .. }) => {
+                assert_eq!(*step, 7);
+                assert_eq!(*tensor, "params");
+            }
+            other => panic!("expected typed HashMismatch, got {other:?}"),
+        }
     }
 
     #[test]
-    fn truncated_tensor_fails_closed() {
+    fn truncated_blob_fails_closed() {
         let dir = tempdir("ckpt-trunc");
         let store = CheckpointStore::open(&dir, 10).unwrap();
         let s = state(3, 64, 1);
-        let cdir = store.save_full(&s).unwrap();
-        let pbin = cdir.join("m.bin");
-        let raw = fs::read(&pbin).unwrap();
-        fs::write(&pbin, &raw[..raw.len() - 2]).unwrap(); // unaligned too
+        let mpath = store.save_full(&s).unwrap();
+        let meta = parse(&fs::read_to_string(&mpath).unwrap()).unwrap();
+        let mhash = meta.get("m_sha256").unwrap().as_str().unwrap();
+        let mbin = dir.join("objects").join(mhash);
+        let raw = fs::read(&mbin).unwrap();
+        fs::write(&mbin, &raw[..raw.len() - 2]).unwrap(); // unaligned too
         assert!(store.load_full(1).is_err());
+        // 4-aligned truncation is caught by the hash, not the length
+        fs::write(&mbin, &raw[..raw.len() - 8]).unwrap();
+        let err = store.load_full(1).unwrap_err();
+        assert!(matches!(
+            err.downcast_ref::<StoreError>(),
+            Some(StoreError::HashMismatch { tensor: "m", .. })
+        ));
     }
 
     #[test]
-    fn rolling_gc_keeps_latest() {
+    fn open_reports_dangling_reference_as_typed_error() {
+        let dir = tempdir("ckpt-dangling");
+        {
+            let store = CheckpointStore::open(&dir, 10).unwrap();
+            let s = state(6, 80, 3);
+            let mpath = store.save_full(&s).unwrap();
+            let meta =
+                parse(&fs::read_to_string(&mpath).unwrap()).unwrap();
+            let vhash = meta.get("v_sha256").unwrap().as_str().unwrap();
+            fs::remove_file(dir.join("objects").join(vhash)).unwrap();
+        }
+        let err = CheckpointStore::open(&dir, 10).unwrap_err();
+        match err.downcast_ref::<StoreError>() {
+            Some(StoreError::DanglingObject { step, tensor, .. }) => {
+                assert_eq!(*step, 3);
+                assert_eq!(*tensor, "v");
+            }
+            other => panic!("expected typed DanglingObject, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn rolling_prune_keeps_latest_and_gcs_blobs() {
         let dir = tempdir("ckpt-gc");
         let store = CheckpointStore::open(&dir, 3).unwrap();
         for step in [1, 2, 3, 4, 5] {
             store.save_full(&state(step as u64, 50, step)).unwrap();
         }
         assert_eq!(store.list_full().unwrap(), vec![3, 4, 5]);
+        // distinct random tensors: exactly the 9 live blobs remain
+        assert_eq!(count_objects(&dir), 9);
+        assert!(store.load_full(3).is_ok());
+        assert!(store.load_full(1).is_err(), "pruned manifest is gone");
+    }
+
+    #[test]
+    fn gc_never_collects_objects_referenced_by_any_live_lineage() {
+        let dir = tempdir("ckpt-gc-lineage");
+        let store = CheckpointStore::open(&dir, 10).unwrap();
+        let s0 = state(11, 64, 0);
+        let s1 = state(12, 64, 4);
+        store.save_full(&s0).unwrap();
+        store.save_full(&s1).unwrap();
+
+        // stage a successor lineage that adopts ONLY step 0 and writes
+        // one new laundered checkpoint
+        let stage = store.begin_lineage().unwrap();
+        stage.adopt_full(0).unwrap();
+        let laundered = state(13, 64, 4);
+        stage.save_full(&laundered).unwrap();
+
+        // while both lineages are live, a sweep removes nothing that
+        // either references — s1's blobs are still held by gen 0
+        let before = count_objects(&dir);
+        let gcs = store.gc().unwrap();
+        assert_eq!(gcs.removed_objects, 0);
+        assert_eq!(count_objects(&dir), before);
+        assert!(store.load_full(4).unwrap().bits_equal(&s1));
+
+        // commit: gen 0 retires, s1's unshared blobs are collected,
+        // adopted s0 survives via the shared manifest
+        stage.commit(&[7, 8], 1).unwrap();
+        assert_eq!(store.active_generation().unwrap(), 1);
+        assert_eq!(store.laundered_ids().unwrap(), vec![7, 8]);
+        assert!(store.load_full(0).unwrap().bits_equal(&s0));
+        assert!(store.load_full(4).unwrap().bits_equal(&laundered));
+        let live: HashSet<String> = state_tensor_hashes(&s0)
+            .union(&state_tensor_hashes(&laundered))
+            .cloned()
+            .collect();
+        assert_eq!(count_objects(&dir), live.len());
+        for h in state_tensor_hashes(&s1)
+            .difference(&state_tensor_hashes(&laundered))
+        {
+            if !live.contains(h) {
+                assert!(
+                    !dir.join("objects").join(h).exists(),
+                    "retired-only blob must be collected"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn abort_discards_stage_and_preserves_active() {
+        let dir = tempdir("ckpt-abort");
+        let store = CheckpointStore::open(&dir, 10).unwrap();
+        let s = state(21, 64, 0);
+        store.save_full(&s).unwrap();
+        let stage = store.begin_lineage().unwrap();
+        stage.save_full(&state(22, 64, 2)).unwrap();
+        stage.abort().unwrap();
+        assert_eq!(store.active_generation().unwrap(), 0);
+        assert_eq!(store.list_full().unwrap(), vec![0]);
+        // only the active checkpoint's blobs remain
+        assert_eq!(count_objects(&dir), state_tensor_hashes(&s).len());
+        assert!(store.load_full(0).unwrap().bits_equal(&s));
     }
 
     #[test]

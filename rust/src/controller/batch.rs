@@ -34,7 +34,7 @@
 
 use std::collections::HashSet;
 
-use crate::audit::{run_audits, ModelView};
+use crate::audit::{run_audits_with, shared_evals, ModelView};
 use crate::manifest::ActionKind;
 use crate::replay::{offending_steps, replay_filter, ReplayOptions, ReplayOutcome};
 use crate::util::json::Json;
@@ -59,7 +59,12 @@ pub enum SharedMode {
 /// member closures (plus everything already forgotten), the earliest
 /// step that union influences, and how to rebuild from before it.
 pub struct SharedReplayPlan {
+    /// Member closures ∪ cumulative forgotten — determines `target`.
     pub union: HashSet<u64>,
+    /// `union` ∪ the active lineage's laundered closure — what the
+    /// rebuild actually filters (laundered influence is absent from
+    /// every checkpoint but still present in the WAL tail).
+    pub filter: HashSet<u64>,
     pub target: u32,
     pub mode: SharedMode,
 }
@@ -86,6 +91,8 @@ impl BatchPlanner {
         let target = *off.first().ok_or_else(|| {
             anyhow::anyhow!("batch union has no offending steps")
         })?;
+        let mut filter = union.clone();
+        filter.extend(sys.laundered.iter().copied());
         // ring mode needs the logged trajectory intact, the resumed
         // tail (without the resume, reverting alone would discard
         // retain-only progress — not the sequential semantics), and
@@ -102,6 +109,7 @@ impl BatchPlanner {
                 if target >= earliest && needed <= sys.ring.available() {
                     return Ok(SharedReplayPlan {
                         union,
+                        filter,
                         target,
                         mode: SharedMode::RingRevert { steps: needed },
                     });
@@ -116,6 +124,7 @@ impl BatchPlanner {
             .ok_or(UnlearnError::NoCheckpoint { target })?;
         Ok(SharedReplayPlan {
             union,
+            filter,
             target,
             mode: SharedMode::Replay { from_checkpoint },
         })
@@ -138,13 +147,13 @@ fn run_shared(
                 &sys.state,
                 &sys.records,
                 &sys.idmap,
-                &sp.union,
+                &sp.filter,
                 Some(&sys.pins),
                 &ReplayOptions::default(),
             )
         }
         SharedMode::Replay { from_checkpoint } => {
-            replay_tail(sys, from_checkpoint, &sp.union)
+            replay_tail(sys, from_checkpoint, &sp.filter)
         }
     }
 }
@@ -297,6 +306,7 @@ pub fn execute_batch(
                 for m in &coalesced {
                     sys.forgotten.extend(m.plan.closure.iter().copied());
                 }
+                sys.persist_forgotten()?;
                 replays_run = 1;
                 applied_steps = outcome.invariants.applied_steps;
                 let action = match sp.mode {
@@ -314,6 +324,20 @@ pub fn execute_batch(
                 // commits with its audit report attached pass or fail
                 // (the state is exact either way) — a failed audit is
                 // surfaced as a typed escalation on that member.
+                //
+                // Every member audits the SAME post-rebuild state, so
+                // the request-independent chunks (MIA retain controls,
+                // utility PPL) are evaluated once here and reused —
+                // only the per-request forget probes run per member.
+                // Bit-transparent: the chunks are pure functions of
+                // (state, id list).  On a precompute failure fall back
+                // to fully-inline audits so one bad eval cannot sink
+                // the whole batch.
+                let shared = shared_evals(
+                    &sys.audit_ctx(&[]),
+                    ModelView::Base(&sys.state.params),
+                )
+                .ok();
                 let n = coalesced.len();
                 for m in &coalesced {
                     let req = &reqs[m.idx];
@@ -324,9 +348,10 @@ pub fn execute_batch(
                         continue;
                     }
                     let res = (|| -> anyhow::Result<ControllerOutcome> {
-                        let audit = run_audits(
+                        let audit = run_audits_with(
                             &sys.audit_ctx(&m.plan.closure),
                             ModelView::Base(&sys.state.params),
+                            shared.as_ref(),
                         )?;
                         let mut details = Json::obj();
                         details

@@ -8,7 +8,6 @@
 use std::collections::HashSet;
 
 use crate::audit::{run_audits, AuditReport, ModelView};
-use crate::checkpoint::CheckpointStore;
 use crate::curvature::hot_path_unlearn;
 use crate::manifest::ActionKind;
 use crate::replay::{replay_filter, ReplayOptions, ReplayOutcome};
@@ -88,11 +87,7 @@ pub(super) fn replay_tail(
     from_checkpoint: u32,
     filter: &HashSet<u64>,
 ) -> anyhow::Result<ReplayOutcome> {
-    let store = CheckpointStore::open(
-        &sys.cfg.run_dir.join("ckpt"),
-        sys.cfg.checkpoint_keep,
-    )?;
-    let ck = store.load_full(from_checkpoint)?;
+    let ck = sys.store()?.load_full(from_checkpoint)?;
     replay_filter(
         sys.rt,
         &sys.corpus,
@@ -116,10 +111,14 @@ impl Executor {
         let closure = &plan.closure;
         let closure_set: HashSet<u64> = closure.iter().copied().collect();
         // Exactness across a request *stream*: rebuilds must filter the
-        // cumulative union, or a later replay would resurrect data a
-        // previous action already erased.
+        // cumulative union — closure ∪ forgotten ∪ laundered — or a
+        // later replay would resurrect data a previous action (or a
+        // retired lineage) already erased.  Only closure ∪ forgotten
+        // moves the rebuild TARGET; the laundered set is already absent
+        // from every active-lineage checkpoint.
         let mut effective = closure_set.clone();
         effective.extend(sys.forgotten.iter().copied());
+        effective.extend(sys.laundered.iter().copied());
 
         let mut escalations: Vec<UnlearnError> = plan.notes.clone();
         let mut deleted_cohorts: Vec<u32> = Vec::new();
@@ -211,7 +210,7 @@ impl Executor {
                         ModelView::Base(&sys.state.params),
                     )?;
                     if audit.pass() {
-                        sys.forgotten.extend(closure.iter().copied());
+                        sys.commit_forgotten(closure.iter().copied())?;
                         sys.append_manifest(
                             req,
                             closure,
@@ -283,7 +282,7 @@ impl Executor {
                     if audit.pass() {
                         sys.state = candidate;
                         sys.diverged = true;
-                        sys.forgotten.extend(closure.iter().copied());
+                        sys.commit_forgotten(closure.iter().copied())?;
                         sys.append_manifest(
                             req,
                             closure,
@@ -305,13 +304,23 @@ impl Executor {
                     });
                 }
 
+                // Laundering is request-independent maintenance, never
+                // part of a forget request's fallback chain — route it
+                // through `launder::execute_launder` instead.
+                PlanStep::Launder { .. } => {
+                    return Err(anyhow::anyhow!(
+                        "launder steps are not executable inside a \
+                         forget-request chain"
+                    ));
+                }
+
                 // ---- path 4: exact replay (last resort) --------------
                 PlanStep::ExactReplay { from_checkpoint, .. } => {
                     let outcome =
                         replay_tail(sys, *from_checkpoint, &effective)?;
                     sys.state = outcome.state;
                     sys.diverged = true;
-                    sys.forgotten.extend(closure.iter().copied());
+                    sys.commit_forgotten(closure.iter().copied())?;
                     let audit = run_audits(
                         &sys.audit_ctx(closure),
                         ModelView::Base(&sys.state.params),
@@ -396,7 +405,7 @@ impl Executor {
         // state IS the retain-only state (Thm. A.11 + A.1), exactly like
         // the replay last resort commits regardless of its audit.
         if let Some((action, details, audit)) = mutated_attempt {
-            sys.forgotten.extend(closure.iter().copied());
+            sys.commit_forgotten(closure.iter().copied())?;
             sys.append_manifest(
                 req,
                 closure,

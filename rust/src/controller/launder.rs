@@ -1,0 +1,368 @@
+//! Checkpoint laundering (the compaction path): fold the cumulative
+//! forgotten closure into a rewritten checkpoint lineage so steady-state
+//! unlearning cost stops growing with the total number of forgotten
+//! users.
+//!
+//! One filtered tail replay from the nearest clean checkpoint (Thm. A.1
+//! — the same primitive every exact path uses) simultaneously rebuilds
+//! the serving state and, via the snapshot sink of
+//! [`crate::replay::replay_filter_with_snapshots`], emits the
+//! retain-only replacement for every contaminated checkpoint.  Clean
+//! checkpoints (those preceding all forgotten influence) are *adopted*
+//! into the staged lineage — a manifest copy, zero tensor bytes, full
+//! CAS sharing.  The swap is audit-gated: the candidate state is
+//! audited before `LINEAGE.json` flips, and a failed audit on a
+//! state-*changing* swap refuses it, leaving store and serving state
+//! untouched (a bit-unchanged candidate commits with the report
+//! attached — see the gate comment in `execute_launder`).
+//!
+//! After a committed swap:
+//! - every checkpoint in the active lineage is retain-only w.r.t. the
+//!   laundered closure, so rebuild targets are computed from the *new*
+//!   request alone — plans cost as if no one had ever been forgotten;
+//! - the laundered closure persists in the lineage (`laundered.json`)
+//!   and keeps being filtered out of tail replays (WAL records still
+//!   reference those sample IDs — exactness needs the filter, the
+//!   *cost* win comes from the later rebuild start);
+//! - the delta ring is cleared: a laundered base diverges from the
+//!   logged trajectory its patches describe;
+//! - the in-memory `forgotten` set resets to empty.
+
+use std::time::Instant;
+
+use crate::audit::{run_audits, AuditReport, ModelView};
+use crate::manifest::ActionKind;
+use crate::replay::{
+    offending_steps, replay_filter_with_snapshots, ReplayOptions,
+};
+use crate::util::json::Json;
+
+use super::plan::{LaunderPolicy, Planner, UnlearnError};
+use super::{ForgetRequest, UnlearnSystem, Urgency};
+
+/// What a laundering pass did.
+#[derive(Debug, Clone)]
+pub struct LaunderOutcome {
+    /// False when the idempotency key had already been executed.
+    pub executed: bool,
+    /// Active lineage generation after the pass.
+    pub generation: u64,
+    /// Checkpoint the filtered rebuild started from.
+    pub from_checkpoint: u32,
+    /// First logical step the forgotten closure influenced.
+    pub target_step: u32,
+    /// IDs moved from the in-memory forgotten set into the lineage.
+    pub laundered_now: usize,
+    /// Total IDs the active lineage has laundered (cumulative).
+    pub laundered_total: usize,
+    /// Contaminated checkpoints rewritten from filtered snapshots.
+    pub checkpoints_written: usize,
+    /// Clean checkpoints adopted by manifest copy (zero tensor bytes).
+    pub checkpoints_adopted: usize,
+    /// Optimizer updates the filtered rebuild applied.
+    pub applied_steps: u32,
+    /// Audit of the candidate state (gates the swap).
+    pub audit: Option<AuditReport>,
+    pub wall_secs: f64,
+    pub details: Json,
+}
+
+/// Execute a laundering pass against the live system.
+///
+/// `policy` thresholds whether the pass runs at all (`force` bypasses
+/// the threshold but never the audit gate or the exactness
+/// preconditions).  `id` is the manifest idempotency key.
+pub fn execute_launder(
+    sys: &mut UnlearnSystem<'_>,
+    id: &str,
+    policy: &LaunderPolicy,
+    force: bool,
+) -> anyhow::Result<LaunderOutcome> {
+    let t0 = Instant::now();
+    if sys.manifest.was_executed(id) {
+        return Ok(LaunderOutcome {
+            executed: false,
+            generation: 0,
+            from_checkpoint: 0,
+            target_step: 0,
+            laundered_now: 0,
+            laundered_total: sys.laundered.len(),
+            checkpoints_written: 0,
+            checkpoints_adopted: 0,
+            applied_steps: 0,
+            audit: None,
+            wall_secs: t0.elapsed().as_secs_f64(),
+            details: Json::obj(),
+        });
+    }
+    let mut forgotten: Vec<u64> = sys.forgotten.iter().copied().collect();
+    forgotten.sort_unstable();
+    if forgotten.is_empty() {
+        return Err(UnlearnError::NothingToLaunder.into());
+    }
+
+    let store = sys.store()?;
+    let off = offending_steps(&sys.records, &sys.idmap, &sys.forgotten)?;
+    let target = match off.first() {
+        Some(&t) => t,
+        None => {
+            // forgotten data never influenced the base: nothing is
+            // contaminated, resetting the set is exact and free.  Still
+            // a manifest-recorded action — the reset must be auditable.
+            return commit_reset_only(sys, id, &forgotten, t0);
+        }
+    };
+
+    let effective_policy = if force {
+        LaunderPolicy {
+            min_extra_replay_records: 0,
+        }
+    } else {
+        policy.clone()
+    };
+    let planned = {
+        let view = sys.view()?;
+        Planner::plan_launder(&view, &effective_policy)
+            .map_err(anyhow::Error::new)?
+    };
+    let planned = match planned {
+        Some(p) => p,
+        None => {
+            return Err(anyhow::anyhow!(
+                "laundering below policy threshold (< {} extra replay \
+                 records) — pass force to override",
+                policy.min_extra_replay_records
+            ))
+        }
+    };
+    let from_checkpoint = match planned.step {
+        super::plan::PlanStep::Launder { from_checkpoint, .. } => {
+            from_checkpoint
+        }
+        ref other => {
+            return Err(anyhow::anyhow!(
+                "plan_launder returned a non-launder step {other:?}"
+            ))
+        }
+    };
+
+    // the rebuild filter needs the previous lineage's laundered closure
+    // too: the WAL tail still references those samples
+    let mut filter = sys.forgotten.clone();
+    filter.extend(sys.laundered.iter().copied());
+
+    let checkpoints = store.list_full()?;
+    let clean: Vec<u32> =
+        checkpoints.iter().copied().filter(|&s| s <= target).collect();
+    let contaminated: Vec<u32> =
+        checkpoints.iter().copied().filter(|&s| s > target).collect();
+
+    // ---- stage the successor lineage --------------------------------
+    let stage = store.begin_lineage()?;
+    let generation = stage.generation;
+    let staged = (|| -> anyhow::Result<crate::checkpoint::TrainState> {
+        for &s in &clean {
+            stage.adopt_full(s)?;
+        }
+        store.load_full(from_checkpoint)
+    })();
+    let start = match staged {
+        Ok(s) => s,
+        Err(e) => {
+            stage.abort()?;
+            return Err(e.context(
+                "laundering staging failed — staged lineage discarded",
+            ));
+        }
+    };
+    let mut written = 0usize;
+    let replay_res = replay_filter_with_snapshots(
+        sys.rt,
+        &sys.corpus,
+        &start,
+        &sys.records,
+        &sys.idmap,
+        &filter,
+        Some(&sys.pins),
+        &ReplayOptions::default(),
+        &contaminated,
+        |snap| {
+            stage.save_full(snap)?;
+            written += 1;
+            Ok(())
+        },
+    );
+    let outcome = match replay_res {
+        Ok(o) => o,
+        Err(e) => {
+            stage.abort()?;
+            return Err(e.context("laundering replay failed — staged \
+                                  lineage discarded"));
+        }
+    };
+
+    // ---- audit gate -------------------------------------------------
+    // The candidate is audited against the forgotten closure before the
+    // swap.  When laundering leaves the serving state bit-unchanged —
+    // the steady state: every forget action already rebuilt it to the
+    // exact retain-only state and committed it with its own audit — the
+    // verdict carries no new information and a (toy-noise-prone) failed
+    // gate must not strand the cost inflation forever; the swap commits
+    // with the report attached, mirroring the exact-replay last resort.
+    // When the candidate DIFFERS from the serving state (a prior
+    // approximate hot-path state being replaced by the exact one), the
+    // audit hard-gates the swap: refusal discards the staged lineage
+    // and leaves state and store untouched.
+    let state_changed = !sys.state.bits_equal(&outcome.state);
+    let audit = run_audits(
+        &sys.audit_ctx(&forgotten),
+        ModelView::Base(&outcome.state.params),
+    )?;
+    if !audit.pass() && state_changed {
+        stage.abort()?;
+        return Err(anyhow::Error::new(UnlearnError::AuditFailed {
+            path: ActionKind::Launder,
+        })
+        .context(format!("laundering audit failed on a state-changing \
+                          swap: {}",
+                         audit.to_json().encode())));
+    }
+
+    // ---- atomic swap + system-state transition ----------------------
+    let mut new_laundered: Vec<u64> = sys
+        .laundered
+        .iter()
+        .copied()
+        .chain(forgotten.iter().copied())
+        .collect();
+    new_laundered.sort_unstable();
+    new_laundered.dedup();
+    stage.commit(&new_laundered, target)?;
+
+    sys.state = outcome.state;
+    // the laundered base is off the logged trajectory: ring patches can
+    // never apply again
+    sys.diverged = true;
+    sys.ring.clear();
+    sys.laundered = new_laundered.iter().copied().collect();
+    sys.reset_forgotten()?;
+
+    // best-effort accounting: the swap is already committed, so a
+    // stats hiccup must not fail the pass (and must not widen the
+    // window in which the manifest lacks the launder record)
+    let cas = sys.cas_stats().ok();
+    let mut details = Json::obj();
+    details
+        .set("generation", generation)
+        .set("from_checkpoint", from_checkpoint)
+        .set("target_step", target)
+        .set("laundered_now", forgotten.len())
+        .set("laundered_total", new_laundered.len())
+        .set("checkpoints_written", written)
+        .set("checkpoints_adopted", clean.len())
+        .set("applied_steps", outcome.invariants.applied_steps)
+        .set("state_changed", state_changed);
+    if let Some(c) = &cas {
+        details
+            .set("cas_objects", c.objects)
+            .set("cas_object_bytes", c.object_bytes)
+            .set("cas_dedup_ratio", c.dedup_ratio);
+    }
+    let req = launder_request(id);
+    sys.append_manifest(
+        &req,
+        &forgotten,
+        0,
+        ActionKind::Launder,
+        details.clone(),
+        Some(&audit),
+    )?;
+
+    Ok(LaunderOutcome {
+        executed: true,
+        generation,
+        from_checkpoint,
+        target_step: target,
+        laundered_now: forgotten.len(),
+        laundered_total: new_laundered.len(),
+        checkpoints_written: written,
+        checkpoints_adopted: clean.len(),
+        applied_steps: outcome.invariants.applied_steps,
+        audit: Some(audit),
+        wall_secs: t0.elapsed().as_secs_f64(),
+        details,
+    })
+}
+
+/// The forgotten set never touched the base: clear it without any
+/// rebuild, recording the reset in the signed manifest.
+fn commit_reset_only(
+    sys: &mut UnlearnSystem<'_>,
+    id: &str,
+    forgotten: &[u64],
+    t0: Instant,
+) -> anyhow::Result<LaunderOutcome> {
+    sys.reset_forgotten()?;
+    let mut details = Json::obj();
+    details
+        .set("note", "forgotten set had no offending steps — reset only")
+        .set("laundered_now", forgotten.len());
+    let req = launder_request(id);
+    sys.append_manifest(
+        &req,
+        forgotten,
+        0,
+        ActionKind::Launder,
+        details.clone(),
+        None,
+    )?;
+    let store = sys.store()?;
+    Ok(LaunderOutcome {
+        executed: true,
+        generation: store.active_generation()?,
+        from_checkpoint: 0,
+        target_step: 0,
+        laundered_now: forgotten.len(),
+        laundered_total: sys.laundered.len(),
+        checkpoints_written: 0,
+        checkpoints_adopted: 0,
+        applied_steps: 0,
+        audit: None,
+        wall_secs: t0.elapsed().as_secs_f64(),
+        details,
+    })
+}
+
+fn launder_request(id: &str) -> ForgetRequest {
+    ForgetRequest {
+        id: id.to_string(),
+        user: None,
+        sample_ids: Vec::new(),
+        urgency: Urgency::Normal,
+    }
+}
+
+impl LaunderOutcome {
+    /// Wire/CLI encoding.
+    pub fn to_json(&self) -> Json {
+        let mut j = Json::obj();
+        j.set("executed", self.executed)
+            .set("generation", self.generation)
+            .set("from_checkpoint", self.from_checkpoint)
+            .set("target_step", self.target_step)
+            .set("laundered_now", self.laundered_now)
+            .set("laundered_total", self.laundered_total)
+            .set("checkpoints_written", self.checkpoints_written)
+            .set("checkpoints_adopted", self.checkpoints_adopted)
+            .set("applied_steps", self.applied_steps)
+            .set(
+                "audit_pass",
+                self.audit
+                    .as_ref()
+                    .map(|a| Json::Bool(a.pass()))
+                    .unwrap_or(Json::Null),
+            )
+            .set("wall_secs", self.wall_secs);
+        j
+    }
+}

@@ -24,15 +24,17 @@
 
 pub mod batch;
 pub mod execute;
+pub mod launder;
 pub mod plan;
 
 pub use batch::{
     execute_batch, BatchOutcome, BatchPlanner, SharedMode, SharedReplayPlan,
 };
 pub use execute::Executor;
+pub use launder::{execute_launder, LaunderOutcome};
 pub use plan::{
-    CostEstimate, PlanStep, PlannedStep, Planner, SystemView, UnlearnError,
-    UnlearnPlan,
+    CostEstimate, LaunderPolicy, PlanStep, PlannedStep, Planner, SystemView,
+    UnlearnError, UnlearnPlan,
 };
 
 use std::collections::HashSet;
@@ -125,12 +127,20 @@ pub struct UnlearnSystem<'rt> {
     /// restore retain-only progress.
     pub resume_after_revert: bool,
     pub audit_seed: u64,
-    /// Cumulative closure of every executed forget action.  Rebuilds
-    /// (replay / revert-resume) filter `closure ∪ forgotten`: the
-    /// original run's checkpoints still contain previously forgotten
-    /// influence, so a replay filtering only the new request would
-    /// resurrect it.
+    /// Cumulative closure of every executed forget action since the
+    /// last laundering pass.  Rebuilds (replay / revert-resume) filter
+    /// `closure ∪ forgotten ∪ laundered`: the active lineage's
+    /// checkpoints still contain this influence, so a replay filtering
+    /// only the new request would resurrect it.  Laundering compacts
+    /// this set into a rewritten lineage and resets it — the rebuild
+    /// *target* (hence replay-tail length) depends only on `closure ∪
+    /// forgotten`, which is what keeps steady-state cost flat.
     pub forgotten: HashSet<u64>,
+    /// Closure already laundered into the active checkpoint lineage.
+    /// Every checkpoint is retain-only w.r.t. this set, so it never
+    /// moves rebuild targets earlier; it is still filtered out of tail
+    /// replays because the WAL records reference those sample IDs.
+    pub laundered: HashSet<u64>,
     /// True once any state-mutating path has run — the serving state no
     /// longer lies on the logged trajectory, so ring patches (recorded
     /// against it) are no longer applicable.
@@ -193,6 +203,38 @@ impl<'rt> UnlearnSystem<'rt> {
         Ok(())
     }
 
+    /// Persist the cumulative forgotten set next to the run's WAL
+    /// (atomic tmp+rename).  Exactness must survive a process restart:
+    /// the active lineage's checkpoints still contain this influence,
+    /// so a system rebuilt from the run dir has to keep filtering it
+    /// (and rebuilding its serving state) until laundering compacts it.
+    pub(crate) fn persist_forgotten(&self) -> anyhow::Result<()> {
+        let mut ids: Vec<u64> = self.forgotten.iter().copied().collect();
+        ids.sort_unstable();
+        crate::checkpoint::write_atomic(
+            &self.cfg.run_dir.join("forgotten.json"),
+            &crate::checkpoint::ids_json(&ids).encode(),
+        )
+    }
+
+    /// Extend the cumulative forgotten closure and persist it — the one
+    /// entry point every commit that erased base influence goes
+    /// through, so the on-disk set can never lag an executed action.
+    pub(crate) fn commit_forgotten<I: IntoIterator<Item = u64>>(
+        &mut self,
+        ids: I,
+    ) -> anyhow::Result<()> {
+        self.forgotten.extend(ids);
+        self.persist_forgotten()
+    }
+
+    /// Reset after laundering (the closure moved into the lineage's
+    /// `laundered.json`) and persist the now-empty set.
+    pub(crate) fn reset_forgotten(&mut self) -> anyhow::Result<()> {
+        self.forgotten.clear();
+        self.persist_forgotten()
+    }
+
     /// Expand the request to cl(F) (Alg. A.7 line 1).
     pub fn closure_of(&self, req: &ForgetRequest) -> (Vec<u64>, usize) {
         plan::expand_request_closure(
@@ -203,13 +245,47 @@ impl<'rt> UnlearnSystem<'rt> {
         )
     }
 
+    /// Open the run's content-addressed checkpoint store (the active
+    /// lineage's view).
+    pub fn store(&self) -> anyhow::Result<CheckpointStore> {
+        CheckpointStore::open(
+            &self.cfg.run_dir.join("ckpt"),
+            self.cfg.checkpoint_keep,
+        )
+    }
+
+    /// CAS accounting for the admin plane (`status`) and benches.
+    pub fn cas_stats(&self) -> anyhow::Result<crate::checkpoint::CasStats> {
+        self.store()?.stats()
+    }
+
+    /// Plan a laundering pass (pure dry-run; `Ok(None)` = below the
+    /// policy threshold).
+    pub fn plan_launder(
+        &self,
+        policy: &LaunderPolicy,
+    ) -> Result<Option<PlannedStep>, UnlearnError> {
+        let view = self
+            .view()
+            .map_err(|e| UnlearnError::Internal(format!("{e:#}")))?;
+        Planner::plan_launder(&view, policy)
+    }
+
+    /// Compact the cumulative forgotten set into a rewritten checkpoint
+    /// lineage (audit-gated; see [`launder::execute_launder`]).
+    pub fn launder(
+        &mut self,
+        id: &str,
+        policy: &LaunderPolicy,
+        force: bool,
+    ) -> anyhow::Result<LaunderOutcome> {
+        launder::execute_launder(self, id, policy, force)
+    }
+
     /// List the stored full checkpoints (ascending) and the on-disk
     /// size of the latest one — the planner's cost/fallback inputs.
     pub fn checkpoint_index(&self) -> anyhow::Result<(Vec<u32>, u64)> {
-        let store = CheckpointStore::open(
-            &self.cfg.run_dir.join("ckpt"),
-            self.cfg.checkpoint_keep,
-        )?;
+        let store = self.store()?;
         let checkpoints = store.list_full()?;
         let checkpoint_bytes = checkpoints
             .last()

@@ -49,6 +49,9 @@ pub enum UnlearnError {
     NoFisherCache,
     /// No stored checkpoint at or before the rebuild target.
     NoCheckpoint { target: u32 },
+    /// Laundering requested but the cumulative forgotten set is empty
+    /// (or never influenced the base) — nothing to compact.
+    NothingToLaunder,
     /// The admin-plane lock was poisoned by a panicked holder.
     LockPoisoned,
     /// Every planned step was attempted and failed its gate.
@@ -68,6 +71,7 @@ impl UnlearnError {
             UnlearnError::RingDiverged => "ring_diverged",
             UnlearnError::NoFisherCache => "no_fisher_cache",
             UnlearnError::NoCheckpoint { .. } => "no_checkpoint",
+            UnlearnError::NothingToLaunder => "nothing_to_launder",
             UnlearnError::LockPoisoned => "lock_poisoned",
             UnlearnError::PlanExhausted => "plan_exhausted",
             UnlearnError::Internal(_) => "internal",
@@ -110,6 +114,11 @@ impl fmt::Display for UnlearnError {
                 f,
                 "no checkpoint at or before step {target} — cannot satisfy \
                  the exactness precondition (fail-closed)"
+            ),
+            UnlearnError::NothingToLaunder => write!(
+                f,
+                "cumulative forgotten set is empty or never influenced \
+                 the base — nothing to launder"
             ),
             UnlearnError::LockPoisoned => {
                 write!(f, "system lock poisoned by a panicked holder")
@@ -158,6 +167,12 @@ pub enum PlanStep {
     HotPathAntiUpdate { params: HotPathParams },
     /// Filtered tail replay from the nearest checkpoint (Thm. A.1).
     ExactReplay { from_checkpoint: u32, target_step: u32 },
+    /// Checkpoint laundering: replay the tail from `from_checkpoint`
+    /// filtering the cumulative forgotten closure, rewrite every
+    /// contaminated checkpoint into a staged lineage, swap lineages and
+    /// reset the forgotten set.  Request-independent maintenance — the
+    /// amortization that keeps steady-state plan cost flat.
+    Launder { from_checkpoint: u32, target_step: u32 },
     /// Nothing in the base was influenced — audited no-op.
     NoOp,
 }
@@ -169,6 +184,7 @@ impl PlanStep {
             PlanStep::RingRevert { .. } => "ring_revert",
             PlanStep::HotPathAntiUpdate { .. } => "hot_path_anti_update",
             PlanStep::ExactReplay { .. } => "exact_replay",
+            PlanStep::Launder { .. } => "launder",
             PlanStep::NoOp => "no_op",
         }
     }
@@ -180,6 +196,7 @@ impl PlanStep {
             PlanStep::RingRevert { .. } => ActionKind::RecentRevert,
             PlanStep::HotPathAntiUpdate { .. } => ActionKind::HotPathAntiUpdate,
             PlanStep::ExactReplay { .. } => ActionKind::ExactReplay,
+            PlanStep::Launder { .. } => ActionKind::Launder,
             PlanStep::NoOp => ActionKind::Refused,
         }
     }
@@ -201,7 +218,8 @@ impl PlanStep {
                 j.set("max_anti_steps", params.max_steps)
                     .set("retain_steps", params.retain_steps);
             }
-            PlanStep::ExactReplay { from_checkpoint, target_step } => {
+            PlanStep::ExactReplay { from_checkpoint, target_step }
+            | PlanStep::Launder { from_checkpoint, target_step } => {
                 j.set("from_checkpoint", *from_checkpoint)
                     .set("target_step", *target_step);
             }
@@ -344,6 +362,32 @@ pub fn expand_request_closure(
     ids.dedup();
     let cl = expand_closure(corpus, ndindex, &ids, params);
     (cl.ids, cl.expanded.len())
+}
+
+/// When to compact the cumulative forgotten set into rewritten base
+/// checkpoints (checkpoint laundering).  The trigger metric is the
+/// *replay-tail inflation*: how many more WAL records a rebuild must
+/// traverse because old-lineage checkpoints still contain forgotten
+/// influence, versus the tail a fresh request would replay from the
+/// latest checkpoint.  That inflation grows monotonically with the
+/// total number of forgotten users; laundering resets it to zero.
+#[derive(Debug, Clone, PartialEq)]
+pub struct LaunderPolicy {
+    /// Plan laundering once the forgotten set inflates rebuild tails by
+    /// at least this many WAL records (0 = launder whenever anything
+    /// was forgotten).
+    pub min_extra_replay_records: u64,
+}
+
+impl Default for LaunderPolicy {
+    fn default() -> Self {
+        // half a default checkpoint interval of extra records: cheap
+        // enough to absorb, expensive enough not to churn lineages on
+        // every single forget
+        LaunderPolicy {
+            min_extra_replay_records: 64,
+        }
+    }
 }
 
 /// The pure planner.  No side effects, no state mutation: every public
@@ -507,6 +551,77 @@ impl Planner {
             steps,
             notes,
         })
+    }
+
+    /// Plan a laundering pass (request-independent maintenance).
+    ///
+    /// Returns `Ok(None)` when the policy threshold is not met,
+    /// `Ok(Some(step))` with a cost estimate when laundering is due, and
+    /// a typed error when it is impossible (nothing forgotten, or no
+    /// clean checkpoint precedes the forgotten influence).  Pure over
+    /// the view, like `plan`.
+    pub fn plan_launder(
+        view: &SystemView<'_>,
+        policy: &LaunderPolicy,
+    ) -> Result<Option<PlannedStep>, UnlearnError> {
+        if view.forgotten.is_empty() {
+            return Err(UnlearnError::NothingToLaunder);
+        }
+        let off = offending_steps(view.records, view.idmap, view.forgotten)
+            .map_err(|e| UnlearnError::Internal(format!("{e:#}")))?;
+        let target = match off.first() {
+            // forgotten but never in the base: resetting is free, there
+            // is no contamination to rewrite
+            None => return Err(UnlearnError::NothingToLaunder),
+            Some(&t) => t,
+        };
+        let from_checkpoint = view
+            .checkpoints
+            .iter()
+            .filter(|&&s| s <= target)
+            .max()
+            .copied()
+            .ok_or(UnlearnError::NoCheckpoint { target })?;
+        let extra = Self::forgotten_tail_inflation(view, from_checkpoint);
+        if extra < policy.min_extra_replay_records {
+            return Ok(None);
+        }
+        let records = tail_len(view.records, from_checkpoint);
+        let contaminated = view
+            .checkpoints
+            .iter()
+            .filter(|&&s| s > target)
+            .count() as u64;
+        Ok(Some(PlannedStep {
+            step: PlanStep::Launder {
+                from_checkpoint,
+                target_step: target,
+            },
+            cost: CostEstimate {
+                replay_steps: records as u32,
+                // read one checkpoint, write every contaminated one
+                bytes_touched: view.checkpoint_bytes
+                    + contaminated * view.param_count as u64 * 4 * 3,
+                est_wall_secs: view.step_secs_mean * records as f64,
+            },
+        }))
+    }
+
+    /// Replay-tail records attributable to the forgotten set: the tail
+    /// from the rebuild start the forgotten influence forces, minus the
+    /// tail from the latest checkpoint (what a fresh request with no
+    /// history would replay).
+    pub fn forgotten_tail_inflation(
+        view: &SystemView<'_>,
+        forced_from: u32,
+    ) -> u64 {
+        let baseline = view
+            .checkpoints
+            .iter()
+            .max()
+            .map(|&latest| tail_len(view.records, latest))
+            .unwrap_or(0);
+        tail_len(view.records, forced_from).saturating_sub(baseline)
     }
 
     /// Audit harness cost (runs after every path): a handful of eval

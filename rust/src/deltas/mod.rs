@@ -242,6 +242,15 @@ impl DeltaRing {
         self.ring.len()
     }
 
+    /// Drop every stored patch.  Called on a checkpoint-lineage swap:
+    /// a laundered base diverges from the logged trajectory the ring
+    /// patches, so no stored transition can ever apply again — holding
+    /// the patches would only pin memory and invite misuse.  Lifetime
+    /// record/revert counters are preserved (they time future records).
+    pub fn clear(&mut self) {
+        self.ring.clear();
+    }
+
     /// Earliest step still revertible (the ring's reach).
     pub fn earliest_step(&self) -> Option<u32> {
         self.ring.front().map(|p| p.step)
@@ -467,6 +476,29 @@ mod tests {
         let mut ring = DeltaRing::new(64, 4, PatchMode::Xor, false);
         // param_count 64 but tensors are 50-long
         assert!(ring.record(&states[0], &states[1]).is_err());
+    }
+
+    #[test]
+    fn clear_invalidates_every_patch() {
+        let states = walk(7, 80, 5);
+        let mut ring = DeltaRing::new(80, 8, PatchMode::Xor, true);
+        for w in states.windows(2) {
+            ring.record(&w[0], &w[1]).unwrap();
+        }
+        assert_eq!(ring.available(), 5);
+        ring.clear();
+        assert_eq!(ring.available(), 0);
+        assert_eq!(ring.earliest_step(), None);
+        let mut cur = states.last().unwrap().clone();
+        assert!(ring.revert(&mut cur, 1).is_err(), "nothing to revert");
+        assert!(cur.bits_equal(states.last().unwrap()));
+        // budget survives (lifetime counters), stored bytes drop to zero
+        let b = ring.budget();
+        assert_eq!(b.record_count, 5);
+        assert_eq!(b.stored_bytes, 0);
+        // the ring records fresh transitions after a clear
+        ring.record(&states[0], &states[1]).unwrap();
+        assert_eq!(ring.available(), 1);
     }
 
     #[test]

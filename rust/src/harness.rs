@@ -78,7 +78,8 @@ pub fn audit_splits(
     (controls, eval)
 }
 
-/// Train (or reuse a cached run dir) and build the system.
+/// Train from scratch (any existing run dir is wiped) and build the
+/// system — the fresh-experiment path tests and benches use.
 pub fn build_system<'rt>(
     rt: &'rt Runtime,
     mut cfg: RunConfig,
@@ -92,6 +93,53 @@ pub fn build_system<'rt>(
     let trainer = Trainer::new(rt, cfg.clone(), corpus.clone());
     let out: TrainOutput = trainer.train(|_| false)?;
     system_from_run(rt, cfg, corpus, out, estimate_fisher)
+}
+
+/// Reopen a finished run directory when one exists, else train from
+/// scratch — the restart path (`unlearn serve`): the WAL, checkpoint
+/// lineages, signed manifest, jobs WAL and persisted forgotten set all
+/// survive the process.  The serving state is reloaded from the latest
+/// checkpoint and, when un-laundered forgotten influence is pending,
+/// rebuilt by `system_from_run`'s filtered replay.  The delta ring does
+/// not persist (its patches describe transitions this process never
+/// recorded), so it restarts empty — ring paths simply miss until new
+/// training records into it.  The corpus must be regenerated with the
+/// same config/seed as the original run; the pin check fails closed on
+/// drift.
+pub fn open_or_build_system<'rt>(
+    rt: &'rt Runtime,
+    mut cfg: RunConfig,
+    corpus: Corpus,
+    estimate_fisher: bool,
+) -> anyhow::Result<(TrainedSystem<'rt>, bool)> {
+    let resumable = cfg.run_dir.join("wal").exists()
+        && cfg.run_dir.join("pins.json").exists()
+        && cfg.run_dir.join("ids.map").exists();
+    if !resumable {
+        return Ok((build_system(rt, cfg, corpus, estimate_fisher)?, false));
+    }
+    cfg.artifacts_dir = rt.manifest.dir.clone();
+    let store = store_of(&cfg.run_dir, cfg.checkpoint_keep)?;
+    let latest = store.list_full()?.into_iter().max().ok_or_else(|| {
+        anyhow::anyhow!(
+            "run dir {} has a WAL but no checkpoints — cannot resume",
+            cfg.run_dir.display()
+        )
+    })?;
+    let out = TrainOutput {
+        state: store.load_full(latest)?,
+        ring: crate::deltas::DeltaRing::new(
+            rt.manifest.param_count,
+            cfg.ring_window,
+            crate::deltas::PatchMode::Xor,
+            cfg.ring_revert_optimizer,
+        ),
+        idmap: crate::wal::IdMap::new(cfg.hmac_key.clone()),
+        losses: Vec::new(),
+        wal_dir: cfg.run_dir.join("wal"),
+        run_dir: cfg.run_dir.clone(),
+    };
+    Ok((system_from_run(rt, cfg, corpus, out, estimate_fisher)?, true))
 }
 
 /// Assemble the controller system from a finished training run.
@@ -123,11 +171,57 @@ pub fn system_from_run<'rt>(
         None
     };
     let losses = out.losses.clone();
+    // a reopened run may already have a laundered lineage and/or a
+    // persisted cumulative forgotten set: both survive with the run
+    // dir, not the process (exactness across restarts)
+    let store =
+        CheckpointStore::open(&cfg.run_dir.join("ckpt"), cfg.checkpoint_keep)?;
+    let laundered: HashSet<u64> =
+        store.laundered_ids()?.into_iter().collect();
+    let forgotten: HashSet<u64> = crate::checkpoint::read_ids_json(
+        &cfg.run_dir.join("forgotten.json"),
+    )?
+    .into_iter()
+    .collect();
+    // un-laundered forgotten influence means the trained/loaded state
+    // is NOT the serving state: rebuild it so the stream-exactness
+    // invariant survives a restart.  The rebuild TARGET comes from the
+    // forgotten set alone (active-lineage checkpoints are already clean
+    // w.r.t. `laundered` — reaching back past laundered influence would
+    // re-pay the tail laundering eliminated); the FILTER is the union.
+    let (state, diverged) = if forgotten.is_empty() {
+        (out.state, false)
+    } else {
+        let off = crate::replay::offending_steps(&records, &idmap, &forgotten)?;
+        let target = match off.first() {
+            Some(&t) => t,
+            None => records
+                .iter()
+                .map(|r| r.opt_step)
+                .max()
+                .map(|s| s.saturating_add(1))
+                .unwrap_or(0),
+        };
+        let mut filter = forgotten.clone();
+        filter.extend(laundered.iter().copied());
+        let (_, rebuilt) = crate::replay::replay_filter_from_nearest_to(
+            rt,
+            &corpus,
+            &store,
+            &records,
+            &idmap,
+            &filter,
+            target,
+            Some(&pins),
+            &crate::replay::ReplayOptions::default(),
+        )?;
+        (rebuilt.state, true)
+    };
     let system = UnlearnSystem {
         rt,
         cfg,
         corpus,
-        state: out.state,
+        state,
         ring: out.ring,
         adapters: AdapterRegistry::new(),
         fisher,
@@ -144,8 +238,9 @@ pub fn system_from_run<'rt>(
         hot_path: HotPathParams::default(),
         resume_after_revert: true,
         audit_seed: 0xAD17,
-        forgotten: HashSet::new(),
-        diverged: false,
+        forgotten,
+        laundered,
+        diverged,
     };
     Ok(TrainedSystem {
         system,

@@ -9,6 +9,7 @@
 //!   serve       admin server for forget requests
 //!   plan        dry-run the planner: typed plan + cost estimates
 //!   forget      run the controller on a forget request
+//!   launder     compact the forgotten set into a rewritten lineage
 //!   audit       run the audit harness against a checkpoint
 
 use std::collections::HashSet;
@@ -180,9 +181,21 @@ fn run(args: &Args) -> anyhow::Result<()> {
             let cfg = run_config(args)?;
             let c = corpus(args)?;
             let addr = args.get_or("addr", "127.0.0.1:7878").to_string();
-            println!("training before serving ...");
-            let trained =
-                unlearn::harness::build_system(&rt, cfg, c, args.flag("fisher"))?;
+            // restart path: an existing run dir is REOPENED (WAL,
+            // checkpoint lineages, manifest, jobs WAL, forgotten set
+            // all survive), not wiped and retrained
+            let (trained, resumed) = unlearn::harness::open_or_build_system(
+                &rt,
+                cfg,
+                c,
+                args.flag("fisher"),
+            )?;
+            if resumed {
+                println!("resumed existing run (state rebuilt from the \
+                          checkpoint lineage)");
+            } else {
+                println!("trained a fresh run before serving");
+            }
             let system =
                 std::sync::Arc::new(std::sync::Mutex::new(trained.system));
             unlearn::server::serve(system, &addr)
@@ -208,6 +221,87 @@ fn run(args: &Args) -> anyhow::Result<()> {
             if let Some(a) = outcome.audit {
                 println!("audits: {}", a.to_json().pretty());
             }
+            Ok(())
+        }
+        Some("launder") => {
+            // demo of the full compaction loop: forget the listed users
+            // (cumulative `forgotten` grows), show how the forgotten set
+            // inflates a probe plan, launder, show the deflated plan +
+            // CAS accounting.
+            let rt = Runtime::load(&artifacts_dir(args))?;
+            let cfg = run_config(args)?;
+            let c = corpus(args)?;
+            let trained =
+                unlearn::harness::build_system(&rt, cfg, c, args.flag("fisher"))?;
+            let mut system = trained.system;
+            for (i, u) in args
+                .get_or("forget-users", "")
+                .split(',')
+                .filter(|s| !s.is_empty())
+                .enumerate()
+            {
+                let user: u32 = u.parse()?;
+                let o = system.handle(&unlearn::controller::ForgetRequest {
+                    id: format!("launder-pre-{i}"),
+                    user: Some(user),
+                    sample_ids: vec![],
+                    urgency: unlearn::controller::Urgency::Normal,
+                })?;
+                println!("forgot user {user}: {}", o.action.as_str());
+            }
+            let probe = args
+                .get("probe-user")
+                .map(|u| u.parse::<u32>())
+                .transpose()?;
+            let probe_req = |tag: &str, user: u32| {
+                unlearn::controller::ForgetRequest {
+                    id: format!("launder-probe-{tag}"),
+                    user: Some(user),
+                    sample_ids: vec![],
+                    urgency: unlearn::controller::Urgency::Normal,
+                }
+            };
+            if let Some(u) = probe {
+                if let Ok(p) = system.plan(&probe_req("pre", u)) {
+                    if let Some(s) = p.steps.last() {
+                        println!(
+                            "pre-launder probe plan: {} replay steps",
+                            s.cost.replay_steps
+                        );
+                    }
+                }
+            }
+            let policy = unlearn::controller::LaunderPolicy {
+                min_extra_replay_records: args
+                    .get_u64("launder-min-extra", 0)?,
+            };
+            let out = system.launder(
+                args.get_or("id", "cli-launder"),
+                &policy,
+                args.flag("force"),
+            )?;
+            println!("{}", out.to_json().pretty());
+            if let Some(u) = probe {
+                if let Ok(p) = system.plan(&probe_req("post", u)) {
+                    if let Some(s) = p.steps.last() {
+                        println!(
+                            "post-launder probe plan: {} replay steps",
+                            s.cost.replay_steps
+                        );
+                    }
+                }
+            }
+            let stats = system.cas_stats()?;
+            println!(
+                "cas: {} objects, {} bytes stored / {} referenced \
+                 (dedup ratio {:.3}), lineage gen {}, {} laundered ids",
+                stats.objects,
+                stats.object_bytes,
+                stats.referenced_bytes,
+                stats.dedup_ratio,
+                stats.generation,
+                stats.laundered_ids
+            );
             Ok(())
         }
         Some("plan") => {
@@ -255,7 +349,7 @@ fn run(args: &Args) -> anyhow::Result<()> {
         }
         other => {
             eprintln!(
-                "usage: unlearn <smoke|pins|train|ci-gate|wal-scan|replay|plan|forget|audit|serve> \
+                "usage: unlearn <smoke|pins|train|ci-gate|wal-scan|replay|plan|forget|launder|audit|serve> \
                  [--artifacts DIR] [--run-dir DIR] [--steps N] ...\n\
                  (got {other:?})"
             );

@@ -23,6 +23,9 @@ pub enum ActionKind {
     RecentRevert,
     HotPathAntiUpdate,
     ExactReplay,
+    /// Checkpoint laundering: the cumulative forgotten closure compacted
+    /// into a rewritten (lineage-swapped) base checkpoint sequence.
+    Launder,
     Refused,
 }
 
@@ -33,6 +36,7 @@ impl ActionKind {
             ActionKind::RecentRevert => "recent_revert",
             ActionKind::HotPathAntiUpdate => "hot_path_anti_update",
             ActionKind::ExactReplay => "exact_replay",
+            ActionKind::Launder => "launder",
             ActionKind::Refused => "refused",
         }
     }

@@ -82,6 +82,47 @@ pub fn replay_filter(
     stored_pins: Option<&Pins>,
     opts: &ReplayOptions,
 ) -> anyhow::Result<ReplayOutcome> {
+    replay_filter_with_snapshots(
+        rt,
+        corpus,
+        from,
+        records,
+        idmap,
+        closure,
+        stored_pins,
+        opts,
+        &[],
+        |_| Ok(()),
+    )
+}
+
+/// [`replay_filter`] that additionally hands intermediate states to
+/// `sink` at the requested logical-step boundaries — the checkpoint
+/// *laundering* primitive: one filtered tail traversal both rebuilds
+/// the serving state AND emits the retain-only checkpoint sequence the
+/// new lineage stores, with no second replay.
+///
+/// `snapshot_steps` must be sorted, deduplicated accumulation-boundary
+/// steps of the traversal (original checkpoints are saved exactly at
+/// such boundaries).  Steps at or before `from.logical_step` are
+/// ignored (they precede the traversal — adopt those checkpoints
+/// instead of re-deriving them); a step the traversal cannot land on
+/// exactly fails closed rather than snapshotting a nearby state.
+#[allow(clippy::too_many_arguments)]
+pub fn replay_filter_with_snapshots(
+    rt: &Runtime,
+    corpus: &Corpus,
+    from: &TrainState,
+    records: &[WalRecord],
+    idmap: &IdMap,
+    closure: &HashSet<u64>,
+    stored_pins: Option<&Pins>,
+    opts: &ReplayOptions,
+    snapshot_steps: &[u32],
+    mut sink: impl FnMut(&TrainState) -> anyhow::Result<()>,
+) -> anyhow::Result<ReplayOutcome> {
+    let mut snap_i = snapshot_steps
+        .partition_point(|&s| s <= from.logical_step);
     // fail-closed pin verification (Table 2 / §7)
     if opts.check_pins {
         let stored = stored_pins
@@ -198,12 +239,31 @@ pub fn replay_filter(
             had_contrib = false;
             step_retained = 0;
             pending_lr = None;
+            while snap_i < snapshot_steps.len()
+                && snapshot_steps[snap_i] <= state.logical_step
+            {
+                anyhow::ensure!(
+                    snapshot_steps[snap_i] == state.logical_step,
+                    "snapshot step {} is not an accumulation boundary of \
+                     this traversal (at boundary {}) — refusing an \
+                     inexact snapshot",
+                    snapshot_steps[snap_i],
+                    state.logical_step
+                );
+                sink(&state)?;
+                snap_i += 1;
+            }
         }
     }
     let _ = step_retained;
     anyhow::ensure!(
         pending_lr.is_none(),
         "WAL ended mid-accumulation (unterminated segment)"
+    );
+    anyhow::ensure!(
+        snap_i == snapshot_steps.len(),
+        "snapshot steps beyond the WAL end: {:?}",
+        &snapshot_steps[snap_i..]
     );
     Ok(ReplayOutcome {
         state,

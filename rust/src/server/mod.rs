@@ -30,8 +30,9 @@
 //!
 //! ## Protocol (one JSON object per line)
 //!
-//!   {"op":"status"}
+//!   {"op":"status"}                  → incl. CAS/lineage/GC stats
 //!   {"op":"submit","id":"req-1","user":3,"urgency":"high"}   → job id
+//!   {"op":"launder"}                 → job id (admin maintenance)
 //!   {"op":"poll","job":"job-1"}
 //!   {"op":"jobs"}
 //!   {"op":"plan","id":"req-2","sample_ids":[1,2,3]}          → dry-run
@@ -42,17 +43,31 @@
 //!
 //! Response: one JSON object per line: {"ok":true,...} /
 //! {"ok":false,"error":...,"error_kind":...}
+//!
+//! ## Durability
+//!
+//! An acked `submit` is a promise.  With a jobs WAL configured
+//! ([`ServerCtx::with_jobs_wal`]; `serve` puts it at
+//! `<run_dir>/jobs.wal`), every accepted job is appended (fsynced)
+//! before the ack and marked on completion; on startup the pending
+//! suffix — submitted but never completed — is re-queued under its
+//! original job ids, so a restart mid-burst no longer silently drops
+//! accepted work.  Re-running a job that completed between its WAL
+//! mark and the crash is harmless: idempotency keys suppress the
+//! double execution.
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Condvar, Mutex, RwLock};
 use std::time::Duration;
 
 use crate::audit::{run_audits, AuditThresholds, ModelView};
+use crate::checkpoint::CasStats;
 use crate::controller::{
-    execute_batch, ControllerOutcome, ForgetRequest, UnlearnError,
-    UnlearnSystem, Urgency,
+    execute_batch, ControllerOutcome, ForgetRequest, LaunderPolicy,
+    UnlearnError, UnlearnSystem, Urgency,
 };
 use crate::data::corpus::Corpus;
 use crate::manifest::ForgetManifest;
@@ -79,10 +94,76 @@ impl JobStatus {
     }
 }
 
-/// One submitted forget job.
+/// What a job executes when the worker drains it.
+#[derive(Debug, Clone)]
+pub enum JobRequest {
+    /// A forget request (coalesced with its batch).
+    Forget(ForgetRequest),
+    /// A laundering pass; `id` is the manifest idempotency key (empty =
+    /// derive from the job id at execution time).
+    Launder { id: String },
+}
+
+impl JobRequest {
+    /// The idempotency/request key shown in `jobs`/`poll`.
+    fn request_id(&self) -> &str {
+        match self {
+            JobRequest::Forget(r) => &r.id,
+            JobRequest::Launder { id } => id,
+        }
+    }
+
+    /// Wire/WAL encoding.
+    fn to_json(&self) -> Json {
+        let mut j = Json::obj();
+        match self {
+            JobRequest::Forget(r) => {
+                j.set("kind", "forget")
+                    .set("id", r.id.as_str())
+                    .set(
+                        "user",
+                        r.user.map(Json::from).unwrap_or(Json::Null),
+                    )
+                    .set(
+                        "sample_ids",
+                        Json::Arr(
+                            r.sample_ids.iter().map(|&s| s.into()).collect(),
+                        ),
+                    )
+                    .set(
+                        "urgency",
+                        match r.urgency {
+                            Urgency::High => "high",
+                            Urgency::Normal => "normal",
+                        },
+                    );
+            }
+            JobRequest::Launder { id } => {
+                j.set("kind", "launder").set("id", id.as_str());
+            }
+        }
+        j
+    }
+
+    fn from_json(j: &Json) -> anyhow::Result<JobRequest> {
+        match j.get("kind").and_then(|v| v.as_str()) {
+            Some("launder") => Ok(JobRequest::Launder {
+                id: j
+                    .get("id")
+                    .and_then(|v| v.as_str())
+                    .unwrap_or_default()
+                    .to_string(),
+            }),
+            Some("forget") | None => Ok(JobRequest::Forget(parse_request(j)?)),
+            Some(other) => anyhow::bail!("unknown job kind {other:?}"),
+        }
+    }
+}
+
+/// One submitted job.
 struct Job {
     job_id: String,
-    request: ForgetRequest,
+    request: JobRequest,
     status: JobStatus,
     result: Option<Json>,
 }
@@ -105,11 +186,16 @@ struct JobTable {
 }
 
 /// FIFO job table + worker wakeup.  Guards plain data only, so poisoned
-/// guards are safely recovered via `into_inner`.
+/// guards are safely recovered via `into_inner`.  With a WAL path set,
+/// accepted jobs are persisted before they are acked and marked on
+/// completion, so a restart can re-queue the pending suffix.
 pub struct JobQueue {
     table: Mutex<JobTable>,
     cv: Condvar,
     seq: AtomicU64,
+    /// Append-only jobs WAL (one JSON event per line).  Written under
+    /// the table lock so event order matches queue order.
+    wal_path: Option<PathBuf>,
 }
 
 fn recover<T>(r: Result<T, std::sync::PoisonError<T>>) -> T {
@@ -125,17 +211,134 @@ impl JobQueue {
             }),
             cv: Condvar::new(),
             seq: AtomicU64::new(1),
+            wal_path: None,
         }
     }
 
-    /// Enqueue a request; returns its job id immediately, or None when
-    /// the queue has been closed for shutdown.
-    pub fn submit(&self, request: ForgetRequest) -> Option<String> {
+    /// Open a WAL-backed queue, re-queueing every job the WAL records
+    /// as submitted but not completed (original job ids preserved; the
+    /// sequence counter resumes past the highest recorded id).
+    pub fn with_wal(path: &Path) -> anyhow::Result<JobQueue> {
+        let mut jobs: Vec<Job> = Vec::new();
+        let mut max_id = 0u64;
+        if path.exists() {
+            let text = std::fs::read_to_string(path)?;
+            let lines: Vec<&str> = text.lines().collect();
+            for (lineno, line) in lines.iter().enumerate() {
+                if line.trim().is_empty() {
+                    continue;
+                }
+                let j = match parse(line) {
+                    Ok(j) => j,
+                    // A torn FINAL line is the expected crash artifact
+                    // of an interrupted append (completion marks are
+                    // not fsynced; a torn submit was never acked) —
+                    // drop it; compaction below rewrites a clean file.
+                    // Corruption anywhere else fails closed.
+                    Err(_) if lineno + 1 == lines.len() => break,
+                    Err(e) => anyhow::bail!("jobs WAL line {lineno}: {e}"),
+                };
+                let job_id = j
+                    .get("job")
+                    .and_then(|v| v.as_str())
+                    .ok_or_else(|| {
+                        anyhow::anyhow!("jobs WAL line {lineno}: missing job")
+                    })?
+                    .to_string();
+                if let Some(n) = job_id
+                    .strip_prefix("job-")
+                    .and_then(|s| s.parse::<u64>().ok())
+                {
+                    max_id = max_id.max(n);
+                }
+                match j.get("event").and_then(|v| v.as_str()) {
+                    Some("submit") => {
+                        let req = j.get("request").ok_or_else(|| {
+                            anyhow::anyhow!(
+                                "jobs WAL line {lineno}: missing request"
+                            )
+                        })?;
+                        jobs.push(Job {
+                            job_id,
+                            request: JobRequest::from_json(req)?,
+                            status: JobStatus::Queued,
+                            result: None,
+                        });
+                    }
+                    Some("done") => {
+                        jobs.retain(|job| job.job_id != job_id);
+                    }
+                    other => anyhow::bail!(
+                        "jobs WAL line {lineno}: unknown event {other:?}"
+                    ),
+                }
+            }
+        }
+        // Compact: rewrite the WAL to just the recovered pending suffix
+        // (atomic tmp+rename) so the file — and every future recovery —
+        // stays bounded by in-flight work, not by service history.  The
+        // sequence counter was derived from the FULL history above, so
+        // ids keep advancing past completed work within this lineage of
+        // the file.
+        if path.exists() {
+            let mut text = String::new();
+            for job in &jobs {
+                let mut ev = Json::obj();
+                ev.set("event", "submit")
+                    .set("job", job.job_id.as_str())
+                    .set("request", job.request.to_json());
+                text.push_str(&ev.encode());
+                text.push('\n');
+            }
+            let tmp = path.with_extension("tmp");
+            std::fs::write(&tmp, text)?;
+            std::fs::rename(&tmp, path)?;
+        }
+        let q = JobQueue {
+            table: Mutex::new(JobTable {
+                jobs,
+                closed: false,
+            }),
+            cv: Condvar::new(),
+            seq: AtomicU64::new(max_id + 1),
+            wal_path: Some(path.to_path_buf()),
+        };
+        Ok(q)
+    }
+
+    fn wal_append(&self, event: &Json, sync: bool) -> anyhow::Result<()> {
+        let Some(path) = &self.wal_path else {
+            return Ok(());
+        };
+        let mut f = std::fs::OpenOptions::new()
+            .create(true)
+            .append(true)
+            .open(path)?;
+        writeln!(f, "{}", event.encode())?;
+        if sync {
+            f.sync_all()?;
+        }
+        Ok(())
+    }
+
+    /// Enqueue a request; returns its job id immediately, `Ok(None)`
+    /// when the queue has been closed for shutdown, and an error when
+    /// the durability promise cannot be made (jobs-WAL write failed —
+    /// the job is NOT queued).
+    pub fn submit(
+        &self,
+        request: JobRequest,
+    ) -> anyhow::Result<Option<String>> {
         let mut g = recover(self.table.lock());
         if g.closed {
-            return None;
+            return Ok(None);
         }
         let job_id = format!("job-{}", self.seq.fetch_add(1, Ordering::SeqCst));
+        let mut ev = Json::obj();
+        ev.set("event", "submit")
+            .set("job", job_id.as_str())
+            .set("request", request.to_json());
+        self.wal_append(&ev, true)?;
         g.jobs.push(Job {
             job_id: job_id.clone(),
             request,
@@ -144,7 +347,7 @@ impl JobQueue {
         });
         drop(g);
         self.cv.notify_all();
-        Some(job_id)
+        Ok(Some(job_id))
     }
 
     /// Refuse further submissions and wake the worker for its final
@@ -175,7 +378,7 @@ impl JobQueue {
     }
 
     /// Atomically claim every queued job (marks them Running).
-    fn take_queued(&self) -> Vec<(String, ForgetRequest)> {
+    fn take_queued(&self) -> Vec<(String, JobRequest)> {
         let mut g = recover(self.table.lock());
         let mut out = Vec::new();
         for j in g.jobs.iter_mut() {
@@ -192,6 +395,16 @@ impl JobQueue {
         if let Some(j) = g.jobs.iter_mut().find(|j| j.job_id == job_id) {
             j.status = status;
             j.result = Some(result);
+        }
+        if matches!(status, JobStatus::Done | JobStatus::Failed) {
+            // completion mark: best-effort (a lost mark only means the
+            // job re-runs on recovery, where its idempotency key
+            // suppresses double execution)
+            let mut ev = Json::obj();
+            ev.set("event", "done")
+                .set("job", job_id)
+                .set("status", status.as_str());
+            let _ = self.wal_append(&ev, false);
         }
         // bound the table: prune the oldest completed entries
         let completed = g
@@ -228,6 +441,11 @@ impl JobQueue {
                 r.set("ok", false).set("error", reason);
                 j.status = JobStatus::Failed;
                 j.result = Some(r);
+                let mut ev = Json::obj();
+                ev.set("event", "done")
+                    .set("job", j.job_id.as_str())
+                    .set("status", JobStatus::Failed.as_str());
+                let _ = self.wal_append(&ev, false);
             }
         }
     }
@@ -254,7 +472,14 @@ impl JobQueue {
 fn job_json(j: &Job) -> Json {
     let mut o = Json::obj();
     o.set("job", j.job_id.as_str())
-        .set("request_id", j.request.id.as_str())
+        .set("request_id", j.request.request_id())
+        .set(
+            "kind",
+            match &j.request {
+                JobRequest::Forget(_) => "forget",
+                JobRequest::Launder { .. } => "launder",
+            },
+        )
         .set("status", j.status.as_str())
         .set("result", j.result.clone().unwrap_or(Json::Null));
     o
@@ -272,10 +497,23 @@ pub struct StatusSnapshot {
     pub ring_available: usize,
     pub adapters: usize,
     pub manifest_entries: u64,
+    /// Closure entries accumulated since the last laundering pass.
+    pub forgotten_pending: usize,
+    /// IDs laundered into the active checkpoint lineage.
+    pub laundered_ids: usize,
+    /// CAS/lineage accounting (None when the store is unreadable).
+    pub cas: Option<CasStats>,
+    /// True when the launder policy says the forgotten set has inflated
+    /// rebuild cost past the budget — the operator (or a cron) should
+    /// submit {"op":"launder"}.
+    pub launder_recommended: bool,
     pub params: Arc<Vec<f32>>,
 }
 
-fn snapshot_of(sys: &UnlearnSystem<'_>) -> StatusSnapshot {
+fn snapshot_of(
+    sys: &UnlearnSystem<'_>,
+    policy: &LaunderPolicy,
+) -> StatusSnapshot {
     StatusSnapshot {
         model_hash: sys.state.model_hash(),
         optimizer_hash: sys.state.optimizer_hash(),
@@ -284,6 +522,10 @@ fn snapshot_of(sys: &UnlearnSystem<'_>) -> StatusSnapshot {
         ring_available: sys.ring.available(),
         adapters: sys.adapters.len(),
         manifest_entries: sys.manifest.len(),
+        forgotten_pending: sys.forgotten.len(),
+        laundered_ids: sys.laundered.len(),
+        cas: sys.cas_stats().ok(),
+        launder_recommended: matches!(sys.plan_launder(policy), Ok(Some(_))),
         params: Arc::new(sys.state.params.clone()),
     }
 }
@@ -313,16 +555,37 @@ pub struct ServerCtx<'a, 'rt> {
     /// How long the worker lingers after the first queued job before
     /// draining, letting a burst coalesce into one batch.
     pub coalesce_window: Duration,
+    /// Threshold for the `launder_recommended` status bit and for
+    /// worker-executed launder jobs.
+    pub launder_policy: LaunderPolicy,
 }
 
 impl<'a, 'rt> ServerCtx<'a, 'rt> {
     pub fn new(
         system: &'a Mutex<UnlearnSystem<'rt>>,
     ) -> anyhow::Result<ServerCtx<'a, 'rt>> {
+        Self::build(system, JobQueue::new())
+    }
+
+    /// [`ServerCtx::new`] with a persistent jobs WAL at `wal_path`:
+    /// accepted-but-incomplete jobs from a previous process are
+    /// re-queued (the worker drains them on start).
+    pub fn with_jobs_wal(
+        system: &'a Mutex<UnlearnSystem<'rt>>,
+        wal_path: &Path,
+    ) -> anyhow::Result<ServerCtx<'a, 'rt>> {
+        Self::build(system, JobQueue::with_wal(wal_path)?)
+    }
+
+    fn build(
+        system: &'a Mutex<UnlearnSystem<'rt>>,
+        jobs: JobQueue,
+    ) -> anyhow::Result<ServerCtx<'a, 'rt>> {
+        let launder_policy = LaunderPolicy::default();
         let sys = system
             .lock()
             .map_err(|_| anyhow::Error::new(UnlearnError::LockPoisoned))?;
-        let snapshot = RwLock::new(snapshot_of(&sys));
+        let snapshot = RwLock::new(snapshot_of(&sys, &launder_policy));
         let audit_view = AuditView {
             corpus: sys.corpus.clone(),
             retain_ids: sys.retain_ids.clone(),
@@ -338,29 +601,48 @@ impl<'a, 'rt> ServerCtx<'a, 'rt> {
         Ok(ServerCtx {
             system,
             rt,
-            jobs: JobQueue::new(),
+            jobs,
             snapshot,
             audit_view,
             shutdown: AtomicBool::new(false),
             coalesce_window: Duration::from_millis(15),
+            launder_policy,
         })
     }
 
     fn refresh_snapshot(&self, sys: &UnlearnSystem<'_>) {
-        *recover(self.snapshot.write()) = snapshot_of(sys);
+        *recover(self.snapshot.write()) =
+            snapshot_of(sys, &self.launder_policy);
     }
 }
 
-/// Drain every currently queued job as ONE coalesced batch.  Returns
-/// the number of jobs processed.  Exposed so tests (and the worker)
-/// share the exact same drain path.
+/// Drain every currently queued job: the forget jobs as ONE coalesced
+/// batch, then any launder jobs in submission order (laundering wants
+/// the post-batch forgotten set — draining the burst first compacts
+/// everything it accrued).  Returns the number of jobs processed.
+/// Exposed so tests (and the worker) share the exact same drain path.
 pub fn drain_queue_once(ctx: &ServerCtx<'_, '_>) -> usize {
     let batch = ctx.jobs.take_queued();
     if batch.is_empty() {
         return 0;
     }
-    let reqs: Vec<ForgetRequest> =
-        batch.iter().map(|(_, r)| r.clone()).collect();
+    let mut forgets: Vec<(String, ForgetRequest)> = Vec::new();
+    let mut launders: Vec<(String, String)> = Vec::new();
+    for (job_id, req) in &batch {
+        match req {
+            JobRequest::Forget(r) => forgets.push((job_id.clone(), r.clone())),
+            JobRequest::Launder { id } => {
+                // an empty key derives from the job id so auto-submitted
+                // launders stay idempotent per job
+                let key = if id.is_empty() {
+                    format!("launder-{job_id}")
+                } else {
+                    id.clone()
+                };
+                launders.push((job_id.clone(), key));
+            }
+        }
+    }
     match ctx.system.lock() {
         Err(_) => {
             let err = UnlearnError::LockPoisoned;
@@ -372,36 +654,62 @@ pub fn drain_queue_once(ctx: &ServerCtx<'_, '_>) -> usize {
                 ctx.jobs.publish(job_id, JobStatus::Failed, r);
             }
         }
-        Ok(mut sys) => match execute_batch(&mut sys, &reqs) {
-            Ok(out) => {
-                for ((job_id, _), res) in
-                    batch.iter().zip(out.outcomes.into_iter())
-                {
-                    match res {
-                        Ok(o) => ctx.jobs.publish(
-                            job_id,
-                            JobStatus::Done,
-                            outcome_json(&o),
-                        ),
-                        Err(e) => {
+        Ok(mut sys) => {
+            if !forgets.is_empty() {
+                let reqs: Vec<ForgetRequest> =
+                    forgets.iter().map(|(_, r)| r.clone()).collect();
+                match execute_batch(&mut sys, &reqs) {
+                    Ok(out) => {
+                        for ((job_id, _), res) in
+                            forgets.iter().zip(out.outcomes.into_iter())
+                        {
+                            match res {
+                                Ok(o) => ctx.jobs.publish(
+                                    job_id,
+                                    JobStatus::Done,
+                                    outcome_json(&o),
+                                ),
+                                Err(e) => {
+                                    let mut r = Json::obj();
+                                    r.set("ok", false)
+                                        .set("error", format!("{e:#}"));
+                                    ctx.jobs.publish(
+                                        job_id,
+                                        JobStatus::Failed,
+                                        r,
+                                    );
+                                }
+                            }
+                        }
+                    }
+                    Err(e) => {
+                        for (job_id, _) in &forgets {
                             let mut r = Json::obj();
-                            r.set("ok", false)
-                                .set("error", format!("{e:#}"));
+                            r.set("ok", false).set("error", format!("{e:#}"));
                             ctx.jobs.publish(job_id, JobStatus::Failed, r);
                         }
                     }
                 }
-                ctx.refresh_snapshot(&sys);
             }
-            Err(e) => {
-                for (job_id, _) in &batch {
-                    let mut r = Json::obj();
-                    r.set("ok", false).set("error", format!("{e:#}"));
-                    ctx.jobs.publish(job_id, JobStatus::Failed, r);
+            for (job_id, key) in &launders {
+                match sys.launder(key, &ctx.launder_policy, true) {
+                    Ok(out) => {
+                        let mut r = out.to_json();
+                        r.set("ok", true);
+                        ctx.jobs.publish(job_id, JobStatus::Done, r);
+                    }
+                    Err(e) => {
+                        let mut r = Json::obj();
+                        r.set("ok", false).set("error", format!("{e:#}"));
+                        if let Some(ue) = e.downcast_ref::<UnlearnError>() {
+                            r.set("error_kind", ue.kind());
+                        }
+                        ctx.jobs.publish(job_id, JobStatus::Failed, r);
+                    }
                 }
-                ctx.refresh_snapshot(&sys);
             }
-        },
+            ctx.refresh_snapshot(&sys);
+        }
     }
     batch.len()
 }
@@ -435,7 +743,19 @@ pub fn serve(
     let listener = TcpListener::bind(addr)?;
     let local = listener.local_addr()?;
     eprintln!("unlearn admin server listening on {local}");
-    let ctx = ServerCtx::new(&system)?;
+    // durable job queue: accepted work survives a restart mid-burst
+    let wal_path = {
+        let sys = system
+            .lock()
+            .map_err(|_| anyhow::Error::new(UnlearnError::LockPoisoned))?;
+        sys.cfg.run_dir.join("jobs.wal")
+    };
+    let ctx = ServerCtx::with_jobs_wal(&system, &wal_path)?;
+    let recovered = ctx.jobs.queued_len();
+    if recovered > 0 {
+        eprintln!("recovered {recovered} pending job(s) from {}",
+                  wal_path.display());
+    }
     std::thread::scope(|s| {
         s.spawn(|| run_worker(&ctx));
         for stream in listener.incoming() {
@@ -604,7 +924,20 @@ fn dispatch_inner(
                 .set("ring_available", snap.ring_available)
                 .set("adapters", snap.adapters)
                 .set("manifest_entries", snap.manifest_entries)
+                .set("forgotten_pending", snap.forgotten_pending)
+                .set("laundered_ids", snap.laundered_ids)
+                .set("launder_recommended", snap.launder_recommended)
                 .set("queued_jobs", ctx.jobs.queued_len());
+            if let Some(cas) = &snap.cas {
+                let mut c = Json::obj();
+                c.set("objects", cas.objects)
+                    .set("object_bytes", cas.object_bytes)
+                    .set("manifests", cas.manifests)
+                    .set("referenced_bytes", cas.referenced_bytes)
+                    .set("dedup_ratio", cas.dedup_ratio)
+                    .set("generation", cas.generation);
+                out.set("cas", c);
+            }
         }
         "audit" => {
             let snap = recover(ctx.snapshot.read()).clone();
@@ -660,9 +993,36 @@ fn dispatch_inner(
             // submission is a promise the departing worker could no
             // longer keep (the check shares the job-table lock with
             // close(), so acceptance vs. refusal is race-free)
-            let job = ctx.jobs.submit(freq).ok_or_else(|| {
-                anyhow::anyhow!("server is shutting down — submission refused")
-            })?;
+            let job = ctx
+                .jobs
+                .submit(JobRequest::Forget(freq))?
+                .ok_or_else(|| {
+                    anyhow::anyhow!(
+                        "server is shutting down — submission refused"
+                    )
+                })?;
+            out.set("ok", true)
+                .set("job", job.as_str())
+                .set("status", "queued");
+        }
+        "launder" => {
+            // admin maintenance: compact the cumulative forgotten set
+            // into a rewritten checkpoint lineage.  Queued like any
+            // other job so it serializes with in-flight forget batches
+            // (the worker drains the burst first, then launders).
+            let id = req
+                .get("id")
+                .and_then(|v| v.as_str())
+                .unwrap_or_default()
+                .to_string();
+            let job = ctx
+                .jobs
+                .submit(JobRequest::Launder { id })?
+                .ok_or_else(|| {
+                    anyhow::anyhow!(
+                        "server is shutting down — submission refused"
+                    )
+                })?;
             out.set("ok", true)
                 .set("job", job.as_str())
                 .set("status", "queued");

@@ -66,6 +66,49 @@ fn leakage_signals_move_the_right_way() {
 }
 
 #[test]
+fn shared_evals_are_bit_transparent() {
+    // The batch-audit optimization: precomputed retain/utility chunks
+    // must yield a report identical to the fully-inline path (both are
+    // pure functions of (state, id list)), for different forget sets
+    // sharing one precomputation — exactly the coalesced-batch shape.
+    let rt = Runtime::load(&harness::artifacts_dir()).expect("artifacts");
+    let corpus = harness::small_corpus(rt.manifest.seq_len);
+    let params = rt.manifest.init_params().unwrap();
+    let view = ModelView::Base(&params);
+    let forget_a: Vec<u64> = corpus.user_samples(0);
+    let forget_b: Vec<u64> = corpus.user_samples(3);
+    let fset: HashSet<u64> =
+        forget_a.iter().chain(forget_b.iter()).copied().collect();
+    let (retain_ids, eval_ids) = harness::audit_splits(&corpus, &fset, 9);
+    let ctx_a = AuditContext {
+        rt: &rt,
+        corpus: &corpus,
+        forget_ids: &forget_a,
+        retain_ids: &retain_ids,
+        eval_ids: &eval_ids,
+        baseline_ppl: Some(60.0),
+        thresholds: Default::default(),
+        seed: 11,
+    };
+    let ctx_b = AuditContext {
+        forget_ids: &forget_b,
+        thresholds: Default::default(),
+        ..ctx_a
+    };
+    let shared = audit::shared_evals(&ctx_a, view).unwrap();
+    for ctx in [&ctx_a, &ctx_b] {
+        let inline = audit::run_audits(ctx, view).unwrap();
+        let reused =
+            audit::run_audits_with(ctx, view, Some(&shared)).unwrap();
+        assert_eq!(
+            inline.to_json().encode(),
+            reused.to_json().encode(),
+            "shared retain/utility chunks must not change the report"
+        );
+    }
+}
+
+#[test]
 fn greedy_decode_is_deterministic_and_shaped() {
     let rt = Runtime::load(&harness::artifacts_dir()).expect("artifacts");
     let params = rt.manifest.init_params().unwrap();

@@ -389,6 +389,183 @@ fn coalesced_batch_is_bit_identical_to_sequential() {
 }
 
 #[test]
+fn laundering_is_bit_identical_and_strictly_cheaper() {
+    // The compaction path (checkpoint laundering): after laundering
+    // away closure F, a fresh forget request G replayed from the
+    // laundered lineage must be bit-identical to a union-filtered
+    // (F ∪ G) replay from the original lineage — and G's plan must get
+    // strictly cheaper, because the rebuild target no longer reaches
+    // back to F's influence.  Two independently trained (hence
+    // bit-identical) systems take the two routes.
+    let rt = Runtime::load(&harness::artifacts_dir()).expect("artifacts");
+    let corpus = harness::small_corpus(rt.manifest.seq_len);
+    let mk = |tag: &str| RunConfig {
+        run_dir: unlearn::util::tempdir(tag),
+        steps: STEPS,
+        accum: 2,
+        checkpoint_every: CKPT_EVERY,
+        checkpoint_keep: 16,
+        ring_window: 4,
+        warmup: 4,
+        ..Default::default()
+    };
+    let mut laundry =
+        harness::build_system(&rt, mk("launder-a"), corpus.clone(), false)
+            .unwrap()
+            .system;
+    let mut union =
+        harness::build_system(&rt, mk("launder-b"), corpus.clone(), false)
+            .unwrap()
+            .system;
+    assert!(laundry.state.bits_equal(&union.state));
+
+    // F: a user whose influence starts early (before checkpoint 4), so
+    // un-laundered history drags every later rebuild back to step < 4
+    let f_req = (0..24u32)
+        .map(|u| ForgetRequest {
+            id: format!("launder-f-{u}"),
+            user: Some(u),
+            sample_ids: vec![],
+            urgency: Urgency::Normal,
+        })
+        .find(|r| {
+            laundry
+                .plan(r)
+                .map(|p| {
+                    p.offending.first().map(|&t| t < CKPT_EVERY).unwrap_or(false)
+                })
+                .unwrap_or(false)
+        })
+        .expect("an early-influence user exists");
+    // G: samples first seen at/after step 5 whose closure stays there
+    let late_set: HashSet<u64> =
+        harness::ids_first_seen_at_or_after(&laundry.records, &laundry.idmap, 5)
+            .into_iter()
+            .collect();
+    let mut g_ids: Vec<u64> = late_set
+        .iter()
+        .copied()
+        .filter(|&id| {
+            let (cl, _) = laundry.closure_of(&ForgetRequest {
+                id: "probe".into(),
+                user: None,
+                sample_ids: vec![id],
+                urgency: Urgency::Normal,
+            });
+            cl.iter().all(|c| late_set.contains(c))
+        })
+        .collect();
+    g_ids.sort_unstable();
+    g_ids.truncate(3);
+    assert!(!g_ids.is_empty(), "need late-influence G candidates");
+    let g_req = |id: &str| ForgetRequest {
+        id: id.into(),
+        user: None,
+        sample_ids: g_ids.clone(),
+        urgency: Urgency::Normal,
+    };
+
+    // ---- both systems forget F (exact path) ---------------------------
+    for sys in [&mut laundry, &mut union] {
+        let o = sys.handle(&f_req).unwrap();
+        assert!(o.executed);
+        assert!(!sys.forgotten.is_empty());
+    }
+    assert!(laundry.state.bits_equal(&union.state));
+
+    // ---- pre-launder plan for G: inflated by F's history --------------
+    let cost_pre = laundry
+        .plan(&g_req("launder-g-pre"))
+        .unwrap()
+        .steps
+        .iter()
+        .find(|s| s.step.kind() == "exact_replay")
+        .expect("replay plannable")
+        .cost
+        .replay_steps;
+
+    // ---- launder F on system A ----------------------------------------
+    let gen_before = laundry.cas_stats().unwrap().generation;
+    let out = laundry
+        .launder(
+            "t-launder",
+            &unlearn::controller::LaunderPolicy {
+                min_extra_replay_records: 1,
+            },
+            false,
+        )
+        .unwrap();
+    assert!(out.executed);
+    assert!(out.checkpoints_written > 0, "contaminated ckpts rewritten");
+    assert!(out.checkpoints_adopted > 0, "θ0 adopted for free");
+    assert_eq!(out.generation, gen_before + 1, "lineage swapped");
+    assert!(laundry.forgotten.is_empty(), "forgotten set reset");
+    assert!(!laundry.laundered.is_empty(), "closure moved to the lineage");
+    assert_eq!(laundry.ring.available(), 0, "ring invalidated by the swap");
+    assert!(
+        laundry.state.bits_equal(&union.state),
+        "laundering must not change the serving state (it IS the \
+         retain-only state already)"
+    );
+    // the store agrees with the in-memory view
+    let store = laundry.store().unwrap();
+    assert_eq!(
+        store.laundered_ids().unwrap().len(),
+        laundry.laundered.len()
+    );
+    // idempotency: a second pass under the same key is suppressed
+    let dup = laundry
+        .launder(
+            "t-launder",
+            &unlearn::controller::LaunderPolicy {
+                min_extra_replay_records: 0,
+            },
+            true,
+        )
+        .unwrap();
+    assert!(!dup.executed);
+
+    // ---- post-launder plan for G: strictly cheaper --------------------
+    let plan_post = laundry.plan(&g_req("launder-g")).unwrap();
+    let cost_post = plan_post
+        .steps
+        .iter()
+        .find(|s| s.step.kind() == "exact_replay")
+        .expect("replay plannable from the laundered lineage")
+        .cost
+        .replay_steps;
+    assert!(
+        cost_post < cost_pre,
+        "laundering must strictly reduce G's replay cost: {cost_post} \
+         vs {cost_pre}"
+    );
+
+    // ---- execute G both ways: bit-identical ---------------------------
+    let o = laundry.handle(&g_req("launder-g")).unwrap();
+    assert_eq!(o.action, ActionKind::ExactReplay, "{:?}", o.escalations);
+    let o = union.handle(&g_req("launder-g")).unwrap();
+    assert_eq!(o.action, ActionKind::ExactReplay, "{:?}", o.escalations);
+    assert!(
+        laundry.state.bits_equal(&union.state),
+        "G from the laundered lineage must equal the union-filtered \
+         (F ∪ G) replay from the original lineage (model {} vs {})",
+        laundry.state.model_hash(),
+        union.state.model_hash()
+    );
+
+    // the laundered store still dedups: adopted + rewritten manifests
+    // share every blob that didn't change
+    let stats = laundry.cas_stats().unwrap();
+    assert!(stats.objects > 0);
+    // manifest chain intact, launder action recorded and signed
+    let chain = laundry.manifest.verify_chain().unwrap();
+    assert!(chain.iter().all(|(_, sig)| *sig));
+    assert!(chain.iter().any(|(e, _)| {
+        e.get("action").and_then(|v| v.as_str()) == Some("launder")
+    }));
+}
+
+#[test]
 fn coalesced_ring_revert_matches_sequential() {
     // The batch coalescer's second mode: when the union's influence is
     // entirely inside the delta-ring window, the shared rebuild is a

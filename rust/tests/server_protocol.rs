@@ -12,6 +12,112 @@ use unlearn::runtime::Runtime;
 use unlearn::server::{dispatch, drain_queue_once, ServerCtx};
 
 #[test]
+fn job_wal_recovers_pending_and_launder_op_compacts() {
+    let rt = Runtime::load(&harness::artifacts_dir()).expect("artifacts");
+    let corpus = harness::small_corpus(rt.manifest.seq_len);
+    let cfg = RunConfig {
+        run_dir: unlearn::util::tempdir("server-wal"),
+        steps: 8,
+        accum: 2,
+        checkpoint_every: 4,
+        warmup: 2,
+        ..Default::default()
+    };
+    let wal_path = cfg.run_dir.join("jobs.wal");
+    let trained = harness::build_system(&rt, cfg, corpus, false).unwrap();
+    let system = Mutex::new(trained.system);
+
+    // a replay-bound user (offending steps in the base)
+    let user = {
+        let sys = system.lock().unwrap();
+        (0..24u32)
+            .find(|&u| {
+                sys.plan(&unlearn::controller::ForgetRequest {
+                    id: format!("probe-{u}"),
+                    user: Some(u),
+                    sample_ids: vec![],
+                    urgency: unlearn::controller::Urgency::Normal,
+                })
+                .map(|p| !p.offending.is_empty())
+                .unwrap_or(false)
+            })
+            .expect("a replay-bound user exists")
+    };
+
+    // ---- submit into a WAL-backed queue, then "crash" (drop the ctx
+    // without draining): accepted work must survive ---------------------
+    {
+        let ctx = ServerCtx::with_jobs_wal(&system, &wal_path).unwrap();
+        let r = dispatch(
+            &format!(r#"{{"op":"submit","id":"wal-0","user":{user}}}"#),
+            &ctx,
+        );
+        assert_eq!(r.get("ok").unwrap().as_bool(), Some(true), "{r}");
+        assert_eq!(r.get("job").unwrap().as_str(), Some("job-1"));
+        let r = dispatch(r#"{"op":"launder"}"#, &ctx);
+        assert_eq!(r.get("ok").unwrap().as_bool(), Some(true), "{r}");
+        assert_eq!(r.get("job").unwrap().as_str(), Some("job-2"));
+        assert_eq!(ctx.jobs.queued_len(), 2);
+        // no drain — the process dies with the queue full
+    }
+
+    // ---- restart: the pending suffix is re-queued under its original
+    // ids and the sequence resumes past them ----------------------------
+    let ctx = ServerCtx::with_jobs_wal(&system, &wal_path).unwrap();
+    assert_eq!(ctx.jobs.queued_len(), 2, "recovered pending jobs");
+    let r = dispatch(r#"{"op":"poll","job":"job-1"}"#, &ctx);
+    assert_eq!(r.get("status").unwrap().as_str(), Some("queued"), "{r}");
+    assert_eq!(r.get("request_id").unwrap().as_str(), Some("wal-0"));
+    let r = dispatch(r#"{"op":"poll","job":"job-2"}"#, &ctx);
+    assert_eq!(r.get("kind").unwrap().as_str(), Some("launder"), "{r}");
+
+    // ---- drain: forget batch first, then the laundering pass ----------
+    assert_eq!(drain_queue_once(&ctx), 2);
+    let r = dispatch(r#"{"op":"poll","job":"job-1"}"#, &ctx);
+    assert_eq!(r.get("status").unwrap().as_str(), Some("done"), "{r}");
+    let r = dispatch(r#"{"op":"poll","job":"job-2"}"#, &ctx);
+    assert_eq!(r.get("status").unwrap().as_str(), Some("done"), "{r}");
+    assert_eq!(
+        r.get_path(&["result", "executed"]).unwrap().as_bool(),
+        Some(true),
+        "laundering executed: {r}"
+    );
+    {
+        let sys = system.lock().unwrap();
+        assert!(sys.forgotten.is_empty(), "laundering reset the set");
+        assert!(!sys.laundered.is_empty());
+    }
+
+    // status reflects the compaction through the refreshed snapshot
+    let r = dispatch(r#"{"op":"status"}"#, &ctx);
+    assert_eq!(r.get("forgotten_pending").unwrap().as_u64(), Some(0), "{r}");
+    assert!(r.get("laundered_ids").unwrap().as_u64().unwrap() > 0);
+    assert_eq!(
+        r.get("launder_recommended").unwrap().as_bool(),
+        Some(false),
+        "nothing left to compact: {r}"
+    );
+    assert!(
+        r.get_path(&["cas", "generation"]).unwrap().as_u64().unwrap() >= 1,
+        "lineage swapped: {r}"
+    );
+    assert!(
+        r.get_path(&["cas", "objects"]).unwrap().as_u64().unwrap() > 0
+    );
+
+    // ---- a second restart sees a fully drained WAL --------------------
+    drop(ctx);
+    let ctx = ServerCtx::with_jobs_wal(&system, &wal_path).unwrap();
+    assert_eq!(ctx.jobs.queued_len(), 0, "completed work is not re-run");
+    // new submissions continue the id sequence instead of reusing ids
+    let r = dispatch(
+        &format!(r#"{{"op":"submit","id":"wal-1","user":{user}}}"#),
+        &ctx,
+    );
+    assert_eq!(r.get("job").unwrap().as_str(), Some("job-3"), "{r}");
+}
+
+#[test]
 fn protocol_ops_roundtrip() {
     let rt = Runtime::load(&harness::artifacts_dir()).expect("artifacts");
     let corpus = harness::small_corpus(rt.manifest.seq_len);
