@@ -69,21 +69,35 @@ fn json_main() {
             .into_iter()
             .take(4)
             .collect();
-    // nearest-checkpoint auto-start (the controller's replay path)
+    // nearest-checkpoint auto-start (the controller's replay path),
+    // A/B: default segment-parallel dispatch vs forced sequential
+    let par_opts = ReplayOptions::default();
+    let seq_opts = ReplayOptions {
+        sequential: true,
+        ..ReplayOptions::default()
+    };
     let (k, outcome) = replay_filter_nearest(
         &f.rt, &f.corpus, &store, &records, &idmap, &closure, Some(&pins),
-        &ReplayOptions::default(),
+        &par_opts,
     )
     .unwrap();
     let replayed = (f.steps - k).max(1);
     let st = time_it(0, 3, || {
         replay_filter_nearest(
             &f.rt, &f.corpus, &store, &records, &idmap, &closure,
-            Some(&pins), &ReplayOptions::default(),
+            Some(&pins), &par_opts,
+        )
+        .unwrap()
+    });
+    let st_seq = time_it(0, 3, || {
+        replay_filter_nearest(
+            &f.rt, &f.corpus, &store, &records, &idmap, &closure,
+            Some(&pins), &seq_opts,
         )
         .unwrap()
     });
     let ns_per_step = ns(st.mean) / replayed as f64;
+    let ns_per_step_seq = ns(st_seq.mean) / replayed as f64;
     drop(outcome);
 
     // fail-closed perf gate against the committed baseline
@@ -97,7 +111,13 @@ fn json_main() {
         }
     }
     let mut j = perf::replay_json(ns_per_step, ns(t_step), f.steps);
+    perf::set_replay_ab(&mut j, ns_per_step_seq, ns_per_step);
     j.set("from_checkpoint", k).set("replayed_steps", replayed);
+    println!(
+        "replay ns/step: sequential {ns_per_step_seq:.0} vs parallel \
+         {ns_per_step:.0} ({:.2}x)",
+        ns_per_step_seq / ns_per_step.max(1.0)
+    );
     // a committed null placeholder (toolchain-less host) is promoted to
     // a real baseline by the first measured run — loudly, so the gate's
     // record-only phase is visible in CI logs
@@ -166,6 +186,32 @@ fn main() {
             fmt_secs(replayed as f64 * t_step)
         );
     }
+
+    header(
+        "Segment-parallel vs sequential replay (pinned reduce, bit-identical)",
+        &["Mode", "From ckpt", "Latency", "Speedup"],
+    );
+    let ck0 = store.load_full(0).unwrap();
+    let st_seq = time_it(0, 2, || {
+        replay_filter(
+            &f.rt, &f.corpus, &ck0, &records, &idmap, &closure, Some(&pins),
+            &ReplayOptions { sequential: true, ..ReplayOptions::default() },
+        )
+        .unwrap()
+    });
+    let st_par = time_it(0, 2, || {
+        replay_filter(
+            &f.rt, &f.corpus, &ck0, &records, &idmap, &closure, Some(&pins),
+            &ReplayOptions::default(),
+        )
+        .unwrap()
+    });
+    println!("sequential | C_0 | {} | 1.00x", fmt_secs(st_seq.mean));
+    println!(
+        "parallel | C_0 | {} | {:.2}x",
+        fmt_secs(st_par.mean),
+        st_seq.mean / st_par.mean.max(1e-12)
+    );
 
     header(
         "Nearest-checkpoint auto-start (controller path)",

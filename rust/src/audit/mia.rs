@@ -13,7 +13,7 @@
 
 use crate::util::rng::SplitMix64;
 
-use super::{per_example_losses, AuditContext, ModelView};
+use super::{per_example_losses, AuditContext, ModelView, SharedEvals};
 
 /// MIA result.
 #[derive(Debug, Clone)]
@@ -74,20 +74,34 @@ pub fn mia_auc(
     mia_auc_with(ctx, view, None)
 }
 
-/// [`mia_auc`] reusing precomputed control losses (the batch-shared
-/// chunk — controls depend only on the state, not the request).  The
-/// losses must be `per_example_losses` over `ctx.retain_ids` under the
-/// same `view`; results are bit-identical to the unshared path because
-/// both sides of the AUC are pure functions of (state, id list).
+/// [`mia_auc`] reusing batch-shared precomputations: the control
+/// losses (state-dependent only, evaluated once per batch) and — when
+/// the coalescer batched them — the per-request forget-probe losses
+/// (`SharedEvals::forget_losses`, one `eval_batch` call over the whole
+/// batch's closure union).  Both must come from the same `view`;
+/// results are bit-identical to the unshared path because every
+/// per-example loss is a pure function of (state, sample).  A shared
+/// map missing any probe id falls back to the inline evaluation — the
+/// precompute is an optimization, never a correctness dependency.
 pub fn mia_auc_with(
     ctx: &AuditContext<'_>,
     view: ModelView<'_>,
-    shared_controls: Option<&[f32]>,
+    shared: Option<&SharedEvals>,
 ) -> anyhow::Result<MiaResult> {
-    let forget_losses =
-        per_example_losses(ctx.rt, view, ctx.corpus, ctx.forget_ids)?;
-    let control_losses = match shared_controls {
-        Some(c) => c.to_vec(),
+    let precomputed: Option<Vec<f32>> = shared
+        .and_then(|s| s.forget_losses.as_ref())
+        .and_then(|map| {
+            ctx.forget_ids
+                .iter()
+                .map(|id| map.get(id).copied())
+                .collect()
+        });
+    let forget_losses = match precomputed {
+        Some(l) => l,
+        None => per_example_losses(ctx.rt, view, ctx.corpus, ctx.forget_ids)?,
+    };
+    let control_losses = match shared {
+        Some(s) => s.control_losses.clone(),
         None => per_example_losses(ctx.rt, view, ctx.corpus, ctx.retain_ids)?,
     };
     // member-likeness score = -loss

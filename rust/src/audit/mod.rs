@@ -38,6 +38,22 @@ impl<'a> ModelView<'a> {
         }
     }
 
+    /// Batched eval over N concatenated eval chunks — one executor
+    /// call; bit-identical to per-chunk [`ModelView::eval_loss`] (see
+    /// `Executor::eval_batch`).
+    pub fn eval_batch(
+        &self,
+        rt: &Runtime,
+        tokens: &[i32],
+    ) -> anyhow::Result<(Vec<f32>, Vec<f32>)> {
+        match self {
+            ModelView::Base(p) => rt.eval_batch(p, None, tokens),
+            ModelView::Adapter { base, lora } => {
+                rt.eval_batch(base, Some(lora), tokens)
+            }
+        }
+    }
+
     pub fn next_logits(
         &self,
         rt: &Runtime,
@@ -53,8 +69,20 @@ impl<'a> ModelView<'a> {
     }
 }
 
-/// Per-example (sum-loss, non-PAD token count) over an ID list
-/// (chunked through the fixed eval batch; padded slots discarded).
+/// Upper bound on examples per `eval_batch` executor call: batching
+/// wins come from amortizing the call overhead across dozens of
+/// chunks, not from unbounded buffers — a closure-union probe over a
+/// huge burst must not materialize memory proportional to its size.
+/// (512 examples × seq_len 64 ≈ 128 KiB of i32 tokens per call.)
+const MAX_EXAMPLES_PER_EVAL_CALL: usize = 512;
+
+/// Per-example (sum-loss, non-PAD token count) over an ID list,
+/// batched: ONE `eval_batch` executor call per
+/// [`MAX_EXAMPLES_PER_EVAL_CALL`]-example super-chunk (slots beyond
+/// the list stay PAD and are discarded; the token buffer is reused
+/// across super-chunks).  Bit-identical to the per-chunk `eval_loss`
+/// loop it replaced — per-slot losses are pure functions of their own
+/// tokens, so chunk composition cannot move a bit.
 pub fn per_example_loss_counts(
     rt: &Runtime,
     view: ModelView<'_>,
@@ -64,16 +92,19 @@ pub fn per_example_loss_counts(
     let be = rt.manifest.eval_batch;
     let s = rt.manifest.seq_len;
     let mut out = Vec::with_capacity(ids.len());
-    for chunk in ids.chunks(be) {
-        let mut tokens = vec![0i32; be * s];
-        for (slot, &id) in chunk.iter().enumerate() {
+    let mut tokens: Vec<i32> = Vec::new();
+    for group in ids.chunks(MAX_EXAMPLES_PER_EVAL_CALL) {
+        let chunks = group.len().div_ceil(be);
+        tokens.clear();
+        tokens.resize(chunks * be * s, 0);
+        for (i, &id) in group.iter().enumerate() {
             let sample = corpus
                 .by_id(id)
                 .ok_or_else(|| anyhow::anyhow!("unknown sample {id}"))?;
-            tokens[slot * s..(slot + 1) * s].copy_from_slice(&sample.tokens);
+            tokens[i * s..(i + 1) * s].copy_from_slice(&sample.tokens);
         }
-        let (losses, counts) = view.eval_loss(rt, &tokens)?;
-        for i in 0..chunk.len() {
+        let (losses, counts) = view.eval_batch(rt, &tokens)?;
+        for i in 0..group.len() {
             out.push((losses[i], counts[i]));
         }
     }
@@ -94,7 +125,9 @@ pub fn per_example_losses(
         .collect())
 }
 
-/// Per-text per-token loss for raw strings (canary variants etc.).
+/// Per-text per-token loss for raw strings (canary variants etc.) —
+/// batched through `eval_batch` in bounded super-chunks, like
+/// [`per_example_loss_counts`].
 pub fn per_text_losses(
     rt: &Runtime,
     view: ModelView<'_>,
@@ -104,14 +137,17 @@ pub fn per_text_losses(
     let s = rt.manifest.seq_len;
     let tok = crate::data::tokenizer::ByteTokenizer;
     let mut out = Vec::with_capacity(texts.len());
-    for chunk in texts.chunks(be) {
-        let mut tokens = vec![0i32; be * s];
-        for (slot, text) in chunk.iter().enumerate() {
-            tokens[slot * s..(slot + 1) * s]
+    let mut tokens: Vec<i32> = Vec::new();
+    for group in texts.chunks(MAX_EXAMPLES_PER_EVAL_CALL) {
+        let chunks = group.len().div_ceil(be);
+        tokens.clear();
+        tokens.resize(chunks * be * s, 0);
+        for (i, text) in group.iter().enumerate() {
+            tokens[i * s..(i + 1) * s]
                 .copy_from_slice(&tok.encode_fixed(text, s));
         }
-        let (losses, counts) = view.eval_loss(rt, &tokens)?;
-        for i in 0..chunk.len() {
+        let (losses, counts) = view.eval_batch(rt, &tokens)?;
+        for i in 0..group.len() {
             out.push(losses[i] / counts[i].max(1.0));
         }
     }
@@ -222,6 +258,12 @@ pub struct SharedEvals {
     pub control_losses: Vec<f32>,
     /// `exp(mean loss/token)` over `eval_ids` (utility gate input).
     pub retain_ppl: f64,
+    /// Per-example per-token losses for the *forget-probe* ids of every
+    /// request in the batch, precomputed by ONE `eval_batch` call over
+    /// their union (see [`batch_forget_losses`]).  `None` → each
+    /// request's MIA probe evaluates inline.  Bit-transparent either
+    /// way: per-slot losses are pure functions of (state, sample).
+    pub forget_losses: Option<std::collections::HashMap<u64, f32>>,
 }
 
 /// Evaluate the shared chunks once (the per-batch precomputation).
@@ -234,7 +276,28 @@ pub fn shared_evals(
             ctx.rt, view, ctx.corpus, ctx.retain_ids,
         )?,
         retain_ppl: utility::retain_ppl(ctx, view)?,
+        forget_losses: None,
     })
+}
+
+/// The per-request forget probes of a coalesced batch, batched: dedup
+/// the union of the member closures and evaluate it in ONE `eval_batch`
+/// executor call, returning id → per-token loss.  Each member's MIA
+/// probe then reads its own closure's losses out of the map — N
+/// requests' probes for the price of one graph round-trip, bit-
+/// identical to N per-request `eval_loss` loops.
+pub fn batch_forget_losses(
+    rt: &Runtime,
+    view: ModelView<'_>,
+    corpus: &Corpus,
+    closures: &[&[u64]],
+) -> anyhow::Result<std::collections::HashMap<u64, f32>> {
+    let mut ids: Vec<u64> =
+        closures.iter().flat_map(|c| c.iter().copied()).collect();
+    ids.sort_unstable();
+    ids.dedup();
+    let losses = per_example_losses(rt, view, corpus, &ids)?;
+    Ok(ids.into_iter().zip(losses).collect())
 }
 
 /// Run all five audits against a model view (Alg. A.4 line 11).
@@ -252,11 +315,7 @@ pub fn run_audits_with(
     view: ModelView<'_>,
     shared: Option<&SharedEvals>,
 ) -> anyhow::Result<AuditReport> {
-    let mia = mia::mia_auc_with(
-        ctx,
-        view,
-        shared.map(|s| s.control_losses.as_slice()),
-    )?;
+    let mia = mia::mia_auc_with(ctx, view, shared)?;
     let (mu, sigma) = canary::exposure(ctx, view)?;
     let extraction_rate = extraction::extraction_rate(ctx, view)?;
     let fuzzy_recall = fuzzy::fuzzy_recall(ctx, view)?;

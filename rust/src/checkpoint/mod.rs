@@ -808,8 +808,24 @@ impl LineageStage<'_> {
         // the swap point: readers see the old lineage before this
         // rename and the complete new one after it
         write_atomic(&self.store.lineage_file(), &j.pretty())?;
-        fs::remove_dir_all(self.store.lineage_dir(previous))?;
-        self.store.gc()?;
+        // The swap is DURABLE from the rename above: cleanup must not
+        // be able to fail a committed commit — the caller's in-memory
+        // transition and signed-manifest record have to follow the
+        // swap no matter what.  A failed retire/sweep only strands the
+        // old generation's blobs temporarily: the next store open
+        // retires every non-active lineage dir and re-runs the GC.
+        let cleanup = (|| -> anyhow::Result<()> {
+            fs::remove_dir_all(self.store.lineage_dir(previous))?;
+            self.store.gc()?;
+            Ok(())
+        })();
+        if let Err(e) = cleanup {
+            eprintln!(
+                "post-swap lineage cleanup failed (committed swap \
+                 unaffected; the next store open retires and re-sweeps): \
+                 {e:#}"
+            );
+        }
         Ok(())
     }
 

@@ -132,14 +132,32 @@ pub fn record_first_baseline(
 }
 
 /// The `BENCH_replay.json` document for a measured run.
+/// `replay_ns_per_step` is the DEFAULT path — segment-parallel
+/// dispatch through `grad_accumulate` — and is what the regression
+/// gate reads; `ns_per_step_sequential` (schema 2) records the forced
+/// sequential traversal so the speedup lands in the committed history.
 pub fn replay_json(ns_per_step: f64, t_step_ns: f64, steps: u32) -> Json {
     let mut j = Json::obj();
     j.set("bench", "replay")
         .set("replay_ns_per_step", ns_per_step)
         .set("train_t_step_ns", t_step_ns)
         .set("steps", steps)
-        .set("schema", 1);
+        .set("schema", 2);
     j
+}
+
+/// Attach the sequential-traversal A/B numbers to a
+/// [`replay_json`] document.
+pub fn set_replay_ab(j: &mut Json, ns_sequential: f64, ns_parallel: f64) {
+    j.set("replay_ns_per_step_sequential", ns_sequential)
+        .set(
+            "parallel_speedup",
+            if ns_parallel > 0.0 {
+                Json::from(ns_sequential / ns_parallel)
+            } else {
+                Json::Null
+            },
+        );
 }
 
 #[cfg(test)]

@@ -14,6 +14,13 @@ use crate::util::json::{parse, Json};
 /// The pinned execution environment.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct Pins {
+    /// Executor backend discriminator ("reference" / "pjrt") — the
+    /// [`crate::runtime::ExecutorFingerprint`] kind.  Reference and
+    /// PJRT runtimes pin different artifact hash sets anyway, but the
+    /// kind pin makes the mixed-backend refusal first-class: a replay
+    /// under a different backend than trained fails closed on this
+    /// field alone.
+    pub executor_kind: String,
     /// SHA-256 of every AOT artifact (HLO text, init params), sorted by
     /// name — the "CUDA/cuDNN version pins" analogue: the executable IS
     /// the kernel algorithm choice here.
@@ -73,6 +80,11 @@ impl Pins {
             }
         };
         check(
+            "executor_kind",
+            &self.executor_kind,
+            &current.executor_kind,
+        );
+        check(
             "model_config_hash",
             &self.model_config_hash,
             &current.model_config_hash,
@@ -126,7 +138,8 @@ impl Pins {
             arts.set(name, hash.as_str());
         }
         let mut j = Json::obj();
-        j.set("artifact_hashes", arts)
+        j.set("executor_kind", self.executor_kind.as_str())
+            .set("artifact_hashes", arts)
             .set("model_config_hash", self.model_config_hash.as_str())
             .set("tokenizer_checksum", self.tokenizer_checksum.as_str())
             .set("param_count", self.param_count)
@@ -155,6 +168,13 @@ impl Pins {
             }
         }
         Ok(Pins {
+            // pins saved before the executor-kind pin existed parse as
+            // "" and drift against any current capture — fail-closed
+            executor_kind: j
+                .get("executor_kind")
+                .and_then(|v| v.as_str())
+                .unwrap_or_default()
+                .to_string(),
             artifact_hashes,
             model_config_hash: s("model_config_hash")?,
             tokenizer_checksum: s("tokenizer_checksum")?,
@@ -188,6 +208,7 @@ mod tests {
 
     fn pins() -> Pins {
         Pins {
+            executor_kind: "reference".into(),
             artifact_hashes: vec![
                 ("train_step".into(), "aaa".into()),
                 ("adamw_update".into(), "bbb".into()),
@@ -215,6 +236,10 @@ mod tests {
         let mut variants = Vec::new();
         let mut p = pins();
         p.model_config_hash = "other".into();
+        variants.push(p);
+        // mixed-backend refusal: a PJRT capture against reference pins
+        let mut p = pins();
+        p.executor_kind = "pjrt".into();
         variants.push(p);
         let mut p = pins();
         p.reduction = "mean".into();

@@ -36,6 +36,11 @@ pub struct RunConfig {
     pub hmac_key: Option<Vec<u8>>,
     /// WAL records per segment file.
     pub wal_segment_records: usize,
+    /// Admin server: automatically run a laundering pass from the queue
+    /// worker when `launder_recommended` flips after a drained forget
+    /// burst (off by default — the operator/cron drives laundering via
+    /// the `launder` op otherwise).
+    pub auto_launder: bool,
 }
 
 impl Default for RunConfig {
@@ -55,6 +60,7 @@ impl Default for RunConfig {
             run_seed: 0xC0FFEE,
             hmac_key: None,
             wal_segment_records: 4096,
+            auto_launder: false,
         }
     }
 }
@@ -113,6 +119,9 @@ impl RunConfig {
         }
         c.wal_segment_records =
             get_u("wal_segment_records", c.wal_segment_records as u64) as usize;
+        if let Some(b) = j.get("auto_launder").and_then(|v| v.as_bool()) {
+            c.auto_launder = b;
+        }
         Ok(c)
     }
 
@@ -130,7 +139,8 @@ impl RunConfig {
             .set("ring_window", self.ring_window)
             .set("ring_revert_optimizer", self.ring_revert_optimizer)
             .set("run_seed", self.run_seed)
-            .set("wal_segment_records", self.wal_segment_records);
+            .set("wal_segment_records", self.wal_segment_records)
+            .set("auto_launder", self.auto_launder);
         j
     }
 }

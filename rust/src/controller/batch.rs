@@ -34,7 +34,9 @@
 
 use std::collections::HashSet;
 
-use crate::audit::{run_audits_with, shared_evals, ModelView};
+use crate::audit::{
+    batch_forget_losses, run_audits_with, shared_evals, ModelView,
+};
 use crate::manifest::ActionKind;
 use crate::replay::{offending_steps, replay_filter, ReplayOptions, ReplayOutcome};
 use crate::util::json::Json;
@@ -327,17 +329,32 @@ pub fn execute_batch(
                 //
                 // Every member audits the SAME post-rebuild state, so
                 // the request-independent chunks (MIA retain controls,
-                // utility PPL) are evaluated once here and reused —
-                // only the per-request forget probes run per member.
-                // Bit-transparent: the chunks are pure functions of
-                // (state, id list).  On a precompute failure fall back
-                // to fully-inline audits so one bad eval cannot sink
-                // the whole batch.
-                let shared = shared_evals(
+                // utility PPL) are evaluated once here and reused, AND
+                // the per-request forget probes are batched: one
+                // `eval_batch` call over the union of the member
+                // closures feeds every member's MIA probe.
+                // Bit-transparent both ways: per-example losses are
+                // pure functions of (state, sample).  On a precompute
+                // failure fall back to fully-inline audits so one bad
+                // eval cannot sink the whole batch.
+                let mut shared = shared_evals(
                     &sys.audit_ctx(&[]),
                     ModelView::Base(&sys.state.params),
                 )
                 .ok();
+                if let Some(sh) = shared.as_mut() {
+                    let member_closures: Vec<&[u64]> = coalesced
+                        .iter()
+                        .map(|m| m.plan.closure.as_slice())
+                        .collect();
+                    sh.forget_losses = batch_forget_losses(
+                        sys.rt,
+                        ModelView::Base(&sys.state.params),
+                        &sys.corpus,
+                        &member_closures,
+                    )
+                    .ok();
+                }
                 let n = coalesced.len();
                 for m in &coalesced {
                     let req = &reqs[m.idx];

@@ -87,7 +87,7 @@ pub(super) fn replay_tail(
     from_checkpoint: u32,
     filter: &HashSet<u64>,
 ) -> anyhow::Result<ReplayOutcome> {
-    let ck = sys.store()?.load_full(from_checkpoint)?;
+    let ck = sys.store().load_full(from_checkpoint)?;
     replay_filter(
         sys.rt,
         &sys.corpus,

@@ -82,7 +82,9 @@ pub fn execute_launder(
     if sys.manifest.was_executed(id) {
         return Ok(LaunderOutcome {
             executed: false,
-            generation: 0,
+            // report the REAL lineage state — a duplicate suppression
+            // must not read as a generation regression to pollers
+            generation: sys.store().active_generation().unwrap_or(0),
             from_checkpoint: 0,
             target_step: 0,
             laundered_now: 0,
@@ -101,7 +103,6 @@ pub fn execute_launder(
         return Err(UnlearnError::NothingToLaunder.into());
     }
 
-    let store = sys.store()?;
     let off = offending_steps(&sys.records, &sys.idmap, &sys.forgotten)?;
     let target = match off.first() {
         Some(&t) => t,
@@ -151,20 +152,22 @@ pub fn execute_launder(
     let mut filter = sys.forgotten.clone();
     filter.extend(sys.laundered.iter().copied());
 
-    let checkpoints = store.list_full()?;
+    let checkpoints = sys.store().list_full()?;
     let clean: Vec<u32> =
         checkpoints.iter().copied().filter(|&s| s <= target).collect();
     let contaminated: Vec<u32> =
         checkpoints.iter().copied().filter(|&s| s > target).collect();
 
     // ---- stage the successor lineage --------------------------------
-    let stage = store.begin_lineage()?;
+    // (the stage borrows the cached store handle; every borrow below is
+    // shared — the first &mut use of `sys` comes after commit/abort)
+    let stage = sys.store().begin_lineage()?;
     let generation = stage.generation;
     let staged = (|| -> anyhow::Result<crate::checkpoint::TrainState> {
         for &s in &clean {
             stage.adopt_full(s)?;
         }
-        store.load_full(from_checkpoint)
+        sys.store().load_full(from_checkpoint)
     })();
     let start = match staged {
         Ok(s) => s,
@@ -214,10 +217,20 @@ pub fn execute_launder(
     // audit hard-gates the swap: refusal discards the staged lineage
     // and leaves state and store untouched.
     let state_changed = !sys.state.bits_equal(&outcome.state);
-    let audit = run_audits(
+    let audit = match run_audits(
         &sys.audit_ctx(&forgotten),
         ModelView::Base(&outcome.state.params),
-    )?;
+    ) {
+        Ok(a) => a,
+        Err(e) => {
+            // an audit that cannot even run must not leak the staged
+            // lineage (its manifests would pin blobs through every GC)
+            stage.abort()?;
+            return Err(e.context(
+                "laundering audit errored — staged lineage discarded",
+            ));
+        }
+    };
     if !audit.pass() && state_changed {
         stage.abort()?;
         return Err(anyhow::Error::new(UnlearnError::AuditFailed {
@@ -247,6 +260,21 @@ pub fn execute_launder(
     sys.laundered = new_laundered.iter().copied().collect();
     sys.reset_forgotten()?;
 
+    // The swap restructured the store: re-run open's fail-closed
+    // validation on the cached handle (safe here — commit consumed the
+    // stage, no staged dir is live).  Best-effort AFTER the in-memory
+    // transition: the swap is durable, so nothing may now prevent the
+    // system state and the signed-manifest record from following it —
+    // and the stale handle stays correct anyway (every query re-reads
+    // LINEAGE.json; revalidation is belt-and-braces, not correctness).
+    let reopen_err = sys.reopen_store().err();
+    if let Some(e) = &reopen_err {
+        eprintln!(
+            "post-swap store revalidation failed (continuing on the \
+             root-based handle): {e:#}"
+        );
+    }
+
     // best-effort accounting: the swap is already committed, so a
     // stats hiccup must not fail the pass (and must not widen the
     // window in which the manifest lacks the launder record)
@@ -262,6 +290,9 @@ pub fn execute_launder(
         .set("checkpoints_adopted", clean.len())
         .set("applied_steps", outcome.invariants.applied_steps)
         .set("state_changed", state_changed);
+    if let Some(e) = &reopen_err {
+        details.set("store_revalidation_error", format!("{e:#}"));
+    }
     if let Some(c) = &cas {
         details
             .set("cas_objects", c.objects)
@@ -316,10 +347,9 @@ fn commit_reset_only(
         details.clone(),
         None,
     )?;
-    let store = sys.store()?;
     Ok(LaunderOutcome {
         executed: true,
-        generation: store.active_generation()?,
+        generation: sys.store().active_generation()?,
         from_checkpoint: 0,
         target_step: 0,
         laundered_now: forgotten.len(),

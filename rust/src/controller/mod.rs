@@ -108,6 +108,14 @@ pub struct UnlearnSystem<'rt> {
     pub corpus: Corpus,
     /// Current serving state (θ, Ω).
     pub state: TrainState,
+    /// The run's content-addressed checkpoint store, validated ONCE at
+    /// open and cached — `CheckpointStore::open` re-runs a fail-closed
+    /// sweep (manifest parses + object stats + lineage dirs) that is
+    /// redundant I/O on the admin hot path when repeated per call.
+    /// Queries still re-read `LINEAGE.json`, so the handle observes a
+    /// committed swap; [`UnlearnSystem::reopen_store`] re-validates
+    /// after one (the only path that restructures the store).
+    pub store: CheckpointStore,
     pub ring: DeltaRing,
     pub adapters: AdapterRegistry,
     pub fisher: Option<FisherCache>,
@@ -245,18 +253,28 @@ impl<'rt> UnlearnSystem<'rt> {
         )
     }
 
-    /// Open the run's content-addressed checkpoint store (the active
-    /// lineage's view).
-    pub fn store(&self) -> anyhow::Result<CheckpointStore> {
-        CheckpointStore::open(
+    /// The run's content-addressed checkpoint store (the active
+    /// lineage's view) — the handle validated at system construction.
+    pub fn store(&self) -> &CheckpointStore {
+        &self.store
+    }
+
+    /// Invalidate the cached store handle: re-run `open`'s fail-closed
+    /// validation and replace it.  Called after a lineage swap
+    /// (laundering) — the one operation that restructures the store.
+    /// Must never run while a staged lineage is live: `open` retires
+    /// every non-active lineage directory.
+    pub fn reopen_store(&mut self) -> anyhow::Result<()> {
+        self.store = CheckpointStore::open(
             &self.cfg.run_dir.join("ckpt"),
             self.cfg.checkpoint_keep,
-        )
+        )?;
+        Ok(())
     }
 
     /// CAS accounting for the admin plane (`status`) and benches.
     pub fn cas_stats(&self) -> anyhow::Result<crate::checkpoint::CasStats> {
-        self.store()?.stats()
+        self.store.stats()
     }
 
     /// Plan a laundering pass (pure dry-run; `Ok(None)` = below the
@@ -285,11 +303,10 @@ impl<'rt> UnlearnSystem<'rt> {
     /// List the stored full checkpoints (ascending) and the on-disk
     /// size of the latest one — the planner's cost/fallback inputs.
     pub fn checkpoint_index(&self) -> anyhow::Result<(Vec<u32>, u64)> {
-        let store = self.store()?;
-        let checkpoints = store.list_full()?;
+        let checkpoints = self.store.list_full()?;
         let checkpoint_bytes = checkpoints
             .last()
-            .map(|&s| store.full_checkpoint_bytes(s).unwrap_or(0))
+            .map(|&s| self.store.full_checkpoint_bytes(s).unwrap_or(0))
             .unwrap_or(0);
         Ok((checkpoints, checkpoint_bytes))
     }
@@ -309,12 +326,25 @@ impl<'rt> UnlearnSystem<'rt> {
         checkpoints: Vec<u32>,
         checkpoint_bytes: u64,
     ) -> SystemView<'_> {
-        let step_secs_mean = self
+        // Replay-cost unit: seconds per WAL record.  Prefer the
+        // amortized cost of the batched segment entry point — it
+        // measures the path replay actually takes, INCLUDING the
+        // segment-parallel speedup — and fall back to the raw
+        // train_step timer when no segment has run yet.
+        let seg_mbs = self
             .rt
             .metrics
-            .timer("exec.train_step")
-            .map(|(_, _, mean)| mean)
-            .unwrap_or(0.0);
+            .counter("exec.grad_accumulate.microbatches");
+        let step_secs_mean = match self.rt.metrics.timer("exec.grad_accumulate")
+        {
+            Some((n, tot, _)) if n > 0 && seg_mbs > 0 => tot / seg_mbs as f64,
+            _ => self
+                .rt
+                .metrics
+                .timer("exec.train_step")
+                .map(|(_, _, mean)| mean)
+                .unwrap_or(0.0),
+        };
         SystemView {
             corpus: &self.corpus,
             ndindex: &self.ndindex,

@@ -139,7 +139,10 @@ pub fn open_or_build_system<'rt>(
         wal_dir: cfg.run_dir.join("wal"),
         run_dir: cfg.run_dir.clone(),
     };
-    Ok((system_from_run(rt, cfg, corpus, out, estimate_fisher)?, true))
+    Ok((
+        system_from_run_with_store(rt, cfg, corpus, out, estimate_fisher, store)?,
+        true,
+    ))
 }
 
 /// Assemble the controller system from a finished training run.
@@ -149,6 +152,23 @@ pub fn system_from_run<'rt>(
     corpus: Corpus,
     out: TrainOutput,
     estimate_fisher: bool,
+) -> anyhow::Result<TrainedSystem<'rt>> {
+    let store =
+        CheckpointStore::open(&cfg.run_dir.join("ckpt"), cfg.checkpoint_keep)?;
+    system_from_run_with_store(rt, cfg, corpus, out, estimate_fisher, store)
+}
+
+/// [`system_from_run`] over an already-validated store handle — the
+/// resume path opened (and fail-closed-swept) one to find the latest
+/// checkpoint; re-opening here would double the startup I/O the cached
+/// handle exists to avoid.
+fn system_from_run_with_store<'rt>(
+    rt: &'rt Runtime,
+    cfg: RunConfig,
+    corpus: Corpus,
+    out: TrainOutput,
+    estimate_fisher: bool,
+    store: CheckpointStore,
 ) -> anyhow::Result<TrainedSystem<'rt>> {
     let (records, idmap, pins) = load_run(&cfg.run_dir, cfg.hmac_key.clone())?;
     let ndindex = build_index(&corpus);
@@ -174,8 +194,6 @@ pub fn system_from_run<'rt>(
     // a reopened run may already have a laundered lineage and/or a
     // persisted cumulative forgotten set: both survive with the run
     // dir, not the process (exactness across restarts)
-    let store =
-        CheckpointStore::open(&cfg.run_dir.join("ckpt"), cfg.checkpoint_keep)?;
     let laundered: HashSet<u64> =
         store.laundered_ids()?.into_iter().collect();
     let forgotten: HashSet<u64> = crate::checkpoint::read_ids_json(
@@ -222,6 +240,9 @@ pub fn system_from_run<'rt>(
         cfg,
         corpus,
         state,
+        // the validated handle is cached on the system from here on —
+        // store() no longer re-runs open's sweep per call
+        store,
         ring: out.ring,
         adapters: AdapterRegistry::new(),
         fisher,

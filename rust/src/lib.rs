@@ -17,7 +17,8 @@
 //!
 //! Module map (see DESIGN.md for the paper-section correspondence and
 //! the hot-path performance architecture):
-//! - [`runtime`]    graph executors (reference / PJRT) + typed wrappers
+//! - [`runtime`]    open `Executor` trait API (reference / PJRT) +
+//!                  batch-first entry points + fingerprint pins
 //! - [`wal`]        32-byte microbatch write-ahead log (Def. 1)
 //! - [`trainer`]    deterministic trainer + scheduler (§4.1)
 //! - [`replay`]     `ReplayFilter` (Alg. A.9)

@@ -361,9 +361,12 @@ fn run(args: &Args) -> anyhow::Result<()> {
 fn smoke(args: &Args) -> anyhow::Result<()> {
     let rt = Runtime::load(&artifacts_dir(args))?;
     let man = &rt.manifest;
+    let fp = rt.fingerprint();
     println!(
-        "platform={} P={} PL={} B={} S={}",
+        "executor={} platform={} fingerprint={} P={} PL={} B={} S={}",
+        fp.kind,
         rt.platform(),
+        fp.digest(),
         man.param_count,
         man.lora_param_count,
         man.batch,
@@ -412,6 +415,26 @@ fn smoke(args: &Args) -> anyhow::Result<()> {
     let lout = rt.lora_step(&params, &lora, &tokens, &mask, 3)?;
     println!("lora_step: loss={} |g|inf={}", lout.loss_sum,
              lout.grad.iter().fold(0.0f32, |a, x| a.max(x.abs())));
+    // batched segment entry point: reduce-order pin (possibly parallel
+    // execution, bit-identical to the sequential fold)
+    let seg: Vec<unlearn::runtime::MicrobatchInput<'_>> = (0..4)
+        .map(|i| unlearn::runtime::MicrobatchInput {
+            tokens: &tokens,
+            mask: &mask,
+            seed: i,
+        })
+        .collect();
+    let acc = rt.grad_accumulate(&params, &seg)?;
+    let mut fold = vec![0.0f32; man.param_count];
+    for mb in &seg {
+        let o = rt.train_step(&params, mb.tokens, mb.mask, mb.seed)?;
+        unlearn::trainer::accumulate(&mut fold, &o.grad);
+    }
+    anyhow::ensure!(
+        unlearn::util::bytes::bits_equal(&acc.grad, &fold),
+        "grad_accumulate drifted from the logged sequential order!"
+    );
+    println!("grad_accumulate: 4-microbatch segment == sequential fold");
     println!("smoke OK");
     Ok(())
 }

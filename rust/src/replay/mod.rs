@@ -9,6 +9,14 @@
 //! asserts the logged `opt_step_u32` against the traversal (fail-closed
 //! on any inconsistency).
 //!
+//! Within each accumulation segment the independent microbatches are
+//! dispatched through [`Runtime::grad_accumulate`] — one batched call
+//! the backend may parallelize across a scoped thread pool — and
+//! combined via the pinned reduce (the logged sequential order), so
+//! segment-parallel replay is bit-identical to the sequential
+//! traversal (`ReplayOptions::sequential` keeps the old path for the
+//! regression proof and the bench A/B).
+//!
 //! The same entry point with `from` = the θ0 checkpoint and the same
 //! closure IS the preserved-graph retain-only oracle RETAINTRAIN
 //! (Def. A.12 / Lemma A.14) — oracle and replay literally share this
@@ -21,8 +29,8 @@ use std::path::Path;
 use crate::checkpoint::{CheckpointStore, TrainState};
 use crate::config::Pins;
 use crate::data::corpus::Corpus;
-use crate::runtime::Runtime;
-use crate::trainer::{accumulate, build_microbatch_tensors_into};
+use crate::runtime::{Runtime, StepOut};
+use crate::trainer::{accumulate, SegmentStage};
 use crate::wal::{IdMap, WalReader, WalRecord};
 
 /// Replay options.
@@ -34,6 +42,14 @@ pub struct ReplayOptions {
     pub zero_content: bool,
     /// Verify pins before running (fail-closed).  Disable only in tests.
     pub check_pins: bool,
+    /// Force the pre-redesign traversal: one `train_step` call per
+    /// microbatch, accumulated sequentially.  The default (`false`)
+    /// dispatches each accumulation segment through
+    /// [`Runtime::grad_accumulate`], whose pinned reduce makes the
+    /// (possibly parallel) result bit-identical to this path — the
+    /// equality regression test and `bench_replay`'s A/B both flip
+    /// this flag to prove/measure exactly that.
+    pub sequential: bool,
 }
 
 impl Default for ReplayOptions {
@@ -41,6 +57,7 @@ impl Default for ReplayOptions {
         ReplayOptions {
             zero_content: true,
             check_pins: true,
+            sequential: false,
         }
     }
 }
@@ -139,15 +156,16 @@ pub fn replay_filter_with_snapshots(
     let mut state = from.clone();
     let mut inv = ReplayInvariants::default();
 
-    let mut grad_acc = vec![0.0f32; man.param_count];
-    let mut had_contrib = false;
-    let mut step_retained = 0usize;
+    // The current accumulation segment, staged record by record
+    // (trainer-shared `SegmentStage` — one buffer set for the whole
+    // tail traversal) and executed as ONE batched `grad_accumulate`
+    // call at `accum_end`.  Legal because every microbatch of a
+    // segment sees the same pre-update params; bit-exact because the
+    // backend's combine is the pinned reduce (the logged sequential
+    // order).
+    let mut seg = SegmentStage::new();
     let mut pending_lr: Option<f32> = None;
     let mut last_step: Option<u32> = None;
-    // reused microbatch tensor buffers — one allocation for the whole
-    // tail traversal instead of two fresh vectors per WAL record
-    let mut tokens = Vec::new();
-    let mut mask = Vec::new();
 
     for rec in records {
         if rec.opt_step < state.logical_step {
@@ -184,60 +202,50 @@ pub fn replay_filter_with_snapshots(
             ids.len()
         );
 
-        let retained = build_microbatch_tensors_into(
+        let retained = seg.stage(
             corpus,
             ids,
             man.batch,
             man.seq_len,
             |id| closure.contains(&id),
             opts.zero_content,
-            &mut tokens,
-            &mut mask,
+            rec.seed64 as i32,
         )?;
-        step_retained += retained;
-        if retained > 0 {
-            // line 7-8: g with the SAME seed; reduction=sum
-            let out = rt.train_step(
-                &state.params,
-                &tokens,
-                &mask,
-                rec.seed64 as i32,
-            )?;
-            accumulate(&mut grad_acc, &out.grad);
-            had_contrib = true;
-        } else {
+        if retained == 0 {
             inv.skipped_microbatches += 1;
         }
         pending_lr = Some(rec.lr());
 
         if rec.accum_end {
-            if had_contrib {
-                // line 12-14: LR from the WAL, never a scheduler; the
-                // opt_step assertion from §4.1 (original training had no
-                // empty steps, so applied == logical there; replay's
-                // applied counter is the retain-only program's counter)
-                let lr = pending_lr.expect("accum boundary saw records");
-                let (p, m, v) = rt.adamw_update(
-                    &state.params,
-                    &grad_acc,
-                    &state.m,
-                    &state.v,
-                    state.applied_updates as i32 + 1,
-                    lr,
-                )?;
-                state.params = p;
-                state.m = m;
-                state.v = v;
-                state.applied_updates += 1;
-                inv.applied_steps += 1;
-            } else {
-                // Prop. A.5: empty-step skip — no optimizer/counter advance
-                inv.empty_logical_steps += 1;
+            // lines 7-8 + 12-14: g with the SAME seeds (reduction=sum,
+            // pinned combine order), then LR from the WAL, never a
+            // scheduler; the opt_step assertion from §4.1 (original
+            // training had no empty steps, so applied == logical there;
+            // replay's applied counter is the retain-only program's)
+            match run_segment(rt, &state.params, &seg, opts)? {
+                Some(out) => {
+                    let lr = pending_lr.expect("accum boundary saw records");
+                    let (p, m, v) = rt.adamw_update(
+                        &state.params,
+                        &out.grad,
+                        &state.m,
+                        &state.v,
+                        state.applied_updates as i32 + 1,
+                        lr,
+                    )?;
+                    state.params = p;
+                    state.m = m;
+                    state.v = v;
+                    state.applied_updates += 1;
+                    inv.applied_steps += 1;
+                }
+                None => {
+                    // Prop. A.5: empty-step skip — no counter advance
+                    inv.empty_logical_steps += 1;
+                }
             }
             state.logical_step = rec.opt_step + 1;
-            grad_acc.iter_mut().for_each(|x| *x = 0.0);
-            had_contrib = false;
-            step_retained = 0;
+            seg.reset();
             pending_lr = None;
             while snap_i < snapshot_steps.len()
                 && snapshot_steps[snap_i] <= state.logical_step
@@ -255,7 +263,6 @@ pub fn replay_filter_with_snapshots(
             }
         }
     }
-    let _ = step_retained;
     anyhow::ensure!(
         pending_lr.is_none(),
         "WAL ended mid-accumulation (unterminated segment)"
@@ -269,6 +276,44 @@ pub fn replay_filter_with_snapshots(
         state,
         invariants: inv,
     })
+}
+
+/// Execute the retained microbatches of one staged accumulation
+/// segment; `None` when every slot was filtered (the Prop. A.5
+/// empty-step input).  Default path: ONE [`Runtime::grad_accumulate`]
+/// call — the backend may dispatch the independent microbatches across
+/// a thread pool; the pinned reduce keeps the result bit-identical to
+/// `opts.sequential`, which preserves the pre-redesign per-microbatch
+/// traversal (deliberately an INDEPENDENT fold, not a call into
+/// `reduce_pinned` — it is the oracle the equality regression test and
+/// the bench A/B compare the batched path against).
+fn run_segment(
+    rt: &Runtime,
+    params: &[f32],
+    seg: &SegmentStage,
+    opts: &ReplayOptions,
+) -> anyhow::Result<Option<StepOut>> {
+    let inputs = seg.inputs();
+    if inputs.is_empty() {
+        return Ok(None);
+    }
+    if opts.sequential {
+        let mut grad = vec![0.0f32; rt.manifest.param_count];
+        let mut loss_sum = 0.0f32;
+        let mut tok_count = 0.0f32;
+        for mb in &inputs {
+            let out = rt.train_step(params, mb.tokens, mb.mask, mb.seed)?;
+            accumulate(&mut grad, &out.grad);
+            loss_sum += out.loss_sum;
+            tok_count += out.tok_count;
+        }
+        return Ok(Some(StepOut {
+            grad,
+            loss_sum,
+            tok_count,
+        }));
+    }
+    Ok(Some(rt.grad_accumulate(params, &inputs)?))
 }
 
 /// Nearest-checkpoint tail replay (Alg. A.7 line 14, now owned by the

@@ -1,21 +1,53 @@
-//! Runtime: typed wrappers for every compute graph the coordinator
-//! calls, over one of two interchangeable backends.
+//! Runtime: the open multi-backend executor API every compute graph the
+//! coordinator calls goes through.
+//!
+//! The compute layer is a public [`Executor`] **trait** (object-safe,
+//! `Send + Sync`) rather than a closed enum: any backend that provides
+//! the typed graphs ([`GraphId`]) as pure functions of their input
+//! buffers (Assumption A.13) can serve train/replay/oracle.  Shipped
+//! backends:
 //!
 //! - **reference** (default): a deterministic pure-Rust executor
 //!   ([`reference::ReferenceExec`]) — a tiny bigram LM with a fused
 //!   AdamW update, bit-deterministic by construction.  Keeps tier-1
 //!   (`cargo build --release && cargo test -q`) hermetic: no PJRT, no
-//!   AOT artifacts required.
-//! - **pjrt** (feature `pjrt`): the AOT HLO artifacts produced by
-//!   `make artifacts`, compiled once per graph on the `xla` crate's
-//!   PJRT CPU client — Python never runs on the request path.
+//!   AOT artifacts required.  Overrides the batch entry points with
+//!   scoped-thread parallel implementations.
+//! - **pjrt** (feature `pjrt`): [`pjrt::PjrtExec`], the AOT HLO
+//!   artifacts produced by `make artifacts` executed on a PJRT CPU
+//!   client.  The trait impl always compiles (CI checks the feature
+//!   matrix); the actual xla-rs client is additionally gated behind the
+//!   `pjrt-xla` feature because the crate is not vendored — without it
+//!   `PjrtExec::load` fails closed with instructions.
 //!
-//! Determinism note (Assumption A.13): both backends are pure functions
-//! of their input buffers — same bits in, same bits out.  All exactness
-//! guarantees downstream lean on this plus the fact that train/replay/
-//! oracle all use the *same* executor (pinned by hash in
-//! [`crate::config::Pins`]: the HLO SHA-256s for pjrt, the
-//! [`reference::REF_VERSION`] hash for the reference executor).
+//! Every loaded runtime carries an [`ExecutorFingerprint`] — backend
+//! kind + platform + the per-graph artifact hashes — which flows into
+//! [`crate::config::Pins`] via [`Runtime::capture_pins`].  A replay
+//! against pins captured under a different backend (reference vs PJRT)
+//! fails closed in `Pins::ensure_match`: mixed-backend replays are
+//! refused, which is what makes "train/replay/oracle share one pinned
+//! executor" (§5, Table 2) mechanically checkable.
+//!
+//! ## Batch-first entry points
+//!
+//! Two contracts exist specifically so upper layers can batch:
+//!
+//! - [`Executor::eval_batch`]: one call evaluates N concatenated eval
+//!   chunks.  Per-slot losses are independent of chunk composition
+//!   (each slot's loss is a pure function of that slot's tokens), so
+//!   batched evaluation is bit-transparent w.r.t. per-chunk
+//!   [`Executor::eval_loss`] calls — the audit layer and the coalesced
+//!   forget probes batch through this.
+//! - [`Executor::grad_accumulate`]: one call runs a whole gradient
+//!   accumulation segment and combines the microbatch gradients with
+//!   the **pinned reduce** ([`reduce_pinned`]) — the left-comb tree
+//!   (((0+g₀)+g₁)+…)+gₙ₋₁ in microbatch index order, the exact
+//!   summation order the trainer logs (Lemma A.3).  The reduce shape is
+//!   a function of the segment length alone, never of thread
+//!   scheduling, which is the order contract that legalizes
+//!   segment-parallel replay: backends may compute the per-microbatch
+//!   gradients concurrently, but the combine replays the logged
+//!   sequential order bit-for-bit.
 
 pub mod artifacts;
 #[cfg(feature = "pjrt")]
@@ -28,21 +60,91 @@ use std::path::Path;
 
 use crate::config::Pins;
 
-enum Backend {
-    Reference(reference::ReferenceExec),
-    #[cfg(feature = "pjrt")]
-    Pjrt(pjrt::PjrtBackend),
+/// Typed handle for every compute graph a backend must provide — the
+/// closed set of AOT artifacts (`GraphId::ALL`), replacing the stringly
+/// graph names the PJRT loader and the metrics keys used to share.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum GraphId {
+    TrainStep,
+    AdamwUpdate,
+    EvalLoss,
+    NextLogits,
+    LoraStep,
+    LoraAdamw,
+    LoraEval,
+    LoraNextLogits,
 }
 
-/// Compiled/loaded executor + manifest metadata.
-pub struct Runtime {
-    backend: Backend,
-    pub manifest: ArtifactManifest,
-    /// Metrics hook (execution counts/timings).
-    pub metrics: crate::metrics::Metrics,
+impl GraphId {
+    /// Every AOT graph, in artifact order.
+    pub const ALL: [GraphId; 8] = [
+        GraphId::TrainStep,
+        GraphId::AdamwUpdate,
+        GraphId::EvalLoss,
+        GraphId::NextLogits,
+        GraphId::LoraStep,
+        GraphId::LoraAdamw,
+        GraphId::LoraEval,
+        GraphId::LoraNextLogits,
+    ];
+
+    /// Artifact/manifest name of the graph.
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            GraphId::TrainStep => "train_step",
+            GraphId::AdamwUpdate => "adamw_update",
+            GraphId::EvalLoss => "eval_loss",
+            GraphId::NextLogits => "next_logits",
+            GraphId::LoraStep => "lora_step",
+            GraphId::LoraAdamw => "lora_adamw",
+            GraphId::LoraEval => "lora_eval",
+            GraphId::LoraNextLogits => "lora_next_logits",
+        }
+    }
+
+    /// Metrics timer key of the graph.
+    pub fn metric(&self) -> &'static str {
+        match self {
+            GraphId::TrainStep => "exec.train_step",
+            GraphId::AdamwUpdate => "exec.adamw_update",
+            GraphId::EvalLoss => "exec.eval_loss",
+            GraphId::NextLogits => "exec.next_logits",
+            GraphId::LoraStep => "exec.lora_step",
+            GraphId::LoraAdamw => "exec.lora_adamw",
+            GraphId::LoraEval => "exec.lora_eval",
+            GraphId::LoraNextLogits => "exec.lora_next_logits",
+        }
+    }
 }
 
-/// Output of one train-step microbatch call.
+/// The identity of a loaded executor: what [`Pins`] pins about the
+/// compute layer.  Two runtimes interoperate on one WAL only when their
+/// fingerprints match exactly — `Pins::ensure_match` refuses anything
+/// else (mixed-backend replays fail closed).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ExecutorFingerprint {
+    /// Backend discriminator ("reference" / "pjrt").
+    pub kind: String,
+    /// Hardware platform pin (e.g. "reference-cpu", "cpu").
+    pub platform: String,
+    /// (artifact name, sha256), sorted by name: the HLO hashes for
+    /// pjrt, the executor version hash for the reference backend.
+    pub artifact_hashes: Vec<(String, String)>,
+}
+
+impl ExecutorFingerprint {
+    /// One hex digest over the whole fingerprint (manifest/log lines).
+    pub fn digest(&self) -> String {
+        let mut enc = format!("{};{}", self.kind, self.platform);
+        for (name, hash) in &self.artifact_hashes {
+            enc.push_str(&format!(";{name}={hash}"));
+        }
+        crate::util::hashing::sha256_hex(enc.as_bytes())
+    }
+}
+
+/// Output of one train-step microbatch call (and of a combined
+/// [`Executor::grad_accumulate`] segment).
 #[derive(Debug, Clone)]
 pub struct StepOut {
     pub grad: Vec<f32>,
@@ -50,11 +152,178 @@ pub struct StepOut {
     pub tok_count: f32,
 }
 
+/// One microbatch's input tensors for the batched segment entry points.
+#[derive(Debug, Clone, Copy)]
+pub struct MicrobatchInput<'a> {
+    /// Row-major `[batch, seq_len]` token tensor.
+    pub tokens: &'a [i32],
+    /// Per-example mask (0.0 = filtered slot).
+    pub mask: &'a [f32],
+    /// WAL seed64 truncated to the graph's i32 input.
+    pub seed: i32,
+}
+
+/// The pinned reduce: fold the per-microbatch outputs into an
+/// accumulator initialized to zero, in microbatch **index order** — the
+/// left-comb tree (((0+g₀)+g₁)+…)+gₙ₋₁, elementwise sequential f32
+/// adds.  This is byte-for-byte the summation order the trainer logs
+/// per accumulation segment (Lemma A.3), so any schedule that computes
+/// the `outs` concurrently and then combines through this function is
+/// bit-identical to the logged sequential traversal.  The shape depends
+/// only on `outs.len()`; it is pinned by the `reduction = "sum"` pin.
+pub fn reduce_pinned(param_count: usize, outs: &[StepOut]) -> StepOut {
+    let mut grad = vec![0.0f32; param_count];
+    let mut loss_sum = 0.0f32;
+    let mut tok_count = 0.0f32;
+    for o in outs {
+        crate::trainer::accumulate(&mut grad, &o.grad);
+        loss_sum += o.loss_sum;
+        tok_count += o.tok_count;
+    }
+    StepOut {
+        grad,
+        loss_sum,
+        tok_count,
+    }
+}
+
+/// A compute backend: every graph as a pure function of its input
+/// buffers (same bits in, same bits out — Assumption A.13).  Object
+/// safe, so the runtime is open: `Runtime::with_backend` accepts any
+/// implementation, and the shipped reference/PJRT backends are just two
+/// instances.  `Send + Sync` because the admin server and the
+/// segment-parallel replay share one executor across threads; backends
+/// whose native handles are not thread-safe must serialize internally.
+pub trait Executor: Send + Sync {
+    /// Backend discriminator — becomes the `executor_kind` pin.
+    fn kind(&self) -> &'static str;
+
+    /// Platform name (the Table 2 hardware pin).
+    fn platform(&self) -> String;
+
+    /// g(θ; B, S): one microbatch forward/backward (reduction=sum).
+    fn train_step(
+        &self,
+        man: &ArtifactManifest,
+        params: &[f32],
+        tokens: &[i32],
+        mask: &[f32],
+        seed: i32,
+    ) -> anyhow::Result<StepOut>;
+
+    /// UPDATE: global-norm clip + fused AdamW (`graph` selects the base
+    /// or LoRA variant — same math, different artifact pin).
+    fn update(
+        &self,
+        graph: GraphId,
+        params: &[f32],
+        grad: &[f32],
+        m: &[f32],
+        v: &[f32],
+        step: i32,
+        lr: f32,
+    ) -> anyhow::Result<(Vec<f32>, Vec<f32>, Vec<f32>)>;
+
+    /// Per-example eval loss over ONE eval chunk; `lora` applies the
+    /// adapter patch against a strictly frozen base.
+    fn eval_loss(
+        &self,
+        man: &ArtifactManifest,
+        params: &[f32],
+        lora: Option<&[f32]>,
+        tokens: &[i32],
+    ) -> anyhow::Result<(Vec<f32>, Vec<f32>)>;
+
+    /// Next-token logits at position `lens[b]-1` (greedy decoding).
+    fn next_logits(
+        &self,
+        man: &ArtifactManifest,
+        params: &[f32],
+        lora: Option<&[f32]>,
+        tokens: &[i32],
+        lens: &[i32],
+    ) -> anyhow::Result<Vec<f32>>;
+
+    /// LoRA microbatch step: gradient w.r.t. the adapter only (base
+    /// strictly frozen — the G2 precondition).
+    fn lora_step(
+        &self,
+        man: &ArtifactManifest,
+        base: &[f32],
+        lora: &[f32],
+        tokens: &[i32],
+        mask: &[f32],
+        seed: i32,
+    ) -> anyhow::Result<StepOut>;
+
+    /// Batched eval: `tokens` is N concatenated `[eval_batch, seq_len]`
+    /// chunks; returns the concatenated per-example (loss, count)
+    /// vectors.  Contract: bit-identical to N separate
+    /// [`Executor::eval_loss`] calls — each slot's loss is a pure
+    /// function of that slot's tokens alone, so backends may evaluate
+    /// the chunks in any order or concurrently.  Default: sequential
+    /// chunking (always correct).
+    fn eval_batch(
+        &self,
+        man: &ArtifactManifest,
+        params: &[f32],
+        lora: Option<&[f32]>,
+        tokens: &[i32],
+    ) -> anyhow::Result<(Vec<f32>, Vec<f32>)> {
+        let chunk = man.eval_batch * man.seq_len;
+        anyhow::ensure!(
+            chunk > 0 && tokens.len() % chunk == 0,
+            "eval_batch tokens length {} is not a multiple of the \
+             {}-token eval chunk",
+            tokens.len(),
+            chunk
+        );
+        let mut losses = Vec::with_capacity(tokens.len() / chunk * man.eval_batch);
+        let mut counts = Vec::with_capacity(losses.capacity());
+        for c in tokens.chunks(chunk) {
+            let (l, n) = self.eval_loss(man, params, lora, c)?;
+            losses.extend_from_slice(&l);
+            counts.extend_from_slice(&n);
+        }
+        Ok((losses, counts))
+    }
+
+    /// One gradient-accumulation segment: run every microbatch against
+    /// the SAME `params` and combine through [`reduce_pinned`].
+    /// Contract: bit-identical to calling [`Executor::train_step`] per
+    /// microbatch in index order and accumulating sequentially — the
+    /// pinned reduce IS that order, so backends are free to compute the
+    /// per-microbatch gradients concurrently.  Default: sequential
+    /// (always correct; the reference backend overrides with a scoped
+    /// thread pool).
+    fn grad_accumulate(
+        &self,
+        man: &ArtifactManifest,
+        params: &[f32],
+        mbs: &[MicrobatchInput<'_>],
+    ) -> anyhow::Result<StepOut> {
+        let mut outs = Vec::with_capacity(mbs.len());
+        for mb in mbs {
+            outs.push(self.train_step(man, params, mb.tokens, mb.mask, mb.seed)?);
+        }
+        Ok(reduce_pinned(man.param_count, &outs))
+    }
+}
+
+/// Loaded executor + manifest metadata + metrics, behind the stable
+/// facade the rest of the crate calls.
+pub struct Runtime {
+    backend: Box<dyn Executor>,
+    pub manifest: ArtifactManifest,
+    /// Metrics hook (execution counts/timings).
+    pub metrics: crate::metrics::Metrics,
+}
+
 impl Runtime {
     /// Load a runtime for `dir`.
     ///
-    /// With the `pjrt` feature: parses `manifest.json` and compiles the
-    /// HLO artifacts.  Without it: uses the reference executor — if a
+    /// With the `pjrt` feature: parses `manifest.json` and loads the
+    /// PJRT backend.  Without it: uses the reference executor — if a
     /// `manifest.json` is present its geometry must match the reference
     /// model's, otherwise the synthetic reference manifest is used (no
     /// files needed).
@@ -65,39 +334,51 @@ impl Runtime {
             ArtifactManifest::reference(dir)
         };
         #[cfg(feature = "pjrt")]
-        {
-            let backend = pjrt::PjrtBackend::load(dir, &manifest)?;
-            Ok(Runtime {
-                backend: Backend::Pjrt(backend),
-                manifest,
-                metrics: crate::metrics::Metrics::new(),
-            })
-        }
+        let backend: Box<dyn Executor> =
+            Box::new(pjrt::PjrtExec::load(dir, &manifest)?);
         #[cfg(not(feature = "pjrt"))]
-        {
-            let exec = reference::ReferenceExec::new(&manifest)?;
-            Ok(Runtime {
-                backend: Backend::Reference(exec),
-                manifest,
-                metrics: crate::metrics::Metrics::new(),
-            })
+        let backend: Box<dyn Executor> =
+            Box::new(reference::ReferenceExec::new(&manifest)?);
+        Ok(Runtime::with_backend(backend, manifest))
+    }
+
+    /// Assemble a runtime over ANY [`Executor`] implementation — the
+    /// open end of the API (tests inject fault/fake backends; embedders
+    /// bring their own compute layer).  The backend's fingerprint flows
+    /// into every pin captured from this runtime.
+    pub fn with_backend(
+        backend: Box<dyn Executor>,
+        manifest: ArtifactManifest,
+    ) -> Runtime {
+        Runtime {
+            backend,
+            manifest,
+            metrics: crate::metrics::Metrics::new(),
         }
     }
 
     /// Platform name (the Table 2 hardware pin).
     pub fn platform(&self) -> String {
-        match &self.backend {
-            Backend::Reference(_) => "reference-cpu".to_string(),
-            #[cfg(feature = "pjrt")]
-            Backend::Pjrt(b) => b.platform(),
+        self.backend.platform()
+    }
+
+    /// The loaded executor's identity: backend kind + platform + the
+    /// per-graph artifact hashes.
+    pub fn fingerprint(&self) -> ExecutorFingerprint {
+        ExecutorFingerprint {
+            kind: self.backend.kind().to_string(),
+            platform: self.backend.platform(),
+            artifact_hashes: self.manifest.artifact_hashes.clone(),
         }
     }
 
     /// Capture the current environment pins (compare against the stored
     /// training-time pins before any replay — fail-closed on drift).
     pub fn capture_pins(&self, accum: usize) -> Pins {
+        let fp = self.fingerprint();
         Pins {
-            artifact_hashes: self.manifest.artifact_hashes.clone(),
+            executor_kind: fp.kind,
+            artifact_hashes: fp.artifact_hashes,
             model_config_hash: self.manifest.config_hash.clone(),
             tokenizer_checksum: self.manifest.tokenizer_checksum.clone(),
             param_count: self.manifest.param_count,
@@ -105,7 +386,7 @@ impl Runtime {
             batch: self.manifest.batch,
             layout: "single-host;dp=1;tp=1;pp=1".to_string(),
             reduction: "sum".to_string(),
-            platform: self.platform(),
+            platform: fp.platform,
         }
     }
 
@@ -126,10 +407,35 @@ impl Runtime {
         anyhow::ensure!(tokens.len() == b * s, "tokens shape");
         anyhow::ensure!(mask.len() == b, "mask shape");
         anyhow::ensure!(params.len() == man.param_count, "params");
-        self.metrics.time("exec.train_step", || match &self.backend {
-            Backend::Reference(e) => e.train_step(params, tokens, mask, seed),
-            #[cfg(feature = "pjrt")]
-            Backend::Pjrt(p) => p.train_step(man, params, tokens, mask, seed),
+        self.metrics.time(GraphId::TrainStep.metric(), || {
+            self.backend.train_step(man, params, tokens, mask, seed)
+        })
+    }
+
+    /// One gradient-accumulation segment through the backend's batched
+    /// entry point (see [`Executor::grad_accumulate`] for the pinned
+    /// reduce-order contract).
+    pub fn grad_accumulate(
+        &self,
+        params: &[f32],
+        mbs: &[MicrobatchInput<'_>],
+    ) -> anyhow::Result<StepOut> {
+        let man = &self.manifest;
+        let (b, s) = (man.batch, man.seq_len);
+        anyhow::ensure!(!mbs.is_empty(), "empty accumulation segment");
+        anyhow::ensure!(params.len() == man.param_count, "params");
+        for (i, mb) in mbs.iter().enumerate() {
+            anyhow::ensure!(
+                mb.tokens.len() == b * s && mb.mask.len() == b,
+                "microbatch {i} tensor shapes"
+            );
+        }
+        // per-microbatch counter alongside the per-segment timer so the
+        // planner can derive an amortized per-record replay cost
+        self.metrics
+            .inc("exec.grad_accumulate.microbatches", mbs.len() as u64);
+        self.metrics.time("exec.grad_accumulate", || {
+            self.backend.grad_accumulate(man, params, mbs)
         })
     }
 
@@ -144,12 +450,9 @@ impl Runtime {
         step: i32,
         lr: f32,
     ) -> anyhow::Result<(Vec<f32>, Vec<f32>, Vec<f32>)> {
-        self.metrics.time("exec.adamw_update", || match &self.backend {
-            Backend::Reference(e) => e.adamw_update(params, grad, m, v, step, lr),
-            #[cfg(feature = "pjrt")]
-            Backend::Pjrt(p) => {
-                p.update("adamw_update", params, grad, m, v, step, lr)
-            }
+        self.metrics.time(GraphId::AdamwUpdate.metric(), || {
+            self.backend
+                .update(GraphId::AdamwUpdate, params, grad, m, v, step, lr)
         })
     }
 
@@ -163,10 +466,9 @@ impl Runtime {
         step: i32,
         lr: f32,
     ) -> anyhow::Result<(Vec<f32>, Vec<f32>, Vec<f32>)> {
-        self.metrics.time("exec.lora_adamw", || match &self.backend {
-            Backend::Reference(e) => e.adamw_update(lora, grad, m, v, step, lr),
-            #[cfg(feature = "pjrt")]
-            Backend::Pjrt(p) => p.update("lora_adamw", lora, grad, m, v, step, lr),
+        self.metrics.time(GraphId::LoraAdamw.metric(), || {
+            self.backend
+                .update(GraphId::LoraAdamw, lora, grad, m, v, step, lr)
         })
     }
 
@@ -181,10 +483,31 @@ impl Runtime {
             tokens.len() == man.eval_batch * man.seq_len,
             "eval tokens shape"
         );
-        self.metrics.time("exec.eval_loss", || match &self.backend {
-            Backend::Reference(e) => e.eval_loss(params, None, tokens),
-            #[cfg(feature = "pjrt")]
-            Backend::Pjrt(p) => p.eval_loss(man, params, tokens),
+        self.metrics.time(GraphId::EvalLoss.metric(), || {
+            self.backend.eval_loss(man, params, None, tokens)
+        })
+    }
+
+    /// Batched eval over N concatenated eval chunks — ONE executor call
+    /// for what used to be N `eval_loss`/`lora_eval` round trips, bit-
+    /// identical to them (see [`Executor::eval_batch`]).
+    pub fn eval_batch(
+        &self,
+        params: &[f32],
+        lora: Option<&[f32]>,
+        tokens: &[i32],
+    ) -> anyhow::Result<(Vec<f32>, Vec<f32>)> {
+        let man = &self.manifest;
+        let chunk = man.eval_batch * man.seq_len;
+        anyhow::ensure!(
+            !tokens.is_empty() && tokens.len() % chunk == 0,
+            "eval_batch tokens length {} not a positive multiple of {chunk}",
+            tokens.len()
+        );
+        self.metrics
+            .inc("exec.eval_batch.chunks", (tokens.len() / chunk) as u64);
+        self.metrics.time("exec.eval_batch", || {
+            self.backend.eval_batch(man, params, lora, tokens)
         })
     }
 
@@ -200,10 +523,8 @@ impl Runtime {
             tokens.len() == man.eval_batch * man.seq_len
                 && lens.len() == man.eval_batch
         );
-        self.metrics.time("exec.next_logits", || match &self.backend {
-            Backend::Reference(e) => e.next_logits(params, None, tokens, lens),
-            #[cfg(feature = "pjrt")]
-            Backend::Pjrt(p) => p.next_logits(man, params, tokens, lens),
+        self.metrics.time(GraphId::NextLogits.metric(), || {
+            self.backend.next_logits(man, params, None, tokens, lens)
         })
     }
 
@@ -217,12 +538,9 @@ impl Runtime {
         mask: &[f32],
         seed: i32,
     ) -> anyhow::Result<StepOut> {
-        self.metrics.time("exec.lora_step", || match &self.backend {
-            Backend::Reference(e) => e.lora_step(base, lora, tokens, mask, seed),
-            #[cfg(feature = "pjrt")]
-            Backend::Pjrt(p) => {
-                p.lora_step(&self.manifest, base, lora, tokens, mask, seed)
-            }
+        self.metrics.time(GraphId::LoraStep.metric(), || {
+            self.backend
+                .lora_step(&self.manifest, base, lora, tokens, mask, seed)
         })
     }
 
@@ -233,10 +551,9 @@ impl Runtime {
         lora: &[f32],
         tokens: &[i32],
     ) -> anyhow::Result<(Vec<f32>, Vec<f32>)> {
-        self.metrics.time("exec.lora_eval", || match &self.backend {
-            Backend::Reference(e) => e.eval_loss(base, Some(lora), tokens),
-            #[cfg(feature = "pjrt")]
-            Backend::Pjrt(p) => p.lora_eval(&self.manifest, base, lora, tokens),
+        self.metrics.time(GraphId::LoraEval.metric(), || {
+            self.backend
+                .eval_loss(&self.manifest, base, Some(lora), tokens)
         })
     }
 
@@ -248,22 +565,17 @@ impl Runtime {
         tokens: &[i32],
         lens: &[i32],
     ) -> anyhow::Result<Vec<f32>> {
-        self.metrics
-            .time("exec.lora_next_logits", || match &self.backend {
-                Backend::Reference(e) => {
-                    e.next_logits(base, Some(lora), tokens, lens)
-                }
-                #[cfg(feature = "pjrt")]
-                Backend::Pjrt(p) => {
-                    p.lora_next_logits(&self.manifest, base, lora, tokens, lens)
-                }
-            })
+        self.metrics.time(GraphId::LoraNextLogits.metric(), || {
+            self.backend
+                .next_logits(&self.manifest, base, Some(lora), tokens, lens)
+        })
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::util::bytes::bits_equal;
 
     #[test]
     fn loads_reference_runtime_without_artifacts() {
@@ -271,8 +583,12 @@ mod tests {
         let rt = Runtime::load(&dir).unwrap();
         assert_eq!(rt.platform(), "reference-cpu");
         assert_eq!(rt.manifest.param_count, reference::REF_PARAM_COUNT);
+        let fp = rt.fingerprint();
+        assert_eq!(fp.kind, "reference");
+        assert!(!fp.digest().is_empty());
         let pins = rt.capture_pins(2);
         assert_eq!(pins.reduction, "sum");
+        assert_eq!(pins.executor_kind, "reference");
         // the executor version is pinned like an artifact hash
         assert!(pins
             .artifact_hashes
@@ -297,5 +613,239 @@ mod tests {
         assert_eq!(out.grad.len(), man.param_count);
         let (n, _, _) = rt.metrics.timer("exec.train_step").unwrap();
         assert_eq!(n, 1);
+    }
+
+    #[test]
+    fn graph_ids_cover_the_artifact_set() {
+        let names: Vec<&str> =
+            GraphId::ALL.iter().map(|g| g.as_str()).collect();
+        assert_eq!(names.len(), 8);
+        for g in GraphId::ALL {
+            assert!(g.metric().starts_with("exec."));
+            assert!(g.metric().ends_with(g.as_str()));
+        }
+    }
+
+    /// A fake backend proving the trait is object-safe and the runtime
+    /// open: foreign `Executor` impls load through `with_backend` and
+    /// their fingerprint flows into the pins.
+    struct FakePjrt;
+
+    impl Executor for FakePjrt {
+        fn kind(&self) -> &'static str {
+            "pjrt"
+        }
+        fn platform(&self) -> String {
+            "cpu".into()
+        }
+        fn train_step(
+            &self,
+            _man: &ArtifactManifest,
+            params: &[f32],
+            _tokens: &[i32],
+            _mask: &[f32],
+            _seed: i32,
+        ) -> anyhow::Result<StepOut> {
+            Ok(StepOut {
+                grad: vec![0.0; params.len()],
+                loss_sum: 0.0,
+                tok_count: 0.0,
+            })
+        }
+        fn update(
+            &self,
+            _graph: GraphId,
+            params: &[f32],
+            _grad: &[f32],
+            m: &[f32],
+            v: &[f32],
+            _step: i32,
+            _lr: f32,
+        ) -> anyhow::Result<(Vec<f32>, Vec<f32>, Vec<f32>)> {
+            Ok((params.to_vec(), m.to_vec(), v.to_vec()))
+        }
+        fn eval_loss(
+            &self,
+            man: &ArtifactManifest,
+            _params: &[f32],
+            _lora: Option<&[f32]>,
+            _tokens: &[i32],
+        ) -> anyhow::Result<(Vec<f32>, Vec<f32>)> {
+            Ok((vec![0.0; man.eval_batch], vec![0.0; man.eval_batch]))
+        }
+        fn next_logits(
+            &self,
+            man: &ArtifactManifest,
+            _params: &[f32],
+            _lora: Option<&[f32]>,
+            _tokens: &[i32],
+            _lens: &[i32],
+        ) -> anyhow::Result<Vec<f32>> {
+            Ok(vec![0.0; man.eval_batch * man.vocab])
+        }
+        fn lora_step(
+            &self,
+            man: &ArtifactManifest,
+            _base: &[f32],
+            _lora: &[f32],
+            _tokens: &[i32],
+            _mask: &[f32],
+            _seed: i32,
+        ) -> anyhow::Result<StepOut> {
+            Ok(StepOut {
+                grad: vec![0.0; man.lora_param_count],
+                loss_sum: 0.0,
+                tok_count: 0.0,
+            })
+        }
+    }
+
+    #[test]
+    fn mixed_backend_pins_refuse_to_interoperate() {
+        // reference pins vs synthetic PJRT pins: the fingerprint flows
+        // into Pins and ensure_match fails closed on the mix — a replay
+        // can never silently run on a different backend than trained.
+        let dir = crate::util::tempdir("rt-mixed");
+        let ref_rt = Runtime::load(&dir).unwrap();
+        let mut pjrt_man = ArtifactManifest::reference(&dir);
+        pjrt_man.artifact_hashes = GraphId::ALL
+            .iter()
+            .map(|g| (g.as_str().to_string(), format!("hlo-{}", g.as_str())))
+            .collect();
+        let pjrt_rt = Runtime::with_backend(Box::new(FakePjrt), pjrt_man);
+        let ref_pins = ref_rt.capture_pins(2);
+        let pjrt_pins = pjrt_rt.capture_pins(2);
+        assert_eq!(pjrt_pins.executor_kind, "pjrt");
+        let err = ref_pins.ensure_match(&pjrt_pins).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("pin drift"), "{msg}");
+        // and in the other direction too
+        assert!(pjrt_pins.ensure_match(&ref_pins).is_err());
+        // fingerprints differ structurally as well
+        assert_ne!(
+            ref_rt.fingerprint().digest(),
+            pjrt_rt.fingerprint().digest()
+        );
+    }
+
+    fn toy_segment(
+        man: &ArtifactManifest,
+        rng: &mut crate::util::rng::SplitMix64,
+        n: usize,
+    ) -> Vec<(Vec<i32>, Vec<f32>, i32)> {
+        (0..n)
+            .map(|_| {
+                let tokens: Vec<i32> = (0..man.batch * man.seq_len)
+                    .map(|_| (rng.below(man.vocab as u64)) as i32)
+                    .collect();
+                let mask: Vec<f32> = (0..man.batch)
+                    .map(|_| if rng.below(4) == 0 { 0.0 } else { 1.0 })
+                    .collect();
+                (tokens, mask, rng.below(1 << 31) as i32)
+            })
+            .collect()
+    }
+
+    #[test]
+    fn grad_accumulate_is_bit_identical_to_sequential_accumulation() {
+        // The reduce-order pin (satellite): across segment sizes
+        // 1..=16, the batched (possibly parallel) segment entry point
+        // must be bit-identical to the logged sequential traversal —
+        // one train_step per microbatch, accumulated in index order.
+        let dir = crate::util::tempdir("rt-reduce-pin");
+        let rt = Runtime::load(&dir).unwrap();
+        let man = rt.manifest.clone();
+        crate::util::prop::for_all("reduce-order pin", |rng| {
+            let n = (rng.below(16) + 1) as usize;
+            let params = crate::util::prop::f32_vec(
+                rng,
+                man.param_count,
+                0.05,
+            );
+            let seg = toy_segment(&man, rng, n);
+            let inputs: Vec<MicrobatchInput<'_>> = seg
+                .iter()
+                .map(|(t, m, s)| MicrobatchInput {
+                    tokens: t,
+                    mask: m,
+                    seed: *s,
+                })
+                .collect();
+            // sequential reference order: fold from zeros, index order
+            let mut grad = vec![0.0f32; man.param_count];
+            let mut loss_sum = 0.0f32;
+            let mut tok_count = 0.0f32;
+            for mb in &inputs {
+                let out = rt
+                    .train_step(&params, mb.tokens, mb.mask, mb.seed)
+                    .unwrap();
+                crate::trainer::accumulate(&mut grad, &out.grad);
+                loss_sum += out.loss_sum;
+                tok_count += out.tok_count;
+            }
+            let batched = rt.grad_accumulate(&params, &inputs).unwrap();
+            assert!(
+                bits_equal(&batched.grad, &grad),
+                "segment of {n}: tree-reduce drifted from the logged \
+                 sequential order"
+            );
+            assert_eq!(batched.loss_sum.to_bits(), loss_sum.to_bits());
+            assert_eq!(batched.tok_count.to_bits(), tok_count.to_bits());
+        });
+    }
+
+    #[test]
+    fn reduce_pinned_matches_explicit_left_fold_on_adversarial_bits() {
+        // the combine itself, on raw bit patterns (NaN, -0.0, inf):
+        // reduce_pinned must BE the left fold, not merely close to it
+        crate::util::prop::for_all("reduce_pinned left fold", |rng| {
+            let n = (rng.below(16) + 1) as usize;
+            let p = 64usize;
+            let outs: Vec<StepOut> = (0..n)
+                .map(|_| StepOut {
+                    grad: crate::util::prop::f32_vec_adversarial(rng, p),
+                    loss_sum: rng.normal() as f32,
+                    tok_count: rng.below(512) as f32,
+                })
+                .collect();
+            let mut grad = vec![0.0f32; p];
+            let mut loss = 0.0f32;
+            for o in &outs {
+                for (a, g) in grad.iter_mut().zip(&o.grad) {
+                    *a += g;
+                }
+                loss += o.loss_sum;
+            }
+            let red = reduce_pinned(p, &outs);
+            assert!(bits_equal(&red.grad, &grad));
+            assert_eq!(red.loss_sum.to_bits(), loss.to_bits());
+        });
+    }
+
+    #[test]
+    fn eval_batch_is_bit_identical_to_per_chunk_eval_loss() {
+        let dir = crate::util::tempdir("rt-eval-batch");
+        let rt = Runtime::load(&dir).unwrap();
+        let man = &rt.manifest;
+        let params = man.init_params().unwrap();
+        let chunk = man.eval_batch * man.seq_len;
+        let n_chunks = 5usize;
+        let tokens: Vec<i32> = (0..n_chunks * chunk)
+            .map(|i| (i % 231 + 1) as i32)
+            .collect();
+        let (bl, bc) = rt.eval_batch(&params, None, &tokens).unwrap();
+        assert_eq!(bl.len(), n_chunks * man.eval_batch);
+        let mut sl = Vec::new();
+        let mut sc = Vec::new();
+        for c in tokens.chunks(chunk) {
+            let (l, n) = rt.eval_loss(&params, c).unwrap();
+            sl.extend_from_slice(&l);
+            sc.extend_from_slice(&n);
+        }
+        assert!(bits_equal(&bl, &sl), "batched eval drifted per-chunk eval");
+        assert!(bits_equal(&bc, &sc));
+        // shape errors fail closed
+        assert!(rt.eval_batch(&params, None, &tokens[..chunk - 1]).is_err());
+        assert!(rt.eval_batch(&params, None, &[]).is_err());
     }
 }

@@ -30,7 +30,9 @@
 //! Parameter layout (flat vector, `REF_PARAM_COUNT` = V·V + V):
 //! `θ[prev·V + v]` bigram logits, then `θ[V·V + v]` unigram bias.
 
-use crate::runtime::StepOut;
+use crate::runtime::{
+    ArtifactManifest, Executor, GraphId, MicrobatchInput, StepOut,
+};
 
 /// Vocabulary (byte-level tokenizer).
 pub const REF_VOCAB: usize = 256;
@@ -422,6 +424,238 @@ impl ReferenceExec {
             );
         }
         Ok(out)
+    }
+}
+
+/// Worker count for the segment/eval parallel overrides: the host's
+/// parallelism, capped by the number of independent work items.
+fn workers_for(items: usize) -> usize {
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1)
+        .min(items)
+        .max(1)
+}
+
+/// Run `f(i)` for every `i < items` across a scoped thread pool
+/// (work-stealing via an atomic cursor), collecting results in index
+/// order.  Item order in the OUTPUT is fixed regardless of scheduling —
+/// the caller's combine step sees the pinned order.
+fn parallel_map<T: Send>(
+    items: usize,
+    f: impl Fn(usize) -> anyhow::Result<T> + Sync,
+) -> anyhow::Result<Vec<T>> {
+    let workers = workers_for(items);
+    if workers <= 1 {
+        return (0..items).map(&f).collect();
+    }
+    let next = std::sync::atomic::AtomicUsize::new(0);
+    // one worker's error aborts the whole map: the remaining items'
+    // results could never be used, so computing them is pure waste
+    let abort = std::sync::atomic::AtomicBool::new(false);
+    let mut slots: Vec<Option<anyhow::Result<T>>> =
+        (0..items).map(|_| None).collect();
+    std::thread::scope(|s| {
+        let handles: Vec<_> = (0..workers)
+            .map(|_| {
+                let next = &next;
+                let abort = &abort;
+                let f = &f;
+                s.spawn(move || {
+                    let mut out: Vec<(usize, anyhow::Result<T>)> = Vec::new();
+                    loop {
+                        if abort.load(std::sync::atomic::Ordering::Relaxed) {
+                            break;
+                        }
+                        let i = next
+                            .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                        if i >= items {
+                            break;
+                        }
+                        let r = f(i);
+                        if r.is_err() {
+                            abort
+                                .store(true, std::sync::atomic::Ordering::Relaxed);
+                        }
+                        let failed = r.is_err();
+                        out.push((i, r));
+                        if failed {
+                            break; // surface the first error promptly
+                        }
+                    }
+                    out
+                })
+            })
+            .collect();
+        for h in handles {
+            for (i, r) in h
+                .join()
+                .map_err(|_| anyhow::anyhow!("executor worker panicked"))?
+            {
+                slots[i] = Some(r);
+            }
+        }
+        anyhow::Ok(())
+    })?;
+    // First error in INDEX order wins (deterministic reporting).
+    // `None` slots are the unclaimed suffix left behind by the abort
+    // flag; claims are monotonic, so an error is always found at an
+    // earlier index than any `None`.
+    let mut out = Vec::with_capacity(items);
+    let mut err: Option<anyhow::Error> = None;
+    for s in slots {
+        match s {
+            Some(Ok(t)) => {
+                if err.is_none() {
+                    out.push(t);
+                }
+            }
+            Some(Err(e)) => {
+                if err.is_none() {
+                    err = Some(e);
+                }
+            }
+            None => {
+                if err.is_none() {
+                    err = Some(anyhow::anyhow!(
+                        "executor worker aborted before claiming its item"
+                    ));
+                }
+            }
+        }
+    }
+    match err {
+        Some(e) => Err(e),
+        None => Ok(out),
+    }
+}
+
+impl Executor for ReferenceExec {
+    fn kind(&self) -> &'static str {
+        "reference"
+    }
+
+    fn platform(&self) -> String {
+        "reference-cpu".to_string()
+    }
+
+    fn train_step(
+        &self,
+        _man: &ArtifactManifest,
+        params: &[f32],
+        tokens: &[i32],
+        mask: &[f32],
+        seed: i32,
+    ) -> anyhow::Result<StepOut> {
+        ReferenceExec::train_step(self, params, tokens, mask, seed)
+    }
+
+    fn update(
+        &self,
+        _graph: GraphId,
+        params: &[f32],
+        grad: &[f32],
+        m: &[f32],
+        v: &[f32],
+        step: i32,
+        lr: f32,
+    ) -> anyhow::Result<(Vec<f32>, Vec<f32>, Vec<f32>)> {
+        // base and LoRA updates share one fused AdamW kernel here; the
+        // graph id only selects the artifact pin under PJRT
+        ReferenceExec::adamw_update(self, params, grad, m, v, step, lr)
+    }
+
+    fn eval_loss(
+        &self,
+        _man: &ArtifactManifest,
+        params: &[f32],
+        lora: Option<&[f32]>,
+        tokens: &[i32],
+    ) -> anyhow::Result<(Vec<f32>, Vec<f32>)> {
+        ReferenceExec::eval_loss(self, params, lora, tokens)
+    }
+
+    fn next_logits(
+        &self,
+        _man: &ArtifactManifest,
+        params: &[f32],
+        lora: Option<&[f32]>,
+        tokens: &[i32],
+        lens: &[i32],
+    ) -> anyhow::Result<Vec<f32>> {
+        ReferenceExec::next_logits(self, params, lora, tokens, lens)
+    }
+
+    fn lora_step(
+        &self,
+        _man: &ArtifactManifest,
+        base: &[f32],
+        lora: &[f32],
+        tokens: &[i32],
+        mask: &[f32],
+        seed: i32,
+    ) -> anyhow::Result<StepOut> {
+        ReferenceExec::lora_step(self, base, lora, tokens, mask, seed)
+    }
+
+    /// Parallel override: evaluate the N chunks across a scoped thread
+    /// pool.  Bit-identical to sequential chunking because each slot's
+    /// loss is a pure function of that slot's tokens alone — chunk
+    /// results are concatenated in index order, no cross-chunk
+    /// arithmetic exists to reorder.
+    fn eval_batch(
+        &self,
+        _man: &ArtifactManifest,
+        params: &[f32],
+        lora: Option<&[f32]>,
+        tokens: &[i32],
+    ) -> anyhow::Result<(Vec<f32>, Vec<f32>)> {
+        let chunk = self.eval_batch * self.seq_len;
+        anyhow::ensure!(
+            chunk > 0 && tokens.len() % chunk == 0,
+            "eval_batch tokens length {} is not a multiple of the \
+             {chunk}-token eval chunk",
+            tokens.len()
+        );
+        let n = tokens.len() / chunk;
+        let per_chunk = parallel_map(n, |i| {
+            ReferenceExec::eval_loss(
+                self,
+                params,
+                lora,
+                &tokens[i * chunk..(i + 1) * chunk],
+            )
+        })?;
+        let mut losses = Vec::with_capacity(n * self.eval_batch);
+        let mut counts = Vec::with_capacity(n * self.eval_batch);
+        for (l, c) in per_chunk {
+            losses.extend_from_slice(&l);
+            counts.extend_from_slice(&c);
+        }
+        Ok((losses, counts))
+    }
+
+    /// Parallel override: compute the per-microbatch gradients across a
+    /// scoped thread pool, then combine through the pinned reduce
+    /// ([`crate::runtime::reduce_pinned`]) in microbatch index order —
+    /// bit-identical to the logged sequential traversal no matter how
+    /// the threads were scheduled.
+    fn grad_accumulate(
+        &self,
+        man: &ArtifactManifest,
+        params: &[f32],
+        mbs: &[MicrobatchInput<'_>],
+    ) -> anyhow::Result<StepOut> {
+        let outs = parallel_map(mbs.len(), |i| {
+            ReferenceExec::train_step(
+                self,
+                params,
+                mbs[i].tokens,
+                mbs[i].mask,
+                mbs[i].seed,
+            )
+        })?;
+        Ok(crate::runtime::reduce_pinned(man.param_count, &outs))
     }
 }
 

@@ -2,11 +2,10 @@
 //!
 //! (tokio is not in the offline vendor set — std::net + scoped threads
 //! are fully adequate for an admin/control plane; the request path of
-//! the *model* is not served here.  The threaded design requires the
-//! runtime backend to be `Sync`: the default reference executor is;
-//! the optional `pjrt` backend is `Rc`-based and single-threaded, so
-//! enabling that feature for `serve` needs a sequential fallback —
-//! see DESIGN.md "Admin server protocol".)
+//! the *model* is not served here.  The threaded design leans on the
+//! `Executor: Send + Sync` contract: the reference backend is lock-free
+//! by construction, the pjrt backend serializes its non-thread-safe
+//! client behind one mutex — see DESIGN.md "Execution backends".)
 //!
 //! ## Architecture
 //!
@@ -238,6 +237,17 @@ impl JobQueue {
                     Err(_) if lineno + 1 == lines.len() => break,
                     Err(e) => anyhow::bail!("jobs WAL line {lineno}: {e}"),
                 };
+                // the id sequence's high-water mark, written at the head
+                // of every compacted file: completed jobs vanish from
+                // the suffix, but their ids must never be reused — a
+                // client's stale handle (or a derived auto-launder
+                // idempotency key) would silently alias a new job
+                if j.get("event").and_then(|v| v.as_str()) == Some("seq") {
+                    if let Some(n) = j.get("next").and_then(|v| v.as_u64()) {
+                        max_id = max_id.max(n.saturating_sub(1));
+                    }
+                    continue;
+                }
                 let job_id = j
                     .get("job")
                     .and_then(|v| v.as_str())
@@ -274,14 +284,19 @@ impl JobQueue {
                 }
             }
         }
-        // Compact: rewrite the WAL to just the recovered pending suffix
-        // (atomic tmp+rename) so the file — and every future recovery —
-        // stays bounded by in-flight work, not by service history.  The
-        // sequence counter was derived from the FULL history above, so
-        // ids keep advancing past completed work within this lineage of
-        // the file.
+        // Compact: rewrite the WAL to a `seq` high-water-mark header
+        // plus the recovered pending suffix (atomic tmp+rename) so the
+        // file — and every future recovery — stays bounded by in-flight
+        // work, not by service history, while ids keep advancing past
+        // completed work across ANY number of restarts (without the
+        // header, a later recovery of a fully drained file would reset
+        // the counter and alias old job ids).
         if path.exists() {
             let mut text = String::new();
+            let mut seq = Json::obj();
+            seq.set("event", "seq").set("next", max_id + 1);
+            text.push_str(&seq.encode());
+            text.push('\n');
             for job in &jobs {
                 let mut ev = Json::obj();
                 ev.set("event", "submit")
@@ -290,9 +305,7 @@ impl JobQueue {
                 text.push_str(&ev.encode());
                 text.push('\n');
             }
-            let tmp = path.with_extension("tmp");
-            std::fs::write(&tmp, text)?;
-            std::fs::rename(&tmp, path)?;
+            crate::checkpoint::write_atomic(path, &text)?;
         }
         let q = JobQueue {
             table: Mutex::new(JobTable {
@@ -558,6 +571,10 @@ pub struct ServerCtx<'a, 'rt> {
     /// Threshold for the `launder_recommended` status bit and for
     /// worker-executed launder jobs.
     pub launder_policy: LaunderPolicy,
+    /// Run a laundering pass from the worker when `launder_recommended`
+    /// flips after a drained forget burst (mirrors
+    /// `RunConfig::auto_launder`, captured at server start).
+    pub auto_launder: bool,
 }
 
 impl<'a, 'rt> ServerCtx<'a, 'rt> {
@@ -597,6 +614,7 @@ impl<'a, 'rt> ServerCtx<'a, 'rt> {
             manifest_key: sys.manifest.key().to_vec(),
         };
         let rt = sys.rt;
+        let auto_launder = sys.cfg.auto_launder;
         drop(sys);
         Ok(ServerCtx {
             system,
@@ -607,6 +625,7 @@ impl<'a, 'rt> ServerCtx<'a, 'rt> {
             shutdown: AtomicBool::new(false),
             coalesce_window: Duration::from_millis(15),
             launder_policy,
+            auto_launder,
         })
     }
 
@@ -619,8 +638,10 @@ impl<'a, 'rt> ServerCtx<'a, 'rt> {
 /// Drain every currently queued job: the forget jobs as ONE coalesced
 /// batch, then any launder jobs in submission order (laundering wants
 /// the post-batch forgotten set — draining the burst first compacts
-/// everything it accrued).  Returns the number of jobs processed.
-/// Exposed so tests (and the worker) share the exact same drain path.
+/// everything it accrued), then — when `ServerCtx::auto_launder` is set
+/// and the burst flipped `launder_recommended` — an automatic
+/// laundering pass.  Returns the number of jobs processed.  Exposed so
+/// tests (and the worker) share the exact same drain path.
 pub fn drain_queue_once(ctx: &ServerCtx<'_, '_>) -> usize {
     let batch = ctx.jobs.take_queued();
     if batch.is_empty() {
@@ -692,10 +713,27 @@ pub fn drain_queue_once(ctx: &ServerCtx<'_, '_>) -> usize {
                 }
             }
             for (job_id, key) in &launders {
+                // force=true by design: an explicit operator submission
+                // overrides the recommendation threshold (the policy
+                // gates only the automatic pass below)
                 match sys.launder(key, &ctx.launder_policy, true) {
                     Ok(out) => {
                         let mut r = out.to_json();
                         r.set("ok", true);
+                        ctx.jobs.publish(job_id, JobStatus::Done, r);
+                    }
+                    Err(e)
+                        if matches!(
+                            e.downcast_ref::<UnlearnError>(),
+                            Some(UnlearnError::NothingToLaunder)
+                        ) =>
+                    {
+                        // a scheduled cron launder on a quiet system is
+                        // a successful no-op, not a failure
+                        let mut r = Json::obj();
+                        r.set("ok", true)
+                            .set("executed", false)
+                            .set("note", "nothing to launder");
                         ctx.jobs.publish(job_id, JobStatus::Done, r);
                     }
                     Err(e) => {
@@ -705,6 +743,39 @@ pub fn drain_queue_once(ctx: &ServerCtx<'_, '_>) -> usize {
                             r.set("error_kind", ue.kind());
                         }
                         ctx.jobs.publish(job_id, JobStatus::Failed, r);
+                    }
+                }
+            }
+            // Auto-laundering (config-gated): a drained forget burst
+            // can flip `launder_recommended` — instead of waiting for
+            // the operator/cron to notice the status bit, compact the
+            // freshly accrued forgotten set right here, under the same
+            // lock as the batch (no forget can interleave between the
+            // check and the pass).  Runs AFTER explicit launder jobs so
+            // it never steals their work; the plan re-check keeps it a
+            // no-op when one of them already compacted.  The threshold
+            // is the same policy the status bit uses (`force` stays
+            // false); the idempotency key derives from the burst's
+            // first job id, so a crash-and-recover re-drain cannot
+            // double-launder.  A failure only logs: the next burst
+            // re-checks, and the serving state is unchanged (laundering
+            // swaps atomically or not at all).
+            if ctx.auto_launder && !forgets.is_empty() {
+                if let Ok(Some(_)) = sys.plan_launder(&ctx.launder_policy) {
+                    let key = format!("auto-launder-{}", forgets[0].0);
+                    match sys.launder(&key, &ctx.launder_policy, false) {
+                        Ok(out) if out.executed => eprintln!(
+                            "auto-launder after burst: generation {}, {} \
+                             id(s) compacted, {} checkpoint(s) rewritten",
+                            out.generation,
+                            out.laundered_now,
+                            out.checkpoints_written
+                        ),
+                        Ok(_) => {}
+                        Err(e) => eprintln!(
+                            "auto-launder failed (state unchanged; will \
+                             re-check after the next burst): {e:#}"
+                        ),
                     }
                 }
             }

@@ -11,7 +11,7 @@ use crate::runtime::Runtime;
 use crate::util::json::Json;
 use crate::wal::{IdMap, WalRecord, WalWriter};
 
-use super::{accumulate, build_microbatch_tensors_into};
+use super::SegmentStage;
 
 /// Everything a finished training run leaves on disk / in memory.
 pub struct TrainOutput {
@@ -119,45 +119,33 @@ impl<'rt> Trainer<'rt> {
             }
         }
         let mut losses = Vec::new();
-        let mut grad_acc = vec![0.0f32; man.param_count];
-        let mut had_contrib = false;
-        let mut step_loss = 0.0f32;
-        let mut step_tokens = 0.0f32;
-        // reused microbatch tensor buffers (no per-record allocation)
-        let mut tokens = Vec::new();
-        let mut mask = Vec::new();
+        // The current accumulation segment, staged record by record and
+        // executed as ONE batched `grad_accumulate` call at `accum_end`
+        // — the same staging layer AND entry point (pinned combine
+        // order, Lemma A.3) replay traverses, so train and replay
+        // cannot drift.
+        let mut seg = SegmentStage::new();
 
         for mb in &schedule {
             let lr = cfg.lr_at(state.applied_updates);
             self.log_record(&mut wal, &mut idmap, mb, lr)?;
-            let retained = build_microbatch_tensors_into(
+            seg.stage(
                 &self.corpus,
                 &mb.sample_ids,
                 man.batch,
                 man.seq_len,
                 &filter,
                 false,
-                &mut tokens,
-                &mut mask,
+                mb.seed64 as i32,
             )?;
-            if retained > 0 {
-                let out = rt.train_step(
-                    &state.params,
-                    &tokens,
-                    &mask,
-                    mb.seed64 as i32,
-                )?;
-                accumulate(&mut grad_acc, &out.grad);
-                had_contrib = true;
-                step_loss += out.loss_sum;
-                step_tokens += out.tok_count;
-            }
             if mb.accum_end {
-                if had_contrib {
+                let inputs = seg.inputs();
+                if !inputs.is_empty() {
+                    let out = rt.grad_accumulate(&state.params, &inputs)?;
                     let step_before = state.logical_step;
                     let (p, m, v) = rt.adamw_update(
                         &state.params,
-                        &grad_acc,
+                        &out.grad,
                         &state.m,
                         &state.v,
                         state.applied_updates as i32 + 1,
@@ -177,17 +165,14 @@ impl<'rt> Trainer<'rt> {
                         &before_v,
                         &state,
                     )?;
+                    if out.tok_count > 0.0 {
+                        losses.push((mb.step, out.loss_sum / out.tok_count));
+                    }
                 } else {
                     // empty-step skip (Prop. A.5): no counter advance
                     state.logical_step = mb.step + 1;
                 }
-                if step_tokens > 0.0 {
-                    losses.push((mb.step, step_loss / step_tokens));
-                }
-                grad_acc.iter_mut().for_each(|x| *x = 0.0);
-                had_contrib = false;
-                step_loss = 0.0;
-                step_tokens = 0.0;
+                seg.reset();
 
                 let done = mb.step + 1;
                 if cfg.checkpoint_every > 0 && done % cfg.checkpoint_every == 0

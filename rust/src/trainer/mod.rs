@@ -2,17 +2,101 @@
 //! control inputs are fully logged.
 //!
 //! Per microbatch it (1) registers the ordered sample IDs in the IdMap,
-//! (2) appends the 32-byte WAL record (Alg. A.1), (3) executes the
-//! `train_step` graph, (4) accumulates gradients in an explicit,
-//! logged order.  At each accumulation boundary it applies the fused
-//! AdamW update with the *logged* LR value, records the per-step delta
-//! in the ring buffer, and takes checkpoints on the configured cadence.
+//! (2) appends the 32-byte WAL record (Alg. A.1), (3) stages the
+//! microbatch tensors into the current accumulation segment.  At each
+//! accumulation boundary the staged segment runs as ONE
+//! `Runtime::grad_accumulate` call — per-microbatch gradients combined
+//! in the explicit, logged order (the pinned reduce; Lemma A.3), the
+//! same batched entry point replay traverses — then the fused AdamW
+//! update applies with the *logged* LR value, the per-step delta is
+//! recorded in the ring buffer, and checkpoints are taken on the
+//! configured cadence.
 
 pub mod loop_;
 
 pub use loop_::{TrainOutput, Trainer};
 
 use crate::data::corpus::Corpus;
+use crate::runtime::MicrobatchInput;
+
+/// Staged tensors of one microbatch within the current accumulation
+/// segment.
+#[derive(Default)]
+pub struct SegSlot {
+    pub tokens: Vec<i32>,
+    pub mask: Vec<f32>,
+    pub seed: i32,
+    pub retained: bool,
+}
+
+/// The current accumulation segment, staged record by record and
+/// executed as ONE `Runtime::grad_accumulate` call at the boundary.
+/// Slot buffers are reused across segments (no per-record allocation).
+/// Shared by the trainer and replay so the staging layer — like the
+/// batched entry point itself — cannot drift between them.
+#[derive(Default)]
+pub struct SegmentStage {
+    slots: Vec<SegSlot>,
+    len: usize,
+}
+
+impl SegmentStage {
+    pub fn new() -> SegmentStage {
+        SegmentStage::default()
+    }
+
+    /// Stage one record's tensors into the next slot (growing the slot
+    /// pool on first use); returns the retained-sample count.
+    #[allow(clippy::too_many_arguments)]
+    pub fn stage(
+        &mut self,
+        corpus: &Corpus,
+        ids: &[u64],
+        batch: usize,
+        seq_len: usize,
+        filter: impl Fn(u64) -> bool,
+        zero_content: bool,
+        seed: i32,
+    ) -> anyhow::Result<usize> {
+        if self.len == self.slots.len() {
+            self.slots.push(SegSlot::default());
+        }
+        let slot = &mut self.slots[self.len];
+        let retained = build_microbatch_tensors_into(
+            corpus,
+            ids,
+            batch,
+            seq_len,
+            filter,
+            zero_content,
+            &mut slot.tokens,
+            &mut slot.mask,
+        )?;
+        slot.seed = seed;
+        slot.retained = retained > 0;
+        self.len += 1;
+        Ok(retained)
+    }
+
+    /// The retained microbatches of the staged segment, in record
+    /// order — the pinned combine order of `grad_accumulate`.
+    pub fn inputs(&self) -> Vec<MicrobatchInput<'_>> {
+        self.slots[..self.len]
+            .iter()
+            .filter(|s| s.retained)
+            .map(|s| MicrobatchInput {
+                tokens: &s.tokens,
+                mask: &s.mask,
+                seed: s.seed,
+            })
+            .collect()
+    }
+
+    /// Start the next segment (slot buffers are kept for reuse).
+    pub fn reset(&mut self) {
+        self.len = 0;
+    }
+}
 
 /// Build the padded `[batch, seq_len]` token tensor + per-example mask
 /// for an ordered ID list.  Slots beyond `ids.len()` are PAD + mask 0.

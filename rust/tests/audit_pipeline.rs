@@ -109,6 +109,72 @@ fn shared_evals_are_bit_transparent() {
 }
 
 #[test]
+fn batched_forget_probes_are_bit_transparent() {
+    // The coalesced-batch probe optimization: evaluating EVERY member's
+    // forget-probe losses in one `eval_batch` call over the closure
+    // union (audit::batch_forget_losses) must yield reports identical
+    // to per-request `eval_loss` probing — per-slot losses are pure
+    // functions of (state, sample), so neither the union's chunking nor
+    // its ordering can move a bit.
+    let rt = Runtime::load(&harness::artifacts_dir()).expect("artifacts");
+    let corpus = harness::small_corpus(rt.manifest.seq_len);
+    let params = rt.manifest.init_params().unwrap();
+    let view = ModelView::Base(&params);
+    let forget_a: Vec<u64> = corpus.user_samples(0);
+    let forget_b: Vec<u64> = corpus.user_samples(3);
+    let forget_c: Vec<u64> = corpus.user_samples(7);
+    let fset: HashSet<u64> = forget_a
+        .iter()
+        .chain(forget_b.iter())
+        .chain(forget_c.iter())
+        .copied()
+        .collect();
+    let (retain_ids, eval_ids) = harness::audit_splits(&corpus, &fset, 17);
+    // direct check on the primitive: the batched map holds exactly the
+    // per-request per-example losses
+    let closures: Vec<&[u64]> =
+        vec![&forget_a, &forget_b, &forget_c];
+    let map =
+        audit::batch_forget_losses(&rt, view, &corpus, &closures).unwrap();
+    for closure in &closures {
+        let inline =
+            audit::per_example_losses(&rt, view, &corpus, closure).unwrap();
+        for (id, l) in closure.iter().zip(inline) {
+            assert_eq!(
+                map.get(id).copied().map(f32::to_bits),
+                Some(l.to_bits()),
+                "batched probe loss drifted for sample {id}"
+            );
+        }
+    }
+    // end-to-end: a report built from the shared+batched probes equals
+    // the fully-inline report, for every member of the "batch"
+    let forgets: Vec<Vec<u64>> = vec![forget_a, forget_b, forget_c];
+    for forget in &forgets {
+        let ctx = AuditContext {
+            rt: &rt,
+            corpus: &corpus,
+            forget_ids: forget,
+            retain_ids: &retain_ids,
+            eval_ids: &eval_ids,
+            baseline_ppl: Some(60.0),
+            thresholds: Default::default(),
+            seed: 23,
+        };
+        let mut shared = audit::shared_evals(&ctx, view).unwrap();
+        shared.forget_losses = Some(map.clone());
+        let inline = audit::run_audits(&ctx, view).unwrap();
+        let batched =
+            audit::run_audits_with(&ctx, view, Some(&shared)).unwrap();
+        assert_eq!(
+            inline.to_json().encode(),
+            batched.to_json().encode(),
+            "batched forget probes must not change the report"
+        );
+    }
+}
+
+#[test]
 fn greedy_decode_is_deterministic_and_shaped() {
     let rt = Runtime::load(&harness::artifacts_dir()).expect("artifacts");
     let params = rt.manifest.init_params().unwrap();

@@ -118,6 +118,150 @@ fn job_wal_recovers_pending_and_launder_op_compacts() {
 }
 
 #[test]
+fn auto_launder_runs_after_a_drained_burst_when_enabled() {
+    // The worker-side compaction loop (ROADMAP "launder automatically
+    // from the worker"): with `RunConfig::auto_launder` set, a drained
+    // forget burst that flips `launder_recommended` is followed — under
+    // the same system lock — by a laundering pass keyed off the burst's
+    // first job id.  The operator never has to poll the status bit.
+    let rt = Runtime::load(&harness::artifacts_dir()).expect("artifacts");
+    let corpus = harness::small_corpus(rt.manifest.seq_len);
+    let cfg = RunConfig {
+        run_dir: unlearn::util::tempdir("server-auto-launder"),
+        steps: 8,
+        accum: 2,
+        checkpoint_every: 4,
+        warmup: 2,
+        auto_launder: true,
+        ..Default::default()
+    };
+    let trained = harness::build_system(&rt, cfg, corpus, false).unwrap();
+    let system = Mutex::new(trained.system);
+
+    // an EARLY-influence user: its forgotten history drags rebuild
+    // targets before the latest checkpoint, which is what inflates
+    // replay tails and makes laundering worthwhile
+    let user = {
+        let sys = system.lock().unwrap();
+        (0..24u32)
+            .find(|&u| {
+                sys.plan(&unlearn::controller::ForgetRequest {
+                    id: format!("probe-{u}"),
+                    user: Some(u),
+                    sample_ids: vec![],
+                    urgency: unlearn::controller::Urgency::Normal,
+                })
+                .map(|p| {
+                    p.offending.first().map(|&t| t < 4).unwrap_or(false)
+                })
+                .unwrap_or(false)
+            })
+            .expect("an early-influence user exists")
+    };
+
+    let mut ctx = ServerCtx::new(&system).unwrap();
+    assert!(ctx.auto_launder, "flag captured from RunConfig");
+    // the toy run's tail is short — lower the recommendation threshold
+    // so one burst flips the bit (the same policy the status bit uses)
+    ctx.launder_policy = unlearn::controller::LaunderPolicy {
+        min_extra_replay_records: 1,
+    };
+
+    let r = dispatch(
+        &format!(r#"{{"op":"submit","id":"auto-0","user":{user}}}"#),
+        &ctx,
+    );
+    assert_eq!(r.get("ok").unwrap().as_bool(), Some(true), "{r}");
+    let job = r.get("job").unwrap().as_str().unwrap().to_string();
+    assert_eq!(drain_queue_once(&ctx), 1);
+    let r = dispatch(&format!(r#"{{"op":"poll","job":"{job}"}}"#), &ctx);
+    assert_eq!(r.get("status").unwrap().as_str(), Some("done"), "{r}");
+
+    {
+        let sys = system.lock().unwrap();
+        assert!(
+            sys.forgotten.is_empty(),
+            "auto-launder compacted the burst's forgotten set"
+        );
+        assert!(!sys.laundered.is_empty());
+        // the pass reached the signed manifest under its derived key
+        let chain = sys.manifest.verify_chain().unwrap();
+        assert!(chain.iter().all(|(_, sig)| *sig));
+        assert!(
+            chain.iter().any(|(e, _)| {
+                e.get("action").and_then(|v| v.as_str()) == Some("launder")
+                    && e.get("idempotency_key")
+                        .and_then(|v| v.as_str())
+                        .map(|k| k.starts_with(&format!(
+                            "auto-launder-{job}"
+                        )))
+                        .unwrap_or(false)
+            }),
+            "manifest records the auto pass"
+        );
+    }
+
+    // the read plane sees the compaction through the refreshed snapshot
+    let r = dispatch(r#"{"op":"status"}"#, &ctx);
+    assert_eq!(r.get("forgotten_pending").unwrap().as_u64(), Some(0), "{r}");
+    assert!(r.get("laundered_ids").unwrap().as_u64().unwrap() > 0);
+    assert_eq!(r.get("launder_recommended").unwrap().as_bool(), Some(false));
+    assert!(
+        r.get_path(&["cas", "generation"]).unwrap().as_u64().unwrap() >= 1,
+        "lineage swapped: {r}"
+    );
+}
+
+#[test]
+fn auto_launder_stays_off_by_default() {
+    // Same burst, default config: the forgotten set survives the drain
+    // (laundering remains an explicit operator/cron decision).
+    let rt = Runtime::load(&harness::artifacts_dir()).expect("artifacts");
+    let corpus = harness::small_corpus(rt.manifest.seq_len);
+    let cfg = RunConfig {
+        run_dir: unlearn::util::tempdir("server-no-auto-launder"),
+        steps: 8,
+        accum: 2,
+        checkpoint_every: 4,
+        warmup: 2,
+        ..Default::default()
+    };
+    let trained = harness::build_system(&rt, cfg, corpus, false).unwrap();
+    let system = Mutex::new(trained.system);
+    let user = {
+        let sys = system.lock().unwrap();
+        (0..24u32)
+            .find(|&u| {
+                sys.plan(&unlearn::controller::ForgetRequest {
+                    id: format!("probe-{u}"),
+                    user: Some(u),
+                    sample_ids: vec![],
+                    urgency: unlearn::controller::Urgency::Normal,
+                })
+                .map(|p| !p.offending.is_empty())
+                .unwrap_or(false)
+            })
+            .expect("a replay-bound user exists")
+    };
+    let mut ctx = ServerCtx::new(&system).unwrap();
+    assert!(!ctx.auto_launder, "off unless the config opts in");
+    ctx.launder_policy = unlearn::controller::LaunderPolicy {
+        min_extra_replay_records: 1,
+    };
+    let r = dispatch(
+        &format!(r#"{{"op":"submit","id":"noauto-0","user":{user}}}"#),
+        &ctx,
+    );
+    assert_eq!(r.get("ok").unwrap().as_bool(), Some(true), "{r}");
+    assert_eq!(drain_queue_once(&ctx), 1);
+    let sys = system.lock().unwrap();
+    assert!(
+        !sys.forgotten.is_empty(),
+        "no auto compaction without the flag"
+    );
+}
+
+#[test]
 fn protocol_ops_roundtrip() {
     let rt = Runtime::load(&harness::artifacts_dir()).expect("artifacts");
     let corpus = harness::small_corpus(rt.manifest.seq_len);
