@@ -1,0 +1,181 @@
+//! Fleet scaling benchmark: the SISA-style `1/N` claim, measured.
+//!
+//! Trains fleets at N ∈ {1, 4, 16} over the SAME corpus (per-shard step
+//! budgets scaled to the shard's corpus share — constant epochs), then
+//! forgets one fixed user on each and records forget wall-time plus
+//! **replay-steps/request** (microbatch updates applied fleet-wide per
+//! forget).  N = 1 is the monolithic baseline; the per-request replay
+//! work must shrink monotonically as N grows, because a forget touches
+//! only `shard(u)` and that shard's tail is `~1/N` of the run.
+//!
+//! `-- --json` gates `fleet_replay_steps_per_request` (a deterministic
+//! count, machine-independent) against the committed `BENCH_fleet.json`
+//! through the same >20% cigate rule as the replay bench, with
+//! first-measured-run promotion over the null placeholder.
+
+#[path = "bench_util.rs"]
+mod bench_util;
+use bench_util::*;
+
+use unlearn::cigate::perf;
+use unlearn::config::RunConfig;
+use unlearn::controller::{ForgetRequest, Urgency};
+use unlearn::fleet::{Fleet, FleetConfig};
+use unlearn::harness;
+use unlearn::runtime::Runtime;
+use unlearn::shard::ShardSpec;
+use unlearn::util::json::Json;
+
+/// Shard count whose replay-steps/request is the gated metric (the
+/// middle of the sweep: sharded, but not so fine that per-shard tails
+/// hit the minimum step clamp).
+const GATE_N: u32 = 4;
+
+struct Probe {
+    n_shards: u32,
+    forget_secs: f64,
+    replay_steps: u64,
+    shards_touched: usize,
+}
+
+fn run_probe(rt: &Runtime, n_shards: u32, tag: &str) -> Probe {
+    let corpus = harness::toy_corpus(rt.manifest.seq_len);
+    let cfg = FleetConfig {
+        root: unlearn::util::tempdir(&format!("{tag}-{n_shards}")),
+        spec: ShardSpec {
+            n_shards,
+            salt: 0xF1EE7,
+        },
+        base: RunConfig {
+            steps: 12,
+            accum: 2,
+            checkpoint_every: 4,
+            checkpoint_keep: 16,
+            // a small ring forces the replay path — the metric under
+            // the gate is replay work, not ring luck
+            ring_window: 2,
+            warmup: 4,
+            ..Default::default()
+        },
+        scale_steps: true,
+        launder_policy: Default::default(),
+        auto_launder: false,
+    };
+    let mut fleet = Fleet::train(rt, cfg, corpus).expect("fleet train");
+    // the same user on every topology: apples-to-apples forget work
+    let req = ForgetRequest {
+        id: format!("bench-fleet-{n_shards}"),
+        user: Some(2),
+        sample_ids: vec![],
+        urgency: Urgency::Normal,
+    };
+    let t0 = std::time::Instant::now();
+    let out = fleet.forget(&req).expect("fleet forget");
+    let forget_secs = t0.elapsed().as_secs_f64();
+    assert!(out.outcomes[0].executed(), "forget must commit");
+    Probe {
+        n_shards,
+        forget_secs,
+        replay_steps: out.applied_steps_total,
+        shards_touched: out.shards_touched,
+    }
+}
+
+fn json_main() {
+    let rt = Runtime::load(&harness::artifacts_dir()).expect("artifacts");
+    let probes: Vec<Probe> = [1u32, 4, 16]
+        .iter()
+        .map(|&n| run_probe(&rt, n, "bench-fleet-json"))
+        .collect();
+    let gated = probes
+        .iter()
+        .find(|p| p.n_shards == GATE_N)
+        .map(|p| p.replay_steps as f64)
+        .expect("gate point measured");
+    let monotone = probes
+        .windows(2)
+        .all(|w| w[1].replay_steps <= w[0].replay_steps);
+
+    // fail-closed gate against the committed baseline
+    let baseline = bench_json_path("fleet");
+    match perf::check_fleet(&baseline, gated, perf::DEFAULT_MAX_REGRESSION) {
+        Ok(v) => println!("fleet perf gate: {v:?}"),
+        Err(e) => {
+            eprintln!("{e:#}");
+            std::process::exit(1);
+        }
+    }
+
+    let mut j = Json::obj();
+    j.set("bench", "fleet")
+        .set(perf::FLEET_METRIC, gated)
+        .set("gate_n_shards", GATE_N)
+        .set("monotone_reduction", monotone)
+        .set("schema", 1);
+    for p in &probes {
+        j.set(&format!("n{}_forget_ns", p.n_shards), ns(p.forget_secs))
+            .set(
+                &format!("n{}_replay_steps_per_request", p.n_shards),
+                p.replay_steps,
+            )
+            .set(
+                &format!("n{}_shards_touched", p.n_shards),
+                p.shards_touched,
+            );
+    }
+    for p in &probes {
+        println!(
+            "N={}: forget {} | replay steps/request {} | shards touched {}",
+            p.n_shards,
+            fmt_secs(p.forget_secs),
+            p.replay_steps,
+            p.shards_touched
+        );
+    }
+    if !monotone {
+        eprintln!(
+            "WARNING: replay steps/request did not reduce monotonically \
+             with N — recorded for the trajectory, not fabricated away"
+        );
+    }
+    match perf::record_first_baseline_for(&baseline, perf::FLEET_METRIC, &j)
+        .expect("write baseline")
+    {
+        perf::BaselineDisposition::Recorded => {
+            println!(
+                "fleet perf baseline: first measured run RECORDED at {} — \
+                 the >{:.0}% regression gate bites from the next run",
+                baseline.display(),
+                perf::DEFAULT_MAX_REGRESSION * 100.0
+            );
+            println!("{}", j.pretty());
+        }
+        perf::BaselineDisposition::AlreadyMeasured => emit_json("fleet", &j),
+    }
+}
+
+fn main() {
+    if json_mode() {
+        return json_main();
+    }
+    let rt = Runtime::load(&harness::artifacts_dir()).expect("artifacts");
+    header(
+        "Fleet scaling — forget cost vs shard count (measured)",
+        &[
+            "N shards",
+            "Forget wall",
+            "Replay steps/request",
+            "Shards touched",
+        ],
+    );
+    for &n in &[1u32, 4, 16] {
+        let p = run_probe(&rt, n, "bench-fleet");
+        println!(
+            "{} | {} | {} | {}",
+            p.n_shards,
+            fmt_secs(p.forget_secs),
+            p.replay_steps,
+            p.shards_touched
+        );
+    }
+}

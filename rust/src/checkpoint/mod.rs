@@ -351,9 +351,57 @@ impl CheckpointStore {
     }
 
     /// IDs laundered out of the active lineage (empty for gen 0 or a
-    /// lineage that was never laundered).
+    /// lineage that was never laundered).  After laundered-set
+    /// compaction this is only the *residue* — IDs not yet folded into
+    /// the WAL IdMap's retired set; see [`CheckpointStore::
+    /// laundered_meta`] for the full accounting.
     pub fn laundered_ids(&self) -> anyhow::Result<Vec<u64>> {
         read_ids_json(&self.active_dir()?.join("laundered.json"))
+    }
+
+    /// The active lineage's laundered-set accounting: (residue IDs not
+    /// yet compacted into the IdMap, count of IDs already retired
+    /// there).  The residue is what a reopening harness must still add
+    /// to its replay filters; the retired count is bookkeeping only
+    /// (the IdMap enforces those during traversal).
+    pub fn laundered_meta(&self) -> anyhow::Result<(Vec<u64>, u64)> {
+        let path = self.active_dir()?.join("laundered.json");
+        if !path.exists() {
+            return Ok((Vec::new(), 0));
+        }
+        let j = parse(&fs::read_to_string(&path)?).map_err(|e| {
+            anyhow::anyhow!("bad laundered.json {}: {e}", path.display())
+        })?;
+        let ids = j
+            .get("ids")
+            .and_then(|v| v.as_arr())
+            .map(|a| a.iter().filter_map(|x| x.as_u64()).collect())
+            .unwrap_or_default();
+        let retired =
+            j.get("retired").and_then(|v| v.as_u64()).unwrap_or(0);
+        Ok((ids, retired))
+    }
+
+    /// Compact the active lineage's `laundered.json` after its closure
+    /// was folded into the WAL IdMap's retired set: the residue empties
+    /// and only the cumulative `retired` count remains, so the file
+    /// stops growing with service lifetime.  Ordering contract: the
+    /// caller retires the IDs (and persists the IdMap) FIRST — a crash
+    /// before this rewrite merely leaves the full residue on disk,
+    /// which reopening harnesses keep filtering (double coverage is
+    /// harmless; a gap would not be).
+    pub fn compact_laundered(&self, retired_total: u64) -> anyhow::Result<()> {
+        let path = self.active_dir()?.join("laundered.json");
+        let mut j = if path.exists() {
+            parse(&fs::read_to_string(&path)?).map_err(|e| {
+                anyhow::anyhow!("bad laundered.json {}: {e}", path.display())
+            })?
+        } else {
+            Json::obj()
+        };
+        j.set("ids", Json::Arr(Vec::new()))
+            .set("retired", retired_total);
+        write_atomic(&path, &j.pretty())
     }
 
     /// Store one tensor, deduplicating on content: hash the in-memory
@@ -697,7 +745,10 @@ impl CheckpointStore {
                 1.0
             },
             generation: self.active_generation()?,
-            laundered_ids: self.laundered_ids()?.len() as u64,
+            laundered_ids: {
+                let (residue, retired) = self.laundered_meta()?;
+                residue.len() as u64 + retired
+            },
         })
     }
 
@@ -793,15 +844,20 @@ impl LineageStage<'_> {
     /// Atomically make this lineage active: persist its laundered
     /// closure, swap `LINEAGE.json` (tmp + rename), retire the previous
     /// generation's manifests and sweep unreferenced blobs.
+    /// `retired` carries the count of IDs ALREADY folded into the WAL
+    /// IdMap's retired set by earlier compactions, so the laundered
+    /// accounting stays exact in every crash window.
     pub fn commit(
         self,
         laundered: &[u64],
         laundered_at_step: u32,
+        retired: u64,
     ) -> anyhow::Result<()> {
         let previous = self.store.active_generation()?;
         let mut lj = ids_json(laundered);
         lj.set("laundered_at_step", laundered_at_step)
-            .set("parent_generation", previous);
+            .set("parent_generation", previous)
+            .set("retired", retired);
         write_atomic(&self.dir.join("laundered.json"), &lj.pretty())?;
         let mut j = Json::obj();
         j.set("active", self.generation);
@@ -1059,7 +1115,7 @@ mod tests {
 
         // commit: gen 0 retires, s1's unshared blobs are collected,
         // adopted s0 survives via the shared manifest
-        stage.commit(&[7, 8], 1).unwrap();
+        stage.commit(&[7, 8], 1, 0).unwrap();
         assert_eq!(store.active_generation().unwrap(), 1);
         assert_eq!(store.laundered_ids().unwrap(), vec![7, 8]);
         assert!(store.load_full(0).unwrap().bits_equal(&s0));
@@ -1079,6 +1135,32 @@ mod tests {
                 );
             }
         }
+    }
+
+    #[test]
+    fn laundered_compaction_empties_residue_and_keeps_count() {
+        let dir = tempdir("ckpt-laundered-compact");
+        let store = CheckpointStore::open(&dir, 10).unwrap();
+        store.save_full(&state(31, 64, 0)).unwrap();
+        let stage = store.begin_lineage().unwrap();
+        stage.adopt_full(0).unwrap();
+        // 2 ids previously retired by an earlier compaction, 3 new
+        stage.commit(&[10, 11, 12], 2, 2).unwrap();
+        assert_eq!(store.laundered_meta().unwrap(), (vec![10, 11, 12], 2));
+        assert_eq!(store.stats().unwrap().laundered_ids, 5);
+        // fold the residue into the IdMap → compact the lineage file
+        store.compact_laundered(5).unwrap();
+        assert_eq!(store.laundered_meta().unwrap(), (Vec::new(), 5));
+        assert!(store.laundered_ids().unwrap().is_empty());
+        assert_eq!(store.stats().unwrap().laundered_ids, 5);
+        // compaction is idempotent and the file stays bounded
+        let path = dir
+            .join("lineages")
+            .join("gen-00000001")
+            .join("laundered.json");
+        let size = fs::metadata(&path).unwrap().len();
+        store.compact_laundered(5).unwrap();
+        assert_eq!(fs::metadata(&path).unwrap().len(), size);
     }
 
     #[test]

@@ -120,7 +120,13 @@ pub fn run_gate(
         &idmap,
         &HashSet::new(),
         Some(&pins),
-        &ReplayOptions::default(),
+        // the gate runs were trained under the caller's topology claim
+        // (if any); replay must present the same one or the pin check
+        // would refuse a perfectly healthy fleet-shard config
+        &ReplayOptions {
+            shard_pin: base_cfg.shard_pin.clone(),
+            ..ReplayOptions::default()
+        },
     )?;
     let checkpoint_replay_equal = outcome.state.bits_equal(&out_a.state);
     details.push(format!(

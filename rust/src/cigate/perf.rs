@@ -72,6 +72,60 @@ pub fn judge(
     }
 }
 
+/// Load one named numeric metric from a committed bench baseline.
+/// `None` when the file is missing or the metric is null/invalid — the
+/// record-only placeholder state.  Unlike the latency-only
+/// [`load_baseline`], a recorded 0.0 is a VALID measurement here
+/// (count metrics like replay-steps/request can legitimately be zero);
+/// treating it as a placeholder would disable the gate forever and
+/// churn the committed baseline on every run.
+pub fn load_metric(path: &Path, key: &str) -> anyhow::Result<Option<f64>> {
+    if !path.exists() {
+        return Ok(None);
+    }
+    let j = parse(&std::fs::read_to_string(path)?)
+        .map_err(|e| anyhow::anyhow!("bench baseline {}: {e}", path.display()))?;
+    Ok(j.get(key)
+        .and_then(|v| v.as_f64())
+        .filter(|v| v.is_finite() && *v >= 0.0))
+}
+
+/// Generic fail-closed gate over one named metric of a committed bench
+/// baseline: errors when `measured` regressed more than
+/// `max_regression` over the recorded value.  `what` names the metric
+/// in the refusal message.  A zero baseline gates exactly: any
+/// positive measurement is a regression from zero.
+pub fn check_metric(
+    baseline_path: &Path,
+    key: &str,
+    measured: f64,
+    max_regression: f64,
+    what: &str,
+) -> anyhow::Result<PerfVerdict> {
+    let baseline = load_metric(baseline_path, key)?;
+    if baseline == Some(0.0) {
+        if measured <= 0.0 {
+            return Ok(PerfVerdict::Pass { ratio: 1.0 });
+        }
+        anyhow::bail!(
+            "{what} regressed: {measured:.2} vs a recorded baseline of 0 \
+             — refusing ({})",
+            baseline_path.display()
+        );
+    }
+    let v = judge(baseline, measured, max_regression);
+    if let PerfVerdict::Fail { ratio } = &v {
+        anyhow::bail!(
+            "{what} regressed: {measured:.2} is {:.1}% over the recorded \
+             baseline (allowed +{:.0}%) — refusing ({})",
+            (ratio - 1.0) * 100.0,
+            max_regression * 100.0,
+            baseline_path.display()
+        );
+    }
+    Ok(v)
+}
+
 /// Fail-closed wrapper: error when the replay bench regressed more
 /// than `max_regression` against the baseline at `baseline_path`.
 pub fn check_replay(
@@ -79,22 +133,35 @@ pub fn check_replay(
     measured_ns: f64,
     max_regression: f64,
 ) -> anyhow::Result<PerfVerdict> {
-    let baseline = load_baseline(baseline_path)?;
-    let v = judge(
-        baseline.and_then(|b| b.replay_ns_per_step),
+    check_metric(
+        baseline_path,
+        "replay_ns_per_step",
         measured_ns,
         max_regression,
-    );
-    if let PerfVerdict::Fail { ratio } = &v {
-        anyhow::bail!(
-            "replay bench regressed: {measured_ns:.0} ns/step is {:.1}% over \
-             the recorded baseline (allowed +{:.0}%) — refusing ({})",
-            (ratio - 1.0) * 100.0,
-            max_regression * 100.0,
-            baseline_path.display()
-        );
-    }
-    Ok(v)
+        "replay bench (ns/step)",
+    )
+}
+
+/// The fleet bench's gated metric: replay-work-per-request across the
+/// fleet (microbatch updates applied per forget request at the gate's
+/// reference shard count).  A deterministic count, not a timing — it
+/// regresses when routing gets leakier (more shards touched) or
+/// per-shard rebuild tails grow, never from machine noise.
+pub const FLEET_METRIC: &str = "fleet_replay_steps_per_request";
+
+/// Fail-closed gate over the committed `BENCH_fleet.json` baseline.
+pub fn check_fleet(
+    baseline_path: &Path,
+    measured_steps_per_request: f64,
+    max_regression: f64,
+) -> anyhow::Result<PerfVerdict> {
+    check_metric(
+        baseline_path,
+        FLEET_METRIC,
+        measured_steps_per_request,
+        max_regression,
+        "fleet bench (replay steps/request)",
+    )
 }
 
 /// Whether a measured run became the committed baseline.
@@ -120,9 +187,18 @@ pub fn record_first_baseline(
     path: &Path,
     measured: &Json,
 ) -> anyhow::Result<BaselineDisposition> {
-    let existing =
-        load_baseline(path)?.and_then(|b| b.replay_ns_per_step);
-    match existing {
+    record_first_baseline_for(path, "replay_ns_per_step", measured)
+}
+
+/// [`record_first_baseline`] generalized to any gated metric key —
+/// the fleet bench promotes `fleet_replay_steps_per_request` through
+/// the same missing-or-null-placeholder rule.
+pub fn record_first_baseline_for(
+    path: &Path,
+    key: &str,
+    measured: &Json,
+) -> anyhow::Result<BaselineDisposition> {
+    match load_metric(path, key)? {
         Some(_) => Ok(BaselineDisposition::AlreadyMeasured),
         None => {
             std::fs::write(path, measured.pretty())?;
@@ -164,6 +240,87 @@ pub fn set_replay_ab(j: &mut Json, ns_sequential: f64, ns_parallel: f64) {
 mod tests {
     use super::*;
     use crate::util::tempdir;
+
+    #[test]
+    fn fleet_metric_gates_and_promotes_like_replay() {
+        let dir = tempdir("perf-fleet-gate");
+        let path = dir.join("BENCH_fleet.json");
+        // missing file: record-only
+        assert_eq!(
+            check_fleet(&path, 5.0, 0.2).unwrap(),
+            PerfVerdict::RecordOnly
+        );
+        // committed null placeholder: record-only, then promoted
+        std::fs::write(
+            &path,
+            r#"{"bench": "fleet", "fleet_replay_steps_per_request": null}"#,
+        )
+        .unwrap();
+        assert_eq!(
+            check_fleet(&path, 5.0, 0.2).unwrap(),
+            PerfVerdict::RecordOnly
+        );
+        let mut measured = Json::obj();
+        measured
+            .set("bench", "fleet")
+            .set(FLEET_METRIC, 5.0)
+            .set("schema", 1);
+        assert_eq!(
+            record_first_baseline_for(&path, FLEET_METRIC, &measured)
+                .unwrap(),
+            BaselineDisposition::Recorded
+        );
+        assert_eq!(load_metric(&path, FLEET_METRIC).unwrap(), Some(5.0));
+        // once real, the same >20% band bites — and the baseline is
+        // never clobbered by the promoter
+        assert!(matches!(
+            check_fleet(&path, 5.9, 0.2).unwrap(),
+            PerfVerdict::Pass { .. }
+        ));
+        assert!(check_fleet(&path, 6.5, 0.2).is_err());
+        let other = {
+            let mut j = Json::obj();
+            j.set(FLEET_METRIC, 1.0);
+            j
+        };
+        assert_eq!(
+            record_first_baseline_for(&path, FLEET_METRIC, &other).unwrap(),
+            BaselineDisposition::AlreadyMeasured
+        );
+        assert_eq!(load_metric(&path, FLEET_METRIC).unwrap(), Some(5.0));
+    }
+
+    #[test]
+    fn zero_count_baseline_is_measured_and_gates_exactly() {
+        // 0 is a legitimate measurement for a count metric: it must be
+        // recorded ONCE (no baseline churn) and any positive later
+        // measurement is a regression from zero.
+        let dir = tempdir("perf-fleet-zero");
+        let path = dir.join("BENCH_fleet.json");
+        let mut zero = Json::obj();
+        zero.set(FLEET_METRIC, 0.0);
+        assert_eq!(
+            record_first_baseline_for(&path, FLEET_METRIC, &zero).unwrap(),
+            BaselineDisposition::Recorded
+        );
+        // the recorded zero is a real baseline, not a placeholder
+        assert_eq!(load_metric(&path, FLEET_METRIC).unwrap(), Some(0.0));
+        let mut other = Json::obj();
+        other.set(FLEET_METRIC, 3.0);
+        assert_eq!(
+            record_first_baseline_for(&path, FLEET_METRIC, &other).unwrap(),
+            BaselineDisposition::AlreadyMeasured,
+            "a zero baseline must not churn"
+        );
+        assert!(matches!(
+            check_fleet(&path, 0.0, 0.2).unwrap(),
+            PerfVerdict::Pass { .. }
+        ));
+        assert!(
+            check_fleet(&path, 1.0, 0.2).is_err(),
+            "any positive measurement regresses a zero baseline"
+        );
+    }
 
     #[test]
     fn no_baseline_is_record_only() {

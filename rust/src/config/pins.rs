@@ -21,6 +21,15 @@ pub struct Pins {
     /// under a different backend than trained fails closed on this
     /// field alone.
     pub executor_kind: String,
+    /// Fleet topology pin ("" = unsharded): shard index, shard count
+    /// and assignment salt, stamped by the fleet trainer via
+    /// [`crate::shard::ShardSpec::pin_for`].  A shard's WAL replayed
+    /// under a different topology — changed `n_shards`, changed salt, a
+    /// run dir opened as a different shard index, or a sharded run
+    /// reopened unsharded — fails closed on this field alone, because
+    /// the user→shard routing (hence the corpus partition the WAL's
+    /// sample IDs index into) would silently differ.
+    pub shard: String,
     /// SHA-256 of every AOT artifact (HLO text, init params), sorted by
     /// name — the "CUDA/cuDNN version pins" analogue: the executable IS
     /// the kernel algorithm choice here.
@@ -84,6 +93,7 @@ impl Pins {
             &self.executor_kind,
             &current.executor_kind,
         );
+        check("shard", &self.shard, &current.shard);
         check(
             "model_config_hash",
             &self.model_config_hash,
@@ -139,6 +149,7 @@ impl Pins {
         }
         let mut j = Json::obj();
         j.set("executor_kind", self.executor_kind.as_str())
+            .set("shard", self.shard.as_str())
             .set("artifact_hashes", arts)
             .set("model_config_hash", self.model_config_hash.as_str())
             .set("tokenizer_checksum", self.tokenizer_checksum.as_str())
@@ -172,6 +183,13 @@ impl Pins {
             // "" and drift against any current capture — fail-closed
             executor_kind: j
                 .get("executor_kind")
+                .and_then(|v| v.as_str())
+                .unwrap_or_default()
+                .to_string(),
+            // pins saved before the topology pin existed parse as ""
+            // (= unsharded) and drift against any sharded capture
+            shard: j
+                .get("shard")
                 .and_then(|v| v.as_str())
                 .unwrap_or_default()
                 .to_string(),
@@ -209,6 +227,7 @@ mod tests {
     fn pins() -> Pins {
         Pins {
             executor_kind: "reference".into(),
+            shard: String::new(),
             artifact_hashes: vec![
                 ("train_step".into(), "aaa".into()),
                 ("adamw_update".into(), "bbb".into()),
@@ -243,6 +262,10 @@ mod tests {
         variants.push(p);
         let mut p = pins();
         p.reduction = "mean".into();
+        variants.push(p);
+        // fleet topology drift: a sharded capture against unsharded pins
+        let mut p = pins();
+        p.shard = "shard 3/16 salt 00000000000000ab".into();
         variants.push(p);
         let mut p = pins();
         p.accum = 4;

@@ -41,6 +41,11 @@ pub struct RunConfig {
     /// burst (off by default — the operator/cron drives laundering via
     /// the `launder` op otherwise).
     pub auto_launder: bool,
+    /// Fleet topology pin stamped into the run's `Pins` ("" = this run
+    /// is not a fleet shard).  Set by [`crate::fleet`] via
+    /// [`crate::shard::ShardSpec::pin_for`]; every replay of the run
+    /// must present the same pin or fail closed (topology drift).
+    pub shard_pin: String,
 }
 
 impl Default for RunConfig {
@@ -61,6 +66,7 @@ impl Default for RunConfig {
             hmac_key: None,
             wal_segment_records: 4096,
             auto_launder: false,
+            shard_pin: String::new(),
         }
     }
 }
@@ -122,6 +128,9 @@ impl RunConfig {
         if let Some(b) = j.get("auto_launder").and_then(|v| v.as_bool()) {
             c.auto_launder = b;
         }
+        if let Some(s) = j.get("shard_pin").and_then(|v| v.as_str()) {
+            c.shard_pin = s.to_string();
+        }
         Ok(c)
     }
 
@@ -140,7 +149,8 @@ impl RunConfig {
             .set("ring_revert_optimizer", self.ring_revert_optimizer)
             .set("run_seed", self.run_seed)
             .set("wal_segment_records", self.wal_segment_records)
-            .set("auto_launder", self.auto_launder);
+            .set("auto_launder", self.auto_launder)
+            .set("shard_pin", self.shard_pin.as_str());
         j
     }
 }

@@ -38,7 +38,7 @@ use crate::audit::{
     batch_forget_losses, run_audits_with, shared_evals, ModelView,
 };
 use crate::manifest::ActionKind;
-use crate::replay::{offending_steps, replay_filter, ReplayOptions, ReplayOutcome};
+use crate::replay::{offending_steps, replay_filter, ReplayOutcome};
 use crate::util::json::Json;
 
 use super::execute::{
@@ -151,7 +151,7 @@ fn run_shared(
                 &sys.idmap,
                 &sp.filter,
                 Some(&sys.pins),
-                &ReplayOptions::default(),
+                &sys.replay_options(),
             )
         }
         SharedMode::Replay { from_checkpoint } => {

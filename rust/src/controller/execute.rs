@@ -10,7 +10,7 @@ use std::collections::HashSet;
 use crate::audit::{run_audits, AuditReport, ModelView};
 use crate::curvature::hot_path_unlearn;
 use crate::manifest::ActionKind;
-use crate::replay::{replay_filter, ReplayOptions, ReplayOutcome};
+use crate::replay::{replay_filter, ReplayOutcome};
 use crate::util::json::Json;
 
 use super::plan::{PlanStep, UnlearnError, UnlearnPlan};
@@ -96,7 +96,7 @@ pub(super) fn replay_tail(
         &sys.idmap,
         filter,
         Some(&sys.pins),
-        &ReplayOptions::default(),
+        &sys.replay_options(),
     )
 }
 
@@ -196,7 +196,7 @@ impl Executor {
                             &sys.idmap,
                             &effective,
                             Some(&sys.pins),
-                            &ReplayOptions::default(),
+                            &sys.replay_options(),
                         )?;
                         sys.state = outcome.state;
                         details.set(

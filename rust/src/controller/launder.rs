@@ -32,9 +32,7 @@ use std::time::Instant;
 
 use crate::audit::{run_audits, AuditReport, ModelView};
 use crate::manifest::ActionKind;
-use crate::replay::{
-    offending_steps, replay_filter_with_snapshots, ReplayOptions,
-};
+use crate::replay::{offending_steps, replay_filter_with_snapshots};
 use crate::util::json::Json;
 
 use super::plan::{LaunderPolicy, Planner, UnlearnError};
@@ -88,7 +86,7 @@ pub fn execute_launder(
             from_checkpoint: 0,
             target_step: 0,
             laundered_now: 0,
-            laundered_total: sys.laundered.len(),
+            laundered_total: sys.laundered_total(),
             checkpoints_written: 0,
             checkpoints_adopted: 0,
             applied_steps: 0,
@@ -187,7 +185,7 @@ pub fn execute_launder(
         &sys.idmap,
         &filter,
         Some(&sys.pins),
-        &ReplayOptions::default(),
+        &sys.replay_options(),
         &contaminated,
         |snap| {
             stage.save_full(snap)?;
@@ -250,7 +248,8 @@ pub fn execute_launder(
         .collect();
     new_laundered.sort_unstable();
     new_laundered.dedup();
-    stage.commit(&new_laundered, target)?;
+    let retired_before = sys.idmap.retired_len() as u64;
+    stage.commit(&new_laundered, target, retired_before)?;
 
     sys.state = outcome.state;
     // the laundered base is off the logged trajectory: ring patches can
@@ -259,6 +258,32 @@ pub fn execute_launder(
     sys.ring.clear();
     sys.laundered = new_laundered.iter().copied().collect();
     sys.reset_forgotten()?;
+
+    // ---- laundered-set compaction (memory scope) --------------------
+    // Fold the freshly committed closure into the WAL IdMap's retired
+    // set and compact the lineage's laundered.json to an empty residue:
+    // replays mask retired ids automatically, so neither the in-memory
+    // set nor the file keeps growing with service lifetime (the retired
+    // set is bounded by the corpus — an id retires at most once).
+    // Ordering: the commit above already persisted the FULL closure
+    // durably; retire-then-compact can only ever leave double coverage
+    // behind a crash, never a gap.  Best-effort from here: the swap is
+    // committed and a compaction hiccup must not fail the pass.
+    let compacted = (|| -> anyhow::Result<()> {
+        sys.idmap.retire_ids(new_laundered.iter().copied());
+        sys.idmap.save(&sys.cfg.run_dir.join("ids.map"))?;
+        sys.store()
+            .compact_laundered(sys.idmap.retired_len() as u64)?;
+        sys.laundered.clear();
+        Ok(())
+    })();
+    if let Err(e) = &compacted {
+        eprintln!(
+            "laundered-set compaction failed (swap unaffected; the \
+             residue keeps being filtered and the next pass retries): \
+             {e:#}"
+        );
+    }
 
     // The swap restructured the store: re-run open's fail-closed
     // validation on the cached handle (safe here — commit consumed the
@@ -285,7 +310,7 @@ pub fn execute_launder(
         .set("from_checkpoint", from_checkpoint)
         .set("target_step", target)
         .set("laundered_now", forgotten.len())
-        .set("laundered_total", new_laundered.len())
+        .set("laundered_total", sys.laundered_total())
         .set("checkpoints_written", written)
         .set("checkpoints_adopted", clean.len())
         .set("applied_steps", outcome.invariants.applied_steps)
@@ -315,7 +340,7 @@ pub fn execute_launder(
         from_checkpoint,
         target_step: target,
         laundered_now: forgotten.len(),
-        laundered_total: new_laundered.len(),
+        laundered_total: sys.laundered_total(),
         checkpoints_written: written,
         checkpoints_adopted: clean.len(),
         applied_steps: outcome.invariants.applied_steps,
@@ -353,7 +378,7 @@ fn commit_reset_only(
         from_checkpoint: 0,
         target_step: 0,
         laundered_now: forgotten.len(),
-        laundered_total: sys.laundered.len(),
+        laundered_total: sys.laundered_total(),
         checkpoints_written: 0,
         checkpoints_adopted: 0,
         applied_steps: 0,

@@ -243,6 +243,33 @@ impl<'rt> UnlearnSystem<'rt> {
         self.persist_forgotten()
     }
 
+    /// Replay options carrying this run's configured fleet topology pin
+    /// — every state rebuild inside the controller uses these, so a
+    /// fleet shard's replays present the topology they were trained
+    /// under (and fail closed if the run dir's stored pins disagree).
+    pub fn replay_options(&self) -> crate::replay::ReplayOptions {
+        crate::replay::ReplayOptions {
+            shard_pin: self.cfg.shard_pin.clone(),
+            ..crate::replay::ReplayOptions::default()
+        }
+    }
+
+    /// Total closure laundered out of the run's history: the IDs
+    /// compacted into the WAL IdMap's retired set plus the in-memory
+    /// residue NOT yet retired (laundered-set compaction keeps the
+    /// residue empty in steady state).  Counted as a union, not a sum:
+    /// in the crash window between retire and compact the residue is a
+    /// subset of the retired set, and double-counting it would inflate
+    /// the reported accounting.
+    pub fn laundered_total(&self) -> usize {
+        self.idmap.retired_len()
+            + self
+                .laundered
+                .iter()
+                .filter(|&&id| !self.idmap.is_retired(id))
+                .count()
+    }
+
     /// Expand the request to cl(F) (Alg. A.7 line 1).
     pub fn closure_of(&self, req: &ForgetRequest) -> (Vec<u64>, usize) {
         plan::expand_request_closure(

@@ -1,0 +1,768 @@
+//! The sharded unlearning fleet: N independent [`UnlearnSystem`]s, one
+//! per [`crate::shard::ShardSpec`] shard, orchestrated so that
+//! forgetting user `u` touches **only** `shard(u)` (plus any shard
+//! owning a near-duplicate of `u`'s documents) and every other shard's
+//! serving state and store bytes are provably untouched — the
+//! SISA-style `1/N` cost scaling on top of the source paper's per-shard
+//! bit-identity guarantee.
+//!
+//! ## Isolation invariants
+//!
+//! - Every shard owns a full run directory (WAL, IdMap, pins,
+//!   checkpoint CAS, delta ring, signed manifest, forgotten/laundered
+//!   sets) under `<root>/shard-NNNN/`.  No file is shared between
+//!   shards; the shared CAS dedup happens *within* a shard's store.
+//! - The user→shard assignment is a pure function pinned into every
+//!   shard's `Pins.shard` — reopening the fleet under a different
+//!   `n_shards`/salt fails closed before any replay runs (and
+//!   `fleet.json` at the root refuses the reopen even earlier).
+//! - Routing expands the forget closure on the **global** near-dup
+//!   index first, then scatters members to their owning shards via the
+//!   closure's ownership attribution ([`crate::neardup::ClosureResult::
+//!   by_owner`]) — a paraphrase of `u`'s document owned by user `v`
+//!   is erased from `shard(v)`, not silently dropped.
+//! - A shard that receives no part of a request's closure executes
+//!   nothing: not planned, not audited, not written to.  The
+//!   `tests/fleet_equality.rs` proof checks its run-dir bytes.
+//!
+//! ## Cost model
+//!
+//! Multi-shard work runs on scoped threads (one per touched shard), so
+//! fleet latency is the **max** over touched shards while total work is
+//! the sum — [`FleetPlan`] reports both, rolled up from the per-shard
+//! typed [`UnlearnPlan`]s.  Within a shard, requests coalesce through
+//! the existing [`crate::controller::execute_batch`] (one
+//! union-filtered rebuild per shard per burst).  Each shard launders
+//! independently under its own [`LaunderPolicy`].
+
+pub mod server;
+
+use std::collections::HashMap;
+use std::path::PathBuf;
+
+use crate::audit::{per_example_loss_counts, ModelView};
+use crate::config::RunConfig;
+use crate::controller::{
+    execute_batch, ControllerOutcome, ForgetRequest, LaunderOutcome,
+    LaunderPolicy, UnlearnPlan, UnlearnSystem,
+};
+use crate::data::corpus::Corpus;
+use crate::harness;
+use crate::neardup::closure::build_index;
+use crate::neardup::{expand_closure, ClosureParams, HammingIndex};
+use crate::runtime::Runtime;
+use crate::shard::{split_corpus, ShardSpec, ShardSplit};
+use crate::util::json::Json;
+use crate::util::rng::philox_u64;
+
+/// Fleet construction parameters.
+#[derive(Debug, Clone)]
+pub struct FleetConfig {
+    /// Fleet root: `fleet.json` (the pinned topology) plus one
+    /// `shard-NNNN/` run directory per shard live here.
+    pub root: PathBuf,
+    pub spec: ShardSpec,
+    /// Per-shard run-config template (`run_dir` is ignored — each shard
+    /// derives its own under `root`; `shard_pin` is overwritten with
+    /// the shard's topology pin).
+    pub base: RunConfig,
+    /// Scale each shard's step budget by its corpus share (constant
+    /// epochs over a `1/N` slice ⇒ `~steps/N` per shard — the SISA cost
+    /// model).  Off = every shard trains the full `base.steps`.
+    pub scale_steps: bool,
+    /// Laundering trigger, instantiated per shard (each shard's
+    /// forgotten-set inflation is tracked — and compacted —
+    /// independently).
+    pub launder_policy: LaunderPolicy,
+    /// Run a per-shard laundering pass from the drain loop whenever a
+    /// burst flips that shard's own `launder_recommended`.
+    pub auto_launder: bool,
+}
+
+/// One live shard: its system plus its private laundering policy.
+pub struct ShardState<'rt> {
+    pub system: UnlearnSystem<'rt>,
+    pub policy: LaunderPolicy,
+}
+
+/// The orchestrator over N shard systems.
+pub struct Fleet<'rt> {
+    pub spec: ShardSpec,
+    pub root: PathBuf,
+    /// Global corpus (the ingest view routing expands closures over).
+    corpus: Corpus,
+    /// Global near-dup index — closures must reach across shards.
+    ndindex: HammingIndex,
+    closure_params: ClosureParams,
+    split: ShardSplit,
+    /// `None` = the shard's user set was empty at ingest (nothing to
+    /// train, nothing routable to it).
+    shards: Vec<Option<ShardState<'rt>>>,
+    pub auto_launder: bool,
+}
+
+/// One shard's share of a fleet request's outcome.
+pub struct ShardOutcome {
+    pub shard: u32,
+    pub outcome: anyhow::Result<ControllerOutcome>,
+}
+
+/// Per-request fleet outcome: which shards executed and what each did.
+pub struct FleetOutcome {
+    pub request_id: String,
+    pub shards: Vec<ShardOutcome>,
+}
+
+impl FleetOutcome {
+    /// True when every routed shard committed an executed action.
+    pub fn executed(&self) -> bool {
+        !self.shards.is_empty()
+            && self.shards.iter().all(|s| {
+                s.outcome.as_ref().map(|o| o.executed).unwrap_or(false)
+            })
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut arr = Vec::new();
+        for s in &self.shards {
+            let mut j = Json::obj();
+            j.set("shard", s.shard);
+            match &s.outcome {
+                Ok(o) => {
+                    j.set("ok", true)
+                        .set("action", o.action.as_str())
+                        .set("executed", o.executed)
+                        .set("closure_size", o.closure_size);
+                }
+                Err(e) => {
+                    j.set("ok", false).set("error", format!("{e:#}"));
+                }
+            }
+            arr.push(j);
+        }
+        let mut out = Json::obj();
+        out.set("request_id", self.request_id.as_str())
+            .set("executed", self.executed())
+            .set("shards", Json::Arr(arr));
+        out
+    }
+}
+
+/// What one fleet batch did across all shards.
+pub struct FleetBatchOutcome {
+    /// Per input request, in submission order.
+    pub outcomes: Vec<FleetOutcome>,
+    /// Shards that received any work.
+    pub shards_touched: usize,
+    /// Shared rebuilds executed (≤ 1 per touched shard — intra-shard
+    /// coalescing via `execute_batch`).
+    pub replays_run: usize,
+    /// Replay/revert-resume microbatch updates applied fleet-wide: the
+    /// bench's replay-work-per-request numerator.
+    pub applied_steps_total: u64,
+}
+
+/// Fleet-level rollup of per-shard typed plans: total work (bytes,
+/// replay steps) plus the parallel-latency bound (max over shards).
+pub struct FleetPlan {
+    pub request_id: String,
+    pub shard_plans: Vec<(u32, UnlearnPlan)>,
+    pub total_replay_steps: u64,
+    pub total_bytes: u64,
+    /// Shards execute concurrently: predicted fleet latency is the max
+    /// of the per-shard terminal-step estimates.
+    pub max_est_wall_secs: f64,
+    pub sum_est_wall_secs: f64,
+}
+
+impl FleetPlan {
+    pub fn to_json(&self) -> Json {
+        let mut arr = Vec::new();
+        for (shard, p) in &self.shard_plans {
+            let mut j = Json::obj();
+            j.set("shard", *shard).set("plan", p.to_json());
+            arr.push(j);
+        }
+        let mut out = Json::obj();
+        out.set("request_id", self.request_id.as_str())
+            .set("shards", Json::Arr(arr))
+            .set("total_replay_steps", self.total_replay_steps)
+            .set("total_bytes", self.total_bytes)
+            .set("max_est_wall_secs", self.max_est_wall_secs)
+            .set("sum_est_wall_secs", self.sum_est_wall_secs);
+        out
+    }
+}
+
+/// Uniform-ensemble fleet utility: each shard model evaluated on its
+/// own held-out split, shard perplexities averaged with equal weight
+/// (the ensemble the fleet would serve with).
+pub struct FleetUtility {
+    pub fleet_ppl: f64,
+    pub per_shard: Vec<(u32, f64)>,
+}
+
+impl<'rt> Fleet<'rt> {
+    /// Train a fresh fleet: split the corpus by ownership, train every
+    /// non-empty shard (in parallel on scoped threads) and assemble the
+    /// per-shard systems.  Existing shard run dirs are wiped.
+    pub fn train(
+        rt: &'rt Runtime,
+        cfg: FleetConfig,
+        corpus: Corpus,
+    ) -> anyhow::Result<Fleet<'rt>> {
+        Self::build(rt, cfg, corpus, false).map(|(f, _)| f)
+    }
+
+    /// Reopen an existing fleet root (resuming every shard's run dir —
+    /// WAL, lineages, manifests and forgotten sets all survive) or
+    /// train from scratch when none exists.  A shard whose run dir was
+    /// lost is retrained alone — the others are untouched.  Returns
+    /// whether any shard resumed.
+    pub fn open_or_train(
+        rt: &'rt Runtime,
+        cfg: FleetConfig,
+        corpus: Corpus,
+    ) -> anyhow::Result<(Fleet<'rt>, bool)> {
+        Self::build(rt, cfg, corpus, true)
+    }
+
+    fn build(
+        rt: &'rt Runtime,
+        cfg: FleetConfig,
+        corpus: Corpus,
+        resume: bool,
+    ) -> anyhow::Result<(Fleet<'rt>, bool)> {
+        anyhow::ensure!(cfg.spec.n_shards > 0, "fleet needs n_shards > 0");
+        std::fs::create_dir_all(&cfg.root)?;
+        let spec_path = cfg.root.join("fleet.json");
+        if spec_path.exists() {
+            let stored = ShardSpec::load(&spec_path)?;
+            anyhow::ensure!(
+                stored == cfg.spec,
+                "fleet topology drift at {}: stored n_shards={} \
+                 salt={:#x} vs requested n_shards={} salt={:#x} — the \
+                 user→shard assignment is pinned; refusing (fail-closed)",
+                spec_path.display(),
+                stored.n_shards,
+                stored.salt,
+                cfg.spec.n_shards,
+                cfg.spec.salt
+            );
+        } else {
+            cfg.spec.save(&spec_path)?;
+        }
+
+        let mut split = split_corpus(&cfg.spec, &corpus);
+        // Move the shard sub-corpora out of the split: each shard
+        // system owns its copy and the fleet keeps the global corpus —
+        // retaining a third set in `split.corpora` would hold the whole
+        // corpus in memory once more for nothing (only the id maps are
+        // consulted after build).
+        let corpora = std::mem::take(&mut split.corpora);
+        let ndindex = build_index(&corpus);
+        let total_len = corpus.len();
+        let n = cfg.spec.n_shards as usize;
+
+        // Train/open every non-empty shard concurrently: shards are
+        // fully independent (disjoint run dirs, shared read-only
+        // runtime), so fleet build time is max-over-shards.
+        let mut results: Vec<
+            Option<anyhow::Result<(harness::TrainedSystem<'rt>, bool)>>,
+        > = (0..n).map(|_| None).collect();
+        std::thread::scope(|s| {
+            let mut handles = Vec::new();
+            for ((i, res), shard_corpus) in
+                results.iter_mut().enumerate().zip(corpora)
+            {
+                if shard_corpus.is_empty() {
+                    continue;
+                }
+                let scfg =
+                    shard_run_config(&cfg, i as u32, shard_corpus.len(), total_len);
+                handles.push((res, s.spawn(move || {
+                    if resume {
+                        harness::open_or_build_system(
+                            rt,
+                            scfg,
+                            shard_corpus,
+                            false,
+                        )
+                    } else {
+                        harness::build_system(rt, scfg, shard_corpus, false)
+                            .map(|t| (t, false))
+                    }
+                })));
+            }
+            for (res, h) in handles {
+                *res = Some(h.join().unwrap_or_else(|_| {
+                    Err(anyhow::anyhow!("shard build thread panicked"))
+                }));
+            }
+        });
+
+        let mut shards: Vec<Option<ShardState<'rt>>> = Vec::with_capacity(n);
+        let mut resumed_any = false;
+        for (i, res) in results.into_iter().enumerate() {
+            match res {
+                None => shards.push(None),
+                Some(Err(e)) => {
+                    return Err(e.context(format!("shard {i} failed to build")))
+                }
+                Some(Ok((trained, resumed))) => {
+                    let system = trained.system;
+                    // topology pin sanity: the run dir must have been
+                    // trained as THIS shard of THIS topology
+                    let expect = cfg.spec.pin_for(i as u32);
+                    anyhow::ensure!(
+                        system.pins.shard == expect,
+                        "shard {i} pins carry topology {:?}, fleet \
+                         expects {:?} — refusing (fail-closed)",
+                        system.pins.shard,
+                        expect
+                    );
+                    resumed_any |= resumed;
+                    shards.push(Some(ShardState {
+                        system,
+                        policy: cfg.launder_policy.clone(),
+                    }));
+                }
+            }
+        }
+        Ok((
+            Fleet {
+                spec: cfg.spec,
+                root: cfg.root,
+                corpus,
+                ndindex,
+                closure_params: ClosureParams::default(),
+                split,
+                shards,
+                auto_launder: cfg.auto_launder,
+            },
+            resumed_any,
+        ))
+    }
+
+    pub fn n_shards(&self) -> u32 {
+        self.spec.n_shards
+    }
+
+    /// The global ingest corpus the router expands closures over.
+    pub fn corpus(&self) -> &Corpus {
+        &self.corpus
+    }
+
+    /// The global↔local id mapping of the ownership partition.  NOTE:
+    /// `split.corpora` is empty here — the sub-corpora were moved into
+    /// their shard systems at build (see [`Fleet::build`]); use
+    /// [`Fleet::shard`]`.corpus` for a shard's corpus.
+    pub fn split(&self) -> &ShardSplit {
+        &self.split
+    }
+
+    pub fn shard(&self, shard: u32) -> Option<&UnlearnSystem<'rt>> {
+        self.shards
+            .get(shard as usize)
+            .and_then(|s| s.as_ref())
+            .map(|s| &s.system)
+    }
+
+    pub fn shard_mut(&mut self, shard: u32) -> Option<&mut UnlearnSystem<'rt>> {
+        self.shards
+            .get_mut(shard as usize)
+            .and_then(|s| s.as_mut())
+            .map(|s| &mut s.system)
+    }
+
+    /// Route a fleet request to its owning shards: expand the closure on
+    /// the GLOBAL near-dup index (user samples + explicit global sample
+    /// ids), then scatter members by document ownership.  Each returned
+    /// request carries shard-local sample IDs; a request whose closure
+    /// is empty routes nowhere.
+    pub fn route(
+        &self,
+        req: &ForgetRequest,
+    ) -> anyhow::Result<Vec<(u32, ForgetRequest)>> {
+        let mut ids: Vec<u64> = req.sample_ids.clone();
+        if let Some(u) = req.user {
+            ids.extend(self.corpus.user_samples(u));
+        }
+        ids.sort_unstable();
+        ids.dedup();
+        let cl = expand_closure(
+            &self.corpus,
+            &self.ndindex,
+            &ids,
+            self.closure_params,
+        );
+        // scatter by ownership (the closure carries it — no re-derive)
+        let mut per_shard: HashMap<u32, Vec<u64>> = HashMap::new();
+        for (user, member_ids) in cl.by_owner() {
+            let shard = self.spec.assign(user);
+            let bucket = per_shard.entry(shard).or_default();
+            for gid in member_ids {
+                let (s, local) = self.split.local_of(gid).ok_or_else(|| {
+                    anyhow::anyhow!("closure member {gid} has no shard")
+                })?;
+                debug_assert_eq!(s, shard);
+                bucket.push(local);
+            }
+        }
+        let mut parts: Vec<(u32, ForgetRequest)> = per_shard
+            .into_iter()
+            .map(|(shard, mut locals)| {
+                locals.sort_unstable();
+                locals.dedup();
+                (
+                    shard,
+                    ForgetRequest {
+                        id: req.id.clone(),
+                        user: None,
+                        sample_ids: locals,
+                        urgency: req.urgency,
+                    },
+                )
+            })
+            .collect();
+        parts.sort_by_key(|&(s, _)| s);
+        for (shard, _) in &parts {
+            anyhow::ensure!(
+                self.shard(*shard).is_some(),
+                "request routes to shard {shard}, which holds no system"
+            );
+        }
+        Ok(parts)
+    }
+
+    /// Route restricted to ONE shard (the admin plane's shard-addressed
+    /// submit): closure members owned by other shards are dropped — an
+    /// explicit operator override of the cross-shard scatter.
+    pub fn route_to_shard(
+        &self,
+        req: &ForgetRequest,
+        shard: u32,
+    ) -> anyhow::Result<Vec<(u32, ForgetRequest)>> {
+        anyhow::ensure!(
+            shard < self.spec.n_shards,
+            "shard {shard} out of range (fleet has {})",
+            self.spec.n_shards
+        );
+        Ok(self
+            .route(req)?
+            .into_iter()
+            .filter(|&(s, _)| s == shard)
+            .collect())
+    }
+
+    /// Fleet-level dry-run: per-shard typed plans rolled into one cost
+    /// object (total replay steps / bytes, max-latency under parallel
+    /// shard execution).  Pure — nothing is mutated.
+    pub fn plan(&self, req: &ForgetRequest) -> anyhow::Result<FleetPlan> {
+        let parts = self.route(req)?;
+        let mut shard_plans = Vec::new();
+        let mut total_replay_steps = 0u64;
+        let mut total_bytes = 0u64;
+        let mut max_wall = 0.0f64;
+        let mut sum_wall = 0.0f64;
+        for (shard, sreq) in parts {
+            let sys = self
+                .shard(shard)
+                .ok_or_else(|| anyhow::anyhow!("shard {shard} empty"))?;
+            let plan = sys
+                .plan(&sreq)
+                .map_err(|e| anyhow::anyhow!("shard {shard}: {e}"))?;
+            if let Some(terminal) = plan.steps.last() {
+                total_replay_steps += terminal.cost.replay_steps as u64;
+                total_bytes += terminal.cost.bytes_touched;
+                max_wall = max_wall.max(terminal.cost.est_wall_secs);
+                sum_wall += terminal.cost.est_wall_secs;
+            }
+            shard_plans.push((shard, plan));
+        }
+        Ok(FleetPlan {
+            request_id: req.id.clone(),
+            shard_plans,
+            total_replay_steps,
+            total_bytes,
+            max_est_wall_secs: max_wall,
+            sum_est_wall_secs: sum_wall,
+        })
+    }
+
+    /// Handle one fleet forget request end to end.
+    pub fn forget(
+        &mut self,
+        req: &ForgetRequest,
+    ) -> anyhow::Result<FleetBatchOutcome> {
+        self.execute_batch(std::slice::from_ref(req))
+    }
+
+    /// Execute a batch of fleet requests: route everything, then run
+    /// every touched shard's share concurrently — each shard receives
+    /// its requests as ONE [`execute_batch`] call (intra-shard
+    /// coalescing), shards proceed in parallel (inter-shard scaling).
+    pub fn execute_batch(
+        &mut self,
+        reqs: &[ForgetRequest],
+    ) -> anyhow::Result<FleetBatchOutcome> {
+        let routed: Vec<Vec<(u32, ForgetRequest)>> = reqs
+            .iter()
+            .map(|r| self.route(r))
+            .collect::<anyhow::Result<_>>()?;
+        self.execute_routed(reqs, routed)
+    }
+
+    /// The execution half of [`Fleet::execute_batch`] over caller-built
+    /// routing (the admin plane injects shard-addressed overrides).
+    pub fn execute_routed(
+        &mut self,
+        reqs: &[ForgetRequest],
+        routed: Vec<Vec<(u32, ForgetRequest)>>,
+    ) -> anyhow::Result<FleetBatchOutcome> {
+        anyhow::ensure!(routed.len() == reqs.len(), "routing shape mismatch");
+        let n = self.shards.len();
+        // group per shard, remembering which input each part belongs to
+        let mut per_shard: Vec<Vec<(usize, ForgetRequest)>> =
+            vec![Vec::new(); n];
+        for (input, parts) in routed.iter().enumerate() {
+            for (shard, sreq) in parts {
+                per_shard[*shard as usize].push((input, sreq.clone()));
+            }
+        }
+
+        // one scoped thread per touched shard; disjoint &mut borrows
+        // via iter_mut, so no locking is needed
+        let mut shard_results: Vec<
+            Option<anyhow::Result<crate::controller::BatchOutcome>>,
+        > = (0..n).map(|_| None).collect();
+        std::thread::scope(|s| {
+            let mut handles = Vec::new();
+            for ((slot, work), res) in self
+                .shards
+                .iter_mut()
+                .zip(&per_shard)
+                .zip(shard_results.iter_mut())
+            {
+                if work.is_empty() {
+                    continue;
+                }
+                let Some(st) = slot.as_mut() else { continue };
+                let sreqs: Vec<ForgetRequest> =
+                    work.iter().map(|(_, r)| r.clone()).collect();
+                handles.push((res, s.spawn(move || {
+                    execute_batch(&mut st.system, &sreqs)
+                })));
+            }
+            for (res, h) in handles {
+                *res = Some(h.join().unwrap_or_else(|_| {
+                    Err(anyhow::anyhow!("shard batch thread panicked"))
+                }));
+            }
+        });
+
+        // fan per-shard slot results back to the input requests
+        let mut outcomes: Vec<FleetOutcome> = reqs
+            .iter()
+            .map(|r| FleetOutcome {
+                request_id: r.id.clone(),
+                shards: Vec::new(),
+            })
+            .collect();
+        let mut shards_touched = 0usize;
+        let mut replays_run = 0usize;
+        let mut applied_steps_total = 0u64;
+        for (shard, res) in shard_results.into_iter().enumerate() {
+            let Some(res) = res else { continue };
+            shards_touched += 1;
+            match res {
+                Err(e) => {
+                    let msg = format!("{e:#}");
+                    for (input, _) in &per_shard[shard] {
+                        outcomes[*input].shards.push(ShardOutcome {
+                            shard: shard as u32,
+                            outcome: Err(anyhow::anyhow!(
+                                "shard {shard} batch failed: {msg}"
+                            )),
+                        });
+                    }
+                }
+                Ok(batch) => {
+                    replays_run += batch.replays_run;
+                    applied_steps_total += batch.applied_steps as u64;
+                    for ((input, _), out) in
+                        per_shard[shard].iter().zip(batch.outcomes)
+                    {
+                        outcomes[*input].shards.push(ShardOutcome {
+                            shard: shard as u32,
+                            outcome: out,
+                        });
+                    }
+                }
+            }
+        }
+        Ok(FleetBatchOutcome {
+            outcomes,
+            shards_touched,
+            replays_run,
+            applied_steps_total,
+        })
+    }
+
+    /// Run a laundering pass on every shard whose OWN policy says it is
+    /// due, concurrently.  The per-shard manifest key is
+    /// `<id_prefix>-s<shard>-g<generation>`: the active lineage
+    /// generation makes a RETRY of the same invocation idempotent
+    /// (same generation → duplicate-suppressed) while a later pass —
+    /// after a committed launder bumped the generation — always gets a
+    /// fresh key, even when the caller reuses its prefix (default
+    /// admin-op ids, restarted in-memory job counters).  Returns the
+    /// outcomes of the shards that ran.
+    pub fn launder_due(
+        &mut self,
+        id_prefix: &str,
+    ) -> Vec<(u32, anyhow::Result<LaunderOutcome>)> {
+        let mut results: Vec<Option<anyhow::Result<LaunderOutcome>>> =
+            (0..self.shards.len()).map(|_| None).collect();
+        std::thread::scope(|s| {
+            let mut handles = Vec::new();
+            for ((i, slot), res) in self
+                .shards
+                .iter_mut()
+                .enumerate()
+                .zip(results.iter_mut())
+            {
+                let Some(st) = slot.as_mut() else { continue };
+                // each shard consults ITS policy — due shards launder,
+                // quiet shards are skipped without taking any lock
+                let due = matches!(
+                    st.system.plan_launder(&st.policy),
+                    Ok(Some(_))
+                );
+                if !due {
+                    continue;
+                }
+                let gen =
+                    st.system.store().active_generation().unwrap_or(0);
+                let key = format!("{id_prefix}-s{i}-g{gen}");
+                handles.push((res, s.spawn(move || {
+                    st.system.launder(&key, &st.policy, false)
+                })));
+            }
+            for (res, h) in handles {
+                *res = Some(h.join().unwrap_or_else(|_| {
+                    Err(anyhow::anyhow!("shard launder thread panicked"))
+                }));
+            }
+        });
+        results
+            .into_iter()
+            .enumerate()
+            .filter_map(|(i, r)| r.map(|r| (i as u32, r)))
+            .collect()
+    }
+
+    /// Uniform-ensemble utility: each shard model's held-out perplexity,
+    /// averaged with equal weight across non-empty shards.
+    pub fn utility_ensemble(&self) -> anyhow::Result<FleetUtility> {
+        let mut per_shard = Vec::new();
+        for (i, slot) in self.shards.iter().enumerate() {
+            let Some(st) = slot else { continue };
+            let sys = &st.system;
+            if sys.eval_ids.is_empty() {
+                continue;
+            }
+            let lc = per_example_loss_counts(
+                sys.rt,
+                ModelView::Base(&sys.state.params),
+                &sys.corpus,
+                &sys.eval_ids,
+            )?;
+            let (mut loss, mut count) = (0.0f64, 0.0f64);
+            for (l, c) in lc {
+                loss += l as f64;
+                count += c as f64;
+            }
+            per_shard.push((i as u32, (loss / count.max(1.0)).exp()));
+        }
+        anyhow::ensure!(!per_shard.is_empty(), "fleet has no evaluable shard");
+        let fleet_ppl = per_shard.iter().map(|&(_, p)| p).sum::<f64>()
+            / per_shard.len() as f64;
+        Ok(FleetUtility {
+            fleet_ppl,
+            per_shard,
+        })
+    }
+
+    /// Fleet status: topology + one row per shard (hashes, step
+    /// counters, forgotten/laundered accounting, launder
+    /// recommendation, lineage generation).
+    pub fn status_json(&self) -> Json {
+        let mut rows = Vec::new();
+        for (i, slot) in self.shards.iter().enumerate() {
+            let mut j = Json::obj();
+            j.set("shard", i as u64);
+            match slot {
+                None => {
+                    j.set("empty", true);
+                }
+                Some(st) => {
+                    let sys = &st.system;
+                    let mut users: Vec<u32> =
+                        sys.corpus.samples.iter().map(|s| s.user).collect();
+                    users.sort_unstable();
+                    users.dedup();
+                    j.set("samples", sys.corpus.len())
+                        .set("users", users.len())
+                        .set("model_hash", sys.state.model_hash())
+                        .set("optimizer_hash", sys.state.optimizer_hash())
+                        .set("logical_step", sys.state.logical_step)
+                        .set("forgotten_pending", sys.forgotten.len())
+                        .set("laundered_ids", sys.laundered_total())
+                        .set(
+                            "launder_recommended",
+                            matches!(
+                                sys.plan_launder(&st.policy),
+                                Ok(Some(_))
+                            ),
+                        )
+                        .set(
+                            "generation",
+                            sys.store().active_generation().unwrap_or(0),
+                        );
+                }
+            }
+            rows.push(j);
+        }
+        let mut out = Json::obj();
+        out.set("n_shards", self.spec.n_shards)
+            .set("salt_hex", format!("{:016x}", self.spec.salt))
+            .set("total_samples", self.corpus.len())
+            .set("shards", Json::Arr(rows));
+        out
+    }
+}
+
+/// Derive shard `shard`'s run config from the fleet template: its own
+/// run dir, its topology pin, a decorrelated dataloader seed, and
+/// (optionally) a step budget scaled to its corpus share.
+fn shard_run_config(
+    cfg: &FleetConfig,
+    shard: u32,
+    shard_len: usize,
+    total_len: usize,
+) -> RunConfig {
+    let mut c = cfg.base.clone();
+    c.run_dir = cfg.root.join(format!("shard-{shard:04}"));
+    c.shard_pin = cfg.spec.pin_for(shard);
+    c.auto_launder = false; // the fleet drain loop owns auto-laundering
+    // decorrelate shard dataloader orders (pure function of the base
+    // seed + shard index — reopening re-derives the same seed)
+    c.run_seed = philox_u64(cfg.base.run_seed, 0xF1EE7 ^ shard as u64);
+    if cfg.scale_steps && total_len > 0 {
+        let share = shard_len as f64 / total_len as f64;
+        c.steps = ((cfg.base.steps as f64 * share).ceil() as u32).max(2);
+        c.warmup = c.warmup.min(c.steps / 2).max(1);
+    }
+    c
+}

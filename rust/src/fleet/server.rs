@@ -1,0 +1,476 @@
+//! Fleet admin plane: the multi-shard analogue of [`crate::server`] —
+//! line-delimited JSON over TCP, an async job queue with a coalescing
+//! window, and per-shard laundering triggered from the drain loop.
+//!
+//! ## Protocol (one JSON object per line)
+//!
+//!   {"op":"fleet_status"}                         → topology + one row per shard
+//!   {"op":"submit","id":"req-1","user":3}         → job id (routed to owning shards)
+//!   {"op":"submit","id":"req-2","user":3,"shard":1} → shard-addressed override
+//!   {"op":"poll","job":"job-1"}
+//!   {"op":"jobs"}
+//!   {"op":"plan","id":"req-3","user":4}           → fleet-plan dry run (max/total cost)
+//!   {"op":"launder"}                              → launder every shard whose own
+//!                                                   policy says it is due
+//!   {"op":"utility"}                              → uniform-ensemble fleet ppl
+//!   {"op":"shutdown"}
+//!
+//! A shard-addressed submit bypasses cross-shard scattering (closure
+//! members owned by other shards are dropped) — an explicit operator
+//! override; the default routed submit erases the full closure.
+//!
+//! The queue is in-memory (a fleet restart re-submits from the caller;
+//! per-shard durability — WAL, manifests, forgotten sets — lives in the
+//! shard run dirs themselves).
+
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::Duration;
+
+use crate::controller::ForgetRequest;
+use crate::server::JobStatus;
+use crate::util::json::{parse, Json};
+
+use super::Fleet;
+
+struct FleetJob {
+    job_id: String,
+    req: ForgetRequest,
+    /// Shard-addressed override (None = route by ownership).
+    shard: Option<u32>,
+    status: JobStatus,
+    result: Option<Json>,
+}
+
+/// Shared fleet-server state: protocol core + worker run against this.
+pub struct FleetCtx<'a, 'rt> {
+    pub fleet: &'a Mutex<Fleet<'rt>>,
+    jobs: Mutex<Vec<FleetJob>>,
+    cv: Condvar,
+    seq: AtomicU64,
+    pub shutdown: AtomicBool,
+    pub coalesce_window: Duration,
+}
+
+fn recover<T>(r: Result<T, std::sync::PoisonError<T>>) -> T {
+    r.unwrap_or_else(|p| p.into_inner())
+}
+
+impl<'a, 'rt> FleetCtx<'a, 'rt> {
+    pub fn new(fleet: &'a Mutex<Fleet<'rt>>) -> FleetCtx<'a, 'rt> {
+        FleetCtx {
+            fleet,
+            jobs: Mutex::new(Vec::new()),
+            cv: Condvar::new(),
+            seq: AtomicU64::new(1),
+            shutdown: AtomicBool::new(false),
+            coalesce_window: Duration::from_millis(15),
+        }
+    }
+
+    fn submit(&self, req: ForgetRequest, shard: Option<u32>) -> String {
+        let job_id = format!("job-{}", self.seq.fetch_add(1, Ordering::SeqCst));
+        recover(self.jobs.lock()).push(FleetJob {
+            job_id: job_id.clone(),
+            req,
+            shard,
+            status: JobStatus::Queued,
+            result: None,
+        });
+        self.cv.notify_all();
+        job_id
+    }
+
+    pub fn queued_len(&self) -> usize {
+        recover(self.jobs.lock())
+            .iter()
+            .filter(|j| j.status == JobStatus::Queued)
+            .count()
+    }
+
+    /// Jobs not yet completed (queued + running) — the backlog number,
+    /// mirroring the single-system `JobQueue::pending_len`.
+    pub fn pending_len(&self) -> usize {
+        recover(self.jobs.lock())
+            .iter()
+            .filter(|j| {
+                matches!(j.status, JobStatus::Queued | JobStatus::Running)
+            })
+            .count()
+    }
+
+    fn poll(&self, job_id: &str) -> Option<Json> {
+        recover(self.jobs.lock())
+            .iter()
+            .find(|j| j.job_id == job_id)
+            .map(job_json)
+    }
+
+    fn publish(&self, job_id: &str, status: JobStatus, result: Json) {
+        let mut g = recover(self.jobs.lock());
+        if let Some(j) = g.iter_mut().find(|j| j.job_id == job_id) {
+            j.status = status;
+            j.result = Some(result);
+        }
+    }
+
+    fn take_queued(&self) -> Vec<(String, ForgetRequest, Option<u32>)> {
+        let mut g = recover(self.jobs.lock());
+        let mut out = Vec::new();
+        for j in g.iter_mut() {
+            if j.status == JobStatus::Queued {
+                j.status = JobStatus::Running;
+                out.push((j.job_id.clone(), j.req.clone(), j.shard));
+            }
+        }
+        out
+    }
+
+    fn wait_for_work(&self) -> bool {
+        let mut g = recover(self.jobs.lock());
+        loop {
+            if g.iter().any(|j| j.status == JobStatus::Queued) {
+                return true;
+            }
+            if self.shutdown.load(Ordering::SeqCst) {
+                return false;
+            }
+            let (g2, _) =
+                recover(self.cv.wait_timeout(g, Duration::from_millis(50)));
+            g = g2;
+        }
+    }
+}
+
+fn job_json(j: &FleetJob) -> Json {
+    let mut o = Json::obj();
+    o.set("job", j.job_id.as_str())
+        .set("request_id", j.req.id.as_str())
+        .set(
+            "shard",
+            j.shard.map(Json::from).unwrap_or(Json::Null),
+        )
+        .set("status", j.status.as_str())
+        .set("result", j.result.clone().unwrap_or(Json::Null));
+    o
+}
+
+/// Drain every queued job as ONE fleet batch: routed jobs scatter by
+/// ownership, shard-addressed jobs go only to their shard; every
+/// touched shard receives its share as one coalesced `execute_batch`
+/// call and shards run concurrently.  After the burst, shards whose own
+/// `LaunderPolicy` flipped `launder_recommended` are laundered
+/// (fleet-level auto-laundering, keyed off the burst's first job id).
+/// Returns the number of jobs processed.
+pub fn drain_fleet_once(ctx: &FleetCtx<'_, '_>) -> usize {
+    let batch = ctx.take_queued();
+    if batch.is_empty() {
+        return 0;
+    }
+    match ctx.fleet.lock() {
+        Err(_) => {
+            for (job_id, _, _) in &batch {
+                let mut r = Json::obj();
+                r.set("ok", false).set("error", "fleet lock poisoned");
+                ctx.publish(job_id, JobStatus::Failed, r);
+            }
+        }
+        Ok(mut fleet) => {
+            let reqs: Vec<ForgetRequest> =
+                batch.iter().map(|(_, r, _)| r.clone()).collect();
+            let routed: Result<Vec<_>, _> = batch
+                .iter()
+                .map(|(_, r, shard)| match shard {
+                    Some(s) => fleet.route_to_shard(r, *s),
+                    None => fleet.route(r),
+                })
+                .collect();
+            let outcome = routed
+                .and_then(|routed| fleet.execute_routed(&reqs, routed));
+            match outcome {
+                Err(e) => {
+                    for (job_id, _, _) in &batch {
+                        let mut r = Json::obj();
+                        r.set("ok", false).set("error", format!("{e:#}"));
+                        ctx.publish(job_id, JobStatus::Failed, r);
+                    }
+                }
+                Ok(out) => {
+                    for ((job_id, _, _), fo) in
+                        batch.iter().zip(out.outcomes.into_iter())
+                    {
+                        // ok = no shard errored.  A duplicate-suppressed
+                        // retry (every shard Ok with executed:false) is
+                        // a SUCCESS — the erasure is committed — exactly
+                        // like the single-system server's outcome_json;
+                        // the per-shard/overall `executed` fields carry
+                        // the suppression detail.
+                        let ok =
+                            fo.shards.iter().all(|s| s.outcome.is_ok());
+                        let mut r = fo.to_json();
+                        r.set("ok", ok);
+                        if fo.shards.is_empty() {
+                            r.set(
+                                "note",
+                                "empty closure — no owning shard",
+                            );
+                        }
+                        let status = if fo
+                            .shards
+                            .iter()
+                            .any(|s| s.outcome.is_err())
+                        {
+                            JobStatus::Failed
+                        } else {
+                            JobStatus::Done
+                        };
+                        ctx.publish(job_id, status, r);
+                    }
+                    // per-shard auto-laundering: each shard's OWN policy
+                    // decides.  launder_due appends the shard's lineage
+                    // generation to the key, so the burst-derived prefix
+                    // is retry-idempotent yet never aliases across a
+                    // restart of this in-memory job counter (a committed
+                    // pass bumps the generation; an uncommitted one left
+                    // no manifest key to collide with).
+                    if fleet.auto_launder {
+                        let prefix =
+                            format!("auto-launder-{}", batch[0].0);
+                        for (shard, res) in fleet.launder_due(&prefix) {
+                            match res {
+                                Ok(o) if o.executed => eprintln!(
+                                    "fleet auto-launder: shard {shard} \
+                                     gen {} ({} ids)",
+                                    o.generation, o.laundered_now
+                                ),
+                                Ok(_) => {}
+                                Err(e) => eprintln!(
+                                    "fleet auto-launder shard {shard} \
+                                     failed (state unchanged): {e:#}"
+                                ),
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+    batch.len()
+}
+
+/// The fleet queue worker (mirrors [`crate::server::run_worker`]).
+pub fn run_fleet_worker(ctx: &FleetCtx<'_, '_>) {
+    while ctx.wait_for_work() {
+        std::thread::sleep(ctx.coalesce_window);
+        drain_fleet_once(ctx);
+    }
+}
+
+/// Execute one fleet op (exposed for tests without sockets).
+pub fn dispatch_fleet(line: &str, ctx: &FleetCtx<'_, '_>) -> Json {
+    match dispatch_inner(line, ctx) {
+        Ok(j) => j,
+        Err(e) => {
+            let mut j = Json::obj();
+            j.set("ok", false).set("error", format!("{e:#}"));
+            j
+        }
+    }
+}
+
+fn parse_request(req: &Json) -> anyhow::Result<ForgetRequest> {
+    let id = req
+        .get("id")
+        .and_then(|v| v.as_str())
+        .ok_or_else(|| anyhow::anyhow!("request needs id"))?
+        .to_string();
+    Ok(ForgetRequest {
+        id,
+        user: req.get("user").and_then(|v| v.as_u64()).map(|u| u as u32),
+        sample_ids: req
+            .get("sample_ids")
+            .and_then(|v| v.as_arr())
+            .map(|a| a.iter().filter_map(|x| x.as_u64()).collect())
+            .unwrap_or_default(),
+        urgency: match req.get("urgency").and_then(|v| v.as_str()) {
+            Some("high") => crate::controller::Urgency::High,
+            _ => crate::controller::Urgency::Normal,
+        },
+    })
+}
+
+fn dispatch_inner(
+    line: &str,
+    ctx: &FleetCtx<'_, '_>,
+) -> anyhow::Result<Json> {
+    let req = parse(line).map_err(|e| anyhow::anyhow!("bad json: {e}"))?;
+    let op = req
+        .get("op")
+        .and_then(|v| v.as_str())
+        .ok_or_else(|| anyhow::anyhow!("missing op"))?;
+    let mut out = Json::obj();
+    match op {
+        "fleet_status" => {
+            let fleet = ctx
+                .fleet
+                .lock()
+                .map_err(|_| anyhow::anyhow!("fleet lock poisoned"))?;
+            out = fleet.status_json();
+            out.set("ok", true)
+                .set("queued_jobs", ctx.queued_len())
+                // backlog incl. in-flight work: a job the worker marked
+                // Running must not read as an empty queue
+                .set("pending_jobs", ctx.pending_len());
+        }
+        "submit" => {
+            if ctx.shutdown.load(Ordering::SeqCst) {
+                anyhow::bail!("server is shutting down — submission refused");
+            }
+            let freq = parse_request(&req)?;
+            let shard =
+                req.get("shard").and_then(|v| v.as_u64()).map(|s| s as u32);
+            if let Some(s) = shard {
+                let fleet = ctx
+                    .fleet
+                    .lock()
+                    .map_err(|_| anyhow::anyhow!("fleet lock poisoned"))?;
+                anyhow::ensure!(
+                    s < fleet.n_shards(),
+                    "shard {s} out of range (fleet has {})",
+                    fleet.n_shards()
+                );
+            }
+            let job = ctx.submit(freq, shard);
+            out.set("ok", true)
+                .set("job", job.as_str())
+                .set("status", "queued");
+        }
+        "poll" => {
+            let job = req
+                .get("job")
+                .and_then(|v| v.as_str())
+                .ok_or_else(|| anyhow::anyhow!("poll needs job"))?;
+            match ctx.poll(job) {
+                Some(j) => {
+                    out.set("ok", true);
+                    if let Json::Obj(m) = &j {
+                        for (k, v) in m {
+                            out.set(k, v.clone());
+                        }
+                    }
+                }
+                None => anyhow::bail!("unknown job {job:?}"),
+            }
+        }
+        "jobs" => {
+            let g = recover(ctx.jobs.lock());
+            out.set("ok", true)
+                .set("jobs", Json::Arr(g.iter().map(job_json).collect()));
+        }
+        "plan" => {
+            let freq = parse_request(&req)?;
+            let fleet = ctx
+                .fleet
+                .lock()
+                .map_err(|_| anyhow::anyhow!("fleet lock poisoned"))?;
+            out = fleet.plan(&freq)?.to_json();
+            out.set("ok", true);
+        }
+        "launder" => {
+            let id = req
+                .get("id")
+                .and_then(|v| v.as_str())
+                .unwrap_or("fleet-launder")
+                .to_string();
+            let mut fleet = ctx
+                .fleet
+                .lock()
+                .map_err(|_| anyhow::anyhow!("fleet lock poisoned"))?;
+            let mut rows = Vec::new();
+            for (shard, res) in fleet.launder_due(&id) {
+                let mut j = Json::obj();
+                j.set("shard", shard);
+                match res {
+                    Ok(o) => {
+                        j.set("ok", true)
+                            .set("executed", o.executed)
+                            .set("generation", o.generation)
+                            .set("laundered_now", o.laundered_now);
+                    }
+                    Err(e) => {
+                        j.set("ok", false).set("error", format!("{e:#}"));
+                    }
+                }
+                rows.push(j);
+            }
+            out.set("ok", true).set("shards", Json::Arr(rows));
+        }
+        "utility" => {
+            let fleet = ctx
+                .fleet
+                .lock()
+                .map_err(|_| anyhow::anyhow!("fleet lock poisoned"))?;
+            let u = fleet.utility_ensemble()?;
+            let mut rows = Vec::new();
+            for (shard, ppl) in u.per_shard {
+                let mut j = Json::obj();
+                j.set("shard", shard).set("ppl", ppl);
+                rows.push(j);
+            }
+            out.set("ok", true)
+                .set("fleet_ppl", u.fleet_ppl)
+                .set("per_shard", Json::Arr(rows));
+        }
+        "shutdown" => {
+            ctx.shutdown.store(true, Ordering::SeqCst);
+            ctx.cv.notify_all();
+            out.set("ok", true).set("shutting_down", true);
+        }
+        other => anyhow::bail!("unknown fleet op {other:?}"),
+    }
+    Ok(out)
+}
+
+/// Serve a fleet on `addr` until a shutdown op arrives.
+pub fn serve_fleet(
+    fleet: Arc<Mutex<Fleet<'_>>>,
+    addr: &str,
+) -> anyhow::Result<()> {
+    let listener = TcpListener::bind(addr)?;
+    let local = listener.local_addr()?;
+    eprintln!("unlearn fleet admin server listening on {local}");
+    let ctx = FleetCtx::new(&fleet);
+    std::thread::scope(|s| {
+        s.spawn(|| run_fleet_worker(&ctx));
+        for stream in listener.incoming() {
+            if ctx.shutdown.load(Ordering::SeqCst) {
+                break;
+            }
+            match stream {
+                Ok(stream) => {
+                    let ctx = &ctx;
+                    s.spawn(move || {
+                        if let Err(e) = handle_conn(stream, ctx, local) {
+                            eprintln!("fleet connection error: {e:#}");
+                        }
+                    });
+                }
+                Err(e) => eprintln!("fleet accept error: {e:#}"),
+            }
+        }
+    });
+    Ok(())
+}
+
+fn handle_conn(
+    stream: TcpStream,
+    ctx: &FleetCtx<'_, '_>,
+    local: std::net::SocketAddr,
+) -> anyhow::Result<()> {
+    // the transport loop (timeouts, line cap, shutdown poke) is shared
+    // with the single-system server so hardening cannot drift
+    crate::server::serve_line_conn(stream, local, &ctx.shutdown, |line| {
+        dispatch_fleet(line, ctx)
+    })
+}

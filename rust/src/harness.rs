@@ -194,8 +194,19 @@ fn system_from_run_with_store<'rt>(
     // a reopened run may already have a laundered lineage and/or a
     // persisted cumulative forgotten set: both survive with the run
     // dir, not the process (exactness across restarts)
-    let laundered: HashSet<u64> =
-        store.laundered_ids()?.into_iter().collect();
+    let (laundered_residue, lineage_retired) = store.laundered_meta()?;
+    // Fail-closed cross-check for the laundered-set compaction: the
+    // lineage records how many ids were folded into the IdMap's retired
+    // set; an IdMap carrying fewer (a lost/rolled-back ids.map.retired
+    // sidecar) would silently resurrect erased data in every rebuild.
+    anyhow::ensure!(
+        lineage_retired <= idmap.retired_len() as u64,
+        "lineage records {lineage_retired} retired id(s) but the IdMap \
+         carries only {} — ids.map.retired is missing or stale; \
+         refusing to serve (erased data would reenter replays)",
+        idmap.retired_len()
+    );
+    let laundered: HashSet<u64> = laundered_residue.into_iter().collect();
     let forgotten: HashSet<u64> = crate::checkpoint::read_ids_json(
         &cfg.run_dir.join("forgotten.json"),
     )?
@@ -222,6 +233,8 @@ fn system_from_run_with_store<'rt>(
         };
         let mut filter = forgotten.clone();
         filter.extend(laundered.iter().copied());
+        // IDs a past compaction retired into the IdMap are masked by
+        // the traversal itself; the filter only needs the residue.
         let (_, rebuilt) = crate::replay::replay_filter_from_nearest_to(
             rt,
             &corpus,
@@ -231,7 +244,10 @@ fn system_from_run_with_store<'rt>(
             &filter,
             target,
             Some(&pins),
-            &crate::replay::ReplayOptions::default(),
+            &crate::replay::ReplayOptions {
+                shard_pin: cfg.shard_pin.clone(),
+                ..crate::replay::ReplayOptions::default()
+            },
         )?;
         (rebuilt.state, true)
     };

@@ -26,7 +26,11 @@
 //! - [`deltas`]     dense per-step delta ring buffer (G3, Alg. A.3)
 //! - [`adapters`]   cohort-scoped LoRA registry (G2, Alg. A.5)
 //! - [`curvature`]  diag-Fisher cache + anti-update hot path (Alg. A.4)
-//! - [`neardup`]    SimHash near-duplicate index + closure (Alg. A.6)
+//! - [`neardup`]    SimHash near-duplicate index + closure (Alg. A.6),
+//!                  with per-member document-ownership attribution
+//! - [`shard`]      pinned deterministic user→shard partitioning
+//! - [`fleet`]      N-shard orchestrator: ownership routing, parallel
+//!                  cross-shard execution, fleet planning/eval/serving
 //! - [`audit`]      MIA / canary exposure / extraction / fuzzy / utility
 //! - [`controller`] path-selection policy (Alg. A.7)
 //! - [`manifest`]   signed, hash-chained forget manifest
@@ -48,12 +52,14 @@ pub mod curvature;
 pub mod data;
 pub mod deltas;
 pub mod equality;
+pub mod fleet;
 pub mod manifest;
 pub mod metrics;
 pub mod neardup;
 pub mod replay;
 pub mod runtime;
 pub mod server;
+pub mod shard;
 pub mod trainer;
 pub mod util;
 pub mod wal;

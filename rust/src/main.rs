@@ -11,6 +11,12 @@
 //!   forget      run the controller on a forget request
 //!   launder     compact the forgotten set into a rewritten lineage
 //!   audit       run the audit harness against a checkpoint
+//!   fleet-train   train/resume an N-shard fleet (deterministic
+//!                 user→shard partitioning, pinned topology)
+//!   fleet-forget  route a forget request to its owning shards only
+//!   fleet-status  per-shard status rollup (+ ensemble utility)
+//!   fleet-serve   fleet admin server (fleet_status / shard-addressed
+//!                 submits / per-shard laundering)
 
 use std::collections::HashSet;
 use std::path::PathBuf;
@@ -85,6 +91,22 @@ fn corpus(args: &Args) -> anyhow::Result<Corpus> {
     cc.seq_len = args.get_usize("seq-len", cc.seq_len)?;
     cc.seed = args.get_u64("corpus-seed", cc.seed)?;
     Ok(Corpus::generate(cc))
+}
+
+fn fleet_config(args: &Args) -> anyhow::Result<unlearn::fleet::FleetConfig> {
+    Ok(unlearn::fleet::FleetConfig {
+        root: PathBuf::from(args.get_or("fleet-dir", "runs/fleet")),
+        spec: unlearn::shard::ShardSpec {
+            n_shards: args.get_u64("shards", 4)? as u32,
+            salt: args.get_u64("salt", 0x51AB_D00F)?,
+        },
+        base: run_config(args)?,
+        scale_steps: !args.flag("no-scale-steps"),
+        launder_policy: unlearn::controller::LaunderPolicy {
+            min_extra_replay_records: args.get_u64("launder-min-extra", 64)?,
+        },
+        auto_launder: args.flag("auto-launder"),
+    })
 }
 
 fn run(args: &Args) -> anyhow::Result<()> {
@@ -165,7 +187,12 @@ fn run(args: &Args) -> anyhow::Result<()> {
                 &idmap,
                 &closure,
                 Some(&pins),
-                &unlearn::replay::ReplayOptions::default(),
+                // present the configured topology claim: replaying a
+                // fleet shard's run dir needs its shard pin to match
+                &unlearn::replay::ReplayOptions {
+                    shard_pin: cfg.shard_pin.clone(),
+                    ..unlearn::replay::ReplayOptions::default()
+                },
             )?;
             println!(
                 "replayed: model {}, optimizer {}, applied {}, empty {}",
@@ -347,10 +374,84 @@ fn run(args: &Args) -> anyhow::Result<()> {
             println!("{}", rep.to_json().pretty());
             Ok(())
         }
+        Some("fleet-train") => {
+            let rt = Runtime::load(&artifacts_dir(args))?;
+            let fcfg = fleet_config(args)?;
+            let c = corpus(args)?;
+            let (fleet, resumed) =
+                unlearn::fleet::Fleet::open_or_train(&rt, fcfg, c)?;
+            println!(
+                "{} fleet: {} shards, salt {:#x}",
+                if resumed { "resumed" } else { "trained" },
+                fleet.n_shards(),
+                fleet.spec.salt
+            );
+            println!("{}", fleet.status_json().pretty());
+            Ok(())
+        }
+        Some("fleet-forget") => {
+            let rt = Runtime::load(&artifacts_dir(args))?;
+            let fcfg = fleet_config(args)?;
+            let c = corpus(args)?;
+            let (mut fleet, _) =
+                unlearn::fleet::Fleet::open_or_train(&rt, fcfg, c)?;
+            let req = cli_request(args, "cli-fleet-forget")?;
+            let plan = fleet.plan(&req)?;
+            println!(
+                "routing: {} shard(s), total replay steps {}, \
+                 max est wall {:.3}s",
+                plan.shard_plans.len(),
+                plan.total_replay_steps,
+                plan.max_est_wall_secs
+            );
+            let out = fleet.forget(&req)?;
+            for fo in &out.outcomes {
+                println!("{}", fo.to_json().pretty());
+            }
+            println!(
+                "shards touched: {}, shared rebuilds: {}, applied \
+                 steps total: {}",
+                out.shards_touched, out.replays_run, out.applied_steps_total
+            );
+            Ok(())
+        }
+        Some("fleet-status") => {
+            let rt = Runtime::load(&artifacts_dir(args))?;
+            let fcfg = fleet_config(args)?;
+            let c = corpus(args)?;
+            let (fleet, _) =
+                unlearn::fleet::Fleet::open_or_train(&rt, fcfg, c)?;
+            println!("{}", fleet.status_json().pretty());
+            if args.flag("utility") {
+                let u = fleet.utility_ensemble()?;
+                println!("fleet ensemble ppl: {:.4}", u.fleet_ppl);
+                for (s, p) in u.per_shard {
+                    println!("  shard {s}: ppl {p:.4}");
+                }
+            }
+            Ok(())
+        }
+        Some("fleet-serve") => {
+            let rt = Runtime::load(&artifacts_dir(args))?;
+            let fcfg = fleet_config(args)?;
+            let c = corpus(args)?;
+            let addr = args.get_or("addr", "127.0.0.1:7879").to_string();
+            let (fleet, resumed) =
+                unlearn::fleet::Fleet::open_or_train(&rt, fcfg, c)?;
+            println!(
+                "{} fleet of {} shard(s); serving on {addr}",
+                if resumed { "resumed" } else { "trained" },
+                fleet.n_shards()
+            );
+            let fleet = std::sync::Arc::new(std::sync::Mutex::new(fleet));
+            unlearn::fleet::server::serve_fleet(fleet, &addr)
+        }
         other => {
             eprintln!(
-                "usage: unlearn <smoke|pins|train|ci-gate|wal-scan|replay|plan|forget|launder|audit|serve> \
-                 [--artifacts DIR] [--run-dir DIR] [--steps N] ...\n\
+                "usage: unlearn <smoke|pins|train|ci-gate|wal-scan|replay|plan|forget|launder|audit|serve|\
+                 fleet-train|fleet-forget|fleet-status|fleet-serve> \
+                 [--artifacts DIR] [--run-dir DIR] [--steps N] \
+                 [--shards N --salt S --fleet-dir DIR] ...\n\
                  (got {other:?})"
             );
             anyhow::bail!("unknown subcommand");

@@ -43,6 +43,13 @@ pub struct ClosureResult {
     pub ids: Vec<u64>,
     /// IDs admitted by expansion (excluding the original request).
     pub expanded: Vec<u64>,
+    /// Document ownership of every resolvable closure member, sorted by
+    /// id (aligned with `ids` minus unresolvable request IDs).  A
+    /// closure spanning multiple owners — a near-dup of user `u`'s doc
+    /// owned by user `v` — reports both, so callers (the fleet router
+    /// scattering a closure across shards, audit attribution) no longer
+    /// re-derive ownership from the corpus.
+    pub owners: Vec<(u64, u32)>,
     /// BFS rounds until fixed point.
     pub rounds: usize,
 }
@@ -54,6 +61,35 @@ impl ClosureResult {
 
     pub fn id_set(&self) -> HashSet<u64> {
         self.ids.iter().copied().collect()
+    }
+
+    /// Owning user of a closure member (None for an id that is not in
+    /// the closure or did not resolve against the corpus).
+    pub fn owner_of(&self, id: u64) -> Option<u32> {
+        self.owners
+            .binary_search_by_key(&id, |&(i, _)| i)
+            .ok()
+            .map(|k| self.owners[k].1)
+    }
+
+    /// Closure members grouped by owning user, users ascending, each
+    /// group's ids sorted — the fleet router's scatter unit.
+    pub fn by_owner(&self) -> Vec<(u32, Vec<u64>)> {
+        let mut groups: std::collections::BTreeMap<u32, Vec<u64>> =
+            std::collections::BTreeMap::new();
+        for &(id, user) in &self.owners {
+            groups.entry(user).or_default().push(id);
+        }
+        groups.into_iter().collect()
+    }
+
+    /// Distinct owning users, ascending.
+    pub fn owner_users(&self) -> Vec<u32> {
+        let mut users: Vec<u32> =
+            self.owners.iter().map(|&(_, u)| u).collect();
+        users.sort_unstable();
+        users.dedup();
+        users
     }
 }
 
@@ -98,7 +134,17 @@ pub fn expand_closure(
     ids.sort_unstable();
     let req: HashSet<u64> = request.iter().copied().collect();
     let expanded = ids.iter().copied().filter(|i| !req.contains(i)).collect();
-    ClosureResult { ids, expanded, rounds }
+    // ownership attribution (ids are sorted, so owners stay sorted too)
+    let owners = ids
+        .iter()
+        .filter_map(|&id| corpus.by_id(id).map(|s| (id, s.user)))
+        .collect();
+    ClosureResult {
+        ids,
+        expanded,
+        owners,
+        rounds,
+    }
 }
 
 #[cfg(test)]
@@ -187,6 +233,58 @@ mod tests {
         for id in &cl.expanded {
             assert_eq!(c.by_id(*id).unwrap().tokens, c.by_id(0).unwrap().tokens);
         }
+    }
+
+    #[test]
+    fn closure_carries_document_ownership() {
+        let c = corpus();
+        let idx = build_index(&c);
+        let req = c.user_samples(1);
+        let cl = expand_closure(&c, &idx, &req, ClosureParams::default());
+        // every member's owner is reported, matching the corpus
+        assert_eq!(cl.owners.len(), cl.ids.len());
+        for &(id, user) in &cl.owners {
+            assert_eq!(c.by_id(id).unwrap().user, user);
+            assert_eq!(cl.owner_of(id), Some(user));
+        }
+        // the grouped view partitions the closure exactly
+        let grouped: usize =
+            cl.by_owner().iter().map(|(_, ids)| ids.len()).sum();
+        assert_eq!(grouped, cl.ids.len());
+        assert!(cl.owner_users().contains(&1));
+        assert_eq!(cl.owner_of(u64::MAX), None);
+    }
+
+    #[test]
+    fn cross_owner_expansion_reports_every_owner() {
+        // a near-dup re-owned by a DIFFERENT user: requesting the
+        // original must report the dup under ITS owner — callers no
+        // longer have to re-derive which user (hence which fleet shard)
+        // each expanded id belongs to
+        let mut c = corpus();
+        let (dup_id, orig_id) = c
+            .samples
+            .iter()
+            .find_map(|s| match s.kind {
+                SampleKind::NearDup { of } => Some((s.id, of)),
+                _ => None,
+            })
+            .expect("corpus has near-dups");
+        let orig_user = c.by_id(orig_id).unwrap().user;
+        let other_user = orig_user + 101; // distinct, still valid u32
+        c.samples[dup_id as usize].user = other_user;
+        let idx = build_index(&c);
+        let cl =
+            expand_closure(&c, &idx, &[orig_id], ClosureParams::default());
+        assert!(cl.contains(dup_id));
+        assert_eq!(cl.owner_of(orig_id), Some(orig_user));
+        assert_eq!(cl.owner_of(dup_id), Some(other_user));
+        let users = cl.owner_users();
+        assert!(users.contains(&orig_user) && users.contains(&other_user));
+        let by_owner = cl.by_owner();
+        assert!(by_owner
+            .iter()
+            .any(|(u, ids)| *u == other_user && ids.contains(&dup_id)));
     }
 
     #[test]

@@ -50,6 +50,14 @@ pub struct ReplayOptions {
     /// equality regression test and `bench_replay`'s A/B both flip
     /// this flag to prove/measure exactly that.
     pub sequential: bool,
+    /// The fleet topology pin the caller's environment presents ("" =
+    /// unsharded).  The runtime itself is topology-blind, so the
+    /// captured pins get this value before comparison against the
+    /// stored training-time pins — a shard's WAL replayed under a
+    /// different topology (or an unsharded reopen of a sharded run)
+    /// fails closed.  Use [`crate::controller::UnlearnSystem::
+    /// replay_options`] to inherit the system's configured pin.
+    pub shard_pin: String,
 }
 
 impl Default for ReplayOptions {
@@ -58,6 +66,7 @@ impl Default for ReplayOptions {
             zero_content: true,
             check_pins: true,
             sequential: false,
+            shard_pin: String::new(),
         }
     }
 }
@@ -145,7 +154,11 @@ pub fn replay_filter_with_snapshots(
         let stored = stored_pins
             .ok_or_else(|| anyhow::anyhow!("pins required (fail-closed)"))?;
         let accum = infer_accum(records)?;
-        stored.ensure_match(&rt.capture_pins(accum))?;
+        let mut current = rt.capture_pins(accum);
+        // the runtime is topology-blind: the caller's configured fleet
+        // pin IS the current environment's topology claim
+        current.shard = opts.shard_pin.clone();
+        stored.ensure_match(&current)?;
     }
 
     let man = &rt.manifest;
@@ -202,12 +215,19 @@ pub fn replay_filter_with_snapshots(
             ids.len()
         );
 
+        // Filter = the caller's closure ∪ the IdMap's retired set.
+        // Retired ids are closure members a past laundering pass folded
+        // into the rewritten manifest M (laundered-set compaction): the
+        // WAL records still reference them, but every traversal must
+        // mask them forever — enforcing that here means the in-memory
+        // laundered set can stay empty instead of growing with service
+        // lifetime.
         let retained = seg.stage(
             corpus,
             ids,
             man.batch,
             man.seq_len,
-            |id| closure.contains(&id),
+            |id| closure.contains(&id) || idmap.is_retired(id),
             opts.zero_content,
             rec.seed64 as i32,
         )?;

@@ -378,6 +378,11 @@ impl Runtime {
         let fp = self.fingerprint();
         Pins {
             executor_kind: fp.kind,
+            // the runtime is topology-blind ("" = unsharded capture);
+            // sharded callers overwrite this with the fleet topology pin
+            // (the trainer from RunConfig::shard_pin, replay from
+            // ReplayOptions::shard_pin) before any comparison
+            shard: String::new(),
             artifact_hashes: fp.artifact_hashes,
             model_config_hash: self.manifest.config_hash.clone(),
             tokenizer_checksum: self.manifest.tokenizer_checksum.clone(),

@@ -378,6 +378,30 @@ impl JobQueue {
             .count()
     }
 
+    /// Jobs not yet completed (queued + running) — the operator's
+    /// queue-backlog number: work the server has promised but not yet
+    /// finished.
+    pub fn pending_len(&self) -> usize {
+        recover(self.table.lock())
+            .jobs
+            .iter()
+            .filter(|j| {
+                matches!(j.status, JobStatus::Queued | JobStatus::Running)
+            })
+            .count()
+    }
+
+    /// On-disk size of the jobs WAL (None = no WAL configured).  Grows
+    /// with in-flight work and un-compacted completion marks; recovery
+    /// compacts it, so a steadily climbing number between restarts means
+    /// backlog, not history.
+    pub fn wal_bytes(&self) -> Option<u64> {
+        self.wal_path
+            .as_ref()
+            .and_then(|p| std::fs::metadata(p).ok())
+            .map(|m| m.len())
+    }
+
     /// Job status/result as a wire object.
     pub fn poll(&self, job_id: &str) -> Option<Json> {
         let g = recover(self.table.lock());
@@ -536,7 +560,7 @@ fn snapshot_of(
         adapters: sys.adapters.len(),
         manifest_entries: sys.manifest.len(),
         forgotten_pending: sys.forgotten.len(),
-        laundered_ids: sys.laundered.len(),
+        laundered_ids: sys.laundered_total(),
         cas: sys.cas_stats().ok(),
         launder_recommended: matches!(sys.plan_launder(policy), Ok(Some(_))),
         params: Arc::new(sys.state.params.clone()),
@@ -854,26 +878,41 @@ fn handle_conn(
     ctx: &ServerCtx<'_, '_>,
     local: SocketAddr,
 ) -> anyhow::Result<()> {
-    // Bounded reads: `serve`'s thread::scope joins every connection
-    // thread, so an idle client blocked in a read forever would keep
-    // the server alive after shutdown.  The timeout lets each handler
-    // observe the flag.  Reads go through a byte buffer (`read_until`),
-    // not `read_line`: on a timeout `read_line` discards its partial
-    // input when the buffered prefix ends mid UTF-8 character, while
-    // `read_until` keeps every byte across timeouts.
+    serve_line_conn(stream, local, &ctx.shutdown, |line| dispatch(line, ctx))
+}
+
+/// The line-framed admin connection loop, shared by the single-system
+/// and fleet servers so the transport hardening cannot drift between
+/// them.
+///
+/// - Bounded reads: the owning `thread::scope` joins every connection
+///   thread, so an idle client blocked in a read forever would keep
+///   the server alive after shutdown.  The timeout lets each handler
+///   observe the flag.  Reads go through a byte buffer (`read_until`),
+///   not `read_line`: on a timeout `read_line` discards its partial
+///   input when the buffered prefix ends mid UTF-8 character, while
+///   `read_until` keeps every byte across timeouts.
+/// - Bounded writes: a client that stops reading must not pin this
+///   thread in writeln! past shutdown.
+/// - Line cap: a client streaming bytes with no newline must not grow
+///   this thread's memory without bound.
+/// - Shutdown poke: after serving the op that flipped the flag, a
+///   self-connect unblocks the acceptor even with no further clients.
+pub(crate) fn serve_line_conn(
+    stream: TcpStream,
+    local: SocketAddr,
+    shutdown: &AtomicBool,
+    dispatch_line: impl Fn(&str) -> Json,
+) -> anyhow::Result<()> {
     stream.set_read_timeout(Some(Duration::from_millis(200)))?;
-    // and bounded writes: a client that stops reading must not pin this
-    // thread in writeln! past shutdown (scope joins every handler)
     stream.set_write_timeout(Some(Duration::from_secs(5)))?;
     let mut reader = BufReader::new(stream.try_clone()?);
     let mut stream = stream;
     let mut buf: Vec<u8> = Vec::new();
     loop {
-        if ctx.shutdown.load(Ordering::SeqCst) {
+        if shutdown.load(Ordering::SeqCst) {
             return Ok(());
         }
-        // cap the line buffer: a client streaming bytes with no newline
-        // must not grow this thread's memory without bound
         const MAX_LINE_BYTES: usize = 1 << 20;
         if buf.len() > MAX_LINE_BYTES {
             let mut j = Json::obj();
@@ -886,12 +925,10 @@ fn handle_conn(
             Ok(0) => return Ok(()), // connection closed
             Ok(_) => {
                 let line = String::from_utf8_lossy(&buf);
-                let response = dispatch(line.trim(), ctx);
+                let response = dispatch_line(line.trim());
                 buf.clear();
                 writeln!(stream, "{}", response.encode())?;
-                if ctx.shutdown.load(Ordering::SeqCst) {
-                    // poke the acceptor so `serve` observes the flag
-                    // even with no further clients connecting
+                if shutdown.load(Ordering::SeqCst) {
                     let _ = TcpStream::connect(local);
                     return Ok(());
                 }
@@ -998,7 +1035,17 @@ fn dispatch_inner(
                 .set("forgotten_pending", snap.forgotten_pending)
                 .set("laundered_ids", snap.laundered_ids)
                 .set("launder_recommended", snap.launder_recommended)
-                .set("queued_jobs", ctx.jobs.queued_len());
+                .set("queued_jobs", ctx.jobs.queued_len())
+                // queue backlog at a glance: promised-but-unfinished
+                // jobs + the jobs-WAL footprint backing that promise
+                .set("pending_jobs", ctx.jobs.pending_len())
+                .set(
+                    "jobs_wal_bytes",
+                    ctx.jobs
+                        .wal_bytes()
+                        .map(Json::from)
+                        .unwrap_or(Json::Null),
+                );
             if let Some(cas) = &snap.cas {
                 let mut c = Json::obj();
                 c.set("objects", cas.objects)

@@ -1,0 +1,393 @@
+//! Deterministic user→shard partitioning (the SISA-style fleet layer's
+//! foundation): every user is pinned to exactly one of `n_shards`
+//! shards by a keyed counter-based hash, so forgetting user `u` can
+//! only ever touch `shard(u)` — the cost of exact unlearning scales
+//! with `1/N` of the corpus instead of the whole run.
+//!
+//! The assignment is a *pure function* of `(user, salt, n_shards)`:
+//! no table, no state, nothing to migrate — and therefore nothing that
+//! can silently drift between training and replay.  The topology is
+//! additionally **pinned**: [`ShardSpec::pin_for`] produces the string
+//! each shard's trainer stamps into its [`crate::config::Pins`]
+//! (`pins.shard`), so replaying a shard's WAL under a different
+//! topology (changed `n_shards`, changed salt, or an unsharded reopen)
+//! fails closed in `Pins::ensure_match` — in both directions.
+//!
+//! [`split_corpus`] partitions a corpus by *document ownership* at
+//! ingest: each shard receives exactly the samples whose owning user
+//! hashes to it, with dense shard-local sample IDs (the per-shard
+//! trainer/WAL/IdMap never see global IDs) and a bidirectional
+//! global↔local mapping the fleet router uses to scatter cross-shard
+//! closures.
+
+use std::collections::HashMap;
+use std::path::Path;
+
+use crate::data::corpus::{Corpus, Sample, SampleKind};
+use crate::util::json::{parse, Json};
+use crate::util::rng::philox_u64;
+
+/// Keyed domain separator so shard assignment never collides with any
+/// other `philox_u64` use of the same salt.
+const SHARD_DOMAIN: u64 = 0x5A4D_5348_4152_4421;
+
+/// The pinned fleet topology: how many shards, and the salt that keys
+/// the user→shard hash.  Changing either re-routes users, so both are
+/// part of every shard's reproducibility pins.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ShardSpec {
+    pub n_shards: u32,
+    pub salt: u64,
+}
+
+impl ShardSpec {
+    /// The owning shard of `user` — a pure function of
+    /// `(user, salt, n_shards)`; no state, no I/O, no ordering effects.
+    pub fn assign(&self, user: u32) -> u32 {
+        debug_assert!(self.n_shards > 0);
+        (philox_u64(self.salt ^ SHARD_DOMAIN, user as u64)
+            % self.n_shards.max(1) as u64) as u32
+    }
+
+    /// The topology pin string shard `shard`'s trainer stamps into its
+    /// `Pins.shard`: shard index, shard count and salt.  Any topology
+    /// drift — different `n_shards`, different salt, a shard's run dir
+    /// opened as a different shard index, or a sharded run reopened
+    /// unsharded (empty pin) — makes this string differ and the pin
+    /// check refuses the replay.
+    pub fn pin_for(&self, shard: u32) -> String {
+        format!(
+            "shard {}/{} salt {:016x}",
+            shard, self.n_shards, self.salt
+        )
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut j = Json::obj();
+        // hex, not a JSON number: the f64-backed number type would
+        // silently round salts above 2^53 and the pinned topology must
+        // roundtrip bit-exactly
+        j.set("n_shards", self.n_shards)
+            .set("salt_hex", format!("{:016x}", self.salt));
+        j
+    }
+
+    pub fn from_json(j: &Json) -> anyhow::Result<ShardSpec> {
+        let n_shards = j
+            .get("n_shards")
+            .and_then(|v| v.as_u64())
+            .ok_or_else(|| anyhow::anyhow!("shard spec missing n_shards"))?
+            as u32;
+        anyhow::ensure!(n_shards > 0, "shard spec needs n_shards > 0");
+        let salt_hex = j
+            .get("salt_hex")
+            .and_then(|v| v.as_str())
+            .ok_or_else(|| anyhow::anyhow!("shard spec missing salt_hex"))?;
+        Ok(ShardSpec {
+            n_shards,
+            salt: u64::from_str_radix(salt_hex, 16)
+                .map_err(|e| anyhow::anyhow!("bad salt_hex {salt_hex:?}: {e}"))?,
+        })
+    }
+
+    /// Persist the topology at the fleet root (atomic tmp+rename).
+    pub fn save(&self, path: &Path) -> anyhow::Result<()> {
+        crate::checkpoint::write_atomic(path, &self.to_json().pretty())
+    }
+
+    pub fn load(path: &Path) -> anyhow::Result<ShardSpec> {
+        let j = parse(&std::fs::read_to_string(path)?)
+            .map_err(|e| anyhow::anyhow!("fleet spec {}: {e}", path.display()))?;
+        ShardSpec::from_json(&j)
+    }
+}
+
+/// The ownership partition of one corpus: per-shard sub-corpora with
+/// dense local IDs plus the global→local mapping the fleet router uses.
+#[derive(Debug, Clone)]
+pub struct ShardSplit {
+    /// Shard-local corpora (index = shard).  A shard whose user set is
+    /// empty gets an empty corpus; the fleet skips training it.  (The
+    /// fleet moves these into the shard systems at build and leaves
+    /// this vector empty.)
+    pub corpora: Vec<Corpus>,
+    /// global sample id → (owning shard, shard-local id).
+    pub locate: HashMap<u64, (u32, u64)>,
+}
+
+impl ShardSplit {
+    /// The owning shard of a global sample id.
+    pub fn shard_of(&self, global_id: u64) -> Option<u32> {
+        self.locate.get(&global_id).map(|&(s, _)| s)
+    }
+
+    /// Shard-local id of a global sample id.
+    pub fn local_of(&self, global_id: u64) -> Option<(u32, u64)> {
+        self.locate.get(&global_id).copied()
+    }
+}
+
+/// Partition `corpus` by document ownership: sample `x` lands in
+/// `spec.assign(x.user)`, in global-ID order, with dense local IDs.
+/// Near-dup back-references are remapped to local IDs when the original
+/// lives in the same shard; a cross-owner duplicate whose original was
+/// routed elsewhere keeps its text/tokens but degrades to
+/// `SampleKind::Normal` (the reference would dangle — nothing at
+/// runtime consumes `of`, but a shard corpus must be self-contained).
+pub fn split_corpus(spec: &ShardSpec, corpus: &Corpus) -> ShardSplit {
+    let n = spec.n_shards as usize;
+    let mut corpora: Vec<Corpus> = (0..n)
+        .map(|_| Corpus {
+            samples: Vec::new(),
+            config: corpus.config.clone(),
+        })
+        .collect();
+    let mut locate: HashMap<u64, (u32, u64)> = HashMap::new();
+
+    for s in &corpus.samples {
+        let shard = spec.assign(s.user);
+        let local = corpora[shard as usize].samples.len() as u64;
+        locate.insert(s.id, (shard, local));
+        corpora[shard as usize].samples.push(Sample {
+            id: local,
+            user: s.user,
+            cohort: s.cohort,
+            kind: s.kind.clone(),
+            text: s.text.clone(),
+            tokens: s.tokens.clone(),
+        });
+    }
+    // second pass: fix near-dup back-references to shard-local ids
+    for (shard, c) in corpora.iter_mut().enumerate() {
+        for s in &mut c.samples {
+            if let SampleKind::NearDup { of } = s.kind {
+                s.kind = match locate.get(&of) {
+                    Some(&(os, ol)) if os as usize == shard => {
+                        SampleKind::NearDup { of: ol }
+                    }
+                    _ => SampleKind::Normal,
+                };
+            }
+        }
+    }
+    ShardSplit { corpora, locate }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Pins;
+    use crate::data::corpus::CorpusConfig;
+    use crate::util::prop::for_all;
+
+    fn base_pins() -> Pins {
+        Pins {
+            executor_kind: "reference".into(),
+            shard: String::new(),
+            artifact_hashes: vec![("train_step".into(), "aaa".into())],
+            model_config_hash: "cfg".into(),
+            tokenizer_checksum: "tok".into(),
+            param_count: 100,
+            accum: 2,
+            batch: 8,
+            layout: "single-host;dp=1;tp=1;pp=1".into(),
+            reduction: "sum".into(),
+            platform: "cpu".into(),
+        }
+    }
+
+    #[test]
+    fn assignment_is_a_pure_function() {
+        let spec = ShardSpec {
+            n_shards: 16,
+            salt: 0xC0FFEE,
+        };
+        let direct = spec.assign(1234);
+        // interleave unrelated queries: index-stability, no ordering
+        let _ = spec.assign(0);
+        let _ = spec.assign(999_999);
+        assert_eq!(spec.assign(1234), direct);
+        assert!(direct < 16);
+        // a different salt or shard count is a different function
+        let other = ShardSpec {
+            n_shards: 16,
+            salt: 0xBEEF,
+        };
+        assert!((0..10_000u32).any(|u| spec.assign(u) != other.assign(u)));
+    }
+
+    #[test]
+    fn prop_assignment_stable_and_in_range() {
+        for_all("shard assignment pure", |rng| {
+            let spec = ShardSpec {
+                n_shards: rng.below(64) as u32 + 1,
+                salt: rng.next_u64(),
+            };
+            let user = rng.below(1 << 32) as u32;
+            let a = spec.assign(user);
+            assert!(a < spec.n_shards);
+            assert_eq!(spec.assign(user), a, "pure function of inputs");
+        });
+    }
+
+    #[test]
+    fn balanced_within_2x_of_uniform_on_10k_users() {
+        for &n_shards in &[2u32, 4, 16] {
+            for &salt in &[1u64, 0xDEAD_BEEF, 42] {
+                let spec = ShardSpec { n_shards, salt };
+                let mut counts = vec![0u64; n_shards as usize];
+                for u in 0..10_000u32 {
+                    counts[spec.assign(u) as usize] += 1;
+                }
+                let expected = 10_000 / n_shards as u64;
+                for (s, &c) in counts.iter().enumerate() {
+                    assert!(
+                        c <= 2 * expected && c >= expected / 2,
+                        "shard {s}/{n_shards} salt {salt:#x}: {c} users vs \
+                         uniform {expected} (outside the 2x band)"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn topology_drift_fails_pins_in_both_directions() {
+        let a = ShardSpec {
+            n_shards: 4,
+            salt: 7,
+        };
+        let b = ShardSpec {
+            n_shards: 8,
+            salt: 7,
+        };
+        let mut pa = base_pins();
+        pa.shard = a.pin_for(1);
+        let mut pb = base_pins();
+        pb.shard = b.pin_for(1);
+        // changing n_shards drifts the pin — both directions
+        assert!(pa.ensure_match(&pb).is_err());
+        assert!(pb.ensure_match(&pa).is_err());
+        // a sharded run reopened unsharded (and vice versa) drifts too
+        let pu = base_pins();
+        assert!(pa.ensure_match(&pu).is_err());
+        assert!(pu.ensure_match(&pa).is_err());
+        // changing the salt alone drifts
+        let mut ps = base_pins();
+        ps.shard = ShardSpec {
+            n_shards: 4,
+            salt: 8,
+        }
+        .pin_for(1);
+        assert!(pa.ensure_match(&ps).is_err());
+        // the same topology + index verifies clean
+        let mut pa2 = base_pins();
+        pa2.shard = a.pin_for(1);
+        assert!(pa.ensure_match(&pa2).is_ok());
+        // the same topology under a different shard INDEX drifts (a run
+        // dir cannot be opened as a different shard)
+        let mut pa3 = base_pins();
+        pa3.shard = a.pin_for(2);
+        assert!(pa.ensure_match(&pa3).is_err());
+    }
+
+    #[test]
+    fn spec_json_roundtrip() {
+        let dir = crate::util::tempdir("shard-spec");
+        let spec = ShardSpec {
+            n_shards: 12,
+            salt: 0xFEED_F00D,
+        };
+        let path = dir.join("fleet.json");
+        spec.save(&path).unwrap();
+        assert_eq!(ShardSpec::load(&path).unwrap(), spec);
+    }
+
+    #[test]
+    fn split_partitions_every_sample_exactly_once() {
+        let corpus = Corpus::generate(CorpusConfig {
+            n_users: 24,
+            docs_per_user: 4,
+            n_canary_users: 2,
+            canaries_per_user: 2,
+            near_dup_rate: 0.1,
+            seq_len: 32,
+            seed: 9,
+        });
+        let spec = ShardSpec {
+            n_shards: 4,
+            salt: 0x51AB,
+        };
+        let split = split_corpus(&spec, &corpus);
+        assert_eq!(split.corpora.len(), 4);
+        let total: usize = split.corpora.iter().map(|c| c.len()).sum();
+        assert_eq!(total, corpus.len(), "no sample lost or duplicated");
+        // derive the local→global view from the locate map
+        let mut globals: Vec<Vec<(u64, u64)>> = vec![Vec::new(); 4];
+        for (&gid, &(shard, local)) in &split.locate {
+            globals[shard as usize].push((local, gid));
+        }
+        for g in &mut globals {
+            g.sort_unstable();
+        }
+        for (shard, c) in split.corpora.iter().enumerate() {
+            assert_eq!(globals[shard].len(), c.len());
+            for (i, s) in c.samples.iter().enumerate() {
+                // dense local ids, ownership respected
+                assert_eq!(s.id, i as u64);
+                assert_eq!(spec.assign(s.user), shard as u32);
+                // global→local mapping round-trips
+                let (local, gid) = globals[shard][i];
+                assert_eq!(local, i as u64);
+                assert_eq!(split.locate[&gid], (shard as u32, i as u64));
+                assert_eq!(corpus.by_id(gid).unwrap().text, s.text);
+                // near-dup refs stay resolvable within the shard
+                if let SampleKind::NearDup { of } = s.kind {
+                    assert!(c.by_id(of).is_some(), "local of-ref resolves");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn split_degrades_cross_owner_dup_to_normal() {
+        let mut corpus = Corpus::generate(CorpusConfig {
+            n_users: 24,
+            docs_per_user: 4,
+            n_canary_users: 0,
+            canaries_per_user: 0,
+            near_dup_rate: 0.2,
+            seq_len: 32,
+            seed: 11,
+        });
+        let spec = ShardSpec {
+            n_shards: 4,
+            salt: 0x51AB,
+        };
+        // move one near-dup to a user on a DIFFERENT shard than its
+        // original — the cross-shard scatter scenario
+        let (idx, of) = corpus
+            .samples
+            .iter()
+            .enumerate()
+            .find_map(|(i, s)| match s.kind {
+                SampleKind::NearDup { of } => Some((i, of)),
+                _ => None,
+            })
+            .expect("corpus has near-dups");
+        let orig_user = corpus.by_id(of).unwrap().user;
+        let other = (0..24u32)
+            .find(|&u| spec.assign(u) != spec.assign(orig_user))
+            .expect("a user on another shard exists");
+        corpus.samples[idx].user = other;
+        let gid = corpus.samples[idx].id;
+
+        let split = split_corpus(&spec, &corpus);
+        let (shard, local) = split.locate[&gid];
+        assert_ne!(shard, spec.assign(orig_user), "dup routed by owner");
+        // the dangling back-reference degraded, content preserved
+        let s = split.corpora[shard as usize].by_id(local).unwrap();
+        assert_eq!(s.kind, SampleKind::Normal);
+        assert_eq!(s.text, corpus.by_id(gid).unwrap().text);
+    }
+}

@@ -103,8 +103,11 @@ impl<'rt> Trainer<'rt> {
         let mut state = TrainState::zeros_like(man.init_params()?);
         store.save_full(&state)?;
 
-        // persist run metadata + pins (fail-closed contract for replay)
-        let pins = rt.capture_pins(cfg.accum);
+        // persist run metadata + pins (fail-closed contract for replay);
+        // a fleet shard stamps its topology pin so replays under a
+        // different user→shard routing fail closed
+        let mut pins = rt.capture_pins(cfg.accum);
+        pins.shard = cfg.shard_pin.clone();
         pins.save(&cfg.run_dir.join("pins.json"))?;
         std::fs::write(
             cfg.run_dir.join("run_config.json"),

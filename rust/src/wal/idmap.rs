@@ -4,8 +4,20 @@
 //! WAL record back to concrete samples).  Binary format, one entry per
 //! microbatch: `[hash64 u64][count u16][id u64]*count`, with a trailing
 //! file SHA-256 in a `.sum` sidecar.
+//!
+//! ## Retired IDs (laundered-set compaction)
+//!
+//! When a laundering pass retires a lineage, the laundered closure is
+//! folded INTO the manifest as a **retired-ID set** (a `.retired`
+//! sidecar): the per-entry ordered lists keep their bytes (the WAL
+//! `hash64` and `mb_len` cross-checks stay intact), but every replay
+//! traversal masks retired IDs automatically.  That is what lets the
+//! lineage's `laundered.json` compact to an empty residue instead of
+//! growing with service lifetime: the retired set is bounded by the
+//! corpus (an ID retires at most once), not by how many laundering
+//! passes ever ran.
 
-use std::collections::HashMap;
+use std::collections::{HashMap, HashSet};
 use std::fs;
 use std::io::Write;
 use std::path::Path;
@@ -18,6 +30,10 @@ pub struct IdMap {
     map: HashMap<u64, Vec<u64>>,
     /// Keyed (production) vs toy hashing — must match the trainer's mode.
     pub hmac_key: Option<Vec<u8>>,
+    /// Sample IDs permanently masked out of every replay traversal —
+    /// the compacted laundered closure (see module docs).  Monotone:
+    /// IDs are only ever added, and at most once each.
+    retired: HashSet<u64>,
 }
 
 impl IdMap {
@@ -25,7 +41,24 @@ impl IdMap {
         IdMap {
             map: HashMap::new(),
             hmac_key,
+            retired: HashSet::new(),
         }
+    }
+
+    /// Permanently mask `ids` out of every future replay traversal
+    /// (idempotent — re-retiring is a no-op, so the set is bounded by
+    /// the corpus regardless of how many laundering passes run).
+    pub fn retire_ids<I: IntoIterator<Item = u64>>(&mut self, ids: I) {
+        self.retired.extend(ids);
+    }
+
+    /// Whether `id` was laundered into the manifest's retired set.
+    pub fn is_retired(&self, id: u64) -> bool {
+        self.retired.contains(&id)
+    }
+
+    pub fn retired_len(&self) -> usize {
+        self.retired.len()
     }
 
     /// Register a microbatch; returns its hash64 (what goes in the WAL).
@@ -74,6 +107,26 @@ impl IdMap {
             path.with_extension("map.sum"),
             sha256_hex(&buf),
         )?;
+        // Retired-ID sidecar (laundered-set compaction).  Written even
+        // when empty so a rewrite clears stale retirements; the entry
+        // bytes above are untouched, preserving every hash64/mb_len
+        // cross-check.  Size is a function of the DISTINCT retired set
+        // (bounded by the corpus), never of how many laundering passes
+        // wrote it.  The sidecar gets its own checksum (mirroring
+        // `.map.sum`): after compaction it is the SOLE record masking
+        // erased data out of replays, so corruption must fail closed —
+        // and the harness cross-checks its cardinality against the
+        // lineage's retired count at reopen, so silent LOSS of the pair
+        // fails closed too.
+        let mut retired: Vec<u64> = self.retired.iter().copied().collect();
+        retired.sort_unstable();
+        let sidecar = path.with_extension("map.retired");
+        let encoded = crate::checkpoint::ids_json(&retired).encode();
+        crate::checkpoint::write_atomic(&sidecar, &encoded)?;
+        fs::write(
+            sidecar.with_extension("retired.sum"),
+            sha256_hex(encoded.as_bytes()),
+        )?;
         Ok(())
     }
 
@@ -105,7 +158,35 @@ impl IdMap {
             pos += 8 * n;
             map.insert(h, ids);
         }
-        Ok(IdMap { map, hmac_key })
+        // retired sidecar: verify its checksum when one exists; a sum
+        // without its sidecar means the retired set was lost — refuse
+        // (post-compaction it is the only thing masking erased data)
+        let sidecar = path.with_extension("map.retired");
+        let sum_path = sidecar.with_extension("retired.sum");
+        if sum_path.exists() {
+            anyhow::ensure!(
+                sidecar.exists(),
+                "IdMap retired sidecar missing for {} (its checksum \
+                 exists) — refusing: erased data would reenter replays",
+                path.display()
+            );
+            let raw = fs::read(&sidecar)?;
+            let expect = fs::read_to_string(&sum_path)?;
+            anyhow::ensure!(
+                sha256_hex(&raw) == expect.trim(),
+                "IdMap retired-sidecar checksum mismatch for {}",
+                path.display()
+            );
+        }
+        let retired: HashSet<u64> =
+            crate::checkpoint::read_ids_json(&sidecar)?
+                .into_iter()
+                .collect();
+        Ok(IdMap {
+            map,
+            hmac_key,
+            retired,
+        })
     }
 }
 
@@ -162,6 +243,83 @@ mod tests {
         raw[12] ^= 0xFF;
         std::fs::write(&path, raw).unwrap();
         assert!(IdMap::load(&path, None).is_err());
+    }
+
+    #[test]
+    fn retired_ids_roundtrip_and_stay_bounded() {
+        // The laundered-set growth bound: the on-disk retired sidecar
+        // (and the in-memory set) are a function of the DISTINCT retired
+        // ids, not of how many laundering passes re-retired them — so
+        // the file stops growing with service lifetime.
+        let dir = tempdir("idmap-retired");
+        let mut m = IdMap::new(None);
+        let h = m.register(&[1, 2, 3, 4]);
+        let path = dir.join("ids.map");
+        m.retire_ids([2u64, 3]);
+        assert!(m.is_retired(2) && m.is_retired(3));
+        assert!(!m.is_retired(1));
+        m.save(&path).unwrap();
+        let sidecar = path.with_extension("map.retired");
+        let size_once = std::fs::metadata(&sidecar).unwrap().len();
+        // 100 more "laundering passes" retiring the same closure
+        for _ in 0..100 {
+            m.retire_ids([2u64, 3]);
+            m.save(&path).unwrap();
+        }
+        assert_eq!(m.retired_len(), 2, "idempotent retirement");
+        assert_eq!(
+            std::fs::metadata(&sidecar).unwrap().len(),
+            size_once,
+            "sidecar bounded by the distinct retired set, not by passes"
+        );
+        // retirement survives a reload; entry bytes (hash cross-checks)
+        // are untouched
+        let back = IdMap::load(&path, None).unwrap();
+        assert!(back.is_retired(2) && back.is_retired(3));
+        assert!(!back.is_retired(1));
+        assert_eq!(back.lookup(h).unwrap(), &[1, 2, 3, 4]);
+        assert!(back.verify(h), "retirement never rewrites entry bytes");
+    }
+
+    #[test]
+    fn maps_without_a_retired_sidecar_load_empty() {
+        // pre-compaction ids.map files (no sidecar, no checksum) parse
+        // as "nothing retired" — backwards compatible
+        let dir = tempdir("idmap-no-sidecar");
+        let mut m = IdMap::new(None);
+        m.register(&[7, 8]);
+        let path = dir.join("ids.map");
+        m.save(&path).unwrap();
+        let sidecar = path.with_extension("map.retired");
+        std::fs::remove_file(&sidecar).unwrap();
+        std::fs::remove_file(sidecar.with_extension("retired.sum")).unwrap();
+        let back = IdMap::load(&path, None).unwrap();
+        assert_eq!(back.retired_len(), 0);
+    }
+
+    #[test]
+    fn retired_sidecar_corruption_or_loss_fails_closed() {
+        // post-compaction the sidecar is the only record masking erased
+        // data out of replays: tampering OR losing it (while its
+        // checksum survives) must refuse the load, mirroring the main
+        // file's .sum posture
+        let dir = tempdir("idmap-retired-tamper");
+        let mut m = IdMap::new(None);
+        m.register(&[1, 2, 3]);
+        m.retire_ids([2u64]);
+        let path = dir.join("ids.map");
+        m.save(&path).unwrap();
+        let sidecar = path.with_extension("map.retired");
+        // tamper: flip a byte in the retired set
+        let raw = std::fs::read(&sidecar).unwrap();
+        let mut bad = raw.clone();
+        let i = bad.iter().position(|&b| b == b'2').unwrap();
+        bad[i] = b'9';
+        std::fs::write(&sidecar, &bad).unwrap();
+        assert!(IdMap::load(&path, None).is_err(), "tamper fails closed");
+        // loss: checksum present, sidecar gone
+        std::fs::remove_file(&sidecar).unwrap();
+        assert!(IdMap::load(&path, None).is_err(), "loss fails closed");
     }
 
     #[test]

@@ -1,0 +1,370 @@
+//! The sharded-fleet acceptance proof: forgetting user `u` on the
+//! fleet is **bit-identical to retraining `shard(u)` on its retain
+//! set** (params + optimizer state — the per-shard G1 guarantee), the
+//! cross-shard scatter erases near-duplicates from THEIR owning shards,
+//! and every non-owning shard is provably untouched — serving state
+//! bit-equal AND its entire run directory (WAL, IdMap, pins, CAS
+//! objects, lineage manifests, signed manifest) byte-for-byte
+//! unchanged.
+
+use std::collections::{BTreeMap, HashSet};
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+use unlearn::config::RunConfig;
+use unlearn::controller::{ForgetRequest, Urgency};
+use unlearn::data::corpus::SampleKind;
+use unlearn::fleet::server::{dispatch_fleet, drain_fleet_once, FleetCtx};
+use unlearn::fleet::{Fleet, FleetConfig};
+use unlearn::harness;
+use unlearn::replay::replay_filter;
+use unlearn::runtime::Runtime;
+use unlearn::shard::ShardSpec;
+
+const STEPS: u32 = 8;
+const CKPT_EVERY: u32 = 4;
+
+fn base_cfg() -> RunConfig {
+    RunConfig {
+        steps: STEPS,
+        accum: 2,
+        checkpoint_every: CKPT_EVERY,
+        checkpoint_keep: 16,
+        ring_window: 4,
+        warmup: 2,
+        ..Default::default()
+    }
+}
+
+/// Every file under `root`, relative path → bytes (the byte-identity
+/// witness for untouched shards).
+fn dir_bytes(root: &Path) -> BTreeMap<PathBuf, Vec<u8>> {
+    fn walk(dir: &Path, root: &Path, out: &mut BTreeMap<PathBuf, Vec<u8>>) {
+        for e in std::fs::read_dir(dir).unwrap() {
+            let e = e.unwrap();
+            let path = e.path();
+            if e.file_type().unwrap().is_dir() {
+                walk(&path, root, out);
+            } else {
+                out.insert(
+                    path.strip_prefix(root).unwrap().to_path_buf(),
+                    std::fs::read(&path).unwrap(),
+                );
+            }
+        }
+    }
+    let mut out = BTreeMap::new();
+    walk(root, root, &mut out);
+    out
+}
+
+#[test]
+fn fleet_forget_is_shard_scoped_and_bit_identical_to_shard_retrain() {
+    let rt = Runtime::load(&harness::artifacts_dir()).expect("artifacts");
+    let mut corpus = harness::small_corpus(rt.manifest.seq_len);
+    let spec = ShardSpec {
+        n_shards: 4,
+        salt: 0x51AB,
+    };
+
+    // Re-own one near-duplicate to a user on a DIFFERENT shard than its
+    // original: forgetting the original's owner must scatter to the
+    // dup's shard too (ownership-routed closure), proving the fleet
+    // does not silently drop cross-shard paraphrases.
+    let (dup_idx, of) = corpus
+        .samples
+        .iter()
+        .enumerate()
+        .find_map(|(i, s)| match s.kind {
+            SampleKind::NearDup { of } => Some((i, of)),
+            _ => None,
+        })
+        .expect("corpus has near-dups");
+    let forget_user = corpus.by_id(of).unwrap().user;
+    let dup_owner = (0..24u32)
+        .find(|&u| u != forget_user && spec.assign(u) != spec.assign(forget_user))
+        .expect("a user on another shard exists");
+    corpus.samples[dup_idx].user = dup_owner;
+    let dup_gid = corpus.samples[dup_idx].id;
+
+    let root = unlearn::util::tempdir("fleet-eq");
+    let mut fleet = Fleet::train(
+        &rt,
+        FleetConfig {
+            root: root.clone(),
+            spec,
+            base: base_cfg(),
+            // fixed per-shard step budget: predictable checkpoints
+            scale_steps: false,
+            launder_policy: Default::default(),
+            auto_launder: false,
+        },
+        corpus.clone(),
+    )
+    .expect("fleet train");
+
+    let req = ForgetRequest {
+        id: "fleet-eq-1".into(),
+        user: Some(forget_user),
+        sample_ids: vec![],
+        urgency: Urgency::Normal,
+    };
+
+    // ---- routing: owner shard + the scattered dup's shard -------------
+    let routed = fleet.route(&req).unwrap();
+    let touched: HashSet<u32> = routed.iter().map(|&(s, _)| s).collect();
+    let owner_shard = spec.assign(forget_user);
+    let dup_shard = spec.assign(dup_owner);
+    assert!(touched.contains(&owner_shard), "owner shard routed");
+    assert!(
+        touched.contains(&dup_shard),
+        "cross-shard near-dup scattered to ITS owner's shard"
+    );
+    assert!(touched.len() >= 2);
+    // the scattered part addresses exactly the dup (by local id)
+    let (_, dup_part) =
+        routed.iter().find(|&&(s, _)| s == dup_shard).unwrap();
+    let dup_local = fleet.split().local_of(dup_gid).unwrap().1;
+    assert!(dup_part.sample_ids.contains(&dup_local));
+
+    // ---- pre-state snapshots ------------------------------------------
+    let n = fleet.n_shards();
+    let pre_state: Vec<Option<unlearn::checkpoint::TrainState>> = (0..n)
+        .map(|i| fleet.shard(i).map(|s| s.state.clone()))
+        .collect();
+    let pre_bytes: Vec<Option<BTreeMap<PathBuf, Vec<u8>>>> = (0..n)
+        .map(|i| {
+            fleet
+                .shard(i)
+                .map(|s| dir_bytes(&s.cfg.run_dir))
+        })
+        .collect();
+
+    // ---- fleet plan: rolled-up cost before executing ------------------
+    let plan = fleet.plan(&req).unwrap();
+    assert_eq!(plan.shard_plans.len(), touched.len());
+    assert!(plan.total_replay_steps > 0, "replay-bound request");
+    assert!(plan.max_est_wall_secs <= plan.sum_est_wall_secs + 1e-12);
+
+    // ---- execute ------------------------------------------------------
+    let out = fleet.forget(&req).unwrap();
+    assert_eq!(out.outcomes.len(), 1);
+    let fo = &out.outcomes[0];
+    assert!(fo.executed(), "every routed shard committed");
+    assert_eq!(fo.shards.len(), touched.len());
+    assert_eq!(out.shards_touched, touched.len());
+    assert!(out.applied_steps_total > 0);
+
+    // ---- touched shards: bit-identical to the shard retrain oracle ----
+    // RETAINTRAIN(shard) = preserved-graph replay of the shard's own WAL
+    // from θ0, filtering its local closure (Def. A.12 / Thm. A.1 — the
+    // same oracle the monolithic G1 test uses, now per shard).
+    for (shard, sreq) in &routed {
+        let sys = fleet.shard(*shard).unwrap();
+        let (cl, _) = sys.closure_of(sreq);
+        let closure: HashSet<u64> = cl.into_iter().collect();
+        assert!(!closure.is_empty());
+        let theta0 = sys.store().load_full(0).unwrap();
+        let oracle = replay_filter(
+            sys.rt,
+            &sys.corpus,
+            &theta0,
+            &sys.records,
+            &sys.idmap,
+            &closure,
+            Some(&sys.pins),
+            &sys.replay_options(),
+        )
+        .expect("shard retrain oracle");
+        assert!(
+            sys.state.bits_equal(&oracle.state),
+            "shard {shard}: fleet-forget must be bit-identical to \
+             retraining the shard on its retain set (model {} vs {}, \
+             optimizer {} vs {})",
+            sys.state.model_hash(),
+            oracle.state.model_hash(),
+            sys.state.optimizer_hash(),
+            oracle.state.optimizer_hash()
+        );
+        // and it actually changed something (the shard forgot)
+        assert!(
+            !sys.state.bits_equal(pre_state[*shard as usize].as_ref().unwrap()),
+            "shard {shard} state must have changed"
+        );
+        // one signed manifest entry per touched shard
+        let chain = sys.manifest.verify_chain().unwrap();
+        assert_eq!(chain.len(), 1);
+        assert!(chain.iter().all(|(_, sig)| *sig));
+    }
+
+    // ---- untouched shards: serving state AND store bytes unchanged ----
+    for shard in 0..n {
+        if touched.contains(&shard) {
+            continue;
+        }
+        let Some(sys) = fleet.shard(shard) else { continue };
+        assert!(
+            sys.state
+                .bits_equal(pre_state[shard as usize].as_ref().unwrap()),
+            "non-owning shard {shard} serving state must be untouched"
+        );
+        let now = dir_bytes(&sys.cfg.run_dir);
+        let before = pre_bytes[shard as usize].as_ref().unwrap();
+        assert_eq!(
+            now.len(),
+            before.len(),
+            "non-owning shard {shard}: file set changed"
+        );
+        for (path, bytes) in &now {
+            assert_eq!(
+                Some(bytes),
+                before.get(path),
+                "non-owning shard {shard}: {} changed bytes",
+                path.display()
+            );
+        }
+        assert_eq!(sys.manifest.len(), 0, "no manifest entry on shard {shard}");
+    }
+
+    // ---- idempotency across the fleet ---------------------------------
+    let dup = fleet.forget(&req).unwrap();
+    assert_eq!(dup.replays_run, 0, "duplicate suppressed on every shard");
+    for so in &dup.outcomes[0].shards {
+        assert!(!so.outcome.as_ref().unwrap().executed);
+    }
+
+    // ---- topology drift: reopening under a different spec refuses -----
+    let drifted = Fleet::open_or_train(
+        &rt,
+        FleetConfig {
+            root: root.clone(),
+            spec: ShardSpec {
+                n_shards: 8,
+                salt: 0x51AB,
+            },
+            base: base_cfg(),
+            scale_steps: false,
+            launder_policy: Default::default(),
+            auto_launder: false,
+        },
+        corpus.clone(),
+    );
+    let msg = format!("{:#}", drifted.err().expect("topology drift refused"));
+    assert!(msg.contains("topology drift"), "{msg}");
+
+    // ---- ensemble utility is well-formed ------------------------------
+    let u = fleet.utility_ensemble().unwrap();
+    assert!(u.fleet_ppl.is_finite() && u.fleet_ppl > 0.0);
+    assert!(!u.per_shard.is_empty());
+}
+
+#[test]
+fn fleet_admin_protocol_routes_and_drains() {
+    let rt = Runtime::load(&harness::artifacts_dir()).expect("artifacts");
+    let corpus = harness::small_corpus(rt.manifest.seq_len);
+    let spec = ShardSpec {
+        n_shards: 2,
+        salt: 0xA11CE,
+    };
+    let fleet = Fleet::train(
+        &rt,
+        FleetConfig {
+            root: unlearn::util::tempdir("fleet-proto"),
+            spec,
+            base: base_cfg(),
+            scale_steps: false,
+            launder_policy: Default::default(),
+            auto_launder: false,
+        },
+        corpus.clone(),
+    )
+    .unwrap();
+    let fleet = Mutex::new(fleet);
+    let ctx = FleetCtx::new(&fleet);
+
+    // ---- fleet_status: topology + per-shard rows ----------------------
+    let r = dispatch_fleet(r#"{"op":"fleet_status"}"#, &ctx);
+    assert_eq!(r.get("ok").unwrap().as_bool(), Some(true), "{r}");
+    assert_eq!(r.get("n_shards").unwrap().as_u64(), Some(2));
+    let rows = r.get("shards").unwrap().as_arr().unwrap();
+    assert_eq!(rows.len(), 2);
+
+    // a user guaranteed non-empty on its shard
+    let user = 3u32;
+    let owner = spec.assign(user);
+
+    // ---- plan: fleet rollup dry-run -----------------------------------
+    let r = dispatch_fleet(
+        &format!(r#"{{"op":"plan","id":"fp-plan","user":{user}}}"#),
+        &ctx,
+    );
+    assert_eq!(r.get("ok").unwrap().as_bool(), Some(true), "{r}");
+    assert!(r.get("total_replay_steps").unwrap().as_u64().unwrap() > 0);
+
+    // ---- routed submit + drain ----------------------------------------
+    let r = dispatch_fleet(
+        &format!(r#"{{"op":"submit","id":"fp-1","user":{user}}}"#),
+        &ctx,
+    );
+    assert_eq!(r.get("ok").unwrap().as_bool(), Some(true), "{r}");
+    let job = r.get("job").unwrap().as_str().unwrap().to_string();
+    assert_eq!(ctx.queued_len(), 1);
+    assert_eq!(drain_fleet_once(&ctx), 1);
+    let r = dispatch_fleet(&format!(r#"{{"op":"poll","job":"{job}"}}"#), &ctx);
+    assert_eq!(r.get("status").unwrap().as_str(), Some("done"), "{r}");
+    assert_eq!(
+        r.get_path(&["result", "executed"]).unwrap().as_bool(),
+        Some(true),
+        "{r}"
+    );
+    // executed only on the owning shard
+    let shards = r
+        .get_path(&["result", "shards"])
+        .unwrap()
+        .as_arr()
+        .unwrap();
+    assert_eq!(shards.len(), 1, "{r}");
+    assert_eq!(shards[0].get("shard").unwrap().as_u64(), Some(owner as u64));
+
+    // ---- shard-addressed submit (operator override) -------------------
+    let other_user = (0..24u32)
+        .find(|&u| spec.assign(u) != owner)
+        .expect("a user on the other shard exists");
+    let r = dispatch_fleet(
+        &format!(
+            r#"{{"op":"submit","id":"fp-2","user":{other_user},"shard":{}}}"#,
+            spec.assign(other_user)
+        ),
+        &ctx,
+    );
+    assert_eq!(r.get("ok").unwrap().as_bool(), Some(true), "{r}");
+    let job2 = r.get("job").unwrap().as_str().unwrap().to_string();
+    // an out-of-range shard address is refused at submit
+    let r = dispatch_fleet(
+        r#"{"op":"submit","id":"fp-bad","user":1,"shard":9}"#,
+        &ctx,
+    );
+    assert_eq!(r.get("ok").unwrap().as_bool(), Some(false), "{r}");
+    assert_eq!(drain_fleet_once(&ctx), 1);
+    let r = dispatch_fleet(&format!(r#"{{"op":"poll","job":"{job2}"}}"#), &ctx);
+    assert_eq!(r.get("status").unwrap().as_str(), Some("done"), "{r}");
+
+    // ---- utility + jobs + malformed ops -------------------------------
+    let r = dispatch_fleet(r#"{"op":"utility"}"#, &ctx);
+    assert_eq!(r.get("ok").unwrap().as_bool(), Some(true), "{r}");
+    assert!(r.get("fleet_ppl").unwrap().as_f64().unwrap() > 0.0);
+    let r = dispatch_fleet(r#"{"op":"jobs"}"#, &ctx);
+    // fp-1 and fp-2 were accepted; the out-of-range submit never
+    // reached the queue
+    assert_eq!(r.get("jobs").unwrap().as_arr().unwrap().len(), 2);
+    let r = dispatch_fleet("not json", &ctx);
+    assert_eq!(r.get("ok").unwrap().as_bool(), Some(false));
+    let r = dispatch_fleet(r#"{"op":"nope"}"#, &ctx);
+    assert_eq!(r.get("ok").unwrap().as_bool(), Some(false));
+
+    // ---- shutdown refuses further submissions -------------------------
+    let r = dispatch_fleet(r#"{"op":"shutdown"}"#, &ctx);
+    assert_eq!(r.get("ok").unwrap().as_bool(), Some(true));
+    let r = dispatch_fleet(r#"{"op":"submit","id":"late","user":1}"#, &ctx);
+    assert_eq!(r.get("ok").unwrap().as_bool(), Some(false), "{r}");
+}

@@ -588,7 +588,15 @@ fn laundering_is_bit_identical_and_strictly_cheaper() {
     assert!(out.checkpoints_adopted > 0, "θ0 adopted for free");
     assert_eq!(out.generation, gen_before + 1, "lineage swapped");
     assert!(laundry.forgotten.is_empty(), "forgotten set reset");
-    assert!(!laundry.laundered.is_empty(), "closure moved to the lineage");
+    // laundered-set compaction: the closure moved into the IdMap's
+    // retired set (replays mask it automatically), the in-memory
+    // residue stays empty — neither grows with service lifetime
+    assert!(laundry.laundered.is_empty(), "residue compacted away");
+    assert!(
+        laundry.idmap.retired_len() > 0,
+        "closure retired into the IdMap"
+    );
+    assert_eq!(out.laundered_total, laundry.laundered_total());
     assert_eq!(laundry.ring.available(), 0, "ring invalidated by the swap");
     assert!(
         laundry.state.bits_equal(&union.state),
@@ -596,11 +604,12 @@ fn laundering_is_bit_identical_and_strictly_cheaper() {
          retain-only state already)"
     );
     // the store agrees with the in-memory view (the cached handle was
-    // revalidated by the lineage swap)
-    assert_eq!(
-        laundry.store().laundered_ids().unwrap().len(),
-        laundry.laundered.len()
-    );
+    // revalidated by the lineage swap): residue empty, retired count
+    // matches the IdMap — and the compacted laundered.json stays
+    // bounded regardless of how many ids were ever laundered
+    let (residue, retired) = laundry.store().laundered_meta().unwrap();
+    assert!(residue.is_empty());
+    assert_eq!(retired as usize, laundry.idmap.retired_len());
     // idempotency: a second pass under the same key is suppressed
     let dup = laundry
         .launder(

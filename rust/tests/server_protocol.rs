@@ -58,6 +58,14 @@ fn job_wal_recovers_pending_and_launder_op_compacts() {
         assert_eq!(r.get("ok").unwrap().as_bool(), Some(true), "{r}");
         assert_eq!(r.get("job").unwrap().as_str(), Some("job-2"));
         assert_eq!(ctx.jobs.queued_len(), 2);
+        // status surfaces the queue backlog: promised-but-unfinished
+        // jobs plus the jobs-WAL footprint backing the promise
+        let r = dispatch(r#"{"op":"status"}"#, &ctx);
+        assert_eq!(r.get("pending_jobs").unwrap().as_u64(), Some(2), "{r}");
+        assert!(
+            r.get("jobs_wal_bytes").unwrap().as_u64().unwrap() > 0,
+            "{r}"
+        );
         // no drain — the process dies with the queue full
     }
 
@@ -85,13 +93,17 @@ fn job_wal_recovers_pending_and_launder_op_compacts() {
     {
         let sys = system.lock().unwrap();
         assert!(sys.forgotten.is_empty(), "laundering reset the set");
-        assert!(!sys.laundered.is_empty());
+        assert!(sys.laundered_total() > 0);
     }
 
     // status reflects the compaction through the refreshed snapshot
     let r = dispatch(r#"{"op":"status"}"#, &ctx);
     assert_eq!(r.get("forgotten_pending").unwrap().as_u64(), Some(0), "{r}");
     assert!(r.get("laundered_ids").unwrap().as_u64().unwrap() > 0);
+    // the backlog drained to zero and the recovered-then-compacted WAL
+    // stays bounded by in-flight work
+    assert_eq!(r.get("pending_jobs").unwrap().as_u64(), Some(0), "{r}");
+    assert!(r.get("jobs_wal_bytes").unwrap().as_u64().is_some());
     assert_eq!(
         r.get("launder_recommended").unwrap().as_bool(),
         Some(false),
@@ -183,7 +195,7 @@ fn auto_launder_runs_after_a_drained_burst_when_enabled() {
             sys.forgotten.is_empty(),
             "auto-launder compacted the burst's forgotten set"
         );
-        assert!(!sys.laundered.is_empty());
+        assert!(sys.laundered_total() > 0);
         // the pass reached the signed manifest under its derived key
         let chain = sys.manifest.verify_chain().unwrap();
         assert!(chain.iter().all(|(_, sig)| *sig));
