@@ -5,6 +5,9 @@
 mod bench_util;
 use bench_util::*;
 
+use unlearn::cigate::perf;
+use unlearn::controller::{ForgetRequest, Urgency};
+use unlearn::server::{JobQueue, JobRequest};
 use unlearn::util::tempdir;
 use unlearn::wal::{integrity, WalRecord, WalWriter};
 
@@ -30,14 +33,75 @@ fn json_main() {
         w.finish().unwrap();
     });
     let scan = time_it(1, 3, || integrity::scan(&dir.join("a"), None).unwrap());
+
+    // ---- jobs-WAL recovery replay (schema 2) --------------------------
+    // Restart-to-serving latency of the durable admin queue: reopen a
+    // jobs WAL with a fixed pending backlog — parse, re-queue under
+    // original ids, compact.  The warmup run compacts the freshly
+    // written file, so the measured runs see the steady state every
+    // real restart after the first sees.
+    const PENDING: usize = 256;
+    let jobs_wal = dir.join("jobs.wal");
+    {
+        let q = JobQueue::<JobRequest>::with_wal(&jobs_wal).unwrap();
+        for i in 0..PENDING {
+            q.submit(JobRequest::Forget(ForgetRequest {
+                id: format!("req-{i}"),
+                user: Some(i as u32),
+                sample_ids: vec![],
+                urgency: Urgency::Normal,
+            }))
+            .unwrap();
+        }
+    }
+    let recovery = time_it(1, 3, || {
+        let q = JobQueue::<JobRequest>::with_wal(&jobs_wal).unwrap();
+        assert_eq!(q.queued_len(), PENDING);
+    });
+    let recovery_ns = ns(recovery.mean);
+
+    // fail-closed gate against the committed baseline (record-only
+    // while the committed file is a placeholder without the metric)
+    let baseline = bench_json_path("wal");
+    match perf::check_wal_recovery(
+        &baseline,
+        recovery_ns,
+        perf::DEFAULT_MAX_REGRESSION,
+    ) {
+        Ok(v) => println!("wal recovery perf gate: {v:?}"),
+        Err(e) => {
+            eprintln!("{e:#}");
+            std::process::exit(1);
+        }
+    }
+
     let mut j = unlearn::util::json::Json::obj();
     j.set("bench", "wal")
         .set("records", n)
         .set("append_ns_per_record", ns(append.mean) / n as f64)
         .set("scan_ns_per_record", ns(scan.mean) / n as f64)
+        .set(perf::WAL_RECOVERY_METRIC, recovery_ns)
+        .set("recovery_pending_jobs", PENDING)
         .set("bytes_per_record", 32)
-        .set("schema", 1);
-    emit_json("wal", &j);
+        .set("schema", 2);
+    match perf::record_first_baseline_for(
+        &baseline,
+        perf::WAL_RECOVERY_METRIC,
+        &j,
+    )
+    .expect("write baseline")
+    {
+        perf::BaselineDisposition::Recorded => {
+            println!(
+                "wal recovery baseline: first measured run RECORDED at {} \
+                 — the >{:.0}% regression gate bites from the next run",
+                baseline.display(),
+                perf::DEFAULT_MAX_REGRESSION * 100.0
+            );
+            println!("{}", j.pretty());
+        }
+        perf::BaselineDisposition::AlreadyMeasured => emit_json("wal", &j),
+    }
 }
 
 fn main() {

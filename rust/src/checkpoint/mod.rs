@@ -40,7 +40,7 @@
 use std::collections::{HashMap, HashSet};
 use std::fmt;
 use std::fs;
-use std::io::{Read, Write};
+use std::io::Read;
 use std::path::{Path, PathBuf};
 
 use crate::util::hashing::StreamingSha256;
@@ -190,27 +190,25 @@ pub struct GcStats {
 }
 
 /// Stream a tensor's bytes to `path` (tmp + rename so readers never see
-/// a partial object).
+/// a partial object).  Routed through [`crate::util::faultfs`] so the
+/// crash matrix can kill or tear the blob write at any point.
 fn write_object(path: &Path, bytes: &[u8]) -> anyhow::Result<()> {
     let tmp = path.with_extension("tmp");
-    {
-        let mut f = std::io::BufWriter::new(fs::File::create(&tmp)?);
-        for chunk in bytes.chunks(1 << 20) {
-            f.write_all(chunk)?;
-        }
-        f.flush()?;
-    }
-    fs::rename(&tmp, path)?;
+    crate::util::faultfs::write(&tmp, bytes)?;
+    crate::util::faultfs::rename(&tmp, path)?;
     Ok(())
 }
 
 /// Atomic small-file write (manifests, LINEAGE.json; also shared by
 /// the controller's durable-set files so tmp+rename semantics live in
-/// exactly one place).
-pub(crate) fn write_atomic(path: &Path, text: &str) -> anyhow::Result<()> {
+/// exactly one place).  Both steps are fault-injection points: a crash
+/// between them leaves only a `.tmp`, which every reader ignores.
+/// `pub` so the crash-matrix suite can sweep the commit primitive
+/// itself, not just its call sites.
+pub fn write_atomic(path: &Path, text: &str) -> anyhow::Result<()> {
     let tmp = path.with_extension("tmp");
-    fs::write(&tmp, text)?;
-    fs::rename(&tmp, path)?;
+    crate::util::faultfs::write(&tmp, text.as_bytes())?;
+    crate::util::faultfs::rename(&tmp, path)?;
     Ok(())
 }
 
@@ -304,7 +302,7 @@ impl CheckpointStore {
         let mut swept = false;
         for dir in store.lineage_dirs()? {
             if dir != active_dir {
-                fs::remove_dir_all(&dir)?;
+                crate::util::faultfs::remove_dir_all(&dir)?;
                 swept = true;
             }
         }
@@ -626,7 +624,7 @@ impl CheckpointStore {
             return Ok(());
         }
         for &s in &steps[..steps.len() - self.keep] {
-            fs::remove_file(dir.join(manifest_name(s, false)))?;
+            crate::util::faultfs::remove_file(&dir.join(manifest_name(s, false)))?;
         }
         self.gc()?;
         Ok(())
@@ -688,7 +686,7 @@ impl CheckpointStore {
             let path = e.path();
             let name = e.file_name().to_string_lossy().into_owned();
             if name.ends_with(".tmp") {
-                let _ = fs::remove_file(&path); // interrupted writer
+                let _ = crate::util::faultfs::remove_file(&path); // interrupted writer
                 continue;
             }
             if live.contains_key(&name) {
@@ -696,7 +694,7 @@ impl CheckpointStore {
             } else {
                 stats.removed_bytes += e.metadata().map(|m| m.len()).unwrap_or(0);
                 stats.removed_objects += 1;
-                fs::remove_file(&path)?;
+                crate::util::faultfs::remove_file(&path)?;
             }
         }
         Ok(stats)
@@ -792,7 +790,7 @@ impl CheckpointStore {
         let generation = self.active_generation()? + 1;
         let dir = self.lineage_dir(generation);
         if dir.exists() {
-            fs::remove_dir_all(&dir)?;
+            crate::util::faultfs::remove_dir_all(&dir)?;
         }
         fs::create_dir_all(&dir)?;
         Ok(LineageStage {
@@ -832,7 +830,7 @@ impl LineageStage<'_> {
         if !src.exists() {
             return Err(StoreError::MissingCheckpoint { step }.into());
         }
-        fs::copy(&src, self.dir.join(manifest_name(step, false)))?;
+        crate::util::faultfs::copy(&src, &self.dir.join(manifest_name(step, false)))?;
         Ok(())
     }
 
@@ -871,7 +869,9 @@ impl LineageStage<'_> {
         // old generation's blobs temporarily: the next store open
         // retires every non-active lineage dir and re-runs the GC.
         let cleanup = (|| -> anyhow::Result<()> {
-            fs::remove_dir_all(self.store.lineage_dir(previous))?;
+            crate::util::faultfs::remove_dir_all(
+                &self.store.lineage_dir(previous),
+            )?;
             self.store.gc()?;
             Ok(())
         })();
@@ -888,7 +888,7 @@ impl LineageStage<'_> {
     /// Discard the staged lineage (audit gate refused the swap) and
     /// sweep any blobs only it referenced.
     pub fn abort(self) -> anyhow::Result<()> {
-        fs::remove_dir_all(&self.dir)?;
+        crate::util::faultfs::remove_dir_all(&self.dir)?;
         self.store.gc()?;
         Ok(())
     }

@@ -164,6 +164,29 @@ pub fn check_fleet(
     )
 }
 
+/// The WAL bench's second gated metric: nanoseconds for
+/// `JobQueue::with_wal` to recover a jobs WAL holding a fixed pending
+/// backlog (parse + re-queue under original ids + compaction rewrite).
+/// This is the restart-to-serving latency of the durable admin queue —
+/// it regresses when recovery starts re-parsing history it should have
+/// compacted away or the rewrite stops being one atomic pass.
+pub const WAL_RECOVERY_METRIC: &str = "recovery_replay_ns";
+
+/// Fail-closed gate over the committed `BENCH_wal.json` baseline.
+pub fn check_wal_recovery(
+    baseline_path: &Path,
+    measured_ns: f64,
+    max_regression: f64,
+) -> anyhow::Result<PerfVerdict> {
+    check_metric(
+        baseline_path,
+        WAL_RECOVERY_METRIC,
+        measured_ns,
+        max_regression,
+        "wal bench (jobs-WAL recovery ns)",
+    )
+}
+
 /// Whether a measured run became the committed baseline.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum BaselineDisposition {

@@ -85,6 +85,40 @@ pub struct ShardState<'rt> {
     pub policy: LaunderPolicy,
 }
 
+/// Per-shard serving health: the degraded-mode isolation state.  A
+/// shard whose erasure work (`execute_batch` / launder) errors is
+/// quarantined — its queued work gets a typed `quarantined` outcome
+/// instead of an execution attempt — while every healthy shard keeps
+/// serving and erasing.  Backoff is counted in DRAIN CYCLES, not wall
+/// clock, so recovery behavior is deterministic and testable: each
+/// drain that routes work to a quarantined shard ticks its cooldown
+/// down by one; at zero the next drain is a half-open probe (success
+/// restores `Healthy`, failure re-quarantines with doubled backoff).
+#[derive(Debug, Clone, PartialEq)]
+pub enum ShardHealth {
+    Healthy,
+    Quarantined {
+        /// The error that tripped the quarantine (operator-visible via
+        /// `fleet_status`).
+        reason: String,
+        /// Consecutive failed attempts (drives the exponential backoff).
+        failures: u32,
+        /// Drains remaining before the half-open retry.
+        cooldown_drains: u32,
+    },
+}
+
+impl ShardHealth {
+    pub fn is_quarantined(&self) -> bool {
+        matches!(self, ShardHealth::Quarantined { .. })
+    }
+}
+
+/// Deterministic drain-counted backoff: 1, 2, 4, 8, 8, ... drains.
+fn backoff_drains(failures: u32) -> u32 {
+    1u32 << failures.saturating_sub(1).min(3)
+}
+
 /// The orchestrator over N shard systems.
 pub struct Fleet<'rt> {
     pub spec: ShardSpec,
@@ -98,6 +132,9 @@ pub struct Fleet<'rt> {
     /// `None` = the shard's user set was empty at ingest (nothing to
     /// train, nothing routable to it).
     shards: Vec<Option<ShardState<'rt>>>,
+    /// Degraded-mode isolation state, one slot per shard (empty shards
+    /// stay `Healthy` forever — nothing routes to them).
+    health: Vec<ShardHealth>,
     pub auto_launder: bool,
 }
 
@@ -105,6 +142,11 @@ pub struct Fleet<'rt> {
 pub struct ShardOutcome {
     pub shard: u32,
     pub outcome: anyhow::Result<ControllerOutcome>,
+    /// True when the shard did not attempt the work because it is
+    /// quarantined (cooldown still running) — distinguishes "skipped by
+    /// the isolation layer" from "attempted and failed" so partial
+    /// failure is attributable per shard.
+    pub quarantined: bool,
 }
 
 /// Per-request fleet outcome: which shards executed and what each did.
@@ -130,12 +172,18 @@ impl FleetOutcome {
             match &s.outcome {
                 Ok(o) => {
                     j.set("ok", true)
+                        .set("status", "ok")
                         .set("action", o.action.as_str())
                         .set("executed", o.executed)
                         .set("closure_size", o.closure_size);
                 }
                 Err(e) => {
-                    j.set("ok", false).set("error", format!("{e:#}"));
+                    j.set("ok", false)
+                        .set(
+                            "status",
+                            if s.quarantined { "quarantined" } else { "failed" },
+                        )
+                        .set("error", format!("{e:#}"));
                 }
             }
             arr.push(j);
@@ -338,6 +386,7 @@ impl<'rt> Fleet<'rt> {
                 closure_params: ClosureParams::default(),
                 split,
                 shards,
+                health: vec![ShardHealth::Healthy; n],
                 auto_launder: cfg.auto_launder,
             },
             resumed_any,
@@ -373,6 +422,32 @@ impl<'rt> Fleet<'rt> {
             .get_mut(shard as usize)
             .and_then(|s| s.as_mut())
             .map(|s| &mut s.system)
+    }
+
+    /// The isolation state of one shard (None = shard index out of
+    /// range).
+    pub fn shard_health(&self, shard: u32) -> Option<&ShardHealth> {
+        self.health.get(shard as usize)
+    }
+
+    /// Number of currently quarantined shards.
+    pub fn quarantined_count(&self) -> usize {
+        self.health.iter().filter(|h| h.is_quarantined()).count()
+    }
+
+    /// Record a shard-level infrastructure failure: first failure
+    /// quarantines with a 1-drain cooldown; each subsequent failed
+    /// (half-open) probe doubles the backoff up to 8 drains.
+    fn note_shard_failure(&mut self, shard: usize, reason: String) {
+        let failures = match &self.health[shard] {
+            ShardHealth::Quarantined { failures, .. } => failures + 1,
+            ShardHealth::Healthy => 1,
+        };
+        self.health[shard] = ShardHealth::Quarantined {
+            reason,
+            failures,
+            cooldown_drains: backoff_drains(failures),
+        };
     }
 
     /// Route a fleet request to its owning shards: expand the closure on
@@ -531,6 +606,34 @@ impl<'rt> Fleet<'rt> {
             }
         }
 
+        // Degraded-mode isolation, BEFORE any thread spawns: a shard
+        // whose quarantine cooldown is still running gets no execution
+        // attempt this drain — its inputs receive a typed quarantined
+        // outcome and the cooldown ticks down one drain.  A shard whose
+        // cooldown reached zero runs this drain as a half-open probe.
+        // Healthy shards are entirely unaffected: the skip decision is
+        // per shard, so one sick shard never blocks the others' drains.
+        let mut skipped: Vec<Option<String>> = (0..n).map(|_| None).collect();
+        for shard in 0..n {
+            if per_shard[shard].is_empty() {
+                continue;
+            }
+            if let ShardHealth::Quarantined {
+                reason,
+                cooldown_drains,
+                ..
+            } = &mut self.health[shard]
+            {
+                if *cooldown_drains > 0 {
+                    *cooldown_drains -= 1;
+                    skipped[shard] = Some(format!(
+                        "shard {shard} quarantined ({reason}); retry in \
+                         {cooldown_drains} drain(s)"
+                    ));
+                }
+            }
+        }
+
         // one scoped thread per touched shard; disjoint &mut borrows
         // via iter_mut, so no locking is needed
         let mut shard_results: Vec<
@@ -538,13 +641,14 @@ impl<'rt> Fleet<'rt> {
         > = (0..n).map(|_| None).collect();
         std::thread::scope(|s| {
             let mut handles = Vec::new();
-            for ((slot, work), res) in self
+            for (((slot, work), res), skip) in self
                 .shards
                 .iter_mut()
                 .zip(&per_shard)
                 .zip(shard_results.iter_mut())
+                .zip(&skipped)
             {
-                if work.is_empty() {
+                if work.is_empty() || skip.is_some() {
                     continue;
                 }
                 let Some(st) = slot.as_mut() else { continue };
@@ -572,22 +676,39 @@ impl<'rt> Fleet<'rt> {
         let mut shards_touched = 0usize;
         let mut replays_run = 0usize;
         let mut applied_steps_total = 0u64;
+        for (shard, msg) in skipped.iter().enumerate() {
+            let Some(msg) = msg else { continue };
+            for (input, _) in &per_shard[shard] {
+                outcomes[*input].shards.push(ShardOutcome {
+                    shard: shard as u32,
+                    outcome: Err(anyhow::anyhow!("{msg}")),
+                    quarantined: true,
+                });
+            }
+        }
         for (shard, res) in shard_results.into_iter().enumerate() {
             let Some(res) = res else { continue };
             shards_touched += 1;
             match res {
                 Err(e) => {
                     let msg = format!("{e:#}");
+                    // quarantine the shard (or double an expired
+                    // quarantine's backoff after a failed probe)
+                    self.note_shard_failure(shard, msg.clone());
                     for (input, _) in &per_shard[shard] {
                         outcomes[*input].shards.push(ShardOutcome {
                             shard: shard as u32,
                             outcome: Err(anyhow::anyhow!(
                                 "shard {shard} batch failed: {msg}"
                             )),
+                            quarantined: false,
                         });
                     }
                 }
                 Ok(batch) => {
+                    // a successful drain (including a half-open probe)
+                    // restores the shard to full health
+                    self.health[shard] = ShardHealth::Healthy;
                     replays_run += batch.replays_run;
                     applied_steps_total += batch.applied_steps as u64;
                     for ((input, _), out) in
@@ -596,6 +717,7 @@ impl<'rt> Fleet<'rt> {
                         outcomes[*input].shards.push(ShardOutcome {
                             shard: shard as u32,
                             outcome: out,
+                            quarantined: false,
                         });
                     }
                 }
@@ -622,6 +744,21 @@ impl<'rt> Fleet<'rt> {
         &mut self,
         id_prefix: &str,
     ) -> Vec<(u32, anyhow::Result<LaunderOutcome>)> {
+        // quarantined shards sit laundering out until their cooldown
+        // expires (the drain path owns the tick-down; here we only
+        // observe) — a shard that cannot execute safely should not be
+        // rewriting its checkpoint lineage either
+        let cooling: Vec<bool> = self
+            .health
+            .iter()
+            .map(|h| {
+                matches!(
+                    h,
+                    ShardHealth::Quarantined { cooldown_drains, .. }
+                        if *cooldown_drains > 0
+                )
+            })
+            .collect();
         let mut results: Vec<Option<anyhow::Result<LaunderOutcome>>> =
             (0..self.shards.len()).map(|_| None).collect();
         std::thread::scope(|s| {
@@ -633,6 +770,9 @@ impl<'rt> Fleet<'rt> {
                 .zip(results.iter_mut())
             {
                 let Some(st) = slot.as_mut() else { continue };
+                if cooling[i] {
+                    continue;
+                }
                 // each shard consults ITS policy — due shards launder,
                 // quiet shards are skipped without taking any lock
                 let due = matches!(
@@ -655,6 +795,18 @@ impl<'rt> Fleet<'rt> {
                 }));
             }
         });
+        // a failed launder is a shard-level infrastructure failure too:
+        // quarantine it so the drain path stops routing erasure work at
+        // a shard whose lineage machinery is misbehaving
+        for (i, r) in results.iter().enumerate() {
+            match r {
+                Some(Err(e)) => {
+                    self.note_shard_failure(i, format!("launder: {e:#}"));
+                }
+                Some(Ok(_)) => self.health[i] = ShardHealth::Healthy,
+                None => {}
+            }
+        }
         results
             .into_iter()
             .enumerate()
@@ -702,6 +854,21 @@ impl<'rt> Fleet<'rt> {
         for (i, slot) in self.shards.iter().enumerate() {
             let mut j = Json::obj();
             j.set("shard", i as u64);
+            match &self.health[i] {
+                ShardHealth::Healthy => {
+                    j.set("health", "healthy");
+                }
+                ShardHealth::Quarantined {
+                    reason,
+                    failures,
+                    cooldown_drains,
+                } => {
+                    j.set("health", "quarantined")
+                        .set("quarantine_reason", reason.as_str())
+                        .set("quarantine_failures", *failures as u64)
+                        .set("retry_in_drains", *cooldown_drains as u64);
+                }
+            }
             match slot {
                 None => {
                     j.set("empty", true);
@@ -738,6 +905,7 @@ impl<'rt> Fleet<'rt> {
         out.set("n_shards", self.spec.n_shards)
             .set("salt_hex", format!("{:016x}", self.spec.salt))
             .set("total_samples", self.corpus.len())
+            .set("quarantined_shards", self.quarantined_count() as u64)
             .set("shards", Json::Arr(rows));
         out
     }

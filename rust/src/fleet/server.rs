@@ -19,141 +19,133 @@
 //! members owned by other shards are dropped) — an explicit operator
 //! override; the default routed submit erases the full closure.
 //!
-//! The queue is in-memory (a fleet restart re-submits from the caller;
-//! per-shard durability — WAL, manifests, forgotten sets — lives in the
-//! shard run dirs themselves).
+//! ## Durability
+//!
+//! The queue is the shared [`crate::server::JobQueue`], instantiated
+//! over the fleet's shard-addressable payload — the durability
+//! machinery (fsync-before-ack, torn-final-line tolerance, seq
+//! high-water compaction) exists exactly once for both servers.
+//! [`serve_fleet`] puts the WAL at `<fleet root>/jobs.wal`: an acked
+//! fleet submit survives a crash and is re-queued under its original
+//! job id on restart, exactly like the single-system server.
+//!
+//! ## Degraded mode
+//!
+//! Shard isolation lives in [`super::Fleet`]: a shard whose batch (or
+//! launder) errors is quarantined with drain-counted backoff, its jobs
+//! get typed `quarantined` outcomes, and healthy shards keep draining.
+//! `fleet_status` carries per-shard `health` rows.
 
 use std::net::{TcpListener, TcpStream};
-use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::{Arc, Condvar, Mutex};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
 use std::time::Duration;
 
-use crate::controller::ForgetRequest;
-use crate::server::JobStatus;
+use crate::controller::{ForgetRequest, UnlearnError};
+use crate::server::{JobPayload, JobQueue, JobStatus};
 use crate::util::json::{parse, Json};
 
 use super::Fleet;
 
-struct FleetJob {
-    job_id: String,
-    req: ForgetRequest,
+/// The fleet queue payload: a forget request plus the optional
+/// shard-addressed routing override.
+#[derive(Debug, Clone)]
+pub struct FleetJob {
+    pub req: ForgetRequest,
     /// Shard-addressed override (None = route by ownership).
-    shard: Option<u32>,
-    status: JobStatus,
-    result: Option<Json>,
+    pub shard: Option<u32>,
+}
+
+impl JobPayload for FleetJob {
+    fn request_id(&self) -> &str {
+        &self.req.id
+    }
+
+    fn kind(&self) -> &'static str {
+        "forget"
+    }
+
+    fn to_json(&self) -> Json {
+        let mut j = Json::obj();
+        j.set("kind", "forget")
+            .set("id", self.req.id.as_str())
+            .set(
+                "user",
+                self.req.user.map(Json::from).unwrap_or(Json::Null),
+            )
+            .set(
+                "sample_ids",
+                Json::Arr(
+                    self.req.sample_ids.iter().map(|&s| s.into()).collect(),
+                ),
+            )
+            .set(
+                "urgency",
+                match self.req.urgency {
+                    crate::controller::Urgency::High => "high",
+                    crate::controller::Urgency::Normal => "normal",
+                },
+            )
+            .set(
+                "shard",
+                self.shard.map(Json::from).unwrap_or(Json::Null),
+            );
+        j
+    }
+
+    fn from_json(j: &Json) -> anyhow::Result<FleetJob> {
+        Ok(FleetJob {
+            req: crate::server::parse_request(j)?,
+            shard: j.get("shard").and_then(|v| v.as_u64()).map(|s| s as u32),
+        })
+    }
 }
 
 /// Shared fleet-server state: protocol core + worker run against this.
 pub struct FleetCtx<'a, 'rt> {
     pub fleet: &'a Mutex<Fleet<'rt>>,
-    jobs: Mutex<Vec<FleetJob>>,
-    cv: Condvar,
-    seq: AtomicU64,
+    pub jobs: JobQueue<FleetJob>,
     pub shutdown: AtomicBool,
     pub coalesce_window: Duration,
 }
 
-fn recover<T>(r: Result<T, std::sync::PoisonError<T>>) -> T {
-    r.unwrap_or_else(|p| p.into_inner())
-}
-
 impl<'a, 'rt> FleetCtx<'a, 'rt> {
+    /// In-memory queue (tests; callers that re-submit after a restart).
     pub fn new(fleet: &'a Mutex<Fleet<'rt>>) -> FleetCtx<'a, 'rt> {
+        Self::build(fleet, JobQueue::new())
+    }
+
+    /// Durable queue: accepted jobs are WAL-persisted before the ack
+    /// and re-queued — original ids preserved — when the fleet root is
+    /// reopened.
+    pub fn with_jobs_wal(
+        fleet: &'a Mutex<Fleet<'rt>>,
+        wal_path: &std::path::Path,
+    ) -> anyhow::Result<FleetCtx<'a, 'rt>> {
+        Ok(Self::build(fleet, JobQueue::with_wal(wal_path)?))
+    }
+
+    fn build(
+        fleet: &'a Mutex<Fleet<'rt>>,
+        jobs: JobQueue<FleetJob>,
+    ) -> FleetCtx<'a, 'rt> {
         FleetCtx {
             fleet,
-            jobs: Mutex::new(Vec::new()),
-            cv: Condvar::new(),
-            seq: AtomicU64::new(1),
+            jobs,
             shutdown: AtomicBool::new(false),
             coalesce_window: Duration::from_millis(15),
         }
     }
 
-    fn submit(&self, req: ForgetRequest, shard: Option<u32>) -> String {
-        let job_id = format!("job-{}", self.seq.fetch_add(1, Ordering::SeqCst));
-        recover(self.jobs.lock()).push(FleetJob {
-            job_id: job_id.clone(),
-            req,
-            shard,
-            status: JobStatus::Queued,
-            result: None,
-        });
-        self.cv.notify_all();
-        job_id
-    }
-
     pub fn queued_len(&self) -> usize {
-        recover(self.jobs.lock())
-            .iter()
-            .filter(|j| j.status == JobStatus::Queued)
-            .count()
+        self.jobs.queued_len()
     }
 
     /// Jobs not yet completed (queued + running) — the backlog number,
     /// mirroring the single-system `JobQueue::pending_len`.
     pub fn pending_len(&self) -> usize {
-        recover(self.jobs.lock())
-            .iter()
-            .filter(|j| {
-                matches!(j.status, JobStatus::Queued | JobStatus::Running)
-            })
-            .count()
+        self.jobs.pending_len()
     }
-
-    fn poll(&self, job_id: &str) -> Option<Json> {
-        recover(self.jobs.lock())
-            .iter()
-            .find(|j| j.job_id == job_id)
-            .map(job_json)
-    }
-
-    fn publish(&self, job_id: &str, status: JobStatus, result: Json) {
-        let mut g = recover(self.jobs.lock());
-        if let Some(j) = g.iter_mut().find(|j| j.job_id == job_id) {
-            j.status = status;
-            j.result = Some(result);
-        }
-    }
-
-    fn take_queued(&self) -> Vec<(String, ForgetRequest, Option<u32>)> {
-        let mut g = recover(self.jobs.lock());
-        let mut out = Vec::new();
-        for j in g.iter_mut() {
-            if j.status == JobStatus::Queued {
-                j.status = JobStatus::Running;
-                out.push((j.job_id.clone(), j.req.clone(), j.shard));
-            }
-        }
-        out
-    }
-
-    fn wait_for_work(&self) -> bool {
-        let mut g = recover(self.jobs.lock());
-        loop {
-            if g.iter().any(|j| j.status == JobStatus::Queued) {
-                return true;
-            }
-            if self.shutdown.load(Ordering::SeqCst) {
-                return false;
-            }
-            let (g2, _) =
-                recover(self.cv.wait_timeout(g, Duration::from_millis(50)));
-            g = g2;
-        }
-    }
-}
-
-fn job_json(j: &FleetJob) -> Json {
-    let mut o = Json::obj();
-    o.set("job", j.job_id.as_str())
-        .set("request_id", j.req.id.as_str())
-        .set(
-            "shard",
-            j.shard.map(Json::from).unwrap_or(Json::Null),
-        )
-        .set("status", j.status.as_str())
-        .set("result", j.result.clone().unwrap_or(Json::Null));
-    o
 }
 
 /// Drain every queued job as ONE fleet batch: routed jobs scatter by
@@ -164,40 +156,46 @@ fn job_json(j: &FleetJob) -> Json {
 /// (fleet-level auto-laundering, keyed off the burst's first job id).
 /// Returns the number of jobs processed.
 pub fn drain_fleet_once(ctx: &FleetCtx<'_, '_>) -> usize {
-    let batch = ctx.take_queued();
+    let batch = ctx.jobs.take_queued();
     if batch.is_empty() {
         return 0;
     }
     match ctx.fleet.lock() {
         Err(_) => {
-            for (job_id, _, _) in &batch {
+            // typed poison containment, same taxonomy as the
+            // single-system server: the fleet write plane fails closed
+            // with a machine-readable kind, not a stringly error
+            let err = UnlearnError::LockPoisoned;
+            for (job_id, _) in &batch {
                 let mut r = Json::obj();
-                r.set("ok", false).set("error", "fleet lock poisoned");
-                ctx.publish(job_id, JobStatus::Failed, r);
+                r.set("ok", false)
+                    .set("error", err.to_string())
+                    .set("error_kind", err.kind());
+                ctx.jobs.publish(job_id, JobStatus::Failed, r);
             }
         }
         Ok(mut fleet) => {
             let reqs: Vec<ForgetRequest> =
-                batch.iter().map(|(_, r, _)| r.clone()).collect();
+                batch.iter().map(|(_, j)| j.req.clone()).collect();
             let routed: Result<Vec<_>, _> = batch
                 .iter()
-                .map(|(_, r, shard)| match shard {
-                    Some(s) => fleet.route_to_shard(r, *s),
-                    None => fleet.route(r),
+                .map(|(_, j)| match j.shard {
+                    Some(s) => fleet.route_to_shard(&j.req, s),
+                    None => fleet.route(&j.req),
                 })
                 .collect();
             let outcome = routed
                 .and_then(|routed| fleet.execute_routed(&reqs, routed));
             match outcome {
                 Err(e) => {
-                    for (job_id, _, _) in &batch {
+                    for (job_id, _) in &batch {
                         let mut r = Json::obj();
                         r.set("ok", false).set("error", format!("{e:#}"));
-                        ctx.publish(job_id, JobStatus::Failed, r);
+                        ctx.jobs.publish(job_id, JobStatus::Failed, r);
                     }
                 }
                 Ok(out) => {
-                    for ((job_id, _, _), fo) in
+                    for ((job_id, _), fo) in
                         batch.iter().zip(out.outcomes.into_iter())
                     {
                         // ok = no shard errored.  A duplicate-suppressed
@@ -205,7 +203,10 @@ pub fn drain_fleet_once(ctx: &FleetCtx<'_, '_>) -> usize {
                         // a SUCCESS — the erasure is committed — exactly
                         // like the single-system server's outcome_json;
                         // the per-shard/overall `executed` fields carry
-                        // the suppression detail.
+                        // the suppression detail.  A quarantined shard's
+                        // share fails with "status":"quarantined" so the
+                        // caller can tell "skipped by isolation" from
+                        // "attempted and failed".
                         let ok =
                             fo.shards.iter().all(|s| s.outcome.is_ok());
                         let mut r = fo.to_json();
@@ -225,15 +226,15 @@ pub fn drain_fleet_once(ctx: &FleetCtx<'_, '_>) -> usize {
                         } else {
                             JobStatus::Done
                         };
-                        ctx.publish(job_id, status, r);
+                        ctx.jobs.publish(job_id, status, r);
                     }
                     // per-shard auto-laundering: each shard's OWN policy
                     // decides.  launder_due appends the shard's lineage
                     // generation to the key, so the burst-derived prefix
                     // is retry-idempotent yet never aliases across a
-                    // restart of this in-memory job counter (a committed
-                    // pass bumps the generation; an uncommitted one left
-                    // no manifest key to collide with).
+                    // restart of the job counter (a committed pass bumps
+                    // the generation; an uncommitted one left no
+                    // manifest key to collide with).
                     if fleet.auto_launder {
                         let prefix =
                             format!("auto-launder-{}", batch[0].0);
@@ -259,11 +260,21 @@ pub fn drain_fleet_once(ctx: &FleetCtx<'_, '_>) -> usize {
     batch.len()
 }
 
-/// The fleet queue worker (mirrors [`crate::server::run_worker`]).
+/// The fleet queue worker (mirrors [`crate::server::run_worker`]): a
+/// panic inside a drain fails the claimed jobs loudly instead of
+/// stranding them as running-forever while the queue keeps acking.
 pub fn run_fleet_worker(ctx: &FleetCtx<'_, '_>) {
-    while ctx.wait_for_work() {
+    while ctx.jobs.wait_for_work() {
         std::thread::sleep(ctx.coalesce_window);
-        drain_fleet_once(ctx);
+        let drained = std::panic::catch_unwind(
+            std::panic::AssertUnwindSafe(|| drain_fleet_once(ctx)),
+        );
+        if drained.is_err() {
+            ctx.jobs.fail_running(
+                "worker panicked during drain (fleet lock poisoned — \
+                 fleet write plane fails closed)",
+            );
+        }
     }
 }
 
@@ -274,30 +285,12 @@ pub fn dispatch_fleet(line: &str, ctx: &FleetCtx<'_, '_>) -> Json {
         Err(e) => {
             let mut j = Json::obj();
             j.set("ok", false).set("error", format!("{e:#}"));
+            if let Some(ue) = e.downcast_ref::<UnlearnError>() {
+                j.set("error_kind", ue.kind());
+            }
             j
         }
     }
-}
-
-fn parse_request(req: &Json) -> anyhow::Result<ForgetRequest> {
-    let id = req
-        .get("id")
-        .and_then(|v| v.as_str())
-        .ok_or_else(|| anyhow::anyhow!("request needs id"))?
-        .to_string();
-    Ok(ForgetRequest {
-        id,
-        user: req.get("user").and_then(|v| v.as_u64()).map(|u| u as u32),
-        sample_ids: req
-            .get("sample_ids")
-            .and_then(|v| v.as_arr())
-            .map(|a| a.iter().filter_map(|x| x.as_u64()).collect())
-            .unwrap_or_default(),
-        urgency: match req.get("urgency").and_then(|v| v.as_str()) {
-            Some("high") => crate::controller::Urgency::High,
-            _ => crate::controller::Urgency::Normal,
-        },
-    })
 }
 
 fn dispatch_inner(
@@ -315,33 +308,45 @@ fn dispatch_inner(
             let fleet = ctx
                 .fleet
                 .lock()
-                .map_err(|_| anyhow::anyhow!("fleet lock poisoned"))?;
+                .map_err(|_| anyhow::Error::new(UnlearnError::LockPoisoned))?;
             out = fleet.status_json();
             out.set("ok", true)
                 .set("queued_jobs", ctx.queued_len())
                 // backlog incl. in-flight work: a job the worker marked
                 // Running must not read as an empty queue
-                .set("pending_jobs", ctx.pending_len());
+                .set("pending_jobs", ctx.pending_len())
+                .set(
+                    "jobs_wal_bytes",
+                    ctx.jobs
+                        .wal_bytes()
+                        .map(Json::from)
+                        .unwrap_or(Json::Null),
+                );
         }
         "submit" => {
-            if ctx.shutdown.load(Ordering::SeqCst) {
-                anyhow::bail!("server is shutting down — submission refused");
-            }
-            let freq = parse_request(&req)?;
+            let freq = crate::server::parse_request(&req)?;
             let shard =
                 req.get("shard").and_then(|v| v.as_u64()).map(|s| s as u32);
             if let Some(s) = shard {
-                let fleet = ctx
-                    .fleet
-                    .lock()
-                    .map_err(|_| anyhow::anyhow!("fleet lock poisoned"))?;
+                let fleet = ctx.fleet.lock().map_err(|_| {
+                    anyhow::Error::new(UnlearnError::LockPoisoned)
+                })?;
                 anyhow::ensure!(
                     s < fleet.n_shards(),
                     "shard {s} out of range (fleet has {})",
                     fleet.n_shards()
                 );
             }
-            let job = ctx.submit(freq, shard);
+            // the queue refuses after close() (shutdown) and errors when
+            // the durability promise cannot be made (WAL write failed)
+            let job = ctx
+                .jobs
+                .submit(FleetJob { req: freq, shard })?
+                .ok_or_else(|| {
+                    anyhow::anyhow!(
+                        "server is shutting down — submission refused"
+                    )
+                })?;
             out.set("ok", true)
                 .set("job", job.as_str())
                 .set("status", "queued");
@@ -351,7 +356,7 @@ fn dispatch_inner(
                 .get("job")
                 .and_then(|v| v.as_str())
                 .ok_or_else(|| anyhow::anyhow!("poll needs job"))?;
-            match ctx.poll(job) {
+            match ctx.jobs.poll(job) {
                 Some(j) => {
                     out.set("ok", true);
                     if let Json::Obj(m) = &j {
@@ -364,16 +369,14 @@ fn dispatch_inner(
             }
         }
         "jobs" => {
-            let g = recover(ctx.jobs.lock());
-            out.set("ok", true)
-                .set("jobs", Json::Arr(g.iter().map(job_json).collect()));
+            out.set("ok", true).set("jobs", ctx.jobs.jobs_json());
         }
         "plan" => {
-            let freq = parse_request(&req)?;
+            let freq = crate::server::parse_request(&req)?;
             let fleet = ctx
                 .fleet
                 .lock()
-                .map_err(|_| anyhow::anyhow!("fleet lock poisoned"))?;
+                .map_err(|_| anyhow::Error::new(UnlearnError::LockPoisoned))?;
             out = fleet.plan(&freq)?.to_json();
             out.set("ok", true);
         }
@@ -386,7 +389,7 @@ fn dispatch_inner(
             let mut fleet = ctx
                 .fleet
                 .lock()
-                .map_err(|_| anyhow::anyhow!("fleet lock poisoned"))?;
+                .map_err(|_| anyhow::Error::new(UnlearnError::LockPoisoned))?;
             let mut rows = Vec::new();
             for (shard, res) in fleet.launder_due(&id) {
                 let mut j = Json::obj();
@@ -410,7 +413,7 @@ fn dispatch_inner(
             let fleet = ctx
                 .fleet
                 .lock()
-                .map_err(|_| anyhow::anyhow!("fleet lock poisoned"))?;
+                .map_err(|_| anyhow::Error::new(UnlearnError::LockPoisoned))?;
             let u = fleet.utility_ensemble()?;
             let mut rows = Vec::new();
             for (shard, ppl) in u.per_shard {
@@ -423,8 +426,8 @@ fn dispatch_inner(
                 .set("per_shard", Json::Arr(rows));
         }
         "shutdown" => {
+            ctx.jobs.close(); // refuse new submissions, wake the worker
             ctx.shutdown.store(true, Ordering::SeqCst);
-            ctx.cv.notify_all();
             out.set("ok", true).set("shutting_down", true);
         }
         other => anyhow::bail!("unknown fleet op {other:?}"),
@@ -432,7 +435,10 @@ fn dispatch_inner(
     Ok(out)
 }
 
-/// Serve a fleet on `addr` until a shutdown op arrives.
+/// Serve a fleet on `addr` until a shutdown op arrives.  The jobs WAL
+/// lives at `<fleet root>/jobs.wal`: reopening the fleet root recovers
+/// every accepted-but-incomplete job under its original id, so a crash
+/// between ack and drain loses nothing.
 pub fn serve_fleet(
     fleet: Arc<Mutex<Fleet<'_>>>,
     addr: &str,
@@ -440,7 +446,20 @@ pub fn serve_fleet(
     let listener = TcpListener::bind(addr)?;
     let local = listener.local_addr()?;
     eprintln!("unlearn fleet admin server listening on {local}");
-    let ctx = FleetCtx::new(&fleet);
+    let wal_path = {
+        let f = fleet
+            .lock()
+            .map_err(|_| anyhow::Error::new(UnlearnError::LockPoisoned))?;
+        f.root.join("jobs.wal")
+    };
+    let ctx = FleetCtx::with_jobs_wal(&fleet, &wal_path)?;
+    let recovered = ctx.jobs.queued_len();
+    if recovered > 0 {
+        eprintln!(
+            "recovered {recovered} pending fleet job(s) from {}",
+            wal_path.display()
+        );
+    }
     std::thread::scope(|s| {
         s.spawn(|| run_fleet_worker(&ctx));
         for stream in listener.incoming() {

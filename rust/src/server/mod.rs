@@ -93,6 +93,23 @@ impl JobStatus {
     }
 }
 
+/// A job queue payload: what a queued job carries between `submit` and
+/// the worker's drain.  The queue itself is payload-agnostic — the
+/// single-system server queues [`JobRequest`]s, the fleet server queues
+/// shard-addressable forget requests — so the durability machinery
+/// (fsync-before-ack, torn-final-line tolerance, seq high-water
+/// compaction) exists exactly once.
+pub trait JobPayload: Clone + Send + 'static {
+    /// The idempotency/request key shown in `jobs`/`poll`.
+    fn request_id(&self) -> &str;
+    /// Stable wire discriminator for `jobs`/`poll` rows.
+    fn kind(&self) -> &'static str;
+    /// Wire/WAL encoding (the `request` object of a WAL submit event).
+    fn to_json(&self) -> Json;
+    /// Decode a WAL submit event's `request` object.
+    fn from_json(j: &Json) -> anyhow::Result<Self>;
+}
+
 /// What a job executes when the worker drains it.
 #[derive(Debug, Clone)]
 pub enum JobRequest {
@@ -103,8 +120,7 @@ pub enum JobRequest {
     Launder { id: String },
 }
 
-impl JobRequest {
-    /// The idempotency/request key shown in `jobs`/`poll`.
+impl JobPayload for JobRequest {
     fn request_id(&self) -> &str {
         match self {
             JobRequest::Forget(r) => &r.id,
@@ -112,7 +128,13 @@ impl JobRequest {
         }
     }
 
-    /// Wire/WAL encoding.
+    fn kind(&self) -> &'static str {
+        match self {
+            JobRequest::Forget(_) => "forget",
+            JobRequest::Launder { .. } => "launder",
+        }
+    }
+
     fn to_json(&self) -> Json {
         let mut j = Json::obj();
         match self {
@@ -160,9 +182,9 @@ impl JobRequest {
 }
 
 /// One submitted job.
-struct Job {
+struct Job<P> {
     job_id: String,
-    request: JobRequest,
+    request: P,
     status: JobStatus,
     result: Option<Json>,
 }
@@ -179,17 +201,19 @@ const COMPLETED_RETENTION: usize = 1024;
 /// either lands before `close()` (the worker's final drain sees it) or
 /// observes `closed` and is refused — an acked job can never slip in
 /// after the worker's last look.
-struct JobTable {
-    jobs: Vec<Job>,
+struct JobTable<P> {
+    jobs: Vec<Job<P>>,
     closed: bool,
 }
 
-/// FIFO job table + worker wakeup.  Guards plain data only, so poisoned
-/// guards are safely recovered via `into_inner`.  With a WAL path set,
-/// accepted jobs are persisted before they are acked and marked on
-/// completion, so a restart can re-queue the pending suffix.
-pub struct JobQueue {
-    table: Mutex<JobTable>,
+/// FIFO job table + worker wakeup, generic over its payload (the
+/// single-system server uses the [`JobRequest`] default; the fleet
+/// server its shard-addressable payload).  Guards plain data only, so
+/// poisoned guards are safely recovered via `into_inner`.  With a WAL
+/// path set, accepted jobs are persisted before they are acked and
+/// marked on completion, so a restart can re-queue the pending suffix.
+pub struct JobQueue<P: JobPayload = JobRequest> {
+    table: Mutex<JobTable<P>>,
     cv: Condvar,
     seq: AtomicU64,
     /// Append-only jobs WAL (one JSON event per line).  Written under
@@ -201,8 +225,8 @@ fn recover<T>(r: Result<T, std::sync::PoisonError<T>>) -> T {
     r.unwrap_or_else(|p| p.into_inner())
 }
 
-impl JobQueue {
-    fn new() -> JobQueue {
+impl<P: JobPayload> JobQueue<P> {
+    pub(crate) fn new() -> JobQueue<P> {
         JobQueue {
             table: Mutex::new(JobTable {
                 jobs: Vec::new(),
@@ -217,8 +241,8 @@ impl JobQueue {
     /// Open a WAL-backed queue, re-queueing every job the WAL records
     /// as submitted but not completed (original job ids preserved; the
     /// sequence counter resumes past the highest recorded id).
-    pub fn with_wal(path: &Path) -> anyhow::Result<JobQueue> {
-        let mut jobs: Vec<Job> = Vec::new();
+    pub fn with_wal(path: &Path) -> anyhow::Result<JobQueue<P>> {
+        let mut jobs: Vec<Job<P>> = Vec::new();
         let mut max_id = 0u64;
         if path.exists() {
             let text = std::fs::read_to_string(path)?;
@@ -270,7 +294,7 @@ impl JobQueue {
                         })?;
                         jobs.push(Job {
                             job_id,
-                            request: JobRequest::from_json(req)?,
+                            request: P::from_json(req)?,
                             status: JobStatus::Queued,
                             result: None,
                         });
@@ -323,13 +347,13 @@ impl JobQueue {
         let Some(path) = &self.wal_path else {
             return Ok(());
         };
-        let mut f = std::fs::OpenOptions::new()
-            .create(true)
-            .append(true)
-            .open(path)?;
-        writeln!(f, "{}", event.encode())?;
+        // Two distinct fault points: the append and (for acked submits)
+        // the fsync behind the durability promise.
+        let mut line = event.encode();
+        line.push('\n');
+        crate::util::faultfs::append(path, line.as_bytes())?;
         if sync {
-            f.sync_all()?;
+            crate::util::faultfs::fsync(path)?;
         }
         Ok(())
     }
@@ -338,10 +362,7 @@ impl JobQueue {
     /// when the queue has been closed for shutdown, and an error when
     /// the durability promise cannot be made (jobs-WAL write failed —
     /// the job is NOT queued).
-    pub fn submit(
-        &self,
-        request: JobRequest,
-    ) -> anyhow::Result<Option<String>> {
+    pub fn submit(&self, request: P) -> anyhow::Result<Option<String>> {
         let mut g = recover(self.table.lock());
         if g.closed {
             return Ok(None);
@@ -415,7 +436,7 @@ impl JobQueue {
     }
 
     /// Atomically claim every queued job (marks them Running).
-    fn take_queued(&self) -> Vec<(String, JobRequest)> {
+    pub(crate) fn take_queued(&self) -> Vec<(String, P)> {
         let mut g = recover(self.table.lock());
         let mut out = Vec::new();
         for j in g.jobs.iter_mut() {
@@ -427,7 +448,7 @@ impl JobQueue {
         out
     }
 
-    fn publish(&self, job_id: &str, status: JobStatus, result: Json) {
+    pub(crate) fn publish(&self, job_id: &str, status: JobStatus, result: Json) {
         let mut g = recover(self.table.lock());
         if let Some(j) = g.jobs.iter_mut().find(|j| j.job_id == job_id) {
             j.status = status;
@@ -470,7 +491,7 @@ impl JobQueue {
     }
 
     /// Fail every job stuck in Running (the worker died mid-drain).
-    fn fail_running(&self, reason: &str) {
+    pub(crate) fn fail_running(&self, reason: &str) {
         let mut g = recover(self.table.lock());
         for j in g.jobs.iter_mut() {
             if j.status == JobStatus::Running {
@@ -489,7 +510,7 @@ impl JobQueue {
 
     /// Block until a job is queued; returns false once the queue is
     /// closed AND empty (everything acknowledged has been claimed).
-    fn wait_for_work(&self) -> bool {
+    pub(crate) fn wait_for_work(&self) -> bool {
         let mut g = recover(self.table.lock());
         loop {
             if g.jobs.iter().any(|j| j.status == JobStatus::Queued) {
@@ -506,17 +527,11 @@ impl JobQueue {
     }
 }
 
-fn job_json(j: &Job) -> Json {
+fn job_json<P: JobPayload>(j: &Job<P>) -> Json {
     let mut o = Json::obj();
     o.set("job", j.job_id.as_str())
         .set("request_id", j.request.request_id())
-        .set(
-            "kind",
-            match &j.request {
-                JobRequest::Forget(_) => "forget",
-                JobRequest::Launder { .. } => "launder",
-            },
-        )
+        .set("kind", j.request.kind())
         .set("status", j.status.as_str())
         .set("result", j.result.clone().unwrap_or(Json::Null));
     o
@@ -898,7 +913,10 @@ fn handle_conn(
 ///   this thread's memory without bound.
 /// - Shutdown poke: after serving the op that flipped the flag, a
 ///   self-connect unblocks the acceptor even with no further clients.
-pub(crate) fn serve_line_conn(
+///
+/// `pub` so the adversarial transport suite can drive it over a real
+/// socket pair without standing up a full system behind it.
+pub fn serve_line_conn(
     stream: TcpStream,
     local: SocketAddr,
     shutdown: &AtomicBool,
@@ -959,8 +977,9 @@ pub fn dispatch(line: &str, ctx: &ServerCtx<'_, '_>) -> Json {
     }
 }
 
-/// Parse the request fields shared by `submit`, `plan` and `forget`.
-fn parse_request(req: &Json) -> anyhow::Result<ForgetRequest> {
+/// Parse the request fields shared by `submit`, `plan` and `forget`
+/// (and, via the fleet payload, the fleet server's ops).
+pub(crate) fn parse_request(req: &Json) -> anyhow::Result<ForgetRequest> {
     let id = req
         .get("id")
         .and_then(|v| v.as_str())

@@ -1,0 +1,350 @@
+//! Deterministic fault injection for erasure-critical filesystem I/O.
+//!
+//! GDPR-grade deletion is a durability obligation: a crash mid-launder
+//! or a torn WAL write must never resurrect forgotten data or drop an
+//! acked erasure.  Proving that requires *driving* every persistence
+//! sequence through every crash point — so the mutating operations of
+//! the erasure-critical paths (`checkpoint::write_atomic`, CAS object
+//! writes, lineage stage/commit/retire, the IdMap retired sidecar, the
+//! jobs-WAL append+fsync) are routed through this shim.
+//!
+//! Unarmed (the production state) every wrapper is a straight
+//! passthrough to `std::fs` guarded by one relaxed atomic load.  A test
+//! arms an [`Injector`] against a directory *root* (its own tempdir);
+//! only operations whose paths fall under that root are intercepted,
+//! so parallel tests cannot contaminate each other and worker threads
+//! inside scoped thread pools are covered without thread-local plumbing.
+//!
+//! Fault model (all deterministic — philox-seeded, no wall clock):
+//! - [`Plan::Count`]: observe, never interfere.  The crash matrix runs
+//!   each sequence once in count mode to learn its op count `n`, then
+//!   sweeps crash points `0..n`.
+//! - [`Plan::FailAt`]: the k-th matching op returns an I/O error and
+//!   the filesystem stays online — a transient error surfaced to the
+//!   caller's error path.
+//! - [`Plan::CrashAt`]: the k-th matching op fails and every later op
+//!   under the root fails too ("process died here"); with `torn`, a
+//!   crashing write first persists a philox-seeded byte prefix — the
+//!   torn-write model for appends and tmp-file writes.  Recovery is
+//!   modeled by dropping the in-memory state, disarming, and reopening
+//!   through the normal open/recovery paths.
+
+use std::io::{self, Write};
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+
+use crate::util::rng::philox_u64;
+
+/// What an armed injector does to intercepted operations.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Plan {
+    /// Count matching mutating ops without interfering.
+    Count,
+    /// Fail the `op`-th matching operation (0-based) with an I/O error;
+    /// later operations proceed normally.
+    FailAt { op: u64 },
+    /// Crash at the `op`-th matching operation: it fails, and every
+    /// subsequent operation under the same root fails until the
+    /// injector is disarmed.  `torn` persists a philox-seeded byte
+    /// prefix of the crashing write before failing.
+    CrashAt { op: u64, torn: bool, seed: u64 },
+}
+
+#[derive(Debug)]
+struct Inner {
+    root: PathBuf,
+    plan: Plan,
+    ops: AtomicU64,
+    crashed: AtomicBool,
+}
+
+/// How a crashing write would have mutated the file — determines what
+/// a torn prefix does to the bytes already on disk.
+#[derive(Debug, Clone, Copy)]
+enum WriteKind {
+    /// Create/truncate-then-write (tmp files, checksums).
+    Truncate,
+    /// Append to the existing file (WAL lines).
+    Append,
+}
+
+impl Inner {
+    /// Count this op and decide its fate.  `tear` carries the write
+    /// payload when the op is tearable.
+    fn gate(&self, tear: Option<(&Path, &[u8], WriteKind)>) -> io::Result<()> {
+        if self.crashed.load(Ordering::SeqCst) {
+            return Err(io::Error::other(
+                "faultfs: filesystem offline after simulated crash",
+            ));
+        }
+        let idx = self.ops.fetch_add(1, Ordering::SeqCst);
+        match self.plan {
+            Plan::Count => Ok(()),
+            Plan::FailAt { op } if idx == op => Err(io::Error::other(
+                format!("faultfs: injected I/O error at op {idx}"),
+            )),
+            Plan::FailAt { .. } => Ok(()),
+            Plan::CrashAt { op, torn, seed } if idx >= op => {
+                if idx == op && torn {
+                    if let Some((path, bytes, kind)) = tear {
+                        // Persist a deterministic prefix: the bytes that
+                        // "made it to disk" before the crash.  Best
+                        // effort — the crash error is what matters.
+                        let keep = (philox_u64(seed, idx) as usize)
+                            % (bytes.len() + 1);
+                        let _ = match kind {
+                            WriteKind::Truncate => {
+                                std::fs::write(path, &bytes[..keep])
+                            }
+                            WriteKind::Append => {
+                                append_raw(path, &bytes[..keep])
+                            }
+                        };
+                    }
+                }
+                self.crashed.store(true, Ordering::SeqCst);
+                Err(io::Error::other(format!(
+                    "faultfs: simulated crash at op {idx}"
+                )))
+            }
+            Plan::CrashAt { .. } => Ok(()),
+        }
+    }
+}
+
+/// RAII guard for an armed injector — dropping it disarms.
+pub struct Injector {
+    inner: Arc<Inner>,
+}
+
+impl Injector {
+    /// Matching mutating ops observed so far.
+    pub fn ops(&self) -> u64 {
+        self.inner.ops.load(Ordering::SeqCst)
+    }
+
+    /// True once a [`Plan::CrashAt`] point has fired.
+    pub fn crashed(&self) -> bool {
+        self.inner.crashed.load(Ordering::SeqCst)
+    }
+}
+
+impl Drop for Injector {
+    fn drop(&mut self) {
+        let mut reg = registry().lock().unwrap_or_else(|p| p.into_inner());
+        reg.retain(|i| !Arc::ptr_eq(i, &self.inner));
+        ARMED.fetch_sub(1, Ordering::SeqCst);
+    }
+}
+
+/// Count of armed injectors — the one-load fast path for production
+/// code, where every wrapper must cost a relaxed atomic read and
+/// nothing else.
+static ARMED: AtomicU64 = AtomicU64::new(0);
+
+fn registry() -> &'static Mutex<Vec<Arc<Inner>>> {
+    static R: OnceLock<Mutex<Vec<Arc<Inner>>>> = OnceLock::new();
+    R.get_or_init(|| Mutex::new(Vec::new()))
+}
+
+/// Arm an injector over every path under `root`.
+pub fn arm(root: &Path, plan: Plan) -> Injector {
+    let inner = Arc::new(Inner {
+        root: root.to_path_buf(),
+        plan,
+        ops: AtomicU64::new(0),
+        crashed: AtomicBool::new(false),
+    });
+    registry()
+        .lock()
+        .unwrap_or_else(|p| p.into_inner())
+        .push(inner.clone());
+    ARMED.fetch_add(1, Ordering::SeqCst);
+    Injector { inner }
+}
+
+/// The injector (if any) whose root covers one of `paths`.
+fn injector_for(paths: &[&Path]) -> Option<Arc<Inner>> {
+    if ARMED.load(Ordering::Relaxed) == 0 {
+        return None;
+    }
+    let reg = registry().lock().unwrap_or_else(|p| p.into_inner());
+    reg.iter()
+        .find(|i| paths.iter().any(|p| p.starts_with(&i.root)))
+        .cloned()
+}
+
+fn append_raw(path: &Path, bytes: &[u8]) -> io::Result<()> {
+    let mut f = std::fs::OpenOptions::new()
+        .create(true)
+        .append(true)
+        .open(path)?;
+    f.write_all(bytes)
+}
+
+/// Create/truncate `path` and write `bytes` (chunked, so multi-MiB
+/// tensor blobs stream through a bounded buffer).
+pub fn write(path: &Path, bytes: &[u8]) -> io::Result<()> {
+    if let Some(inj) = injector_for(&[path]) {
+        inj.gate(Some((path, bytes, WriteKind::Truncate)))?;
+    }
+    let f = std::fs::File::create(path)?;
+    let mut w = io::BufWriter::with_capacity(1 << 20, f);
+    for chunk in bytes.chunks(1 << 20) {
+        w.write_all(chunk)?;
+    }
+    w.flush()
+}
+
+/// Append `bytes` to `path` (creating it if absent).
+pub fn append(path: &Path, bytes: &[u8]) -> io::Result<()> {
+    if let Some(inj) = injector_for(&[path]) {
+        inj.gate(Some((path, bytes, WriteKind::Append)))?;
+    }
+    append_raw(path, bytes)
+}
+
+/// Flush `path`'s data and metadata to stable storage.  A distinct
+/// crash point from the append that preceded it: the fsync-before-ack
+/// proof needs "crashed after write, before sync" enumerable.
+pub fn fsync(path: &Path) -> io::Result<()> {
+    if let Some(inj) = injector_for(&[path]) {
+        inj.gate(None)?;
+    }
+    std::fs::File::open(path)?.sync_all()
+}
+
+/// Atomic rename (the commit point of every tmp+rename sequence).
+pub fn rename(from: &Path, to: &Path) -> io::Result<()> {
+    if let Some(inj) = injector_for(&[from, to]) {
+        inj.gate(None)?;
+    }
+    std::fs::rename(from, to)
+}
+
+/// File copy (lineage stage adoption of clean checkpoints).
+pub fn copy(from: &Path, to: &Path) -> io::Result<u64> {
+    if let Some(inj) = injector_for(&[from, to]) {
+        inj.gate(None)?;
+    }
+    std::fs::copy(from, to)
+}
+
+/// Remove one file (CAS garbage collection, manifest pruning).
+pub fn remove_file(path: &Path) -> io::Result<()> {
+    if let Some(inj) = injector_for(&[path]) {
+        inj.gate(None)?;
+    }
+    std::fs::remove_file(path)
+}
+
+/// Remove a directory tree (retiring a superseded lineage).
+pub fn remove_dir_all(path: &Path) -> io::Result<()> {
+    if let Some(inj) = injector_for(&[path]) {
+        inj.gate(None)?;
+    }
+    std::fs::remove_dir_all(path)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::tempdir;
+
+    #[test]
+    fn unarmed_is_passthrough() {
+        let dir = tempdir("faultfs-pass");
+        let p = dir.join("a.txt");
+        write(&p, b"hello").unwrap();
+        append(&p, b" world").unwrap();
+        fsync(&p).unwrap();
+        assert_eq!(std::fs::read(&p).unwrap(), b"hello world");
+        rename(&p, &dir.join("b.txt")).unwrap();
+        remove_file(&dir.join("b.txt")).unwrap();
+    }
+
+    #[test]
+    fn count_mode_counts_without_interfering() {
+        let dir = tempdir("faultfs-count");
+        let inj = arm(&dir, Plan::Count);
+        let p = dir.join("a.txt");
+        write(&p, b"x").unwrap();
+        append(&p, b"y").unwrap();
+        fsync(&p).unwrap();
+        rename(&p, &dir.join("b.txt")).unwrap();
+        assert_eq!(inj.ops(), 4);
+        assert!(!inj.crashed());
+        assert_eq!(std::fs::read(dir.join("b.txt")).unwrap(), b"xy");
+    }
+
+    #[test]
+    fn non_matching_root_is_untouched() {
+        let dir = tempdir("faultfs-scope-a");
+        let other = tempdir("faultfs-scope-b");
+        let inj = arm(&dir, Plan::CrashAt { op: 0, torn: false, seed: 1 });
+        // ops outside the armed root pass through and are not counted
+        write(&other.join("a.txt"), b"ok").unwrap();
+        assert_eq!(inj.ops(), 0);
+        assert!(write(&dir.join("a.txt"), b"no").is_err());
+    }
+
+    #[test]
+    fn fail_at_is_transient() {
+        let dir = tempdir("faultfs-failat");
+        let inj = arm(&dir, Plan::FailAt { op: 1 });
+        let p = dir.join("a.txt");
+        write(&p, b"one").unwrap(); // op 0: ok
+        assert!(write(&p, b"two").is_err()); // op 1: injected error
+        write(&p, b"three").unwrap(); // op 2: back online
+        assert_eq!(std::fs::read(&p).unwrap(), b"three");
+        assert!(!inj.crashed());
+    }
+
+    #[test]
+    fn crash_takes_filesystem_offline() {
+        let dir = tempdir("faultfs-crash");
+        let inj = arm(&dir, Plan::CrashAt { op: 1, torn: false, seed: 7 });
+        let p = dir.join("a.txt");
+        write(&p, b"pre").unwrap();
+        assert!(write(&p, b"crash").is_err());
+        assert!(inj.crashed());
+        assert!(append(&p, b"post").is_err());
+        assert!(remove_file(&p).is_err());
+        // the crash-point write (torn=false) left no partial effect
+        assert_eq!(std::fs::read(&p).unwrap(), b"pre");
+        drop(inj); // disarm = recovery boundary
+        write(&p, b"recovered").unwrap();
+    }
+
+    #[test]
+    fn torn_write_persists_philox_prefix() {
+        let dir = tempdir("faultfs-torn");
+        let p = dir.join("wal.log");
+        append(&p, b"line-1\n").unwrap();
+        let seed = 99u64;
+        let inj = arm(&dir, Plan::CrashAt { op: 0, torn: true, seed });
+        let payload = b"line-2-payload\n";
+        assert!(append(&p, payload).is_err());
+        drop(inj);
+        let keep = (philox_u64(seed, 0) as usize) % (payload.len() + 1);
+        let mut expect = b"line-1\n".to_vec();
+        expect.extend_from_slice(&payload[..keep]);
+        assert_eq!(std::fs::read(&p).unwrap(), expect, "prefix of len {keep}");
+        // determinism: same seed, same tear
+        assert_eq!(
+            (philox_u64(seed, 0) as usize) % (payload.len() + 1),
+            keep
+        );
+    }
+
+    #[test]
+    fn drop_disarms() {
+        let dir = tempdir("faultfs-drop");
+        {
+            let _inj = arm(&dir, Plan::CrashAt { op: 0, torn: false, seed: 1 });
+            assert!(write(&dir.join("a"), b"x").is_err());
+        }
+        write(&dir.join("a"), b"x").unwrap();
+    }
+}

@@ -4,6 +4,7 @@
 pub mod bytes;
 pub mod cli;
 pub mod compress;
+pub mod faultfs;
 pub mod hashing;
 pub mod json;
 pub mod prop;

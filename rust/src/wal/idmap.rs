@@ -19,7 +19,6 @@
 
 use std::collections::{HashMap, HashSet};
 use std::fs;
-use std::io::Write;
 use std::path::Path;
 
 use crate::util::hashing::{hash_ordered_ids, sha256_hex};
@@ -101,11 +100,10 @@ impl IdMap {
                 buf.extend_from_slice(&id.to_le_bytes());
             }
         }
-        let mut f = fs::File::create(path)?;
-        f.write_all(&buf)?;
-        fs::write(
-            path.with_extension("map.sum"),
-            sha256_hex(&buf),
+        crate::util::faultfs::write(path, &buf)?;
+        crate::util::faultfs::write(
+            &path.with_extension("map.sum"),
+            sha256_hex(&buf).as_bytes(),
         )?;
         // Retired-ID sidecar (laundered-set compaction).  Written even
         // when empty so a rewrite clears stale retirements; the entry
@@ -123,9 +121,9 @@ impl IdMap {
         let sidecar = path.with_extension("map.retired");
         let encoded = crate::checkpoint::ids_json(&retired).encode();
         crate::checkpoint::write_atomic(&sidecar, &encoded)?;
-        fs::write(
-            sidecar.with_extension("retired.sum"),
-            sha256_hex(encoded.as_bytes()),
+        crate::util::faultfs::write(
+            &sidecar.with_extension("retired.sum"),
+            sha256_hex(encoded.as_bytes()).as_bytes(),
         )?;
         Ok(())
     }

@@ -1,0 +1,173 @@
+//! Adversarial transport tests for the shared line-framed connection
+//! loop (`serve_line_conn`) over a REAL socket pair: oversized lines
+//! are refused with a typed response, an idle connection observes
+//! shutdown through its read timeout, and a partial line followed by a
+//! disconnect never becomes an enqueued job.
+
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::{Shutdown, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::time::Duration;
+
+use unlearn::controller::{ForgetRequest, Urgency};
+use unlearn::server::{serve_line_conn, JobQueue, JobRequest};
+use unlearn::util::json::{parse, Json};
+use unlearn::util::tempdir;
+
+/// The dispatch a real admin server wires in, reduced to its queue
+/// interaction: a well-formed submit enqueues (durably) and acks with
+/// the job id; everything else is refused.  Tests assert on the QUEUE,
+/// the consistency target of the transport hardening.
+fn dispatch_submit(line: &str, q: &JobQueue<JobRequest>) -> Json {
+    let mut out = Json::obj();
+    let parsed = match parse(line) {
+        Ok(j) => j,
+        Err(e) => {
+            out.set("ok", false).set("error", format!("bad json: {e}"));
+            return out;
+        }
+    };
+    match parsed.get("op").and_then(|v| v.as_str()) {
+        Some("submit") => {
+            let Some(id) = parsed.get("id").and_then(|v| v.as_str()) else {
+                out.set("ok", false).set("error", "request needs id");
+                return out;
+            };
+            let req = JobRequest::Forget(ForgetRequest {
+                id: id.to_string(),
+                user: parsed.get("user").and_then(|v| v.as_u64()).map(|u| u as u32),
+                sample_ids: vec![],
+                urgency: Urgency::Normal,
+            });
+            match q.submit(req) {
+                Ok(Some(job)) => {
+                    out.set("ok", true).set("job", job.as_str());
+                }
+                Ok(None) => {
+                    out.set("ok", false).set("error", "closed");
+                }
+                Err(e) => {
+                    out.set("ok", false).set("error", format!("{e:#}"));
+                }
+            }
+        }
+        _ => {
+            out.set("ok", false).set("error", "unknown op");
+        }
+    }
+    out
+}
+
+/// Accept ONE connection and serve it with `serve_line_conn` against a
+/// WAL-backed queue; run `client` against the other end.  Returns the
+/// handler's result and the queue for post-mortem assertions.
+fn with_conn(
+    shutdown: &AtomicBool,
+    client: impl FnOnce(TcpStream) + Send,
+) -> (anyhow::Result<()>, JobQueue<JobRequest>) {
+    let q = JobQueue::<JobRequest>::with_wal(
+        &tempdir("transport").join("jobs.wal"),
+    )
+    .unwrap();
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let local = listener.local_addr().unwrap();
+    let mut served = Err(anyhow::anyhow!("handler never ran"));
+    std::thread::scope(|s| {
+        let handler = s.spawn(|| {
+            let (conn, _) = listener.accept().unwrap();
+            serve_line_conn(conn, local, shutdown, |line| {
+                dispatch_submit(line, &q)
+            })
+        });
+        let conn = TcpStream::connect(local).unwrap();
+        conn.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+        client(conn);
+        served = handler.join().unwrap();
+    });
+    (served, q)
+}
+
+#[test]
+fn oversized_line_is_refused_with_typed_response() {
+    let shutdown = AtomicBool::new(false);
+    let (served, q) = with_conn(&shutdown, |mut conn| {
+        // > 1 MiB with NO newline: a client streaming bytes to grow the
+        // handler's buffer without ever completing a request
+        let blob = vec![b'a'; (1 << 20) + 1];
+        conn.write_all(&blob).unwrap();
+        conn.flush().unwrap();
+
+        let mut r = BufReader::new(conn);
+        let mut line = String::new();
+        r.read_line(&mut line).unwrap();
+        let j = parse(line.trim()).expect("typed refusal is valid json");
+        assert_eq!(j.get("ok").and_then(|v| v.as_bool()), Some(false));
+        assert!(
+            j.get("error")
+                .and_then(|v| v.as_str())
+                .unwrap()
+                .contains("exceeds 1 MiB"),
+            "refusal names the line cap"
+        );
+        // and the server closed the connection afterwards
+        let mut rest = Vec::new();
+        assert_eq!(r.read_to_end(&mut rest).unwrap(), 0);
+    });
+    served.expect("handler exits cleanly after refusing");
+    assert_eq!(q.queued_len(), 0, "nothing was enqueued from the flood");
+}
+
+#[test]
+fn idle_connection_observes_shutdown_via_read_timeout() {
+    let shutdown = AtomicBool::new(false);
+    let (served, q) = with_conn(&shutdown, |conn| {
+        // say nothing; the handler must not block past shutdown
+        std::thread::sleep(Duration::from_millis(50));
+        shutdown.store(true, Ordering::SeqCst);
+        // the handler notices within one 200ms read-timeout tick; hold
+        // the socket open the whole time so only the flag can free it
+        std::thread::sleep(Duration::from_millis(450));
+        drop(conn);
+    });
+    served.expect("idle handler returned cleanly on shutdown");
+    assert_eq!(q.queued_len(), 0);
+}
+
+#[test]
+fn partial_line_then_disconnect_leaves_queue_consistent() {
+    let shutdown = AtomicBool::new(false);
+    let (served, q) = with_conn(&shutdown, |mut conn| {
+        // one complete request...
+        conn.write_all(b"{\"op\":\"submit\",\"id\":\"t-1\",\"user\":3}\n")
+            .unwrap();
+        let mut r = BufReader::new(conn.try_clone().unwrap());
+        let mut line = String::new();
+        r.read_line(&mut line).unwrap();
+        let j = parse(line.trim()).unwrap();
+        assert_eq!(j.get("ok").and_then(|v| v.as_bool()), Some(true));
+        let job = j.get("job").and_then(|v| v.as_str()).unwrap().to_string();
+        assert!(!job.is_empty());
+
+        // ...then a request torn mid-line by a disconnect
+        conn.write_all(b"{\"op\":\"submit\",\"id\":\"t-2\"").unwrap();
+        conn.flush().unwrap();
+        conn.shutdown(Shutdown::Write).unwrap();
+
+        // the fragment is refused, never enqueued
+        line.clear();
+        r.read_line(&mut line).unwrap();
+        let j = parse(line.trim()).expect("refusal is valid json");
+        assert_eq!(j.get("ok").and_then(|v| v.as_bool()), Some(false));
+    });
+    served.expect("handler exits cleanly after client disconnect");
+    assert_eq!(
+        q.queued_len(),
+        1,
+        "exactly the complete request is queued — the torn one is not"
+    );
+    let Json::Arr(rows) = q.jobs_json() else { panic!() };
+    assert_eq!(
+        rows[0].get("request_id").and_then(|v| v.as_str()),
+        Some("t-1")
+    );
+}
