@@ -58,10 +58,14 @@ pub fn exposure(
     if exposures.is_empty() {
         return Ok((0.0, 0.0));
     }
+    // detlint: allow(float-reduce) — sequential slice sum in push order
+    // (deterministic); exposure stats, not replayed state
     let mu = exposures.iter().sum::<f64>() / exposures.len() as f64;
     let var = exposures
         .iter()
         .map(|e| (e - mu) * (e - mu))
+        // detlint: allow(float-reduce) — sequential slice sum in push order
+        // (deterministic); exposure stats, not replayed state
         .sum::<f64>()
         / exposures.len() as f64;
     Ok((mu, var.sqrt()))

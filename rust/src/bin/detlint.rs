@@ -1,0 +1,232 @@
+//! `detlint` — determinism & durability conformance analyzer CLI.
+//!
+//! Run locally from the workspace root (or from `rust/`):
+//!
+//! ```text
+//! cargo run --release --bin detlint            # human output, gate vs baseline
+//! cargo run --release --bin detlint -- --json  # machine output + gate
+//! ```
+//!
+//! Exit code 0 = no new findings vs the committed baseline; 1 = new
+//! findings (CI fails).  See `--help` for the full flag set and the
+//! allow-annotation policy, DESIGN.md §"Determinism conformance" for
+//! the rule inventory.
+
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+use unlearn::cigate::lint as gate;
+use unlearn::lint::{self, Finding, RULES};
+use unlearn::util::cli::Args;
+use unlearn::util::json::Json;
+
+const HELP: &str = "\
+detlint — static determinism & durability conformance check
+
+USAGE:
+    cargo run --release --bin detlint [-- OPTIONS]
+
+OPTIONS:
+    --root <dir>            source root to scan (default: auto-detect
+                            rust/src or src relative to the cwd)
+    --baseline <file>       baseline to gate against (default:
+                            <root>/../detlint-baseline.json); a missing
+                            file is an empty baseline
+    --json                  print the full report as JSON
+    --all                   print baselined findings too, not just new
+    --bench-json <file>     also write finding/allow counts in the
+                            BENCH_*.json shape for trend tracking
+    --write-baseline <f|->  rewrite the baseline from this scan and exit
+                            0 (`-` = the default path). Ratchet only:
+                            use after FIXING findings, never to absorb
+                            new ones
+    --list-rules            print the rule registry and exit
+    --help                  this text
+
+EXIT CODE:
+    0  scan matched the baseline (new findings = 0)
+    1  new findings, or an operational error
+
+SUPPRESSION:
+    // detlint: allow(<rule>) — <reason>
+    on the finding's line or on its own line directly above (blank
+    lines, attributes and other comments in between are skipped). The
+    reason is mandatory: an empty reason or an unknown rule name is
+    itself a finding (allow-hygiene) and suppresses nothing.
+    `#[cfg(test)]` items are not scanned.
+
+BASELINE FORMAT (schema 1):
+    { \"schema\": 1, \"tool\": \"detlint\", \"findings\": [
+        { \"rule\", \"file\", \"snippet\", \"snippet_sha256\", \"count\" } ] }
+    Findings match by (rule, file, snippet hash) with multiplicity, so
+    line drift never breaks the gate but new occurrences do.
+";
+
+fn main() -> ExitCode {
+    match run() {
+        Ok(code) => code,
+        Err(e) => {
+            eprintln!("detlint: error: {e:#}");
+            ExitCode::FAILURE
+        }
+    }
+}
+
+fn run() -> anyhow::Result<ExitCode> {
+    let args = Args::from_env();
+    if args.flag("help") || args.subcommand.as_deref() == Some("help") {
+        print!("{HELP}");
+        return Ok(ExitCode::SUCCESS);
+    }
+    if args.flag("list-rules") {
+        for r in RULES {
+            println!("{:16} {}", r.id, r.desc);
+            println!("{:16}   scope: {}", "", r.scope);
+        }
+        return Ok(ExitCode::SUCCESS);
+    }
+
+    let root = match args.get("root") {
+        Some(r) => PathBuf::from(r),
+        None => autodetect_root()?,
+    };
+    let default_baseline = root
+        .parent()
+        .map(|p| p.join("detlint-baseline.json"))
+        .unwrap_or_else(|| PathBuf::from("detlint-baseline.json"));
+    let baseline_path = args
+        .get("baseline")
+        .map(PathBuf::from)
+        .unwrap_or(default_baseline);
+
+    let report = lint::scan_dir(&root)?;
+
+    if let Some(target) = args.get("write-baseline") {
+        let path = if target == "-" {
+            baseline_path
+        } else {
+            PathBuf::from(target)
+        };
+        gate::write_baseline(&path, &report.findings)?;
+        println!(
+            "detlint: baseline {} <- {} finding(s) from {} file(s)",
+            path.display(),
+            report.findings.len(),
+            report.files_scanned
+        );
+        return Ok(ExitCode::SUCCESS);
+    }
+    if args.flag("write-baseline") {
+        gate::write_baseline(&baseline_path, &report.findings)?;
+        println!(
+            "detlint: baseline {} <- {} finding(s)",
+            baseline_path.display(),
+            report.findings.len()
+        );
+        return Ok(ExitCode::SUCCESS);
+    }
+
+    let verdict = gate::gate_against_file(&report.findings, &baseline_path)?;
+
+    if let Some(bench) = args.get("bench-json") {
+        std::fs::write(bench, bench_json(&report, &verdict).pretty() + "\n")?;
+    }
+    if args.flag("json") {
+        println!("{}", report_json(&report, &verdict).pretty());
+    } else {
+        let shown: Vec<&Finding> = if args.flag("all") {
+            report.findings.iter().collect()
+        } else {
+            verdict.new.iter().collect()
+        };
+        for f in &shown {
+            println!("{}:{}:{} {} — {}", f.file, f.line, f.col, f.rule, f.message);
+            println!("    {}", f.snippet);
+        }
+        println!(
+            "detlint: {} file(s), {} finding(s) ({} baselined, {} new), \
+             {} allow(s); baseline {}",
+            report.files_scanned,
+            report.findings.len(),
+            verdict.baselined,
+            verdict.new.len(),
+            report.suppressed,
+            baseline_path.display(),
+        );
+        if verdict.fixed > 0 {
+            println!(
+                "detlint: {} baselined finding(s) no longer fire — ratchet \
+                 with --write-baseline",
+                verdict.fixed
+            );
+        }
+    }
+    Ok(if verdict.pass() {
+        ExitCode::SUCCESS
+    } else {
+        ExitCode::FAILURE
+    })
+}
+
+/// `rust/src` from the workspace root, `src` from inside `rust/`.
+fn autodetect_root() -> anyhow::Result<PathBuf> {
+    for cand in ["rust/src", "src"] {
+        let p = PathBuf::from(cand);
+        if p.join("lib.rs").exists() {
+            return Ok(p);
+        }
+    }
+    anyhow::bail!(
+        "cannot find a source root (tried rust/src, src); pass --root <dir>"
+    )
+}
+
+fn finding_json(f: &Finding) -> Json {
+    let mut o = Json::obj();
+    o.set("rule", f.rule)
+        .set("file", f.file.as_str())
+        .set("line", f.line as u64)
+        .set("col", f.col as u64)
+        .set("message", f.message.as_str())
+        .set("snippet", f.snippet.as_str())
+        .set("key", gate::baseline_key(f).as_str());
+    o
+}
+
+fn report_json(report: &lint::ScanReport, verdict: &gate::LintGate) -> Json {
+    let mut o = Json::obj();
+    o.set("tool", "detlint")
+        .set("files_scanned", report.files_scanned as u64)
+        .set("allows", report.suppressed as u64)
+        .set("baselined", verdict.baselined as u64)
+        .set("fixed_vs_baseline", verdict.fixed)
+        .set(
+            "findings",
+            Json::Arr(report.findings.iter().map(finding_json).collect()),
+        )
+        .set(
+            "new_findings",
+            Json::Arr(verdict.new.iter().map(finding_json).collect()),
+        )
+        .set("pass", verdict.pass());
+    o
+}
+
+/// The BENCH_*.json shape `cigate::perf` trends consume: counts only,
+/// no wall-clock anywhere (finding counts are machine-independent).
+fn bench_json(report: &lint::ScanReport, verdict: &gate::LintGate) -> Json {
+    let mut per_rule = Json::obj();
+    for r in RULES {
+        let n = report.findings.iter().filter(|f| f.rule == r.id).count();
+        per_rule.set(r.id, n as u64);
+    }
+    let mut o = Json::obj();
+    o.set("bench", "detlint")
+        .set("schema", 1u64)
+        .set("files_scanned", report.files_scanned as u64)
+        .set("findings_total", report.findings.len() as u64)
+        .set("findings_new", verdict.new.len() as u64)
+        .set("allows", report.suppressed as u64)
+        .set("per_rule", per_rule);
+    o
+}

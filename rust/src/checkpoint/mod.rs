@@ -728,6 +728,8 @@ impl CheckpointStore {
                 }
             }
         }
+        // detlint: allow(unordered-iter) — u64 sum is order-independent
+        // and CasStats is operator observability, never hashed or replayed
         let referenced_bytes: u64 = refs
             .iter()
             .map(|(h, n)| size_of.get(h).copied().unwrap_or(0) * n)

@@ -1,0 +1,237 @@
+//! Baseline gate for `detlint` findings — the static-analysis sibling
+//! of `cigate::perf`.
+//!
+//! The committed baseline (`rust/detlint-baseline.json`, schema-
+//! versioned) records every finding the repo has consciously accepted.
+//! The gate fails on any finding NOT in the baseline ("zero new
+//! findings") and reports how many baselined findings disappeared so
+//! the baseline can be ratcheted down (re-run with `--write-baseline`
+//! after fixing — never to absorb new findings).
+//!
+//! Matching is by `(rule, file, sha256(trimmed snippet))` with
+//! multiplicity, NOT by line number: unrelated edits that shift a
+//! baselined finding up or down the file do not break the gate, while
+//! a new occurrence of the same pattern elsewhere in the file (a new
+//! snippet, or a second identical one beyond the recorded count) does.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use crate::lint::Finding;
+use crate::util::hashing::sha256_hex;
+use crate::util::json::{parse, Json};
+
+/// Bump when the baseline layout changes; loading a mismatched schema
+/// is an error (fail closed — never silently gate against a file the
+/// current code cannot interpret).
+pub const BASELINE_SCHEMA: u64 = 1;
+
+/// Stable identity of a finding for baseline matching.
+pub fn baseline_key(f: &Finding) -> String {
+    let id = format!("{}\u{0}{}\u{0}{}", f.rule, f.file, f.snippet.trim());
+    sha256_hex(id.as_bytes())
+}
+
+/// Serialize findings into the committed baseline format.  Entries are
+/// grouped by key with a count, sorted by (rule, file, key) — the byte
+/// image is deterministic for a given finding set.
+pub fn baseline_json(findings: &[Finding]) -> Json {
+    // key -> (rule, file, snippet, count)
+    let mut grouped: BTreeMap<String, (String, String, String, u64)> = BTreeMap::new();
+    for f in findings {
+        let e = grouped.entry(baseline_key(f)).or_insert_with(|| {
+            (f.rule.to_string(), f.file.clone(), f.snippet.trim().to_string(), 0)
+        });
+        e.3 += 1;
+    }
+    let mut entries: Vec<(String, (String, String, String, u64))> =
+        grouped.into_iter().collect();
+    entries.sort_by(|a, b| {
+        (&a.1 .0, &a.1 .1, &a.0).cmp(&(&b.1 .0, &b.1 .1, &b.0))
+    });
+    let arr: Vec<Json> = entries
+        .into_iter()
+        .map(|(key, (rule, file, snippet, count))| {
+            let mut o = Json::obj();
+            o.set("rule", rule.as_str())
+                .set("file", file.as_str())
+                .set("snippet", snippet.as_str())
+                .set("snippet_sha256", key.as_str())
+                .set("count", count);
+            o
+        })
+        .collect();
+    let mut out = Json::obj();
+    out.set("schema", BASELINE_SCHEMA)
+        .set("tool", "detlint")
+        .set("findings", Json::Arr(arr));
+    out
+}
+
+pub fn write_baseline(path: &Path, findings: &[Finding]) -> anyhow::Result<()> {
+    // trailing newline so the regenerated file byte-matches the
+    // committed artifact convention
+    std::fs::write(path, baseline_json(findings).pretty() + "\n")?;
+    Ok(())
+}
+
+/// Load a baseline as `key -> allowed count`.  A missing file is an
+/// empty baseline (the gate then demands a fully clean scan); a
+/// present-but-unreadable file or a schema mismatch is an error.
+pub fn load_baseline(path: &Path) -> anyhow::Result<BTreeMap<String, u64>> {
+    if !path.exists() {
+        return Ok(BTreeMap::new());
+    }
+    let text = std::fs::read_to_string(path)?;
+    let json = parse(&text)
+        .map_err(|e| anyhow::anyhow!("unparseable baseline {}: {e}", path.display()))?;
+    let schema = json.get("schema").and_then(|j| j.as_u64()).unwrap_or(0);
+    anyhow::ensure!(
+        schema == BASELINE_SCHEMA,
+        "baseline {} has schema {schema}, this detlint understands {BASELINE_SCHEMA}",
+        path.display()
+    );
+    let mut out = BTreeMap::new();
+    for e in json.get("findings").and_then(|j| j.as_arr()).unwrap_or(&[]) {
+        let key = e
+            .get("snippet_sha256")
+            .and_then(|j| j.as_str())
+            .ok_or_else(|| anyhow::anyhow!("baseline entry missing snippet_sha256"))?;
+        let count = e.get("count").and_then(|j| j.as_u64()).unwrap_or(1);
+        *out.entry(key.to_string()).or_insert(0) += count;
+    }
+    Ok(out)
+}
+
+/// Gate verdict: which findings are new vs baselined, and how many
+/// baseline entries no longer fire (the ratchet opportunity).
+#[derive(Debug)]
+pub struct LintGate {
+    /// Findings not covered by the baseline — these fail CI.
+    pub new: Vec<Finding>,
+    /// Findings absorbed by the baseline.
+    pub baselined: usize,
+    /// Baseline capacity that nothing matched (fixed findings); when
+    /// nonzero the baseline should be ratcheted down.
+    pub fixed: u64,
+}
+
+impl LintGate {
+    pub fn pass(&self) -> bool {
+        self.new.is_empty()
+    }
+}
+
+/// Match `findings` against `baseline` with per-key multiplicity.
+pub fn gate(findings: &[Finding], baseline: &BTreeMap<String, u64>) -> LintGate {
+    let mut remaining = baseline.clone();
+    let mut out = LintGate {
+        new: Vec::new(),
+        baselined: 0,
+        fixed: 0,
+    };
+    for f in findings {
+        match remaining.get_mut(&baseline_key(f)) {
+            Some(n) if *n > 0 => {
+                *n -= 1;
+                out.baselined += 1;
+            }
+            _ => out.new.push(f.clone()),
+        }
+    }
+    out.fixed = remaining.values().sum();
+    out
+}
+
+pub fn gate_against_file(findings: &[Finding], path: &Path) -> anyhow::Result<LintGate> {
+    Ok(gate(findings, &load_baseline(path)?))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::tempdir;
+
+    fn finding(rule: &'static str, file: &str, snippet: &str) -> Finding {
+        Finding {
+            rule,
+            file: file.to_string(),
+            line: 1,
+            col: 1,
+            message: "m".to_string(),
+            snippet: snippet.to_string(),
+        }
+    }
+
+    /// Write → load → gate round-trip: everything baselined, no new.
+    #[test]
+    fn baseline_roundtrip() {
+        let dir = tempdir("lint-baseline");
+        let path = dir.join("baseline.json");
+        let fs = vec![
+            finding(crate::lint::rules::RULE_WALL_CLOCK, "a.rs", "Instant::now();"),
+            finding(crate::lint::rules::RULE_RAW_FS, "wal/x.rs", "fs::write(p, b)?;"),
+            finding(crate::lint::rules::RULE_RAW_FS, "wal/x.rs", "fs::write(p, b)?;"),
+        ];
+        write_baseline(&path, &fs).unwrap();
+        let g = gate_against_file(&fs, &path).unwrap();
+        assert!(g.pass());
+        assert_eq!(g.baselined, 3);
+        assert_eq!(g.fixed, 0);
+    }
+
+    /// Line drift is harmless; a NEW snippet or an extra copy of a
+    /// baselined one is not.
+    #[test]
+    fn gate_flags_new_and_extra_findings() {
+        let dir = tempdir("lint-gate");
+        let path = dir.join("baseline.json");
+        let base = vec![finding(
+            crate::lint::rules::RULE_WALL_CLOCK,
+            "a.rs",
+            "Instant::now();",
+        )];
+        write_baseline(&path, &base).unwrap();
+
+        // same snippet, different line: still baselined
+        let mut moved = base.clone();
+        moved[0].line = 99;
+        assert!(gate_against_file(&moved, &path).unwrap().pass());
+
+        // second copy of the same snippet exceeds the recorded count
+        let two = vec![base[0].clone(), base[0].clone()];
+        let g = gate_against_file(&two, &path).unwrap();
+        assert_eq!(g.new.len(), 1);
+        assert!(!g.pass());
+
+        // different snippet is new
+        let other = vec![finding(
+            crate::lint::rules::RULE_WALL_CLOCK,
+            "a.rs",
+            "SystemTime::now();",
+        )];
+        assert!(!gate_against_file(&other, &path).unwrap().pass());
+    }
+
+    /// Fixed findings surface as ratchet capacity; missing baseline
+    /// file means empty baseline; wrong schema fails closed.
+    #[test]
+    fn ratchet_missing_and_schema() {
+        let dir = tempdir("lint-schema");
+        let path = dir.join("baseline.json");
+        let base = vec![
+            finding(crate::lint::rules::RULE_ENTROPY, "a.rs", "thread_rng()"),
+            finding(crate::lint::rules::RULE_ENTROPY, "b.rs", "thread_rng()"),
+        ];
+        write_baseline(&path, &base).unwrap();
+        let g = gate_against_file(&base[..1], &path).unwrap();
+        assert!(g.pass());
+        assert_eq!(g.fixed, 1);
+
+        let missing = gate_against_file(&base[..1], &dir.join("nope.json")).unwrap();
+        assert_eq!(missing.new.len(), 1);
+
+        std::fs::write(&path, "{\"schema\": 999, \"findings\": []}").unwrap();
+        assert!(gate_against_file(&base, &path).is_err());
+    }
+}

@@ -20,6 +20,7 @@ use crate::trainer::Trainer;
 use crate::util::json::Json;
 use crate::wal::integrity;
 
+pub mod lint;
 pub mod perf;
 
 /// Outcome of the CI gate.

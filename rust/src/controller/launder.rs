@@ -76,6 +76,8 @@ pub fn execute_launder(
     policy: &LaunderPolicy,
     force: bool,
 ) -> anyhow::Result<LaunderOutcome> {
+    // detlint: allow(wall-clock) — wall_secs is operator observability in
+    // the outcome report; replay equality never reads it
     let t0 = Instant::now();
     if sys.manifest.was_executed(id) {
         return Ok(LaunderOutcome {

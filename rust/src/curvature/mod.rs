@@ -179,6 +179,9 @@ fn fisher_norm(fisher: &FisherCache, delta: &[f32], damping: f32) -> f32 {
         .iter()
         .zip(&fisher.diag)
         .map(|(d, f)| (f + damping) * d * d)
+        // detlint: allow(float-reduce) — sequential slice iteration IS the
+        // pinned left-fold order (index order, Lemma A.3); operands come
+        // from a slice, never from hash iteration
         .sum::<f32>()
         .sqrt()
 }

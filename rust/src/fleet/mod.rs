@@ -838,6 +838,8 @@ impl<'rt> Fleet<'rt> {
             per_shard.push((i as u32, (loss / count.max(1.0)).exp()));
         }
         anyhow::ensure!(!per_shard.is_empty(), "fleet has no evaluable shard");
+        // detlint: allow(float-reduce) — mean over a Vec in shard-index
+        // order (deterministic); reported utility, not replayed state
         let fleet_ppl = per_shard.iter().map(|&(_, p)| p).sum::<f64>()
             / per_shard.len() as f64;
         Ok(FleetUtility {

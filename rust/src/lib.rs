@@ -35,6 +35,8 @@
 //! - [`controller`] path-selection policy (Alg. A.7)
 //! - [`manifest`]   signed, hash-chained forget manifest
 //! - [`cigate`]     determinism/replay CI gate (Alg. 5.1)
+//! - [`lint`]       `detlint` static conformance analyzer (token lexer
+//!                  + determinism/durability rules + allow policy)
 //! - [`equality`]   equality-proof artifact (Table 5)
 //! - [`data`]       tokenizer, synthetic corpus, deterministic sampler
 //! - [`server`]     TCP/JSON admin server for forget requests
@@ -53,6 +55,7 @@ pub mod data;
 pub mod deltas;
 pub mod equality;
 pub mod fleet;
+pub mod lint;
 pub mod manifest;
 pub mod metrics;
 pub mod neardup;

@@ -1,0 +1,468 @@
+//! Token-level Rust lexer for `detlint` (zero-dep, same in-repo
+//! discipline as `util/json.rs` — syn/proc-macro2 are not in the
+//! offline vendor set).
+//!
+//! The lexer does NOT parse Rust; it produces a flat token stream with
+//! byte spans and line/column positions that is *reliable about what is
+//! code and what is not*: string literals (plain, raw, byte), char
+//! literals (including `'\''` and chars containing `//`), lifetimes,
+//! line comments and nested block comments are all classified, so a
+//! rule matching `SystemTime :: now` can never fire on the text of a
+//! string or a comment.  That classification boundary is exactly what a
+//! determinism lint needs — every rule in `lint::rules` is a pattern
+//! over this stream plus a module-path context, not a regex over raw
+//! source.
+//!
+//! Positions: `line` is 1-based; `col` is the 1-based BYTE column
+//! within the line (consistent for ASCII source, documented for the
+//! occasional UTF-8 doc comment).  The property test in
+//! `tests/detlint_rules.rs` round-trips both against a recount from
+//! byte offsets on adversarial input.
+
+/// Token classification.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TokKind {
+    /// Identifier or keyword (`fn`, `unsafe`, `HashMap`, ...).
+    Ident,
+    /// `r#ident` raw identifier.
+    RawIdent,
+    /// Lifetime (`'a`, `'static`) — distinguished from char literals.
+    Lifetime,
+    /// Numeric literal (integer or float, suffix included).
+    Num,
+    /// String literal: `"..."`, `r"..."`, `r#"..."#`, `b"..."`, `br#"..."#`.
+    Str,
+    /// Char or byte-char literal: `'x'`, `'\''`, `b'\n'`.
+    Char,
+    /// `// ...` (doc comments included).
+    LineComment,
+    /// `/* ... */`, nesting handled.
+    BlockComment,
+    /// Any other single character (`:`, `{`, `.`, `#`, ...).
+    Punct,
+}
+
+/// One token: kind + byte span + position.  Text is recovered from the
+/// source via [`Token::text`] — tokens borrow nothing, so a file's
+/// token vector outlives any slicing of the source.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Token {
+    pub kind: TokKind,
+    /// Byte offset of the first byte of the token.
+    pub start: usize,
+    /// Byte offset one past the last byte.
+    pub end: usize,
+    /// 1-based line of `start`.
+    pub line: u32,
+    /// 1-based byte column of `start` within its line.
+    pub col: u32,
+}
+
+impl Token {
+    pub fn text<'a>(&self, src: &'a str) -> &'a str {
+        &src[self.start..self.end]
+    }
+}
+
+/// Lex `src` into a flat token stream.  Never fails: unterminated
+/// strings/comments consume to end-of-file as a single token (the lint
+/// runs on code that `rustc` may not have blessed yet, e.g. fixture
+/// snippets).
+pub fn lex(src: &str) -> Vec<Token> {
+    Lexer {
+        src: src.as_bytes(),
+        pos: 0,
+        line: 1,
+        col: 1,
+        out: Vec::new(),
+    }
+    .run()
+}
+
+struct Lexer<'a> {
+    src: &'a [u8],
+    pos: usize,
+    line: u32,
+    col: u32,
+    out: Vec<Token>,
+}
+
+fn is_ident_start(b: u8) -> bool {
+    b.is_ascii_alphabetic() || b == b'_'
+}
+
+fn is_ident_continue(b: u8) -> bool {
+    b.is_ascii_alphanumeric() || b == b'_'
+}
+
+impl<'a> Lexer<'a> {
+    fn peek(&self, ahead: usize) -> Option<u8> {
+        self.src.get(self.pos + ahead).copied()
+    }
+
+    /// Advance one byte, maintaining line/col.
+    fn bump(&mut self) {
+        if self.peek(0) == Some(b'\n') {
+            self.line += 1;
+            self.col = 1;
+        } else {
+            self.col += 1;
+        }
+        self.pos += 1;
+    }
+
+    fn bump_n(&mut self, n: usize) {
+        for _ in 0..n {
+            self.bump();
+        }
+    }
+
+    fn emit_from(&mut self, kind: TokKind, start: usize, line: u32, col: u32) {
+        self.out.push(Token {
+            kind,
+            start,
+            end: self.pos,
+            line,
+            col,
+        });
+    }
+
+    fn run(mut self) -> Vec<Token> {
+        while let Some(b) = self.peek(0) {
+            let (start, line, col) = (self.pos, self.line, self.col);
+            match b {
+                b' ' | b'\t' | b'\r' | b'\n' => self.bump(),
+                b'/' if self.peek(1) == Some(b'/') => {
+                    while self.peek(0).is_some_and(|c| c != b'\n') {
+                        self.bump();
+                    }
+                    self.emit_from(TokKind::LineComment, start, line, col);
+                }
+                b'/' if self.peek(1) == Some(b'*') => {
+                    self.block_comment();
+                    self.emit_from(TokKind::BlockComment, start, line, col);
+                }
+                b'"' => {
+                    self.string_body();
+                    self.emit_from(TokKind::Str, start, line, col);
+                }
+                b'r' | b'b' if self.raw_or_byte_string() => {
+                    self.emit_from(TokKind::Str, start, line, col);
+                }
+                b'b' if self.peek(1) == Some(b'\'') => {
+                    self.bump(); // b
+                    self.bump(); // '
+                    self.char_body();
+                    self.emit_from(TokKind::Char, start, line, col);
+                }
+                b'r' if self.peek(1) == Some(b'#')
+                    && self.peek(2).is_some_and(is_ident_start) =>
+                {
+                    self.bump_n(2);
+                    while self.peek(0).is_some_and(is_ident_continue) {
+                        self.bump();
+                    }
+                    self.emit_from(TokKind::RawIdent, start, line, col);
+                }
+                b'\'' => {
+                    // lifetime vs char literal
+                    if self.char_not_lifetime() {
+                        self.bump(); // '
+                        self.char_body();
+                        self.emit_from(TokKind::Char, start, line, col);
+                    } else {
+                        self.bump(); // '
+                        while self.peek(0).is_some_and(is_ident_continue) {
+                            self.bump();
+                        }
+                        self.emit_from(TokKind::Lifetime, start, line, col);
+                    }
+                }
+                c if is_ident_start(c) => {
+                    while self.peek(0).is_some_and(is_ident_continue) {
+                        self.bump();
+                    }
+                    self.emit_from(TokKind::Ident, start, line, col);
+                }
+                c if c.is_ascii_digit() => {
+                    self.number_body();
+                    self.emit_from(TokKind::Num, start, line, col);
+                }
+                c if c < 0x80 => {
+                    self.bump();
+                    self.emit_from(TokKind::Punct, start, line, col);
+                }
+                _ => {
+                    // non-ASCII outside a string/comment: consume the
+                    // whole UTF-8 scalar as one Punct so spans stay on
+                    // character boundaries
+                    let mut n = 1;
+                    while self
+                        .peek(n)
+                        .is_some_and(|c| (c & 0xC0) == 0x80)
+                    {
+                        n += 1;
+                    }
+                    self.bump_n(n);
+                    self.emit_from(TokKind::Punct, start, line, col);
+                }
+            }
+        }
+        self.out
+    }
+
+    /// At `/*`: consume the whole comment, nesting-aware.
+    fn block_comment(&mut self) {
+        self.bump_n(2);
+        let mut depth = 1usize;
+        while depth > 0 {
+            match (self.peek(0), self.peek(1)) {
+                (Some(b'/'), Some(b'*')) => {
+                    depth += 1;
+                    self.bump_n(2);
+                }
+                (Some(b'*'), Some(b'/')) => {
+                    depth -= 1;
+                    self.bump_n(2);
+                }
+                (Some(_), _) => self.bump(),
+                (None, _) => break, // unterminated: consume to EOF
+            }
+        }
+    }
+
+    /// At the opening `"`: consume through the closing quote.
+    fn string_body(&mut self) {
+        self.bump(); // "
+        loop {
+            match self.peek(0) {
+                None => break,
+                Some(b'\\') => self.bump_n(2.min(self.src.len() - self.pos)),
+                Some(b'"') => {
+                    self.bump();
+                    break;
+                }
+                Some(_) => self.bump(),
+            }
+        }
+    }
+
+    /// If positioned at a raw/byte string (`r"`, `r#"`, `b"`, `br#"`,
+    /// `rb"` is not Rust — `br` only), consume it and return true.
+    fn raw_or_byte_string(&mut self) -> bool {
+        let mut ahead = 1; // past the r or b
+        let first = self.peek(0);
+        if first == Some(b'b') && self.peek(1) == Some(b'r') {
+            ahead = 2;
+        }
+        let raw = first == Some(b'r') || ahead == 2;
+        let mut hashes = 0usize;
+        if raw {
+            while self.peek(ahead) == Some(b'#') {
+                hashes += 1;
+                ahead += 1;
+            }
+        }
+        if self.peek(ahead) != Some(b'"') {
+            return false;
+        }
+        if !raw && hashes == 0 && first == Some(b'b') && ahead != 1 {
+            return false;
+        }
+        self.bump_n(ahead + 1); // prefix + opening quote
+        if raw {
+            // scan for `"` followed by `hashes` hash marks, no escapes
+            loop {
+                match self.peek(0) {
+                    None => break,
+                    Some(b'"') => {
+                        let mut ok = true;
+                        for i in 0..hashes {
+                            if self.peek(1 + i) != Some(b'#') {
+                                ok = false;
+                                break;
+                            }
+                        }
+                        self.bump();
+                        if ok {
+                            self.bump_n(hashes);
+                            break;
+                        }
+                    }
+                    Some(_) => self.bump(),
+                }
+            }
+        } else {
+            // b"..." — escapes apply
+            loop {
+                match self.peek(0) {
+                    None => break,
+                    Some(b'\\') => {
+                        self.bump_n(2.min(self.src.len() - self.pos))
+                    }
+                    Some(b'"') => {
+                        self.bump();
+                        break;
+                    }
+                    Some(_) => self.bump(),
+                }
+            }
+        }
+        true
+    }
+
+    /// Past the opening `'` of a char literal: consume the scalar (or
+    /// escape) and the closing quote.
+    fn char_body(&mut self) {
+        match self.peek(0) {
+            Some(b'\\') => {
+                self.bump(); // backslash
+                self.bump(); // escaped char ('\'' and '\\' land here)
+                // \u{...} and \x.. tails
+                while self
+                    .peek(0)
+                    .is_some_and(|c| c != b'\'' && c != b'\n')
+                {
+                    self.bump();
+                }
+            }
+            Some(_) => {
+                // one UTF-8 scalar
+                self.bump();
+                while self.peek(0).is_some_and(|c| (c & 0xC0) == 0x80) {
+                    self.bump();
+                }
+            }
+            None => return,
+        }
+        if self.peek(0) == Some(b'\'') {
+            self.bump();
+        }
+    }
+
+    /// At a `'`: decide char-literal vs lifetime without consuming.
+    fn char_not_lifetime(&self) -> bool {
+        match self.peek(1) {
+            Some(b'\\') => true, // '\n' '\'' '\u{..}'
+            Some(c) if is_ident_start(c) => {
+                // 'a' is a char only if a quote closes it right after
+                // one ident char; 'static / 'a (no close) are lifetimes
+                self.peek(2) == Some(b'\'')
+            }
+            Some(_) => true, // '0', '(', multi-byte scalar, ...
+            None => false,
+        }
+    }
+
+    /// At a digit: integer/float literal with suffix.
+    fn number_body(&mut self) {
+        // integer part (covers 0x/0b/0o prefixes via the alnum sweep)
+        while self
+            .peek(0)
+            .is_some_and(|c| c.is_ascii_alphanumeric() || c == b'_')
+        {
+            // exponent sign: 1.5e-3 / 2E+8
+            if (self.peek(0) == Some(b'e') || self.peek(0) == Some(b'E'))
+                && matches!(self.peek(1), Some(b'+') | Some(b'-'))
+                && self.peek(2).is_some_and(|c| c.is_ascii_digit())
+            {
+                self.bump_n(2);
+                continue;
+            }
+            self.bump();
+        }
+        // fraction: only when a digit follows the dot (so `0..n` and
+        // `x.0.to_string()` tokenize as ranges/field accesses)
+        if self.peek(0) == Some(b'.')
+            && self.peek(1).is_some_and(|c| c.is_ascii_digit())
+        {
+            self.bump(); // .
+            while self
+                .peek(0)
+                .is_some_and(|c| c.is_ascii_alphanumeric() || c == b'_')
+            {
+                if (self.peek(0) == Some(b'e') || self.peek(0) == Some(b'E'))
+                    && matches!(self.peek(1), Some(b'+') | Some(b'-'))
+                    && self.peek(2).is_some_and(|c| c.is_ascii_digit())
+                {
+                    self.bump_n(2);
+                    continue;
+                }
+                self.bump();
+            }
+        }
+    }
+}
+
+/// Is this numeric literal a float? (`1.5`, `1.5e3`, `0.0f32`, `1f64`,
+/// `1e9`).  Hex literals are never floats (`0xE3` contains `e`).
+pub fn num_is_float(text: &str) -> bool {
+    if text.starts_with("0x") || text.starts_with("0X") {
+        return false;
+    }
+    text.contains('.')
+        || text.ends_with("f32")
+        || text.ends_with("f64")
+        || text.contains('e')
+        || text.contains('E')
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn kinds(src: &str) -> Vec<(TokKind, String)> {
+        lex(src)
+            .iter()
+            .map(|t| (t.kind, t.text(src).to_string()))
+            .collect()
+    }
+
+    #[test]
+    fn classifies_strings_comments_chars_lifetimes() {
+        let src = r##"let s = "a // not a comment"; // real
+let r = r#"raw " with // stuff"#;
+let c = '\''; let d = '/'; let lt: &'static str = "x";
+/* outer /* nested */ still comment */ let z = 1.5e-3f32;"##;
+        let ks = kinds(src);
+        let strs: Vec<_> = ks
+            .iter()
+            .filter(|(k, _)| *k == TokKind::Str)
+            .map(|(_, t)| t.clone())
+            .collect();
+        assert_eq!(strs.len(), 3);
+        assert!(strs[1].contains("raw"));
+        let chars: Vec<_> = ks
+            .iter()
+            .filter(|(k, _)| *k == TokKind::Char)
+            .collect();
+        assert_eq!(chars.len(), 2);
+        assert!(ks
+            .iter()
+            .any(|(k, t)| *k == TokKind::Lifetime && t == "'static"));
+        assert!(ks
+            .iter()
+            .any(|(k, t)| *k == TokKind::BlockComment && t.contains("nested")));
+        assert!(ks
+            .iter()
+            .any(|(k, t)| *k == TokKind::Num && t == "1.5e-3f32"));
+    }
+
+    #[test]
+    fn ranges_do_not_eat_dots() {
+        let ks = kinds("for i in 0..n { a[i.0] }");
+        assert!(ks.iter().any(|(k, t)| *k == TokKind::Num && t == "0"));
+        assert!(!ks.iter().any(|(_, t)| t.contains("..")));
+    }
+
+    #[test]
+    fn float_detection() {
+        assert!(num_is_float("1.5"));
+        assert!(num_is_float("0.0f32"));
+        assert!(num_is_float("1e9"));
+        assert!(num_is_float("2f64"));
+        assert!(!num_is_float("42"));
+        assert!(!num_is_float("0xE3"));
+        assert!(!num_is_float("1_000"));
+    }
+}

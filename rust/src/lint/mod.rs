@@ -1,0 +1,73 @@
+//! `detlint` — in-repo determinism & durability conformance analyzer.
+//!
+//! Every bit-identity proof in this repo (pinned-reduce order, filtered
+//! replay equality, crash-matrix recovery) rests on source-level
+//! invariants: philox-only randomness, no wall clock in serialized
+//! state, ordered iteration before any hash/write, durable writes
+//! through `write_atomic`/faultfs.  `lint` checks those invariants
+//! statically, over a classified token stream ([`lexer`]) — zero
+//! dependencies, same discipline as `util/json.rs`.
+//!
+//! Consumers: `src/bin/detlint.rs` (the CLI, run in CI next to fmt) and
+//! `cigate::lint` (the baseline gate: zero NEW findings, fixed findings
+//! ratchet the baseline down).  Rules, allowlists, and the
+//! `// detlint: allow(<rule>) — <reason>` policy live in [`rules`]; the
+//! inventory is documented in DESIGN.md §"Determinism conformance".
+
+pub mod lexer;
+pub mod rules;
+
+pub use rules::{check_file, CheckOutcome, Finding, RuleInfo, RULES};
+
+use std::path::{Path, PathBuf};
+
+/// Aggregate result of scanning a source tree.
+#[derive(Debug, Default)]
+pub struct ScanReport {
+    pub findings: Vec<Finding>,
+    pub files_scanned: usize,
+    /// Findings suppressed by valid `detlint: allow` annotations —
+    /// the count of sanctioned exceptions, tracked in bench output.
+    pub suppressed: usize,
+}
+
+/// Scan every `.rs` file under `src_root` (recursively, sorted order so
+/// output and baselines are deterministic).  File paths in findings are
+/// relative to `src_root` with `/` separators — the rule allowlists
+/// prefix-match those (`wal/`, `checkpoint/`, ...).
+pub fn scan_dir(src_root: &Path) -> anyhow::Result<ScanReport> {
+    let mut files = Vec::new();
+    collect_rs(src_root, &mut files)?;
+    files.sort();
+    let mut report = ScanReport::default();
+    for path in files {
+        let src = std::fs::read_to_string(&path)?;
+        let rel = rel_unix(src_root, &path);
+        let outcome = check_file(&rel, &src);
+        report.findings.extend(outcome.findings);
+        report.suppressed += outcome.suppressed;
+        report.files_scanned += 1;
+    }
+    Ok(report)
+}
+
+fn collect_rs(dir: &Path, out: &mut Vec<PathBuf>) -> anyhow::Result<()> {
+    for entry in std::fs::read_dir(dir)? {
+        let path = entry?.path();
+        if path.is_dir() {
+            collect_rs(&path, out)?;
+        } else if path.extension().is_some_and(|e| e == "rs") {
+            out.push(path);
+        }
+    }
+    Ok(())
+}
+
+fn rel_unix(root: &Path, path: &Path) -> String {
+    path.strip_prefix(root)
+        .unwrap_or(path)
+        .components()
+        .map(|c| c.as_os_str().to_string_lossy().into_owned())
+        .collect::<Vec<_>>()
+        .join("/")
+}

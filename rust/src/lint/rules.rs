@@ -1,0 +1,947 @@
+//! Rule registry and rule passes for `detlint`.
+//!
+//! Each rule is a pattern over the classified token stream from
+//! [`crate::lint::lexer`] plus a module-path context (the path of the
+//! file relative to `src/`, unix separators).  Rules are deliberately
+//! conservative: they key on the *names* the repo's determinism
+//! contract is written in terms of (`SystemTime::now`, `HashMap`,
+//! `fs::write`, `.sum::<f32>()`, `unsafe`) and never fire inside
+//! string literals, comments, or `#[cfg(test)]` regions.  Known
+//! heuristic limits (untyped `.sum()`, scope-blind per-file name
+//! marking) are documented in DESIGN.md §"Determinism conformance".
+//!
+//! Suppression: `// detlint: allow(<rule>) — <reason>` on the same
+//! line as the finding or on its own line directly above (intervening
+//! comment/attribute/blank lines are skipped).  The reason is
+//! mandatory; an empty reason or an unknown rule name is itself a
+//! finding (`allow-hygiene`) and does NOT suppress — the escape hatch
+//! fails closed, like everything else in this repo.
+
+use super::lexer::{lex, num_is_float, TokKind, Token};
+
+pub const RULE_WALL_CLOCK: &str = "wall-clock";
+pub const RULE_UNORDERED_ITER: &str = "unordered-iter";
+pub const RULE_RAW_FS: &str = "raw-fs";
+pub const RULE_FLOAT_REDUCE: &str = "float-reduce";
+pub const RULE_ENTROPY: &str = "entropy";
+pub const RULE_UNSAFE_COMMENT: &str = "unsafe-comment";
+pub const RULE_ALLOW_HYGIENE: &str = "allow-hygiene";
+
+/// One registry entry; `--list-rules` prints this table.
+pub struct RuleInfo {
+    pub id: &'static str,
+    pub desc: &'static str,
+    pub scope: &'static str,
+}
+
+pub const RULES: &[RuleInfo] = &[
+    RuleInfo {
+        id: RULE_WALL_CLOCK,
+        desc: "SystemTime::now / Instant::now outside allowlisted timing modules",
+        scope: "all of src/ except metrics/, deltas/",
+    },
+    RuleInfo {
+        id: RULE_UNORDERED_ITER,
+        desc: "HashMap/HashSet iteration in serialize/hash/write modules \
+               without an immediate sort",
+        scope: "wal/, checkpoint/, manifest/, shard/",
+    },
+    RuleInfo {
+        id: RULE_RAW_FS,
+        desc: "fs::write / File::create in erasure-critical modules outside \
+               write_atomic / faultfs wrappers",
+        scope: "wal/, checkpoint/, manifest/, shard/, server/, fleet/",
+    },
+    RuleInfo {
+        id: RULE_FLOAT_REDUCE,
+        desc: ".sum::<f32>() or float fold outside runtime::reduce_pinned",
+        scope: "all of src/ except runtime/ (reduce_pinned's home)",
+    },
+    RuleInfo {
+        id: RULE_ENTROPY,
+        desc: "randomness source other than util/rng (philox / SplitMix64)",
+        scope: "all of src/",
+    },
+    RuleInfo {
+        id: RULE_UNSAFE_COMMENT,
+        desc: "unsafe block/fn/impl without a // SAFETY: comment",
+        scope: "all of src/",
+    },
+    RuleInfo {
+        id: RULE_ALLOW_HYGIENE,
+        desc: "detlint: allow(...) with an empty reason or unknown rule \
+               (such an allow suppresses nothing)",
+        scope: "all of src/",
+    },
+];
+
+pub fn rule_exists(id: &str) -> bool {
+    RULES.iter().any(|r| r.id == id)
+}
+
+/// Modules where wall-clock reads are legitimate (observability timing;
+/// values never reach serialized state).  Prefix match on the rel path.
+const WALL_CLOCK_ALLOWED: &[&str] = &["metrics/", "deltas/"];
+
+/// Modules whose bytes are hashed, serialized, or replayed — unordered
+/// iteration here can reach a digest or a wire format.
+const SERIALIZE_MODULES: &[&str] = &["wal/", "checkpoint/", "manifest/", "shard/"];
+
+/// Erasure-critical modules: every durable write must go through
+/// `checkpoint::write_atomic` or the `util::faultfs` wrappers so the
+/// crash matrix and fault injection see it.
+const DURABLE_MODULES: &[&str] =
+    &["wal/", "checkpoint/", "manifest/", "shard/", "server/", "fleet/"];
+
+/// `float-reduce` is about *pinning the reduction order*; `runtime/` is
+/// where `reduce_pinned` itself lives.
+const FLOAT_REDUCE_EXEMPT: &[&str] = &["runtime/"];
+
+/// Identifiers that mean "ambient entropy" — anything from the `rand`
+/// crate family, the OS, or std's randomized hasher seed.
+const ENTROPY_IDENTS: &[&str] = &[
+    "thread_rng",
+    "ThreadRng",
+    "OsRng",
+    "StdRng",
+    "SmallRng",
+    "from_entropy",
+    "getrandom",
+    "RandomState",
+];
+
+/// Methods that yield iteration over a hash container.
+const ITER_METHODS: &[&str] =
+    &["iter", "iter_mut", "into_iter", "keys", "values", "values_mut", "drain"];
+
+fn path_in(rel: &str, prefixes: &[&str]) -> bool {
+    prefixes.iter().any(|p| rel.starts_with(p))
+}
+
+/// One finding. `line`/`col` are 1-based; `snippet` is the trimmed
+/// source line, used both for human output and baseline matching (see
+/// `cigate::lint::baseline_key` — matching on content, not line
+/// numbers, keeps the baseline stable under unrelated edits).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Finding {
+    pub rule: &'static str,
+    pub file: String,
+    pub line: u32,
+    pub col: u32,
+    pub message: String,
+    pub snippet: String,
+}
+
+/// Result of checking one file.
+#[derive(Debug, Default)]
+pub struct CheckOutcome {
+    pub findings: Vec<Finding>,
+    /// Findings that WOULD have fired but were suppressed by a valid
+    /// `detlint: allow` — reported so `--json`/bench output can track
+    /// the count of sanctioned exceptions over time.
+    pub suppressed: usize,
+}
+
+struct FileCtx<'a> {
+    rel: &'a str,
+    src: &'a str,
+    toks: Vec<Token>,
+    /// Indices into `toks` of code tokens (everything but comments).
+    code: Vec<usize>,
+    /// Byte offset of the start of each line (index 0 = line 1).
+    line_starts: Vec<usize>,
+    /// `(first_line, last_line)` of `#[cfg(test)]` items, inclusive.
+    test_regions: Vec<(u32, u32)>,
+}
+
+impl<'a> FileCtx<'a> {
+    fn new(rel: &'a str, src: &'a str) -> Self {
+        let toks = lex(src);
+        let code: Vec<usize> = toks
+            .iter()
+            .enumerate()
+            .filter(|(_, t)| {
+                !matches!(t.kind, TokKind::LineComment | TokKind::BlockComment)
+            })
+            .map(|(i, _)| i)
+            .collect();
+        let mut line_starts = vec![0usize];
+        for (i, b) in src.bytes().enumerate() {
+            if b == b'\n' {
+                line_starts.push(i + 1);
+            }
+        }
+        let mut ctx = FileCtx {
+            rel,
+            src,
+            toks,
+            code,
+            line_starts,
+            test_regions: Vec::new(),
+        };
+        ctx.test_regions = ctx.find_test_regions();
+        ctx
+    }
+
+    /// Code token at code-index `ci` (not a raw token index).
+    fn ct(&self, ci: usize) -> Option<&Token> {
+        self.code.get(ci).map(|&i| &self.toks[i])
+    }
+
+    fn ctext(&self, ci: usize) -> &str {
+        self.ct(ci).map_or("", |t| t.text(self.src))
+    }
+
+    fn is_punct(&self, ci: usize, c: char) -> bool {
+        self.ct(ci).is_some_and(|t| {
+            t.kind == TokKind::Punct
+                && t.end - t.start == 1
+                && self.src.as_bytes()[t.start] == c as u8
+        })
+    }
+
+    fn is_ident(&self, ci: usize, name: &str) -> bool {
+        self.ct(ci)
+            .is_some_and(|t| t.kind == TokKind::Ident && t.text(self.src) == name)
+    }
+
+    /// Full text of the (1-based) line, trimmed — the finding snippet.
+    fn line_text(&self, line: u32) -> &str {
+        let i = (line as usize).saturating_sub(1);
+        let start = *self.line_starts.get(i).unwrap_or(&self.src.len());
+        let end = self
+            .line_starts
+            .get(i + 1)
+            .map_or(self.src.len(), |&e| e.saturating_sub(1));
+        self.src[start..end.max(start)].trim()
+    }
+
+    fn in_test_region(&self, line: u32) -> bool {
+        self.test_regions.iter().any(|&(a, b)| line >= a && line <= b)
+    }
+
+    /// Locate every `#[cfg(test)]` item and return its line extent: the
+    /// attribute line through the matching close brace (or through the
+    /// terminating `;` for brace-less items like a gated `use`).
+    fn find_test_regions(&self) -> Vec<(u32, u32)> {
+        let mut out = Vec::new();
+        let mut ci = 0usize;
+        while ci + 6 < self.code.len() {
+            let is_cfg_test = self.is_punct(ci, '#')
+                && self.is_punct(ci + 1, '[')
+                && self.is_ident(ci + 2, "cfg")
+                && self.is_punct(ci + 3, '(')
+                && self.is_ident(ci + 4, "test")
+                && self.is_punct(ci + 5, ')')
+                && self.is_punct(ci + 6, ']');
+            if !is_cfg_test {
+                ci += 1;
+                continue;
+            }
+            let start_line = self.ct(ci).map_or(1, |t| t.line);
+            // Scan forward for the item's opening `{`; a `;` first at
+            // depth 0 means a brace-less item.
+            let mut j = ci + 7;
+            let mut open = None;
+            let mut paren = 0i32;
+            while let Some(t) = self.ct(j) {
+                match t.text(self.src) {
+                    "(" | "[" => paren += 1,
+                    ")" | "]" => paren -= 1,
+                    "{" if paren == 0 => {
+                        open = Some(j);
+                        break;
+                    }
+                    ";" if paren == 0 => break,
+                    _ => {}
+                }
+                if j > ci + 80 {
+                    break; // give up; malformed or enormous signature
+                }
+                j += 1;
+            }
+            let end_line = match open {
+                Some(o) => {
+                    // match braces to the close
+                    let mut depth = 0i32;
+                    let mut k = o;
+                    let mut end = self.ct(o).map_or(start_line, |t| t.line);
+                    while let Some(t) = self.ct(k) {
+                        match t.text(self.src) {
+                            "{" => depth += 1,
+                            "}" => {
+                                depth -= 1;
+                                if depth == 0 {
+                                    end = t.line;
+                                    break;
+                                }
+                            }
+                            _ => {}
+                        }
+                        k += 1;
+                    }
+                    ci = k.max(ci + 1);
+                    end
+                }
+                None => {
+                    let e = self.ct(j).map_or(start_line, |t| t.line);
+                    ci = j.max(ci + 1);
+                    e
+                }
+            };
+            out.push((start_line, end_line));
+        }
+        out
+    }
+}
+
+/// A parsed, *valid* allow annotation.
+struct Allow {
+    rule: String,
+    /// Line the comment sits on.
+    comment_line: u32,
+    /// Line the allow applies to: the comment's own line if it shares
+    /// it with code, else the next code-bearing line below.
+    target_line: u32,
+}
+
+/// Parse `detlint: allow(<rule>) — <reason>` out of every comment.
+/// The marker must be the first thing in the comment (after `//`,
+/// `//!`, `///` or `/*` and whitespace) — prose *mentioning* the
+/// syntax mid-sentence is not an allow.  Returns valid allows plus
+/// `allow-hygiene` findings for invalid ones (empty reason / unknown
+/// rule) — invalid allows suppress nothing.
+fn parse_allows(ctx: &FileCtx) -> (Vec<Allow>, Vec<Finding>) {
+    const MARKER: &str = "detlint: allow(";
+    let mut allows = Vec::new();
+    let mut findings = Vec::new();
+    for t in &ctx.toks {
+        if !matches!(t.kind, TokKind::LineComment | TokKind::BlockComment) {
+            continue;
+        }
+        let mut text = t.text(ctx.src);
+        for lead in ["//!", "///", "//", "/*!", "/**", "/*"] {
+            if let Some(rest) = text.strip_prefix(lead) {
+                text = rest;
+                break;
+            }
+        }
+        let text = text.trim_start();
+        let Some(rest) = text.strip_prefix(MARKER) else { continue };
+        let Some(close) = rest.find(')') else { continue };
+        let rule = rest[..close].trim().to_string();
+        let mut reason = rest[close + 1..].trim();
+        // strip one leading separator: em/en dash, `--`, `-`, `:`
+        for sep in ["\u{2014}", "\u{2013}", "--", "-", ":"] {
+            if let Some(r) = reason.strip_prefix(sep) {
+                reason = r.trim();
+                break;
+            }
+        }
+        // a block comment's close marker is not part of the reason
+        let reason = reason.trim_end_matches("*/").trim();
+        let bad = if !rule_exists(&rule) {
+            Some(format!(
+                "allow names unknown rule `{rule}` (see --list-rules); \
+                 this allow suppresses nothing"
+            ))
+        } else if reason.is_empty() {
+            Some(format!(
+                "allow({rule}) has no reason; the reason is mandatory \
+                 and this allow suppresses nothing"
+            ))
+        } else {
+            None
+        };
+        match bad {
+            Some(message) => findings.push(Finding {
+                rule: RULE_ALLOW_HYGIENE,
+                file: ctx.rel.to_string(),
+                line: t.line,
+                col: t.col,
+                message,
+                snippet: ctx.line_text(t.line).to_string(),
+            }),
+            None => {
+                let target_line = allow_target_line(ctx, t);
+                allows.push(Allow {
+                    rule,
+                    comment_line: t.line,
+                    target_line,
+                });
+            }
+        }
+    }
+    (allows, findings)
+}
+
+/// The line an allow comment governs: its own line if code shares it
+/// (trailing comment), else the next line below that carries a code
+/// token — intervening attributes/blank/comment lines are skipped.
+fn allow_target_line(ctx: &FileCtx, comment: &Token) -> u32 {
+    let same_line_code = ctx
+        .code
+        .iter()
+        .any(|&i| ctx.toks[i].line == comment.line);
+    if same_line_code {
+        return comment.line;
+    }
+    ctx.code
+        .iter()
+        .map(|&i| ctx.toks[i].line)
+        .find(|&l| l > comment.line)
+        .unwrap_or(comment.line)
+}
+
+/// Check one file. `rel` must be the path relative to the scan root
+/// (`src/`), with `/` separators — module allowlists prefix-match it.
+pub fn check_file(rel: &str, src: &str) -> CheckOutcome {
+    let ctx = FileCtx::new(rel, src);
+    let (allows, mut hygiene) = parse_allows(&ctx);
+
+    let mut raw: Vec<Finding> = Vec::new();
+    wall_clock(&ctx, &mut raw);
+    unordered_iter(&ctx, &mut raw);
+    raw_fs(&ctx, &mut raw);
+    float_reduce(&ctx, &mut raw);
+    entropy(&ctx, &mut raw);
+    unsafe_comment(&ctx, &mut raw);
+
+    let mut out = CheckOutcome::default();
+    for f in raw {
+        if ctx.in_test_region(f.line) {
+            continue; // test code may use clocks/raw fs freely
+        }
+        let allowed = allows.iter().any(|a| {
+            a.rule == f.rule && (a.target_line == f.line || a.comment_line == f.line)
+        });
+        if allowed {
+            out.suppressed += 1;
+        } else {
+            out.findings.push(f);
+        }
+    }
+    // hygiene findings are never themselves suppressible, but test-only
+    // fixtures may hold deliberately-broken allows
+    hygiene.retain(|f| !ctx.in_test_region(f.line));
+    out.findings.extend(hygiene);
+    out.findings.sort_by(|a, b| {
+        (a.line, a.col, a.rule).cmp(&(b.line, b.col, b.rule))
+    });
+    out
+}
+
+fn push(ctx: &FileCtx, out: &mut Vec<Finding>, rule: &'static str, t: &Token, message: String) {
+    out.push(Finding {
+        rule,
+        file: ctx.rel.to_string(),
+        line: t.line,
+        col: t.col,
+        message,
+        snippet: ctx.line_text(t.line).to_string(),
+    });
+}
+
+/// Rule 1: `SystemTime::now` / `Instant::now` outside timing modules.
+fn wall_clock(ctx: &FileCtx, out: &mut Vec<Finding>) {
+    if path_in(ctx.rel, WALL_CLOCK_ALLOWED) {
+        return;
+    }
+    for ci in 0..ctx.code.len() {
+        let name = ctx.ctext(ci);
+        if (name == "SystemTime" || name == "Instant")
+            && ctx.is_punct(ci + 1, ':')
+            && ctx.is_punct(ci + 2, ':')
+            && ctx.is_ident(ci + 3, "now")
+        {
+            let t = *ctx.ct(ci).unwrap();
+            push(
+                ctx,
+                out,
+                RULE_WALL_CLOCK,
+                &t,
+                format!(
+                    "{name}::now() reads the wall clock; replayed state must not \
+                     depend on it (allowlisted: metrics/, deltas/)"
+                ),
+            );
+        }
+    }
+}
+
+/// Rule 3: raw `fs::write` / `File::create` in erasure-critical modules.
+fn raw_fs(ctx: &FileCtx, out: &mut Vec<Finding>) {
+    if !path_in(ctx.rel, DURABLE_MODULES) {
+        return;
+    }
+    for ci in 0..ctx.code.len() {
+        let fire = (ctx.is_ident(ci, "fs")
+            && ctx.is_punct(ci + 1, ':')
+            && ctx.is_punct(ci + 2, ':')
+            && ctx.is_ident(ci + 3, "write"))
+            || (ctx.is_ident(ci, "File")
+                && ctx.is_punct(ci + 1, ':')
+                && ctx.is_punct(ci + 2, ':')
+                && ctx.is_ident(ci + 3, "create"));
+        if fire {
+            let what = format!("{}::{}", ctx.ctext(ci), ctx.ctext(ci + 3));
+            let t = *ctx.ct(ci).unwrap();
+            push(
+                ctx,
+                out,
+                RULE_RAW_FS,
+                &t,
+                format!(
+                    "{what} bypasses write_atomic/faultfs in an erasure-critical \
+                     module; crash-matrix coverage and fault injection cannot \
+                     see this write"
+                ),
+            );
+        }
+    }
+}
+
+/// Rule 4: `.sum::<f32>()` or a float `fold` — the reduction order must
+/// come from `runtime::reduce_pinned`, not from iterator order.
+fn float_reduce(ctx: &FileCtx, out: &mut Vec<Finding>) {
+    if path_in(ctx.rel, FLOAT_REDUCE_EXEMPT) {
+        return;
+    }
+    for ci in 0..ctx.code.len() {
+        if !ctx.is_punct(ci, '.') {
+            continue;
+        }
+        // .sum::<f32>() / .product::<f32>()
+        if (ctx.is_ident(ci + 1, "sum") || ctx.is_ident(ci + 1, "product"))
+            && ctx.is_punct(ci + 2, ':')
+            && ctx.is_punct(ci + 3, ':')
+            && ctx.is_punct(ci + 4, '<')
+            && (ctx.is_ident(ci + 5, "f32") || ctx.is_ident(ci + 5, "f64"))
+        {
+            let t = *ctx.ct(ci + 1).unwrap();
+            push(
+                ctx,
+                out,
+                RULE_FLOAT_REDUCE,
+                &t,
+                format!(
+                    ".{}::<{}>() pins no reduction order; route float reductions \
+                     through runtime::reduce_pinned (Lemma A.3)",
+                    ctx.ctext(ci + 1),
+                    ctx.ctext(ci + 5),
+                ),
+            );
+            continue;
+        }
+        // .fold(<float init>, ...) / .fold(f32::MIN, ...)
+        if ctx.is_ident(ci + 1, "fold") && ctx.is_punct(ci + 2, '(') {
+            let mut j = ci + 3;
+            if ctx.is_punct(j, '-') {
+                j += 1;
+            }
+            let float_init = ctx
+                .ct(j)
+                .is_some_and(|t| t.kind == TokKind::Num && num_is_float(t.text(ctx.src)))
+                || ((ctx.is_ident(j, "f32") || ctx.is_ident(j, "f64"))
+                    && ctx.is_punct(j + 1, ':')
+                    && ctx.is_punct(j + 2, ':'));
+            if float_init {
+                let t = *ctx.ct(ci + 1).unwrap();
+                push(
+                    ctx,
+                    out,
+                    RULE_FLOAT_REDUCE,
+                    &t,
+                    ".fold with a float accumulator pins no reduction order; \
+                     route float reductions through runtime::reduce_pinned \
+                     (Lemma A.3)"
+                        .to_string(),
+                );
+            }
+        }
+    }
+}
+
+/// Rule 5: any entropy source other than `util/rng`.
+fn entropy(ctx: &FileCtx, out: &mut Vec<Finding>) {
+    for ci in 0..ctx.code.len() {
+        let name = ctx.ctext(ci);
+        let banned_ident = ctx
+            .ct(ci)
+            .is_some_and(|t| t.kind == TokKind::Ident)
+            && ENTROPY_IDENTS.contains(&name);
+        // `rand::...` crate path (the crate is not vendored; this
+        // catches a future dependency sneaking in)
+        let rand_path = name == "rand"
+            && ctx.ct(ci).is_some_and(|t| t.kind == TokKind::Ident)
+            && ctx.is_punct(ci + 1, ':')
+            && ctx.is_punct(ci + 2, ':');
+        if banned_ident || rand_path {
+            let t = *ctx.ct(ci).unwrap();
+            push(
+                ctx,
+                out,
+                RULE_ENTROPY,
+                &t,
+                format!(
+                    "`{name}` is ambient entropy; all randomness must come from \
+                     util/rng (philox_u64 / SplitMix64) so runs replay"
+                ),
+            );
+        }
+    }
+}
+
+/// Rule 6: every `unsafe` must carry a `// SAFETY:` comment — trailing
+/// on the same line, or on a comment line directly above (attributes
+/// and blank lines between the comment and the `unsafe` are fine).
+fn unsafe_comment(ctx: &FileCtx, out: &mut Vec<Finding>) {
+    for ci in 0..ctx.code.len() {
+        if !ctx.is_ident(ci, "unsafe") {
+            continue;
+        }
+        let t = *ctx.ct(ci).unwrap();
+        if has_safety_comment(ctx, t.line) {
+            continue;
+        }
+        push(
+            ctx,
+            out,
+            RULE_UNSAFE_COMMENT,
+            &t,
+            "unsafe without a // SAFETY: comment stating the invariant the \
+             caller upholds"
+                .to_string(),
+        );
+    }
+}
+
+fn has_safety_comment(ctx: &FileCtx, unsafe_line: u32) -> bool {
+    // same line (trailing comment)
+    if ctx.line_text(unsafe_line).contains("SAFETY") {
+        return true;
+    }
+    // walk upward over comment / attribute / blank lines (cap 15)
+    let mut l = unsafe_line.saturating_sub(1);
+    for _ in 0..15 {
+        if l == 0 {
+            return false;
+        }
+        let text = ctx.line_text(l);
+        let commentish = text.starts_with("//")
+            || text.starts_with("/*")
+            || text.starts_with('*')
+            || text.ends_with("*/");
+        if commentish {
+            if text.contains("SAFETY") {
+                return true;
+            }
+            l -= 1;
+        } else if text.is_empty() || text.starts_with("#[") || text.starts_with("#![")
+        {
+            l -= 1;
+        } else {
+            return false;
+        }
+    }
+    false
+}
+
+/// Rule 2: HashMap/HashSet iteration in serialize/hash/write modules.
+///
+/// Three inference passes per file (scope-blind by design — a name
+/// marked hash-typed anywhere in the file is hash-typed everywhere;
+/// conservative over-marking can only produce a finding that an allow
+/// or a `Vec`+sort refactor resolves):
+///
+/// 1. mark NAMES: `name: ... HashMap/HashSet` (field, param, typed
+///    let) and `let [mut] name = HashMap::new()`;
+/// 2. mark FNS returning hash containers (`fn f(..) -> ..HashMap..`),
+///    then `let [mut] name = [self.]f(..)` marks `name` too;
+/// 3. candidates: `name.iter()/keys()/values()/...` and
+///    `for .. in <name> {`; a candidate is dropped when the binding it
+///    feeds is sorted in the same or next statement, or when it
+///    collects into a BTree container in the same statement.
+fn unordered_iter(ctx: &FileCtx, out: &mut Vec<Finding>) {
+    if !path_in(ctx.rel, SERIALIZE_MODULES) {
+        return;
+    }
+    let mut hash_names: Vec<String> = Vec::new();
+    let mut hash_fns: Vec<String> = Vec::new();
+
+    let is_hash_ty = |ci: usize| ctx.is_ident(ci, "HashMap") || ctx.is_ident(ci, "HashSet");
+
+    // Pass 1a: `name : ... HashMap/HashSet` within a short window.
+    for ci in 0..ctx.code.len() {
+        let t = match ctx.ct(ci) {
+            Some(t) if t.kind == TokKind::Ident => t,
+            _ => continue,
+        };
+        let name = t.text(ctx.src);
+        if !ctx.is_punct(ci + 1, ':') || ctx.is_punct(ci + 2, ':') {
+            continue; // not `name:` (or it's a `::` path)
+        }
+        for j in ci + 2..(ci + 14).min(ctx.code.len()) {
+            let tx = ctx.ctext(j);
+            // `,` must break the scan: in `struct S { a: u64, b: HashMap }`
+            // the window from `a:` would otherwise reach `b`'s type
+            if matches!(tx, ";" | "=" | "{" | "}" | ")" | ",") {
+                break;
+            }
+            if is_hash_ty(j) {
+                hash_names.push(name.to_string());
+                break;
+            }
+        }
+    }
+    // Pass 1b: `let [mut] name = HashMap::new()` etc.
+    for ci in 0..ctx.code.len() {
+        if !ctx.is_ident(ci, "let") {
+            continue;
+        }
+        let mut j = ci + 1;
+        if ctx.is_ident(j, "mut") {
+            j += 1;
+        }
+        let name = match ctx.ct(j) {
+            Some(t) if t.kind == TokKind::Ident => t.text(ctx.src).to_string(),
+            _ => continue,
+        };
+        if ctx.is_punct(j + 1, '=') && is_hash_ty(j + 2) {
+            hash_names.push(name);
+        }
+    }
+    // Pass 2a: fns returning hash containers.
+    for ci in 0..ctx.code.len() {
+        if !ctx.is_ident(ci, "fn") {
+            continue;
+        }
+        let fname = match ctx.ct(ci + 1) {
+            Some(t) if t.kind == TokKind::Ident => t.text(ctx.src).to_string(),
+            _ => continue,
+        };
+        // scan the signature (to `{` or `;`) for an arrow then a hash ty
+        let mut seen_arrow = false;
+        for j in ci + 2..(ci + 60).min(ctx.code.len()) {
+            let tx = ctx.ctext(j);
+            if tx == "{" || tx == ";" {
+                break;
+            }
+            if tx == "-" && ctx.is_punct(j + 1, '>') {
+                seen_arrow = true;
+            }
+            if seen_arrow && is_hash_ty(j) {
+                hash_fns.push(fname.clone());
+                break;
+            }
+        }
+    }
+    // Pass 2b: `let [mut] name = [self.]f(...)` where f is a hash fn.
+    for ci in 0..ctx.code.len() {
+        if !ctx.is_ident(ci, "let") {
+            continue;
+        }
+        let mut j = ci + 1;
+        if ctx.is_ident(j, "mut") {
+            j += 1;
+        }
+        let name = match ctx.ct(j) {
+            Some(t) if t.kind == TokKind::Ident => t.text(ctx.src).to_string(),
+            _ => continue,
+        };
+        if !ctx.is_punct(j + 1, '=') {
+            continue;
+        }
+        // within the statement, look for `f(` with f in hash_fns
+        for k in j + 2..(j + 20).min(ctx.code.len()) {
+            let tx = ctx.ctext(k);
+            if tx == ";" {
+                break;
+            }
+            if ctx.ct(k).is_some_and(|t| t.kind == TokKind::Ident)
+                && hash_fns.iter().any(|f| f == tx)
+                && ctx.is_punct(k + 1, '(')
+            {
+                hash_names.push(name.clone());
+                break;
+            }
+        }
+    }
+
+    hash_names.sort();
+    hash_names.dedup();
+    let is_hash_name =
+        |ci: usize| hash_names.iter().any(|n| ctx.is_ident(ci, n));
+
+    // Pass 3: candidates.
+    let mut candidates: Vec<usize> = Vec::new(); // code indices of the name token
+    for ci in 0..ctx.code.len() {
+        // name.iter() / name.keys() / ...
+        if is_hash_name(ci)
+            && ctx.is_punct(ci + 1, '.')
+            && ITER_METHODS.iter().any(|m| ctx.is_ident(ci + 2, m))
+            && ctx.is_punct(ci + 3, '(')
+        {
+            candidates.push(ci);
+        }
+        // for .. in <expr ending in name> {
+        if ctx.is_ident(ci, "for") {
+            // find `in` within the pattern window
+            let mut in_at = None;
+            for j in ci + 1..(ci + 20).min(ctx.code.len()) {
+                if ctx.is_ident(j, "in") {
+                    in_at = Some(j);
+                    break;
+                }
+                if matches!(ctx.ctext(j), "{" | ";") {
+                    break;
+                }
+            }
+            let Some(in_at) = in_at else { continue };
+            // find the body `{` at paren/bracket depth 0
+            let mut depth = 0i32;
+            let mut body = None;
+            for j in in_at + 1..(in_at + 40).min(ctx.code.len()) {
+                match ctx.ctext(j) {
+                    "(" | "[" => depth += 1,
+                    ")" | "]" => depth -= 1,
+                    "{" if depth == 0 => {
+                        body = Some(j);
+                        break;
+                    }
+                    ";" if depth == 0 => break,
+                    _ => {}
+                }
+            }
+            let Some(body) = body else { continue };
+            // token immediately before `{`, skipping `?`
+            let mut k = body - 1;
+            if ctx.is_punct(k, '?') && k > in_at {
+                k -= 1;
+            }
+            // `&name` / `&mut name` / `self.name` all end on the name
+            if k > in_at && is_hash_name(k) {
+                candidates.push(k);
+            }
+        }
+    }
+
+    for ci in candidates {
+        if sorted_after(ctx, ci) {
+            continue;
+        }
+        let t = *ctx.ct(ci).unwrap();
+        push(
+            ctx,
+            out,
+            RULE_UNORDERED_ITER,
+            &t,
+            format!(
+                "iteration over hash container `{}` in a serialize/hash/write \
+                 module; collect + sort (or use a BTree container) before \
+                 bytes depend on order",
+                t.text(ctx.src),
+            ),
+        );
+    }
+}
+
+/// Sorted-suppression for an unordered-iter candidate at code index
+/// `ci`: the enclosing `let <binding> = ...;` statement is either
+/// followed (within ~60 code tokens) by `<binding>.sort*`, or the
+/// statement itself collects into a BTree container.
+fn sorted_after(ctx: &FileCtx, ci: usize) -> bool {
+    // A sort of the SAME name shortly before the iteration also pins
+    // order: `retired.sort_unstable(); ... for r in retired {`
+    // (common when a sorted Vec shadows a hash-typed field name).
+    let name = ctx.ctext(ci).to_string();
+    for j in ci.saturating_sub(60)..ci {
+        if ctx.is_ident(j, &name)
+            && ctx.is_punct(j + 1, '.')
+            && ctx.ct(j + 2).is_some_and(|t| {
+                t.kind == TokKind::Ident && t.text(ctx.src).starts_with("sort")
+            })
+        {
+            return true;
+        }
+    }
+    // statement end: next `;` at brace/paren depth 0 (cap 120 tokens)
+    let mut depth = 0i32;
+    let mut stmt_end = None;
+    for j in ci..(ci + 120).min(ctx.code.len()) {
+        match ctx.ctext(j) {
+            "(" | "[" | "{" => depth += 1,
+            ")" | "]" | "}" => {
+                depth -= 1;
+                if depth < 0 {
+                    break;
+                }
+            }
+            ";" if depth == 0 => {
+                stmt_end = Some(j);
+                break;
+            }
+            _ => {}
+        }
+    }
+    let Some(stmt_end) = stmt_end else { return false };
+
+    // find the `let <binding>` this statement assigns, scanning back
+    let mut binding = None;
+    let mut stmt_start = ci;
+    let mut j = ci;
+    loop {
+        if j == 0 {
+            break;
+        }
+        j -= 1;
+        let tx = ctx.ctext(j);
+        if tx == ";" || tx == "{" || tx == "}" {
+            break;
+        }
+        if tx == "let" {
+            stmt_start = j;
+            let mut k = j + 1;
+            if ctx.is_ident(k, "mut") {
+                k += 1;
+            }
+            if let Some(t) = ctx.ct(k) {
+                if t.kind == TokKind::Ident {
+                    binding = Some(t.text(ctx.src).to_string());
+                }
+            }
+            break;
+        }
+        if ci - j > 30 {
+            break;
+        }
+    }
+
+    // A BTree container anywhere in the statement (type annotation or
+    // collect turbofish) pins order.
+    for j in stmt_start..stmt_end {
+        if ctx.is_ident(j, "BTreeMap")
+            || ctx.is_ident(j, "BTreeSet")
+            || ctx.is_ident(j, "BinaryHeap")
+        {
+            return true;
+        }
+    }
+
+    let Some(binding) = binding else { return false };
+
+    // `<binding>.sort*(` within the next ~60 code tokens
+    for j in stmt_end..(stmt_end + 60).min(ctx.code.len()) {
+        if ctx.is_ident(j, &binding)
+            && ctx.is_punct(j + 1, '.')
+            && ctx
+                .ct(j + 2)
+                .is_some_and(|t| {
+                    t.kind == TokKind::Ident && t.text(ctx.src).starts_with("sort")
+                })
+        {
+            return true;
+        }
+    }
+    false
+}

@@ -484,6 +484,8 @@ fn smoke(args: &Args) -> anyhow::Result<()> {
         "train_step: loss={} count={} |g|inf={}",
         out.loss_sum,
         out.tok_count,
+        // detlint: allow(float-reduce) — ∞-norm for a smoke printout; max
+        // is order-insensitive and nothing replayed reads it
         out.grad.iter().fold(0.0f32, |a, x| a.max(x.abs()))
     );
     // purity check (Assumption A.13): run twice, compare bits
@@ -515,6 +517,8 @@ fn smoke(args: &Args) -> anyhow::Result<()> {
     let lora = man.init_lora()?;
     let lout = rt.lora_step(&params, &lora, &tokens, &mask, 3)?;
     println!("lora_step: loss={} |g|inf={}", lout.loss_sum,
+             // detlint: allow(float-reduce) — ∞-norm for a smoke printout;
+             // max is order-insensitive and nothing replayed reads it
              lout.grad.iter().fold(0.0f32, |a, x| a.max(x.abs())));
     // batched segment entry point: reduce-order pin (possibly parallel
     // execution, bit-identical to the sequential fold)

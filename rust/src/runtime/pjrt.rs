@@ -43,8 +43,12 @@ pub struct PjrtExec {
 // (calls over a channel) and delete these impls.  Nothing in CI
 // compiles this path today — the assertion is documented, not tested.
 #[cfg(feature = "pjrt-xla")]
+// SAFETY: all client access is serialized through the mutex; cross-thread
+// drop/use is the vendor-time obligation in the caveat above.
 unsafe impl Send for PjrtExec {}
 #[cfg(feature = "pjrt-xla")]
+// SAFETY: &PjrtExec only exposes the client via Mutex::lock, so shared
+// references never race; same vendor-time obligation as Send.
 unsafe impl Sync for PjrtExec {}
 
 impl PjrtExec {

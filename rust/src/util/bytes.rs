@@ -43,6 +43,8 @@ pub fn max_abs_diff(a: &[f32], b: &[f32]) -> f32 {
     a.iter()
         .zip(b)
         .map(|(x, y)| (x - y).abs())
+        // detlint: allow(float-reduce) — max is order-insensitive and this
+        // is a diagnostic; no serialized state depends on it
         .fold(0.0f32, f32::max)
 }
 

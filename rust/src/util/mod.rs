@@ -19,6 +19,8 @@ pub fn tempdir(tag: &str) -> std::path::PathBuf {
         "unlearn-{tag}-{}-{}-{}",
         std::process::id(),
         N.fetch_add(1, Ordering::Relaxed),
+        // detlint: allow(wall-clock) — uniqueness salt for a temp-dir
+        // name; the value never reaches serialized or replayed state
         std::time::SystemTime::now()
             .duration_since(std::time::UNIX_EPOCH)
             .unwrap()

@@ -59,6 +59,8 @@ impl WalWriter {
     /// paper's toy-only legacy `sched_digest_u32` field lives; it is
     /// NEVER read at replay.
     pub fn enable_sidecar(&mut self) -> anyhow::Result<()> {
+        // detlint: allow(raw-fs) — debug-only CSV, never read at replay or
+        // recovery; crash-matrix coverage of it would prove nothing
         let mut f = File::create(self.dir.join("wal-sidecar.csv"))?;
         writeln!(
             f,
@@ -98,9 +100,9 @@ impl WalWriter {
         if let Some(key) = &self.hmac_key {
             sum.set("hmac_sha256", hex(&hmac_sha256(key, &self.seg_bytes)));
         }
-        fs::write(
-            self.seg_path(self.seg_index).with_extension("seg.sum"),
-            sum.pretty(),
+        crate::util::faultfs::write(
+            &self.seg_path(self.seg_index).with_extension("seg.sum"),
+            sum.pretty().as_bytes(),
         )?;
         Ok(())
     }
