@@ -1,0 +1,282 @@
+//! Admin-plane transport throughput: thread-per-connection (the
+//! pre-event-loop architecture, reproduced inline with blocking reads)
+//! vs the shared nonblocking poll loop, at 1/32/256 concurrent
+//! connections.  The dispatch closure is stateless and mirrors the
+//! servers' lazy hot path over the public scanner API, so the A/B
+//! isolates the connection layer + zero-alloc JSON parse — no WAL
+//! fsyncs or job execution in the measured path.
+
+#[path = "bench_util.rs"]
+mod bench_util;
+use bench_util::*;
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+
+use unlearn::cigate::perf;
+use unlearn::server::serve_event_loop;
+use unlearn::util::json::Json;
+use unlearn::util::json_scan;
+use unlearn::util::rng::philox_u64;
+
+/// Philox key for the request mix — same counter stream in both modes,
+/// so the two transports see byte-identical workloads.
+const SEED: u64 = 0xBE9C_5E4E_AD41_0007;
+
+/// Lazily-scanned hot dispatch (submit/poll/status), shaped like the
+/// real servers' hot path: extract fields with the zero-alloc scanner,
+/// answer from them, never build a tree.
+fn dispatch_bench(line: &str) -> Json {
+    let b = line.as_bytes();
+    let mut out = Json::obj();
+    let op = match json_scan::scan_str(b, "op") {
+        Ok(Some(op)) => op,
+        _ => {
+            out.set("ok", false).set("error", "bad json");
+            return out;
+        }
+    };
+    match op.as_ref() {
+        "submit" => {
+            let id = json_scan::scan_str(b, "id")
+                .ok()
+                .flatten()
+                .map(|s| s.into_owned())
+                .unwrap_or_default();
+            let user =
+                json_scan::scan_u64(b, "user").ok().flatten().unwrap_or(0);
+            let samples = json_scan::scan_u64s(b, "sample_ids")
+                .ok()
+                .flatten()
+                .unwrap_or_default();
+            out.set("ok", true)
+                .set("job", format!("job-{id}"))
+                .set("user", user)
+                .set("samples", samples.len() as u64);
+        }
+        "poll" => {
+            let job = json_scan::scan_str(b, "job")
+                .ok()
+                .flatten()
+                .map(|s| s.into_owned())
+                .unwrap_or_default();
+            out.set("ok", true).set("job", job).set("state", "queued");
+        }
+        "status" => {
+            out.set("ok", true).set("queued_jobs", 0u64);
+        }
+        _ => {
+            out.set("ok", false).set("error", "unknown op");
+        }
+    }
+    out
+}
+
+/// Deterministic request line for global request counter `ctr`.
+fn request_line(ctr: u64) -> String {
+    match philox_u64(SEED, ctr) % 4 {
+        0 => format!(
+            r#"{{"op":"submit","id":"req-{ctr}","user":{},"sample_ids":[{},{}]}}"#,
+            philox_u64(SEED, ctr ^ 0x1000) % 1000,
+            philox_u64(SEED, ctr ^ 0x2000) % 4096,
+            philox_u64(SEED, ctr ^ 0x3000) % 4096,
+        ),
+        1 => format!(r#"{{"op":"poll","job":"job-req-{}"}}"#, ctr / 2),
+        _ => r#"{"op":"status"}"#.to_string(),
+    }
+}
+
+/// Synchronous request/response clients: `conns` connections, each
+/// issuing `per_conn` round-trips, then closing (EOF to the server).
+fn run_clients(addr: SocketAddr, conns: usize, per_conn: usize) {
+    std::thread::scope(|s| {
+        for c in 0..conns {
+            s.spawn(move || {
+                let stream = TcpStream::connect(addr).unwrap();
+                let mut reader =
+                    BufReader::new(stream.try_clone().unwrap());
+                let mut writer = stream;
+                let mut resp = String::new();
+                for i in 0..per_conn {
+                    let ctr = (c * per_conn + i) as u64;
+                    let line = request_line(ctr);
+                    writer.write_all(line.as_bytes()).unwrap();
+                    writer.write_all(b"\n").unwrap();
+                    resp.clear();
+                    reader.read_line(&mut resp).unwrap();
+                    assert!(
+                        resp.contains("\"ok\":true"),
+                        "bad response to {line}: {resp}"
+                    );
+                }
+            });
+        }
+    });
+}
+
+/// The old architecture's per-connection handler: blocking buffered
+/// reads, one thread per accepted socket.
+fn serve_blocking_conn(stream: TcpStream) {
+    let mut reader = BufReader::new(match stream.try_clone() {
+        Ok(s) => s,
+        Err(_) => return,
+    });
+    let mut writer = stream;
+    let mut buf = String::new();
+    loop {
+        buf.clear();
+        match reader.read_line(&mut buf) {
+            Ok(0) | Err(_) => return,
+            Ok(_) => {
+                let resp = dispatch_bench(buf.trim());
+                if writeln!(writer, "{}", resp.encode()).is_err() {
+                    return;
+                }
+            }
+        }
+    }
+}
+
+/// Measured request phase under thread-per-connection.  Returns secs.
+fn run_threaded(conns: usize, per_conn: usize) -> f64 {
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let local = listener.local_addr().unwrap();
+    let shutdown = AtomicBool::new(false);
+    let mut elapsed = 0.0;
+    std::thread::scope(|s| {
+        let shutdown = &shutdown;
+        let acceptor = s.spawn(move || {
+            std::thread::scope(|cs| {
+                for stream in listener.incoming() {
+                    if shutdown.load(Ordering::SeqCst) {
+                        break;
+                    }
+                    let Ok(stream) = stream else { break };
+                    cs.spawn(move || serve_blocking_conn(stream));
+                }
+            });
+        });
+        let st = time_it(0, 1, || run_clients(local, conns, per_conn));
+        elapsed = st.mean;
+        shutdown.store(true, Ordering::SeqCst);
+        let _ = TcpStream::connect(local); // poke the blocking acceptor
+        let _ = acceptor.join();
+    });
+    elapsed
+}
+
+/// Measured request phase under the shared event loop.  Returns secs.
+fn run_event_loop(conns: usize, per_conn: usize) -> f64 {
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let local = listener.local_addr().unwrap();
+    let shutdown = AtomicBool::new(false);
+    let mut elapsed = 0.0;
+    std::thread::scope(|s| {
+        let shutdown = &shutdown;
+        let looper = s.spawn(move || {
+            serve_event_loop(listener, shutdown, dispatch_bench).unwrap();
+        });
+        let st = time_it(0, 1, || run_clients(local, conns, per_conn));
+        elapsed = st.mean;
+        shutdown.store(true, Ordering::SeqCst);
+        let _ = looper.join();
+    });
+    elapsed
+}
+
+/// Sweep both modes across the concurrency ladder; returns rows of
+/// (conns, total_requests, threaded_secs, event_loop_secs).
+fn sweep(total_target: usize) -> Vec<(usize, usize, f64, f64)> {
+    let mut rows = Vec::new();
+    for &conns in &[1usize, 32, 256] {
+        let per_conn = (total_target / conns).max(1);
+        let total = conns * per_conn;
+        let thr = run_threaded(conns, per_conn);
+        let evt = run_event_loop(conns, per_conn);
+        rows.push((conns, total, thr, evt));
+    }
+    rows
+}
+
+fn json_main() {
+    const TOTAL_TARGET: usize = 2048;
+    let rows = sweep(TOTAL_TARGET);
+
+    let mut j = Json::obj();
+    j.set("bench", "server")
+        .set("total_requests_per_config", TOTAL_TARGET as u64)
+        .set("schema", 1);
+    let mut gate_ns = f64::NAN;
+    for &(conns, total, thr, evt) in &rows {
+        j.set(
+            &format!("threaded_c{conns}_ns_per_request"),
+            ns(thr) / total as f64,
+        )
+        .set(
+            &format!("threaded_c{conns}_requests_per_s"),
+            total as f64 / thr,
+        )
+        .set(
+            &format!("event_loop_c{conns}_ns_per_request"),
+            ns(evt) / total as f64,
+        )
+        .set(
+            &format!("event_loop_c{conns}_requests_per_s"),
+            total as f64 / evt,
+        );
+        if conns == 32 {
+            gate_ns = ns(evt) / total as f64;
+        }
+    }
+    j.set(perf::SERVER_METRIC, gate_ns);
+
+    // fail-closed gate against the committed baseline (record-only
+    // while the committed file is a placeholder without the metric)
+    let baseline = bench_json_path("server");
+    match perf::check_server(&baseline, gate_ns, perf::DEFAULT_MAX_REGRESSION)
+    {
+        Ok(v) => println!("server perf gate: {v:?}"),
+        Err(e) => {
+            eprintln!("{e:#}");
+            std::process::exit(1);
+        }
+    }
+    match perf::record_first_baseline_for(&baseline, perf::SERVER_METRIC, &j)
+        .expect("write baseline")
+    {
+        perf::BaselineDisposition::Recorded => {
+            println!(
+                "server baseline: first measured run RECORDED at {} — the \
+                 >{:.0}% regression gate bites from the next run",
+                baseline.display(),
+                perf::DEFAULT_MAX_REGRESSION * 100.0
+            );
+            println!("{}", j.pretty());
+        }
+        perf::BaselineDisposition::AlreadyMeasured => emit_json("server", &j),
+    }
+}
+
+fn main() {
+    if json_mode() {
+        return json_main();
+    }
+    header(
+        "Admin-plane transport (thread-per-conn vs event loop)",
+        &["Conns", "Requests", "Threaded", "Event loop", "Evt ns/req"],
+    );
+    let rows = sweep(2048);
+    for (conns, total, thr, evt) in rows {
+        println!(
+            "{conns} | {total} | {} | {} | {:.0}",
+            fmt_secs(thr),
+            fmt_secs(evt),
+            ns(evt) / total as f64
+        );
+    }
+    println!(
+        "\n(both modes run the same lazily-scanned dispatch; the delta is \
+         the connection layer)"
+    );
+}

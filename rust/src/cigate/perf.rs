@@ -187,6 +187,28 @@ pub fn check_wal_recovery(
     )
 }
 
+/// The server bench's gated metric: nanoseconds per request through
+/// the event-loop admin plane at the gate's reference concurrency
+/// (32 connections, mixed submit/poll/status workload).  It regresses
+/// when the hot dispatch path starts allocating trees again or the
+/// poll loop loses fairness under many connections.
+pub const SERVER_METRIC: &str = "event_loop_ns_per_request";
+
+/// Fail-closed gate over the committed `BENCH_server.json` baseline.
+pub fn check_server(
+    baseline_path: &Path,
+    measured_ns_per_request: f64,
+    max_regression: f64,
+) -> anyhow::Result<PerfVerdict> {
+    check_metric(
+        baseline_path,
+        SERVER_METRIC,
+        measured_ns_per_request,
+        max_regression,
+        "server bench (event-loop ns/request)",
+    )
+}
+
 /// Whether a measured run became the committed baseline.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum BaselineDisposition {
@@ -311,6 +333,40 @@ mod tests {
             BaselineDisposition::AlreadyMeasured
         );
         assert_eq!(load_metric(&path, FLEET_METRIC).unwrap(), Some(5.0));
+    }
+
+    #[test]
+    fn server_metric_gates_and_promotes() {
+        let dir = tempdir("perf-server-gate");
+        let path = dir.join("BENCH_server.json");
+        assert_eq!(
+            check_server(&path, 900.0, 0.2).unwrap(),
+            PerfVerdict::RecordOnly
+        );
+        std::fs::write(
+            &path,
+            r#"{"bench": "server", "event_loop_ns_per_request": null}"#,
+        )
+        .unwrap();
+        assert_eq!(
+            check_server(&path, 900.0, 0.2).unwrap(),
+            PerfVerdict::RecordOnly
+        );
+        let mut measured = Json::obj();
+        measured
+            .set("bench", "server")
+            .set(SERVER_METRIC, 900.0)
+            .set("schema", 1);
+        assert_eq!(
+            record_first_baseline_for(&path, SERVER_METRIC, &measured)
+                .unwrap(),
+            BaselineDisposition::Recorded
+        );
+        assert!(matches!(
+            check_server(&path, 1000.0, 0.2).unwrap(),
+            PerfVerdict::Pass { .. }
+        ));
+        assert!(check_server(&path, 1200.0, 0.2).is_err());
     }
 
     #[test]

@@ -36,14 +36,15 @@
 //! get typed `quarantined` outcomes, and healthy shards keep draining.
 //! `fleet_status` carries per-shard `health` rows.
 
-use std::net::{TcpListener, TcpStream};
+use std::net::TcpListener;
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Mutex};
 use std::time::Duration;
 
 use crate::controller::{ForgetRequest, UnlearnError};
-use crate::server::{JobPayload, JobQueue, JobStatus};
+use crate::server::{scan_err, JobPayload, JobQueue, JobStatus};
 use crate::util::json::{parse, Json};
+use crate::util::json_scan;
 
 use super::Fleet;
 
@@ -97,6 +98,17 @@ impl JobPayload for FleetJob {
         Ok(FleetJob {
             req: crate::server::parse_request(j)?,
             shard: j.get("shard").and_then(|v| v.as_u64()).map(|s| s as u32),
+        })
+    }
+
+    /// Lazy-scan mirror of [`JobPayload::from_json`] — recovery of a
+    /// large fleet backlog never builds a tree per WAL record.
+    fn from_raw(raw: &[u8]) -> anyhow::Result<FleetJob> {
+        Ok(FleetJob {
+            req: crate::server::parse_request_scan(raw)?,
+            shard: json_scan::scan_u64(raw, "shard")
+                .map_err(scan_err)?
+                .map(|s| s as u32),
         })
     }
 }
@@ -264,8 +276,7 @@ pub fn drain_fleet_once(ctx: &FleetCtx<'_, '_>) -> usize {
 /// panic inside a drain fails the claimed jobs loudly instead of
 /// stranding them as running-forever while the queue keeps acking.
 pub fn run_fleet_worker(ctx: &FleetCtx<'_, '_>) {
-    while ctx.jobs.wait_for_work() {
-        std::thread::sleep(ctx.coalesce_window);
+    while ctx.jobs.wait_for_burst(ctx.coalesce_window) {
         let drained = std::panic::catch_unwind(
             std::panic::AssertUnwindSafe(|| drain_fleet_once(ctx)),
         );
@@ -297,13 +308,16 @@ fn dispatch_inner(
     line: &str,
     ctx: &FleetCtx<'_, '_>,
 ) -> anyhow::Result<Json> {
-    let req = parse(line).map_err(|e| anyhow::anyhow!("bad json: {e}"))?;
-    let op = req
-        .get("op")
-        .and_then(|v| v.as_str())
+    // Hot path: lazy scans over the raw bytes, like the single-system
+    // server — `fleet_status`/`submit`/`poll`/`jobs`/`launder`/
+    // `utility`/`shutdown` never build a tree; `plan` (cold, takes the
+    // fleet lock for a full dry run) re-parses the validated line.
+    let b = line.as_bytes();
+    let op = json_scan::scan_str(b, "op")
+        .map_err(scan_err)?
         .ok_or_else(|| anyhow::anyhow!("missing op"))?;
     let mut out = Json::obj();
-    match op {
+    match op.as_ref() {
         "fleet_status" => {
             let fleet = ctx
                 .fleet
@@ -324,9 +338,10 @@ fn dispatch_inner(
                 );
         }
         "submit" => {
-            let freq = crate::server::parse_request(&req)?;
-            let shard =
-                req.get("shard").and_then(|v| v.as_u64()).map(|s| s as u32);
+            let freq = crate::server::parse_request_scan(b)?;
+            let shard = json_scan::scan_u64(b, "shard")
+                .map_err(scan_err)?
+                .map(|s| s as u32);
             if let Some(s) = shard {
                 let fleet = ctx.fleet.lock().map_err(|_| {
                     anyhow::Error::new(UnlearnError::LockPoisoned)
@@ -352,11 +367,10 @@ fn dispatch_inner(
                 .set("status", "queued");
         }
         "poll" => {
-            let job = req
-                .get("job")
-                .and_then(|v| v.as_str())
+            let job = json_scan::scan_str(b, "job")
+                .map_err(scan_err)?
                 .ok_or_else(|| anyhow::anyhow!("poll needs job"))?;
-            match ctx.jobs.poll(job) {
+            match ctx.jobs.poll(&job) {
                 Some(j) => {
                     out.set("ok", true);
                     if let Json::Obj(m) = &j {
@@ -372,6 +386,8 @@ fn dispatch_inner(
             out.set("ok", true).set("jobs", ctx.jobs.jobs_json());
         }
         "plan" => {
+            let req =
+                parse(line).map_err(|e| anyhow::anyhow!("bad json: {e}"))?;
             let freq = crate::server::parse_request(&req)?;
             let fleet = ctx
                 .fleet
@@ -381,11 +397,10 @@ fn dispatch_inner(
             out.set("ok", true);
         }
         "launder" => {
-            let id = req
-                .get("id")
-                .and_then(|v| v.as_str())
-                .unwrap_or("fleet-launder")
-                .to_string();
+            let id = json_scan::scan_str(b, "id")
+                .map_err(scan_err)?
+                .map(|s| s.into_owned())
+                .unwrap_or_else(|| "fleet-launder".to_string());
             let mut fleet = ctx
                 .fleet
                 .lock()
@@ -460,36 +475,21 @@ pub fn serve_fleet(
             wal_path.display()
         );
     }
-    std::thread::scope(|s| {
+    // the connection layer (poll loop, line cap, buffer ownership,
+    // shutdown flush) is shared with the single-system server so the
+    // transport hardening cannot drift between the two planes
+    let result = std::thread::scope(|s| {
         s.spawn(|| run_fleet_worker(&ctx));
-        for stream in listener.incoming() {
-            if ctx.shutdown.load(Ordering::SeqCst) {
-                break;
-            }
-            match stream {
-                Ok(stream) => {
-                    let ctx = &ctx;
-                    s.spawn(move || {
-                        if let Err(e) = handle_conn(stream, ctx, local) {
-                            eprintln!("fleet connection error: {e:#}");
-                        }
-                    });
-                }
-                Err(e) => eprintln!("fleet accept error: {e:#}"),
-            }
-        }
+        let r = crate::server::serve_event_loop(
+            listener,
+            &ctx.shutdown,
+            |line| dispatch_fleet(line, &ctx),
+        );
+        // release the worker for its final drain even if the loop
+        // returned on a setup error rather than a shutdown op
+        ctx.jobs.close();
+        ctx.shutdown.store(true, Ordering::SeqCst);
+        r
     });
-    Ok(())
-}
-
-fn handle_conn(
-    stream: TcpStream,
-    ctx: &FleetCtx<'_, '_>,
-    local: std::net::SocketAddr,
-) -> anyhow::Result<()> {
-    // the transport loop (timeouts, line cap, shutdown poke) is shared
-    // with the single-system server so hardening cannot drift
-    crate::server::serve_line_conn(stream, local, &ctx.shutdown, |line| {
-        dispatch_fleet(line, ctx)
-    })
+    result
 }

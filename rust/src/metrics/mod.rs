@@ -7,6 +7,15 @@ use std::time::Instant;
 
 use crate::util::json::Json;
 
+/// The repo's single sanctioned monotonic-clock read (this module is
+/// the detlint wall-clock allowlist).  Timeout/deadline arithmetic in
+/// the admin-plane event loop and the worker's coalescing wait goes
+/// through here so clock reads stay auditable in one place; the values
+/// never reach serialized or replayed state.
+pub fn monotonic_now() -> Instant {
+    Instant::now()
+}
+
 /// A registry of named counters and timing accumulators.
 #[derive(Debug, Default)]
 pub struct Metrics {

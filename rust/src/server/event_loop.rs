@@ -1,0 +1,419 @@
+//! Nonblocking admin-plane connection layer (shared by the
+//! single-system and fleet servers).
+//!
+//! The previous transport was thread-per-connection: N idle admin
+//! clients cost N parked threads, each burning a 200 ms read-timeout
+//! wakeup to observe shutdown.  This module replaces it with a single
+//! poll loop over nonblocking `std::net` sockets (no new deps — mio and
+//! tokio are not in the offline vendor set): one thread owns the
+//! listener and every registered connection, sweeping them for
+//! readiness with per-connection read/write buffers.
+//!
+//! ## Readiness loop
+//!
+//! `serve_event_loop` alternates two phases per sweep: drain the
+//! nonblocking accept queue, then [`Conn::pump`] every connection.  A
+//! pump flushes pending response bytes, reads one bounded chunk
+//! (`READ_CHUNK`, so one fast writer cannot starve its neighbors),
+//! dispatches every complete line, and reports whether it made
+//! progress.  When a full sweep makes none, the loop sleeps one
+//! `IDLE_TICK` — idle cost is one thread and one short timer for the
+//! whole plane, not a timer per client.
+//!
+//! ## Buffer ownership & hardening (unchanged wire contract)
+//!
+//! Each `Conn` owns its buffers; nothing is shared across connections.
+//! The hardening invariants of the old loop carry over verbatim and
+//! are re-proven by `tests/server_transport.rs` against this loop:
+//!
+//! - **1 MiB line cap**: a client streaming bytes with no newline gets
+//!   the same typed refusal, then the connection closes.
+//! - **EOF with a partial line** still dispatches the fragment (the
+//!   old `read_until` returned it at EOF), so a trailing unterminated
+//!   request gets its refusal before the close.
+//! - **Write stalls are bounded**: a client that stops reading is cut
+//!   off after `WRITE_STALL_LIMIT` instead of pinning buffers forever
+//!   (the old loop's 5 s write timeout, re-expressed for nonblocking
+//!   sockets).
+//! - **Shutdown**: the loop re-checks the flag every sweep — no
+//!   self-connect poke needed — then grants a bounded grace period to
+//!   flush already-queued responses (the shutdown ack itself).
+//!
+//! All deadline arithmetic reads the clock through
+//! [`crate::metrics::monotonic_now`], the detlint-sanctioned monotonic
+//! source; timeouts never reach serialized state.
+
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::time::{Duration, Instant};
+
+use crate::util::json::Json;
+
+/// Refuse request lines above this size (typed response, then close).
+pub(crate) const MAX_LINE_BYTES: usize = 1 << 20;
+
+/// Bytes read per pump: large enough for bulk transfers to move
+/// quickly, small enough that one firehose client cannot monopolize a
+/// sweep.
+const READ_CHUNK: usize = 16 * 1024;
+
+/// Sleep when a full sweep made no progress (the loop's only timer).
+/// Also the idle tick of the single-connection wrapper
+/// [`serve_line_conn`] — short enough that synchronous request/response
+/// round-trips over it stay sub-millisecond-ish, long enough that an
+/// idle plane is a timer, not a spin.
+const IDLE_TICK: Duration = Duration::from_millis(1);
+
+/// A connection whose writes make no progress for this long is closed
+/// (successor of the old per-stream 5 s write timeout).
+const WRITE_STALL_LIMIT: Duration = Duration::from_secs(5);
+
+/// How long shutdown waits for queued response bytes (e.g. the
+/// shutdown ack) to flush before the loop returns.
+const SHUTDOWN_FLUSH_GRACE: Duration = Duration::from_millis(500);
+
+/// Outcome of one [`Conn::pump`].
+enum Pump {
+    /// Bytes moved or lines dispatched this pump.
+    Progress,
+    /// Nothing to do; caller may sleep.
+    Idle,
+    /// Connection is finished (EOF / refusal / stall) and fully
+    /// flushed — drop it.
+    Close,
+}
+
+/// One registered connection: nonblocking stream + owned buffers.
+struct Conn {
+    stream: TcpStream,
+    /// Bytes received but not yet terminated by a newline.
+    rbuf: Vec<u8>,
+    /// Encoded responses not yet accepted by the kernel.
+    wbuf: Vec<u8>,
+    /// Prefix of `wbuf` already written.
+    wpos: usize,
+    /// No more reads; close once `wbuf` drains.
+    closing: bool,
+    /// Lines dispatched on this connection (drives the legacy shutdown
+    /// poke in [`serve_line_conn`]).
+    dispatched: u64,
+    /// When the current write stall started.
+    stalled_since: Option<Instant>,
+}
+
+impl Conn {
+    fn new(stream: TcpStream) -> std::io::Result<Conn> {
+        stream.set_nonblocking(true)?;
+        Ok(Conn {
+            stream,
+            rbuf: Vec::new(),
+            wbuf: Vec::new(),
+            wpos: 0,
+            closing: false,
+            dispatched: 0,
+            stalled_since: None,
+        })
+    }
+
+    fn queue_response(&mut self, resp: &Json) {
+        self.wbuf.extend_from_slice(resp.encode().as_bytes());
+        self.wbuf.push(b'\n');
+    }
+
+    fn pending_write(&self) -> bool {
+        self.wpos < self.wbuf.len()
+    }
+
+    /// Push buffered response bytes into the socket; true if any moved.
+    fn flush(&mut self) -> std::io::Result<bool> {
+        let mut progressed = false;
+        while self.pending_write() {
+            match self.stream.write(&self.wbuf[self.wpos..]) {
+                Ok(0) => {
+                    return Err(std::io::Error::from(
+                        std::io::ErrorKind::WriteZero,
+                    ))
+                }
+                Ok(n) => {
+                    self.wpos += n;
+                    progressed = true;
+                }
+                Err(e)
+                    if e.kind() == std::io::ErrorKind::WouldBlock =>
+                {
+                    break
+                }
+                Err(e)
+                    if e.kind() == std::io::ErrorKind::Interrupted =>
+                {
+                    continue
+                }
+                Err(e) => return Err(e),
+            }
+        }
+        if !self.pending_write() && self.wpos > 0 {
+            self.wbuf.clear();
+            self.wpos = 0;
+        }
+        Ok(progressed)
+    }
+
+    /// Dispatch every complete line in `rbuf`; stops early once the
+    /// shutdown flag flips (one op past shutdown is never served —
+    /// same contract as the old loop).
+    fn dispatch_lines(
+        &mut self,
+        shutdown: &AtomicBool,
+        dispatch_line: &impl Fn(&str) -> Json,
+    ) {
+        let mut start = 0;
+        while let Some(nl) =
+            self.rbuf[start..].iter().position(|&b| b == b'\n')
+        {
+            let end = start + nl;
+            let line = String::from_utf8_lossy(&self.rbuf[start..end]);
+            let resp = dispatch_line(line.trim());
+            self.wbuf.extend_from_slice(resp.encode().as_bytes());
+            self.wbuf.push(b'\n');
+            self.dispatched += 1;
+            start = end + 1;
+            if shutdown.load(Ordering::SeqCst) {
+                self.closing = true;
+                break;
+            }
+        }
+        if start > 0 {
+            self.rbuf.drain(..start);
+        }
+    }
+
+    /// One readiness step: flush, read a bounded chunk, dispatch.
+    fn pump(
+        &mut self,
+        shutdown: &AtomicBool,
+        dispatch_line: &impl Fn(&str) -> Json,
+    ) -> std::io::Result<Pump> {
+        let mut progressed = self.flush()?;
+        if self.pending_write() {
+            if progressed {
+                self.stalled_since = None;
+            } else {
+                let now = crate::metrics::monotonic_now();
+                match self.stalled_since {
+                    None => self.stalled_since = Some(now),
+                    Some(t0)
+                        if now.saturating_duration_since(t0)
+                            > WRITE_STALL_LIMIT =>
+                    {
+                        // client stopped reading: bounded, like the old
+                        // per-stream write timeout
+                        return Ok(Pump::Close);
+                    }
+                    Some(_) => {}
+                }
+            }
+        } else {
+            self.stalled_since = None;
+            if self.closing {
+                return Ok(Pump::Close);
+            }
+        }
+        if self.closing {
+            return Ok(if progressed { Pump::Progress } else { Pump::Idle });
+        }
+
+        let mut chunk = [0u8; READ_CHUNK];
+        match self.stream.read(&mut chunk) {
+            Ok(0) => {
+                // Peer EOF.  The old `read_until` loop returned a
+                // trailing unterminated fragment at EOF and dispatched
+                // it — preserve that: the fragment gets its (typically
+                // typed-refusal) response before the close.
+                if !self.rbuf.is_empty() {
+                    let line =
+                        String::from_utf8_lossy(&self.rbuf).into_owned();
+                    let resp = dispatch_line(line.trim());
+                    self.queue_response(&resp);
+                    self.dispatched += 1;
+                    self.rbuf.clear();
+                }
+                self.closing = true;
+                self.flush()?;
+                Ok(if self.pending_write() {
+                    Pump::Progress
+                } else {
+                    Pump::Close
+                })
+            }
+            Ok(n) => {
+                self.rbuf.extend_from_slice(&chunk[..n]);
+                self.dispatch_lines(shutdown, dispatch_line);
+                // cap AFTER extracting complete lines: only an
+                // unterminated line can grow without bound
+                if !self.closing && self.rbuf.len() > MAX_LINE_BYTES {
+                    let mut j = Json::obj();
+                    j.set("ok", false).set(
+                        "error",
+                        "request line exceeds 1 MiB — closing",
+                    );
+                    self.queue_response(&j);
+                    self.rbuf.clear();
+                    self.closing = true;
+                }
+                self.flush()?;
+                Ok(Pump::Progress)
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                Ok(if progressed { Pump::Progress } else { Pump::Idle })
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {
+                Ok(Pump::Progress)
+            }
+            Err(e) => Err(e),
+        }
+    }
+}
+
+/// Best-effort bounded flush of every connection's queued responses at
+/// shutdown (so the shutdown ack reaches its client), then drop them.
+fn drain_responses(conns: &mut Vec<Conn>) {
+    let t0 = crate::metrics::monotonic_now();
+    loop {
+        conns.retain_mut(|c| match c.flush() {
+            Ok(_) => c.pending_write(),
+            Err(_) => false,
+        });
+        if conns.is_empty() {
+            return;
+        }
+        if crate::metrics::monotonic_now().saturating_duration_since(t0)
+            >= SHUTDOWN_FLUSH_GRACE
+        {
+            return;
+        }
+        std::thread::sleep(IDLE_TICK);
+    }
+}
+
+/// Serve line-framed JSON on `listener` with a single poll-loop thread
+/// until `shutdown` flips.  `dispatch_line` maps one request line to
+/// one response object; it runs on the loop thread, so long-running
+/// work must go through the job queue (which is exactly how both admin
+/// planes are structured — `submit` acks immediately and the worker
+/// thread executes).
+pub fn serve_event_loop(
+    listener: TcpListener,
+    shutdown: &AtomicBool,
+    dispatch_line: impl Fn(&str) -> Json,
+) -> anyhow::Result<()> {
+    listener.set_nonblocking(true)?;
+    let mut conns: Vec<Conn> = Vec::new();
+    loop {
+        let mut progressed = false;
+        // phase 1: drain the accept queue
+        loop {
+            match listener.accept() {
+                Ok((stream, _peer)) => {
+                    progressed = true;
+                    match Conn::new(stream) {
+                        Ok(c) => conns.push(c),
+                        Err(e) => {
+                            eprintln!("connection setup error: {e:#}")
+                        }
+                    }
+                }
+                Err(e)
+                    if e.kind() == std::io::ErrorKind::WouldBlock =>
+                {
+                    break
+                }
+                Err(e)
+                    if e.kind() == std::io::ErrorKind::Interrupted =>
+                {
+                    continue
+                }
+                Err(e) => {
+                    eprintln!("accept error: {e:#}");
+                    break;
+                }
+            }
+        }
+        // phase 2: pump every connection
+        let mut i = 0;
+        while i < conns.len() {
+            match conns[i].pump(shutdown, &dispatch_line) {
+                Ok(Pump::Progress) => {
+                    progressed = true;
+                    i += 1;
+                }
+                Ok(Pump::Idle) => i += 1,
+                Ok(Pump::Close) => {
+                    progressed = true;
+                    conns.swap_remove(i);
+                }
+                Err(e) => {
+                    eprintln!("connection error: {e:#}");
+                    progressed = true;
+                    conns.swap_remove(i);
+                }
+            }
+        }
+        if shutdown.load(Ordering::SeqCst) {
+            drain_responses(&mut conns);
+            return Ok(());
+        }
+        if !progressed {
+            std::thread::sleep(IDLE_TICK);
+        }
+    }
+}
+
+/// The line-framed admin loop for ONE already-accepted connection —
+/// the transport contract of the old thread-per-connection handler,
+/// now expressed as a single-connection [`Conn::pump`] driver so the
+/// hardening (line cap, EOF-fragment dispatch, bounded writes,
+/// shutdown observation) exists exactly once.
+///
+/// - Bounded reads/writes and the 1 MiB cap: see [`Conn::pump`].
+/// - Shutdown poke: after serving the op that flipped the flag, a
+///   self-connect unblocks a legacy blocking acceptor even with no
+///   further clients (the event loop does not need it, but external
+///   thread-per-connection drivers like the transport tests still do).
+///
+/// `pub` so the adversarial transport suite can drive it over a real
+/// socket pair without standing up a full system behind it.
+pub fn serve_line_conn(
+    stream: TcpStream,
+    local: SocketAddr,
+    shutdown: &AtomicBool,
+    dispatch_line: impl Fn(&str) -> Json,
+) -> anyhow::Result<()> {
+    let mut conn = Conn::new(stream)?;
+    loop {
+        if shutdown.load(Ordering::SeqCst) {
+            // flag flipped elsewhere while this connection idled: flush
+            // whatever is queued and leave quietly (no poke — same as
+            // the old loop's top-of-iteration check)
+            let mut only = vec![conn];
+            drain_responses(&mut only);
+            return Ok(());
+        }
+        match conn.pump(shutdown, &dispatch_line) {
+            Ok(Pump::Close) => return Ok(()),
+            Ok(Pump::Progress) => {
+                if shutdown.load(Ordering::SeqCst) && conn.dispatched > 0 {
+                    // this connection served the op that flipped the
+                    // flag: flush the ack, then poke a legacy blocking
+                    // acceptor awake
+                    let mut only = vec![conn];
+                    drain_responses(&mut only);
+                    let _ = TcpStream::connect(local);
+                    return Ok(());
+                }
+            }
+            Ok(Pump::Idle) => std::thread::sleep(IDLE_TICK),
+            Err(e) => return Err(e.into()),
+        }
+    }
+}

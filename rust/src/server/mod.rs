@@ -9,9 +9,18 @@
 //!
 //! ## Architecture
 //!
-//! - **Thread per connection**: a stalled client never blocks other
-//!   admin traffic.  Controller actions stay serialized by the job
-//!   queue, not by connection handling.
+//! - **Event-loop connection layer** ([`event_loop`]): one nonblocking
+//!   poll loop owns every admin connection — N idle clients cost one
+//!   thread, and a stalled client never blocks other admin traffic
+//!   (per-connection buffers, bounded write stalls).  Controller
+//!   actions stay serialized by the job queue, not by connection
+//!   handling.
+//! - **Zero-alloc hot dispatch**: the hot ops (`submit`/`poll`/
+//!   `status`/`jobs`/`launder`/`shutdown`) extract their fields with
+//!   [`crate::util::json_scan`] lazy path scans over the raw line
+//!   bytes — no JSON tree is built; cold ops (`plan`, `forget`) still
+//!   tree-parse.  The scanner is property-tested byte-equivalent to
+//!   the tree parser, so the wire contract is unchanged.
 //! - **Async job queue**: `submit` enqueues and returns a job id
 //!   immediately; a single worker thread drains the queue with a
 //!   coalescing window and executes each drained batch through
@@ -55,8 +64,7 @@
 //! mark and the crash is harmless: idempotency keys suppress the
 //! double execution.
 
-use std::io::{BufRead, BufReader, Write};
-use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::net::TcpListener;
 use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Condvar, Mutex, RwLock};
@@ -72,6 +80,10 @@ use crate::data::corpus::Corpus;
 use crate::manifest::ForgetManifest;
 use crate::runtime::Runtime;
 use crate::util::json::{parse, Json};
+use crate::util::json_scan;
+
+mod event_loop;
+pub use event_loop::{serve_event_loop, serve_line_conn};
 
 /// Job lifecycle states.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -108,6 +120,18 @@ pub trait JobPayload: Clone + Send + 'static {
     fn to_json(&self) -> Json;
     /// Decode a WAL submit event's `request` object.
     fn from_json(j: &Json) -> anyhow::Result<Self>;
+    /// Decode a WAL submit event's `request` value from its raw bytes
+    /// (the recovery replay hot path).  The default round-trips
+    /// through the tree parser; payloads whose fields are flat
+    /// override it with [`crate::util::json_scan`] lazy scans so
+    /// replaying a large backlog never builds a tree per record.
+    fn from_raw(raw: &[u8]) -> anyhow::Result<Self> {
+        let s = std::str::from_utf8(raw).map_err(|e| {
+            anyhow::anyhow!("invalid utf-8 in WAL payload: {e}")
+        })?;
+        let j = parse(s).map_err(|e| anyhow::anyhow!("bad json: {e}"))?;
+        Self::from_json(&j)
+    }
 }
 
 /// What a job executes when the worker drains it.
@@ -179,6 +203,31 @@ impl JobPayload for JobRequest {
             Some(other) => anyhow::bail!("unknown job kind {other:?}"),
         }
     }
+
+    /// Lazy-scan mirror of [`JobPayload::from_json`] — same field
+    /// semantics (property-tested in `util::json_scan`), no tree.
+    fn from_raw(raw: &[u8]) -> anyhow::Result<JobRequest> {
+        match json_scan::scan_str(raw, "kind")
+            .map_err(scan_err)?
+            .as_deref()
+        {
+            Some("launder") => Ok(JobRequest::Launder {
+                id: json_scan::scan_str(raw, "id")
+                    .map_err(scan_err)?
+                    .map(|s| s.into_owned())
+                    .unwrap_or_default(),
+            }),
+            Some("forget") | None => {
+                Ok(JobRequest::Forget(parse_request_scan(raw)?))
+            }
+            Some(other) => anyhow::bail!("unknown job kind {other:?}"),
+        }
+    }
+}
+
+/// Scanner refusals surface exactly like tree-parser refusals.
+pub(crate) fn scan_err(e: json_scan::ScanError) -> anyhow::Error {
+    anyhow::anyhow!("bad json: {e}")
 }
 
 /// One submitted job.
@@ -251,50 +300,61 @@ impl<P: JobPayload> JobQueue<P> {
                 if line.trim().is_empty() {
                     continue;
                 }
-                let j = match parse(line) {
-                    Ok(j) => j,
-                    // A torn FINAL line is the expected crash artifact
-                    // of an interrupted append (completion marks are
-                    // not fsynced; a torn submit was never acked) —
-                    // drop it; compaction below rewrites a clean file.
-                    // Corruption anywhere else fails closed.
+                // Lazy scans instead of a tree per record: recovery
+                // needs only event/next/job plus the raw payload span.
+                // Every scan validates the whole line, so the torn-line
+                // policy is unchanged — a torn FINAL line is the
+                // expected crash artifact of an interrupted append
+                // (completion marks are not fsynced; a torn submit was
+                // never acked) and is dropped (compaction below
+                // rewrites a clean file); corruption anywhere else
+                // fails closed.  Only the first scan can hit a refusal:
+                // once it validates, the rest cannot fail.
+                let b = line.as_bytes();
+                let event = match json_scan::scan_str(b, "event") {
+                    Ok(ev) => ev,
                     Err(_) if lineno + 1 == lines.len() => break,
-                    Err(e) => anyhow::bail!("jobs WAL line {lineno}: {e}"),
+                    Err(e) => {
+                        anyhow::bail!("jobs WAL line {lineno}: {e}")
+                    }
                 };
                 // the id sequence's high-water mark, written at the head
                 // of every compacted file: completed jobs vanish from
                 // the suffix, but their ids must never be reused — a
                 // client's stale handle (or a derived auto-launder
                 // idempotency key) would silently alias a new job
-                if j.get("event").and_then(|v| v.as_str()) == Some("seq") {
-                    if let Some(n) = j.get("next").and_then(|v| v.as_u64()) {
+                if event.as_deref() == Some("seq") {
+                    if let Some(n) = json_scan::scan_u64(b, "next")
+                        .map_err(scan_err)?
+                    {
                         max_id = max_id.max(n.saturating_sub(1));
                     }
                     continue;
                 }
-                let job_id = j
-                    .get("job")
-                    .and_then(|v| v.as_str())
+                let job_id = json_scan::scan_str(b, "job")
+                    .map_err(scan_err)?
                     .ok_or_else(|| {
                         anyhow::anyhow!("jobs WAL line {lineno}: missing job")
                     })?
-                    .to_string();
+                    .into_owned();
                 if let Some(n) = job_id
                     .strip_prefix("job-")
                     .and_then(|s| s.parse::<u64>().ok())
                 {
                     max_id = max_id.max(n);
                 }
-                match j.get("event").and_then(|v| v.as_str()) {
+                match event.as_deref() {
                     Some("submit") => {
-                        let req = j.get("request").ok_or_else(|| {
-                            anyhow::anyhow!(
-                                "jobs WAL line {lineno}: missing request"
-                            )
-                        })?;
+                        let raw = json_scan::scan_raw(b, "request")
+                            .map_err(scan_err)?
+                            .ok_or_else(|| {
+                                anyhow::anyhow!(
+                                    "jobs WAL line {lineno}: missing request"
+                                )
+                            })?;
                         jobs.push(Job {
                             job_id,
-                            request: P::from_json(req)?,
+                            request: P::from_raw(raw)?,
                             status: JobStatus::Queued,
                             result: None,
                         });
@@ -508,21 +568,49 @@ impl<P: JobPayload> JobQueue<P> {
         }
     }
 
-    /// Block until a job is queued; returns false once the queue is
-    /// closed AND empty (everything acknowledged has been claimed).
-    pub(crate) fn wait_for_work(&self) -> bool {
+    /// Block until a job is queued, then linger up to `window` so a
+    /// burst coalesces into one drained batch.  Returns false once the
+    /// queue is closed AND empty (everything acknowledged has been
+    /// claimed).
+    ///
+    /// The idle phase is a plain condvar wait — an empty queue costs
+    /// zero wakeups (the old worker polled every 50 ms and then slept
+    /// a full coalescing window per drain, even when nothing else was
+    /// coming).  The linger phase is deadline-based `wait_timeout`
+    /// arithmetic and is cut short the moment `close()` flips, so
+    /// shutdown is prompt instead of paying the window.
+    pub(crate) fn wait_for_burst(&self, window: Duration) -> bool {
         let mut g = recover(self.table.lock());
+        // idle: wait for work or close (both notify_all this condvar)
         loop {
             if g.jobs.iter().any(|j| j.status == JobStatus::Queued) {
-                return true;
+                break;
             }
             if g.closed {
                 return false;
             }
-            let (g2, _) = recover(
-                self.cv.wait_timeout(g, Duration::from_millis(50)),
-            );
+            g = recover(self.cv.wait(g));
+        }
+        if g.closed {
+            // final drain — the burst is over by definition
+            return true;
+        }
+        // coalescing linger: bounded by a monotonic deadline
+        let start = crate::metrics::monotonic_now();
+        loop {
+            let elapsed = crate::metrics::monotonic_now()
+                .saturating_duration_since(start);
+            let Some(remaining) = window.checked_sub(elapsed) else {
+                return true;
+            };
+            if remaining.is_zero() {
+                return true;
+            }
+            let (g2, _) = recover(self.cv.wait_timeout(g, remaining));
             g = g2;
+            if g.closed {
+                return true; // shutdown: drain what we have, now
+            }
         }
     }
 }
@@ -826,14 +914,17 @@ pub fn drain_queue_once(ctx: &ServerCtx<'_, '_>) -> usize {
 
 /// The queue worker: waits for submissions, lingers one coalescing
 /// window so bursts batch up, then drains.  A submission acknowledged
-/// as "queued" is a promise: `wait_for_work` only returns false once
+/// as "queued" is a promise: `wait_for_burst` only returns false once
 /// the queue is closed AND empty (closing and enqueueing share one
 /// lock, so nothing acked can slip past the final drain), and a panic
 /// inside a drain fails the claimed jobs loudly instead of stranding
-/// them as running-forever while the queue keeps acking.
+/// them as running-forever while the queue keeps acking.  The
+/// coalescing linger lives inside `wait_for_burst` as condvar deadline
+/// arithmetic — an empty queue idles with no periodic wakeups and no
+/// fixed sleep per drain, and `close()` interrupts the linger so
+/// shutdown is prompt.
 pub fn run_worker(ctx: &ServerCtx<'_, '_>) {
-    while ctx.jobs.wait_for_work() {
-        std::thread::sleep(ctx.coalesce_window);
+    while ctx.jobs.wait_for_burst(ctx.coalesce_window) {
         let drained = std::panic::catch_unwind(
             std::panic::AssertUnwindSafe(|| drain_queue_once(ctx)),
         );
@@ -866,100 +957,19 @@ pub fn serve(
         eprintln!("recovered {recovered} pending job(s) from {}",
                   wal_path.display());
     }
-    std::thread::scope(|s| {
+    let result = std::thread::scope(|s| {
         s.spawn(|| run_worker(&ctx));
-        for stream in listener.incoming() {
-            if ctx.shutdown.load(Ordering::SeqCst) {
-                break;
-            }
-            match stream {
-                Ok(stream) => {
-                    let ctx = &ctx;
-                    s.spawn(move || {
-                        if let Err(e) = handle_conn(stream, ctx, local) {
-                            eprintln!("connection error: {e:#}");
-                        }
-                    });
-                }
-                Err(e) => eprintln!("accept error: {e:#}"),
-            }
-        }
+        let r = serve_event_loop(listener, &ctx.shutdown, |line| {
+            dispatch(line, &ctx)
+        });
+        // the loop only returns once shutdown flipped (or on a setup
+        // error) — either way, release the worker for its final drain
+        // so the scope join cannot hang
+        ctx.jobs.close();
+        ctx.shutdown.store(true, Ordering::SeqCst);
+        r
     });
-    Ok(())
-}
-
-fn handle_conn(
-    stream: TcpStream,
-    ctx: &ServerCtx<'_, '_>,
-    local: SocketAddr,
-) -> anyhow::Result<()> {
-    serve_line_conn(stream, local, &ctx.shutdown, |line| dispatch(line, ctx))
-}
-
-/// The line-framed admin connection loop, shared by the single-system
-/// and fleet servers so the transport hardening cannot drift between
-/// them.
-///
-/// - Bounded reads: the owning `thread::scope` joins every connection
-///   thread, so an idle client blocked in a read forever would keep
-///   the server alive after shutdown.  The timeout lets each handler
-///   observe the flag.  Reads go through a byte buffer (`read_until`),
-///   not `read_line`: on a timeout `read_line` discards its partial
-///   input when the buffered prefix ends mid UTF-8 character, while
-///   `read_until` keeps every byte across timeouts.
-/// - Bounded writes: a client that stops reading must not pin this
-///   thread in writeln! past shutdown.
-/// - Line cap: a client streaming bytes with no newline must not grow
-///   this thread's memory without bound.
-/// - Shutdown poke: after serving the op that flipped the flag, a
-///   self-connect unblocks the acceptor even with no further clients.
-///
-/// `pub` so the adversarial transport suite can drive it over a real
-/// socket pair without standing up a full system behind it.
-pub fn serve_line_conn(
-    stream: TcpStream,
-    local: SocketAddr,
-    shutdown: &AtomicBool,
-    dispatch_line: impl Fn(&str) -> Json,
-) -> anyhow::Result<()> {
-    stream.set_read_timeout(Some(Duration::from_millis(200)))?;
-    stream.set_write_timeout(Some(Duration::from_secs(5)))?;
-    let mut reader = BufReader::new(stream.try_clone()?);
-    let mut stream = stream;
-    let mut buf: Vec<u8> = Vec::new();
-    loop {
-        if shutdown.load(Ordering::SeqCst) {
-            return Ok(());
-        }
-        const MAX_LINE_BYTES: usize = 1 << 20;
-        if buf.len() > MAX_LINE_BYTES {
-            let mut j = Json::obj();
-            j.set("ok", false)
-                .set("error", "request line exceeds 1 MiB — closing");
-            let _ = writeln!(stream, "{}", j.encode());
-            return Ok(());
-        }
-        match reader.read_until(b'\n', &mut buf) {
-            Ok(0) => return Ok(()), // connection closed
-            Ok(_) => {
-                let line = String::from_utf8_lossy(&buf);
-                let response = dispatch_line(line.trim());
-                buf.clear();
-                writeln!(stream, "{}", response.encode())?;
-                if shutdown.load(Ordering::SeqCst) {
-                    let _ = TcpStream::connect(local);
-                    return Ok(());
-                }
-            }
-            Err(e)
-                if e.kind() == std::io::ErrorKind::WouldBlock
-                    || e.kind() == std::io::ErrorKind::TimedOut =>
-            {
-                continue; // recheck shutdown; partial bytes stay in buf
-            }
-            Err(e) => return Err(e.into()),
-        }
-    }
+    result
 }
 
 /// Execute one op (exposed for unit tests without sockets).
@@ -975,6 +985,35 @@ pub fn dispatch(line: &str, ctx: &ServerCtx<'_, '_>) -> Json {
             j
         }
     }
+}
+
+/// [`parse_request`] over raw line bytes via the zero-alloc lazy
+/// scanner — the hot `submit` path never builds a tree.  Field
+/// semantics are byte-equivalent to the tree path (the equivalence is
+/// property-tested in `util::json_scan`).
+pub(crate) fn parse_request_scan(b: &[u8]) -> anyhow::Result<ForgetRequest> {
+    let id = json_scan::scan_str(b, "id")
+        .map_err(scan_err)?
+        .ok_or_else(|| anyhow::anyhow!("request needs id"))?
+        .into_owned();
+    let user = json_scan::scan_u64(b, "user")
+        .map_err(scan_err)?
+        .map(|u| u as u32);
+    let sample_ids = json_scan::scan_u64s(b, "sample_ids")
+        .map_err(scan_err)?
+        .unwrap_or_default();
+    let urgency =
+        match json_scan::scan_str(b, "urgency").map_err(scan_err)?.as_deref()
+        {
+            Some("high") => Urgency::High,
+            _ => Urgency::Normal,
+        };
+    Ok(ForgetRequest {
+        id,
+        user,
+        sample_ids,
+        urgency,
+    })
 }
 
 /// Parse the request fields shared by `submit`, `plan` and `forget`
@@ -1033,13 +1072,18 @@ fn dispatch_inner(
     line: &str,
     ctx: &ServerCtx<'_, '_>,
 ) -> anyhow::Result<Json> {
-    let req = parse(line).map_err(|e| anyhow::anyhow!("bad json: {e}"))?;
-    let op = req
-        .get("op")
-        .and_then(|v| v.as_str())
+    // Hot path: one validating lazy scan pulls `op` straight from the
+    // raw bytes — no tree is built for `status`/`submit`/`poll`/
+    // `jobs`/`launder`/`shutdown`.  The scan validates the whole line,
+    // so malformed requests get the same typed "bad json" refusal the
+    // tree parser produced.  Cold ops (`plan`, `forget`) re-parse the
+    // already-validated line into a tree below.
+    let b = line.as_bytes();
+    let op = json_scan::scan_str(b, "op")
+        .map_err(scan_err)?
         .ok_or_else(|| anyhow::anyhow!("missing op"))?;
     let mut out = Json::obj();
-    match op {
+    match op.as_ref() {
         // ---- read plane: never takes the system lock -----------------
         "status" => {
             let snap = recover(ctx.snapshot.read()).clone();
@@ -1125,7 +1169,7 @@ fn dispatch_inner(
 
         // ---- job plane -----------------------------------------------
         "submit" => {
-            let freq = parse_request(&req)?;
+            let freq = parse_request_scan(b)?;
             // refused once the queue is closed for shutdown: an accepted
             // submission is a promise the departing worker could no
             // longer keep (the check shares the job-table lock with
@@ -1147,11 +1191,10 @@ fn dispatch_inner(
             // into a rewritten checkpoint lineage.  Queued like any
             // other job so it serializes with in-flight forget batches
             // (the worker drains the burst first, then launders).
-            let id = req
-                .get("id")
-                .and_then(|v| v.as_str())
-                .unwrap_or_default()
-                .to_string();
+            let id = json_scan::scan_str(b, "id")
+                .map_err(scan_err)?
+                .map(|s| s.into_owned())
+                .unwrap_or_default();
             let job = ctx
                 .jobs
                 .submit(JobRequest::Launder { id })?
@@ -1165,11 +1208,10 @@ fn dispatch_inner(
                 .set("status", "queued");
         }
         "poll" => {
-            let job = req
-                .get("job")
-                .and_then(|v| v.as_str())
+            let job = json_scan::scan_str(b, "job")
+                .map_err(scan_err)?
                 .ok_or_else(|| anyhow::anyhow!("poll needs job"))?;
-            match ctx.jobs.poll(job) {
+            match ctx.jobs.poll(&job) {
                 Some(j) => {
                     out.set("ok", true);
                     if let Json::Obj(m) = &j {
@@ -1186,7 +1228,11 @@ fn dispatch_inner(
         }
 
         // ---- write plane: typed poison containment -------------------
+        // (cold ops: tree-parse the already-validated line — these take
+        // the system lock and run replays, so a tree is noise here)
         "plan" => {
+            let req =
+                parse(line).map_err(|e| anyhow::anyhow!("bad json: {e}"))?;
             let freq = parse_request(&req)?;
             let sys = ctx
                 .system
@@ -1204,6 +1250,8 @@ fn dispatch_inner(
             }
         }
         "forget" => {
+            let req =
+                parse(line).map_err(|e| anyhow::anyhow!("bad json: {e}"))?;
             let freq = parse_request(&req)?;
             let mut sys = ctx
                 .system

@@ -1,0 +1,762 @@
+//! Zero-alloc lazy JSON path extraction over raw line bytes.
+//!
+//! The admin planes (`server`, `fleet::server`) receive one JSON object
+//! per line and, on the hot ops (`submit`/`poll`/`status`), need at most
+//! a handful of top-level fields.  Building a full [`crate::util::json`]
+//! tree per request allocates a `BTreeMap` plus a `String`/`Vec` per
+//! node just to read two keys and throw the rest away.  This module is
+//! a *visiting lexer*: it walks the raw bytes once, validating the
+//! whole document, and records only the span of the requested top-level
+//! key's value — no tree, and (for unescaped strings) no allocation at
+//! all (`Cow::Borrowed`).
+//!
+//! ## Equivalence contract
+//!
+//! Every scanner below is **byte-equivalent** to the tree path it
+//! replaces: for any input bytes `b`,
+//!
+//! * `scan_*(b, k)` errors **iff** `json::parse(str::from_utf8(b)?)`
+//!   errors (same acceptance of escapes, numbers, nesting, duplicate
+//!   keys, trailing garbage, truncation), and
+//! * on success, `scan_str(b, k) == tree.get(k).and_then(as_str)`,
+//!   `scan_u64(b, k) == tree.get(k).and_then(as_u64)` (including the
+//!   `f64 as u64` saturating-cast semantics), and `scan_u64s` matches
+//!   `as_arr` + `filter_map(as_u64)`.
+//!
+//! The contract is enforced by the adversarial property test at the
+//! bottom of this file, which fuzzes well-formed and mutilated
+//! documents against the tree parser: truncation must yield a typed
+//! error on both sides, never a divergent value.
+//!
+//! To keep the mirror auditable, the lexer methods below are structured
+//! one-to-one with `json.rs::Parser::{value,lit,number,string,array,
+//! object}` — same acceptance checks, same boundary arithmetic, same
+//! replacement-character and saturating-cast behavior.
+
+use std::borrow::Cow;
+use std::fmt;
+
+/// Typed refusal from the scanner: byte offset reached plus reason.
+/// Matches the *class* of `json::parse` errors (any malformed document
+/// is refused); exact messages are not part of the wire contract.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ScanError {
+    pub at: usize,
+    pub msg: String,
+}
+
+impl fmt::Display for ScanError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{} at byte {}", self.msg, self.at)
+    }
+}
+
+impl std::error::Error for ScanError {}
+
+/// Classified value just past the cursor, with enough span information
+/// to extract it lazily.  Strings carry the *inner* span (between the
+/// quotes) plus whether any escape sequence occurred — the unescaped
+/// form only materializes when a caller actually asks for that string.
+#[derive(Debug, Clone, Copy)]
+enum Kind {
+    Str { start: usize, end: usize, esc: bool },
+    Num { start: usize, end: usize },
+    Arr,
+    /// Object / bool / null — the typed getters all answer `None` for
+    /// these, matching the tree accessors.
+    Other,
+}
+
+/// A located top-level value: its classification plus the full raw
+/// byte span (used by [`scan_raw`] and the array re-walk).
+#[derive(Debug, Clone, Copy)]
+struct Hit {
+    kind: Kind,
+    start: usize,
+    end: usize,
+}
+
+struct Scan<'a> {
+    b: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Scan<'a> {
+    fn peek(&self) -> Option<u8> {
+        self.b.get(self.pos).copied()
+    }
+
+    fn skip_ws(&mut self) {
+        while matches!(self.peek(), Some(b' ' | b'\n' | b'\t' | b'\r')) {
+            self.pos += 1;
+        }
+    }
+
+    fn err(&self, msg: impl Into<String>) -> ScanError {
+        ScanError { at: self.pos, msg: msg.into() }
+    }
+
+    fn expect(&mut self, c: u8) -> Result<(), ScanError> {
+        if self.peek() == Some(c) {
+            self.pos += 1;
+            Ok(())
+        } else {
+            Err(self.err(format!(
+                "expected {:?}, got {:?}",
+                c as char,
+                self.peek().map(|b| b as char)
+            )))
+        }
+    }
+
+    /// Mirror of `Parser::value` — dispatch on the first non-ws byte.
+    fn value(&mut self) -> Result<Kind, ScanError> {
+        self.skip_ws();
+        match self.peek() {
+            Some(b'{') => {
+                self.object()?;
+                Ok(Kind::Other)
+            }
+            Some(b'[') => {
+                self.array()?;
+                Ok(Kind::Arr)
+            }
+            Some(b'"') => {
+                let (start, end, esc) = self.string_span()?;
+                Ok(Kind::Str { start, end, esc })
+            }
+            Some(b't') => self.lit("true"),
+            Some(b'f') => self.lit("false"),
+            Some(b'n') => self.lit("null"),
+            Some(c) if c == b'-' || c.is_ascii_digit() => {
+                let (start, end) = self.number()?;
+                Ok(Kind::Num { start, end })
+            }
+            other => Err(self.err(format!(
+                "unexpected {:?}",
+                other.map(|b| b as char)
+            ))),
+        }
+    }
+
+    fn lit(&mut self, word: &str) -> Result<Kind, ScanError> {
+        if self.b[self.pos..].starts_with(word.as_bytes()) {
+            self.pos += word.len();
+            Ok(Kind::Other)
+        } else {
+            Err(self.err(format!("expected literal {word}")))
+        }
+    }
+
+    /// Mirror of `Parser::number`: greedy lex of `-`/digits/`.eE+-`,
+    /// then the span must satisfy `str::parse::<f64>()`.
+    fn number(&mut self) -> Result<(usize, usize), ScanError> {
+        let start = self.pos;
+        if self.peek() == Some(b'-') {
+            self.pos += 1;
+        }
+        while let Some(c) = self.peek() {
+            if c.is_ascii_digit()
+                || matches!(c, b'.' | b'e' | b'E' | b'+' | b'-')
+            {
+                self.pos += 1;
+            } else {
+                break;
+            }
+        }
+        let s = std::str::from_utf8(&self.b[start..self.pos])
+            .expect("number span is ASCII");
+        if s.parse::<f64>().is_err() {
+            return Err(ScanError {
+                at: start,
+                msg: format!("bad number {s:?}"),
+            });
+        }
+        Ok((start, self.pos))
+    }
+
+    /// Mirror of `Parser::string`, recording the inner span instead of
+    /// materializing.  Validation is identical: same escape set, same
+    /// `\u` boundary check and hex parse, and the whole inner span must
+    /// be valid UTF-8 (escape sequences are pure ASCII, so whole-span
+    /// validity is equivalent to the tree parser's piecewise checks).
+    fn string_span(&mut self) -> Result<(usize, usize, bool), ScanError> {
+        self.expect(b'"')?;
+        let start = self.pos;
+        let mut esc = false;
+        loop {
+            match self.peek() {
+                None => return Err(self.err("unterminated string")),
+                Some(b'"') => {
+                    let end = self.pos;
+                    self.pos += 1;
+                    if std::str::from_utf8(&self.b[start..end]).is_err() {
+                        return Err(ScanError {
+                            at: start,
+                            msg: "invalid utf-8 in string".into(),
+                        });
+                    }
+                    return Ok((start, end, esc));
+                }
+                Some(b'\\') => {
+                    esc = true;
+                    self.pos += 1;
+                    match self.peek() {
+                        Some(
+                            b'"' | b'\\' | b'/' | b'n' | b't' | b'r' | b'b'
+                            | b'f',
+                        ) => {}
+                        Some(b'u') => {
+                            if self.pos + 4 >= self.b.len() {
+                                return Err(self.err("truncated \\u escape"));
+                            }
+                            let hex = std::str::from_utf8(
+                                &self.b[self.pos + 1..self.pos + 5],
+                            )
+                            .map_err(|_| self.err("bad \\u escape"))?;
+                            if u32::from_str_radix(hex, 16).is_err() {
+                                return Err(self.err("bad \\u escape"));
+                            }
+                            self.pos += 4;
+                        }
+                        other => {
+                            return Err(self.err(format!(
+                                "bad escape {:?}",
+                                other.map(|b| b as char)
+                            )))
+                        }
+                    }
+                    self.pos += 1;
+                }
+                Some(_) => self.pos += 1,
+            }
+        }
+    }
+
+    fn array(&mut self) -> Result<(), ScanError> {
+        self.expect(b'[')?;
+        self.skip_ws();
+        if self.peek() == Some(b']') {
+            self.pos += 1;
+            return Ok(());
+        }
+        loop {
+            self.value()?;
+            self.skip_ws();
+            match self.peek() {
+                Some(b',') => self.pos += 1,
+                Some(b']') => {
+                    self.pos += 1;
+                    return Ok(());
+                }
+                other => {
+                    return Err(self.err(format!(
+                        "expected ',' or ']', got {:?}",
+                        other.map(|b| b as char)
+                    )))
+                }
+            }
+        }
+    }
+
+    fn object(&mut self) -> Result<(), ScanError> {
+        self.expect(b'{')?;
+        self.skip_ws();
+        if self.peek() == Some(b'}') {
+            self.pos += 1;
+            return Ok(());
+        }
+        loop {
+            self.skip_ws();
+            self.string_span()?;
+            self.skip_ws();
+            self.expect(b':')?;
+            self.value()?;
+            self.skip_ws();
+            match self.peek() {
+                Some(b',') => self.pos += 1,
+                Some(b'}') => {
+                    self.pos += 1;
+                    return Ok(());
+                }
+                other => {
+                    return Err(self.err(format!(
+                        "expected ',' or '}}', got {:?}",
+                        other.map(|b| b as char)
+                    )))
+                }
+            }
+        }
+    }
+}
+
+/// Decode a validated inner string span into an owned `String`,
+/// byte-for-byte like `Parser::string` (same escape table, same
+/// `char::from_u32(..).unwrap_or(U+FFFD)` for unpaired surrogates).
+fn unescape(raw: &[u8]) -> String {
+    let mut out = String::with_capacity(raw.len());
+    let mut i = 0;
+    while i < raw.len() {
+        if raw[i] == b'\\' {
+            i += 1;
+            match raw[i] {
+                b'"' => out.push('"'),
+                b'\\' => out.push('\\'),
+                b'/' => out.push('/'),
+                b'n' => out.push('\n'),
+                b't' => out.push('\t'),
+                b'r' => out.push('\r'),
+                b'b' => out.push('\u{8}'),
+                b'f' => out.push('\u{c}'),
+                b'u' => {
+                    let hex = std::str::from_utf8(&raw[i + 1..i + 5])
+                        .expect("validated hex span");
+                    let cp = u32::from_str_radix(hex, 16)
+                        .expect("validated hex span");
+                    out.push(char::from_u32(cp).unwrap_or('\u{fffd}'));
+                    i += 4;
+                }
+                _ => unreachable!("span validated by string_span"),
+            }
+            i += 1;
+        } else {
+            let rest = std::str::from_utf8(&raw[i..])
+                .expect("span validated by string_span");
+            let ch = rest.chars().next().expect("non-empty rest");
+            out.push(ch);
+            i += ch.len_utf8();
+        }
+    }
+    out
+}
+
+fn key_matches(raw: &[u8], esc: bool, key: &str) -> bool {
+    if !esc {
+        raw == key.as_bytes()
+    } else {
+        unescape(raw) == key
+    }
+}
+
+/// Validate the whole document and locate the top-level `key`'s value.
+/// Duplicate keys: the **last** occurrence wins, matching the tree
+/// parser's `BTreeMap::insert`.  A non-object top level validates but
+/// yields no hit (the tree path's `get` on a non-object is `None`).
+fn find_top(b: &[u8], key: &str) -> Result<Option<Hit>, ScanError> {
+    let mut s = Scan { b, pos: 0 };
+    s.skip_ws();
+    let mut hit = None;
+    if s.peek() == Some(b'{') {
+        s.pos += 1;
+        s.skip_ws();
+        if s.peek() == Some(b'}') {
+            s.pos += 1;
+        } else {
+            loop {
+                s.skip_ws();
+                let (ks, ke, kesc) = s.string_span()?;
+                s.skip_ws();
+                s.expect(b':')?;
+                s.skip_ws();
+                let vstart = s.pos;
+                let kind = s.value()?;
+                if key_matches(&b[ks..ke], kesc, key) {
+                    hit = Some(Hit { kind, start: vstart, end: s.pos });
+                }
+                s.skip_ws();
+                match s.peek() {
+                    Some(b',') => s.pos += 1,
+                    Some(b'}') => {
+                        s.pos += 1;
+                        break;
+                    }
+                    other => {
+                        return Err(s.err(format!(
+                            "expected ',' or '}}', got {:?}",
+                            other.map(|c| c as char)
+                        )))
+                    }
+                }
+            }
+        }
+    } else {
+        s.value()?;
+    }
+    s.skip_ws();
+    if s.pos != b.len() {
+        return Err(s.err("trailing garbage"));
+    }
+    Ok(hit)
+}
+
+/// Validate `b` as one JSON document (accepts exactly what
+/// `json::parse` accepts; no value is materialized).
+pub fn validate(b: &[u8]) -> Result<(), ScanError> {
+    let mut s = Scan { b, pos: 0 };
+    s.value()?;
+    s.skip_ws();
+    if s.pos != b.len() {
+        return Err(s.err("trailing garbage"));
+    }
+    Ok(())
+}
+
+/// `tree.get(key).and_then(as_str)` without the tree.  Unescaped
+/// strings borrow straight from `b` (zero-alloc hot path).
+pub fn scan_str<'a>(
+    b: &'a [u8],
+    key: &str,
+) -> Result<Option<Cow<'a, str>>, ScanError> {
+    Ok(match find_top(b, key)? {
+        Some(Hit { kind: Kind::Str { start, end, esc }, .. }) => {
+            let raw = &b[start..end];
+            Some(if esc {
+                Cow::Owned(unescape(raw))
+            } else {
+                Cow::Borrowed(
+                    std::str::from_utf8(raw).expect("span validated"),
+                )
+            })
+        }
+        _ => None,
+    })
+}
+
+/// `tree.get(key).and_then(as_u64)` without the tree — including the
+/// tree path's `f64 as u64` saturating cast (negatives and NaN → 0,
+/// overflow → `u64::MAX`).
+pub fn scan_u64(b: &[u8], key: &str) -> Result<Option<u64>, ScanError> {
+    Ok(match find_top(b, key)? {
+        Some(Hit { kind: Kind::Num { start, end }, .. }) => {
+            let s = std::str::from_utf8(&b[start..end])
+                .expect("number span is ASCII");
+            let f: f64 = s.parse().expect("span validated");
+            Some(f as u64)
+        }
+        _ => None,
+    })
+}
+
+/// `tree.get(key).and_then(as_arr)` + `filter_map(as_u64)` without the
+/// tree: numeric elements collected, everything else skipped.
+pub fn scan_u64s(
+    b: &[u8],
+    key: &str,
+) -> Result<Option<Vec<u64>>, ScanError> {
+    let hit = match find_top(b, key)? {
+        Some(h @ Hit { kind: Kind::Arr, .. }) => h,
+        _ => return Ok(None),
+    };
+    // Re-walk the already-validated array span, keeping number elements.
+    let mut s = Scan { b, pos: hit.start };
+    s.expect(b'[').expect("span validated");
+    let mut out = Vec::new();
+    s.skip_ws();
+    if s.peek() == Some(b']') {
+        return Ok(Some(out));
+    }
+    loop {
+        let kind = s.value().expect("span validated");
+        if let Kind::Num { start, end } = kind {
+            let f: f64 = std::str::from_utf8(&b[start..end])
+                .expect("number span is ASCII")
+                .parse()
+                .expect("span validated");
+            out.push(f as u64);
+        }
+        s.skip_ws();
+        match s.peek() {
+            Some(b',') => s.pos += 1,
+            _ => break, // validated span: must be ']'
+        }
+    }
+    Ok(Some(out))
+}
+
+/// Raw byte span of `key`'s value (any kind), with the whole document
+/// validated.  The span is itself a valid standalone document, so
+/// nested payloads decode with further scans instead of a tree.
+pub fn scan_raw<'a>(
+    b: &'a [u8],
+    key: &str,
+) -> Result<Option<&'a [u8]>, ScanError> {
+    Ok(find_top(b, key)?.map(|h| &b[h.start..h.end]))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json::{parse, Json};
+    use crate::util::prop::for_all;
+    use crate::util::rng::SplitMix64;
+
+    #[test]
+    fn extracts_hot_submit_fields_without_tree() {
+        let line = br#"{"op":"submit","id":"req-1","user":42,"sample_ids":[3,1,2],"urgency":"high"}"#;
+        assert_eq!(scan_str(line, "op").unwrap().as_deref(), Some("submit"));
+        assert_eq!(scan_str(line, "id").unwrap().as_deref(), Some("req-1"));
+        assert_eq!(scan_u64(line, "user").unwrap(), Some(42));
+        assert_eq!(
+            scan_u64s(line, "sample_ids").unwrap(),
+            Some(vec![3, 1, 2])
+        );
+        assert_eq!(
+            scan_str(line, "urgency").unwrap().as_deref(),
+            Some("high")
+        );
+        assert_eq!(scan_str(line, "missing").unwrap(), None);
+    }
+
+    #[test]
+    fn unescaped_strings_borrow() {
+        let line = br#"{"op":"status"}"#;
+        match scan_str(line, "op").unwrap() {
+            Some(Cow::Borrowed(s)) => assert_eq!(s, "status"),
+            other => panic!("expected borrowed str, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn escaped_keys_and_values_match_tree() {
+        let line = br#"{"op":"a\nb","x":"\ud800"}"#;
+        let tree = parse(std::str::from_utf8(line).unwrap()).unwrap();
+        assert_eq!(
+            scan_str(line, "op").unwrap().as_deref(),
+            tree.get("op").and_then(Json::as_str)
+        );
+        // unpaired surrogate → U+FFFD on both sides
+        assert_eq!(
+            scan_str(line, "x").unwrap().as_deref(),
+            tree.get("x").and_then(Json::as_str)
+        );
+    }
+
+    #[test]
+    fn duplicate_keys_last_wins_like_btreemap() {
+        let line = br#"{"op":"first","op":"second"}"#;
+        let tree = parse(std::str::from_utf8(line).unwrap()).unwrap();
+        assert_eq!(tree.get("op").and_then(Json::as_str), Some("second"));
+        assert_eq!(scan_str(line, "op").unwrap().as_deref(), Some("second"));
+    }
+
+    #[test]
+    fn wrong_type_is_none_not_error() {
+        let line = br#"{"op":3,"job":"j","n":true}"#;
+        assert_eq!(scan_str(line, "op").unwrap(), None);
+        assert_eq!(scan_u64(line, "op").unwrap(), Some(3));
+        assert_eq!(scan_u64(line, "job").unwrap(), None);
+        assert_eq!(scan_u64(line, "n").unwrap(), None);
+        assert_eq!(scan_u64s(line, "op").unwrap(), None);
+    }
+
+    #[test]
+    fn saturating_cast_matches_tree() {
+        for line in [
+            br#"{"user":-3}"#.as_slice(),
+            br#"{"user":1e300}"#,
+            br#"{"user":2.9}"#,
+        ] {
+            let tree = parse(std::str::from_utf8(line).unwrap()).unwrap();
+            assert_eq!(
+                scan_u64(line, "user").unwrap(),
+                tree.get("user").and_then(Json::as_u64),
+            );
+        }
+    }
+
+    #[test]
+    fn truncation_is_typed_error_never_a_value() {
+        for line in [
+            br#"{"op":"sub"#.as_slice(),
+            br#"{"op""#,
+            br#"{"op":"#,
+            br#"{"op":"x",}"#,
+            br#"{"op":"x"} extra"#,
+            br#"{"op":1e}"#,
+            br#"{"op":"\u00"#,
+            b"",
+        ] {
+            assert!(scan_str(line, "op").is_err(), "accepted {line:?}");
+            assert!(
+                parse(&String::from_utf8_lossy(line)).is_err(),
+                "tree accepted {line:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn non_object_top_level_validates_to_none() {
+        assert_eq!(scan_str(b"[1,2,3]", "op").unwrap(), None);
+        assert_eq!(scan_str(b"42", "op").unwrap(), None);
+        assert_eq!(scan_str(b"null", "op").unwrap(), None);
+        assert!(validate(b"[1,{\"a\":[true,null]},\"x\"]").is_ok());
+    }
+
+    #[test]
+    fn scan_raw_yields_standalone_document() {
+        let line = br#"{"event":"submit","request":{"id":"r","user":7}}"#;
+        let raw = scan_raw(line, "request").unwrap().unwrap();
+        assert_eq!(scan_str(raw, "id").unwrap().as_deref(), Some("r"));
+        assert_eq!(scan_u64(raw, "user").unwrap(), Some(7));
+    }
+
+    // ---- adversarial equivalence property ----------------------------
+
+    const KEYS: &[&str] = &["op", "id", "user", "ids", "dup", "k\"q", "é"];
+
+    fn gen_string(r: &mut SplitMix64) -> String {
+        let pieces = [
+            "a", "xyz", "", "é", "日", "\\n", "\\t", "\\\\", "\\\"",
+            "\\/", "\\u0041", "\\u00e9", "\\ud800", "\\uffff", " ", "0",
+            "{", "[", ",", ":",
+        ];
+        let n = r.below(4);
+        let mut s = String::new();
+        for _ in 0..n {
+            s.push_str(pieces[r.below(pieces.len() as u64) as usize]);
+        }
+        s
+    }
+
+    fn gen_number(r: &mut SplitMix64) -> &'static str {
+        let nums = [
+            "0", "-0", "7", "42", "1.5", "-2.75e-3", "3e8", "1e309",
+            "-1e309", "18446744073709551616", "0.0001",
+        ];
+        nums[r.below(nums.len() as u64) as usize]
+    }
+
+    fn gen_value(r: &mut SplitMix64, depth: u32, out: &mut String) {
+        match if depth == 0 { r.below(5) } else { r.below(7) } {
+            0 => {
+                out.push('"');
+                out.push_str(&gen_string(r));
+                out.push('"');
+            }
+            1 => out.push_str(gen_number(r)),
+            2 => out.push_str("true"),
+            3 => out.push_str("false"),
+            4 => out.push_str("null"),
+            5 => {
+                out.push('[');
+                let n = r.below(4);
+                for i in 0..n {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    gen_value(r, depth - 1, out);
+                }
+                out.push(']');
+            }
+            _ => {
+                out.push('{');
+                let n = r.below(3);
+                for i in 0..n {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    out.push('"');
+                    out.push_str(&gen_string(r));
+                    out.push_str("\":");
+                    gen_value(r, depth - 1, out);
+                }
+                out.push('}');
+            }
+        }
+    }
+
+    /// Top-level object drawing keys from the fixed pool so lookups hit,
+    /// duplicates occur, and values span every kind.
+    fn gen_doc(r: &mut SplitMix64) -> String {
+        let mut s = String::from("{");
+        let n = r.below(6);
+        for i in 0..n {
+            if i > 0 {
+                s.push(',');
+            }
+            s.push('"');
+            let k = KEYS[r.below(KEYS.len() as u64) as usize];
+            if k == "k\"q" {
+                s.push_str("k\\\"q");
+            } else if k == "op" && r.below(8) == 0 {
+                s.push_str("o\\u0070"); // escaped spelling of "op"
+            } else {
+                s.push_str(k);
+            }
+            s.push_str("\": ");
+            gen_value(r, 2, &mut s);
+        }
+        s.push('}');
+        s
+    }
+
+    fn mutilate(r: &mut SplitMix64, doc: &str) -> String {
+        let idxs: Vec<usize> =
+            doc.char_indices().map(|(i, _)| i).collect();
+        if idxs.is_empty() {
+            return "x".into();
+        }
+        let cut = idxs[r.below(idxs.len() as u64) as usize];
+        match r.below(4) {
+            0 => doc[..cut].to_string(),
+            1 => format!("{doc}x"),
+            2 => format!("{}]{}", &doc[..cut], &doc[cut..]),
+            _ => format!("{},{}", &doc[..cut], &doc[cut..]),
+        }
+    }
+
+    #[test]
+    fn prop_scan_agrees_with_tree_parser_on_adversarial_docs() {
+        for_all("json_scan_vs_tree", |r| {
+            let mut doc = gen_doc(r);
+            if r.below(3) == 0 {
+                doc = mutilate(r, &doc);
+            }
+            let b = doc.as_bytes();
+            let tree = parse(&doc);
+            assert_eq!(
+                validate(b).is_ok(),
+                tree.is_ok(),
+                "acceptance diverged on {doc:?}: scan={:?} tree={:?}",
+                validate(b),
+                tree.as_ref().err(),
+            );
+            for key in KEYS {
+                let s = scan_str(b, key);
+                let u = scan_u64(b, key);
+                let a = scan_u64s(b, key);
+                match &tree {
+                    Err(_) => {
+                        assert!(s.is_err(), "scan_str accepted {doc:?}");
+                        assert!(u.is_err(), "scan_u64 accepted {doc:?}");
+                        assert!(a.is_err(), "scan_u64s accepted {doc:?}");
+                    }
+                    Ok(t) => {
+                        assert_eq!(
+                            s.unwrap().as_deref(),
+                            t.get(key).and_then(Json::as_str),
+                            "scan_str({key:?}) diverged on {doc:?}"
+                        );
+                        assert_eq!(
+                            u.unwrap(),
+                            t.get(key).and_then(Json::as_u64),
+                            "scan_u64({key:?}) diverged on {doc:?}"
+                        );
+                        let want = t.get(key).and_then(Json::as_arr).map(
+                            |xs| {
+                                xs.iter()
+                                    .filter_map(Json::as_u64)
+                                    .collect::<Vec<u64>>()
+                            },
+                        );
+                        assert_eq!(
+                            a.unwrap(),
+                            want,
+                            "scan_u64s({key:?}) diverged on {doc:?}"
+                        );
+                    }
+                }
+            }
+        });
+    }
+}

@@ -7,6 +7,7 @@ pub mod compress;
 pub mod faultfs;
 pub mod hashing;
 pub mod json;
+pub mod json_scan;
 pub mod prop;
 pub mod rng;
 pub mod simd;

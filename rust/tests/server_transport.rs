@@ -10,7 +10,7 @@ use std::sync::atomic::{AtomicBool, Ordering};
 use std::time::Duration;
 
 use unlearn::controller::{ForgetRequest, Urgency};
-use unlearn::server::{serve_line_conn, JobQueue, JobRequest};
+use unlearn::server::{serve_event_loop, serve_line_conn, JobQueue, JobRequest};
 use unlearn::util::json::{parse, Json};
 use unlearn::util::tempdir;
 
@@ -169,5 +169,194 @@ fn partial_line_then_disconnect_leaves_queue_consistent() {
     assert_eq!(
         rows[0].get("request_id").and_then(|v| v.as_str()),
         Some("t-1")
+    );
+}
+
+// ---------------------------------------------------------------------
+// Event-loop transport: the same adversarial contract, but against the
+// shared nonblocking poll loop (`serve_event_loop`) serving MANY
+// connections from one thread.
+// ---------------------------------------------------------------------
+
+/// Run `serve_event_loop` on an ephemeral listener against a WAL-backed
+/// queue; run `client` with the address, then flip shutdown and join.
+fn with_event_loop(
+    shutdown: &AtomicBool,
+    client: impl FnOnce(std::net::SocketAddr) + Send,
+) -> (anyhow::Result<()>, JobQueue<JobRequest>) {
+    let q = JobQueue::<JobRequest>::with_wal(
+        &tempdir("transport-evt").join("jobs.wal"),
+    )
+    .unwrap();
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let local = listener.local_addr().unwrap();
+    let mut served = Err(anyhow::anyhow!("loop never ran"));
+    std::thread::scope(|s| {
+        let looper = s.spawn(|| {
+            serve_event_loop(listener, shutdown, |line| {
+                dispatch_submit(line, &q)
+            })
+        });
+        client(local);
+        shutdown.store(true, Ordering::SeqCst);
+        served = looper.join().unwrap();
+    });
+    (served, q)
+}
+
+/// One round-trip submit over an existing connection.
+fn submit_roundtrip(conn: &mut TcpStream, id: &str) -> Json {
+    conn.write_all(
+        format!("{{\"op\":\"submit\",\"id\":\"{id}\",\"user\":7}}\n")
+            .as_bytes(),
+    )
+    .unwrap();
+    let mut r = BufReader::new(conn.try_clone().unwrap());
+    let mut line = String::new();
+    r.read_line(&mut line).unwrap();
+    parse(line.trim()).expect("response is valid json")
+}
+
+#[test]
+fn event_loop_multiplexes_past_a_slow_loris() {
+    let shutdown = AtomicBool::new(false);
+    let (served, q) = with_event_loop(&shutdown, |addr| {
+        // a slow-loris client parks a PARTIAL frame on the loop and
+        // holds the socket open — under thread-per-conn this costs a
+        // thread; under a single blocking read it would stall everyone
+        let mut loris = TcpStream::connect(addr).unwrap();
+        loris
+            .set_read_timeout(Some(Duration::from_secs(10)))
+            .unwrap();
+        loris
+            .write_all(b"{\"op\":\"submit\",\"id\":\"loris")
+            .unwrap();
+        loris.flush().unwrap();
+
+        // 8 well-behaved clients all complete full round-trips while
+        // the loris frame sits unfinished (read timeout = the test's
+        // stall detector: a blocked loop fails these reads)
+        for c in 0..8 {
+            let mut conn = TcpStream::connect(addr).unwrap();
+            conn.set_read_timeout(Some(Duration::from_secs(10)))
+                .unwrap();
+            let j = submit_roundtrip(&mut conn, &format!("fast-{c}"));
+            assert_eq!(
+                j.get("ok").and_then(|v| v.as_bool()),
+                Some(true),
+                "fast client {c} served while loris stalls: {j:?}"
+            );
+        }
+
+        // the loris finally completes its line and is served too
+        loris.write_all(b"\",\"user\":1}\n").unwrap();
+        let mut r = BufReader::new(loris);
+        let mut line = String::new();
+        r.read_line(&mut line).unwrap();
+        let j = parse(line.trim()).unwrap();
+        assert_eq!(j.get("ok").and_then(|v| v.as_bool()), Some(true));
+    });
+    served.expect("event loop exits cleanly");
+    assert_eq!(q.queued_len(), 9, "8 fast submits + the completed loris");
+}
+
+#[test]
+fn event_loop_refuses_oversized_line_without_harming_neighbors() {
+    let shutdown = AtomicBool::new(false);
+    let (served, q) = with_event_loop(&shutdown, |addr| {
+        let mut flooder = TcpStream::connect(addr).unwrap();
+        flooder
+            .set_read_timeout(Some(Duration::from_secs(10)))
+            .unwrap();
+        let blob = vec![b'a'; (1 << 20) + 1];
+        flooder.write_all(&blob).unwrap();
+        flooder.flush().unwrap();
+
+        let mut r = BufReader::new(flooder);
+        let mut line = String::new();
+        r.read_line(&mut line).unwrap();
+        let j = parse(line.trim()).expect("typed refusal is valid json");
+        assert_eq!(j.get("ok").and_then(|v| v.as_bool()), Some(false));
+        assert!(
+            j.get("error")
+                .and_then(|v| v.as_str())
+                .unwrap()
+                .contains("exceeds 1 MiB"),
+            "refusal names the line cap"
+        );
+        let mut rest = Vec::new();
+        assert_eq!(r.read_to_end(&mut rest).unwrap(), 0, "flooder closed");
+
+        // the loop is still healthy for everyone else
+        let mut conn = TcpStream::connect(addr).unwrap();
+        conn.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+        let j = submit_roundtrip(&mut conn, "after-flood");
+        assert_eq!(j.get("ok").and_then(|v| v.as_bool()), Some(true));
+    });
+    served.expect("event loop survives the flood");
+    assert_eq!(q.queued_len(), 1, "only the honest submit was enqueued");
+}
+
+#[test]
+fn event_loop_idle_connections_observe_shutdown() {
+    let shutdown = AtomicBool::new(false);
+    let (served, q) = with_event_loop(&shutdown, |addr| {
+        // several clients connect and say nothing
+        let conns: Vec<TcpStream> = (0..4)
+            .map(|_| {
+                let c = TcpStream::connect(addr).unwrap();
+                c.set_read_timeout(Some(Duration::from_secs(5))).unwrap();
+                c
+            })
+            .collect();
+        std::thread::sleep(Duration::from_millis(50));
+        shutdown.store(true, Ordering::SeqCst);
+        // the loop notices within an idle tick, drains and drops every
+        // connection: each idle client sees EOF, not a hang
+        for c in conns {
+            let mut r = BufReader::new(c);
+            let mut line = String::new();
+            assert_eq!(
+                r.read_line(&mut line).unwrap(),
+                0,
+                "idle connection closed by shutdown"
+            );
+        }
+    });
+    served.expect("event loop returned cleanly on shutdown");
+    assert_eq!(q.queued_len(), 0);
+}
+
+#[test]
+fn event_loop_partial_line_then_disconnect_never_enqueues() {
+    let shutdown = AtomicBool::new(false);
+    let (served, q) = with_event_loop(&shutdown, |addr| {
+        let mut conn = TcpStream::connect(addr).unwrap();
+        conn.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+        let j = submit_roundtrip(&mut conn, "e-1");
+        assert_eq!(j.get("ok").and_then(|v| v.as_bool()), Some(true));
+
+        // torn mid-line by a disconnect: dispatched as a fragment,
+        // refused, never enqueued
+        conn.write_all(b"{\"op\":\"submit\",\"id\":\"e-2\"").unwrap();
+        conn.flush().unwrap();
+        conn.shutdown(Shutdown::Write).unwrap();
+
+        let mut r = BufReader::new(conn);
+        let mut line = String::new();
+        r.read_line(&mut line).unwrap();
+        let j = parse(line.trim()).expect("refusal is valid json");
+        assert_eq!(j.get("ok").and_then(|v| v.as_bool()), Some(false));
+    });
+    served.expect("event loop exits cleanly after client disconnect");
+    assert_eq!(
+        q.queued_len(),
+        1,
+        "exactly the complete request is queued — the torn one is not"
+    );
+    let Json::Arr(rows) = q.jobs_json() else { panic!() };
+    assert_eq!(
+        rows[0].get("request_id").and_then(|v| v.as_str()),
+        Some("e-1")
     );
 }
