@@ -1,0 +1,206 @@
+//! Replica serving-plane benchmark: the **erasure-propagation SLA**.
+//!
+//! Trains a small fleet, attaches read replicas to the forgotten
+//! user's shard, then measures wall time from forget submission until
+//! EVERY replica serves the laundered (clean) lineage — the number a
+//! regulator actually cares about, covering the forget commit, the
+//! launder replay + atomic lineage swap, and the replicas' CAS
+//! re-sync.  Also records the transfer accounting that makes the SLA
+//! cheap: content addressing means a launder re-sync ships only the
+//! rewritten tensors (asserted strictly below the cold-mirror bill).
+//!
+//! `-- --json` gates `erasure_propagation_ms` against the committed
+//! `BENCH_replica.json` through the same >20% cigate rule as the
+//! other benches, with first-measured-run promotion over the null
+//! placeholder.
+
+#[path = "bench_util.rs"]
+mod bench_util;
+use bench_util::*;
+
+use std::time::Instant;
+
+use unlearn::cigate::perf;
+use unlearn::config::RunConfig;
+use unlearn::controller::{ForgetRequest, LaunderPolicy, Urgency};
+use unlearn::fleet::{Fleet, FleetConfig};
+use unlearn::harness;
+use unlearn::runtime::Runtime;
+use unlearn::shard::ShardSpec;
+use unlearn::util::json::Json;
+
+/// Replicas attached to the forgotten user's shard — the SLA is the
+/// max over them, so more than one makes the fan-out real.
+const N_REPLICAS: usize = 2;
+
+const FORGET_USER: u32 = 2;
+
+struct Probe {
+    cold_bytes: u64,
+    cold_objects: usize,
+    resync_bytes: u64,
+    resync_objects: usize,
+    reused_objects: usize,
+    /// Forget submit → every replica clean (the gated SLA).
+    propagation_ms: f64,
+    /// Launder trigger → every replica clean (the `fleet_status` view).
+    launder_to_clean_ms: Option<f64>,
+}
+
+fn run_probe(rt: &Runtime, tag: &str) -> Probe {
+    let corpus = harness::toy_corpus(rt.manifest.seq_len);
+    let cfg = FleetConfig {
+        root: unlearn::util::tempdir(tag),
+        spec: ShardSpec {
+            n_shards: 2,
+            salt: 0xF1EE7,
+        },
+        base: RunConfig {
+            steps: 8,
+            accum: 2,
+            checkpoint_every: 4,
+            checkpoint_keep: 16,
+            ring_window: 2,
+            warmup: 2,
+            ..Default::default()
+        },
+        scale_steps: false,
+        // any pending forgotten set makes laundering due immediately:
+        // the bench measures propagation, not the trigger policy
+        launder_policy: LaunderPolicy {
+            min_extra_replay_records: 0,
+        },
+        auto_launder: false,
+    };
+    let mut fleet = Fleet::train(rt, cfg, corpus).expect("fleet train");
+    let shard = fleet.spec.assign(FORGET_USER);
+    let (mut cold_bytes, mut cold_objects) = (0u64, 0usize);
+    for r in 0..N_REPLICAS {
+        let dir = unlearn::util::tempdir(&format!("{tag}-replica-{r}"));
+        let (_, stats) = fleet.attach_replica(shard, &dir).expect("attach");
+        cold_bytes += stats.bytes_pulled;
+        cold_objects += stats.objects_pulled;
+    }
+    let req = ForgetRequest {
+        id: "bench-replica".to_string(),
+        user: Some(FORGET_USER),
+        sample_ids: vec![],
+        urgency: Urgency::Normal,
+    };
+    let t0 = Instant::now();
+    let out = fleet.forget(&req).expect("fleet forget");
+    assert!(out.outcomes[0].executed(), "forget must commit");
+    let laundered = fleet.launder_due("bench-replica");
+    assert!(
+        laundered
+            .iter()
+            .any(|(s, r)| *s == shard && matches!(r, Ok(o) if o.executed)),
+        "the forgotten user's shard must launder"
+    );
+    let propagation_ms = t0.elapsed().as_secs_f64() * 1e3;
+    let (mut resync_bytes, mut resync_objects, mut reused_objects) =
+        (0u64, 0usize, 0usize);
+    for att in fleet.replicas() {
+        assert_eq!(
+            att.replica.lag().expect("source generation"),
+            0,
+            "every replica must serve the laundered lineage"
+        );
+        let s = att.replica.last_sync().expect("synced during launder");
+        resync_bytes += s.bytes_pulled;
+        resync_objects += s.objects_pulled;
+        reused_objects += s.objects_reused;
+    }
+    assert!(
+        resync_bytes < cold_bytes,
+        "dedup bound: launder re-sync ({resync_bytes} B) must ship \
+         strictly fewer bytes than the cold mirrors ({cold_bytes} B)"
+    );
+    Probe {
+        cold_bytes,
+        cold_objects,
+        resync_bytes,
+        resync_objects,
+        reused_objects,
+        propagation_ms,
+        launder_to_clean_ms: fleet.last_propagation_ms,
+    }
+}
+
+fn json_main() {
+    let rt = Runtime::load(&harness::artifacts_dir()).expect("artifacts");
+    let p = run_probe(&rt, "bench-replica-json");
+
+    // fail-closed gate against the committed baseline
+    let baseline = bench_json_path("replica");
+    match perf::check_replica(
+        &baseline,
+        p.propagation_ms,
+        perf::DEFAULT_MAX_REGRESSION,
+    ) {
+        Ok(v) => println!("replica perf gate: {v:?}"),
+        Err(e) => {
+            eprintln!("{e:#}");
+            std::process::exit(1);
+        }
+    }
+
+    let mut j = Json::obj();
+    j.set("bench", "replica")
+        .set(perf::REPLICA_METRIC, p.propagation_ms)
+        .set(
+            "launder_to_clean_ms",
+            p.launder_to_clean_ms.map(Json::from).unwrap_or(Json::Null),
+        )
+        .set("replicas", N_REPLICAS)
+        .set("cold_sync_bytes", p.cold_bytes)
+        .set("cold_sync_objects", p.cold_objects)
+        .set("launder_resync_bytes", p.resync_bytes)
+        .set("launder_resync_objects", p.resync_objects)
+        .set("launder_reused_objects", p.reused_objects)
+        .set("schema", 1);
+    match perf::record_first_baseline_for(&baseline, perf::REPLICA_METRIC, &j)
+        .expect("write baseline")
+    {
+        perf::BaselineDisposition::Recorded => {
+            println!(
+                "replica baseline: first measured run RECORDED at {} — the \
+                 >{:.0}% regression gate bites from the next run",
+                baseline.display(),
+                perf::DEFAULT_MAX_REGRESSION * 100.0
+            );
+            println!("{}", j.pretty());
+        }
+        perf::BaselineDisposition::AlreadyMeasured => emit_json("replica", &j),
+    }
+}
+
+fn main() {
+    if json_mode() {
+        return json_main();
+    }
+    let rt = Runtime::load(&harness::artifacts_dir()).expect("artifacts");
+    let p = run_probe(&rt, "bench-replica");
+    header(
+        "Erasure propagation (forget submit → every replica clean)",
+        &["metric", "value"],
+    );
+    println!(
+        "propagation | {}",
+        fmt_secs(p.propagation_ms / 1e3)
+    );
+    if let Some(ms) = p.launder_to_clean_ms {
+        println!("launder→clean | {}", fmt_secs(ms / 1e3));
+    }
+    println!(
+        "cold sync | {} in {} objects",
+        fmt_bytes(p.cold_bytes),
+        p.cold_objects
+    );
+    println!(
+        "launder re-sync | {} in {} objects ({} reused)",
+        fmt_bytes(p.resync_bytes),
+        p.resync_objects,
+        p.reused_objects
+    );
+}

@@ -907,6 +907,255 @@ pub fn state_tensor_hashes(state: &TrainState) -> HashSet<String> {
     out
 }
 
+// ---------------------------------------------------------------------------
+// Read-side CAS export/import — the replica sync protocol's primitive layer.
+//
+// These are free path-based functions rather than `CheckpointStore`
+// methods on purpose: `CheckpointStore::open` retires every non-active
+// lineage directory, which on a replica mid-pull would destroy the
+// generation being staged.  The import side only ever creates or
+// replaces files under a NON-active generation directory and swaps
+// `LINEAGE.json` last, so a crash at any point leaves the mirror
+// serving the old generation — the eventual `open` sweep is the
+// recovery path (old-or-new, never mixed).
+// ---------------------------------------------------------------------------
+
+fn lineage_dir_of(root: &Path, generation: u64) -> PathBuf {
+    root.join("lineages").join(format!("gen-{generation:08}"))
+}
+
+fn object_path_of(root: &Path, hash: &str) -> PathBuf {
+    root.join("objects").join(hash)
+}
+
+/// One manifest file of an exported lineage, by name and full text.
+/// Shipping the exact bytes (not a re-encode) keeps the mirror
+/// byte-identical to the source lineage directory.
+#[derive(Debug, Clone)]
+pub struct ExportedManifest {
+    /// File name inside the lineage dir (`ckpt-…`/`micro-…`.json).
+    pub name: String,
+    /// Verbatim manifest text.
+    pub contents: String,
+}
+
+/// A source store's active lineage, flattened for transfer: the
+/// manifests plus the sorted set of object hashes they reference.
+/// Objects themselves are pulled separately (and only if missing —
+/// content addressing makes the pull a byte-level diff).
+#[derive(Debug, Clone)]
+pub struct CasSnapshot {
+    /// Generation this snapshot captures.
+    pub generation: u64,
+    /// Manifest files, sorted by name.
+    pub manifests: Vec<ExportedManifest>,
+    /// Verbatim `laundered.json` text, if the lineage has one.
+    pub laundered: Option<String>,
+    /// Every object hash any manifest references — sorted, deduped.
+    pub object_hashes: Vec<String>,
+}
+
+/// The active generation recorded in a store root's `LINEAGE.json`.
+/// Errors if the file is absent (no store, or a mirror that never
+/// completed a first sync) — callers treat that as "nothing adopted".
+pub fn read_generation(root: &Path) -> anyhow::Result<u64> {
+    let text = fs::read_to_string(root.join("LINEAGE.json"))?;
+    let j = parse(&text).map_err(|e| anyhow::anyhow!("bad LINEAGE.json: {e}"))?;
+    j.get("active")
+        .and_then(|v| v.as_u64())
+        .ok_or_else(|| anyhow::anyhow!("LINEAGE.json missing 'active'"))
+}
+
+/// Export the active lineage of the store at `root` for replication.
+/// Read-only; safe against a live writer because a lineage's manifest
+/// set only changes through whole-file tmp+rename writes.
+pub fn export_snapshot(root: &Path) -> anyhow::Result<CasSnapshot> {
+    let generation = read_generation(root)?;
+    let dir = lineage_dir_of(root, generation);
+    let mut names: Vec<String> = Vec::new();
+    for e in fs::read_dir(&dir)? {
+        let name = e?.file_name().to_string_lossy().into_owned();
+        let is_manifest = (name.starts_with("ckpt-")
+            || name.starts_with("micro-"))
+            && name.ends_with(".json");
+        if is_manifest {
+            names.push(name);
+        }
+    }
+    names.sort_unstable();
+    let mut manifests = Vec::with_capacity(names.len());
+    let mut object_hashes: Vec<String> = Vec::new();
+    for name in names {
+        let path = dir.join(&name);
+        let contents = fs::read_to_string(&path)?;
+        let meta = parse(&contents).map_err(|e| {
+            anyhow::Error::new(StoreError::CorruptManifest {
+                path: path.display().to_string(),
+                detail: e.to_string(),
+            })
+        })?;
+        for key in ["params_sha256", "m_sha256", "v_sha256"] {
+            if let Some(h) = meta.get(key).and_then(|j| j.as_str()) {
+                object_hashes.push(h.to_string());
+            }
+        }
+        manifests.push(ExportedManifest { name, contents });
+    }
+    object_hashes.sort_unstable();
+    object_hashes.dedup();
+    let lpath = dir.join("laundered.json");
+    let laundered = if lpath.exists() {
+        Some(fs::read_to_string(&lpath)?)
+    } else {
+        None
+    };
+    Ok(CasSnapshot {
+        generation,
+        manifests,
+        laundered,
+        object_hashes,
+    })
+}
+
+/// Does the store at `root` already hold this object?  (The dedup
+/// probe: a replica skips the transfer entirely when true.)
+pub fn object_present(root: &Path, hash: &str) -> bool {
+    object_path_of(root, hash).is_file()
+}
+
+/// On-disk size of an object (0 if absent) — the dedup accounting's
+/// bytes-not-transferred term.
+pub fn object_len(root: &Path, hash: &str) -> u64 {
+    fs::metadata(object_path_of(root, hash))
+        .map(|m| m.len())
+        .unwrap_or(0)
+}
+
+/// Read an object's raw bytes, verifying content against its name.
+/// Fail-closed on both ends of the wire: the source refuses to export
+/// a corrupt blob, the sink refuses to ingest one.
+pub fn read_object_verified(root: &Path, hash: &str) -> anyhow::Result<Vec<u8>> {
+    let path = object_path_of(root, hash);
+    let bytes = fs::read(&path)?;
+    let mut h = StreamingSha256::new();
+    h.update(&bytes);
+    let got = h.finalize_hex();
+    anyhow::ensure!(
+        got == hash,
+        "object {} hashes to {got} — refusing to replicate a corrupt \
+         blob (A4)",
+        path.display()
+    );
+    Ok(bytes)
+}
+
+/// Ingest one object into the store at `root`.  The recomputed hash
+/// must match `hash` (fail closed on a torn or tampered transfer);
+/// an already-present object costs zero writes.  Returns whether
+/// bytes were actually written.
+pub fn import_object(root: &Path, hash: &str, bytes: &[u8]) -> anyhow::Result<bool> {
+    let mut h = StreamingSha256::new();
+    h.update(bytes);
+    let got = h.finalize_hex();
+    anyhow::ensure!(
+        got == hash,
+        "refusing to ingest object {hash}: content hashes to {got} \
+         (fail closed)"
+    );
+    fs::create_dir_all(root.join("objects"))?;
+    let path = object_path_of(root, hash);
+    if path.exists() {
+        return Ok(false);
+    }
+    write_object(&path, bytes)?;
+    Ok(true)
+}
+
+/// Start staging `generation` at `root`: clear any half-pulled remnant
+/// of the same generation (a previous sync that died) and recreate the
+/// directory empty.  Never touches `LINEAGE.json` or any other
+/// generation's directory.
+pub fn begin_import(root: &Path, generation: u64) -> anyhow::Result<()> {
+    let dir = lineage_dir_of(root, generation);
+    if dir.exists() {
+        crate::util::faultfs::remove_dir_all(&dir)?;
+    }
+    fs::create_dir_all(&dir)?;
+    Ok(())
+}
+
+/// Stage one manifest (or `laundered.json`) file into a generation
+/// directory, verbatim, via the atomic write primitive.  Names are
+/// validated against the lineage-dir vocabulary so a malicious or
+/// corrupt snapshot cannot write outside the staged directory.
+pub fn import_manifest(
+    root: &Path,
+    generation: u64,
+    name: &str,
+    contents: &str,
+) -> anyhow::Result<()> {
+    let plain = !name.contains('/') && !name.contains('\\') && !name.contains("..");
+    let known = name == "laundered.json"
+        || ((name.starts_with("ckpt-") || name.starts_with("micro-"))
+            && name.ends_with(".json"));
+    anyhow::ensure!(
+        plain && known,
+        "refusing to import manifest with unexpected name {name:?}"
+    );
+    write_atomic(&lineage_dir_of(root, generation).join(name), contents)
+}
+
+/// Adopt a fully staged generation: verify every object every staged
+/// manifest references is present (a half-pulled generation must never
+/// become servable), then swap `LINEAGE.json` — the single commit
+/// point.  A crash before the swap leaves the old generation active;
+/// after it, the new one is complete by the check just performed.
+pub fn adopt_generation(root: &Path, generation: u64) -> anyhow::Result<()> {
+    let dir = lineage_dir_of(root, generation);
+    let mut names: Vec<String> = Vec::new();
+    for e in fs::read_dir(&dir)? {
+        let name = e?.file_name().to_string_lossy().into_owned();
+        if (name.starts_with("ckpt-") || name.starts_with("micro-"))
+            && name.ends_with(".json")
+        {
+            names.push(name);
+        }
+    }
+    names.sort_unstable();
+    for name in &names {
+        let path = dir.join(name);
+        let meta = parse(&fs::read_to_string(&path)?).map_err(|e| {
+            anyhow::Error::new(StoreError::CorruptManifest {
+                path: path.display().to_string(),
+                detail: e.to_string(),
+            })
+        })?;
+        let step = meta
+            .get("logical_step")
+            .and_then(|j| j.as_u64())
+            .unwrap_or(0) as u32;
+        for (tensor, key) in [
+            ("params", "params_sha256"),
+            ("m", "m_sha256"),
+            ("v", "v_sha256"),
+        ] {
+            if let Some(h) = meta.get(key).and_then(|j| j.as_str()) {
+                if !object_present(root, h) {
+                    return Err(StoreError::DanglingObject {
+                        step,
+                        tensor,
+                        hash: h.to_string(),
+                    }
+                    .into());
+                }
+            }
+        }
+    }
+    let mut j = Json::obj();
+    j.set("active", generation);
+    write_atomic(&root.join("LINEAGE.json"), &j.pretty())
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

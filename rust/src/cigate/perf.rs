@@ -209,6 +209,30 @@ pub fn check_server(
     )
 }
 
+/// The replica bench's gated metric: the erasure-propagation SLA —
+/// wall-clock milliseconds from forget submission until EVERY attached
+/// read replica serves the laundered (clean) lineage.  This is the
+/// number a regulator actually cares about: it regresses when launder
+/// replay slows down, when replica sync stops being a byte-level diff
+/// (dedup loss re-ships whole checkpoints), or when invalidation stops
+/// piggybacking on the lineage swap.
+pub const REPLICA_METRIC: &str = "erasure_propagation_ms";
+
+/// Fail-closed gate over the committed `BENCH_replica.json` baseline.
+pub fn check_replica(
+    baseline_path: &Path,
+    measured_ms: f64,
+    max_regression: f64,
+) -> anyhow::Result<PerfVerdict> {
+    check_metric(
+        baseline_path,
+        REPLICA_METRIC,
+        measured_ms,
+        max_regression,
+        "replica bench (erasure propagation ms)",
+    )
+}
+
 /// Whether a measured run became the committed baseline.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum BaselineDisposition {
@@ -367,6 +391,40 @@ mod tests {
             PerfVerdict::Pass { .. }
         ));
         assert!(check_server(&path, 1200.0, 0.2).is_err());
+    }
+
+    #[test]
+    fn replica_metric_gates_and_promotes() {
+        let dir = tempdir("perf-replica-gate");
+        let path = dir.join("BENCH_replica.json");
+        assert_eq!(
+            check_replica(&path, 40.0, 0.2).unwrap(),
+            PerfVerdict::RecordOnly
+        );
+        std::fs::write(
+            &path,
+            r#"{"bench": "replica", "erasure_propagation_ms": null}"#,
+        )
+        .unwrap();
+        assert_eq!(
+            check_replica(&path, 40.0, 0.2).unwrap(),
+            PerfVerdict::RecordOnly
+        );
+        let mut measured = Json::obj();
+        measured
+            .set("bench", "replica")
+            .set(REPLICA_METRIC, 40.0)
+            .set("schema", 1);
+        assert_eq!(
+            record_first_baseline_for(&path, REPLICA_METRIC, &measured)
+                .unwrap(),
+            BaselineDisposition::Recorded
+        );
+        assert!(matches!(
+            check_replica(&path, 44.0, 0.2).unwrap(),
+            PerfVerdict::Pass { .. }
+        ));
+        assert!(check_replica(&path, 60.0, 0.2).is_err());
     }
 
     #[test]

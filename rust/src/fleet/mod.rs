@@ -38,7 +38,7 @@
 pub mod server;
 
 use std::collections::HashMap;
-use std::path::PathBuf;
+use std::path::{Path, PathBuf};
 
 use crate::audit::{per_example_loss_counts, ModelView};
 use crate::config::RunConfig;
@@ -50,6 +50,7 @@ use crate::data::corpus::Corpus;
 use crate::harness;
 use crate::neardup::closure::build_index;
 use crate::neardup::{expand_closure, ClosureParams, HammingIndex};
+use crate::replica::{Replica, SyncStats};
 use crate::runtime::Runtime;
 use crate::shard::{split_corpus, ShardSpec, ShardSplit};
 use crate::util::json::Json;
@@ -136,6 +137,19 @@ pub struct Fleet<'rt> {
     /// stay `Healthy` forever — nothing routes to them).
     health: Vec<ShardHealth>,
     pub auto_launder: bool,
+    /// Attached read replicas (the serving data plane).  Re-synced
+    /// from [`Fleet::launder_due`] after every committed lineage swap.
+    replicas: Vec<ReplicaAttachment>,
+    /// Erasure-propagation SLA of the most recent launder pass that
+    /// touched attached replicas: wall ms from the launder trigger to
+    /// the last replica adopting the clean lineage.
+    pub last_propagation_ms: Option<f64>,
+}
+
+/// One attached read replica and the shard it mirrors.
+pub struct ReplicaAttachment {
+    pub shard: u32,
+    pub replica: Replica,
 }
 
 /// One shard's share of a fleet request's outcome.
@@ -388,6 +402,8 @@ impl<'rt> Fleet<'rt> {
                 shards,
                 health: vec![ShardHealth::Healthy; n],
                 auto_launder: cfg.auto_launder,
+                replicas: Vec::new(),
+                last_propagation_ms: None,
             },
             resumed_any,
         ))
@@ -422,6 +438,49 @@ impl<'rt> Fleet<'rt> {
             .get_mut(shard as usize)
             .and_then(|s| s.as_mut())
             .map(|s| &mut s.system)
+    }
+
+    /// Attach a read replica mirroring `shard`'s CAS at `local_root`
+    /// and run its cold sync (a replica never serves before its first
+    /// completed sync — fail closed).  Returns the attachment index
+    /// and the cold sync's transfer accounting.
+    pub fn attach_replica(
+        &mut self,
+        shard: u32,
+        local_root: &Path,
+    ) -> anyhow::Result<(usize, SyncStats)> {
+        anyhow::ensure!(
+            self.shard(shard).is_some(),
+            "cannot attach a replica to empty or out-of-range shard \
+             {shard}"
+        );
+        let source = self.root.join(format!("shard-{shard:04}")).join("ckpt");
+        let mut replica = Replica::open(&source, local_root)?;
+        let stats = replica.sync()?;
+        self.replicas.push(ReplicaAttachment { shard, replica });
+        Ok((self.replicas.len() - 1, stats))
+    }
+
+    /// The attached replicas (`fleet_status` embeds their rows).
+    pub fn replicas(&self) -> &[ReplicaAttachment] {
+        &self.replicas
+    }
+
+    /// Re-sync every replica mirroring `shard` — the lineage-swap
+    /// invalidation fan-out.  Returns (attachment index, result); a
+    /// failed sync leaves that replica on its old generation, which
+    /// its query plane reports as stale rather than hiding.
+    pub fn sync_replicas(
+        &mut self,
+        shard: u32,
+    ) -> Vec<(usize, anyhow::Result<SyncStats>)> {
+        let mut out = Vec::new();
+        for (i, att) in self.replicas.iter_mut().enumerate() {
+            if att.shard == shard {
+                out.push((i, att.replica.sync()));
+            }
+        }
+        out
     }
 
     /// The isolation state of one shard (None = shard index out of
@@ -744,6 +803,9 @@ impl<'rt> Fleet<'rt> {
         &mut self,
         id_prefix: &str,
     ) -> Vec<(u32, anyhow::Result<LaunderOutcome>)> {
+        // propagation clock starts at the launder trigger: the SLA in
+        // `last_propagation_ms` covers replay + swap + replica re-sync
+        let t0 = crate::metrics::monotonic_now();
         // quarantined shards sit laundering out until their cooldown
         // expires (the drain path owns the tick-down; here we only
         // observe) — a shard that cannot execute safely should not be
@@ -805,6 +867,43 @@ impl<'rt> Fleet<'rt> {
                 }
                 Some(Ok(_)) => self.health[i] = ShardHealth::Healthy,
                 None => {}
+            }
+        }
+        // Invalidation fan-out: a committed launder swapped those
+        // shards' lineage generations, so every replica mirroring one
+        // must re-sync before the erasure is visible on the read path.
+        // A failed re-sync is reported (the replica keeps serving its
+        // old generation, watermarked stale) but never blocks the
+        // shards' own outcomes.
+        let swapped: Vec<u32> = results
+            .iter()
+            .enumerate()
+            .filter_map(|(i, r)| match r {
+                Some(Ok(o)) if o.executed => Some(i as u32),
+                _ => None,
+            })
+            .collect();
+        if !swapped.is_empty() && !self.replicas.is_empty() {
+            let mut adopted = false;
+            for shard in swapped {
+                for (i, res) in self.sync_replicas(shard) {
+                    match res {
+                        Ok(_) => adopted = true,
+                        Err(e) => eprintln!(
+                            "replica {i} (shard {shard}) re-sync failed — \
+                             it keeps serving its previous generation, \
+                             watermarked stale: {e:#}"
+                        ),
+                    }
+                }
+            }
+            if adopted {
+                self.last_propagation_ms = Some(
+                    crate::metrics::monotonic_now()
+                        .saturating_duration_since(t0)
+                        .as_secs_f64()
+                        * 1e3,
+                );
             }
         }
         results
@@ -903,12 +1002,23 @@ impl<'rt> Fleet<'rt> {
             }
             rows.push(j);
         }
+        let mut reps = Vec::new();
+        for (i, att) in self.replicas.iter().enumerate() {
+            let mut j = att.replica.status_json();
+            j.set("replica", i as u64).set("shard", att.shard);
+            reps.push(j);
+        }
         let mut out = Json::obj();
         out.set("n_shards", self.spec.n_shards)
             .set("salt_hex", format!("{:016x}", self.spec.salt))
             .set("total_samples", self.corpus.len())
             .set("quarantined_shards", self.quarantined_count() as u64)
-            .set("shards", Json::Arr(rows));
+            .set("shards", Json::Arr(rows))
+            .set("replicas", Json::Arr(reps));
+        match self.last_propagation_ms {
+            Some(ms) => out.set("erasure_propagation_ms", ms),
+            None => out.set("erasure_propagation_ms", Json::Null),
+        };
         out
     }
 }

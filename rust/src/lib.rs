@@ -31,6 +31,9 @@
 //! - [`shard`]      pinned deterministic user→shard partitioning
 //! - [`fleet`]      N-shard orchestrator: ownership routing, parallel
 //!                  cross-shard execution, fleet planning/eval/serving
+//! - [`replica`]    serving data plane: lineage-synced read replicas
+//!                  (CAS pull by generation, watermarked query plane,
+//!                  erasure-propagation SLA)
 //! - [`audit`]      MIA / canary exposure / extraction / fuzzy / utility
 //! - [`controller`] path-selection policy (Alg. A.7)
 //! - [`manifest`]   signed, hash-chained forget manifest
@@ -60,6 +63,7 @@ pub mod manifest;
 pub mod metrics;
 pub mod neardup;
 pub mod replay;
+pub mod replica;
 pub mod runtime;
 pub mod server;
 pub mod shard;

@@ -44,13 +44,14 @@ pub const RULES: &[RuleInfo] = &[
         id: RULE_UNORDERED_ITER,
         desc: "HashMap/HashSet iteration in serialize/hash/write modules \
                without an immediate sort",
-        scope: "wal/, checkpoint/, manifest/, shard/",
+        scope: "wal/, checkpoint/, manifest/, shard/, replica/",
     },
     RuleInfo {
         id: RULE_RAW_FS,
         desc: "fs::write / File::create in erasure-critical modules outside \
                write_atomic / faultfs wrappers",
-        scope: "wal/, checkpoint/, manifest/, shard/, server/, fleet/",
+        scope: "wal/, checkpoint/, manifest/, shard/, server/, fleet/, \
+                replica/",
     },
     RuleInfo {
         id: RULE_FLOAT_REDUCE,
@@ -85,13 +86,21 @@ const WALL_CLOCK_ALLOWED: &[&str] = &["metrics/", "deltas/"];
 
 /// Modules whose bytes are hashed, serialized, or replayed — unordered
 /// iteration here can reach a digest or a wire format.
-const SERIALIZE_MODULES: &[&str] = &["wal/", "checkpoint/", "manifest/", "shard/"];
+const SERIALIZE_MODULES: &[&str] =
+    &["wal/", "checkpoint/", "manifest/", "shard/", "replica/"];
 
 /// Erasure-critical modules: every durable write must go through
 /// `checkpoint::write_atomic` or the `util::faultfs` wrappers so the
 /// crash matrix and fault injection see it.
-const DURABLE_MODULES: &[&str] =
-    &["wal/", "checkpoint/", "manifest/", "shard/", "server/", "fleet/"];
+const DURABLE_MODULES: &[&str] = &[
+    "wal/",
+    "checkpoint/",
+    "manifest/",
+    "shard/",
+    "server/",
+    "fleet/",
+    "replica/",
+];
 
 /// `float-reduce` is about *pinning the reduction order*; `runtime/` is
 /// where `reduce_pinned` itself lives.

@@ -17,6 +17,10 @@
 //!   fleet-status  per-shard status rollup (+ ensemble utility)
 //!   fleet-serve   fleet admin server (fleet_status / shard-addressed
 //!                 submits / per-shard laundering)
+//!   replica-serve   read replica of one shard: lineage-generation CAS
+//!                   sync + watermarked eval/loss query plane
+//!   replica-status  one replica's sync state (generation, lag,
+//!                   last-sync transfer accounting)
 
 use std::collections::HashSet;
 use std::path::PathBuf;
@@ -446,12 +450,68 @@ fn run(args: &Args) -> anyhow::Result<()> {
             let fleet = std::sync::Arc::new(std::sync::Mutex::new(fleet));
             unlearn::fleet::server::serve_fleet(fleet, &addr)
         }
+        Some("replica-serve") => {
+            let rt = Runtime::load(&artifacts_dir(args))?;
+            let fcfg = fleet_config(args)?;
+            let c = corpus(args)?;
+            let shard = args.get_u64("shard", 0)? as u32;
+            let fleet_root = fcfg.root.clone();
+            let local = args
+                .get("replica-dir")
+                .map(PathBuf::from)
+                .unwrap_or_else(|| {
+                    fleet_root.join(format!("replica-{shard:04}"))
+                });
+            let addr = args.get_or("addr", "127.0.0.1:7880").to_string();
+            // the replica serves the shard's own corpus view (eval ids
+            // are local to the mirrored shard)
+            let (fleet, _) =
+                unlearn::fleet::Fleet::open_or_train(&rt, fcfg, c)?;
+            let shard_corpus = fleet
+                .shard(shard)
+                .ok_or_else(|| {
+                    anyhow::anyhow!("shard {shard} is empty or out of range")
+                })?
+                .corpus
+                .clone();
+            drop(fleet);
+            let source = fleet_root.join(format!("shard-{shard:04}")).join("ckpt");
+            let mut replica = unlearn::replica::Replica::open(&source, &local)?;
+            let stats = replica.sync()?;
+            println!(
+                "replica of shard {shard} at generation {} ({} objects / \
+                 {} bytes pulled, {} reused); serving on {addr}",
+                stats.to_generation,
+                stats.objects_pulled,
+                stats.bytes_pulled,
+                stats.objects_reused
+            );
+            let ctx =
+                unlearn::replica::ReplicaCtx::new(&rt, shard_corpus, replica);
+            unlearn::replica::serve_replica(&ctx, &addr)
+        }
+        Some("replica-status") => {
+            let shard = args.get_u64("shard", 0)? as u32;
+            let fleet_root = PathBuf::from(args.get_or("fleet-dir", "runs/fleet"));
+            let local = args
+                .get("replica-dir")
+                .map(PathBuf::from)
+                .unwrap_or_else(|| {
+                    fleet_root.join(format!("replica-{shard:04}"))
+                });
+            let source = fleet_root.join(format!("shard-{shard:04}")).join("ckpt");
+            let replica = unlearn::replica::Replica::open(&source, &local)?;
+            println!("{}", replica.status_json().pretty());
+            Ok(())
+        }
         other => {
             eprintln!(
                 "usage: unlearn <smoke|pins|train|ci-gate|wal-scan|replay|plan|forget|launder|audit|serve|\
-                 fleet-train|fleet-forget|fleet-status|fleet-serve> \
+                 fleet-train|fleet-forget|fleet-status|fleet-serve|\
+                 replica-serve|replica-status> \
                  [--artifacts DIR] [--run-dir DIR] [--steps N] \
-                 [--shards N --salt S --fleet-dir DIR] ...\n\
+                 [--shards N --salt S --fleet-dir DIR] \
+                 [--shard N --replica-dir DIR] ...\n\
                  (got {other:?})"
             );
             anyhow::bail!("unknown subcommand");

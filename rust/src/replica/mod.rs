@@ -1,0 +1,600 @@
+//! Serving data plane: lineage-synced read replicas.
+//!
+//! A [`Replica`] is a local mirror of one source shard's CAS
+//! ([`crate::checkpoint`]) that serves read-only eval/loss queries.
+//! It syncs **by lineage generation**: compare the local
+//! `LINEAGE.json` generation to the source's, and if behind, pull the
+//! active lineage — manifests verbatim plus only the CAS objects the
+//! mirror is missing.  Content addressing makes the pull a pure
+//! byte-level diff: after a launder, the rewritten tensors are the
+//! only new objects, so the re-sync bill is the launder's actual
+//! delta, not a full checkpoint (`tests/replica_sla.rs` asserts the
+//! bound).
+//!
+//! Sync protocol (`pull → verify → adopt`, fail closed at every step):
+//!
+//! 1. [`checkpoint::export_snapshot`] reads the source's active
+//!    lineage (generation, manifests, referenced object hashes).
+//! 2. Missing objects are pulled through
+//!    [`checkpoint::read_object_verified`] (source-side hash check)
+//!    and [`checkpoint::import_object`] (sink-side re-hash; a torn or
+//!    tampered transfer is refused).  Present objects cost zero bytes.
+//! 3. [`checkpoint::begin_import`] clears any half-pulled remnant of
+//!    the target generation, [`checkpoint::import_manifest`] stages
+//!    the manifests verbatim, and [`checkpoint::adopt_generation`]
+//!    re-verifies reachability of every referenced object before the
+//!    single commit point — the atomic `LINEAGE.json` swap.
+//!
+//! A crash anywhere before the swap leaves the mirror serving the OLD
+//! generation; the staged directory is retired by the next
+//! [`CheckpointStore::open`] on the serving path (old-or-new, never a
+//! mixed generation — `tests/crash_matrix.rs` sweeps every op).
+//!
+//! The query plane ([`serve_replica`]) rides `server::event_loop` and
+//! `util::json_scan` like both admin planes.  Staleness is
+//! **watermarked, not hidden**: every eval/loss response carries
+//! `{generation, source_generation, lag, stale}` so a caller can see
+//! it was answered from a pre-erasure lineage while a sync is in
+//! flight.  A replica that never completed a sync refuses to serve.
+
+use std::net::TcpListener;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::AtomicBool;
+use std::sync::Mutex;
+
+use crate::audit::{per_example_loss_counts, ModelView};
+use crate::checkpoint::{self, CheckpointStore, TrainState};
+use crate::data::corpus::Corpus;
+use crate::runtime::Runtime;
+use crate::server::scan_err;
+use crate::util::json::Json;
+use crate::util::json_scan;
+
+/// One sync's transfer accounting — the dedup bound's witness.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SyncStats {
+    /// Local generation before the sync (`None` = cold mirror).
+    pub from_generation: Option<u64>,
+    /// Source generation the sync observed (and, unless
+    /// `already_current`, adopted).
+    pub to_generation: u64,
+    /// The mirror was already at the source generation — nothing moved.
+    pub already_current: bool,
+    /// Objects actually transferred.
+    pub objects_pulled: usize,
+    /// Bytes actually transferred (the SLA's bytes-per-launder term).
+    pub bytes_pulled: u64,
+    /// Referenced objects already present locally (CAS dedup hits).
+    pub objects_reused: usize,
+    /// Bytes those dedup hits would have cost a mirror without content
+    /// addressing.
+    pub bytes_reused: u64,
+    /// Manifest files staged (including `laundered.json` if present).
+    pub manifests_pulled: usize,
+    /// Wall time of the sync, milliseconds (monotonic clock).
+    pub wall_ms: f64,
+}
+
+impl SyncStats {
+    pub fn to_json(&self) -> Json {
+        let mut j = Json::obj();
+        match self.from_generation {
+            Some(g) => j.set("from_generation", g),
+            None => j.set("from_generation", Json::Null),
+        };
+        j.set("to_generation", self.to_generation)
+            .set("already_current", self.already_current)
+            .set("objects_pulled", self.objects_pulled)
+            .set("bytes_pulled", self.bytes_pulled)
+            .set("objects_reused", self.objects_reused)
+            .set("bytes_reused", self.bytes_reused)
+            .set("manifests_pulled", self.manifests_pulled)
+            .set("wall_ms", self.wall_ms);
+        j
+    }
+}
+
+/// A read replica: a local CAS mirror of one source store.
+pub struct Replica {
+    /// Source shard's CAS root (`<run dir>/ckpt`).
+    pub source_root: PathBuf,
+    /// This mirror's CAS root.
+    pub local_root: PathBuf,
+    /// Generation the mirror has fully adopted (`None` until the first
+    /// completed sync — an unsynced replica refuses to serve).
+    generation: Option<u64>,
+    /// Accounting of the most recent [`Replica::sync`].
+    last_sync: Option<SyncStats>,
+    /// Completed sync calls (including already-current no-ops).
+    syncs: u64,
+}
+
+impl Replica {
+    /// Open (or create) a mirror of `source_root` at `local_root`.  An
+    /// existing mirror resumes at whatever generation its own
+    /// `LINEAGE.json` records; a half-pulled generation from a crashed
+    /// sync is invisible here (the swap never happened) and is retired
+    /// by the serving path's store open.
+    pub fn open(source_root: &Path, local_root: &Path) -> anyhow::Result<Replica> {
+        std::fs::create_dir_all(local_root)?;
+        let generation = if local_root.join("LINEAGE.json").exists() {
+            Some(checkpoint::read_generation(local_root)?)
+        } else {
+            None
+        };
+        Ok(Replica {
+            source_root: source_root.to_path_buf(),
+            local_root: local_root.to_path_buf(),
+            generation,
+            last_sync: None,
+            syncs: 0,
+        })
+    }
+
+    /// Generation the mirror serves (`None` = never synced).
+    pub fn generation(&self) -> Option<u64> {
+        self.generation
+    }
+
+    /// The source's current active generation (re-read every call, so
+    /// a swap by the source process is observed immediately).
+    pub fn source_generation(&self) -> anyhow::Result<u64> {
+        checkpoint::read_generation(&self.source_root)
+    }
+
+    /// Generations the mirror is behind the source (0 = current; an
+    /// unsynced mirror counts the source's whole history plus one).
+    pub fn lag(&self) -> anyhow::Result<u64> {
+        let src = self.source_generation()?;
+        Ok(match self.generation {
+            Some(g) => src.saturating_sub(g),
+            None => src + 1,
+        })
+    }
+
+    /// Accounting of the most recent sync.
+    pub fn last_sync(&self) -> Option<&SyncStats> {
+        self.last_sync.as_ref()
+    }
+
+    /// Pull the source's active lineage if the mirror is behind.
+    /// Every object is hash-verified on read AND on ingest; objects
+    /// already present locally are skipped (content addressing — the
+    /// dedup bound).  The local `LINEAGE.json` swap is the last write:
+    /// failure or crash anywhere earlier leaves the previous
+    /// generation served, never a mix.
+    pub fn sync(&mut self) -> anyhow::Result<SyncStats> {
+        let t0 = crate::metrics::monotonic_now();
+        let snap = checkpoint::export_snapshot(&self.source_root)?;
+        let from = self.generation;
+        let mut stats = SyncStats {
+            from_generation: from,
+            to_generation: snap.generation,
+            already_current: from == Some(snap.generation),
+            objects_pulled: 0,
+            bytes_pulled: 0,
+            objects_reused: 0,
+            bytes_reused: 0,
+            manifests_pulled: 0,
+            wall_ms: 0.0,
+        };
+        if !stats.already_current {
+            // objects first: adopt's reachability gate must see them
+            for hash in &snap.object_hashes {
+                if checkpoint::object_present(&self.local_root, hash) {
+                    stats.objects_reused += 1;
+                    stats.bytes_reused +=
+                        checkpoint::object_len(&self.local_root, hash);
+                } else {
+                    let bytes = checkpoint::read_object_verified(
+                        &self.source_root,
+                        hash,
+                    )?;
+                    stats.bytes_pulled += bytes.len() as u64;
+                    stats.objects_pulled += 1;
+                    checkpoint::import_object(&self.local_root, hash, &bytes)?;
+                }
+            }
+            checkpoint::begin_import(&self.local_root, snap.generation)?;
+            for m in &snap.manifests {
+                checkpoint::import_manifest(
+                    &self.local_root,
+                    snap.generation,
+                    &m.name,
+                    &m.contents,
+                )?;
+                stats.manifests_pulled += 1;
+            }
+            if let Some(l) = &snap.laundered {
+                checkpoint::import_manifest(
+                    &self.local_root,
+                    snap.generation,
+                    "laundered.json",
+                    l,
+                )?;
+                stats.manifests_pulled += 1;
+            }
+            checkpoint::adopt_generation(&self.local_root, snap.generation)?;
+            self.generation = Some(snap.generation);
+        }
+        stats.wall_ms = crate::metrics::monotonic_now()
+            .saturating_duration_since(t0)
+            .as_secs_f64()
+            * 1e3;
+        self.syncs += 1;
+        self.last_sync = Some(stats.clone());
+        Ok(stats)
+    }
+
+    /// Load the state this replica serves: the latest full checkpoint
+    /// of its adopted generation.  Opening the store here is also the
+    /// crash-recovery path — `CheckpointStore::open` retires any
+    /// half-pulled non-active generation and re-verifies the active
+    /// lineage's reachability, so a torn pull can never be served.
+    pub fn load_serving_state(&self) -> anyhow::Result<ServingState> {
+        let generation = self.generation.ok_or_else(|| {
+            anyhow::anyhow!(
+                "replica of {} has never completed a sync — refusing to \
+                 serve (fail closed)",
+                self.source_root.display()
+            )
+        })?;
+        let store = CheckpointStore::open(&self.local_root, usize::MAX)?;
+        let steps = store.list_full()?;
+        let step = *steps.last().ok_or_else(|| {
+            anyhow::anyhow!(
+                "replica generation {generation} holds no full checkpoint"
+            )
+        })?;
+        let state = store.load_full(step)?;
+        Ok(ServingState {
+            generation,
+            step,
+            state,
+        })
+    }
+
+    /// Status row: `{synced, generation, source_generation, lag,
+    /// stale, syncs, last_sync}` — the per-replica shape `fleet_status`
+    /// embeds.
+    pub fn status_json(&self) -> Json {
+        let mut j = Json::obj();
+        j.set("synced", self.generation.is_some());
+        match self.generation {
+            Some(g) => j.set("generation", g),
+            None => j.set("generation", Json::Null),
+        };
+        match self.source_generation() {
+            Ok(src) => {
+                let lag = match self.generation {
+                    Some(g) => src.saturating_sub(g),
+                    None => src + 1,
+                };
+                j.set("source_generation", src)
+                    .set("lag", lag)
+                    .set("stale", lag > 0);
+            }
+            Err(_) => {
+                // an unreadable source is reported as stale, not hidden
+                j.set("source_generation", Json::Null)
+                    .set("lag", Json::Null)
+                    .set("stale", true);
+            }
+        }
+        j.set("syncs", self.syncs);
+        match &self.last_sync {
+            Some(s) => j.set("last_sync", s.to_json()),
+            None => j.set("last_sync", Json::Null),
+        };
+        j
+    }
+}
+
+/// The checkpoint a replica answers queries from.
+pub struct ServingState {
+    /// Lineage generation the state came from.
+    pub generation: u64,
+    /// Logical step of the served checkpoint.
+    pub step: u32,
+    /// The full restored state (params drive eval; optimizer moments
+    /// ride along for bit-identity assertions).
+    pub state: TrainState,
+}
+
+/// Mutable serving half of a replica server: the mirror plus its
+/// lazily loaded checkpoint (dropped on every adopted sync so the next
+/// query reloads from the new generation).
+pub struct ReplicaServing {
+    pub replica: Replica,
+    pub state: Option<ServingState>,
+}
+
+/// Context of one replica query server.
+pub struct ReplicaCtx<'rt> {
+    pub rt: &'rt Runtime,
+    /// The source shard's corpus (eval queries address samples by
+    /// global id; an id outside this corpus is a typed refusal).
+    pub corpus: Corpus,
+    pub serving: Mutex<ReplicaServing>,
+    pub shutdown: AtomicBool,
+}
+
+impl<'rt> ReplicaCtx<'rt> {
+    pub fn new(rt: &'rt Runtime, corpus: Corpus, replica: Replica) -> Self {
+        ReplicaCtx {
+            rt,
+            corpus,
+            serving: Mutex::new(ReplicaServing {
+                replica,
+                state: None,
+            }),
+            shutdown: AtomicBool::new(false),
+        }
+    }
+}
+
+/// Load (once) the serving state behind the lock.
+fn ensure_loaded(serving: &mut ReplicaServing) -> anyhow::Result<&ServingState> {
+    if serving.state.is_none() {
+        serving.state = Some(serving.replica.load_serving_state()?);
+    }
+    Ok(serving.state.as_ref().expect("just loaded"))
+}
+
+/// Stamp the staleness watermark onto a response: which generation
+/// answered, where the source is, and whether the answer predates the
+/// source's latest lineage swap.
+fn watermark(out: &mut Json, replica: &Replica) {
+    match replica.generation() {
+        Some(g) => out.set("generation", g),
+        None => out.set("generation", Json::Null),
+    };
+    match replica.source_generation() {
+        Ok(src) => {
+            let lag = match replica.generation() {
+                Some(g) => src.saturating_sub(g),
+                None => src + 1,
+            };
+            out.set("source_generation", src)
+                .set("lag", lag)
+                .set("stale", lag > 0);
+        }
+        Err(_) => {
+            out.set("source_generation", Json::Null)
+                .set("lag", Json::Null)
+                .set("stale", true);
+        }
+    }
+}
+
+/// Execute one replica op (exposed for tests without sockets).
+pub fn dispatch_replica(line: &str, ctx: &ReplicaCtx<'_>) -> Json {
+    match dispatch_inner(line, ctx) {
+        Ok(j) => j,
+        Err(e) => {
+            let mut j = Json::obj();
+            j.set("ok", false).set("error", format!("{e:#}"));
+            j
+        }
+    }
+}
+
+fn dispatch_inner(line: &str, ctx: &ReplicaCtx<'_>) -> anyhow::Result<Json> {
+    // hot path: lazy scans over the raw bytes, like both admin planes
+    let b = line.as_bytes();
+    let op = json_scan::scan_str(b, "op")
+        .map_err(scan_err)?
+        .ok_or_else(|| anyhow::anyhow!("missing op"))?;
+    let mut out = Json::obj();
+    match op.as_ref() {
+        "replica_status" => {
+            let serving = ctx
+                .serving
+                .lock()
+                .map_err(|_| anyhow::anyhow!("replica lock poisoned"))?;
+            out = serving.replica.status_json();
+            match &serving.state {
+                Some(st) => out.set("serving_step", st.step),
+                None => out.set("serving_step", Json::Null),
+            };
+            out.set("ok", true);
+        }
+        "sync" => {
+            let mut serving = ctx
+                .serving
+                .lock()
+                .map_err(|_| anyhow::anyhow!("replica lock poisoned"))?;
+            let stats = serving.replica.sync()?;
+            if !stats.already_current {
+                // invalidate: the next query reloads from the adopted
+                // generation
+                serving.state = None;
+            }
+            out.set("ok", true).set("sync", stats.to_json());
+        }
+        "eval" => {
+            let ids = json_scan::scan_u64s(b, "ids")
+                .map_err(scan_err)?
+                .ok_or_else(|| anyhow::anyhow!("eval needs ids"))?;
+            anyhow::ensure!(!ids.is_empty(), "eval needs a non-empty ids list");
+            let mut serving = ctx
+                .serving
+                .lock()
+                .map_err(|_| anyhow::anyhow!("replica lock poisoned"))?;
+            let st = ensure_loaded(&mut serving)?;
+            let lc = per_example_loss_counts(
+                ctx.rt,
+                ModelView::Base(&st.state.params),
+                &ctx.corpus,
+                &ids,
+            )?;
+            let mut rows = Vec::with_capacity(ids.len());
+            for (&id, (l, c)) in ids.iter().zip(lc) {
+                let mut r = Json::obj();
+                r.set("id", id).set("loss", l).set("count", c);
+                rows.push(r);
+            }
+            out.set("ok", true)
+                .set("serving_step", st.step)
+                .set("results", Json::Arr(rows));
+            watermark(&mut out, &serving.replica);
+        }
+        "loss" => {
+            let id = json_scan::scan_u64(b, "id")
+                .map_err(scan_err)?
+                .ok_or_else(|| anyhow::anyhow!("loss needs id"))?;
+            let mut serving = ctx
+                .serving
+                .lock()
+                .map_err(|_| anyhow::anyhow!("replica lock poisoned"))?;
+            let st = ensure_loaded(&mut serving)?;
+            let lc = per_example_loss_counts(
+                ctx.rt,
+                ModelView::Base(&st.state.params),
+                &ctx.corpus,
+                &[id],
+            )?;
+            out.set("ok", true)
+                .set("id", id)
+                .set("loss", lc[0].0)
+                .set("count", lc[0].1)
+                .set("serving_step", st.step);
+            watermark(&mut out, &serving.replica);
+        }
+        "shutdown" => {
+            ctx.shutdown
+                .store(true, std::sync::atomic::Ordering::SeqCst);
+            out.set("ok", true).set("shutting_down", true);
+        }
+        other => anyhow::bail!("unknown replica op {other:?}"),
+    }
+    Ok(out)
+}
+
+/// Serve one replica's query plane on `addr` until a shutdown op
+/// arrives.  Rides the shared nonblocking event loop, so transport
+/// hardening (line cap, bounded flush, stall eviction) cannot drift
+/// from the admin planes.
+pub fn serve_replica(ctx: &ReplicaCtx<'_>, addr: &str) -> anyhow::Result<()> {
+    let listener = TcpListener::bind(addr)?;
+    let local = listener.local_addr()?;
+    eprintln!("unlearn replica query server listening on {local}");
+    crate::server::serve_event_loop(listener, &ctx.shutdown, |line| {
+        dispatch_replica(line, ctx)
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::tempdir;
+
+    fn mk_state(fill: f32, step: u32) -> TrainState {
+        let mut s = TrainState::zeros_like(vec![fill; 8]);
+        s.logical_step = step;
+        s.applied_updates = step;
+        s
+    }
+
+    /// Build a source store with two full checkpoints in gen 0.
+    fn source_store(root: &std::path::Path) -> CheckpointStore {
+        let store = CheckpointStore::open(root, 16).expect("open source");
+        store.save_full(&mk_state(0.25, 4)).expect("save 4");
+        store.save_full(&mk_state(0.5, 8)).expect("save 8");
+        store
+    }
+
+    #[test]
+    fn cold_sync_is_bit_identical() {
+        let src = tempdir("replica-cold-src");
+        let dst = tempdir("replica-cold-dst");
+        let store = source_store(&src);
+        let mut r = Replica::open(&src, &dst).expect("open replica");
+        assert_eq!(r.generation(), None);
+        assert!(r.load_serving_state().is_err(), "unsynced must refuse");
+        let stats = r.sync().expect("cold sync");
+        assert!(!stats.already_current);
+        assert!(stats.objects_pulled > 0 && stats.bytes_pulled > 0);
+        let served = r.load_serving_state().expect("serving state");
+        assert_eq!(served.step, 8);
+        assert!(served.state.bits_equal(&store.load_full(8).unwrap()));
+        assert_eq!(r.lag().unwrap(), 0);
+    }
+
+    #[test]
+    fn resync_after_swap_ships_only_new_objects() {
+        let src = tempdir("replica-dedup-src");
+        let dst = tempdir("replica-dedup-dst");
+        let store = source_store(&src);
+        let mut r = Replica::open(&src, &dst).expect("open replica");
+        let cold = r.sync().expect("cold sync");
+        // a repeat sync at the same generation moves nothing
+        let again = r.sync().expect("noop sync");
+        assert!(again.already_current);
+        assert_eq!(again.bytes_pulled, 0);
+        // launder-shaped swap: adopt step 4 untouched, rewrite step 8
+        let stage = store.begin_lineage().expect("stage");
+        stage.adopt_full(4).expect("adopt 4");
+        stage.save_full(&mk_state(0.75, 8)).expect("rewrite 8");
+        stage.commit(&[7], 8, 0).expect("commit");
+        let warm = r.sync().expect("warm sync");
+        assert!(!warm.already_current);
+        assert_eq!(warm.to_generation, 1);
+        // the dedup bound: strictly fewer bytes than the cold mirror,
+        // and the shared step-4 blobs were reused, not re-shipped
+        assert!(warm.bytes_pulled < cold.bytes_pulled);
+        assert!(warm.objects_reused > 0);
+        let served = r.load_serving_state().expect("post-swap state");
+        assert_eq!(served.generation, 1);
+        assert!(served.state.bits_equal(&store.load_full(8).unwrap()));
+    }
+
+    #[test]
+    fn staleness_is_watermarked_until_resync() {
+        let src = tempdir("replica-stale-src");
+        let dst = tempdir("replica-stale-dst");
+        let store = source_store(&src);
+        let mut r = Replica::open(&src, &dst).expect("open replica");
+        r.sync().expect("cold sync");
+        let stage = store.begin_lineage().expect("stage");
+        stage.adopt_full(8).expect("adopt 8");
+        stage.commit(&[3], 8, 0).expect("commit");
+        assert_eq!(r.lag().unwrap(), 1, "behind after the source swap");
+        let j = r.status_json();
+        assert_eq!(j.get("stale").and_then(|v| v.as_bool()), Some(true));
+        r.sync().expect("resync");
+        assert_eq!(r.lag().unwrap(), 0);
+        let j = r.status_json();
+        assert_eq!(j.get("stale").and_then(|v| v.as_bool()), Some(false));
+    }
+
+    #[test]
+    fn corrupt_source_object_is_refused() {
+        let src = tempdir("replica-corrupt-src");
+        let dst = tempdir("replica-corrupt-dst");
+        let store = source_store(&src);
+        // flip bytes inside one referenced object, keeping its name
+        let hashes = crate::checkpoint::state_tensor_hashes(
+            &store.load_full(8).unwrap(),
+        );
+        let victim = {
+            let mut v: Vec<String> = hashes.into_iter().collect();
+            v.sort();
+            v.remove(0)
+        };
+        std::fs::write(
+            src.join("objects").join(&victim),
+            vec![0xABu8; 32],
+        )
+        .expect("corrupt blob");
+        let mut r = Replica::open(&src, &dst).expect("open replica");
+        let err = r.sync().expect_err("sync must fail closed");
+        assert!(
+            format!("{err:#}").contains("refusing"),
+            "unexpected error: {err:#}"
+        );
+        // nothing was adopted: the mirror still refuses to serve
+        assert_eq!(r.generation(), None);
+        assert!(r.load_serving_state().is_err());
+    }
+}

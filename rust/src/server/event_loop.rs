@@ -31,8 +31,12 @@
 //! - **EOF with a partial line** still dispatches the fragment (the
 //!   old `read_until` returned it at EOF), so a trailing unterminated
 //!   request gets its refusal before the close.
-//! - **Write stalls are bounded**: a client that stops reading is cut
-//!   off after `WRITE_STALL_LIMIT` instead of pinning buffers forever
+//! - **Write stalls are bounded, progress is not**: responses flush in
+//!   `WRITE_CHUNK`-bounded slices (one connection draining a multi-MiB
+//!   `replica_status`/manifest response cannot monopolize a sweep) and
+//!   the stall clock resets whenever bytes move, so a slow-but-draining
+//!   reader receives the full payload no matter how long it takes; only
+//!   a client making ZERO progress for `WRITE_STALL_LIMIT` is cut off
 //!   (the old loop's 5 s write timeout, re-expressed for nonblocking
 //!   sockets).
 //! - **Shutdown**: the loop re-checks the flag every sweep — no
@@ -57,6 +61,11 @@ pub(crate) const MAX_LINE_BYTES: usize = 1 << 20;
 /// quickly, small enough that one firehose client cannot monopolize a
 /// sweep.
 const READ_CHUNK: usize = 16 * 1024;
+
+/// Bytes written per flush call: large enough that bulk responses
+/// drain in a handful of sweeps, small enough that one connection
+/// with a multi-MiB buffered response cannot monopolize the loop.
+const WRITE_CHUNK: usize = 256 * 1024;
 
 /// Sleep when a full sweep made no progress (the loop's only timer).
 /// Also the idle tick of the single-connection wrapper
@@ -125,11 +134,20 @@ impl Conn {
         self.wpos < self.wbuf.len()
     }
 
-    /// Push buffered response bytes into the socket; true if any moved.
+    /// Push buffered response bytes into the socket — at most
+    /// [`WRITE_CHUNK`] per call; true if any moved.
+    ///
+    /// Write-stall accounting lives here so EVERY flush site feeds the
+    /// clock: the timer starts only on a zero-progress attempt with
+    /// bytes still pending and resets whenever bytes move, so a
+    /// slow-but-draining reader is never evicted mid-payload — only a
+    /// client making no progress at all for `WRITE_STALL_LIMIT` is.
     fn flush(&mut self) -> std::io::Result<bool> {
-        let mut progressed = false;
-        while self.pending_write() {
-            match self.stream.write(&self.wbuf[self.wpos..]) {
+        let mut written = 0usize;
+        while self.pending_write() && written < WRITE_CHUNK {
+            let end =
+                self.wbuf.len().min(self.wpos + (WRITE_CHUNK - written));
+            match self.stream.write(&self.wbuf[self.wpos..end]) {
                 Ok(0) => {
                     return Err(std::io::Error::from(
                         std::io::ErrorKind::WriteZero,
@@ -137,7 +155,7 @@ impl Conn {
                 }
                 Ok(n) => {
                     self.wpos += n;
-                    progressed = true;
+                    written += n;
                 }
                 Err(e)
                     if e.kind() == std::io::ErrorKind::WouldBlock =>
@@ -156,7 +174,12 @@ impl Conn {
             self.wbuf.clear();
             self.wpos = 0;
         }
-        Ok(progressed)
+        if written > 0 || !self.pending_write() {
+            self.stalled_since = None;
+        } else if self.stalled_since.is_none() {
+            self.stalled_since = Some(crate::metrics::monotonic_now());
+        }
+        Ok(written > 0)
     }
 
     /// Dispatch every complete line in `rbuf`; stops early once the
@@ -194,32 +217,21 @@ impl Conn {
         shutdown: &AtomicBool,
         dispatch_line: &impl Fn(&str) -> Json,
     ) -> std::io::Result<Pump> {
-        let mut progressed = self.flush()?;
-        if self.pending_write() {
-            if progressed {
-                self.stalled_since = None;
-            } else {
-                let now = crate::metrics::monotonic_now();
-                match self.stalled_since {
-                    None => self.stalled_since = Some(now),
-                    Some(t0)
-                        if now.saturating_duration_since(t0)
-                            > WRITE_STALL_LIMIT =>
-                    {
-                        // client stopped reading: bounded, like the old
-                        // per-stream write timeout
-                        return Ok(Pump::Close);
-                    }
-                    Some(_) => {}
-                }
-            }
-        } else {
-            self.stalled_since = None;
-            if self.closing {
+        let progressed = self.flush()?;
+        // evict only on zero-progress sweeps: `flush` owns the stall
+        // clock and resets it whenever bytes move, so a large response
+        // draining slowly never hits this — a dead reader does
+        if let Some(t0) = self.stalled_since {
+            if crate::metrics::monotonic_now().saturating_duration_since(t0)
+                > WRITE_STALL_LIMIT
+            {
                 return Ok(Pump::Close);
             }
         }
         if self.closing {
+            if !self.pending_write() {
+                return Ok(Pump::Close);
+            }
             return Ok(if progressed { Pump::Progress } else { Pump::Idle });
         }
 

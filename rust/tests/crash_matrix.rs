@@ -5,7 +5,7 @@
 //! either complete the sequence or fail closed — never resurrect
 //! forgotten data, never ack work it lost, never serve a torn file.
 //!
-//! Sequences swept (the five from DESIGN.md's failure model):
+//! Sequences swept (the six from DESIGN.md's failure model):
 //!   1. jobs-WAL submit (append + fsync per acked job)
 //!   2. jobs-WAL recovery compaction (seq header rewrite, tmp + rename)
 //!   3. forgotten.json commit (`write_atomic`: tmp write + rename)
@@ -13,6 +13,8 @@
 //!      .retired.sum)
 //!   5. lineage stage → swap → retire (launder commit) and the
 //!      laundered-set compaction
+//!   6. replica pull → verify → adopt (cold mirror and post-launder
+//!      re-sync): a half-pulled generation is never servable
 //!
 //! The sweeps are count-then-inject: a [`Plan::Count`] pass measures
 //! how many ops the sequence performs on a pristine copy, then one
@@ -23,6 +25,7 @@ use std::path::Path;
 
 use unlearn::checkpoint::{write_atomic, CheckpointStore, TrainState};
 use unlearn::controller::{ForgetRequest, Urgency};
+use unlearn::replica::Replica;
 use unlearn::server::{JobQueue, JobRequest};
 use unlearn::util::faultfs::{arm, Plan};
 use unlearn::util::json::{parse, Json};
@@ -360,7 +363,7 @@ fn idmap_save_crash_sweep() {
 fn mk_state(fill: f32, step: u32) -> TrainState {
     let mut s = TrainState::zeros_like(vec![fill; 8]);
     s.logical_step = step;
-    s.applied_updates = step as u64;
+    s.applied_updates = step;
     s
 }
 
@@ -481,6 +484,154 @@ fn laundered_compaction_crash_sweep() {
             } else {
                 assert!(ids.is_empty());
             }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// 6. Replica pull → verify → adopt.  Every filesystem op of a sync is
+//    a crash point on the REPLICA's disk (the source is read-only by
+//    construction).  Invariant: after any crash the replica either
+//    refuses to serve (no adopted generation yet — fail closed) or
+//    serves exactly one coherent generation, bit-identical to what the
+//    source served at that generation; a plain retry then completes
+//    the sync.  A half-pulled generation must never be servable.
+// ---------------------------------------------------------------------
+
+/// Cold mirror: crash at every op of a first sync into an empty
+/// replica.  Old = nothing servable (refusal), new = the source's
+/// generation 0 bit-intact.
+#[test]
+fn replica_cold_sync_crash_sweep() {
+    let src = lineage_template();
+
+    // count pass: how many fs ops does a cold sync perform?
+    let count_local = tempdir("cm-replica-cold-count");
+    let counter = arm(&count_local, Plan::Count);
+    let mut rep = Replica::open(&src, &count_local).unwrap();
+    rep.sync().unwrap();
+    let n = counter.ops();
+    drop(counter);
+    assert!(n >= 6, "objects + manifests + swap is at least six ops, counted {n}");
+
+    for torn in [false, true] {
+        for k in 0..n {
+            let local = tempdir("cm-replica-cold");
+            let inj = arm(
+                &local,
+                Plan::CrashAt {
+                    op: k,
+                    torn,
+                    seed: 0x5EED_6000 + k,
+                },
+            );
+            let crashed = Replica::open(&src, &local)
+                .and_then(|mut r| r.sync())
+                .is_err();
+            assert!(crashed, "crash at op {k} (torn={torn}) surfaces");
+            drop(inj);
+
+            let rep = Replica::open(&src, &local).unwrap();
+            match rep.generation() {
+                None => {
+                    // the swap never landed: nothing is servable, and
+                    // the replica says so rather than serving a
+                    // half-pulled generation
+                    assert!(
+                        rep.load_serving_state().is_err(),
+                        "unadopted replica must refuse to serve \
+                         (k={k} torn={torn})"
+                    );
+                }
+                Some(g) => {
+                    // the swap landed, so the adopt-time completeness
+                    // check had already passed: full fidelity
+                    assert_eq!(g, 0, "k={k} torn={torn}");
+                    let s = rep.load_serving_state().unwrap();
+                    assert_eq!(s.step, 8);
+                    assert!(
+                        s.state.bits_equal(&mk_state(0.5, 8)),
+                        "adopted replica serves the source's bits \
+                         (k={k} torn={torn})"
+                    );
+                }
+            }
+
+            // recovery completes the sequence: a plain retry lands
+            let mut rep = rep;
+            rep.sync().expect("post-crash retry syncs clean");
+            let s = rep.load_serving_state().unwrap();
+            assert!(s.state.bits_equal(&mk_state(0.5, 8)));
+        }
+    }
+}
+
+/// Post-launder re-sync: the replica serves generation 0, the source
+/// launders to generation 1, and the pull of the new lineage crashes
+/// at every op.  Old = the pre-launder generation (still coherent,
+/// watermarked stale), new = the laundered one — NEVER a mix of the
+/// two lineages.
+#[test]
+fn replica_launder_resync_crash_sweep() {
+    // source template: generation 0, then laundered to generation 1
+    let src = lineage_template();
+    let local_proto = tempdir("cm-replica-resync-proto");
+    Replica::open(&src, &local_proto).unwrap().sync().unwrap();
+    launder_commit(&src).unwrap();
+
+    // count pass on a pristine copy of the synced replica
+    let count_local = tempdir("cm-replica-resync-count");
+    copy_dir_recursive(&local_proto, &count_local);
+    let counter = arm(&count_local, Plan::Count);
+    Replica::open(&src, &count_local).unwrap().sync().unwrap();
+    let n = counter.ops();
+    drop(counter);
+    assert!(n >= 4, "re-sync writes at least the new object, two \
+         manifests and the swap, counted {n}");
+
+    for torn in [false, true] {
+        for k in 0..n {
+            let local = tempdir("cm-replica-resync");
+            copy_dir_recursive(&local_proto, &local);
+            let inj = arm(
+                &local,
+                Plan::CrashAt {
+                    op: k,
+                    torn,
+                    seed: 0x5EED_7000 + k,
+                },
+            );
+            let crashed = Replica::open(&src, &local)
+                .and_then(|mut r| r.sync())
+                .is_err();
+            assert!(crashed, "crash at op {k} (torn={torn}) surfaces");
+            drop(inj);
+
+            let rep = Replica::open(&src, &local).unwrap();
+            let s = rep
+                .load_serving_state()
+                .expect("a previously-adopted replica always serves");
+            assert_eq!(s.step, 8);
+            match rep.generation() {
+                Some(0) => assert!(
+                    s.state.bits_equal(&mk_state(0.5, 8)),
+                    "pre-launder generation served bit-intact \
+                     (k={k} torn={torn})"
+                ),
+                Some(1) => assert!(
+                    s.state.bits_equal(&mk_state(0.75, 8)),
+                    "laundered generation served bit-intact \
+                     (k={k} torn={torn})"
+                ),
+                g => panic!("impossible generation {g:?} after crash"),
+            }
+
+            // retry converges on the laundered lineage
+            let mut rep = rep;
+            rep.sync().expect("post-crash retry syncs clean");
+            assert_eq!(rep.generation(), Some(1));
+            let s = rep.load_serving_state().unwrap();
+            assert!(s.state.bits_equal(&mk_state(0.75, 8)));
         }
     }
 }

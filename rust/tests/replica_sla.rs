@@ -1,0 +1,305 @@
+//! The erasure-propagation SLA, end to end: a fleet trains, a user is
+//! forgotten and the shard laundered, and every attached read replica
+//! must (a) adopt the clean lineage through the launder pass's
+//! invalidation fan-out, (b) serve eval losses BIT-IDENTICAL to the
+//! source shard's, (c) ship strictly fewer bytes on the launder
+//! re-sync than its cold mirror cost (content addressing pulls only
+//! rewritten tensors), and (d) report the propagation watermark —
+//! `fleet_status` carries per-replica `{generation, lag, last_sync}`
+//! plus `erasure_propagation_ms`, and a stale replica's query plane
+//! stamps `stale: true` on answers until it re-syncs.
+
+use std::path::{Path, PathBuf};
+
+use unlearn::audit::{per_example_loss_counts, ModelView};
+use unlearn::checkpoint::{CheckpointStore, TrainState};
+use unlearn::config::RunConfig;
+use unlearn::controller::{ForgetRequest, LaunderPolicy, Urgency};
+use unlearn::data::corpus::Corpus;
+use unlearn::fleet::{Fleet, FleetConfig};
+use unlearn::harness;
+use unlearn::replica::{dispatch_replica, Replica, ReplicaCtx};
+use unlearn::runtime::Runtime;
+use unlearn::shard::ShardSpec;
+use unlearn::util::tempdir;
+
+const FORGET_USER: u32 = 2;
+
+fn fleet_cfg(tag: &str) -> FleetConfig {
+    FleetConfig {
+        root: tempdir(tag),
+        spec: ShardSpec {
+            n_shards: 2,
+            salt: 0x51AB,
+        },
+        base: RunConfig {
+            steps: 8,
+            accum: 2,
+            checkpoint_every: 4,
+            checkpoint_keep: 16,
+            ring_window: 4,
+            warmup: 2,
+            ..Default::default()
+        },
+        scale_steps: false,
+        // any pending forgotten set makes laundering due immediately
+        launder_policy: LaunderPolicy {
+            min_extra_replay_records: 0,
+        },
+        auto_launder: false,
+    }
+}
+
+/// The latest full checkpoint of the store at `root` — what both the
+/// source shard and a replica serve.
+fn latest_full(root: &Path) -> (u32, TrainState) {
+    let store = CheckpointStore::open(root, usize::MAX).expect("open");
+    let steps = store.list_full().expect("list");
+    let step = *steps.last().expect("at least one full checkpoint");
+    (step, store.load_full(step).expect("load"))
+}
+
+/// Sample ids of a surviving user co-resident on the forgotten user's
+/// shard — the eval workload whose losses must not depend on which
+/// mirror answered.
+fn survivor_ids(fleet: &Fleet, shard: u32, corpus: &Corpus) -> Vec<u64> {
+    let shard_corpus = &fleet.shard(shard).expect("shard populated").corpus;
+    (0..corpus.config.n_users as u32)
+        .filter(|&u| u != FORGET_USER && fleet.spec.assign(u) == shard)
+        .flat_map(|u| shard_corpus.user_samples(u))
+        .collect()
+}
+
+fn src_root(fleet: &Fleet, shard: u32) -> PathBuf {
+    fleet.root.join(format!("shard-{shard:04}")).join("ckpt")
+}
+
+#[test]
+fn erasure_propagates_to_every_replica_bit_identically() {
+    let rt = Runtime::load(&harness::artifacts_dir()).expect("artifacts");
+    let corpus = harness::toy_corpus(rt.manifest.seq_len);
+    let mut fleet = Fleet::train(&rt, fleet_cfg("sla-fleet"), corpus.clone())
+        .expect("fleet train");
+    let shard = fleet.spec.assign(FORGET_USER);
+    let shard_corpus = fleet.shard(shard).expect("shard").corpus.clone();
+    let ids = survivor_ids(&fleet, shard, &corpus);
+    assert!(!ids.is_empty(), "a survivor shares the forgotten shard");
+
+    // cold mirrors: full fidelity from the first sync
+    let source = src_root(&fleet, shard);
+    let (pre_step, pre_state) = latest_full(&source);
+    let mut cold = Vec::new();
+    for r in 0..2 {
+        let dir = tempdir(&format!("sla-replica-{r}"));
+        let (_, stats) = fleet.attach_replica(shard, &dir).expect("attach");
+        assert!(stats.objects_pulled > 0 && stats.bytes_pulled > 0);
+        cold.push(stats);
+    }
+    for att in fleet.replicas() {
+        let sv = att.replica.load_serving_state().expect("cold serve");
+        assert_eq!(sv.step, pre_step);
+        assert!(
+            sv.state.bits_equal(&pre_state),
+            "cold mirror serves the source's exact bits"
+        );
+    }
+
+    // forget + launder: the fan-out inside `launder_due` must leave
+    // every replica on the clean lineage
+    let req = ForgetRequest {
+        id: "sla-forget".to_string(),
+        user: Some(FORGET_USER),
+        sample_ids: vec![],
+        urgency: Urgency::Normal,
+    };
+    let out = fleet.forget(&req).expect("fleet forget");
+    assert!(out.outcomes[0].executed(), "forget must commit");
+    let passes = fleet.launder_due("sla");
+    assert!(
+        passes
+            .iter()
+            .any(|(s, r)| *s == shard && matches!(r, Ok(o) if o.executed)),
+        "the forgotten user's shard must launder"
+    );
+
+    // the SLA is observable: wall ms from launder trigger to the last
+    // replica adopting, surfaced both on the struct and in fleet_status
+    let ms = fleet
+        .last_propagation_ms
+        .expect("launder pass with attached replicas records the SLA");
+    assert!(ms.is_finite() && ms >= 0.0);
+    let status = fleet.status_json();
+    assert_eq!(
+        status
+            .get("erasure_propagation_ms")
+            .and_then(|v| v.as_f64())
+            .map(|v| v.to_bits()),
+        Some(ms.to_bits())
+    );
+    let reps = status
+        .get("replicas")
+        .and_then(|v| v.as_arr())
+        .expect("fleet_status embeds replica rows");
+    assert_eq!(reps.len(), 2);
+    for row in reps {
+        assert_eq!(row.get("shard").and_then(|v| v.as_u64()), Some(shard as u64));
+        assert_eq!(row.get("lag").and_then(|v| v.as_u64()), Some(0));
+        assert_eq!(row.get("stale").and_then(|v| v.as_bool()), Some(false));
+        assert!(
+            row.get("last_sync")
+                .and_then(|s| s.get("bytes_pulled"))
+                .and_then(|v| v.as_u64())
+                .is_some(),
+            "per-replica transfer accounting is reported"
+        );
+    }
+
+    // bit-identity: replica-served eval losses == source shard's
+    let (post_step, post_state) = latest_full(&source);
+    assert!(
+        !post_state.bits_equal(&pre_state),
+        "laundering rewrote the serving state"
+    );
+    let src_losses = per_example_loss_counts(
+        &rt,
+        ModelView::Base(&post_state.params),
+        &shard_corpus,
+        &ids,
+    )
+    .expect("source eval");
+    for (r, att) in fleet.replicas().iter().enumerate() {
+        let sv = att.replica.load_serving_state().expect("replica serves");
+        assert_eq!(sv.step, post_step);
+        assert!(
+            sv.state.bits_equal(&post_state),
+            "replica {r} adopted the laundered lineage bit-intact"
+        );
+        let rep_losses = per_example_loss_counts(
+            &rt,
+            ModelView::Base(&sv.state.params),
+            &shard_corpus,
+            &ids,
+        )
+        .expect("replica eval");
+        assert_eq!(src_losses.len(), rep_losses.len());
+        for (i, ((sl, sc), (rl, rc))) in
+            src_losses.iter().zip(&rep_losses).enumerate()
+        {
+            assert_eq!(
+                sl.to_bits(),
+                rl.to_bits(),
+                "replica {r} loss for id {} is bit-identical",
+                ids[i]
+            );
+            assert_eq!(sc.to_bits(), rc.to_bits());
+        }
+
+        // dedup bound: the launder re-sync ships only rewritten
+        // tensors — strictly fewer bytes than this mirror's cold sync,
+        // with CAS hits on the untouched clean-prefix objects
+        let warm = att.replica.last_sync().expect("synced in launder pass");
+        assert!(!warm.already_current);
+        assert!(
+            warm.objects_reused > 0,
+            "replica {r} re-used clean-prefix objects (got none)"
+        );
+        assert!(
+            warm.bytes_pulled < cold[r].bytes_pulled,
+            "replica {r} launder re-sync ({} B) must ship strictly \
+             fewer bytes than its cold mirror ({} B)",
+            warm.bytes_pulled,
+            cold[r].bytes_pulled
+        );
+    }
+}
+
+#[test]
+fn stale_replica_answers_are_watermarked_until_resync() {
+    let rt = Runtime::load(&harness::artifacts_dir()).expect("artifacts");
+    let corpus = harness::toy_corpus(rt.manifest.seq_len);
+    let mut fleet = Fleet::train(&rt, fleet_cfg("sla-wm"), corpus.clone())
+        .expect("fleet train");
+    let shard = fleet.spec.assign(FORGET_USER);
+    let shard_corpus = fleet.shard(shard).expect("shard").corpus.clone();
+    let ids = survivor_ids(&fleet, shard, &corpus);
+    let eval_line = format!(
+        "{{\"op\":\"eval\",\"ids\":[{}]}}",
+        ids.iter()
+            .map(|i| i.to_string())
+            .collect::<Vec<_>>()
+            .join(",")
+    );
+
+    // a standalone replica synced BEFORE the erasure (not attached to
+    // the fleet, so the launder pass does not re-sync it for us)
+    let source = src_root(&fleet, shard);
+    let mut replica =
+        Replica::open(&source, &tempdir("sla-wm-replica")).expect("open");
+    replica.sync().expect("cold sync");
+    let g0 = replica.generation().expect("adopted");
+    let ctx = ReplicaCtx::new(&rt, shard_corpus.clone(), replica);
+
+    let fresh = dispatch_replica("{\"op\":\"replica_status\"}", &ctx);
+    assert_eq!(fresh.get("ok").and_then(|v| v.as_bool()), Some(true));
+    assert_eq!(fresh.get("stale").and_then(|v| v.as_bool()), Some(false));
+
+    // erase on the source: the replica is now one generation behind
+    let req = ForgetRequest {
+        id: "sla-wm-forget".to_string(),
+        user: Some(FORGET_USER),
+        sample_ids: vec![],
+        urgency: Urgency::Normal,
+    };
+    assert!(fleet.forget(&req).expect("forget").outcomes[0].executed());
+    assert!(fleet
+        .launder_due("sla-wm")
+        .iter()
+        .any(|(s, r)| *s == shard && matches!(r, Ok(o) if o.executed)));
+
+    // stale answers still flow, but carry the watermark — the query
+    // plane never silently presents a pre-erasure state as current
+    let stale = dispatch_replica(&eval_line, &ctx);
+    assert_eq!(stale.get("ok").and_then(|v| v.as_bool()), Some(true));
+    assert_eq!(stale.get("stale").and_then(|v| v.as_bool()), Some(true));
+    assert_eq!(stale.get("generation").and_then(|v| v.as_u64()), Some(g0));
+    assert!(
+        stale.get("lag").and_then(|v| v.as_u64()).unwrap_or(0) >= 1,
+        "lag counts the missed lineage swap"
+    );
+
+    // re-sync through the query plane, then answers are clean AND
+    // bit-identical to the source's laundered state
+    let synced = dispatch_replica("{\"op\":\"sync\"}", &ctx);
+    assert_eq!(synced.get("ok").and_then(|v| v.as_bool()), Some(true));
+    let (_, post_state) = latest_full(&source);
+    let direct = per_example_loss_counts(
+        &rt,
+        ModelView::Base(&post_state.params),
+        &shard_corpus,
+        &ids,
+    )
+    .expect("source eval");
+    let clean = dispatch_replica(&eval_line, &ctx);
+    assert_eq!(clean.get("ok").and_then(|v| v.as_bool()), Some(true));
+    assert_eq!(clean.get("stale").and_then(|v| v.as_bool()), Some(false));
+    assert_eq!(clean.get("lag").and_then(|v| v.as_u64()), Some(0));
+    let rows = clean
+        .get("results")
+        .and_then(|v| v.as_arr())
+        .expect("eval rows");
+    assert_eq!(rows.len(), direct.len());
+    for (row, (l, _)) in rows.iter().zip(&direct) {
+        let got = row.get("loss").and_then(|v| v.as_f64()).expect("loss");
+        assert_eq!(
+            got.to_bits(),
+            (*l as f64).to_bits(),
+            "replica-served loss is bit-identical to the source's"
+        );
+    }
+
+    // the forgotten user's samples are gone from the query plane's
+    // corpus view only if the caller filters them; an unknown id is a
+    // typed refusal, not a silent zero
+    let bogus = dispatch_replica("{\"op\":\"eval\",\"ids\":[999999]}", &ctx);
+    assert_eq!(bogus.get("ok").and_then(|v| v.as_bool()), Some(false));
+}

@@ -7,7 +7,7 @@
 use std::io::{BufRead, BufReader, Read, Write};
 use std::net::{Shutdown, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use unlearn::controller::{ForgetRequest, Urgency};
 use unlearn::server::{serve_event_loop, serve_line_conn, JobQueue, JobRequest};
@@ -359,4 +359,74 @@ fn event_loop_partial_line_then_disconnect_never_enqueues() {
         rows[0].get("request_id").and_then(|v| v.as_str()),
         Some("e-1")
     );
+}
+
+#[test]
+fn event_loop_delivers_multi_mib_response_to_slow_reader() {
+    // A multi-MiB response (a replica CAS manifest dump, a fleet status
+    // with per-replica rows) must reach a reader that drains slowly but
+    // STEADILY.  The loop flushes in `WRITE_CHUNK`-bounded slices and
+    // starts the 5s stall clock only on zero-progress sweeps, so a
+    // transfer whose total wall time is far past the stall limit is
+    // fine as long as bytes keep moving.  Before flush-owned stall
+    // accounting, mid-pump flushes discarded progress and a draining
+    // client could be evicted mid-response.
+    const BLOB: usize = 8 * (1 << 20);
+    let shutdown = AtomicBool::new(false);
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let mut served = Err(anyhow::anyhow!("loop never ran"));
+    std::thread::scope(|s| {
+        let looper = s.spawn(|| {
+            serve_event_loop(listener, &shutdown, |_line| {
+                let mut out = Json::obj();
+                out.set("ok", true).set("blob", "x".repeat(BLOB));
+                out
+            })
+        });
+        let mut conn = TcpStream::connect(addr).unwrap();
+        conn.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+        conn.write_all(b"{\"op\":\"big\"}\n").unwrap();
+        conn.flush().unwrap();
+
+        // drain in small chunks with sub-limit pauses: total elapsed
+        // exceeds WRITE_STALL_LIMIT but every sweep sees progress
+        let t0 = Instant::now();
+        let mut buf = vec![0u8; 128 * 1024];
+        let mut got: Vec<u8> = Vec::with_capacity(BLOB + 64);
+        loop {
+            let n = conn.read(&mut buf).unwrap();
+            assert!(
+                n > 0,
+                "server evicted the slow reader after {} of {} bytes \
+                 ({:?} elapsed)",
+                got.len(),
+                BLOB,
+                t0.elapsed()
+            );
+            got.extend_from_slice(&buf[..n]);
+            if got.last() == Some(&b'\n') {
+                break;
+            }
+            std::thread::sleep(Duration::from_millis(100));
+        }
+        assert!(
+            t0.elapsed() > Duration::from_secs(5),
+            "the drain must outlast the stall limit for the test to \
+             mean anything (took {:?})",
+            t0.elapsed()
+        );
+        let line = String::from_utf8(got).expect("utf8 response");
+        let j = parse(line.trim()).expect("full response is valid json");
+        assert_eq!(j.get("ok").and_then(|v| v.as_bool()), Some(true));
+        assert_eq!(
+            j.get("blob").and_then(|v| v.as_str()).map(|s| s.len()),
+            Some(BLOB),
+            "every byte of the response arrived"
+        );
+        drop(conn);
+        shutdown.store(true, Ordering::SeqCst);
+        served = looper.join().unwrap();
+    });
+    served.expect("event loop exits cleanly after the slow drain");
 }
