@@ -1,0 +1,196 @@
+//! Online-ingest benchmark: **forget latency under a moving tail**.
+//!
+//! Trains a small system, then runs several online-ingest rounds
+//! through the scheduler (durable doc-segment append + bounded
+//! train-increment, both committed through the interleave log) and
+//! measures wall time for one forget request issued AFTER the tail has
+//! moved — the number the online data plane adds to the paper's story:
+//! erasure latency must not grow with how much the corpus has been
+//! extended since training "finished".  The run double-checks itself
+//! the same way the acceptance test does: the post-forget serving
+//! state must be bit-identical to the retain-only oracle over the
+//! final corpus.  Ingest throughput (docs/sec through append + index
+//! insert + increment) is reported ungated.
+//!
+//! `-- --json` gates `ingest_forget_ms` against the committed
+//! `BENCH_ingest.json` through the same >20% cigate rule as the other
+//! benches, with first-measured-run promotion over the null
+//! placeholder.
+
+#[path = "bench_util.rs"]
+mod bench_util;
+use bench_util::*;
+
+use std::collections::HashSet;
+use std::time::Instant;
+
+use unlearn::cigate::perf;
+use unlearn::config::RunConfig;
+use unlearn::controller::{execute_batch, ForgetRequest, Urgency};
+use unlearn::harness;
+use unlearn::ingest::{self, IngestDoc, IngestLog, IngestScheduler};
+use unlearn::runtime::Runtime;
+use unlearn::util::json::Json;
+
+const STEPS: u32 = 8;
+const INC_STEPS: u32 = 2;
+const ROUNDS: usize = 3;
+const DOCS_PER_ROUND: usize = 4;
+const FORGET_USER: u32 = 2;
+
+struct Probe {
+    /// Mean wall ms for one full ingest round (append + increment).
+    ingest_round_ms: f64,
+    /// Docs committed per second across all rounds.
+    ingest_docs_per_sec: f64,
+    /// Forget submit → committed, under the moved tail (the gated SLA).
+    forget_ms: f64,
+    /// Final corpus size (base + everything ingested).
+    corpus_len: usize,
+}
+
+fn run_probe(rt: &Runtime, tag: &str) -> Probe {
+    let corpus = harness::toy_corpus(rt.manifest.seq_len);
+    let cfg = RunConfig {
+        run_dir: unlearn::util::tempdir(tag),
+        steps: STEPS,
+        accum: 2,
+        checkpoint_every: 4,
+        checkpoint_keep: 16,
+        ring_window: 2,
+        warmup: 2,
+        ..Default::default()
+    };
+    let trained =
+        harness::build_system(rt, cfg.clone(), corpus, false).expect("train");
+    let mut sys = trained.system;
+    let mut log = IngestLog::attach(&cfg.run_dir, sys.corpus.len())
+        .expect("attach log");
+
+    let sched = IngestScheduler::new(INC_STEPS);
+    let mut ingest_secs = 0.0;
+    for r in 0..ROUNDS {
+        let docs: Vec<IngestDoc> = (0..DOCS_PER_ROUND)
+            .map(|d| IngestDoc {
+                user: 200 + (r * DOCS_PER_ROUND + d) as u32,
+                text: format!(
+                    "round {r} doc {d}: a new user files a short note \
+                     about the weather on day {}",
+                    r * DOCS_PER_ROUND + d
+                ),
+            })
+            .collect();
+        let t0 = Instant::now();
+        let out = sched
+            .run_round(
+                &mut sys,
+                &mut log,
+                ingest::round_of(&format!("{tag}-round-{r}")),
+                &docs,
+            )
+            .expect("ingest round");
+        ingest_secs += t0.elapsed().as_secs_f64();
+        assert!(out.executed, "a fresh round must execute");
+        assert_eq!(sys.tail_lag_steps(), 0, "increment covers the tail");
+    }
+
+    let req = ForgetRequest {
+        id: "bench-ingest".to_string(),
+        user: Some(FORGET_USER),
+        sample_ids: vec![],
+        urgency: Urgency::Normal,
+    };
+    let t0 = Instant::now();
+    let out = execute_batch(&mut sys, &[req]).expect("forget");
+    assert!(
+        out.outcomes[0].as_ref().unwrap().executed,
+        "forget must commit"
+    );
+    log.record_forget("bench-ingest", sys.forgotten.len())
+        .expect("interleave forget record");
+    let forget_ms = t0.elapsed().as_secs_f64() * 1e3;
+
+    // the bench proves what it times: serving state after the forget
+    // must equal the retain-only oracle over the FINAL corpus
+    let mut union: HashSet<u64> = sys.forgotten.clone();
+    union.extend(sys.laundered.iter().copied());
+    let oracle = ingest::oracle_state(&sys, &union).expect("oracle replay");
+    assert!(
+        sys.state.bits_equal(&oracle),
+        "forget under a moving tail must stay bit-exact"
+    );
+
+    let n_docs = (ROUNDS * DOCS_PER_ROUND) as f64;
+    Probe {
+        ingest_round_ms: ingest_secs * 1e3 / ROUNDS as f64,
+        ingest_docs_per_sec: if ingest_secs > 0.0 {
+            n_docs / ingest_secs
+        } else {
+            0.0
+        },
+        forget_ms,
+        corpus_len: sys.corpus.len(),
+    }
+}
+
+fn json_main() {
+    let rt = Runtime::load(&harness::artifacts_dir()).expect("artifacts");
+    let p = run_probe(&rt, "bench-ingest-json");
+
+    // fail-closed gate against the committed baseline
+    let baseline = bench_json_path("ingest");
+    match perf::check_ingest(
+        &baseline,
+        p.forget_ms,
+        perf::DEFAULT_MAX_REGRESSION,
+    ) {
+        Ok(v) => println!("ingest perf gate: {v:?}"),
+        Err(e) => {
+            eprintln!("{e:#}");
+            std::process::exit(1);
+        }
+    }
+
+    let mut j = Json::obj();
+    j.set("bench", "ingest")
+        .set(perf::INGEST_METRIC, p.forget_ms)
+        .set("ingest_round_ms", p.ingest_round_ms)
+        .set("ingest_docs_per_sec", p.ingest_docs_per_sec)
+        .set("rounds", ROUNDS)
+        .set("docs_per_round", DOCS_PER_ROUND)
+        .set("corpus_len", p.corpus_len)
+        .set("schema", 1);
+    match perf::record_first_baseline_for(&baseline, perf::INGEST_METRIC, &j)
+        .expect("write baseline")
+    {
+        perf::BaselineDisposition::Recorded => {
+            println!(
+                "ingest baseline: first measured run RECORDED at {} — the \
+                 >{:.0}% regression gate bites from the next run",
+                baseline.display(),
+                perf::DEFAULT_MAX_REGRESSION * 100.0
+            );
+            println!("{}", j.pretty());
+        }
+        perf::BaselineDisposition::AlreadyMeasured => emit_json("ingest", &j),
+    }
+}
+
+fn main() {
+    if json_mode() {
+        return json_main();
+    }
+    let rt = Runtime::load(&harness::artifacts_dir()).expect("artifacts");
+    let p = run_probe(&rt, "bench-ingest");
+    header(
+        "Online ingest (forget under a moving tail)",
+        &["metric", "value"],
+    );
+    println!("forget under moving tail | {}", fmt_secs(p.forget_ms / 1e3));
+    println!("ingest round | {}", fmt_secs(p.ingest_round_ms / 1e3));
+    println!("ingest throughput | {:.1} docs/s", p.ingest_docs_per_sec);
+    println!(
+        "final corpus | {} docs after {} rounds × {}",
+        p.corpus_len, ROUNDS, DOCS_PER_ROUND
+    );
+}

@@ -233,6 +233,31 @@ pub fn check_replica(
     )
 }
 
+/// The ingest bench's gated metric: wall-clock milliseconds to execute
+/// one forget request under a **moving tail** — after interleaved
+/// online-ingest rounds have appended doc segments and bounded
+/// train-increments have extended the logged program past the original
+/// run.  It regresses when the preserved-graph replay stops reusing
+/// the nearest checkpoint below the divergence point, when closure
+/// expansion over the incrementally-grown near-dup index slows, or
+/// when interleave-log bookkeeping leaks onto the forget hot path.
+pub const INGEST_METRIC: &str = "ingest_forget_ms";
+
+/// Fail-closed gate over the committed `BENCH_ingest.json` baseline.
+pub fn check_ingest(
+    baseline_path: &Path,
+    measured_ms: f64,
+    max_regression: f64,
+) -> anyhow::Result<PerfVerdict> {
+    check_metric(
+        baseline_path,
+        INGEST_METRIC,
+        measured_ms,
+        max_regression,
+        "ingest bench (forget-under-moving-tail ms)",
+    )
+}
+
 /// Whether a measured run became the committed baseline.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum BaselineDisposition {
@@ -425,6 +450,51 @@ mod tests {
             PerfVerdict::Pass { .. }
         ));
         assert!(check_replica(&path, 60.0, 0.2).is_err());
+    }
+
+    #[test]
+    fn ingest_metric_gates_and_promotes() {
+        let dir = tempdir("perf-ingest-gate");
+        let path = dir.join("BENCH_ingest.json");
+        assert_eq!(
+            check_ingest(&path, 25.0, 0.2).unwrap(),
+            PerfVerdict::RecordOnly
+        );
+        std::fs::write(
+            &path,
+            r#"{"bench": "ingest", "ingest_forget_ms": null}"#,
+        )
+        .unwrap();
+        assert_eq!(
+            check_ingest(&path, 25.0, 0.2).unwrap(),
+            PerfVerdict::RecordOnly
+        );
+        let mut measured = Json::obj();
+        measured
+            .set("bench", "ingest")
+            .set(INGEST_METRIC, 25.0)
+            .set("schema", 1);
+        assert_eq!(
+            record_first_baseline_for(&path, INGEST_METRIC, &measured)
+                .unwrap(),
+            BaselineDisposition::Recorded
+        );
+        assert!(matches!(
+            check_ingest(&path, 29.0, 0.2).unwrap(),
+            PerfVerdict::Pass { .. }
+        ));
+        assert!(check_ingest(&path, 40.0, 0.2).is_err());
+        let other = {
+            let mut j = Json::obj();
+            j.set(INGEST_METRIC, 1.0);
+            j
+        };
+        assert_eq!(
+            record_first_baseline_for(&path, INGEST_METRIC, &other).unwrap(),
+            BaselineDisposition::AlreadyMeasured,
+            "a measured ingest baseline is never clobbered"
+        );
+        assert_eq!(load_metric(&path, INGEST_METRIC).unwrap(), Some(25.0));
     }
 
     #[test]

@@ -79,6 +79,15 @@ pub fn execute_launder(
     // detlint: allow(wall-clock) — wall_secs is operator observability in
     // the outcome report; replay equality never reads it
     let t0 = Instant::now();
+    // Moving-tail rule: never launder against a provisional WAL tail.
+    // An in-flight train-increment's records are truncated if it
+    // crashes; a lineage staged over them would survive the rollback
+    // and desynchronize checkpoints from the (shorter) replayable
+    // history.  Checked before duplicate suppression so a retry under
+    // the same key still succeeds once the increment commits.
+    if sys.ingest.in_flight {
+        return Err(UnlearnError::IngestInFlight.into());
+    }
     if sys.manifest.was_executed(id) {
         return Ok(LaunderOutcome {
             executed: false,

@@ -101,6 +101,41 @@ impl ControllerOutcome {
     }
 }
 
+/// Online-ingest watermark: how far the trained tail lags the corpus.
+/// Lives on [`UnlearnSystem`] (not in `ingest/`) so the admin plane can
+/// report it without a controller↔ingest dependency cycle; the ingest
+/// subsystem is the only writer.
+#[derive(Debug, Clone, Default)]
+pub struct IngestStatus {
+    /// Documents appended through the ingest log (this process).
+    pub ingested_docs: u64,
+    /// Corpus length the latest committed train-increment's schedule
+    /// was drawn from — every sample below this bound has had at least
+    /// one chance to enter the microbatch graph.
+    pub covered_len: usize,
+    /// True while a train-increment is running (or died mid-run and has
+    /// not been recovered): the WAL tail beyond the interleave log's
+    /// last commit is provisional, so laundering must refuse to race it
+    /// (see [`plan::UnlearnError::IngestInFlight`]).
+    pub in_flight: bool,
+}
+
+impl IngestStatus {
+    /// Steps of tail advance needed to cover every uncovered sample
+    /// once (one epoch pass at `batch × accum` samples per step) — the
+    /// operator-facing `tail_lag_steps` watermark.
+    pub fn tail_lag_steps(
+        &self,
+        corpus_len: usize,
+        batch: usize,
+        accum: usize,
+    ) -> u64 {
+        let uncovered = corpus_len.saturating_sub(self.covered_len);
+        let per_step = (batch * accum).max(1);
+        (uncovered as u64).div_ceil(per_step as u64)
+    }
+}
+
 /// The live system a controller instance manages.
 pub struct UnlearnSystem<'rt> {
     pub rt: &'rt Runtime,
@@ -153,6 +188,9 @@ pub struct UnlearnSystem<'rt> {
     /// longer lies on the logged trajectory, so ring patches (recorded
     /// against it) are no longer applicable.
     pub diverged: bool,
+    /// Online-ingest watermark (see [`IngestStatus`]); the `ingest`
+    /// subsystem is the only writer.
+    pub ingest: IngestStatus,
 }
 
 impl<'rt> UnlearnSystem<'rt> {
@@ -268,6 +306,16 @@ impl<'rt> UnlearnSystem<'rt> {
                 .iter()
                 .filter(|&&id| !self.idmap.is_retired(id))
                 .count()
+    }
+
+    /// `tail_lag_steps` against THIS system's batch/accum geometry —
+    /// the number `status`/`fleet_status` report.
+    pub fn tail_lag_steps(&self) -> u64 {
+        self.ingest.tail_lag_steps(
+            self.corpus.len(),
+            self.rt.manifest.batch,
+            self.cfg.accum,
+        )
     }
 
     /// Expand the request to cl(F) (Alg. A.7 line 1).

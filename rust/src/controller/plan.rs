@@ -52,6 +52,12 @@ pub enum UnlearnError {
     /// Laundering requested but the cumulative forgotten set is empty
     /// (or never influenced the base) — nothing to compact.
     NothingToLaunder,
+    /// Laundering requested while a train-increment is in flight: the
+    /// WAL tail beyond the interleave log's last commit is provisional
+    /// (a crash truncates it), so a lineage rewritten against it could
+    /// adopt steps that are later rolled back.  Retry after the
+    /// increment commits.
+    IngestInFlight,
     /// The admin-plane lock was poisoned by a panicked holder.
     LockPoisoned,
     /// Every planned step was attempted and failed its gate.
@@ -72,6 +78,7 @@ impl UnlearnError {
             UnlearnError::NoFisherCache => "no_fisher_cache",
             UnlearnError::NoCheckpoint { .. } => "no_checkpoint",
             UnlearnError::NothingToLaunder => "nothing_to_launder",
+            UnlearnError::IngestInFlight => "ingest_in_flight",
             UnlearnError::LockPoisoned => "lock_poisoned",
             UnlearnError::PlanExhausted => "plan_exhausted",
             UnlearnError::Internal(_) => "internal",
@@ -119,6 +126,12 @@ impl fmt::Display for UnlearnError {
                 f,
                 "cumulative forgotten set is empty or never influenced \
                  the base — nothing to launder"
+            ),
+            UnlearnError::IngestInFlight => write!(
+                f,
+                "a train-increment is in flight — its WAL tail is \
+                 provisional until the interleave log commits; retry \
+                 laundering after the increment completes"
             ),
             UnlearnError::LockPoisoned => {
                 write!(f, "system lock poisoned by a panicked holder")

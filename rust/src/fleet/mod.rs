@@ -48,6 +48,7 @@ use crate::controller::{
 };
 use crate::data::corpus::Corpus;
 use crate::harness;
+use crate::ingest::{self, IngestDoc};
 use crate::neardup::closure::build_index;
 use crate::neardup::{expand_closure, ClosureParams, HammingIndex};
 use crate::replica::{Replica, SyncStats};
@@ -322,16 +323,20 @@ impl<'rt> Fleet<'rt> {
         // corpus in memory once more for nothing (only the id maps are
         // consulted after build).
         let corpora = std::mem::take(&mut split.corpora);
-        let ndindex = build_index(&corpus);
+        let mut ndindex = build_index(&corpus);
         let total_len = corpus.len();
         let n = cfg.spec.n_shards as usize;
 
         // Train/open every non-empty shard concurrently: shards are
         // fully independent (disjoint run dirs, shared read-only
-        // runtime), so fleet build time is max-over-shards.
-        let mut results: Vec<
-            Option<anyhow::Result<(harness::TrainedSystem<'rt>, bool)>>,
-        > = (0..n).map(|_| None).collect();
+        // runtime), so fleet build time is max-over-shards.  Each slot
+        // carries the shard's committed online-ingest docs (local base
+        // id + docs, commit order) so the global routing view below can
+        // re-grow to match what the shard WALs reference.
+        type ShardBuilt<'rt> =
+            (harness::TrainedSystem<'rt>, bool, Vec<(u64, Vec<IngestDoc>)>);
+        let mut results: Vec<Option<anyhow::Result<ShardBuilt<'rt>>>> =
+            (0..n).map(|_| None).collect();
         std::thread::scope(|s| {
             let mut handles = Vec::new();
             for ((i, res), shard_corpus) in
@@ -344,15 +349,23 @@ impl<'rt> Fleet<'rt> {
                     shard_run_config(&cfg, i as u32, shard_corpus.len(), total_len);
                 handles.push((res, s.spawn(move || {
                     if resume {
-                        harness::open_or_build_system(
-                            rt,
-                            scfg,
-                            shard_corpus,
-                            false,
-                        )
+                        // same resumability predicate as
+                        // `harness::open_or_build_system` (reopen
+                        // falls back to a fresh build itself, but the
+                        // fleet still reports whether anything resumed)
+                        let resumed = scfg.run_dir.join("wal").exists()
+                            && scfg.run_dir.join("pins.json").exists()
+                            && scfg.run_dir.join("ids.map").exists();
+                        // the ingest-aware reopen: recovers torn ingest
+                        // rounds and re-enters committed docs before
+                        // the WAL tail is replayed
+                        let (t, log, _report) =
+                            ingest::reopen(rt, scfg, shard_corpus, false)?;
+                        let docs = log.committed_docs()?;
+                        Ok((t, resumed, docs))
                     } else {
                         harness::build_system(rt, scfg, shard_corpus, false)
-                            .map(|t| (t, false))
+                            .map(|t| (t, false, Vec::new()))
                     }
                 })));
             }
@@ -365,14 +378,35 @@ impl<'rt> Fleet<'rt> {
 
         let mut shards: Vec<Option<ShardState<'rt>>> = Vec::with_capacity(n);
         let mut resumed_any = false;
+        let mut corpus = corpus;
         for (i, res) in results.into_iter().enumerate() {
             match res {
                 None => shards.push(None),
                 Some(Err(e)) => {
                     return Err(e.context(format!("shard {i} failed to build")))
                 }
-                Some(Ok((trained, resumed))) => {
+                Some(Ok((trained, resumed, ingested))) => {
                     let system = trained.system;
+                    // Re-grow the global routing view with the shard's
+                    // committed ingest docs.  Global ids are
+                    // process-local routing handles (only shard-LOCAL
+                    // ids are durable in WALs), so assigning them here
+                    // in shard-then-commit order is sound — the locate
+                    // map re-links them to the durable local ids.
+                    for (local_base, docs) in ingested {
+                        let gbase = corpus.len() as u64;
+                        for k in 0..docs.len() as u64 {
+                            split
+                                .locate
+                                .insert(gbase + k, (i as u32, local_base + k));
+                        }
+                        ingest::grow_corpus(
+                            &mut corpus,
+                            &mut ndindex,
+                            gbase,
+                            &docs,
+                        )?;
+                    }
                     // topology pin sanity: the run dir must have been
                     // trained as THIS shard of THIS topology
                     let expect = cfg.spec.pin_for(i as u32);
@@ -790,6 +824,93 @@ impl<'rt> Fleet<'rt> {
         })
     }
 
+    /// Online ingest into the fleet: documents are user-owned, so the
+    /// whole batch routes to `assign(user)` and exactly ONE shard runs
+    /// a scheduler round — durable doc append + bounded
+    /// train-increment — while every other shard's bytes stay
+    /// untouched (the `1/N` cost mirror of the forget path).  The
+    /// GLOBAL routing view (corpus, near-dup index, locate map) grows
+    /// alongside, so subsequent forget closures reach the new docs.
+    /// The round key derives from `req_id`, making a retry after a
+    /// torn round idempotent per request.
+    pub fn ingest(
+        &mut self,
+        req_id: &str,
+        user: u32,
+        texts: &[String],
+        train_steps: u32,
+    ) -> anyhow::Result<(u32, ingest::IncrementOutcome)> {
+        anyhow::ensure!(!texts.is_empty(), "ingest batch is empty");
+        let shard = self.spec.assign(user);
+        let i = shard as usize;
+        if let ShardHealth::Quarantined {
+            reason,
+            cooldown_drains,
+            ..
+        } = &self.health[i]
+        {
+            anyhow::ensure!(
+                *cooldown_drains == 0,
+                "shard {shard} is quarantined ({reason}) — ingest \
+                 refused until the cooldown expires"
+            );
+        }
+        let Some(Some(st)) = self.shards.get_mut(i) else {
+            anyhow::bail!(
+                "user {user} routes to shard {shard}, which holds no \
+                 system (its user set was empty at fleet build) — \
+                 rebuild the fleet with the user's corpus to bootstrap \
+                 it, then ingest"
+            );
+        };
+        let docs: Vec<IngestDoc> = texts
+            .iter()
+            .map(|t| IngestDoc {
+                user,
+                text: t.clone(),
+            })
+            .collect();
+        let round = ingest::round_of(req_id);
+        let sys = &mut st.system;
+        let mut log =
+            ingest::IngestLog::attach(&sys.cfg.run_dir, sys.corpus.len())?;
+        // captured before the round so the global view can mirror the
+        // local ids the shard assigns; a round whose ingest half
+        // already committed (idempotent retry) must NOT re-grow the
+        // global view — build/the first attempt already did
+        let fresh_docs = !log.has_ingest_round(round);
+        let local_base = sys.corpus.len() as u64;
+        let sched = ingest::IngestScheduler::new(train_steps.max(1));
+        let res = sched.run_round(sys, &mut log, round, &docs);
+        match res {
+            Err(e) => {
+                // ingest shares the shard-infrastructure failure
+                // posture of the forget drain: quarantine the shard so
+                // erasure work stops routing at a sick WAL/log
+                self.note_shard_failure(i, format!("ingest: {e:#}"));
+                Err(e)
+            }
+            Ok(out) => {
+                self.health[i] = ShardHealth::Healthy;
+                if fresh_docs {
+                    let gbase = self.corpus.len() as u64;
+                    for k in 0..docs.len() as u64 {
+                        self.split
+                            .locate
+                            .insert(gbase + k, (shard, local_base + k));
+                    }
+                    ingest::grow_corpus(
+                        &mut self.corpus,
+                        &mut self.ndindex,
+                        gbase,
+                        &docs,
+                    )?;
+                }
+                Ok((shard, out))
+            }
+        }
+    }
+
     /// Run a laundering pass on every shard whose OWN policy says it is
     /// due, concurrently.  The per-shard manifest key is
     /// `<id_prefix>-s<shard>-g<generation>`: the active lineage
@@ -985,6 +1106,13 @@ impl<'rt> Fleet<'rt> {
                         .set("model_hash", sys.state.model_hash())
                         .set("optimizer_hash", sys.state.optimizer_hash())
                         .set("logical_step", sys.state.logical_step)
+                        // online-ingest watermarks (per shard): the
+                        // step the serving state covers, docs accepted
+                        // through the interleave log, and how far the
+                        // uncovered tail lags in optimizer steps
+                        .set("trained_step", sys.state.logical_step)
+                        .set("ingested_docs", sys.ingest.ingested_docs)
+                        .set("tail_lag_steps", sys.tail_lag_steps())
                         .set("forgotten_pending", sys.forgotten.len())
                         .set("laundered_ids", sys.laundered_total())
                         .set(

@@ -12,6 +12,9 @@
 //!   {"op":"plan","id":"req-3","user":4}           → fleet-plan dry run (max/total cost)
 //!   {"op":"launder"}                              → launder every shard whose own
 //!                                                   policy says it is due
+//!   {"op":"ingest","id":"d1","user":9,"texts":["…"],"train_steps":2}
+//!                                                 → docs + train-increment on the
+//!                                                   owning shard alone
 //!   {"op":"utility"}                              → uniform-ensemble fleet ppl
 //!   {"op":"shutdown"}
 //!
@@ -310,8 +313,8 @@ fn dispatch_inner(
 ) -> anyhow::Result<Json> {
     // Hot path: lazy scans over the raw bytes, like the single-system
     // server — `fleet_status`/`submit`/`poll`/`jobs`/`launder`/
-    // `utility`/`shutdown` never build a tree; `plan` (cold, takes the
-    // fleet lock for a full dry run) re-parses the validated line.
+    // `utility`/`shutdown` never build a tree; `plan` and `ingest`
+    // (cold, take the fleet lock) re-parse the validated line.
     let b = line.as_bytes();
     let op = json_scan::scan_str(b, "op")
         .map_err(scan_err)?
@@ -423,6 +426,51 @@ fn dispatch_inner(
                 rows.push(j);
             }
             out.set("ok", true).set("shards", Json::Arr(rows));
+        }
+        "ingest" => {
+            // Online ingest: docs + bounded train-increment on the
+            // owning shard, inline under the fleet lock (cold,
+            // low-rate op — the fleet job payload stays forget-only).
+            // Tree-parse: texts[] has no lazy scan.
+            let req =
+                parse(line).map_err(|e| anyhow::anyhow!("bad json: {e}"))?;
+            let id = req
+                .get("id")
+                .and_then(|v| v.as_str())
+                .unwrap_or("fleet-ingest")
+                .to_string();
+            let user = req
+                .get("user")
+                .and_then(|v| v.as_u64())
+                .ok_or_else(|| anyhow::anyhow!("ingest needs user"))?
+                as u32;
+            let texts: Vec<String> = req
+                .get("texts")
+                .and_then(|v| v.as_arr())
+                .ok_or_else(|| anyhow::anyhow!("ingest needs texts[]"))?
+                .iter()
+                .map(|t| {
+                    t.as_str().map(str::to_string).ok_or_else(|| {
+                        anyhow::anyhow!("ingest texts[] non-string")
+                    })
+                })
+                .collect::<anyhow::Result<_>>()?;
+            let train_steps = req
+                .get("train_steps")
+                .and_then(|v| v.as_u64())
+                .unwrap_or(1) as u32;
+            let mut fleet = ctx
+                .fleet
+                .lock()
+                .map_err(|_| anyhow::Error::new(UnlearnError::LockPoisoned))?;
+            let (shard, o) = fleet.ingest(&id, user, &texts, train_steps)?;
+            out.set("ok", true)
+                .set("shard", shard)
+                .set("executed", o.executed)
+                .set("docs", texts.len() as u64)
+                .set("from_step", o.step.from_step as u64)
+                .set("n_steps", o.step.n_steps as u64)
+                .set("updates_applied", o.updates_applied as u64);
         }
         "utility" => {
             let fleet = ctx

@@ -10,7 +10,7 @@ use crate::adapters::AdapterRegistry;
 use crate::audit::AuditThresholds;
 use crate::checkpoint::CheckpointStore;
 use crate::config::RunConfig;
-use crate::controller::UnlearnSystem;
+use crate::controller::{IngestStatus, UnlearnSystem};
 use crate::curvature::{FisherCache, HotPathParams};
 use crate::data::corpus::{Corpus, CorpusConfig};
 use crate::manifest::ForgetManifest;
@@ -251,6 +251,7 @@ fn system_from_run_with_store<'rt>(
         )?;
         (rebuilt.state, true)
     };
+    let corpus_len = corpus.len();
     let system = UnlearnSystem {
         rt,
         cfg,
@@ -278,6 +279,15 @@ fn system_from_run_with_store<'rt>(
         forgotten,
         laundered,
         diverged,
+        // covered_len starts at the corpus the caller handed us; a
+        // reopen through `ingest::reopen` re-derives it from the
+        // interleave log (the corpus there includes committed ingest
+        // docs the latest increment may not have covered yet)
+        ingest: IngestStatus {
+            ingested_docs: 0,
+            covered_len: corpus_len,
+            in_flight: false,
+        },
     };
     Ok(TrainedSystem {
         system,

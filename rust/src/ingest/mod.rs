@@ -1,0 +1,1314 @@
+//! Online ingest: the trained tail advances while the system serves
+//! and forgets (the continual-learning/unlearning interplay the source
+//! paper's train-then-serve lifecycle leaves open; SoK 2506.09227
+//! § ongoing-training).
+//!
+//! New user documents append as durable **doc segments** under
+//! `<run_dir>/ingest/`, and bounded **train-increments** extend the run's
+//! WAL with fresh segments — both commit through one JSON-lines
+//! **interleave log** (`interleave.log`) that totally orders every
+//! ingest, train-increment, forget and launder decision.  The whole
+//! serving history then replays as ONE pinned program: the WAL + IdMap
+//! still fully determine the microbatch graph (replay never calls the
+//! sampler), so `forget(u)` after K interleaved rounds is bit-identical
+//! to an oracle that trained the final corpus with u's closure masked
+//! from step 0 (Thm. A.1 applied inductively across increments — proven
+//! in `tests/ingest_equality.rs`).
+//!
+//! Durability contract (swept in crash-matrix sequence 7):
+//! - A doc segment is committed by its `ingest` log entry; a train-
+//!   increment's WAL segments are committed by its `train` entry.  The
+//!   entry append + fsync is THE commit point of each round.
+//! - [`recover`] deletes WAL segments past the last committed count and
+//!   doc segments without a committed entry — a torn round is rolled
+//!   back wholesale, so a torn ingest is *never trained on*, and a
+//!   plain retry of the round (same `round` key) converges to the
+//!   never-crashed bytes because [`increment_schedule`] is a pure
+//!   function of `(corpus_len, run_seed, from_step, n_steps)`.
+//! - The grown IdMap is staged under `ingest/idmap.stage/` and promoted
+//!   only after the commit point; a leftover stage is promoted or
+//!   discarded by [`recover`] depending on whether its `train` entry
+//!   committed.  The live map is never rewritten pre-commit, so no
+//!   crash can strand the run behind IdMap's fail-closed checksum.
+//! - Increments checkpoint AFTER the commit point (never mid-run), so
+//!   no stored checkpoint can embed influence from a WAL tail that
+//!   recovery would truncate.  The one crash window — committed entry,
+//!   missing checkpoint — is healed at [`reopen`] by replaying the
+//!   clean tail.
+//!
+//! Ordering contract vs the jobs WAL: the jobs WAL orders *requests*
+//! (durable before ack); the interleave log orders *state mutations*.
+//! The server's drain loop executes jobs in submission order with
+//! ingest/launder acting as barriers between coalesced forget groups,
+//! and records each executed mutation here — so the interleave log is
+//! the replayable serialization of what the jobs WAL admitted.
+
+use std::collections::HashSet;
+use std::fs;
+use std::path::{Path, PathBuf};
+
+use crate::checkpoint::TrainState;
+use crate::config::RunConfig;
+use crate::controller::{IngestStatus, UnlearnSystem};
+use crate::data::corpus::{Corpus, Sample, SampleKind};
+use crate::data::sampler::{DeterministicSampler, Microbatch};
+use crate::data::tokenizer::ByteTokenizer;
+use crate::harness::TrainedSystem;
+use crate::neardup::simhash::simhash_tokens;
+use crate::runtime::Runtime;
+use crate::trainer::SegmentStage;
+use crate::util::faultfs;
+use crate::util::hashing::sha256_hex;
+use crate::util::json::{parse, Json};
+use crate::util::rng::philox_u64;
+use crate::wal::{segment_count, WalRecord, WalWriter};
+
+/// Philox counter domain separating increment schedules from the base
+/// run's sampler and every other derived seed in the tree.
+const INGEST_SEED_DOMAIN: u64 = 0x1A65_E570;
+
+/// The four files one `IdMap::save` writes (entries, checksum, retired
+/// sidecar, sidecar checksum) — the unit the staged-promote protocol
+/// moves together.
+const IDMAP_FILES: [&str; 4] =
+    ["ids.map", "ids.map.sum", "ids.map.retired", "ids.map.retired.sum"];
+
+/// One document arriving through the ingest plane.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct IngestDoc {
+    pub user: u32,
+    pub text: String,
+}
+
+/// A bounded tail advance: `n_steps` logical optimizer steps starting
+/// at `from_step` (the current end of the logged program).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TrainStep {
+    pub from_step: u32,
+    pub n_steps: u32,
+}
+
+/// One committed decision of the interleave log, in file order.
+#[derive(Debug, Clone, PartialEq)]
+pub enum InterleaveEntry {
+    /// First entry ever: the base run's sealed WAL segment count and
+    /// corpus length, recorded BEFORE any ingest mutates the run dir —
+    /// recovery needs the committed baseline even if the very first
+    /// round crashes pre-commit.
+    Open { wal_segments: u64, corpus_len: u64 },
+    /// Doc segment `docs-{seq:06}.seg` committed: `docs` documents with
+    /// dense sample ids starting at `base_id`.
+    Ingest { seq: u64, round: u64, docs: u64, base_id: u64 },
+    /// Train-increment committed: the WAL now has `wal_segments`
+    /// segments and its schedule was drawn over `corpus_len` samples.
+    Train {
+        seq: u64,
+        round: u64,
+        from_step: u32,
+        n_steps: u32,
+        corpus_len: u64,
+        wal_segments: u64,
+        applied_updates: u64,
+    },
+    /// A forget batch executed between increments (ordering record;
+    /// the signed manifest carries the full closure detail).
+    Forget { seq: u64, request: String, closure: u64 },
+    /// A laundering pass executed between increments.
+    Launder { seq: u64, key: String },
+}
+
+impl InterleaveEntry {
+    /// Commit sequence number (`None` for the leading `open` entry).
+    pub fn seq(&self) -> Option<u64> {
+        match self {
+            InterleaveEntry::Open { .. } => None,
+            InterleaveEntry::Ingest { seq, .. }
+            | InterleaveEntry::Train { seq, .. }
+            | InterleaveEntry::Forget { seq, .. }
+            | InterleaveEntry::Launder { seq, .. } => Some(*seq),
+        }
+    }
+
+    fn to_json(&self) -> Json {
+        let mut j = Json::obj();
+        match self {
+            InterleaveEntry::Open {
+                wal_segments,
+                corpus_len,
+            } => {
+                j.set("entry", "open")
+                    .set("wal_segments", *wal_segments)
+                    .set("corpus_len", *corpus_len);
+            }
+            InterleaveEntry::Ingest {
+                seq,
+                round,
+                docs,
+                base_id,
+            } => {
+                j.set("entry", "ingest")
+                    .set("seq", *seq)
+                    .set("round", *round)
+                    .set("docs", *docs)
+                    .set("base_id", *base_id);
+            }
+            InterleaveEntry::Train {
+                seq,
+                round,
+                from_step,
+                n_steps,
+                corpus_len,
+                wal_segments,
+                applied_updates,
+            } => {
+                j.set("entry", "train")
+                    .set("seq", *seq)
+                    .set("round", *round)
+                    .set("from_step", *from_step as u64)
+                    .set("n_steps", *n_steps as u64)
+                    .set("corpus_len", *corpus_len)
+                    .set("wal_segments", *wal_segments)
+                    .set("applied_updates", *applied_updates);
+            }
+            InterleaveEntry::Forget {
+                seq,
+                request,
+                closure,
+            } => {
+                j.set("entry", "forget")
+                    .set("seq", *seq)
+                    .set("request", request.as_str())
+                    .set("closure", *closure);
+            }
+            InterleaveEntry::Launder { seq, key } => {
+                j.set("entry", "launder")
+                    .set("seq", *seq)
+                    .set("key", key.as_str());
+            }
+        }
+        j
+    }
+
+    fn from_json(j: &Json) -> anyhow::Result<InterleaveEntry> {
+        let kind = j
+            .get("entry")
+            .and_then(|e| e.as_str())
+            .ok_or_else(|| anyhow::anyhow!("interleave entry without kind"))?;
+        let need = |key: &str| -> anyhow::Result<u64> {
+            j.get(key).and_then(|v| v.as_u64()).ok_or_else(|| {
+                anyhow::anyhow!("interleave {kind} entry missing {key}")
+            })
+        };
+        Ok(match kind {
+            "open" => InterleaveEntry::Open {
+                wal_segments: need("wal_segments")?,
+                corpus_len: need("corpus_len")?,
+            },
+            "ingest" => InterleaveEntry::Ingest {
+                seq: need("seq")?,
+                round: need("round")?,
+                docs: need("docs")?,
+                base_id: need("base_id")?,
+            },
+            "train" => InterleaveEntry::Train {
+                seq: need("seq")?,
+                round: need("round")?,
+                from_step: need("from_step")? as u32,
+                n_steps: need("n_steps")? as u32,
+                corpus_len: need("corpus_len")?,
+                wal_segments: need("wal_segments")?,
+                applied_updates: need("applied_updates")?,
+            },
+            "forget" => InterleaveEntry::Forget {
+                seq: need("seq")?,
+                request: j
+                    .get("request")
+                    .and_then(|v| v.as_str())
+                    .unwrap_or_default()
+                    .to_string(),
+                closure: need("closure")?,
+            },
+            "launder" => InterleaveEntry::Launder {
+                seq: need("seq")?,
+                key: j
+                    .get("key")
+                    .and_then(|v| v.as_str())
+                    .unwrap_or_default()
+                    .to_string(),
+            },
+            other => anyhow::bail!("unknown interleave entry kind {other:?}"),
+        })
+    }
+}
+
+/// The durable interleave log of one run's online-serving history.
+pub struct IngestLog {
+    run_dir: PathBuf,
+    dir: PathBuf,
+    log_path: PathBuf,
+    pub entries: Vec<InterleaveEntry>,
+    next_seq: u64,
+}
+
+impl IngestLog {
+    fn paths(run_dir: &Path) -> (PathBuf, PathBuf) {
+        let dir = run_dir.join("ingest");
+        let log_path = dir.join("interleave.log");
+        (dir, log_path)
+    }
+
+    /// Parse `interleave.log`, returning the entries plus the byte
+    /// length of the committed prefix.  A torn FINAL line (the
+    /// crash-mid-append window) is dropped; interior corruption fails
+    /// closed, mirroring the jobs-WAL recovery posture.
+    fn parse_log(
+        text: &str,
+    ) -> anyhow::Result<(Vec<InterleaveEntry>, usize)> {
+        let segs: Vec<&str> = text.split_inclusive('\n').collect();
+        let mut entries = Vec::new();
+        let mut clean_len = 0usize;
+        let mut pos = 0usize;
+        for (i, seg) in segs.iter().enumerate() {
+            pos += seg.len();
+            let line = seg.trim();
+            if line.is_empty() {
+                clean_len = pos;
+                continue;
+            }
+            if !seg.ends_with('\n') {
+                // the commit point is the durable append of the FULL
+                // newline-terminated line: a tail missing its newline
+                // never committed, even if its JSON happens to parse —
+                // and it must be scrubbed before any future append
+                break;
+            }
+            let parsed = parse(line)
+                .map_err(|e| anyhow::anyhow!("bad interleave line: {e}"))
+                .and_then(|j| InterleaveEntry::from_json(&j));
+            match parsed {
+                Ok(e) => {
+                    entries.push(e);
+                    clean_len = pos;
+                }
+                Err(err) if i == segs.len() - 1 => {
+                    // torn tail: the entry never committed
+                    let _ = err;
+                    break;
+                }
+                Err(err) => {
+                    anyhow::bail!(
+                        "interleave.log corrupt at interior line {}: {err}",
+                        i + 1
+                    );
+                }
+            }
+        }
+        // structural validation: exactly one leading `open`, seqs
+        // strictly increasing — anything else is not a torn tail but a
+        // mangled history, and serving over it would be guesswork
+        let mut last_seq: Option<u64> = None;
+        for (i, e) in entries.iter().enumerate() {
+            match (i, e) {
+                (0, InterleaveEntry::Open { .. }) => {}
+                (0, _) => anyhow::bail!(
+                    "interleave.log does not start with an open entry"
+                ),
+                (_, InterleaveEntry::Open { .. }) => {
+                    anyhow::bail!("interleave.log has a second open entry")
+                }
+                _ => {}
+            }
+            if let Some(seq) = e.seq() {
+                anyhow::ensure!(
+                    last_seq.map_or(true, |p| seq > p),
+                    "interleave.log seq not strictly increasing at {seq}"
+                );
+                last_seq = Some(seq);
+            }
+        }
+        Ok((entries, clean_len))
+    }
+
+    /// Open an existing log (`Ok(None)` when the run has never
+    /// ingested).  A torn tail is scrubbed durably here — a later
+    /// append must never land after partial bytes, which would weld
+    /// two lines into unparseable interior corruption.
+    pub fn open(run_dir: &Path) -> anyhow::Result<Option<IngestLog>> {
+        let (dir, log_path) = Self::paths(run_dir);
+        if !log_path.exists() {
+            return Ok(None);
+        }
+        let text = fs::read_to_string(&log_path)?;
+        let (entries, clean_len) = Self::parse_log(&text)?;
+        if clean_len < text.len() {
+            // tmp + rename: committed bytes are never rewritten in
+            // place, so a crash mid-scrub leaves old-or-new, both of
+            // which reopen to the same committed prefix
+            crate::checkpoint::write_atomic(&log_path, &text[..clean_len])?;
+        }
+        if entries.is_empty() {
+            // only a torn open line ever made it to disk: nothing was
+            // committed, treat as never-attached
+            return Ok(None);
+        }
+        let next_seq =
+            entries.iter().filter_map(|e| e.seq()).max().map_or(0, |s| s + 1);
+        Ok(Some(IngestLog {
+            run_dir: run_dir.to_path_buf(),
+            dir,
+            log_path,
+            entries,
+            next_seq,
+        }))
+    }
+
+    /// Attach to a run: open the existing log, or create one whose
+    /// `open` entry freezes the base run's committed WAL segment count
+    /// and corpus length BEFORE any ingest mutation.
+    pub fn attach(
+        run_dir: &Path,
+        corpus_len: usize,
+    ) -> anyhow::Result<IngestLog> {
+        if let Some(log) = Self::open(run_dir)? {
+            return Ok(log);
+        }
+        let (dir, log_path) = Self::paths(run_dir);
+        fs::create_dir_all(&dir)?;
+        let entry = InterleaveEntry::Open {
+            wal_segments: segment_count(&run_dir.join("wal"))?,
+            corpus_len: corpus_len as u64,
+        };
+        // a torn attach leaves an unparseable (or absent) line that the
+        // next attach overwrites — no WAL mutation precedes the open
+        // entry, so dropping it loses nothing
+        faultfs::write(
+            &log_path,
+            format!("{}\n", entry.to_json().encode()).as_bytes(),
+        )?;
+        faultfs::fsync(&log_path)?;
+        Ok(IngestLog {
+            run_dir: run_dir.to_path_buf(),
+            dir,
+            log_path,
+            entries: vec![entry],
+            next_seq: 0,
+        })
+    }
+
+    /// Append one entry durably (append + fsync = the commit point).
+    fn commit(&mut self, entry: InterleaveEntry) -> anyhow::Result<()> {
+        faultfs::append(
+            &self.log_path,
+            format!("{}\n", entry.to_json().encode()).as_bytes(),
+        )?;
+        faultfs::fsync(&self.log_path)?;
+        if let Some(seq) = entry.seq() {
+            self.next_seq = seq + 1;
+        }
+        self.entries.push(entry);
+        Ok(())
+    }
+
+    fn doc_seg_path(&self, seq: u64) -> PathBuf {
+        self.dir.join(format!("docs-{seq:06}.seg"))
+    }
+
+    /// WAL segment count as of the last committed entry that moved it.
+    pub fn committed_wal_segments(&self) -> u64 {
+        let mut committed = 0;
+        for e in &self.entries {
+            match e {
+                InterleaveEntry::Open { wal_segments, .. }
+                | InterleaveEntry::Train { wal_segments, .. } => {
+                    committed = *wal_segments;
+                }
+                _ => {}
+            }
+        }
+        committed
+    }
+
+    /// Corpus length covered by the latest committed train-increment
+    /// (the base corpus length before any increment ran).
+    pub fn covered_len(&self) -> u64 {
+        let mut covered = 0;
+        for e in &self.entries {
+            match e {
+                InterleaveEntry::Open { corpus_len, .. }
+                | InterleaveEntry::Train { corpus_len, .. } => {
+                    covered = *corpus_len;
+                }
+                _ => {}
+            }
+        }
+        covered
+    }
+
+    /// Total committed ingest documents.
+    pub fn ingested_docs(&self) -> u64 {
+        self.entries
+            .iter()
+            .map(|e| match e {
+                InterleaveEntry::Ingest { docs, .. } => *docs,
+                _ => 0,
+            })
+            .sum()
+    }
+
+    pub fn has_ingest_round(&self, round: u64) -> bool {
+        self.entries.iter().any(
+            |e| matches!(e, InterleaveEntry::Ingest { round: r, .. } if *r == round),
+        )
+    }
+
+    pub fn has_train_round(&self, round: u64) -> bool {
+        self.entries.iter().any(
+            |e| matches!(e, InterleaveEntry::Train { round: r, .. } if *r == round),
+        )
+    }
+
+    /// Record an executed forget batch (ordering record, post-commit).
+    pub fn record_forget(
+        &mut self,
+        request: &str,
+        closure: usize,
+    ) -> anyhow::Result<()> {
+        let seq = self.next_seq;
+        self.commit(InterleaveEntry::Forget {
+            seq,
+            request: request.to_string(),
+            closure: closure as u64,
+        })
+    }
+
+    /// Record an executed laundering pass (ordering record).
+    pub fn record_launder(&mut self, key: &str) -> anyhow::Result<()> {
+        let seq = self.next_seq;
+        self.commit(InterleaveEntry::Launder {
+            seq,
+            key: key.to_string(),
+        })
+    }
+
+    /// Read back every committed doc segment in commit order, verifying
+    /// each against its checksum sidecar (fail closed: a doc segment
+    /// that no longer matches what was committed must not re-enter the
+    /// corpus under the committed ids).
+    pub fn committed_docs(&self) -> anyhow::Result<Vec<(u64, Vec<IngestDoc>)>> {
+        let mut out = Vec::new();
+        for e in &self.entries {
+            let InterleaveEntry::Ingest {
+                seq,
+                docs,
+                base_id,
+                ..
+            } = e
+            else {
+                continue;
+            };
+            let path = self.doc_seg_path(*seq);
+            let bytes = fs::read(&path)?;
+            let sum_text =
+                fs::read_to_string(path.with_extension("seg.sum"))?;
+            let sum = parse(&sum_text)
+                .map_err(|e| anyhow::anyhow!("bad doc seg sum: {e}"))?;
+            let expect = sum
+                .get("sha256")
+                .and_then(|v| v.as_str())
+                .ok_or_else(|| anyhow::anyhow!("doc seg sum missing sha256"))?;
+            anyhow::ensure!(
+                sha256_hex(&bytes) == expect,
+                "doc segment {} fails its committed checksum",
+                path.display()
+            );
+            let text = String::from_utf8(bytes)?;
+            let mut parsed = Vec::new();
+            for line in text.lines().filter(|l| !l.trim().is_empty()) {
+                let j = parse(line)
+                    .map_err(|e| anyhow::anyhow!("bad doc line: {e}"))?;
+                parsed.push(IngestDoc {
+                    user: j
+                        .get("user")
+                        .and_then(|v| v.as_u64())
+                        .ok_or_else(|| anyhow::anyhow!("doc without user"))?
+                        as u32,
+                    text: j
+                        .get("text")
+                        .and_then(|v| v.as_str())
+                        .ok_or_else(|| anyhow::anyhow!("doc without text"))?
+                        .to_string(),
+                });
+            }
+            anyhow::ensure!(
+                parsed.len() as u64 == *docs,
+                "doc segment {} has {} docs, entry committed {}",
+                path.display(),
+                parsed.len(),
+                docs
+            );
+            out.push((*base_id, parsed));
+        }
+        Ok(out)
+    }
+
+    /// Durably commit one batch of docs: segment + checksum sidecar,
+    /// then the `ingest` entry (the commit point).  Returns the first
+    /// assigned sample id.
+    fn append_docs(
+        &mut self,
+        round: u64,
+        base_id: u64,
+        docs: &[IngestDoc],
+    ) -> anyhow::Result<u64> {
+        let seq = self.next_seq;
+        let mut body = String::new();
+        for d in docs {
+            let mut j = Json::obj();
+            j.set("user", d.user).set("text", d.text.as_str());
+            body.push_str(&j.encode());
+            body.push('\n');
+        }
+        let path = self.doc_seg_path(seq);
+        faultfs::write(&path, body.as_bytes())?;
+        let mut sum = Json::obj();
+        sum.set("segment", seq)
+            .set("docs", docs.len())
+            .set("sha256", sha256_hex(body.as_bytes()));
+        faultfs::write(&path.with_extension("seg.sum"), sum.pretty().as_bytes())?;
+        self.commit(InterleaveEntry::Ingest {
+            seq,
+            round,
+            docs: docs.len() as u64,
+            base_id,
+        })?;
+        Ok(base_id)
+    }
+}
+
+/// What [`recover`] rolled back.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct RecoveryReport {
+    pub wal_segments_removed: u64,
+    pub doc_segments_removed: u64,
+}
+
+/// Copy a staged IdMap over the live one and drop the stage.  Copies
+/// (not renames) keep the stage intact as the source of truth until
+/// every file has landed, so a crash mid-promote re-promotes
+/// idempotently from [`recover`].
+fn promote_idmap_stage(run_dir: &Path) -> anyhow::Result<()> {
+    let stage = run_dir.join("ingest").join("idmap.stage");
+    if !stage.exists() {
+        return Ok(());
+    }
+    for name in IDMAP_FILES {
+        let from = stage.join(name);
+        if from.exists() {
+            let to = run_dir.join(name);
+            faultfs::copy(&from, &to)?;
+            faultfs::fsync(&to)?;
+        }
+    }
+    faultfs::remove_dir_all(&stage)?;
+    Ok(())
+}
+
+/// Roll back every uncommitted artifact of a torn round: WAL segments
+/// past the last committed count and doc segments without an `ingest`
+/// entry.  Idempotent, and mandatory before reopening the system — the
+/// WAL reader reads every segment present, and a retry that appended
+/// after an un-truncated torn increment would duplicate opt_steps and
+/// trip replay's monotone-order check.
+pub fn recover(
+    run_dir: &Path,
+    log: &IngestLog,
+) -> anyhow::Result<RecoveryReport> {
+    let mut report = RecoveryReport::default();
+    // Staged IdMap from the last increment: promote iff its `train`
+    // entry committed (the stage then carries the registrations the
+    // committed WAL tail needs), else discard — the live map was never
+    // touched pre-commit, so discarding loses nothing.
+    let stage = log.dir.join("idmap.stage");
+    if stage.exists() {
+        let committed = fs::read_to_string(stage.join("round.json"))
+            .ok()
+            .and_then(|t| parse(&t).ok())
+            .and_then(|j| j.get("round").and_then(|v| v.as_u64()))
+            .is_some_and(|r| log.has_train_round(r));
+        if committed {
+            promote_idmap_stage(run_dir)?;
+        } else {
+            faultfs::remove_dir_all(&stage)?;
+        }
+    }
+    let wal_dir = run_dir.join("wal");
+    let committed = log.committed_wal_segments();
+    for idx in committed..segment_count(&wal_dir)? {
+        let seg = wal_dir.join(format!("wal-{idx:06}.seg"));
+        faultfs::remove_file(&seg)?;
+        let sum = seg.with_extension("seg.sum");
+        if sum.exists() {
+            faultfs::remove_file(&sum)?;
+        }
+        report.wal_segments_removed += 1;
+    }
+    let committed_docs: HashSet<u64> = log
+        .entries
+        .iter()
+        .filter_map(|e| match e {
+            InterleaveEntry::Ingest { seq, .. } => Some(*seq),
+            _ => None,
+        })
+        .collect();
+    let mut stray: Vec<PathBuf> = Vec::new();
+    for entry in fs::read_dir(&log.dir)? {
+        let path = entry?.path();
+        let Some(name) = path.file_name().and_then(|n| n.to_str()) else {
+            continue;
+        };
+        let Some(stem) = name.strip_prefix("docs-") else { continue };
+        let Some(seq) = stem
+            .strip_suffix(".seg")
+            .or_else(|| stem.strip_suffix(".seg.sum"))
+            .and_then(|s| s.parse::<u64>().ok())
+        else {
+            continue;
+        };
+        if !committed_docs.contains(&seq) {
+            stray.push(path);
+        }
+    }
+    stray.sort(); // deterministic removal order (read_dir order is not)
+    for path in &stray {
+        faultfs::remove_file(path)?;
+        if path.extension().is_some_and(|e| e == "seg") {
+            report.doc_segments_removed += 1;
+        }
+    }
+    Ok(report)
+}
+
+/// Stable round key for an admin-plane request id (retry idempotency).
+pub fn round_of(id: &str) -> u64 {
+    let hex = sha256_hex(id.as_bytes());
+    u64::from_str_radix(&hex[..16], 16).expect("sha256 hex")
+}
+
+/// Materialize docs as corpus samples with dense ids from `base_id` and
+/// insert them into the live near-dup index — the growth that keeps
+/// closure expansion, `Corpus::by_id` and the Planner's live-tail costs
+/// in sync with what the WAL will reference.  Crate-visible: the fleet
+/// reuses it to grow its GLOBAL routing view alongside the owning
+/// shard's local corpus.
+pub(crate) fn grow_corpus(
+    corpus: &mut Corpus,
+    ndindex: &mut crate::neardup::HammingIndex,
+    base_id: u64,
+    docs: &[IngestDoc],
+) -> anyhow::Result<()> {
+    anyhow::ensure!(
+        corpus.len() as u64 == base_id,
+        "ingest base_id {base_id} does not match corpus length {}",
+        corpus.len()
+    );
+    let tok = ByteTokenizer;
+    for (i, d) in docs.iter().enumerate() {
+        let id = base_id + i as u64;
+        let tokens = tok.encode_fixed(&d.text, corpus.config.seq_len);
+        ndindex.insert(id, simhash_tokens(&tokens));
+        corpus.samples.push(Sample {
+            id,
+            user: d.user,
+            cohort: None,
+            kind: SampleKind::Normal,
+            text: d.text.clone(),
+            tokens,
+        });
+    }
+    Ok(())
+}
+
+/// Append a batch of documents to the live system: durable commit
+/// first, then the in-memory corpus/index growth.  Returns the first
+/// assigned sample id.
+pub fn ingest_docs(
+    sys: &mut UnlearnSystem<'_>,
+    log: &mut IngestLog,
+    round: u64,
+    docs: &[IngestDoc],
+) -> anyhow::Result<u64> {
+    anyhow::ensure!(!docs.is_empty(), "ingest batch is empty");
+    anyhow::ensure!(
+        !sys.ingest.in_flight,
+        "a train-increment is in flight (or torn and unrecovered)"
+    );
+    anyhow::ensure!(
+        sys.cfg.run_dir == log.run_dir,
+        "interleave log belongs to a different run dir"
+    );
+    let base_id = sys.corpus.len() as u64;
+    log.append_docs(round, base_id, docs)?;
+    grow_corpus(&mut sys.corpus, &mut sys.ndindex, base_id, docs)?;
+    sys.ingest.ingested_docs += docs.len() as u64;
+    Ok(base_id)
+}
+
+/// The deterministic schedule of one increment: a pure function of
+/// `(corpus_len, batch, accum, run_seed, from_step, n_steps)` — a retry
+/// after a torn round regenerates byte-identical WAL records, which is
+/// what makes recovery-by-truncation converge.  Steps are re-stamped to
+/// the global step axis; seed64 stays as the sampler derived it (it is
+/// logged, and replay only ever reads the logged value).
+pub fn increment_schedule(
+    corpus_len: usize,
+    batch: usize,
+    accum: usize,
+    run_seed: u64,
+    ts: TrainStep,
+) -> Vec<Microbatch> {
+    let inc_seed =
+        philox_u64(run_seed, INGEST_SEED_DOMAIN ^ ts.from_step as u64);
+    let mut sched =
+        DeterministicSampler::new(corpus_len, batch, accum, ts.n_steps, inc_seed)
+            .schedule();
+    for mb in &mut sched {
+        mb.step += ts.from_step;
+    }
+    sched
+}
+
+/// What one committed train-increment did.
+#[derive(Debug, Clone)]
+pub struct IncrementOutcome {
+    pub step: TrainStep,
+    pub records_appended: usize,
+    pub updates_applied: u32,
+    pub wal_segments: u64,
+    pub losses: Vec<(u32, f32)>,
+    pub executed: bool,
+}
+
+/// Advance the trained tail by `n_steps` logical steps over the CURRENT
+/// corpus, appending fresh WAL segments, and commit through the
+/// interleave log.
+///
+/// The increment masks `forgotten ∪ laundered ∪ retired` exactly like
+/// replay's traversal — graph-preserving (the logged composition still
+/// includes erased ids; their mask rows are zero), so the oracle
+/// equality of `tests/ingest_equality.rs` extends across increments
+/// while the live tail never trains on erased data.
+///
+/// Commit protocol (order is the crash-safety argument):
+///  1. append records / run updates (WAL segments are uncommitted),
+///  2. seal the trailing segment (`WalWriter::finish`),
+///  3. STAGE the grown IdMap durably (the committed map is never
+///     rewritten pre-commit; orphan hashes in the stage are harmless:
+///     replay only looks up hashes present in the WAL),
+///  4. append + fsync the `train` entry — THE COMMIT POINT,
+///  5. promote the staged IdMap over the live one,
+///  6. checkpoint the advanced state (after the commit, never before).
+pub fn train_increment(
+    sys: &mut UnlearnSystem<'_>,
+    log: &mut IngestLog,
+    round: u64,
+    n_steps: u32,
+) -> anyhow::Result<IncrementOutcome> {
+    anyhow::ensure!(n_steps > 0, "train increment of zero steps");
+    anyhow::ensure!(
+        !sys.ingest.in_flight,
+        "a train-increment is already in flight"
+    );
+    anyhow::ensure!(
+        sys.cfg.run_dir == log.run_dir,
+        "interleave log belongs to a different run dir"
+    );
+    // pins re-stamped per increment: advancing the tail under a
+    // different backend/geometry would log records the pinned program
+    // cannot replay — fail closed exactly like replay does
+    let mut current = sys.rt.capture_pins(sys.cfg.accum);
+    current.shard = sys.cfg.shard_pin.clone();
+    let drift = sys.pins.verify(&current);
+    anyhow::ensure!(
+        drift.is_empty(),
+        "pin drift — refusing to advance the tail: {drift:?}"
+    );
+    let from_step = sys
+        .records
+        .iter()
+        .map(|r| r.opt_step + 1)
+        .max()
+        .unwrap_or(0);
+    anyhow::ensure!(
+        sys.state.logical_step == from_step,
+        "serving state at step {} but the WAL ends at {from_step} — \
+         reopen/recover before advancing the tail",
+        sys.state.logical_step
+    );
+    let ts = TrainStep { from_step, n_steps };
+    sys.ingest.in_flight = true; // cleared only on commit (or recovery)
+
+    let rt = sys.rt;
+    let man = &rt.manifest;
+    let corpus_len = sys.corpus.len();
+    let schedule = increment_schedule(
+        corpus_len,
+        man.batch,
+        sys.cfg.accum,
+        sys.cfg.run_seed,
+        ts,
+    );
+    // the same mask replay's traversal applies: explicit sets plus the
+    // IdMap's retired ids (laundered-set compaction)
+    let mut mask: HashSet<u64> =
+        sys.forgotten.union(&sys.laundered).copied().collect();
+    for id in 0..corpus_len as u64 {
+        if sys.idmap.is_retired(id) {
+            mask.insert(id);
+        }
+    }
+    let filter = |id: u64| mask.contains(&id);
+
+    let wal_dir = sys.cfg.run_dir.join("wal");
+    let mut wal = WalWriter::append_to(
+        &wal_dir,
+        sys.cfg.wal_segment_records,
+        sys.cfg.hmac_key.clone(),
+    )?;
+    let mut seg = SegmentStage::new();
+    let mut appended: Vec<WalRecord> = Vec::with_capacity(schedule.len());
+    let mut losses = Vec::new();
+    let mut updates = 0u32;
+    for mb in &schedule {
+        let lr = sys.cfg.lr_at(sys.state.applied_updates);
+        let hash64 = sys.idmap.register(&mb.sample_ids);
+        let rec = WalRecord {
+            hash64,
+            seed64: mb.seed64,
+            lr_bits: lr.to_bits(),
+            opt_step: mb.step,
+            accum_end: mb.accum_end,
+            mb_len: mb.sample_ids.len() as u16,
+        };
+        wal.append(&rec)?;
+        appended.push(rec);
+        seg.stage(
+            &sys.corpus,
+            &mb.sample_ids,
+            man.batch,
+            man.seq_len,
+            &filter,
+            false,
+            mb.seed64 as i32,
+        )?;
+        if mb.accum_end {
+            let inputs = seg.inputs();
+            if !inputs.is_empty() {
+                let out = rt.grad_accumulate(&sys.state.params, &inputs)?;
+                let step_before = sys.state.logical_step;
+                let (p, m, v) = rt.adamw_update(
+                    &sys.state.params,
+                    &out.grad,
+                    &sys.state.m,
+                    &sys.state.v,
+                    sys.state.applied_updates as i32 + 1,
+                    lr,
+                )?;
+                let before_params =
+                    std::mem::replace(&mut sys.state.params, p);
+                let before_m = std::mem::replace(&mut sys.state.m, m);
+                let before_v = std::mem::replace(&mut sys.state.v, v);
+                sys.state.applied_updates += 1;
+                sys.state.logical_step = mb.step + 1;
+                updates += 1;
+                sys.ring.record_parts(
+                    step_before,
+                    &before_params,
+                    &before_m,
+                    &before_v,
+                    &sys.state,
+                )?;
+                if out.tok_count > 0.0 {
+                    losses.push((mb.step, out.loss_sum / out.tok_count));
+                }
+            } else {
+                // empty-step skip (Prop. A.5): no counter advance
+                sys.state.logical_step = mb.step + 1;
+            }
+            seg.reset();
+        }
+    }
+    wal.finish()?;
+    // The grown IdMap is STAGED, not saved in place: rewriting the
+    // committed map before the commit point could leave it failing its
+    // own checksum after a crash (the entries/`.map.sum` pair cannot be
+    // replaced atomically), stranding the whole run behind IdMap's
+    // fail-closed load.  The stage is durable before the commit and
+    // promoted after; [`recover`] promotes or discards a leftover
+    // stage by whether its `train` entry committed.
+    let stage = log.dir.join("idmap.stage");
+    fs::create_dir_all(&stage)?;
+    let mut marker = Json::obj();
+    marker.set("round", round);
+    faultfs::write(&stage.join("round.json"), marker.encode().as_bytes())?;
+    sys.idmap.save(&stage.join("ids.map"))?;
+    for name in IDMAP_FILES {
+        faultfs::fsync(&stage.join(name))?;
+    }
+    faultfs::fsync(&stage.join("round.json"))?;
+    let wal_segments = segment_count(&wal_dir)?;
+    let seq = log.next_seq;
+    log.commit(InterleaveEntry::Train {
+        seq,
+        round,
+        from_step: ts.from_step,
+        n_steps: ts.n_steps,
+        corpus_len: corpus_len as u64,
+        wal_segments,
+        applied_updates: sys.state.applied_updates,
+    })?;
+    promote_idmap_stage(&sys.cfg.run_dir)?;
+    // checkpoint strictly after the commit point; replay can now always
+    // reach the committed tail end from a stored state
+    sys.store.save_full(&sys.state)?;
+    sys.records.extend(appended.iter().copied());
+    sys.ingest.covered_len = corpus_len;
+    sys.ingest.in_flight = false;
+    Ok(IncrementOutcome {
+        step: ts,
+        records_appended: appended.len(),
+        updates_applied: updates,
+        wal_segments,
+        losses,
+        executed: true,
+    })
+}
+
+/// Interleaves ingest rounds with the forget stream: one `run_round`
+/// appends a doc batch and advances the tail by a bounded number of
+/// steps, each half committed through the interleave log under the
+/// round's idempotency key — a retry after a crash (post-[`recover`])
+/// skips whatever already committed and converges bit-identically.
+#[derive(Debug, Clone, Copy)]
+pub struct IngestScheduler {
+    /// Tail advance per round (logical steps).
+    pub train_steps: u32,
+}
+
+impl IngestScheduler {
+    pub fn new(train_steps: u32) -> IngestScheduler {
+        IngestScheduler { train_steps }
+    }
+
+    /// One ingest round: docs then increment, each skipped if its
+    /// entry already committed under `round`.
+    pub fn run_round(
+        &self,
+        sys: &mut UnlearnSystem<'_>,
+        log: &mut IngestLog,
+        round: u64,
+        docs: &[IngestDoc],
+    ) -> anyhow::Result<IncrementOutcome> {
+        if !docs.is_empty() && !log.has_ingest_round(round) {
+            ingest_docs(sys, log, round, docs)?;
+        }
+        if self.train_steps > 0 && !log.has_train_round(round) {
+            return train_increment(sys, log, round, self.train_steps);
+        }
+        Ok(IncrementOutcome {
+            step: TrainStep {
+                from_step: sys.state.logical_step,
+                n_steps: 0,
+            },
+            records_appended: 0,
+            updates_applied: 0,
+            wal_segments: log.committed_wal_segments(),
+            losses: Vec::new(),
+            executed: false,
+        })
+    }
+}
+
+/// Reopen a run that has (or may have) an online-ingest history:
+/// recover torn rounds, rebuild the corpus as base + committed docs,
+/// open the system through the normal resume path, then heal the one
+/// commit→checkpoint crash window by replaying the clean tail.
+///
+/// `base_corpus` must be regenerated with the run's original
+/// config/seed (the same contract as `harness::open_or_build_system`).
+pub fn reopen<'rt>(
+    rt: &'rt Runtime,
+    cfg: RunConfig,
+    base_corpus: Corpus,
+    estimate_fisher: bool,
+) -> anyhow::Result<(TrainedSystem<'rt>, IngestLog, RecoveryReport)> {
+    let run_dir = cfg.run_dir.clone();
+    let mut corpus = base_corpus;
+    let (existing, report) = match IngestLog::open(&run_dir)? {
+        Some(log) => {
+            let report = recover(&run_dir, &log)?;
+            // committed docs re-enter the corpus under their committed
+            // ids BEFORE the system opens: the WAL tail references them
+            let mut scratch = crate::neardup::HammingIndex::new();
+            for (base_id, docs) in log.committed_docs()? {
+                grow_corpus(&mut corpus, &mut scratch, base_id, &docs)?;
+            }
+            (Some(log), report)
+        }
+        None => (None, RecoveryReport::default()),
+    };
+    let (mut ts, _resumed) = crate::harness::open_or_build_system(
+        rt,
+        cfg,
+        corpus,
+        estimate_fisher,
+    )?;
+    let sys = &mut ts.system;
+    let log = match existing {
+        Some(log) => log,
+        None => IngestLog::attach(&run_dir, sys.corpus.len())?,
+    };
+    sys.ingest = IngestStatus {
+        ingested_docs: log.ingested_docs(),
+        covered_len: log.covered_len() as usize,
+        in_flight: false,
+    };
+    // Heal the commit→checkpoint crash window: a committed increment
+    // whose checkpoint never landed leaves the resume path serving a
+    // state behind the WAL end (it only replays when forgotten influence
+    // is pending).  Replay the clean tail — same traversal, filter =
+    // laundered residue (retired ids are masked by the traversal) — and
+    // re-checkpoint so the next increment starts from the tail end.
+    let wal_end = sys
+        .records
+        .iter()
+        .map(|r| r.opt_step + 1)
+        .max()
+        .unwrap_or(0);
+    if sys.forgotten.is_empty() && sys.state.logical_step < wal_end {
+        let filter = sys.laundered.clone();
+        let (_, rebuilt) = crate::replay::replay_filter_from_nearest_to(
+            rt,
+            &sys.corpus,
+            &sys.store,
+            &sys.records,
+            &sys.idmap,
+            &filter,
+            wal_end,
+            Some(&sys.pins),
+            &sys.replay_options(),
+        )?;
+        sys.state = rebuilt.state;
+        sys.store.save_full(&sys.state)?;
+    }
+    Ok((ts, log, report))
+}
+
+/// The retain-only oracle for the full interleaved history: replay the
+/// ENTIRE logged program from θ0 over the FINAL corpus with `closure`
+/// masked — what "trained the final corpus minus the closure from
+/// scratch" means under a preserved graph.  Shared by the equality
+/// tests and benches so the proof obligation has one spelling.
+pub fn oracle_state(
+    sys: &UnlearnSystem<'_>,
+    closure: &HashSet<u64>,
+) -> anyhow::Result<TrainState> {
+    let theta0 = TrainState::zeros_like(sys.rt.manifest.init_params()?);
+    let out = crate::replay::replay_filter(
+        sys.rt,
+        &sys.corpus,
+        &theta0,
+        &sys.records,
+        &sys.idmap,
+        closure,
+        Some(&sys.pins),
+        &sys.replay_options(),
+    )?;
+    Ok(out.state)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::tempdir;
+
+    fn mk_run(tag: &str) -> PathBuf {
+        let dir = tempdir(tag);
+        fs::create_dir_all(dir.join("wal")).unwrap();
+        dir
+    }
+
+    #[test]
+    fn attach_writes_open_entry_and_reopens() {
+        let run = mk_run("ingest-attach");
+        let log = IngestLog::attach(&run, 42).unwrap();
+        assert_eq!(
+            log.entries,
+            vec![InterleaveEntry::Open {
+                wal_segments: 0,
+                corpus_len: 42
+            }]
+        );
+        // re-attach opens, does not re-write
+        let log2 = IngestLog::attach(&run, 999).unwrap();
+        assert_eq!(log2.entries, log.entries);
+        assert_eq!(log2.covered_len(), 42);
+    }
+
+    #[test]
+    fn docs_roundtrip_with_checksums() {
+        let run = mk_run("ingest-docs");
+        let mut log = IngestLog::attach(&run, 10).unwrap();
+        let docs = vec![
+            IngestDoc {
+                user: 7,
+                text: "user seven wrote about gardening".into(),
+            },
+            IngestDoc {
+                user: 9,
+                text: "user nine asked about chess".into(),
+            },
+        ];
+        log.append_docs(1, 10, &docs).unwrap();
+        let more = vec![IngestDoc {
+            user: 7,
+            text: "a second visit".into(),
+        }];
+        log.append_docs(2, 12, &more).unwrap();
+        let log = IngestLog::open(&run).unwrap().unwrap();
+        assert_eq!(log.ingested_docs(), 3);
+        let back = log.committed_docs().unwrap();
+        assert_eq!(back, vec![(10, docs), (12, more)]);
+        assert!(log.has_ingest_round(1) && log.has_ingest_round(2));
+        assert!(!log.has_ingest_round(3));
+    }
+
+    #[test]
+    fn torn_final_line_is_dropped_interior_corruption_fails() {
+        let run = mk_run("ingest-torn");
+        let mut log = IngestLog::attach(&run, 5).unwrap();
+        log.record_forget("req-1", 3).unwrap();
+        let path = run.join("ingest/interleave.log");
+        // torn tail: a partial entry never committed
+        let mut text = fs::read_to_string(&path).unwrap();
+        text.push_str("{\"entry\":\"tra");
+        fs::write(&path, &text).unwrap();
+        let mut log = IngestLog::open(&run).unwrap().unwrap();
+        assert_eq!(log.entries.len(), 2);
+        // the torn tail was scrubbed on open, so a post-crash append
+        // cannot weld onto partial bytes and corrupt the interior
+        assert!(!fs::read_to_string(&path).unwrap().contains("tra"));
+        log.record_forget("req-2", 1).unwrap();
+        let log = IngestLog::open(&run).unwrap().unwrap();
+        assert_eq!(log.entries.len(), 3);
+        // interior corruption is NOT a torn tail: fail closed
+        let mangled = text.replace(
+            "\"entry\":\"forget\"",
+            "\"entry\":\"garbage\"",
+        );
+        fs::write(&path, &mangled).unwrap();
+        assert!(IngestLog::open(&run).is_err());
+    }
+
+    #[test]
+    fn recover_removes_uncommitted_segments() {
+        let run = mk_run("ingest-recover");
+        // committed baseline: 1 wal segment
+        fs::write(run.join("wal/wal-000000.seg"), [0u8; 32]).unwrap();
+        let mut log = IngestLog::attach(&run, 5).unwrap();
+        assert_eq!(log.committed_wal_segments(), 1);
+        // torn round: extra wal segment + doc segment, no entries
+        fs::write(run.join("wal/wal-000001.seg"), [0u8; 32]).unwrap();
+        fs::write(run.join("wal/wal-000001.seg.sum"), b"{}").unwrap();
+        fs::write(run.join("ingest/docs-000099.seg"), b"{}").unwrap();
+        let report = recover(&run, &log).unwrap();
+        assert_eq!(
+            report,
+            RecoveryReport {
+                wal_segments_removed: 1,
+                doc_segments_removed: 1
+            }
+        );
+        assert!(!run.join("wal/wal-000001.seg").exists());
+        assert!(!run.join("ingest/docs-000099.seg").exists());
+        // idempotent, and committed artifacts survive
+        assert_eq!(recover(&run, &log).unwrap(), RecoveryReport::default());
+        assert!(run.join("wal/wal-000000.seg").exists());
+        // a committed doc segment is never touched
+        log.append_docs(1, 5, &[IngestDoc { user: 1, text: "t".into() }])
+            .unwrap();
+        assert_eq!(recover(&run, &log).unwrap(), RecoveryReport::default());
+        assert!(run.join("ingest/docs-000001.seg").exists());
+    }
+
+    #[test]
+    fn increment_schedule_is_pure_and_restamped() {
+        let ts = TrainStep {
+            from_step: 12,
+            n_steps: 3,
+        };
+        let a = increment_schedule(40, 4, 2, 99, ts);
+        let b = increment_schedule(40, 4, 2, 99, ts);
+        assert_eq!(a, b);
+        assert_eq!(a.len(), 6);
+        assert_eq!(a[0].step, 12);
+        assert_eq!(a.last().unwrap().step, 14);
+        assert!(a.last().unwrap().accum_end);
+        // a different tail position draws a different program
+        let c = increment_schedule(
+            40,
+            4,
+            2,
+            99,
+            TrainStep {
+                from_step: 15,
+                n_steps: 3,
+            },
+        );
+        assert_ne!(
+            a.iter().map(|m| &m.sample_ids).collect::<Vec<_>>(),
+            c.iter().map(|m| &m.sample_ids).collect::<Vec<_>>()
+        );
+    }
+
+    #[test]
+    fn staged_idmap_promotes_iff_committed() {
+        let run = mk_run("ingest-stage");
+        let mut log = IngestLog::attach(&run, 5).unwrap();
+        let stage = run.join("ingest/idmap.stage");
+        let mk_stage = |bytes: &[u8]| {
+            fs::create_dir_all(&stage).unwrap();
+            fs::write(stage.join("round.json"), b"{\"round\": 9}").unwrap();
+            fs::write(stage.join("ids.map"), bytes).unwrap();
+        };
+        // uncommitted round: the stage is discarded, the live map
+        // (absent here) is untouched
+        mk_stage(b"staged-a");
+        recover(&run, &log).unwrap();
+        assert!(!stage.exists());
+        assert!(!run.join("ids.map").exists());
+        // committed round: the stage is promoted over the live map
+        log.commit(InterleaveEntry::Train {
+            seq: log.next_seq,
+            round: 9,
+            from_step: 4,
+            n_steps: 1,
+            corpus_len: 5,
+            wal_segments: 0,
+            applied_updates: 5,
+        })
+        .unwrap();
+        mk_stage(b"staged-b");
+        recover(&run, &log).unwrap();
+        assert!(!stage.exists());
+        assert_eq!(fs::read(run.join("ids.map")).unwrap(), b"staged-b");
+        // idempotent: a second recover with nothing staged is a no-op
+        recover(&run, &log).unwrap();
+        assert_eq!(fs::read(run.join("ids.map")).unwrap(), b"staged-b");
+    }
+
+    #[test]
+    fn round_keys_are_stable() {
+        assert_eq!(round_of("job-1"), round_of("job-1"));
+        assert_ne!(round_of("job-1"), round_of("job-2"));
+    }
+}

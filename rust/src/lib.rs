@@ -28,6 +28,9 @@
 //! - [`curvature`]  diag-Fisher cache + anti-update hot path (Alg. A.4)
 //! - [`neardup`]    SimHash near-duplicate index + closure (Alg. A.6),
 //!                  with per-member document-ownership attribution
+//! - [`ingest`]     online ingest: durable doc segments + bounded
+//!                  train-increments committed through a deterministic
+//!                  interleave log (train-and-forget concurrently)
 //! - [`shard`]      pinned deterministic user→shard partitioning
 //! - [`fleet`]      N-shard orchestrator: ownership routing, parallel
 //!                  cross-shard execution, fleet planning/eval/serving
@@ -58,6 +61,7 @@ pub mod data;
 pub mod deltas;
 pub mod equality;
 pub mod fleet;
+pub mod ingest;
 pub mod lint;
 pub mod manifest;
 pub mod metrics;

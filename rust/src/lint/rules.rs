@@ -44,14 +44,14 @@ pub const RULES: &[RuleInfo] = &[
         id: RULE_UNORDERED_ITER,
         desc: "HashMap/HashSet iteration in serialize/hash/write modules \
                without an immediate sort",
-        scope: "wal/, checkpoint/, manifest/, shard/, replica/",
+        scope: "wal/, checkpoint/, manifest/, shard/, replica/, ingest/",
     },
     RuleInfo {
         id: RULE_RAW_FS,
         desc: "fs::write / File::create in erasure-critical modules outside \
                write_atomic / faultfs wrappers",
         scope: "wal/, checkpoint/, manifest/, shard/, server/, fleet/, \
-                replica/",
+                replica/, ingest/",
     },
     RuleInfo {
         id: RULE_FLOAT_REDUCE,
@@ -87,7 +87,7 @@ const WALL_CLOCK_ALLOWED: &[&str] = &["metrics/", "deltas/"];
 /// Modules whose bytes are hashed, serialized, or replayed — unordered
 /// iteration here can reach a digest or a wire format.
 const SERIALIZE_MODULES: &[&str] =
-    &["wal/", "checkpoint/", "manifest/", "shard/", "replica/"];
+    &["wal/", "checkpoint/", "manifest/", "shard/", "replica/", "ingest/"];
 
 /// Erasure-critical modules: every durable write must go through
 /// `checkpoint::write_atomic` or the `util::faultfs` wrappers so the
@@ -100,6 +100,7 @@ const DURABLE_MODULES: &[&str] = &[
     "server/",
     "fleet/",
     "replica/",
+    "ingest/",
 ];
 
 /// `float-reduce` is about *pinning the reduction order*; `runtime/` is

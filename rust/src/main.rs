@@ -9,6 +9,8 @@
 //!   serve       admin server for forget requests
 //!   plan        dry-run the planner: typed plan + cost estimates
 //!   forget      run the controller on a forget request
+//!   ingest      append docs + one bounded train-increment (online
+//!               ingest through the deterministic interleave log)
 //!   launder     compact the forgotten set into a rewritten lineage
 //!   audit       run the audit harness against a checkpoint
 //!   fleet-train   train/resume an N-shard fleet (deterministic
@@ -230,6 +232,82 @@ fn run(args: &Args) -> anyhow::Result<()> {
             let system =
                 std::sync::Arc::new(std::sync::Mutex::new(trained.system));
             unlearn::server::serve(system, &addr)
+        }
+        Some("ingest") => {
+            // online ingest into a (possibly reopened) run: durably
+            // append the docs through the interleave log, then advance
+            // the tail with one bounded train-increment.  Repeated
+            // invocations keep growing the same run dir, and forget
+            // requests interleave freely between them.
+            let rt = Runtime::load(&artifacts_dir(args))?;
+            let cfg = run_config(args)?;
+            let c = corpus(args)?;
+            let user: u32 = args
+                .get("user")
+                .ok_or_else(|| anyhow::anyhow!("ingest needs --user"))?
+                .parse()?;
+            let texts: Vec<String> = match args.get("text") {
+                Some(t) => vec![t.to_string()],
+                None => args
+                    .get_or("docs", "")
+                    .split(';')
+                    .filter(|s| !s.is_empty())
+                    .map(str::to_string)
+                    .collect(),
+            };
+            anyhow::ensure!(
+                !texts.is_empty(),
+                "ingest needs --text STR or --docs 'a;b;c'"
+            );
+            let train_steps = args.get_u64("train-steps", 2)? as u32;
+            let req_id = args.get_or("id", "cli-ingest").to_string();
+            let (mut trained, mut log, report) =
+                unlearn::ingest::reopen(&rt, cfg, c, args.flag("fisher"))?;
+            if report.wal_segments_removed + report.doc_segments_removed > 0
+            {
+                println!(
+                    "recovered torn round: removed {} wal segment(s), \
+                     {} doc segment(s)",
+                    report.wal_segments_removed,
+                    report.doc_segments_removed
+                );
+            }
+            let sys = &mut trained.system;
+            let docs: Vec<unlearn::ingest::IngestDoc> = texts
+                .iter()
+                .map(|t| unlearn::ingest::IngestDoc {
+                    user,
+                    text: t.clone(),
+                })
+                .collect();
+            let sched =
+                unlearn::ingest::IngestScheduler::new(train_steps.max(1));
+            let out = sched.run_round(
+                sys,
+                &mut log,
+                unlearn::ingest::round_of(&req_id),
+                &docs,
+            )?;
+            println!(
+                "ingested {} doc(s) for user {user}; increment \
+                 [{}..{}) applied {} update(s){}",
+                docs.len(),
+                out.step.from_step,
+                out.step.from_step + out.step.n_steps,
+                out.updates_applied,
+                if out.executed {
+                    ""
+                } else {
+                    " (round already committed — idempotent retry)"
+                }
+            );
+            println!(
+                "trained_step {}, ingested_docs {}, tail_lag_steps {}",
+                sys.state.logical_step,
+                sys.ingest.ingested_docs,
+                sys.tail_lag_steps()
+            );
+            Ok(())
         }
         Some("forget") => {
             let rt = Runtime::load(&artifacts_dir(args))?;
@@ -506,10 +584,11 @@ fn run(args: &Args) -> anyhow::Result<()> {
         }
         other => {
             eprintln!(
-                "usage: unlearn <smoke|pins|train|ci-gate|wal-scan|replay|plan|forget|launder|audit|serve|\
+                "usage: unlearn <smoke|pins|train|ci-gate|wal-scan|replay|plan|forget|ingest|launder|audit|serve|\
                  fleet-train|fleet-forget|fleet-status|fleet-serve|\
                  replica-serve|replica-status> \
                  [--artifacts DIR] [--run-dir DIR] [--steps N] \
+                 [--user U --text STR --train-steps N] \
                  [--shards N --salt S --fleet-dir DIR] \
                  [--shard N --replica-dir DIR] ...\n\
                  (got {other:?})"

@@ -288,6 +288,81 @@ mod tests {
     }
 
     #[test]
+    fn incremental_insert_matches_batch_rebuild() {
+        // the online-ingest property: a near-dup index grown
+        // insert-as-you-go (exactly what `ingest::grow_corpus` does
+        // while the system serves) answers every closure identically to
+        // a from-scratch rebuild over the final corpus — including over
+        // seeded adversarial paraphrases engineered to sit near the τ
+        // thresholds (suffix padding, doubled whitespace, prefix notes,
+        // cross-user re-owning).
+        crate::util::prop::for_all("incremental == batch neardup", |rng| {
+            let mut c = Corpus::generate(CorpusConfig {
+                n_users: 8,
+                docs_per_user: 3,
+                n_canary_users: 1,
+                canaries_per_user: 1,
+                near_dup_rate: 0.2,
+                seq_len: 64,
+                seed: rng.next_u64(),
+            });
+            let mut live = build_index(&c);
+            let rounds = 1 + rng.below(4);
+            for _ in 0..rounds {
+                let mut docs = Vec::new();
+                for _ in 0..1 + rng.below(3) {
+                    let src =
+                        &c.samples[rng.below(c.len() as u64) as usize];
+                    let text = match rng.below(4) {
+                        0 => format!("{} indeed.", src.text),
+                        1 => src.text.replacen(' ', "  ", 1),
+                        2 => format!("note: {}", src.text),
+                        _ => format!(
+                            "an unrelated aside numbered {}",
+                            rng.next_u64()
+                        ),
+                    };
+                    let user = if rng.below(2) == 0 {
+                        src.user
+                    } else {
+                        300 + rng.below(8) as u32
+                    };
+                    docs.push(crate::ingest::IngestDoc { user, text });
+                }
+                let base = c.len() as u64;
+                crate::ingest::grow_corpus(&mut c, &mut live, base, &docs)
+                    .unwrap();
+            }
+            let batch = build_index(&c);
+            assert_eq!(live.len(), batch.len());
+            for s in &c.samples {
+                assert_eq!(live.signature(s.id), batch.signature(s.id));
+            }
+            // single-id closures answer identically
+            for _ in 0..4 {
+                let id = rng.below(c.len() as u64);
+                let a =
+                    expand_closure(&c, &live, &[id], ClosureParams::default());
+                let b = expand_closure(
+                    &c,
+                    &batch,
+                    &[id],
+                    ClosureParams::default(),
+                );
+                assert_eq!(a.ids, b.ids, "closure of {id} diverges");
+            }
+            // and a whole-user request (the forget shape)
+            let u = c.samples[rng.below(c.len() as u64) as usize].user;
+            let req = c.user_samples(u);
+            let a =
+                expand_closure(&c, &live, &req, ClosureParams::default());
+            let b =
+                expand_closure(&c, &batch, &req, ClosureParams::default());
+            assert_eq!(a.ids, b.ids);
+        });
+    }
+
+    #[test]
     fn empty_request_empty_closure() {
         let c = corpus();
         let idx = build_index(&c);

@@ -41,6 +41,8 @@
 //!   {"op":"status"}                  → incl. CAS/lineage/GC stats
 //!   {"op":"submit","id":"req-1","user":3,"urgency":"high"}   → job id
 //!   {"op":"launder"}                 → job id (admin maintenance)
+//!   {"op":"ingest","id":"d1","user":9,"texts":["…"],"train_steps":2}
+//!                                    → job id (docs + tail advance)
 //!   {"op":"poll","job":"job-1"}
 //!   {"op":"jobs"}
 //!   {"op":"plan","id":"req-2","sample_ids":[1,2,3]}          → dry-run
@@ -77,6 +79,7 @@ use crate::controller::{
     UnlearnError, UnlearnSystem, Urgency,
 };
 use crate::data::corpus::Corpus;
+use crate::ingest::{self, IngestDoc};
 use crate::manifest::ForgetManifest;
 use crate::runtime::Runtime;
 use crate::util::json::{parse, Json};
@@ -142,6 +145,17 @@ pub enum JobRequest {
     /// A laundering pass; `id` is the manifest idempotency key (empty =
     /// derive from the job id at execution time).
     Launder { id: String },
+    /// An online-ingest round: append `texts` as `user`'s documents and
+    /// advance the trained tail by `train_steps` (see `ingest::`).  A
+    /// barrier in the drain order: forget groups never coalesce across
+    /// it, so the executed interleaving is exactly the submission order
+    /// the interleave log records.
+    Ingest {
+        id: String,
+        user: u32,
+        texts: Vec<String>,
+        train_steps: u32,
+    },
 }
 
 impl JobPayload for JobRequest {
@@ -149,6 +163,7 @@ impl JobPayload for JobRequest {
         match self {
             JobRequest::Forget(r) => &r.id,
             JobRequest::Launder { id } => id,
+            JobRequest::Ingest { id, .. } => id,
         }
     }
 
@@ -156,6 +171,7 @@ impl JobPayload for JobRequest {
         match self {
             JobRequest::Forget(_) => "forget",
             JobRequest::Launder { .. } => "launder",
+            JobRequest::Ingest { .. } => "ingest",
         }
     }
 
@@ -186,6 +202,26 @@ impl JobPayload for JobRequest {
             JobRequest::Launder { id } => {
                 j.set("kind", "launder").set("id", id.as_str());
             }
+            JobRequest::Ingest {
+                id,
+                user,
+                texts,
+                train_steps,
+            } => {
+                j.set("kind", "ingest")
+                    .set("id", id.as_str())
+                    .set("user", *user)
+                    .set(
+                        "texts",
+                        Json::Arr(
+                            texts
+                                .iter()
+                                .map(|t| Json::from(t.as_str()))
+                                .collect(),
+                        ),
+                    )
+                    .set("train_steps", *train_steps as u64);
+            }
         }
         j
     }
@@ -199,6 +235,7 @@ impl JobPayload for JobRequest {
                     .unwrap_or_default()
                     .to_string(),
             }),
+            Some("ingest") => parse_ingest(j),
             Some("forget") | None => Ok(JobRequest::Forget(parse_request(j)?)),
             Some(other) => anyhow::bail!("unknown job kind {other:?}"),
         }
@@ -217,12 +254,54 @@ impl JobPayload for JobRequest {
                     .map(|s| s.into_owned())
                     .unwrap_or_default(),
             }),
+            Some("ingest") => {
+                // string arrays have no lazy scan; ingest is a cold,
+                // low-rate op so the tree parse is acceptable here
+                let s = std::str::from_utf8(raw).map_err(|e| {
+                    anyhow::anyhow!("invalid utf-8 in WAL payload: {e}")
+                })?;
+                let j =
+                    parse(s).map_err(|e| anyhow::anyhow!("bad json: {e}"))?;
+                parse_ingest(&j)
+            }
             Some("forget") | None => {
                 Ok(JobRequest::Forget(parse_request_scan(raw)?))
             }
             Some(other) => anyhow::bail!("unknown job kind {other:?}"),
         }
     }
+}
+
+/// Parse the `ingest` job shape (shared by the tree and raw paths).
+fn parse_ingest(j: &Json) -> anyhow::Result<JobRequest> {
+    let texts = j
+        .get("texts")
+        .and_then(|v| v.as_arr())
+        .ok_or_else(|| anyhow::anyhow!("ingest job missing texts[]"))?
+        .iter()
+        .map(|t| {
+            t.as_str()
+                .map(str::to_string)
+                .ok_or_else(|| anyhow::anyhow!("ingest texts[] non-string"))
+        })
+        .collect::<anyhow::Result<Vec<String>>>()?;
+    Ok(JobRequest::Ingest {
+        id: j
+            .get("id")
+            .and_then(|v| v.as_str())
+            .unwrap_or_default()
+            .to_string(),
+        user: j
+            .get("user")
+            .and_then(|v| v.as_u64())
+            .ok_or_else(|| anyhow::anyhow!("ingest job missing user"))?
+            as u32,
+        texts,
+        train_steps: j
+            .get("train_steps")
+            .and_then(|v| v.as_u64())
+            .unwrap_or(0) as u32,
+    })
 }
 
 /// Scanner refusals surface exactly like tree-parser refusals.
@@ -647,6 +726,13 @@ pub struct StatusSnapshot {
     /// rebuild cost past the budget — the operator (or a cron) should
     /// submit {"op":"launder"}.
     pub launder_recommended: bool,
+    /// Online-ingest watermarks: the step the serving state has trained
+    /// through, how many docs arrived via the ingest log, and how many
+    /// optimizer steps of uncovered tail are waiting for the next
+    /// train-increment (0 ⇒ the serving state covers the full corpus).
+    pub trained_step: u32,
+    pub ingested_docs: u64,
+    pub tail_lag_steps: u64,
     pub params: Arc<Vec<f32>>,
 }
 
@@ -666,6 +752,9 @@ fn snapshot_of(
         laundered_ids: sys.laundered_total(),
         cas: sys.cas_stats().ok(),
         launder_recommended: matches!(sys.plan_launder(policy), Ok(Some(_))),
+        trained_step: sys.state.logical_step,
+        ingested_docs: sys.ingest.ingested_docs,
+        tail_lag_steps: sys.tail_lag_steps(),
         params: Arc::new(sys.state.params.clone()),
     }
 }
@@ -762,34 +851,21 @@ impl<'a, 'rt> ServerCtx<'a, 'rt> {
     }
 }
 
-/// Drain every currently queued job: the forget jobs as ONE coalesced
-/// batch, then any launder jobs in submission order (laundering wants
-/// the post-batch forgotten set — draining the burst first compacts
-/// everything it accrued), then — when `ServerCtx::auto_launder` is set
-/// and the burst flipped `launder_recommended` — an automatic
-/// laundering pass.  Returns the number of jobs processed.  Exposed so
-/// tests (and the worker) share the exact same drain path.
+/// Drain every currently queued job in SUBMISSION ORDER.  Consecutive
+/// forget jobs coalesce into one `execute_batch` group (N queued
+/// replay-bound requests share one union-filtered tail replay); ingest
+/// and launder jobs are ordering BARRIERS that flush the pending
+/// forget group first, so the run's interleave log — when online
+/// ingest has attached one — records exactly the order the server
+/// executed and an oracle rebuild can reproduce it.  After the drain,
+/// when `ServerCtx::auto_launder` is set and the drained forgets
+/// flipped `launder_recommended`, an automatic laundering pass runs
+/// under the same lock.  Returns the number of jobs processed.
+/// Exposed so tests (and the worker) share the exact same drain path.
 pub fn drain_queue_once(ctx: &ServerCtx<'_, '_>) -> usize {
     let batch = ctx.jobs.take_queued();
     if batch.is_empty() {
         return 0;
-    }
-    let mut forgets: Vec<(String, ForgetRequest)> = Vec::new();
-    let mut launders: Vec<(String, String)> = Vec::new();
-    for (job_id, req) in &batch {
-        match req {
-            JobRequest::Forget(r) => forgets.push((job_id.clone(), r.clone())),
-            JobRequest::Launder { id } => {
-                // an empty key derives from the job id so auto-submitted
-                // launders stay idempotent per job
-                let key = if id.is_empty() {
-                    format!("launder-{job_id}")
-                } else {
-                    id.clone()
-                };
-                launders.push((job_id.clone(), key));
-            }
-        }
     }
     match ctx.system.lock() {
         Err(_) => {
@@ -803,76 +879,77 @@ pub fn drain_queue_once(ctx: &ServerCtx<'_, '_>) -> usize {
             }
         }
         Ok(mut sys) => {
-            if !forgets.is_empty() {
-                let reqs: Vec<ForgetRequest> =
-                    forgets.iter().map(|(_, r)| r.clone()).collect();
-                match execute_batch(&mut sys, &reqs) {
-                    Ok(out) => {
-                        for ((job_id, _), res) in
-                            forgets.iter().zip(out.outcomes.into_iter())
-                        {
-                            match res {
-                                Ok(o) => ctx.jobs.publish(
-                                    job_id,
-                                    JobStatus::Done,
-                                    outcome_json(&o),
-                                ),
-                                Err(e) => {
-                                    let mut r = Json::obj();
-                                    r.set("ok", false)
-                                        .set("error", format!("{e:#}"));
-                                    ctx.jobs.publish(
-                                        job_id,
-                                        JobStatus::Failed,
-                                        r,
-                                    );
-                                }
-                            }
+            // The run's interleave log, when online ingest attached
+            // one: forget/launder barriers are recorded into it so an
+            // oracle rebuild sees the same order the server executed.
+            // An open failure degrades to "no log" — the jobs must not
+            // fail because a bookkeeping read did.
+            let mut ilog =
+                ingest::IngestLog::open(&sys.cfg.run_dir).ok().flatten();
+            let mut pending: Vec<(String, ForgetRequest)> = Vec::new();
+            let mut first_forget: Option<String> = None;
+            for (job_id, req) in &batch {
+                match req {
+                    JobRequest::Forget(r) => {
+                        if first_forget.is_none() {
+                            first_forget = Some(job_id.clone());
                         }
+                        pending.push((job_id.clone(), r.clone()));
                     }
-                    Err(e) => {
-                        for (job_id, _) in &forgets {
-                            let mut r = Json::obj();
-                            r.set("ok", false).set("error", format!("{e:#}"));
-                            ctx.jobs.publish(job_id, JobStatus::Failed, r);
-                        }
+                    JobRequest::Launder { id } => {
+                        flush_forget_group(
+                            ctx,
+                            &mut sys,
+                            &mut pending,
+                            ilog.as_mut(),
+                        );
+                        // an empty key derives from the job id so
+                        // auto-submitted launders stay idempotent per
+                        // job
+                        let key = if id.is_empty() {
+                            format!("launder-{job_id}")
+                        } else {
+                            id.clone()
+                        };
+                        run_launder_job(
+                            ctx,
+                            &mut sys,
+                            job_id,
+                            &key,
+                            ilog.as_mut(),
+                        );
+                    }
+                    JobRequest::Ingest {
+                        id,
+                        user,
+                        texts,
+                        train_steps,
+                    } => {
+                        flush_forget_group(
+                            ctx,
+                            &mut sys,
+                            &mut pending,
+                            ilog.as_mut(),
+                        );
+                        let key = if id.is_empty() {
+                            format!("ingest-{job_id}")
+                        } else {
+                            id.clone()
+                        };
+                        run_ingest_job(
+                            ctx,
+                            &mut sys,
+                            &mut ilog,
+                            job_id,
+                            &key,
+                            *user,
+                            texts,
+                            *train_steps,
+                        );
                     }
                 }
             }
-            for (job_id, key) in &launders {
-                // force=true by design: an explicit operator submission
-                // overrides the recommendation threshold (the policy
-                // gates only the automatic pass below)
-                match sys.launder(key, &ctx.launder_policy, true) {
-                    Ok(out) => {
-                        let mut r = out.to_json();
-                        r.set("ok", true);
-                        ctx.jobs.publish(job_id, JobStatus::Done, r);
-                    }
-                    Err(e)
-                        if matches!(
-                            e.downcast_ref::<UnlearnError>(),
-                            Some(UnlearnError::NothingToLaunder)
-                        ) =>
-                    {
-                        // a scheduled cron launder on a quiet system is
-                        // a successful no-op, not a failure
-                        let mut r = Json::obj();
-                        r.set("ok", true)
-                            .set("executed", false)
-                            .set("note", "nothing to launder");
-                        ctx.jobs.publish(job_id, JobStatus::Done, r);
-                    }
-                    Err(e) => {
-                        let mut r = Json::obj();
-                        r.set("ok", false).set("error", format!("{e:#}"));
-                        if let Some(ue) = e.downcast_ref::<UnlearnError>() {
-                            r.set("error_kind", ue.kind());
-                        }
-                        ctx.jobs.publish(job_id, JobStatus::Failed, r);
-                    }
-                }
-            }
+            flush_forget_group(ctx, &mut sys, &mut pending, ilog.as_mut());
             // Auto-laundering (config-gated): a drained forget burst
             // can flip `launder_recommended` — instead of waiting for
             // the operator/cron to notice the status bit, compact the
@@ -883,26 +960,30 @@ pub fn drain_queue_once(ctx: &ServerCtx<'_, '_>) -> usize {
             // no-op when one of them already compacted.  The threshold
             // is the same policy the status bit uses (`force` stays
             // false); the idempotency key derives from the burst's
-            // first job id, so a crash-and-recover re-drain cannot
-            // double-launder.  A failure only logs: the next burst
-            // re-checks, and the serving state is unchanged (laundering
-            // swaps atomically or not at all).
-            if ctx.auto_launder && !forgets.is_empty() {
-                if let Ok(Some(_)) = sys.plan_launder(&ctx.launder_policy) {
-                    let key = format!("auto-launder-{}", forgets[0].0);
-                    match sys.launder(&key, &ctx.launder_policy, false) {
-                        Ok(out) if out.executed => eprintln!(
-                            "auto-launder after burst: generation {}, {} \
-                             id(s) compacted, {} checkpoint(s) rewritten",
-                            out.generation,
-                            out.laundered_now,
-                            out.checkpoints_written
-                        ),
-                        Ok(_) => {}
-                        Err(e) => eprintln!(
-                            "auto-launder failed (state unchanged; will \
-                             re-check after the next burst): {e:#}"
-                        ),
+            // first forget job id, so a crash-and-recover re-drain
+            // cannot double-launder.  A failure only logs: the next
+            // burst re-checks, and the serving state is unchanged
+            // (laundering swaps atomically or not at all).
+            if ctx.auto_launder {
+                if let Some(first) = first_forget.as_deref() {
+                    if let Ok(Some(_)) = sys.plan_launder(&ctx.launder_policy)
+                    {
+                        let key = format!("auto-launder-{first}");
+                        match sys.launder(&key, &ctx.launder_policy, false) {
+                            Ok(out) if out.executed => eprintln!(
+                                "auto-launder after burst: generation {}, \
+                                 {} id(s) compacted, {} checkpoint(s) \
+                                 rewritten",
+                                out.generation,
+                                out.laundered_now,
+                                out.checkpoints_written
+                            ),
+                            Ok(_) => {}
+                            Err(e) => eprintln!(
+                                "auto-launder failed (state unchanged; \
+                                 will re-check after the next burst): {e:#}"
+                            ),
+                        }
                     }
                 }
             }
@@ -910,6 +991,177 @@ pub fn drain_queue_once(ctx: &ServerCtx<'_, '_>) -> usize {
         }
     }
     batch.len()
+}
+
+/// Execute the pending consecutive-forget group as ONE coalesced
+/// batch, publishing per-job results in submission order.  Executed
+/// forgets are recorded into the interleave log when the run has one
+/// (bookkeeping, not the action: a failed append must not fail a
+/// forget that already committed to the signed manifest — it only
+/// logs, and the manifest remains the authoritative record).
+fn flush_forget_group(
+    ctx: &ServerCtx<'_, '_>,
+    sys: &mut UnlearnSystem<'_>,
+    group: &mut Vec<(String, ForgetRequest)>,
+    mut ilog: Option<&mut ingest::IngestLog>,
+) {
+    if group.is_empty() {
+        return;
+    }
+    let reqs: Vec<ForgetRequest> =
+        group.iter().map(|(_, r)| r.clone()).collect();
+    match execute_batch(sys, &reqs) {
+        Ok(out) => {
+            for ((job_id, req), res) in
+                group.iter().zip(out.outcomes.into_iter())
+            {
+                match res {
+                    Ok(o) => {
+                        if o.executed {
+                            if let Some(log) = ilog.as_deref_mut() {
+                                if let Err(e) = log
+                                    .record_forget(&req.id, o.closure_size)
+                                {
+                                    eprintln!(
+                                        "interleave log: forget record \
+                                         failed: {e:#}"
+                                    );
+                                }
+                            }
+                        }
+                        ctx.jobs.publish(
+                            job_id,
+                            JobStatus::Done,
+                            outcome_json(&o),
+                        );
+                    }
+                    Err(e) => {
+                        let mut r = Json::obj();
+                        r.set("ok", false).set("error", format!("{e:#}"));
+                        ctx.jobs.publish(job_id, JobStatus::Failed, r);
+                    }
+                }
+            }
+        }
+        Err(e) => {
+            for (job_id, _) in group.iter() {
+                let mut r = Json::obj();
+                r.set("ok", false).set("error", format!("{e:#}"));
+                ctx.jobs.publish(job_id, JobStatus::Failed, r);
+            }
+        }
+    }
+    group.clear();
+}
+
+/// Execute one launder job under the held system lock.  force=true by
+/// design: an explicit operator submission overrides the
+/// recommendation threshold (the policy gates only the automatic
+/// post-drain pass).
+fn run_launder_job(
+    ctx: &ServerCtx<'_, '_>,
+    sys: &mut UnlearnSystem<'_>,
+    job_id: &str,
+    key: &str,
+    ilog: Option<&mut ingest::IngestLog>,
+) {
+    match sys.launder(key, &ctx.launder_policy, true) {
+        Ok(out) => {
+            if out.executed {
+                if let Some(log) = ilog {
+                    if let Err(e) = log.record_launder(key) {
+                        eprintln!(
+                            "interleave log: launder record failed: {e:#}"
+                        );
+                    }
+                }
+            }
+            let mut r = out.to_json();
+            r.set("ok", true);
+            ctx.jobs.publish(job_id, JobStatus::Done, r);
+        }
+        Err(e)
+            if matches!(
+                e.downcast_ref::<UnlearnError>(),
+                Some(UnlearnError::NothingToLaunder)
+            ) =>
+        {
+            // a scheduled cron launder on a quiet system is a
+            // successful no-op, not a failure
+            let mut r = Json::obj();
+            r.set("ok", true)
+                .set("executed", false)
+                .set("note", "nothing to launder");
+            ctx.jobs.publish(job_id, JobStatus::Done, r);
+        }
+        Err(e) => {
+            let mut r = Json::obj();
+            r.set("ok", false).set("error", format!("{e:#}"));
+            if let Some(ue) = e.downcast_ref::<UnlearnError>() {
+                r.set("error_kind", ue.kind());
+            }
+            ctx.jobs.publish(job_id, JobStatus::Failed, r);
+        }
+    }
+}
+
+/// Execute one ingest job: attach (or reuse) the run's interleave log
+/// and run a full scheduler round — durable doc append, then a bounded
+/// train-increment over the grown corpus.  The round key derives from
+/// the request id, so a crash-and-recover re-drain of the jobs WAL
+/// skips the halves that already committed instead of double-training
+/// (same idempotency posture as forget keys).
+#[allow(clippy::too_many_arguments)]
+fn run_ingest_job(
+    ctx: &ServerCtx<'_, '_>,
+    sys: &mut UnlearnSystem<'_>,
+    ilog: &mut Option<ingest::IngestLog>,
+    job_id: &str,
+    req_id: &str,
+    user: u32,
+    texts: &[String],
+    train_steps: u32,
+) {
+    let result = (|| -> anyhow::Result<ingest::IncrementOutcome> {
+        if ilog.is_none() {
+            *ilog = Some(ingest::IngestLog::attach(
+                &sys.cfg.run_dir,
+                sys.corpus.len(),
+            )?);
+        }
+        let log = ilog.as_mut().expect("attached above");
+        let docs: Vec<IngestDoc> = texts
+            .iter()
+            .map(|t| IngestDoc {
+                user,
+                text: t.clone(),
+            })
+            .collect();
+        let sched = ingest::IngestScheduler::new(train_steps.max(1));
+        sched.run_round(sys, log, ingest::round_of(req_id), &docs)
+    })();
+    match result {
+        Ok(out) => {
+            let mut r = Json::obj();
+            r.set("ok", true)
+                .set("executed", out.executed)
+                .set("docs", texts.len() as u64)
+                .set("from_step", out.step.from_step as u64)
+                .set("n_steps", out.step.n_steps as u64)
+                .set("updates_applied", out.updates_applied as u64)
+                .set("trained_step", sys.state.logical_step as u64)
+                .set("tail_lag_steps", sys.tail_lag_steps());
+            ctx.jobs.publish(job_id, JobStatus::Done, r);
+        }
+        Err(e) => {
+            let mut r = Json::obj();
+            r.set("ok", false).set("error", format!("{e:#}"));
+            if let Some(ue) = e.downcast_ref::<UnlearnError>() {
+                r.set("error_kind", ue.kind());
+            }
+            ctx.jobs.publish(job_id, JobStatus::Failed, r);
+        }
+    }
 }
 
 /// The queue worker: waits for submissions, lingers one coalescing
@@ -1098,6 +1350,12 @@ fn dispatch_inner(
                 .set("forgotten_pending", snap.forgotten_pending)
                 .set("laundered_ids", snap.laundered_ids)
                 .set("launder_recommended", snap.launder_recommended)
+                // online-ingest watermarks: trained_step is the step
+                // the serving state covers; tail_lag_steps > 0 means
+                // committed ingest docs are waiting for an increment
+                .set("trained_step", snap.trained_step)
+                .set("ingested_docs", snap.ingested_docs)
+                .set("tail_lag_steps", snap.tail_lag_steps)
                 .set("queued_jobs", ctx.jobs.queued_len())
                 // queue backlog at a glance: promised-but-unfinished
                 // jobs + the jobs-WAL footprint backing that promise
@@ -1203,6 +1461,24 @@ fn dispatch_inner(
                         "server is shutting down — submission refused"
                     )
                 })?;
+            out.set("ok", true)
+                .set("job", job.as_str())
+                .set("status", "queued");
+        }
+        "ingest" => {
+            // online ingest: durable doc append + bounded
+            // train-increment, queued like forget/launder so it
+            // serializes with them in exact submission order (the
+            // drain loop treats it as an interleave barrier).  Cold
+            // low-rate op: tree-parse the already-validated line.
+            let req =
+                parse(line).map_err(|e| anyhow::anyhow!("bad json: {e}"))?;
+            let ireq = parse_ingest(&req)?;
+            let job = ctx.jobs.submit(ireq)?.ok_or_else(|| {
+                anyhow::anyhow!(
+                    "server is shutting down — submission refused"
+                )
+            })?;
             out.set("ok", true)
                 .set("job", job.as_str())
                 .set("status", "queued");

@@ -19,4 +19,4 @@ pub use idmap::IdMap;
 pub use integrity::{scan, IntegrityReport};
 pub use reader::WalReader;
 pub use record::{WalRecord, RECORD_SIZE};
-pub use segment::WalWriter;
+pub use segment::{segment_count, WalWriter};

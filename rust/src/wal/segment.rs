@@ -55,6 +55,37 @@ impl WalWriter {
         Ok(w)
     }
 
+    /// Continue an existing WAL by opening a FRESH segment after the
+    /// highest sealed one (online ingest: the trained tail advances in
+    /// increments, each appending new segments).  Existing segments are
+    /// never reopened — a torn increment is recovered by deleting whole
+    /// uncommitted segments, which only works if increment boundaries
+    /// coincide with segment boundaries.  `create_new` below still
+    /// fail-closes if an uncommitted segment was left behind (recovery
+    /// must run first).
+    pub fn append_to(
+        dir: &Path,
+        records_per_segment: usize,
+        hmac_key: Option<Vec<u8>>,
+    ) -> anyhow::Result<WalWriter> {
+        anyhow::ensure!(records_per_segment > 0, "segment size must be > 0");
+        fs::create_dir_all(dir)?;
+        let mut w = WalWriter {
+            dir: dir.to_path_buf(),
+            records_per_segment,
+            hmac_key,
+            seg_index: segment_count(dir)?,
+            seg_file: None,
+            seg_hasher: StreamingSha256::new(),
+            seg_bytes: Vec::new(),
+            records_in_seg: 0,
+            total_records: 0,
+            sidecar: None,
+        };
+        w.open_segment()?;
+        Ok(w)
+    }
+
     /// Enable the human-readable debug sidecar (CSV).  This is where the
     /// paper's toy-only legacy `sched_digest_u32` field lives; it is
     /// NEVER read at replay.
@@ -166,6 +197,30 @@ impl Drop for WalWriter {
     }
 }
 
+/// Number of `wal-NNNNNN.seg` files in `dir` (0 if the dir is absent).
+/// Segment indices are dense by construction, so this is also the next
+/// free index — `append_to` and ingest recovery both key off it.  Names
+/// that do not parse as `wal-<u64>.seg` are ignored (e.g. the sidecar).
+pub fn segment_count(dir: &Path) -> anyhow::Result<u64> {
+    if !dir.exists() {
+        return Ok(0);
+    }
+    let mut next = 0u64;
+    for entry in fs::read_dir(dir)? {
+        let name = entry?.file_name();
+        let Some(name) = name.to_str() else { continue };
+        let Some(idx) = name
+            .strip_prefix("wal-")
+            .and_then(|s| s.strip_suffix(".seg"))
+            .and_then(|s| s.parse::<u64>().ok())
+        else {
+            continue;
+        };
+        next = next.max(idx + 1);
+    }
+    Ok(next)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -224,6 +279,33 @@ mod tests {
             assert_eq!(crate::util::hashing::sha256_hex(&raw), sha);
             assert!(j.get("hmac_sha256").is_some());
         }
+    }
+
+    #[test]
+    fn append_to_continues_past_sealed_segments() {
+        let dir = crate::util::tempdir("wal-append-to");
+        let mut w = WalWriter::create(&dir, 4, None).unwrap();
+        let mut expect = Vec::new();
+        for t in 0..6u32 {
+            let r = rec(t, t as u64, true);
+            w.append(&r).unwrap();
+            expect.push(r);
+        }
+        w.finish().unwrap(); // segments 0 (full) and 1 (partial)
+        assert_eq!(segment_count(&dir).unwrap(), 2);
+        let mut w = WalWriter::append_to(&dir, 4, None).unwrap();
+        for t in 6..11u32 {
+            let r = rec(t, t as u64, true);
+            w.append(&r).unwrap();
+            expect.push(r);
+        }
+        w.finish().unwrap(); // segments 2 and 3
+        assert_eq!(segment_count(&dir).unwrap(), 4);
+        let got: Vec<_> = WalReader::open(&dir)
+            .unwrap()
+            .map(|r| r.unwrap())
+            .collect();
+        assert_eq!(got, expect);
     }
 
     #[test]

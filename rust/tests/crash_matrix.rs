@@ -15,17 +15,26 @@
 //!      laundered-set compaction
 //!   6. replica pull → verify → adopt (cold mirror and post-launder
 //!      re-sync): a half-pulled generation is never servable
+//!   7. online-ingest round (doc segment append → staged IdMap grow →
+//!      interleave record → tail-advance commit → checkpoint): a torn
+//!      round is never trained on, a plain retry converges
 //!
 //! The sweeps are count-then-inject: a [`Plan::Count`] pass measures
 //! how many ops the sequence performs on a pristine copy, then one
 //! fresh copy per op index gets a [`Plan::CrashAt`] at that index.
 
-use std::collections::HashSet;
+use std::collections::{BTreeMap, HashSet};
 use std::path::Path;
 
 use unlearn::checkpoint::{write_atomic, CheckpointStore, TrainState};
+use unlearn::config::RunConfig;
 use unlearn::controller::{ForgetRequest, Urgency};
+use unlearn::harness;
+use unlearn::ingest::{
+    self, IngestDoc, IngestLog, IngestScheduler, RecoveryReport,
+};
 use unlearn::replica::Replica;
+use unlearn::runtime::Runtime;
 use unlearn::server::{JobQueue, JobRequest};
 use unlearn::util::faultfs::{arm, Plan};
 use unlearn::util::json::{parse, Json};
@@ -632,6 +641,214 @@ fn replica_launder_resync_crash_sweep() {
             assert_eq!(rep.generation(), Some(1));
             let s = rep.load_serving_state().unwrap();
             assert!(s.state.bits_equal(&mk_state(0.75, 8)));
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// 7. Online-ingest round: doc segment + checksum + `ingest` entry, then
+//    WAL append/seal + staged IdMap + `train` entry (the tail-advance
+//    commit point) + promote + post-commit checkpoint.  Crash at EVERY
+//    fs op, clean and torn.  Invariants: the reopened system serves
+//    exactly the committed program (a torn half-round is NEVER trained
+//    on), and a plain retry of the same round converges bit-identically
+//    to the never-crashed control — durable program definition (wal/,
+//    ingest/, IdMap trio) byte for byte.
+// ---------------------------------------------------------------------
+
+fn ingest_cfg(dir: &Path) -> RunConfig {
+    RunConfig {
+        run_dir: dir.to_path_buf(),
+        steps: 4,
+        accum: 1,
+        checkpoint_every: 2,
+        checkpoint_keep: 8,
+        ring_window: 2,
+        warmup: 1,
+        ..Default::default()
+    }
+}
+
+fn collect_bytes(
+    root: &Path,
+    rel: &Path,
+    out: &mut BTreeMap<String, Vec<u8>>,
+) {
+    let abs = root.join(rel);
+    if abs.is_dir() {
+        for e in std::fs::read_dir(&abs).unwrap() {
+            let name = e.unwrap().file_name();
+            collect_bytes(root, &rel.join(name), out);
+        }
+    } else if abs.is_file() {
+        out.insert(
+            rel.to_string_lossy().into_owned(),
+            std::fs::read(&abs).unwrap(),
+        );
+    }
+}
+
+/// The durable program definition of a run: WAL segments, the ingest
+/// plane (doc segments + interleave log) and the IdMap trio.  The
+/// checkpoint store is deliberately excluded — equal program bytes plus
+/// bit-equal serving state is the replayability contract.
+fn program_bytes(dir: &Path) -> BTreeMap<String, Vec<u8>> {
+    let mut out = BTreeMap::new();
+    for sub in [
+        "wal",
+        "ingest",
+        "ids.map",
+        "ids.map.sum",
+        "ids.map.retired",
+        "ids.map.retired.sum",
+    ] {
+        collect_bytes(dir, Path::new(sub), &mut out);
+    }
+    out
+}
+
+#[test]
+fn ingest_round_crash_sweep() {
+    let rt = Runtime::load(&harness::artifacts_dir()).expect("artifacts");
+    let corpus = || harness::small_corpus(rt.manifest.seq_len);
+
+    // template: a trained base run with the interleave log attached
+    let proto = tempdir("cm-ingest-proto");
+    let base_len = {
+        let trained =
+            harness::build_system(&rt, ingest_cfg(&proto), corpus(), false)
+                .unwrap();
+        let n = trained.system.corpus.len();
+        IngestLog::attach(&proto, n).unwrap();
+        n
+    };
+
+    let sched = IngestScheduler::new(1);
+    let round = ingest::round_of("cm-ingest-round");
+    let docs = vec![IngestDoc {
+        user: 30,
+        text: "a new user arrives mid-serving".into(),
+    }];
+
+    // never-crashed control: one clean round on a pristine copy
+    let control_dir = tempdir("cm-ingest-control");
+    copy_dir_recursive(&proto, &control_dir);
+    let (base_state, control, control_bytes) = {
+        let (mut ts, mut log, report) =
+            ingest::reopen(&rt, ingest_cfg(&control_dir), corpus(), false)
+                .unwrap();
+        assert_eq!(report, RecoveryReport::default());
+        let sys = &mut ts.system;
+        let base_state = sys.state.clone();
+        let out = sched.run_round(sys, &mut log, round, &docs).unwrap();
+        assert!(out.executed);
+        (base_state, sys.state.clone(), program_bytes(&control_dir))
+    };
+
+    // count pass: how many fs ops does one round perform?
+    let count_dir = tempdir("cm-ingest-count");
+    copy_dir_recursive(&proto, &count_dir);
+    let n = {
+        let (mut ts, mut log, _) =
+            ingest::reopen(&rt, ingest_cfg(&count_dir), corpus(), false)
+                .unwrap();
+        let counter = arm(&count_dir, Plan::Count);
+        sched
+            .run_round(&mut ts.system, &mut log, round, &docs)
+            .unwrap();
+        counter.ops()
+    };
+    assert!(
+        n >= 12,
+        "docs + wal + staged idmap + commit + promote + checkpoint is \
+         at least a dozen ops, counted {n}"
+    );
+
+    for torn in [false, true] {
+        for k in 0..n {
+            let dir = tempdir("cm-ingest");
+            copy_dir_recursive(&proto, &dir);
+            {
+                let (mut ts, mut log, _) =
+                    ingest::reopen(&rt, ingest_cfg(&dir), corpus(), false)
+                        .unwrap();
+                let inj = arm(
+                    &dir,
+                    Plan::CrashAt {
+                        op: k,
+                        torn,
+                        seed: 0x5EED_8000 + k,
+                    },
+                );
+                let res =
+                    sched.run_round(&mut ts.system, &mut log, round, &docs);
+                assert!(
+                    res.is_err(),
+                    "crash at op {k} (torn={torn}) surfaces"
+                );
+                assert!(inj.crashed());
+                drop(inj);
+            }
+
+            // recovery: the reopened system serves EXACTLY the
+            // committed program — a torn half-round leaves no trace
+            let (mut ts, mut log, _report) =
+                ingest::reopen(&rt, ingest_cfg(&dir), corpus(), false)
+                    .unwrap_or_else(|e| {
+                        panic!(
+                            "reopen after crash at op {k} \
+                             (torn={torn}): {e:#}"
+                        )
+                    });
+            let sys = &mut ts.system;
+            assert_eq!(
+                sys.corpus.len() as u64,
+                base_len as u64 + log.ingested_docs(),
+                "corpus covers exactly the committed docs \
+                 (k={k} torn={torn})"
+            );
+            let oracle = ingest::oracle_state(sys, &HashSet::new()).unwrap();
+            assert!(
+                sys.state.bits_equal(&oracle),
+                "serving state replays the committed program \
+                 (k={k} torn={torn})"
+            );
+            if !log.has_train_round(round) {
+                assert!(
+                    sys.state.bits_equal(&base_state),
+                    "uncommitted increment left no trace in the \
+                     weights (k={k} torn={torn})"
+                );
+            }
+
+            // plain retry of the SAME round key converges on the
+            // never-crashed control, durable bytes included
+            sched
+                .run_round(sys, &mut log, round, &docs)
+                .unwrap_or_else(|e| {
+                    panic!(
+                        "retry after crash at op {k} (torn={torn}): {e:#}"
+                    )
+                });
+            assert!(
+                sys.state.bits_equal(&control),
+                "retry converges on the control weights \
+                 (k={k} torn={torn})"
+            );
+            assert_eq!(sys.corpus.len(), base_len + 1);
+            let got = program_bytes(&dir);
+            assert_eq!(
+                got.keys().collect::<Vec<_>>(),
+                control_bytes.keys().collect::<Vec<_>>(),
+                "program file sets differ (k={k} torn={torn})"
+            );
+            for (name, bytes) in &control_bytes {
+                assert!(
+                    got[name] == *bytes,
+                    "{name} diverges from the control bytes \
+                     (k={k} torn={torn})"
+                );
+            }
         }
     }
 }

@@ -1,0 +1,257 @@
+//! The online-ingest acceptance proof: after K interleaved rounds of
+//! ingest (durable doc append) and bounded train-increments, forgetting
+//! user `u` is **bit-identical** (params + optimizer state) to the
+//! retain-only oracle over the FINAL corpus — the preserved-graph
+//! replay of the entire logged program from θ0 with `u`'s closure
+//! masked.  Also proven here: laundering stays exact under a moving
+//! tail (launder → another round → forget → oracle), laundering
+//! REFUSES while an increment is in flight (typed error), round keys
+//! make retries idempotent, and the `trained_step`/`ingested_docs`/
+//! `tail_lag_steps` watermarks track the tail.
+//!
+//! One training run is shared by every check (training + replays
+//! dominate wall-clock, so the suite trains once and interleaves many
+//! ways).
+
+use std::collections::HashSet;
+
+use unlearn::config::RunConfig;
+use unlearn::controller::{
+    execute_batch, ForgetRequest, LaunderPolicy, UnlearnError, Urgency,
+};
+use unlearn::harness;
+use unlearn::ingest::{
+    self, IngestDoc, IngestLog, IngestScheduler, InterleaveEntry,
+};
+use unlearn::runtime::Runtime;
+
+const STEPS: u32 = 8;
+const CKPT_EVERY: u32 = 4;
+const INC_STEPS: u32 = 2;
+
+fn forget_req(id: &str, user: u32) -> ForgetRequest {
+    ForgetRequest {
+        id: id.to_string(),
+        user: Some(user),
+        sample_ids: vec![],
+        urgency: Urgency::Normal,
+    }
+}
+
+#[test]
+fn interleaved_ingest_forget_is_bit_identical_to_retain_oracle() {
+    let rt = Runtime::load(&harness::artifacts_dir()).expect("artifacts");
+    let corpus = harness::small_corpus(rt.manifest.seq_len);
+    let cfg = RunConfig {
+        run_dir: unlearn::util::tempdir("ingest-eq"),
+        steps: STEPS,
+        accum: 2,
+        checkpoint_every: CKPT_EVERY,
+        checkpoint_keep: 32,
+        ring_window: 4,
+        warmup: 2,
+        ..Default::default()
+    };
+    let trained =
+        harness::build_system(&rt, cfg.clone(), corpus, false).expect("train");
+    let mut sys = trained.system;
+    let base_len = sys.corpus.len();
+    let mut log =
+        IngestLog::attach(&cfg.run_dir, base_len).expect("attach log");
+
+    // a verbatim copy of one of user 2's documents, ingested under a
+    // NEW user: the live near-dup index must pull it into user 2's
+    // closure later (distance 0)
+    let dup_text = {
+        let ids = sys.corpus.user_samples(2);
+        assert!(!ids.is_empty(), "user 2 has documents");
+        sys.corpus.by_id(ids[0]).unwrap().text.clone()
+    };
+
+    // ---- round 1, run as explicit halves to watch the watermarks ----
+    let r1 = ingest::round_of("round-1");
+    let round1_docs = vec![
+        IngestDoc {
+            user: 3,
+            text: "user three returns with a note about sailing".into(),
+        },
+        IngestDoc {
+            user: 101,
+            text: "a brand-new user writes their first document".into(),
+        },
+        IngestDoc {
+            user: 102,
+            text: dup_text,
+        },
+    ];
+    let dup_gid = base_len as u64 + 2;
+    ingest::ingest_docs(&mut sys, &mut log, r1, &round1_docs)
+        .expect("ingest round 1");
+    assert_eq!(sys.corpus.len(), base_len + 3, "corpus grew");
+    assert_eq!(sys.ingest.ingested_docs, 3);
+    assert!(
+        sys.tail_lag_steps() > 0,
+        "committed docs not yet trained on must show as tail lag"
+    );
+    let out =
+        ingest::train_increment(&mut sys, &mut log, r1, INC_STEPS).unwrap();
+    assert!(out.executed);
+    assert_eq!(out.updates_applied, INC_STEPS);
+    assert_eq!(sys.state.logical_step, STEPS + INC_STEPS);
+    assert_eq!(sys.tail_lag_steps(), 0, "increment covered the tail");
+
+    // the increment's WAL records replay bit-identically: with nothing
+    // forgotten, the full-program oracle IS the serving state
+    let oracle = ingest::oracle_state(&sys, &HashSet::new()).unwrap();
+    assert!(
+        sys.state.bits_equal(&oracle),
+        "increment must extend the deterministic logged program \
+         (model {} vs {})",
+        sys.state.model_hash(),
+        oracle.model_hash()
+    );
+
+    // ---- forget an ORIGINAL user between rounds ----------------------
+    let out = execute_batch(&mut sys, &[forget_req("eq-forget-v", 7)])
+        .expect("forget v");
+    assert!(out.outcomes[0].as_ref().unwrap().executed);
+    log.record_forget("eq-forget-v", sys.forgotten.len()).unwrap();
+
+    // ---- rounds 2 and 3 through the scheduler ------------------------
+    let sched = IngestScheduler::new(INC_STEPS);
+    sched
+        .run_round(
+            &mut sys,
+            &mut log,
+            ingest::round_of("round-2"),
+            &[
+                IngestDoc {
+                    user: 5,
+                    text: "user five adds an observation about tides".into(),
+                },
+                IngestDoc {
+                    user: 103,
+                    text: "another new user appears mid-stream".into(),
+                },
+            ],
+        )
+        .expect("round 2");
+
+    // forget a user who exists ONLY through ingest (round 1's 101)
+    let out = execute_batch(&mut sys, &[forget_req("eq-forget-ingested", 101)])
+        .expect("forget ingested-only user");
+    assert!(out.outcomes[0].as_ref().unwrap().executed);
+    log.record_forget("eq-forget-ingested", sys.forgotten.len())
+        .unwrap();
+
+    let r3 = ingest::round_of("round-3");
+    let round3_docs = vec![IngestDoc {
+        user: 4,
+        text: "user four files a late addendum".into(),
+    }];
+    sched
+        .run_round(&mut sys, &mut log, r3, &round3_docs)
+        .expect("round 3");
+
+    // ---- round keys make a retry a committed no-op -------------------
+    let pre = sys.state.clone();
+    let pre_docs = sys.ingest.ingested_docs;
+    let retry = sched
+        .run_round(&mut sys, &mut log, r3, &round3_docs)
+        .expect("idempotent retry");
+    assert!(!retry.executed, "both halves already committed");
+    assert!(sys.state.bits_equal(&pre), "retry must not retrain");
+    assert_eq!(sys.ingest.ingested_docs, pre_docs);
+
+    // ---- headline: forget u after K rounds == retain-only oracle -----
+    let req_u = forget_req("eq-forget-u", 2);
+    let (cl, _) = sys.closure_of(&req_u);
+    assert!(
+        cl.contains(&dup_gid),
+        "closure must reach the near-duplicate ingested mid-stream"
+    );
+    let out = execute_batch(&mut sys, &[req_u]).expect("forget u");
+    assert!(out.outcomes[0].as_ref().unwrap().executed);
+    log.record_forget("eq-forget-u", sys.forgotten.len()).unwrap();
+
+    let mut union: HashSet<u64> = sys.forgotten.clone();
+    union.extend(sys.laundered.iter().copied());
+    let oracle = ingest::oracle_state(&sys, &union).unwrap();
+    assert!(
+        sys.state.bits_equal(&oracle),
+        "forget after interleaved ingest must be bit-identical to the \
+         retain-only oracle over the final corpus (model {} vs {}, \
+         optimizer {} vs {})",
+        sys.state.model_hash(),
+        oracle.model_hash(),
+        sys.state.optimizer_hash(),
+        oracle.optimizer_hash()
+    );
+
+    // ---- laundering refuses while an increment is in flight ----------
+    let policy = LaunderPolicy {
+        min_extra_replay_records: 0,
+    };
+    sys.ingest.in_flight = true;
+    let err = sys
+        .launder("eq-launder-guard", &policy, true)
+        .expect_err("launder under an in-flight increment must refuse");
+    assert!(
+        matches!(
+            err.downcast_ref::<UnlearnError>(),
+            Some(UnlearnError::IngestInFlight)
+        ),
+        "typed refusal, got: {err:#}"
+    );
+    sys.ingest.in_flight = false;
+
+    // ---- laundering stays exact under a moving tail ------------------
+    let lout = sys.launder("eq-launder", &policy, true).expect("launder");
+    assert!(lout.executed);
+    log.record_launder("eq-launder").unwrap();
+
+    sched
+        .run_round(
+            &mut sys,
+            &mut log,
+            ingest::round_of("round-4"),
+            &[IngestDoc {
+                user: 6,
+                text: "the tail keeps moving after laundering".into(),
+            }],
+        )
+        .expect("round 4 (post-launder)");
+
+    let out = execute_batch(&mut sys, &[forget_req("eq-forget-w", 103)])
+        .expect("forget w");
+    assert!(out.outcomes[0].as_ref().unwrap().executed);
+    log.record_forget("eq-forget-w", sys.forgotten.len()).unwrap();
+
+    let mut union: HashSet<u64> = sys.forgotten.clone();
+    union.extend(sys.laundered.iter().copied());
+    let oracle = ingest::oracle_state(&sys, &union).unwrap();
+    assert!(
+        sys.state.bits_equal(&oracle),
+        "moving-tail laundering must stay exact: serving state {} vs \
+         oracle {}",
+        sys.state.model_hash(),
+        oracle.model_hash()
+    );
+
+    // ---- the interleave log survives a reopen as a faithful transcript
+    let replayed = IngestLog::open(&cfg.run_dir)
+        .expect("reopen log")
+        .expect("log exists");
+    assert_eq!(replayed.entries.len(), log.entries.len());
+    assert!(matches!(
+        replayed.entries[0],
+        InterleaveEntry::Open { .. }
+    ));
+    let mut last_seq = None;
+    for e in &replayed.entries[1..] {
+        let seq = e.seq().expect("non-open entries carry a seq");
+        assert!(last_seq.map_or(true, |p| seq > p), "seqs strictly grow");
+        last_seq = Some(seq);
+    }
+    assert_eq!(replayed.ingested_docs(), sys.ingest.ingested_docs);
+}
