@@ -880,35 +880,38 @@ impl<'rt> Fleet<'rt> {
         // global view — build/the first attempt already did
         let fresh_docs = !log.has_ingest_round(round);
         let local_base = sys.corpus.len() as u64;
-        let sched = ingest::IngestScheduler::new(train_steps.max(1));
+        let sched = ingest::IngestScheduler::new(train_steps);
         let res = sched.run_round(sys, &mut log, round, &docs);
-        match res {
+        match &res {
             Err(e) => {
                 // ingest shares the shard-infrastructure failure
                 // posture of the forget drain: quarantine the shard so
                 // erasure work stops routing at a sick WAL/log
                 self.note_shard_failure(i, format!("ingest: {e:#}"));
-                Err(e)
             }
-            Ok(out) => {
-                self.health[i] = ShardHealth::Healthy;
-                if fresh_docs {
-                    let gbase = self.corpus.len() as u64;
-                    for k in 0..docs.len() as u64 {
-                        self.split
-                            .locate
-                            .insert(gbase + k, (shard, local_base + k));
-                    }
-                    ingest::grow_corpus(
-                        &mut self.corpus,
-                        &mut self.ndindex,
-                        gbase,
-                        &docs,
-                    )?;
-                }
-                Ok((shard, out))
-            }
+            Ok(_) => self.health[i] = ShardHealth::Healthy,
         }
+        // The global view must grow whenever the ingest half COMMITTED
+        // this round — even if the train-increment errored afterwards.
+        // The docs are durable and the shard's local corpus has grown;
+        // an idempotent retry would see `has_ingest_round` true and
+        // skip this block, leaving forget closures and routing blind
+        // to committed docs.
+        if fresh_docs && log.has_ingest_round(round) {
+            let gbase = self.corpus.len() as u64;
+            for k in 0..docs.len() as u64 {
+                self.split
+                    .locate
+                    .insert(gbase + k, (shard, local_base + k));
+            }
+            ingest::grow_corpus(
+                &mut self.corpus,
+                &mut self.ndindex,
+                gbase,
+                &docs,
+            )?;
+        }
+        res.map(|out| (shard, out))
     }
 
     /// Run a laundering pass on every shard whose OWN policy says it is

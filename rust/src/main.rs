@@ -216,13 +216,26 @@ fn run(args: &Args) -> anyhow::Result<()> {
             let addr = args.get_or("addr", "127.0.0.1:7878").to_string();
             // restart path: an existing run dir is REOPENED (WAL,
             // checkpoint lineages, manifest, jobs WAL, forgotten set
-            // all survive), not wiped and retrained
-            let (trained, resumed) = unlearn::harness::open_or_build_system(
-                &rt,
-                cfg,
-                c,
-                args.flag("fisher"),
-            )?;
+            // all survive), not wiped and retrained.  This server
+            // exposes the `ingest` op, so the resume must be
+            // ingest-aware: recover torn ingest rounds and re-enter
+            // committed doc segments into the corpus before the WAL
+            // tail is replayed or appended to (same predicate as
+            // `harness::open_or_build_system` for the resumed report).
+            let resumed = cfg.run_dir.join("wal").exists()
+                && cfg.run_dir.join("pins.json").exists()
+                && cfg.run_dir.join("ids.map").exists();
+            let (trained, _log, report) =
+                unlearn::ingest::reopen(&rt, cfg, c, args.flag("fisher"))?;
+            if report.wal_segments_removed + report.doc_segments_removed > 0
+            {
+                println!(
+                    "recovered torn ingest round: removed {} wal \
+                     segment(s), {} doc segment(s)",
+                    report.wal_segments_removed,
+                    report.doc_segments_removed
+                );
+            }
             if resumed {
                 println!("resumed existing run (state rebuilt from the \
                           checkpoint lineage)");
@@ -280,8 +293,9 @@ fn run(args: &Args) -> anyhow::Result<()> {
                     text: t.clone(),
                 })
                 .collect();
+            // an explicit --train-steps 0 runs a docs-only round
             let sched =
-                unlearn::ingest::IngestScheduler::new(train_steps.max(1));
+                unlearn::ingest::IngestScheduler::new(train_steps);
             let out = sched.run_round(
                 sys,
                 &mut log,

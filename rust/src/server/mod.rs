@@ -297,10 +297,13 @@ fn parse_ingest(j: &Json) -> anyhow::Result<JobRequest> {
             .ok_or_else(|| anyhow::anyhow!("ingest job missing user"))?
             as u32,
         texts,
+        // missing → 1 (ingest normally advances the tail); an EXPLICIT
+        // 0 passes through as a docs-only round, which `run_round`
+        // supports
         train_steps: j
             .get("train_steps")
             .and_then(|v| v.as_u64())
-            .unwrap_or(0) as u32,
+            .unwrap_or(1) as u32,
     })
 }
 
@@ -882,10 +885,35 @@ pub fn drain_queue_once(ctx: &ServerCtx<'_, '_>) -> usize {
             // The run's interleave log, when online ingest attached
             // one: forget/launder barriers are recorded into it so an
             // oracle rebuild sees the same order the server executed.
-            // An open failure degrades to "no log" — the jobs must not
-            // fail because a bookkeeping read did.
-            let mut ilog =
-                ingest::IngestLog::open(&sys.cfg.run_dir).ok().flatten();
+            // `Ok(None)` means never attached — fine, nothing to
+            // record into.  `Err` means an EXISTING log is unreadable:
+            // executing mutations anyway would punch unlogged holes in
+            // the total order the retain-only oracle replays, so the
+            // batch fails loudly here instead of deferring discovery
+            // to the next ingest job's attach.
+            let mut ilog = match ingest::IngestLog::open(&sys.cfg.run_dir)
+            {
+                Ok(l) => l,
+                Err(e) => {
+                    eprintln!(
+                        "[server] interleave log unreadable — failing \
+                         the drained batch (fail-closed): {e:#}"
+                    );
+                    for (job_id, _) in &batch {
+                        let mut r = Json::obj();
+                        r.set("ok", false)
+                            .set(
+                                "error",
+                                format!(
+                                    "interleave log unreadable: {e:#}"
+                                ),
+                            )
+                            .set("error_kind", "ingest_log_unreadable");
+                        ctx.jobs.publish(job_id, JobStatus::Failed, r);
+                    }
+                    return batch.len();
+                }
+            };
             let mut pending: Vec<(String, ForgetRequest)> = Vec::new();
             let mut first_forget: Option<String> = None;
             for (job_id, req) in &batch {
@@ -1137,7 +1165,7 @@ fn run_ingest_job(
                 text: t.clone(),
             })
             .collect();
-        let sched = ingest::IngestScheduler::new(train_steps.max(1));
+        let sched = ingest::IngestScheduler::new(train_steps);
         sched.run_round(sys, log, ingest::round_of(req_id), &docs)
     })();
     match result {
